@@ -1,0 +1,59 @@
+//! Ablation driver (paper Appendix B): the global/local mixing weight P
+//! and the local neighbor size N.
+//!
+//! ```bash
+//! cargo run --release --example ablation
+//! ```
+
+use eagle::bench::{fmt, print_table};
+use eagle::config::EagleParams;
+use eagle::eval::harness::{bench_data_params, EmbedderRig, Experiment};
+use eagle::routerbench::DATASETS;
+
+fn main() {
+    let rig = EmbedderRig::auto(std::path::Path::new("artifacts"));
+    let exp = Experiment::build(&bench_data_params(13, 600), &rig);
+
+    // --- Fig 4a: Eagle vs its components ---
+    let mut rows = vec![vec!["variant".to_string(), "summed AUC".to_string()]];
+    for (name, p) in [("eagle-global (P=1)", 1.0), ("eagle-local (P=0)", 0.0), ("eagle (P=0.5)", 0.5)] {
+        let sum: f64 = (0..DATASETS.len())
+            .map(|si| {
+                let r = exp.fit_eagle(si, EagleParams { p, ..Default::default() }, 1.0);
+                exp.eval(&r, si).auc()
+            })
+            .sum();
+        rows.push(vec![name.to_string(), fmt(sum, 4)]);
+    }
+    print_table("Fig 4a — component ablation", &rows);
+
+    // --- P sweep (finer than the paper's three points) ---
+    let mut rows = vec![vec!["P".to_string(), "summed AUC".to_string()]];
+    for p in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let sum: f64 = (0..DATASETS.len())
+            .map(|si| {
+                let r = exp.fit_eagle(si, EagleParams { p, ..Default::default() }, 1.0);
+                exp.eval(&r, si).auc()
+            })
+            .sum();
+        rows.push(vec![fmt(p, 2), fmt(sum, 4)]);
+    }
+    print_table("P sweep", &rows);
+
+    // --- Fig 4b: neighbor size N (local-emphasis per the paper) ---
+    let mut rows = vec![vec!["N".to_string(), "summed AUC (eagle-local)".to_string()]];
+    for n in [1usize, 5, 10, 20, 40, 80] {
+        let sum: f64 = (0..DATASETS.len())
+            .map(|si| {
+                let r = exp.fit_eagle(
+                    si,
+                    EagleParams { p: 0.0, n_neighbors: n, ..Default::default() },
+                    1.0,
+                );
+                exp.eval(&r, si).auc()
+            })
+            .sum();
+        rows.push(vec![n.to_string(), fmt(sum, 4)]);
+    }
+    print_table("Fig 4b — local neighbor size sweep", &rows);
+}

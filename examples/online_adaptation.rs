@@ -1,0 +1,156 @@
+//! Online adaptation demo (paper §3.2): stage the feedback stream
+//! 70% -> 85% -> 100%, compare Eagle's incremental update against full
+//! baseline retraining — both wall-clock and routing quality.
+//!
+//! ```bash
+//! cargo run --release --example online_adaptation
+//! ```
+
+use eagle::baselines::knn::KnnPredictor;
+use eagle::baselines::mlp::{MlpOptions, MlpPredictor};
+use eagle::baselines::svm::{SvmOptions, SvmPredictor};
+use eagle::baselines::QualityPredictor;
+use eagle::bench::{fmt, print_table, time_once};
+use eagle::config::EagleParams;
+use eagle::coordinator::PredictorRouter;
+use eagle::eval::harness::{bench_data_params, EmbedderRig, Experiment};
+use eagle::routerbench::DATASETS;
+
+fn main() {
+    let rig = EmbedderRig::auto(std::path::Path::new("artifacts"));
+    let exp = Experiment::build(&bench_data_params(5, 600), &rig);
+    let stages = [0.7, 0.85, 1.0];
+
+    let mut time_rows = vec![vec![
+        "router".to_string(),
+        "70% (init)".to_string(),
+        "+15% (update)".to_string(),
+        "+15% (update)".to_string(),
+    ]];
+    let mut auc_rows = vec![vec![
+        "router".to_string(),
+        "70%".to_string(),
+        "85%".to_string(),
+        "100%".to_string(),
+    ]];
+
+    // --- Eagle: init once, then incremental updates ---
+    {
+        let mut times = Vec::new();
+        let mut aucs = Vec::new();
+        let mut routers = Vec::new();
+        let (mut rs, t_init) = time_once(|| {
+            (0..DATASETS.len())
+                .map(|si| exp.fit_eagle(si, EagleParams::default(), stages[0]))
+                .collect::<Vec<_>>()
+        });
+        times.push(t_init);
+        aucs.push((0..DATASETS.len()).map(|si| exp.eval(&rs[si], si).auc()).sum::<f64>());
+        for w in stages.windows(2) {
+            let (_, t) = time_once(|| {
+                for (si, r) in rs.iter_mut().enumerate() {
+                    let old = exp.observations(si, w[0]).len();
+                    let newer = exp.observations(si, w[1]);
+                    r.update(&newer[old..]);
+                }
+            });
+            times.push(t);
+            aucs.push((0..DATASETS.len()).map(|si| exp.eval(&rs[si], si).auc()).sum::<f64>());
+        }
+        routers.push("eagle");
+        time_rows.push(vec![
+            "eagle".into(),
+            format!("{:.4}s", times[0]),
+            format!("{:.4}s", times[1]),
+            format!("{:.4}s", times[2]),
+        ]);
+        auc_rows.push(vec![
+            "eagle".into(),
+            fmt(aucs[0], 4),
+            fmt(aucs[1], 4),
+            fmt(aucs[2], 4),
+        ]);
+        let _ = routers;
+    }
+
+    // --- baselines: full retrain at every stage ---
+    run_baseline(&exp, &stages, "knn", &mut time_rows, &mut auc_rows, || {
+        Box::new(KnnPredictor::new(40))
+    });
+    run_baseline(&exp, &stages, "mlp", &mut time_rows, &mut auc_rows, || {
+        Box::new(MlpPredictor::new(MlpOptions::default()))
+    });
+    run_baseline(&exp, &stages, "svm", &mut time_rows, &mut auc_rows, || {
+        Box::new(SvmPredictor::new(SvmOptions::default()))
+    });
+
+    print_table("adaptation wall-clock (Table 3a protocol)", &time_rows);
+    print_table("summed AUC by data stage (Fig 3b protocol)", &auc_rows);
+    println!("\nEagle folds new feedback in O(new records); baselines re-train on");
+    println!("the full accumulated set (sklearn-equivalent online behavior).");
+}
+
+#[allow(clippy::type_complexity)]
+fn run_baseline(
+    exp: &Experiment,
+    stages: &[f64],
+    name: &str,
+    time_rows: &mut Vec<Vec<String>>,
+    auc_rows: &mut Vec<Vec<String>>,
+    mk: impl Fn() -> Box<dyn QualityPredictor>,
+) {
+    let mut times = Vec::new();
+    let mut aucs = Vec::new();
+    let mut preds: Vec<Box<dyn QualityPredictor>> =
+        (0..DATASETS.len()).map(|_| mk()).collect();
+    let (_, t_init) = time_once(|| {
+        for (si, p) in preds.iter_mut().enumerate() {
+            p.fit(&exp.train_set_feedback(si, stages[0]));
+        }
+    });
+    times.push(t_init);
+    aucs.push(eval_all(exp, &preds));
+    for w in stages.windows(2) {
+        let (_, t) = time_once(|| {
+            for (si, p) in preds.iter_mut().enumerate() {
+                let old = exp.train_set_feedback(si, w[0]).len();
+                let full = exp.train_set_feedback(si, w[1]);
+                p.update(&full.suffix(old));
+            }
+        });
+        times.push(t);
+        aucs.push(eval_all(exp, &preds));
+    }
+    time_rows.push(vec![
+        name.into(),
+        format!("{:.4}s", times[0]),
+        format!("{:.4}s", times[1]),
+        format!("{:.4}s", times[2]),
+    ]);
+    auc_rows.push(vec![name.into(), fmt(aucs[0], 4), fmt(aucs[1], 4), fmt(aucs[2], 4)]);
+}
+
+fn eval_all(exp: &Experiment, preds: &[Box<dyn QualityPredictor>]) -> f64 {
+    preds
+        .iter()
+        .enumerate()
+        .map(|(si, p)| {
+            let r = PredictorRouter::new(ShimPredictor(p.as_ref()));
+            exp.eval(&r, si).auc()
+        })
+        .sum()
+}
+
+/// Borrowed-predictor shim so we can evaluate without cloning trainers.
+struct ShimPredictor<'a>(&'a dyn QualityPredictor);
+
+impl QualityPredictor for ShimPredictor<'_> {
+    fn name(&self) -> &'static str {
+        "shim"
+    }
+    fn fit(&mut self, _d: &eagle::baselines::TrainSet) {}
+    fn update(&mut self, _d: &eagle::baselines::TrainSet) {}
+    fn predict(&self, q: &[f32]) -> Vec<f64> {
+        self.0.predict(q)
+    }
+}

@@ -1,0 +1,87 @@
+//! Quickstart: build a small synthetic RouterBench, fit Eagle, route a few
+//! queries under different budgets, give feedback, route again.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Works without artifacts too (falls back to the pure-rust hash embedder
+//! with a note — the serving path is the PJRT one).
+
+use eagle::config::EagleParams;
+use eagle::coordinator::router::Observation;
+use eagle::coordinator::Router;
+use eagle::elo::{Comparison, Outcome};
+use eagle::eval::harness::{bench_data_params, EmbedderRig, Experiment};
+use eagle::routerbench::models::MODELS;
+use eagle::routerbench::DATASETS;
+
+fn main() -> anyhow::Result<()> {
+    let rig = EmbedderRig::auto(std::path::Path::new("artifacts"));
+    println!(
+        "embedder: {}",
+        if rig.is_pjrt { "MiniStella via PJRT (AOT artifacts)" } else { "hash fallback" }
+    );
+
+    // 1. a small benchmark: 7 datasets x 300 prompts, 70/30 split
+    println!("generating synthetic RouterBench (300 prompts/dataset)...");
+    let exp = Experiment::build(&bench_data_params(42, 300), &rig);
+
+    // 2. fit Eagle on the GSM8K feedback stream (paper defaults P=.5 N=20 K=32)
+    let gsm8k = DATASETS.iter().position(|d| *d == "gsm8k").unwrap();
+    let mut router = exp.fit_eagle(gsm8k, EagleParams::default(), 1.0);
+    println!(
+        "fitted eagle on {} pairwise feedback records\n",
+        router.feedback_len()
+    );
+
+    // 3. global ranking
+    println!("global ELO ranking (gsm8k feedback):");
+    for (rank, m) in router.global().ranking().iter().take(5).enumerate() {
+        println!(
+            "  {}. {:<20} {:7.1} elo   (${:.5}/query)",
+            rank + 1,
+            MODELS[*m].name,
+            router.global().ratings()[*m],
+            MODELS[*m].expected_cost()
+        );
+    }
+
+    // 4. route a math query under three budgets
+    let query = "Solve this word problem about train speed distance hours: \
+                 a train travels 120 miles in 2 hours, what is its speed?";
+    let emb = rig.embed_texts(&[query]).remove(0);
+    let scores = router.scores(&emb);
+    println!("\nrouting: {query:?}");
+    for budget in [0.0005, 0.005, 0.05] {
+        let choice = exp.policy.select(&scores, budget);
+        println!(
+            "  budget ${budget:<7}: -> {:<20} (expected ${:.5})",
+            MODELS[choice].name,
+            MODELS[choice].expected_cost()
+        );
+    }
+
+    // 5. live feedback: user says mixtral beat gpt-4 on this prompt
+    let mixtral = MODELS.iter().position(|m| m.name == "mixtral-8x7b-chat").unwrap();
+    router.observe(Observation::single(
+        emb.clone(),
+        Comparison { a: mixtral, b: 0, outcome: Outcome::WinA },
+    ));
+    let scores2 = router.scores(&emb);
+    let rank_of = |scores: &[f64], m: usize| {
+        scores.iter().filter(|&&s| s > scores[m]).count() + 1
+    };
+    println!("\nafter 1 feedback record (mixtral beat gpt-4 on this prompt):");
+    println!(
+        "  mixtral rank for this query: {} -> {} (score {:+.2} elo)",
+        rank_of(&scores, mixtral),
+        rank_of(&scores2, mixtral),
+        scores2[mixtral] - scores[mixtral]
+    );
+
+    // 6. AUC on the held-out test split
+    let auc = exp.eval(&router, gsm8k).auc();
+    println!("\ngsm8k test AUC: {auc:.4}");
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! End-to-end serving driver (DESIGN.md "end-to-end validation").
+//!
+//! Boots the full stack — PJRT embedder (AOT MiniStella artifacts), Eagle
+//! router pre-fitted on a synthetic RouterBench feedback history, TCP
+//! front-end — then drives concurrent client load (routes + feedback) and
+//! reports latency percentiles, throughput, batching efficiency, and the
+//! realized quality/cost of the routed decisions.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_workload
+//! ```
+//!
+//! Flags: --requests N (default 2000), --clients N (8), --budget X (0.002)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use eagle::config::EagleParams;
+use eagle::coordinator::registry::ModelRegistry;
+use eagle::embedding::{BatcherOptions, EmbedService};
+use eagle::eval::harness::{bench_data_params, EmbedderRig, Experiment};
+use eagle::metrics::Metrics;
+use eagle::server::client::EagleClient;
+use eagle::server::{Server, ServerState};
+use eagle::vectordb::VectorIndex;
+use eagle::util::{percentile, Rng};
+
+fn arg(name: &str, default: f64) -> f64 {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests = arg("--requests", 2000.0) as usize;
+    let n_clients = arg("--clients", 8.0) as usize;
+    let budget = arg("--budget", 0.002);
+    let artifacts = std::path::Path::new("artifacts");
+
+    // --- build the routing state from a synthetic feedback history ---
+    println!("building synthetic RouterBench + fitting eagle...");
+    let rig = EmbedderRig::auto(artifacts);
+    anyhow::ensure!(
+        rig.is_pjrt,
+        "serve_workload requires AOT artifacts (run `make artifacts`)"
+    );
+    let exp = Experiment::build(&bench_data_params(7, 400), &rig);
+    // one router over the union of all datasets' feedback
+    let mut all_obs = Vec::new();
+    for si in 0..exp.benchmark.splits.len() {
+        all_obs.extend(exp.observations(si, 1.0));
+    }
+    let mut rng = Rng::new(99);
+    rng.shuffle(&mut all_obs);
+    let router = eagle::coordinator::router::EagleRouter::fit(
+        EagleParams::default(),
+        exp.n_models(),
+        eagle::vectordb::flat::FlatStore::with_capacity(256, all_obs.len()),
+        &all_obs,
+    );
+    println!(
+        "router ready: {} feedback comparisons, {} stored prompts",
+        router.feedback_len(),
+        router.store().len()
+    );
+
+    // --- boot the serving stack ---
+    let metrics = Arc::new(Metrics::new());
+    let service = EmbedService::start(
+        artifacts,
+        BatcherOptions { batch_window_us: 300, max_batch: 32 },
+        metrics.clone(),
+    )?;
+    let registry = ModelRegistry::routerbench();
+    let state = Arc::new(ServerState::new(router, registry, service.handle(), metrics.clone()));
+    let server = Server::start(state, "127.0.0.1:0", n_clients.max(2))?;
+    let addr = server.addr.to_string();
+    println!("serving on {addr}; {n_clients} clients x {} requests", n_requests / n_clients);
+
+    // --- workload: route + occasional feedback, measure client-side ---
+    let test_prompts: Vec<String> = exp
+        .benchmark
+        .splits
+        .iter()
+        .flat_map(|s| s.test.iter().map(|x| x.text.clone()))
+        .collect();
+    let per_client = n_requests / n_clients;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let prompts = test_prompts.clone();
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut client = EagleClient::connect(&addr)?;
+                let mut rng = Rng::new(c as u64 + 1);
+                let mut lat = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let prompt = &prompts[(c * per_client + i) % prompts.len()];
+                    let t = Instant::now();
+                    let d = client.route(prompt, budget)?;
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    // 20% of requests yield a comparison verdict
+                    if let Some(other) = d.compare_with {
+                        if rng.chance(0.66) {
+                            let score = if rng.chance(0.5) { 1.0 } else { 0.0 };
+                            client.feedback(prompt, &d.model, &other, score)?;
+                        }
+                    }
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+
+    let mut latencies = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- report ---
+    let n = latencies.len();
+    println!("\n== serve_workload results ==");
+    println!("requests        : {n}");
+    println!("wall time       : {wall:.2} s");
+    println!("throughput      : {:.0} routes/s", n as f64 / wall);
+    println!(
+        "client latency  : p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+        percentile(&latencies, 50.0),
+        percentile(&latencies, 90.0),
+        percentile(&latencies, 99.0)
+    );
+    println!(
+        "embed batching  : {} queries in {} batches (avg {:.2}/batch)",
+        metrics.embed_queries.get(),
+        metrics.embed_batches.get(),
+        metrics.embed_queries.get() as f64 / metrics.embed_batches.get().max(1) as f64
+    );
+    println!("server metrics  :\n{}", metrics.report());
+    let fb = server.state.router.read().unwrap().feedback_len();
+    println!("feedback folded : {fb} comparisons (online, no retraining)");
+
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path for Eagle (never imported at serving time).
+
+Layer 2 (JAX model) + Layer 1 (Pallas kernels) + the AOT pipeline that
+lowers everything to HLO text for the rust runtime.
+"""

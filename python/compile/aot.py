@@ -1,0 +1,212 @@
+"""AOT pipeline: lower MiniStella + the similarity scorer to HLO text.
+
+Run once at build time (``make artifacts``); the rust runtime
+(rust/src/runtime/) loads the HLO text, compiles it on the PJRT CPU client
+and executes it on the request path. Python never serves.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  embed_b{B}.hlo.txt      one per batch-size bucket B in EMBED_BATCH_SIZES;
+                          signature (tokens i32[B,S], mask f32[B,S],
+                          *weights) -> (f32[B,D],)
+  scorer_q{Q}_n{N}.hlo.txt similarity scorer buckets;
+                          (queries f32[Q,D], corpus f32[N,D]) -> (f32[Q,N],)
+  weights.bin             all parameters, little-endian f32, canonical order
+  manifest.json           config + artifact shapes + per-tensor offsets
+  golden.json             reference embeddings for rust parity tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import tokenizer as tok
+from .kernels import similarity as sim_kernel
+
+EMBED_BATCH_SIZES = (1, 2, 4, 8, 16, 32)
+SCORER_SHAPES = ((1, 1024), (8, 1024))  # (Q, N) buckets
+
+GOLDEN_TEXTS = (
+    "What is the capital of France?",
+    "Prove that the sum of two even numbers is even.",
+    "def quicksort(arr): implement in python",
+    "The quick brown fox jumps over the lazy dog",
+    "",
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_embed(cfg: model_lib.ModelConfig, batch: int) -> str:
+    """Lower ``embed`` for one batch bucket; weights are runtime parameters.
+
+    Keeping weights as parameters (not baked constants) keeps the HLO text
+    small and lets the rust runtime transfer them to device once
+    (``PjRtClient::buffer_from_host_literal``) and reuse across calls.
+    """
+    fn = functools.partial(model_lib.embed_flat, cfg)
+
+    def wrapped(tokens, mask, *flat):
+        return (fn(tokens, mask, *flat),)
+
+    tokens_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    mask_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.float32)
+    flat_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in model_lib.param_specs(cfg)
+    ]
+    lowered = jax.jit(wrapped).lower(tokens_spec, mask_spec, *flat_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_scorer(dim: int, q_n: int, n: int) -> str:
+    """Lower the Pallas similarity kernel for one (Q, N) bucket."""
+
+    def wrapped(queries, corpus):
+        return (sim_kernel.similarity(queries, corpus),)
+
+    q_spec = jax.ShapeDtypeStruct((q_n, dim), jnp.float32)
+    c_spec = jax.ShapeDtypeStruct((n, dim), jnp.float32)
+    lowered = jax.jit(wrapped).lower(q_spec, c_spec)
+    return to_hlo_text(lowered)
+
+
+def write_weights(cfg, params, path: str):
+    """weights.bin: concatenated little-endian f32 in canonical order."""
+    offsets = []
+    off = 0
+    with open(path, "wb") as f:
+        for name, shape in model_lib.param_specs(cfg):
+            arr = np.asarray(params[name], dtype="<f4")
+            if tuple(arr.shape) != tuple(shape):
+                raise AssertionError(f"{name}: {arr.shape} != {shape}")
+            f.write(arr.tobytes())
+            offsets.append(
+                {"name": name, "shape": list(shape), "offset_elems": off}
+            )
+            off += arr.size
+    return offsets, off
+
+
+def build(out_dir: str) -> dict:
+    cfg = model_lib.ModelConfig()
+    params = model_lib.init_params(cfg)
+    os.makedirs(out_dir, exist_ok=True)
+
+    artifacts = []
+    for b in EMBED_BATCH_SIZES:
+        name = f"embed_b{b}"
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        text = lower_embed(cfg, b)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(
+            {
+                "name": name,
+                "kind": "embed",
+                "file": os.path.basename(path),
+                "batch": b,
+                "seq_len": cfg.seq_len,
+                "out_dim": cfg.d_model,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for q_n, n in SCORER_SHAPES:
+        name = f"scorer_q{q_n}_n{n}"
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        text = lower_scorer(cfg.d_model, q_n, n)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(
+            {
+                "name": name,
+                "kind": "scorer",
+                "file": os.path.basename(path),
+                "queries": q_n,
+                "corpus": n,
+                "dim": cfg.d_model,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    weights_path = os.path.join(out_dir, "weights.bin")
+    offsets, total = write_weights(cfg, params, weights_path)
+    with open(weights_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    print(f"wrote {weights_path} ({total} f32, sha256={digest[:16]}...)")
+
+    golden = {
+        "texts": list(GOLDEN_TEXTS),
+        "embeddings": [
+            [float(x) for x in row]
+            for row in np.asarray(
+                model_lib.embed_texts(cfg, params, list(GOLDEN_TEXTS))
+            )
+        ],
+        "tokens": [
+            tok.tokenize(t, cfg.seq_len, cfg.vocab_size)[0]
+            for t in GOLDEN_TEXTS
+        ],
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+    manifest = {
+        "format_version": 1,
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "seed": cfg.seed,
+        },
+        "embed_batch_sizes": list(EMBED_BATCH_SIZES),
+        "scorer_shapes": [list(s) for s in SCORER_SHAPES],
+        "artifacts": artifacts,
+        "weights": {
+            "file": "weights.bin",
+            "dtype": "f32_le",
+            "total_elems": total,
+            "sha256": digest,
+            "tensors": offsets,
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out_dir}/manifest.json + golden.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for Eagle's request-path compute.
+
+- :mod:`attention` — fused masked flash attention used by every MiniStella
+  encoder block (the embedder is the request-path hot-spot).
+- :mod:`similarity` — blocked query x corpus cosine scoring, the vector
+  database scan offload.
+- :mod:`ref` — pure-jnp oracles for both.
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); block shapes are still chosen for the TPU memory
+hierarchy — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import attention, ref, similarity  # noqa: F401

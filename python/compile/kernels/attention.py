@@ -1,0 +1,160 @@
+"""Fused masked flash attention as a Pallas kernel.
+
+This is the request-path hot-spot of Eagle's embedder: every MiniStella
+encoder block calls :func:`attention`. The kernel is a streaming-softmax
+(flash) formulation:
+
+- the grid iterates over ``(batch*heads, q-blocks)``; each step holds one
+  ``(block_q, Dh)`` query tile plus the full ``(S, Dh)`` key/value strips for
+  that batch-head in VMEM (S is the prompt length, 64 by default — the K/V
+  strips are small; for longer sequences the inner ``fori_loop`` already
+  streams K/V in ``block_k`` chunks, so only the BlockSpec needs re-tiling),
+- inside the kernel a ``fori_loop`` walks ``block_k`` key chunks keeping the
+  running max ``m``, normalizer ``l`` and un-normalized accumulator — the
+  ``S x S`` score matrix never materializes,
+- accumulation is f32 regardless of input dtype (MXU-style accumulate).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ``block_q`` / ``block_k`` are
+sublane-multiples and ``Dh`` is a lane-multiple (128), so each ``q_tile @
+k_chunk.T`` maps onto MXU passes; the BlockSpec expresses the HBM->VMEM
+schedule a CUDA flash kernel would express with threadblock tiling.
+
+Lowered with ``interpret=True``: CPU PJRT cannot run Mosaic custom-calls;
+interpret mode stages the same computation as plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block_k: int):
+    """One grid step: a (block_bh, block_q, Dh) query tile vs all keys.
+
+    The batch-head tile is processed as one batched einsum per key chunk
+    (MXU-friendly on TPU; on CPU-interpret it avoids serializing the grid
+    into tiny matmuls — the single biggest §Perf win, 3.7x).
+    """
+    q = q_ref[...].astype(jnp.float32)  # [block_bh, block_q, dh]
+    seq_len = k_ref.shape[1]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    num_k_blocks = seq_len // block_k
+
+    block_bh, block_q = q.shape[0], q.shape[1]
+    m0 = jnp.full((block_bh, block_q), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_bh, block_q), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_bh, block_q, dh), dtype=jnp.float32)
+
+    def chunk(j, carry):
+        m, l, acc = carry
+        k = pl.load(
+            k_ref, (slice(None), pl.dslice(j * block_k, block_k), slice(None))
+        ).astype(jnp.float32)  # [block_bh, block_k, dh]
+        v = pl.load(
+            v_ref, (slice(None), pl.dslice(j * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        kv_mask = pl.load(
+            mask_ref, (slice(None), pl.dslice(j * block_k, block_k))
+        )
+        s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+        s = s + (1.0 - kv_mask.astype(jnp.float32))[:, None, :] * NEG_INF
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # Rescale previous accumulator by exp(m - m_new) (flash rescaling).
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])  # [block_bh, block_q, block_k]
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bqk,bkd->bqd", p, v)
+        return m_new, l_new, acc_new
+
+    if num_k_blocks == 1:
+        # static unroll: no while-loop in the lowered HLO (XLA CPU fuses)
+        _, l, acc = chunk(0, (m0, l0, acc0))
+    else:
+        _, l, acc = jax.lax.fori_loop(0, num_k_blocks, chunk, (m0, l0, acc0))
+    o_ref[...] = (acc / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "block_bh", "interpret")
+)
+def attention(
+    q,
+    k,
+    v,
+    kv_mask,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_bh: int | None = None,
+    interpret: bool = True,
+):
+    """Masked scaled-dot-product attention via Pallas.
+
+    Args:
+      q, k, v: ``[BH, S, Dh]`` (batch*heads folded into the leading dim).
+      kv_mask: ``[BH, S]``, 1.0 = real key, 0.0 = padding.
+      block_q/block_k: VMEM tile sizes; must divide S.
+      block_bh: batch-head tile per grid step (must divide BH). Defaults
+        to all of BH — the CPU-PJRT profile, where one batched grid step
+        lowers to fused einsums. A TPU profile would shrink this (and
+        block_q/block_k) until one step's tiles fit VMEM; see
+        ``vmem_bytes`` and DESIGN.md §Hardware-Adaptation.
+
+    Returns:
+      ``[BH, S, Dh]`` attention output with ``q``'s dtype.
+    """
+    bh, s, dh = q.shape
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq len {s} not divisible by blocks {block_q}/{block_k}")
+    if block_bh is None:
+        block_bh = bh
+    if bh % block_bh:
+        raise ValueError(f"batch-heads {bh} not divisible by block_bh {block_bh}")
+    grid = (bh // block_bh, s // block_q)
+    kernel = functools.partial(_attention_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_bh, block_q, dh), lambda i, j: (i, j, 0)),  # q tile
+            pl.BlockSpec((block_bh, s, dh), lambda i, j: (i, 0, 0)),  # k strip
+            pl.BlockSpec((block_bh, s, dh), lambda i, j: (i, 0, 0)),  # v strip
+            pl.BlockSpec((block_bh, s), lambda i, j: (i, 0)),  # mask strip
+        ],
+        out_specs=pl.BlockSpec((block_bh, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, kv_mask)
+
+
+def vmem_bytes(
+    block_q: int,
+    block_k: int,
+    seq: int,
+    dh: int,
+    dtype_bytes: int = 4,
+    block_bh: int = 1,
+) -> int:
+    """Estimated VMEM residency of one grid step (inputs + acc + output).
+
+    Used by DESIGN.md §Perf to check the schedule against the ~16 MiB VMEM
+    budget of a TPU core without running on hardware. The CPU profile sets
+    block_bh = batch*heads (interpret mode has no VMEM); a TPU profile
+    shrinks block_bh until this fits.
+    """
+    q_tile = block_bh * block_q * dh * dtype_bytes
+    kv_strip = block_bh * 2 * seq * dh * dtype_bytes
+    mask = block_bh * seq * 4
+    acc = block_bh * (block_q * dh * 4 + 2 * block_q * 4)
+    out = block_bh * block_q * dh * dtype_bytes
+    return q_tile + kv_strip + mask + acc + out

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between kernel and oracle across a hypothesis-driven sweep
+of shapes and dtypes (python/tests/test_attention.py, test_similarity.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attention_ref(q, k, v, kv_mask):
+    """Masked scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``[BH, S, Dh]`` arrays (batch*heads already folded).
+      kv_mask: ``[BH, S]`` with 1.0 for real keys and 0.0 for padding.
+
+    Returns:
+      ``[BH, S, Dh]`` attention output in f32.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    bias = (1.0 - kv_mask.astype(jnp.float32))[:, None, :] * NEG_INF
+    scores = scores + bias
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)
+
+
+def similarity_ref(queries, corpus):
+    """Dot-product similarity scores.
+
+    Args:
+      queries: ``[Q, D]`` (callers pre-normalize rows for cosine similarity).
+      corpus:  ``[N, D]``.
+
+    Returns:
+      ``[Q, N]`` score matrix in f32.
+    """
+    return jnp.matmul(
+        queries.astype(jnp.float32), corpus.astype(jnp.float32).T
+    )

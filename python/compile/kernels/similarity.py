@@ -1,0 +1,66 @@
+"""Blocked query x corpus similarity scoring as a Pallas kernel.
+
+This is the vector-database scan that Eagle-Local runs on every request:
+score the (L2-normalized) query embedding against a slab of historical
+prompt embeddings; the rust coordinator merges per-slab top-k.
+
+The grid tiles the corpus into ``(block_n, D)`` VMEM-resident slabs; each
+step computes a ``(Q, block_n)`` score tile as one MXU-shaped matmul with
+f32 accumulation. This is the HBM->VMEM schedule a FAISS-style GPU scan
+expresses with threadblocks (DESIGN.md §Hardware-Adaptation).
+
+Lowered with ``interpret=True`` for CPU PJRT (see attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _similarity_kernel(q_ref, c_ref, o_ref):
+    """One grid step: all queries vs one corpus slab."""
+    q = q_ref[...].astype(jnp.float32)  # [Q, D]
+    c = c_ref[...].astype(jnp.float32)  # [block_n, D]
+    o_ref[...] = (q @ c.T).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def similarity(queries, corpus, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """Score ``queries`` against ``corpus`` by dot product.
+
+    Args:
+      queries: ``[Q, D]`` — pre-normalize rows for cosine similarity.
+      corpus:  ``[N, D]``; N must be divisible by ``block_n`` (callers pad).
+
+    Returns:
+      ``[Q, N]`` f32 score matrix.
+    """
+    q_n, d = queries.shape
+    n, dc = corpus.shape
+    if d != dc:
+        raise ValueError(f"dim mismatch {d} vs {dc}")
+    if n % block_n:
+        raise ValueError(f"corpus size {n} not divisible by block_n {block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _similarity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_n, d), lambda i: (0, 0)),  # queries stay resident
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),  # corpus slab
+        ],
+        out_specs=pl.BlockSpec((q_n, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q_n, n), jnp.float32),
+        interpret=interpret,
+    )(queries, corpus)
+
+
+def vmem_bytes(q_n: int, block_n: int, d: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step."""
+    return (q_n * d + block_n * d + q_n * block_n) * dtype_bytes

@@ -1,0 +1,184 @@
+"""MiniStella: Eagle's prompt embedder (Layer 2, JAX).
+
+The paper embeds prompts with stella_en_1.5B_v5 on a GPU; this repo
+substitutes a small deterministic transformer encoder (see DESIGN.md
+§Substitutions — the routers only consume the cosine geometry of the
+embeddings, which a seeded random-feature encoder over a shared hash
+tokenizer preserves).
+
+Architecture (pre-LN transformer encoder):
+
+    token ids [B, S] --embedding + positions--> [B, S, D]
+    x K blocks: LN -> multi-head flash attention (Pallas) -> residual
+                LN -> GeLU MLP                             -> residual
+    masked mean pool over S -> LN -> L2 normalize -> [B, D]
+
+All attention math runs through the Pallas kernel in
+``kernels/attention.py`` so the kernel lowers into the exported HLO.
+
+Everything here is build-time only: ``aot.py`` lowers ``embed`` once per
+batch-size bucket and the rust runtime executes the HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from . import tokenizer as tok
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """MiniStella hyper-parameters (mirrored in artifacts/manifest.json)."""
+
+    vocab_size: int = tok.VOCAB_SIZE
+    seq_len: int = tok.SEQ_LEN
+    d_model: int = 256
+    n_heads: int = 2  # head_dim = 128: one MXU lane-width per head
+    n_layers: int = 4
+    d_ff: int = 512
+    seed: int = 42
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Deterministic parameter order — the rust runtime reads weights.bin in
+# exactly this order (manifest.json records name/shape/offset per tensor).
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) for every parameter, in canonical order."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_embed", (cfg.vocab_size, cfg.d_model)),
+        ("pos_embed", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.scale", (cfg.d_model,)),
+            (p + "ln1.bias", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2.scale", (cfg.d_model,)),
+            (p + "ln2.bias", (cfg.d_model,)),
+            (p + "w_up", (cfg.d_model, cfg.d_ff)),
+            (p + "b_up", (cfg.d_ff,)),
+            (p + "w_down", (cfg.d_ff, cfg.d_model)),
+            (p + "b_down", (cfg.d_model,)),
+        ]
+    specs += [("ln_out.scale", (cfg.d_model,)), ("ln_out.bias", (cfg.d_model,))]
+    return specs
+
+
+def init_params(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Seeded Lecun-normal init; deterministic given ``cfg.seed``."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".bias", "b_up", "b_down")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * std
+            )
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    """Parameters as a flat list in canonical order (AOT argument order)."""
+    return [params[name] for name, _ in param_specs(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Inverse of :func:`flatten_params`."""
+    specs = param_specs(cfg)
+    if len(flat) != len(specs):
+        raise ValueError(f"expected {len(specs)} tensors, got {len(flat)}")
+    return {name: t for (name, _), t in zip(specs, flat)}
+
+
+def _layer_norm(x, scale, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _block(cfg: ModelConfig, p: Dict[str, jnp.ndarray], prefix: str, x, mask, *, interpret: bool):
+    """One pre-LN encoder block; attention runs through the Pallas kernel."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    y = _layer_norm(x, p[prefix + "ln1.scale"], p[prefix + "ln1.bias"])
+    q = (y @ p[prefix + "wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (y @ p[prefix + "wk"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = (y @ p[prefix + "wv"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    # Fold batch*heads for the kernel; pad mask broadcast per head.
+    bh_mask = jnp.repeat(mask, h, axis=0)  # [B*H, S]
+    blk = min(s, attn_kernel.DEFAULT_BLOCK_Q)  # small configs in tests
+    o = attn_kernel.attention(
+        q.reshape(b * h, s, dh),
+        k.reshape(b * h, s, dh),
+        v.reshape(b * h, s, dh),
+        bh_mask,
+        block_q=blk,
+        block_k=blk,
+        interpret=interpret,
+    )
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ p[prefix + "wo"]
+
+    y = _layer_norm(x, p[prefix + "ln2.scale"], p[prefix + "ln2.bias"])
+    y = jax.nn.gelu(y @ p[prefix + "w_up"] + p[prefix + "b_up"])
+    return x + y @ p[prefix + "w_down"] + p[prefix + "b_down"]
+
+
+def embed(cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens, mask, *, interpret: bool = True):
+    """Embed token ids into L2-normalized vectors.
+
+    Args:
+      tokens: ``[B, S]`` int32 token ids (0 = padding).
+      mask:   ``[B, S]`` float32, 1.0 = real token.
+
+    Returns:
+      ``[B, D]`` f32 embeddings with unit L2 norm.
+    """
+    x = params["tok_embed"][tokens] + params["pos_embed"][None, :, :]
+    x = x * mask[:, :, None]  # zero padding rows
+    for i in range(cfg.n_layers):
+        x = _block(cfg, params, f"layer{i}.", x, mask, interpret=interpret)
+    # Masked mean pool. All-pad rows (mask sum 0) map to the zero vector
+    # pre-normalization; guard the division.
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(x * mask[:, :, None], axis=1) / denom
+    pooled = _layer_norm(pooled, params["ln_out.scale"], params["ln_out.bias"])
+    norm = jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-6)
+    return pooled / norm
+
+
+def embed_flat(cfg: ModelConfig, tokens, mask, *flat_params, interpret: bool = True):
+    """:func:`embed` with parameters as positional args (the AOT signature)."""
+    return embed(cfg, unflatten_params(cfg, list(flat_params)), tokens, mask, interpret=interpret)
+
+
+def embed_texts(cfg: ModelConfig, params: Dict[str, jnp.ndarray], texts: List[str]):
+    """Convenience: tokenize + embed a list of strings (tests / golden gen)."""
+    ids, masks = [], []
+    for t in texts:
+        i, m = tok.tokenize(t, cfg.seq_len, cfg.vocab_size)
+        ids.append(i)
+        masks.append(m)
+    tokens = jnp.asarray(ids, jnp.int32)
+    mask = jnp.asarray(masks, jnp.float32)
+    return embed(cfg, params, tokens, mask)

@@ -1,0 +1,75 @@
+"""Hash tokenizer shared between the python compile path and the rust runtime.
+
+The rust coordinator must produce *bit-identical* token ids for the same text
+(rust/src/tokenizer/mod.rs mirrors this file; both sides pin the same golden
+vectors in their test suites). The scheme is deliberately model-free:
+
+  1. lowercase the input (ASCII case folding only),
+  2. split into maximal runs of ASCII alphanumerics (everything else is a
+     separator; non-ASCII bytes are separators too),
+  3. map each word to ``1 + FNV1a64(word) % (VOCAB_SIZE - 1)``,
+  4. truncate / right-pad with PAD_ID (=0) to ``seq_len``.
+
+FNV-1a (64-bit) is tiny, endian-free and trivially portable, which is what
+matters for cross-language parity.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+VOCAB_SIZE = 8192
+SEQ_LEN = 64
+PAD_ID = 0
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    """64-bit FNV-1a hash of ``data``."""
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK64
+    return h
+
+
+def words(text: str) -> List[str]:
+    """Lowercased maximal ASCII-alphanumeric runs of ``text``, in order."""
+    out: List[str] = []
+    cur: List[str] = []
+    for ch in text:
+        o = ord(ch)
+        if 0x41 <= o <= 0x5A:  # A-Z -> a-z
+            cur.append(chr(o + 0x20))
+        elif 0x61 <= o <= 0x7A or 0x30 <= o <= 0x39:  # a-z 0-9
+            cur.append(ch)
+        else:
+            if cur:
+                out.append("".join(cur))
+                cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def word_id(word: str, vocab_size: int = VOCAB_SIZE) -> int:
+    """Token id of a single (already lowercased) word."""
+    return 1 + fnv1a64(word.encode("utf-8")) % (vocab_size - 1)
+
+
+def tokenize(
+    text: str, seq_len: int = SEQ_LEN, vocab_size: int = VOCAB_SIZE
+) -> Tuple[List[int], List[float]]:
+    """Tokenize ``text`` into (ids, mask), each of length ``seq_len``.
+
+    ``mask[i]`` is 1.0 for a real token and 0.0 for padding.
+    """
+    ids = [word_id(w, vocab_size) for w in words(text)][:seq_len]
+    mask = [1.0] * len(ids)
+    pad = seq_len - len(ids)
+    ids.extend([PAD_ID] * pad)
+    mask.extend([0.0] * pad)
+    return ids, mask

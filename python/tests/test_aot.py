@@ -1,0 +1,119 @@
+"""AOT pipeline tests: lowering, weight serialization, manifest consistency.
+
+These use a tiny config (lowering the full model per test is slow); the real
+artifacts are built by ``make artifacts`` and consumed by rust integration
+tests, which compare against golden.json.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as m
+
+TINY = m.ModelConfig(vocab_size=128, seq_len=8, d_model=16, n_heads=2,
+                     n_layers=1, d_ff=32, seed=3)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_embed_hlo_text(self):
+        text = aot.lower_embed(TINY, batch=2)
+        assert "ENTRY" in text and "HloModule" in text
+        # weights are parameters, not baked constants
+        n_params = len(m.param_specs(TINY)) + 2  # + tokens + mask
+        assert text.count("parameter(") >= n_params
+
+    def test_scorer_hlo_text(self):
+        text = aot.lower_scorer(dim=16, q_n=2, n=512)
+        assert "ENTRY" in text
+        assert "f32[2,512]" in text
+
+    def test_embed_batch_dim_in_text(self):
+        text = aot.lower_embed(TINY, batch=3)
+        assert "s32[3,8]" in text  # tokens arg
+
+    def test_no_64bit_proto_serialization(self):
+        """We must ship text, not .serialize() protos (xla 0.5.1 id limit)."""
+        text = aot.lower_embed(TINY, batch=1)
+        assert isinstance(text, str)
+
+
+class TestWeightsBin:
+    def test_roundtrip(self, tmp_path):
+        params = m.init_params(TINY)
+        path = str(tmp_path / "w.bin")
+        offsets, total = aot.write_weights(TINY, params, path)
+        raw = np.fromfile(path, dtype="<f4")
+        assert raw.size == total
+        for rec in offsets:
+            arr = np.asarray(params[rec["name"]]).reshape(-1)
+            got = raw[rec["offset_elems"]: rec["offset_elems"] + arr.size]
+            np.testing.assert_array_equal(got, arr.astype("<f4"))
+
+    def test_offsets_contiguous(self, tmp_path):
+        params = m.init_params(TINY)
+        offsets, total = aot.write_weights(TINY, params, str(tmp_path / "w.bin"))
+        expect = 0
+        for rec, (_, shape) in zip(offsets, m.param_specs(TINY)):
+            assert rec["offset_elems"] == expect
+            expect += int(np.prod(shape))
+        assert expect == total
+
+    def test_canonical_order(self, tmp_path):
+        params = m.init_params(TINY)
+        offsets, _ = aot.write_weights(TINY, params, str(tmp_path / "w.bin"))
+        assert [r["name"] for r in offsets] == [n for n, _ in m.param_specs(TINY)]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    """Consistency checks over the real artifacts/ directory."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_artifact_files_exist(self, manifest):
+        for art in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(ART_DIR, art["file"])), art
+
+    def test_weights_size_matches(self, manifest):
+        w = manifest["weights"]
+        size = os.path.getsize(os.path.join(ART_DIR, w["file"]))
+        assert size == w["total_elems"] * 4
+
+    def test_manifest_model_matches_default_config(self, manifest):
+        cfg = m.ModelConfig()
+        assert manifest["model"]["d_model"] == cfg.d_model
+        assert manifest["model"]["vocab_size"] == cfg.vocab_size
+        assert manifest["model"]["seq_len"] == cfg.seq_len
+
+    def test_golden_embeddings_reproduce(self, manifest):
+        """Re-embed golden texts with fresh params: must match golden.json."""
+        with open(os.path.join(ART_DIR, "golden.json")) as f:
+            golden = json.load(f)
+        cfg = m.ModelConfig()
+        params = m.init_params(cfg)
+        e = np.asarray(m.embed_texts(cfg, params, golden["texts"]))
+        np.testing.assert_allclose(
+            e, np.asarray(golden["embeddings"]), atol=1e-4, rtol=1e-4
+        )
+
+    def test_golden_norms(self):
+        """Non-empty texts embed to unit norm; empty text to the zero vector."""
+        with open(os.path.join(ART_DIR, "golden.json")) as f:
+            golden = json.load(f)
+        e = np.asarray(golden["embeddings"])
+        for text, row in zip(golden["texts"], e):
+            expected = 0.0 if not text.strip() else 1.0
+            assert abs(np.linalg.norm(row) - expected) < 1e-4, text

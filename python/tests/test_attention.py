@@ -1,0 +1,132 @@
+"""Pallas attention kernel vs pure-jnp oracle (hypothesis shape sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+def rand_mask(key, bh, s, p_keep=0.7):
+    m = (jax.random.uniform(jax.random.PRNGKey(key), (bh, s)) < p_keep)
+    # Keep at least one real key per row — an all-padding prompt never
+    # reaches the kernel (the batcher drops empty requests).
+    return m.at[:, 0].set(True).astype(jnp.float32)
+
+
+def check(bh, s, dh, block_q, block_k, mask_key=3, dtype=jnp.float32, atol=2e-5,
+          block_bh=None):
+    q, k, v = (rand(i, (bh, s, dh), dtype) for i in range(3))
+    mask = rand_mask(mask_key, bh, s)
+    out = A.attention(q, k, v, mask, block_q=block_q, block_k=block_k,
+                      block_bh=block_bh)
+    exp = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp), atol=atol, rtol=1e-4
+    )
+
+
+class TestAttentionGolden:
+    def test_default_shape(self):
+        check(bh=4, s=64, dh=128, block_q=64, block_k=64)
+
+    def test_multi_q_blocks(self):
+        check(bh=2, s=128, dh=64, block_q=32, block_k=64)
+
+    def test_bh_tiling_variants(self):
+        """block_bh=1 (TPU-style tiling) == block_bh=all (CPU profile)."""
+        for bb in (1, 2, 4):
+            check(bh=4, s=32, dh=16, block_q=32, block_k=16, block_bh=bb)
+
+    def test_rejects_indivisible_block_bh(self):
+        q = rand(0, (3, 16, 8))
+        with pytest.raises(ValueError):
+            A.attention(q, q, q, jnp.ones((3, 16)), block_q=16, block_k=16,
+                        block_bh=2)
+
+    def test_multi_k_blocks(self):
+        check(bh=2, s=128, dh=64, block_q=128, block_k=32)
+
+    def test_tiny(self):
+        check(bh=1, s=8, dh=8, block_q=8, block_k=8)
+
+    def test_full_mask(self):
+        q, k, v = (rand(i, (2, 64, 32)) for i in range(3))
+        mask = jnp.ones((2, 64), jnp.float32)
+        out = A.attention(q, k, v, mask, block_q=32, block_k=32)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.attention_ref(q, k, v, mask)),
+            atol=2e-5, rtol=1e-4,
+        )
+
+    def test_single_real_key(self):
+        """With one unmasked key, output rows equal that key's value row."""
+        q, k, v = (rand(i, (1, 16, 16)) for i in range(3))
+        mask = jnp.zeros((1, 16), jnp.float32).at[0, 5].set(1.0)
+        out = A.attention(q, k, v, mask, block_q=16, block_k=16)
+        exp = jnp.broadcast_to(v[0, 5], (16, 16))
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(exp), atol=2e-5, rtol=1e-4)
+
+    def test_rejects_indivisible_blocks(self):
+        q = rand(0, (1, 48, 16))
+        with pytest.raises(ValueError):
+            A.attention(q, q, q, jnp.ones((1, 48)), block_q=32, block_k=32)
+
+    def test_softmax_rows_convex(self):
+        """Output rows lie in the convex hull of V rows: |out| <= max |v|."""
+        q, k, v = (rand(i, (2, 32, 16)) for i in range(3))
+        mask = rand_mask(9, 2, 32)
+        out = A.attention(q, k, v, mask, block_q=32, block_k=16)
+        assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+    dh=st.sampled_from([8, 16, 32, 64, 128]),
+    mask_key=st.integers(0, 1000),
+    tile_bh=st.booleans(),
+)
+def test_attention_matches_ref_sweep(bh, s_blocks, block, dh, mask_key, tile_bh):
+    check(bh=bh, s=s_blocks * block, dh=dh, block_q=block, block_k=block,
+          mask_key=mask_key, block_bh=1 if tile_bh else None)
+
+
+@settings(max_examples=8, deadline=None)
+@given(mask_key=st.integers(0, 1000))
+def test_attention_bf16_inputs(mask_key):
+    """bf16 inputs, f32 accumulation: looser tolerance."""
+    q, k, v = (rand(i, (2, 32, 32), jnp.bfloat16) for i in range(3))
+    mask = rand_mask(mask_key, 2, 32)
+    out = A.attention(q, k, v, mask, block_q=16, block_k=16)
+    exp = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp), atol=0.05, rtol=0.05
+    )
+
+
+class TestVmemEstimate:
+    def test_default_schedule_fits_vmem(self):
+        """DESIGN §Perf: one grid step must fit the ~16MiB VMEM budget."""
+        b = A.vmem_bytes(A.DEFAULT_BLOCK_Q, A.DEFAULT_BLOCK_K, seq=64, dh=128)
+        assert b < 16 * 1024 * 1024
+
+    def test_tpu_profile_block_bh_fits_vmem(self):
+        """A TPU profile tiles block_bh=8: still well under budget."""
+        b = A.vmem_bytes(A.DEFAULT_BLOCK_Q, A.DEFAULT_BLOCK_K, seq=64,
+                         dh=128, block_bh=8)
+        assert b < 16 * 1024 * 1024
+
+    def test_monotone_in_block_q(self):
+        assert A.vmem_bytes(128, 64, 128, 128) > A.vmem_bytes(64, 64, 128, 128)

@@ -1,0 +1,128 @@
+"""MiniStella model tests: shapes, invariants, determinism, param plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+from compile import tokenizer as tok
+
+jax.config.update("jax_platform_name", "cpu")
+
+# A small config keeps interpret-mode pallas fast in tests.
+SMALL = m.ModelConfig(vocab_size=512, seq_len=16, d_model=32, n_heads=2,
+                      n_layers=2, d_ff=64, seed=7)
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return m.init_params(SMALL)
+
+
+def embed_text(params, texts):
+    return np.asarray(m.embed_texts(SMALL, params, texts))
+
+
+class TestParamSpecs:
+    def test_count(self):
+        assert len(m.param_specs(SMALL)) == 2 + 12 * SMALL.n_layers + 2
+
+    def test_flatten_roundtrip(self, small_params):
+        flat = m.flatten_params(SMALL, small_params)
+        back = m.unflatten_params(SMALL, flat)
+        assert set(back) == set(small_params)
+        for k in small_params:
+            np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(small_params[k]))
+
+    def test_unflatten_rejects_wrong_arity(self):
+        with pytest.raises(ValueError):
+            m.unflatten_params(SMALL, [jnp.zeros((1,))])
+
+    def test_init_deterministic(self):
+        a = m.init_params(SMALL)
+        b = m.init_params(SMALL)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+    def test_seed_changes_weights(self):
+        other = m.init_params(m.ModelConfig(**{**SMALL.__dict__, "seed": 8}))
+        base = m.init_params(SMALL)
+        assert any(
+            not np.array_equal(np.asarray(base[k]), np.asarray(other[k]))
+            for k in base if "embed" in k
+        )
+
+    def test_default_config_param_count(self):
+        cfg = m.ModelConfig()
+        total = sum(int(np.prod(s)) for _, s in m.param_specs(cfg))
+        assert total == 4_218_368  # pinned: matches artifacts/weights.bin
+
+
+class TestEmbed:
+    def test_shape_and_norm(self, small_params):
+        e = embed_text(small_params, ["hello world", "abc def ghi"])
+        assert e.shape == (2, SMALL.d_model)
+        np.testing.assert_allclose(np.linalg.norm(e, axis=1), 1.0, atol=1e-5)
+
+    def test_deterministic(self, small_params):
+        a = embed_text(small_params, ["the same text"])
+        b = embed_text(small_params, ["the same text"])
+        np.testing.assert_array_equal(a, b)
+
+    def test_punctuation_invariance(self, small_params):
+        """Tokenizer strips punctuation, so embeddings must match exactly."""
+        a = embed_text(small_params, ["hello world"])
+        b = embed_text(small_params, ["Hello, world!"])
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    def test_padding_invariance(self, small_params):
+        """Same tokens, different batch padding context -> same embedding."""
+        a = embed_text(small_params, ["alpha beta"])
+        b = embed_text(small_params, ["alpha beta", "a much longer string of words here"])
+        np.testing.assert_allclose(a[0], b[0], atol=1e-5)
+
+    def test_empty_text_is_finite(self, small_params):
+        e = embed_text(small_params, [""])
+        assert np.all(np.isfinite(e))
+
+    def test_distinct_texts_distinct_embeddings(self, small_params):
+        e = embed_text(small_params, ["solve this integral", "write a poem about cats"])
+        assert float(e[0] @ e[1]) < 0.999
+
+    def test_order_sensitivity(self, small_params):
+        """Positional embeddings make token order matter."""
+        e = embed_text(small_params, ["alpha beta gamma", "gamma beta alpha"])
+        assert not np.allclose(e[0], e[1])
+
+    def test_interpret_flag_matches_noninterpret_lowering(self, small_params):
+        """interpret=True is required on CPU, but the math is identical."""
+        ids, mask = tok.tokenize("hello there", SMALL.seq_len, SMALL.vocab_size)
+        tokens = jnp.asarray([ids], jnp.int32)
+        maskv = jnp.asarray([mask], jnp.float32)
+        a = m.embed(SMALL, small_params, tokens, maskv, interpret=True)
+        assert np.all(np.isfinite(np.asarray(a)))
+
+    def test_embed_flat_matches_dict(self, small_params):
+        ids, mask = tok.tokenize("flat params path", SMALL.seq_len, SMALL.vocab_size)
+        tokens = jnp.asarray([ids], jnp.int32)
+        maskv = jnp.asarray([mask], jnp.float32)
+        a = m.embed(SMALL, small_params, tokens, maskv)
+        flat = m.flatten_params(SMALL, small_params)
+        b = m.embed_flat(SMALL, tokens, maskv, *flat)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+class TestGeometry:
+    """The property Eagle-Local depends on: shared tokens => similar vectors."""
+
+    def test_domain_clustering(self, small_params):
+        math_q = [
+            "solve the equation 3x plus 5 equals 20 for x",
+            "solve the equation 7x minus 2 equals 12 for x",
+        ]
+        code_q = ["write a python function to sort a list of numbers"]
+        e = embed_text(small_params, math_q + code_q)
+        same = float(e[0] @ e[1])
+        cross = float(e[0] @ e[2])
+        assert same > cross

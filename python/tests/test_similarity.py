@@ -1,0 +1,85 @@
+"""Pallas similarity kernel vs jnp oracle (hypothesis shape sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import similarity as S
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+class TestSimilarityGolden:
+    def test_bucket_shapes(self):
+        """The AOT buckets: (1,1024) and (8,1024) at D=256."""
+        for qn in (1, 8):
+            q, c = rand(0, (qn, 256)), rand(1, (1024, 256))
+            out = S.similarity(q, c)
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(ref.similarity_ref(q, c)),
+                atol=1e-4, rtol=1e-4,
+            )
+
+    def test_single_block(self):
+        q, c = rand(0, (4, 64)), rand(1, (256, 64))
+        out = S.similarity(q, c, block_n=256)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.similarity_ref(q, c)), atol=1e-4
+        )
+
+    def test_identity_corpus(self):
+        """Normalized query scored against itself scores 1.0."""
+        q = rand(0, (1, 128))
+        q = q / jnp.linalg.norm(q)
+        c = jnp.concatenate([q, rand(1, (255, 128))], axis=0)
+        out = S.similarity(q, c, block_n=128)
+        assert abs(float(out[0, 0]) - 1.0) < 1e-5
+
+    def test_rejects_dim_mismatch(self):
+        with pytest.raises(ValueError):
+            S.similarity(rand(0, (1, 32)), rand(1, (256, 64)))
+
+    def test_rejects_indivisible_corpus(self):
+        with pytest.raises(ValueError):
+            S.similarity(rand(0, (1, 32)), rand(1, (100, 32)), block_n=256)
+
+    def test_vmem_estimate_fits(self):
+        assert S.vmem_bytes(8, S.DEFAULT_BLOCK_N, 256) < 16 * 1024 * 1024
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    qn=st.integers(1, 8),
+    blocks=st.integers(1, 6),
+    block_n=st.sampled_from([16, 64, 128]),
+    d=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 10_000),
+)
+def test_similarity_matches_ref_sweep(qn, blocks, block_n, d, seed):
+    q = rand(seed, (qn, d))
+    c = rand(seed + 1, (blocks * block_n, d))
+    out = S.similarity(q, c, block_n=block_n)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.similarity_ref(q, c)),
+        atol=1e-3, rtol=1e-3,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_similarity_bf16_corpus(seed):
+    q = rand(seed, (4, 64), jnp.bfloat16)
+    c = rand(seed + 1, (128, 64), jnp.bfloat16)
+    out = S.similarity(q, c, block_n=64)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.similarity_ref(q, c)),
+        atol=0.5, rtol=0.05,
+    )

@@ -1,0 +1,112 @@
+"""Tokenizer unit + property tests.
+
+The golden values here are duplicated verbatim in
+rust/src/tokenizer/mod.rs tests — they pin cross-language parity. If you
+change one side you must change both.
+"""
+
+import string
+
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import tokenizer as tok
+
+
+class TestFnv1a:
+    def test_golden_hello(self):
+        assert tok.fnv1a64(b"hello") == 11831194018420276491
+
+    def test_empty(self):
+        assert tok.fnv1a64(b"") == 0xCBF29CE484222325
+
+    def test_single_byte(self):
+        assert tok.fnv1a64(b"a") == ((0xCBF29CE484222325 ^ 0x61) * 0x100000001B3) % (1 << 64)
+
+    @given(st.binary(max_size=64))
+    def test_64bit_range(self, data):
+        assert 0 <= tok.fnv1a64(data) < (1 << 64)
+
+    @given(st.binary(min_size=1, max_size=32))
+    def test_prefix_sensitivity(self, data):
+        # Appending a byte changes the hash (FNV-1a mixes every byte).
+        assert tok.fnv1a64(data) != tok.fnv1a64(data + b"\x00") or data == b""
+
+
+class TestWords:
+    def test_golden_split(self):
+        assert tok.words("a-b_c  D9") == ["a", "b", "c", "d9"]
+
+    def test_case_folding(self):
+        assert tok.words("HeLLo WORLD") == ["hello", "world"]
+
+    def test_punctuation_only(self):
+        assert tok.words("!!! ... ???") == []
+
+    def test_empty(self):
+        assert tok.words("") == []
+
+    def test_unicode_is_separator(self):
+        assert tok.words("café bar") == ["caf", "bar"]
+
+    def test_digits_kept(self):
+        assert tok.words("gpt4 v2.5") == ["gpt4", "v2", "5"]
+
+    @given(st.text(max_size=200))
+    def test_words_are_lower_alnum(self, text):
+        for w in tok.words(text):
+            assert w
+            assert all(c in string.ascii_lowercase + string.digits for c in w)
+
+    @given(st.text(max_size=200))
+    def test_idempotent_on_join(self, text):
+        ws = tok.words(text)
+        assert tok.words(" ".join(ws)) == ws
+
+
+class TestTokenize:
+    def test_golden_ids(self):
+        ids, mask = tok.tokenize("Hello, World! 42", 8)
+        assert ids == [8181, 5097, 5912, 0, 0, 0, 0, 0]
+        assert mask == [1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+
+    def test_word_ids_golden(self):
+        assert tok.word_id("hello") == 8181
+        assert tok.word_id("world") == 5097
+        assert tok.word_id("the") == 4062
+        assert tok.word_id("42") == 5912
+
+    def test_truncation(self):
+        ids, mask = tok.tokenize(" ".join(["w"] * 100), 16)
+        assert len(ids) == 16 and len(mask) == 16
+        assert all(m == 1.0 for m in mask)
+
+    def test_empty_text(self):
+        ids, mask = tok.tokenize("", 8)
+        assert ids == [0] * 8
+        assert mask == [0.0] * 8
+
+    def test_pad_id_never_collides(self):
+        # word ids live in [1, vocab-1]; PAD=0 is reserved.
+        for w in ["a", "b", "zzz", "9", "hello"]:
+            assert tok.word_id(w) >= 1
+
+    @given(st.text(max_size=300), st.integers(min_value=1, max_value=128))
+    def test_shapes_and_mask_consistency(self, text, seq_len):
+        ids, mask = tok.tokenize(text, seq_len)
+        assert len(ids) == seq_len and len(mask) == seq_len
+        for i, m in zip(ids, mask):
+            assert (m == 1.0) == (i != tok.PAD_ID)
+        # mask is a prefix of ones
+        first_pad = mask.index(0.0) if 0.0 in mask else seq_len
+        assert all(m == 1.0 for m in mask[:first_pad])
+        assert all(m == 0.0 for m in mask[first_pad:])
+
+    @given(st.text(max_size=100))
+    def test_deterministic(self, text):
+        assert tok.tokenize(text) == tok.tokenize(text)
+
+    @given(st.integers(min_value=2, max_value=1 << 16))
+    def test_vocab_bound(self, vocab):
+        ids, _ = tok.tokenize("alpha beta gamma delta", 8, vocab)
+        assert all(0 <= i < vocab for i in ids)

@@ -1,0 +1,82 @@
+//! Shared scaffolding for the figure/table bench targets.
+//!
+//! Scale defaults to 800 prompts/dataset (fast, stable shapes); override
+//! with EAGLE_BENCH_SCALE=2800 to match the paper's full dataset size.
+//! The embedder is the PJRT serving path when artifacts exist, otherwise
+//! the hash fallback (noted in the output header).
+
+use eagle::baselines::knn::KnnPredictor;
+use eagle::baselines::mlp::{MlpOptions, MlpPredictor};
+use eagle::baselines::svm::{SvmOptions, SvmPredictor};
+use eagle::baselines::QualityPredictor;
+use eagle::config::{Config, EagleParams};
+use eagle::coordinator::{PredictorRouter, Router};
+use eagle::eval::harness::{bench_data_params, EmbedderRig, Experiment};
+
+pub const DEFAULT_SCALE: usize = 800;
+pub const SEED: u64 = 0xEA61E;
+
+pub fn scale() -> usize {
+    std::env::var("EAGLE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_SCALE)
+}
+
+pub fn setup(name: &str) -> (EmbedderRig, Experiment, Config) {
+    let rig = EmbedderRig::auto(std::path::Path::new("artifacts"));
+    println!(
+        "[{name}] scale={} prompts/dataset, embedder={}, seed={SEED:#x}",
+        scale(),
+        if rig.is_pjrt { "PJRT(MiniStella AOT)" } else { "hash-fallback" }
+    );
+    let exp = Experiment::build(&bench_data_params(SEED, scale()), &rig);
+    (rig, exp, Config::default())
+}
+
+/// Fit a named router on one dataset split under the paper's online
+/// (feedback-supervision) protocol. `frac` stages the train prefix.
+pub fn fit_router(
+    exp: &Experiment,
+    cfg: &Config,
+    name: &str,
+    split: usize,
+    frac: f64,
+) -> Box<dyn Router> {
+    match name {
+        "eagle" | "eagle-global" | "eagle-local" => {
+            let p = match name {
+                "eagle-global" => 1.0,
+                "eagle-local" => 0.0,
+                _ => cfg.eagle.p,
+            };
+            Box::new(exp.fit_eagle(split, EagleParams { p, ..cfg.eagle.clone() }, frac))
+        }
+        "knn" => {
+            let mut p = KnnPredictor::new(cfg.baselines.knn_neighbors);
+            p.fit(&exp.train_set_feedback(split, frac));
+            Box::new(PredictorRouter::new(p))
+        }
+        "mlp" => {
+            let mut p = MlpPredictor::new(MlpOptions {
+                hidden: cfg.baselines.mlp_hidden,
+                epochs: cfg.baselines.mlp_epochs,
+                lr: cfg.baselines.mlp_lr,
+                ..Default::default()
+            });
+            p.fit(&exp.train_set_feedback(split, frac));
+            Box::new(PredictorRouter::new(p))
+        }
+        "svm" => {
+            let mut p = SvmPredictor::new(SvmOptions {
+                epsilon: cfg.baselines.svm_epsilon,
+                epochs: cfg.baselines.svm_epochs,
+                lr: cfg.baselines.svm_lr,
+                ..Default::default()
+            });
+            p.fit(&exp.train_set_feedback(split, frac));
+            Box::new(PredictorRouter::new(p))
+        }
+        other => panic!("unknown router {other}"),
+    }
+}

@@ -1,0 +1,55 @@
+//! Fig 4b reproduction: effect of the local neighbor count N on
+//! Eagle-Local performance.
+//!
+//! Paper shape: N=10 lacks information, N=20 is optimal, larger N gives
+//! diminishing returns. Note (EXPERIMENTS.md): our trajectory-averaged
+//! local estimator degrades *gracefully* at small N (it stays close to
+//! the global seed), so the small-N penalty is softer than the paper's.
+//!
+//! Run: `cargo bench --bench fig4b_neighbor_size`
+
+mod common;
+
+use eagle::bench::{fmt, print_table};
+use eagle::config::EagleParams;
+use eagle::routerbench::DATASETS;
+
+fn main() {
+    let (_rig, exp, cfg) = common::setup("fig4b");
+    let n_values = [1usize, 5, 10, 20, 40, 80];
+
+    let mut rows = vec![vec![
+        "N".to_string(),
+        "summed AUC (local-only)".to_string(),
+        "summed AUC (combined)".to_string(),
+    ]];
+    let mut best = (0usize, f64::MIN);
+    for &n in &n_values {
+        let mut local_sum = 0.0;
+        let mut combined_sum = 0.0;
+        for si in 0..DATASETS.len() {
+            let local = exp.fit_eagle(
+                si,
+                EagleParams { p: 0.0, n_neighbors: n, ..cfg.eagle.clone() },
+                1.0,
+            );
+            local_sum += exp.eval(&local, si).auc();
+            let combined = exp.fit_eagle(
+                si,
+                EagleParams { p: 0.5, n_neighbors: n, ..cfg.eagle.clone() },
+                1.0,
+            );
+            combined_sum += exp.eval(&combined, si).auc();
+        }
+        if combined_sum > best.1 {
+            best = (n, combined_sum);
+        }
+        rows.push(vec![n.to_string(), fmt(local_sum, 4), fmt(combined_sum, 4)]);
+    }
+    print_table("Fig 4b — neighbor size sweep", &rows);
+    println!(
+        "\npaper shape check: best combined N = {} (paper: N=20 optimal, \
+         diminishing returns beyond)",
+        best.0
+    );
+}

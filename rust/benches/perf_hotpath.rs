@@ -1,0 +1,157 @@
+//! Hot-path microbenchmarks (§Perf): every stage of the request path plus
+//! the estimator ablations. Criterion-equivalent harness from
+//! `eagle::bench` (adaptive iteration counts, p50/p99).
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use eagle::config::EagleParams;
+use eagle::coordinator::router::{EagleRouter, Observation};
+use eagle::coordinator::Router;
+use eagle::elo::{Comparison, EloEngine, GlobalElo, Outcome};
+use eagle::embedding::{BatcherOptions, EmbedService, Embedder, HashEmbedder};
+use eagle::metrics::Metrics;
+use eagle::tokenizer;
+use eagle::util::{l2_normalize, Rng};
+use eagle::vectordb::flat::FlatStore;
+use eagle::vectordb::ivf::{IvfIndex, IvfParams};
+use eagle::vectordb::{Feedback, VectorIndex};
+
+const DIM: usize = 256;
+
+fn unit(rng: &mut Rng) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+    l2_normalize(&mut v);
+    v
+}
+
+fn rand_cmp(rng: &mut Rng) -> Comparison {
+    let a = rng.below(11);
+    let mut b = rng.below(10);
+    if b >= a {
+        b += 1;
+    }
+    let outcome = match rng.below(3) {
+        0 => Outcome::WinA,
+        1 => Outcome::WinB,
+        _ => Outcome::Draw,
+    };
+    Comparison { a, b, outcome }
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE);
+    let mut results = Vec::new();
+
+    // --- tokenizer ---
+    let text = "Solve this word problem about train speed distance hours \
+                please carefully show your reasoning with all details";
+    results.push(eagle::bench::bench("tokenizer/tokenize_64", 200, || {
+        std::hint::black_box(tokenizer::tokenize_default(text));
+    }));
+
+    // --- ELO ---
+    let cmps: Vec<Comparison> = (0..1000).map(|_| rand_cmp(&mut rng)).collect();
+    let mut engine = EloEngine::new(11, 32.0);
+    results.push(eagle::bench::bench("elo/update_x1000", 200, || {
+        engine.replay(&cmps);
+    }));
+    results.push(eagle::bench::bench("elo/global_init_10k_records", 300, || {
+        let mut g = GlobalElo::new(11, 32.0);
+        for chunk in cmps.chunks(100) {
+            for _ in 0..1 {
+                g.apply_new(chunk);
+            }
+        }
+        std::hint::black_box(g.ratings());
+    }));
+
+    // --- vector stores ---
+    for &n in &[1_000usize, 10_000] {
+        let mut flat = FlatStore::with_capacity(DIM, n);
+        for _ in 0..n {
+            let v = unit(&mut rng);
+            flat.add(&v, Feedback { comparisons: vec![rand_cmp(&mut rng)] });
+        }
+        let q = unit(&mut rng);
+        results.push(eagle::bench::bench(
+            &format!("vectordb/flat_scan_top20_n{n}"),
+            300,
+            || {
+                std::hint::black_box(flat.search(&q, 20));
+            },
+        ));
+
+        let vectors: Vec<Vec<f32>> = (0..n).map(|_| unit(&mut rng)).collect();
+        let payloads = (0..n)
+            .map(|_| Feedback { comparisons: vec![rand_cmp(&mut rng)] })
+            .collect();
+        let ivf = IvfIndex::build(DIM, &vectors, payloads, IvfParams::default());
+        results.push(eagle::bench::bench(
+            &format!("vectordb/ivf_top20_n{n}_probe8of64"),
+            300,
+            || {
+                std::hint::black_box(ivf.search(&q, 20));
+            },
+        ));
+    }
+
+    // --- router scoring path (local elo replay included) ---
+    let obs: Vec<Observation> = (0..5_000)
+        .map(|_| Observation {
+            embedding: unit(&mut rng),
+            comparisons: (0..3).map(|_| rand_cmp(&mut rng)).collect(),
+        })
+        .collect();
+    let router = EagleRouter::fit(
+        EagleParams::default(),
+        11,
+        FlatStore::with_capacity(DIM, obs.len()),
+        &obs,
+    );
+    let q = unit(&mut rng);
+    results.push(eagle::bench::bench("router/combined_scores_store5k", 400, || {
+        std::hint::black_box(router.scores(&q));
+    }));
+    let global_router = EagleRouter::fit(
+        EagleParams { p: 1.0, ..Default::default() },
+        11,
+        FlatStore::with_capacity(DIM, obs.len()),
+        &obs,
+    );
+    results.push(eagle::bench::bench("router/global_only_store5k", 200, || {
+        std::hint::black_box(global_router.scores(&q));
+    }));
+
+    // --- hash embedder (fallback path) ---
+    let hash = HashEmbedder::new(DIM);
+    results.push(eagle::bench::bench("embed/hash_fallback_1", 200, || {
+        std::hint::black_box(hash.embed(&[text]));
+    }));
+
+    // --- PJRT embedder (serving path; skipped without artifacts) ---
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let metrics = std::sync::Arc::new(Metrics::new());
+        let svc = EmbedService::start(
+            artifacts,
+            BatcherOptions { batch_window_us: 0, max_batch: 32 },
+            metrics,
+        )
+        .expect("embed service");
+        let handle = svc.handle();
+        results.push(eagle::bench::bench("embed/pjrt_single", 2_000, || {
+            std::hint::black_box(handle.embed_one(text).unwrap());
+        }));
+        let texts: Vec<&str> = (0..32).map(|_| text).collect();
+        results.push(eagle::bench::bench("embed/pjrt_batch32", 4_000, || {
+            std::hint::black_box(handle.embed_many(&texts).unwrap());
+        }));
+    } else {
+        println!("(skipping PJRT embed benches: artifacts not built)");
+    }
+
+    println!("\n== perf_hotpath ==");
+    for r in &results {
+        println!("{}", r.line());
+    }
+}

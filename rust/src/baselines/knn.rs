@@ -1,0 +1,165 @@
+//! KNN quality predictor: the paper's KNN baseline (Appendix A.2 —
+//! 40 nearest neighbors, cosine similarity).
+//!
+//! Predicted quality of model j for query q = mean quality_j over the 40
+//! nearest training prompts. `fit` stores the data (like sklearn's brute
+//! KNeighborsRegressor); prediction pays the scan.
+
+use super::{QualityPredictor, TrainSet};
+use crate::vectordb::flat::dot_unrolled;
+use crate::vectordb::topk::TopK;
+
+/// KNN regressor over cosine similarity.
+pub struct KnnPredictor {
+    k: usize,
+    data: Option<TrainSet>,
+    /// Per-model observed-label means (fallback when no labelled neighbor).
+    means: Vec<f64>,
+}
+
+impl KnnPredictor {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        KnnPredictor { k, data: None, means: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.as_ref().map_or(0, |d| d.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl QualityPredictor for KnnPredictor {
+    fn name(&self) -> &'static str {
+        "knn"
+    }
+
+    fn fit(&mut self, data: &TrainSet) {
+        self.data = Some(data.clone());
+        self.means = data.label_means();
+    }
+
+    fn update(&mut self, new_data: &TrainSet) {
+        // sklearn-equivalent online behavior: concatenate and "refit"
+        // (refit for brute KNN == restage the data).
+        match &mut self.data {
+            Some(d) => d.extend(new_data),
+            None => self.data = Some(new_data.clone()),
+        }
+        self.means = self.data.as_ref().unwrap().label_means();
+    }
+
+    fn predict(&self, query: &[f32]) -> Vec<f64> {
+        let Some(data) = &self.data else {
+            return Vec::new();
+        };
+        let n_models = data.n_models();
+        if data.is_empty() {
+            return vec![0.5; n_models];
+        }
+        let mut topk = TopK::new(self.k);
+        for i in 0..data.len() {
+            topk.push(i as u32, dot_unrolled(data.embeddings.row(i), query));
+        }
+        let hits = topk.into_sorted();
+        let mut out = vec![0.0f64; n_models];
+        let mut counts = vec![0.0f64; n_models];
+        for (id, _) in &hits {
+            let q = data.qualities.row(*id as usize);
+            let m = data.mask.row(*id as usize);
+            for j in 0..n_models {
+                out[j] += (m[j] * q[j]) as f64;
+                counts[j] += m[j] as f64;
+            }
+        }
+        for j in 0..n_models {
+            out[j] = if counts[j] > 0.0 {
+                out[j] / counts[j]
+            } else {
+                // no labelled neighbor for this model: global label mean
+                self.means.get(j).copied().unwrap_or(0.5)
+            };
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::synthetic_regression;
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn predicts_neighbor_average() {
+        let data = TrainSet::new(
+            super::super::linalg::Matrix::from_rows(&[
+                vec![1.0, 0.0],
+                vec![0.99, 0.1],
+                vec![0.0, 1.0],
+            ]),
+            super::super::linalg::Matrix::from_rows(&[
+                vec![1.0],
+                vec![0.8],
+                vec![0.0],
+            ]),
+        );
+        let mut knn = KnnPredictor::new(2);
+        knn.fit(&data);
+        // query along x: neighbors are rows 0,1 -> mean 0.9
+        let p = knn.predict(&[1.0, 0.0]);
+        assert!((p[0] - 0.9).abs() < 1e-6, "{p:?}");
+    }
+
+    #[test]
+    fn k_larger_than_data_uses_all() {
+        let data = TrainSet::new(
+            super::super::linalg::Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]),
+            super::super::linalg::Matrix::from_rows(&[vec![1.0], vec![0.0]]),
+        );
+        let mut knn = KnnPredictor::new(40);
+        knn.fit(&data);
+        let p = knn.predict(&[0.7, 0.7]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn update_appends() {
+        let (a, _) = synthetic_regression(&mut Rng::new(1), 30, 8, 2);
+        let (b, _) = synthetic_regression(&mut Rng::new(2), 20, 8, 2);
+        let mut knn = KnnPredictor::new(5);
+        knn.fit(&a);
+        assert_eq!(knn.len(), 30);
+        knn.update(&b);
+        assert_eq!(knn.len(), 50);
+    }
+
+    #[test]
+    fn update_without_fit_works() {
+        let (a, _) = synthetic_regression(&mut Rng::new(3), 10, 8, 2);
+        let mut knn = KnnPredictor::new(5);
+        knn.update(&a);
+        assert_eq!(knn.len(), 10);
+    }
+
+    #[test]
+    fn empty_predictor_returns_empty() {
+        let knn = KnnPredictor::new(5);
+        assert!(knn.predict(&[1.0, 0.0]).is_empty());
+    }
+
+    #[test]
+    fn learns_synthetic_task_reasonably() {
+        let mut rng = Rng::new(7);
+        let (all, _) = synthetic_regression(&mut rng, 700, 16, 3);
+        let (train, test) = (all.prefix(600), all.suffix(600));
+        let mut knn = KnnPredictor::new(40);
+        knn.fit(&train);
+        // KNN on smooth sigmoid targets: better than predicting the mean
+        let mse = knn.mse(&test);
+        assert!(mse < 0.08, "mse = {mse}");
+    }
+}

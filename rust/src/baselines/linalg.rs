@@ -1,0 +1,233 @@
+//! Minimal dense linear algebra for the baseline trainers.
+//!
+//! Row-major f32 matrices with the handful of kernels MLP/SVM training
+//! needs: GEMM (ikj loop order, 4-wide inner unrolling via the vectordb dot
+//! kernel), GEMV, transpose-GEMM, axpy. Sizes here are small (batch x 256
+//! x 100), so clarity beats blocking.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        assert!(!rows.is_empty(), "empty matrix");
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Matrix { rows: rows.len(), cols, data }
+    }
+
+    /// Seeded uniform init in [-scale, scale].
+    pub fn random(rows: usize, cols: usize, scale: f32, rng: &mut crate::util::Rng) -> Self {
+        let data = (0..rows * cols).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    /// C = A @ B  (A: m x k, B: k x n).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul shape");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let c_row = c.row_mut(i);
+            for p in 0..k {
+                let a = a_row[p];
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = b.row(p);
+                for j in 0..n {
+                    c_row[j] += a * b_row[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// C = Aᵀ @ B  (A: k x m, B: k x n) — gradient accumulation shape.
+    pub fn t_matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows, "t_matmul shape");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        for p in 0..k {
+            let a_row = self.row(p);
+            let b_row = b.row(p);
+            for i in 0..m {
+                let a = a_row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let c_row = c.row_mut(i);
+                for j in 0..n {
+                    c_row[j] += a * b_row[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A @ Bᵀ  (A: m x k, B: n x k) — backprop through weights shape.
+    pub fn matmul_t(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_t shape");
+        let (m, n) = (self.rows, b.rows);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let c_row = c.row_mut(i);
+            for (j, cj) in c_row.iter_mut().enumerate() {
+                *cj = crate::vectordb::flat::dot_unrolled(a_row, b.row(j));
+            }
+        }
+        c
+    }
+
+    /// self += alpha * other (elementwise).
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.data.len(), other.data.len(), "axpy shape");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// y += alpha * x for vectors.
+pub fn vec_axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    fn rand_m(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::random(r, c, 1.0, rng)
+    }
+
+    fn close(a: &Matrix, b: &Matrix, tol: f32) -> bool {
+        a.rows == b.rows
+            && a.cols == b.cols
+            && a.data.iter().zip(&b.data).all(|(x, y)| (x - y).abs() < tol)
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        prop::check("matmul == naive", 50, |rng| {
+            let (m, k, n) = (1 + rng.below(8), 1 + rng.below(8), 1 + rng.below(8));
+            let a = rand_m(rng, m, k);
+            let b = rand_m(rng, k, n);
+            prop::assert_prop(close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-4), "matmul")
+        });
+    }
+
+    #[test]
+    fn t_matmul_matches_transpose() {
+        prop::check("t_matmul", 50, |rng| {
+            let (k, m, n) = (1 + rng.below(8), 1 + rng.below(8), 1 + rng.below(8));
+            let a = rand_m(rng, k, m);
+            let b = rand_m(rng, k, n);
+            // naive: transpose a then matmul
+            let mut at = Matrix::zeros(m, k);
+            for i in 0..k {
+                for j in 0..m {
+                    *at.at_mut(j, i) = a.at(i, j);
+                }
+            }
+            prop::assert_prop(close(&a.t_matmul(&b), &naive_matmul(&at, &b), 1e-4), "t_matmul")
+        });
+    }
+
+    #[test]
+    fn matmul_t_matches_transpose() {
+        prop::check("matmul_t", 50, |rng| {
+            let (m, k, n) = (1 + rng.below(8), 1 + rng.below(8), 1 + rng.below(8));
+            let a = rand_m(rng, m, k);
+            let b = rand_m(rng, n, k);
+            let mut bt = Matrix::zeros(k, n);
+            for i in 0..n {
+                for j in 0..k {
+                    *bt.at_mut(j, i) = b.at(i, j);
+                }
+            }
+            prop::assert_prop(close(&a.matmul_t(&b), &naive_matmul(&a, &bt), 1e-4), "matmul_t")
+        });
+    }
+
+    #[test]
+    fn axpy_and_frob() {
+        let mut a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0, 4.0, 5.0, 6.0]);
+        assert!((Matrix::from_rows(&[vec![3.0, 4.0]]).frob() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape")]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged rows")]
+    fn ragged_rows_panics() {
+        let _ = Matrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,298 @@
+//! MLP quality predictor: the paper's MLP baseline (Appendix A.2 — two
+//! layers, hidden 100, ReLU), trained with Adam on MSE. Equivalent of
+//! sklearn's `MLPRegressor(hidden_layer_sizes=(100,), activation="relu")`.
+//!
+//! `update` follows the retraining-based protocol: append + full refit —
+//! the cost Table 3a measures.
+
+use super::linalg::Matrix;
+use super::{QualityPredictor, TrainSet};
+use crate::util::Rng;
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MlpOptions {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    pub batch_size: usize,
+    pub seed: u64,
+}
+
+impl Default for MlpOptions {
+    fn default() -> Self {
+        MlpOptions { hidden: 100, epochs: 60, lr: 1e-3, batch_size: 64, seed: 0x317 }
+    }
+}
+
+/// Adam state for one parameter tensor.
+struct Adam {
+    m: Matrix,
+    v: Matrix,
+    t: i32,
+}
+
+impl Adam {
+    fn new(rows: usize, cols: usize) -> Self {
+        Adam { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols), t: 0 }
+    }
+
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f64) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t);
+        let bc2 = 1.0 - B2.powi(self.t);
+        for i in 0..w.data.len() {
+            let g = grad.data[i] as f64;
+            let m = B1 * self.m.data[i] as f64 + (1.0 - B1) * g;
+            let v = B2 * self.v.data[i] as f64 + (1.0 - B2) * g * g;
+            self.m.data[i] = m as f32;
+            self.v.data[i] = v as f32;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            w.data[i] -= (lr * mhat / (vhat.sqrt() + EPS)) as f32;
+        }
+    }
+}
+
+/// Two-layer MLP: x -> ReLU(x W1 + b1) -> W2 + b2.
+pub struct MlpPredictor {
+    opts: MlpOptions,
+    w1: Matrix,
+    b1: Matrix,
+    w2: Matrix,
+    b2: Matrix,
+    data: Option<TrainSet>,
+    fitted: bool,
+    /// Final training loss of the last fit (diagnostics).
+    pub last_loss: f64,
+}
+
+impl MlpPredictor {
+    pub fn new(opts: MlpOptions) -> Self {
+        MlpPredictor {
+            opts,
+            w1: Matrix::zeros(1, 1),
+            b1: Matrix::zeros(1, 1),
+            w2: Matrix::zeros(1, 1),
+            b2: Matrix::zeros(1, 1),
+            data: None,
+            fitted: false,
+            last_loss: f64::NAN,
+        }
+    }
+
+    fn init(&mut self, in_dim: usize, out_dim: usize) {
+        let mut rng = Rng::new(self.opts.seed);
+        let h = self.opts.hidden;
+        // He-style init for ReLU
+        let s1 = (2.0f32 / in_dim as f32).sqrt();
+        let s2 = (2.0f32 / h as f32).sqrt();
+        self.w1 = Matrix::random(in_dim, h, s1, &mut rng);
+        self.b1 = Matrix::zeros(1, h);
+        self.w2 = Matrix::random(h, out_dim, s2, &mut rng);
+        self.b2 = Matrix::zeros(1, out_dim);
+    }
+
+    /// Forward pass for a batch; returns (hidden-post-relu, output).
+    fn forward(&self, x: &Matrix) -> (Matrix, Matrix) {
+        let mut h = x.matmul(&self.w1);
+        for i in 0..h.rows {
+            let b = &self.b1.data;
+            let row = h.row_mut(i);
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = (*r + b[j]).max(0.0); // bias + ReLU
+            }
+        }
+        let mut y = h.matmul(&self.w2);
+        for i in 0..y.rows {
+            let b = &self.b2.data;
+            let row = y.row_mut(i);
+            for (j, r) in row.iter_mut().enumerate() {
+                *r += b[j];
+            }
+        }
+        (h, y)
+    }
+
+    fn train(&mut self) {
+        let Some(data) = self.data.clone() else { return };
+        if data.is_empty() {
+            return;
+        }
+        let (n, in_dim, out_dim) = (data.len(), data.embeddings.cols, data.n_models());
+        self.init(in_dim, out_dim);
+        let mut a_w1 = Adam::new(in_dim, self.opts.hidden);
+        let mut a_b1 = Adam::new(1, self.opts.hidden);
+        let mut a_w2 = Adam::new(self.opts.hidden, out_dim);
+        let mut a_b2 = Adam::new(1, out_dim);
+
+        let mut rng = Rng::new(self.opts.seed ^ 0xAD);
+        let mut order: Vec<usize> = (0..n).collect();
+        let bs = self.opts.batch_size.min(n).max(1);
+
+        for _epoch in 0..self.opts.epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0f64;
+            let mut batches = 0usize;
+            for chunk in order.chunks(bs) {
+                // gather batch
+                let xb = Matrix::from_rows(
+                    &chunk.iter().map(|&i| data.embeddings.row(i).to_vec()).collect::<Vec<_>>(),
+                );
+                let yb = Matrix::from_rows(
+                    &chunk.iter().map(|&i| data.qualities.row(i).to_vec()).collect::<Vec<_>>(),
+                );
+                let mb = Matrix::from_rows(
+                    &chunk.iter().map(|&i| data.mask.row(i).to_vec()).collect::<Vec<_>>(),
+                );
+                let (h, y) = self.forward(&xb);
+                // masked MSE: dL/dy = 2 m (y - t) / sum(m)
+                let labelled: f32 = mb.data.iter().sum::<f32>().max(1.0);
+                let scale = 2.0 / labelled;
+                let mut dy = y.clone();
+                dy.axpy(-1.0, &yb);
+                for (d, &m) in dy.data.iter_mut().zip(&mb.data) {
+                    *d *= m;
+                }
+                let mse: f64 = dy.data.iter().map(|d| (*d as f64) * (*d as f64)).sum::<f64>()
+                    / labelled as f64;
+                epoch_loss += mse;
+                batches += 1;
+                for d in &mut dy.data {
+                    *d *= scale;
+                }
+                // grads
+                let g_w2 = h.t_matmul(&dy);
+                let mut g_b2 = Matrix::zeros(1, out_dim);
+                for i in 0..dy.rows {
+                    for j in 0..out_dim {
+                        g_b2.data[j] += dy.at(i, j);
+                    }
+                }
+                let mut dh = dy.matmul_t(&self.w2); // [b, hidden]
+                for i in 0..dh.rows {
+                    for j in 0..dh.cols {
+                        if h.at(i, j) <= 0.0 {
+                            *dh.at_mut(i, j) = 0.0; // ReLU mask
+                        }
+                    }
+                }
+                let g_w1 = xb.t_matmul(&dh);
+                let mut g_b1 = Matrix::zeros(1, self.opts.hidden);
+                for i in 0..dh.rows {
+                    for j in 0..self.opts.hidden {
+                        g_b1.data[j] += dh.at(i, j);
+                    }
+                }
+                a_w1.step(&mut self.w1, &g_w1, self.opts.lr);
+                a_b1.step(&mut self.b1, &g_b1, self.opts.lr);
+                a_w2.step(&mut self.w2, &g_w2, self.opts.lr);
+                a_b2.step(&mut self.b2, &g_b2, self.opts.lr);
+            }
+            self.last_loss = epoch_loss / batches.max(1) as f64;
+        }
+        self.fitted = true;
+    }
+}
+
+impl QualityPredictor for MlpPredictor {
+    fn name(&self) -> &'static str {
+        "mlp"
+    }
+
+    fn fit(&mut self, data: &TrainSet) {
+        self.data = Some(data.clone());
+        self.train();
+    }
+
+    fn update(&mut self, new_data: &TrainSet) {
+        match &mut self.data {
+            Some(d) => d.extend(new_data),
+            None => self.data = Some(new_data.clone()),
+        }
+        self.train(); // full refit: the paper's retraining cost
+    }
+
+    fn predict(&self, query: &[f32]) -> Vec<f64> {
+        if !self.fitted {
+            return Vec::new();
+        }
+        let x = Matrix::from_rows(&[query.to_vec()]);
+        let (_, y) = self.forward(&x);
+        y.row(0).iter().map(|&v| v as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::synthetic_regression;
+    use super::*;
+
+    fn quick_opts() -> MlpOptions {
+        MlpOptions { hidden: 32, epochs: 40, lr: 3e-3, batch_size: 32, seed: 5 }
+    }
+
+    #[test]
+    fn learns_synthetic_task() {
+        let mut rng = Rng::new(11);
+        let (all, _) = synthetic_regression(&mut rng, 500, 16, 3);
+        let (train, test) = (all.prefix(400), all.suffix(400));
+        let mut mlp = MlpPredictor::new(quick_opts());
+        mlp.fit(&train);
+        let mse = mlp.mse(&test);
+        assert!(mse < 0.02, "mse = {mse}");
+    }
+
+    #[test]
+    fn loss_decreases_during_training() {
+        let mut rng = Rng::new(13);
+        let (train, _) = synthetic_regression(&mut rng, 200, 8, 2);
+        let mut one = MlpPredictor::new(MlpOptions { epochs: 1, ..quick_opts() });
+        one.fit(&train);
+        let early = one.last_loss;
+        let mut many = MlpPredictor::new(MlpOptions { epochs: 40, ..quick_opts() });
+        many.fit(&train);
+        assert!(many.last_loss < early, "{} !< {early}", many.last_loss);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(17);
+        let (train, _) = synthetic_regression(&mut rng, 100, 8, 2);
+        let mut a = MlpPredictor::new(quick_opts());
+        let mut b = MlpPredictor::new(quick_opts());
+        a.fit(&train);
+        b.fit(&train);
+        assert_eq!(a.predict(train.embeddings.row(0)), b.predict(train.embeddings.row(0)));
+    }
+
+    #[test]
+    fn unfitted_returns_empty() {
+        let mlp = MlpPredictor::new(quick_opts());
+        assert!(mlp.predict(&[0.0; 8]).is_empty());
+    }
+
+    #[test]
+    fn update_refits_on_union() {
+        let mut rng = Rng::new(19);
+        let (a, _) = synthetic_regression(&mut rng, 50, 8, 2);
+        let (b, _) = synthetic_regression(&mut rng, 50, 8, 2);
+        let mut m = MlpPredictor::new(quick_opts());
+        m.fit(&a);
+        m.update(&b);
+        assert_eq!(m.data.as_ref().unwrap().len(), 100);
+        assert!(m.fitted);
+    }
+
+    #[test]
+    fn output_dim_matches_models() {
+        let mut rng = Rng::new(23);
+        let (train, _) = synthetic_regression(&mut rng, 60, 8, 5);
+        let mut m = MlpPredictor::new(quick_opts());
+        m.fit(&train);
+        assert_eq!(m.predict(train.embeddings.row(3)).len(), 5);
+    }
+}

@@ -1,0 +1,243 @@
+//! Baseline routers from the paper's evaluation (RouterBench's regression
+//! formulation, Appendix A.2): predict each model's response quality for a
+//! query embedding, then route under the budget policy.
+//!
+//! - [`knn::KnnPredictor`] — 40-NN cosine average (sklearn
+//!   `KNeighborsRegressor` equivalent).
+//! - [`mlp::MlpPredictor`] — 2-layer MLP, hidden 100, ReLU, Adam on MSE
+//!   (sklearn `MLPRegressor` equivalent).
+//! - [`svm::SvmPredictor`] — per-model LinearSVR, epsilon-insensitive loss
+//!   with eps = 0, SGD (sklearn `LinearSVR` equivalent).
+//!
+//! All three are **retraining-based**: their [`QualityPredictor::update`]
+//! appends the new data and refits from scratch — exactly the cost the
+//! paper's Table 3a charges them for online adaptation. Eagle's update is
+//! incremental (see [`crate::coordinator`]).
+
+pub mod knn;
+pub mod linalg;
+pub mod mlp;
+pub mod svm;
+
+use linalg::Matrix;
+
+/// A labelled training set: one embedding row per prompt, one quality row
+/// per prompt (columns = models), and a label mask.
+///
+/// Two supervision modes (DESIGN.md §Evaluation-protocol):
+/// - **full labels** (`mask` all ones): RouterBench's offline formulation —
+///   every (prompt, model) quality is observed;
+/// - **feedback labels** (sparse `mask`): the paper's online setting — only
+///   the models actually compared on a prompt carry labels (win=1, loss=0,
+///   draw=0.5), everything else is unobserved. This is the same
+///   information Eagle's ELO consumes.
+#[derive(Debug, Clone)]
+pub struct TrainSet {
+    pub embeddings: Matrix,
+    pub qualities: Matrix,
+    /// 1.0 where `qualities` is observed, 0.0 where missing.
+    pub mask: Matrix,
+}
+
+impl TrainSet {
+    pub fn new(embeddings: Matrix, qualities: Matrix) -> Self {
+        assert_eq!(embeddings.rows, qualities.rows, "row count mismatch");
+        let mask = Matrix {
+            rows: qualities.rows,
+            cols: qualities.cols,
+            data: vec![1.0; qualities.rows * qualities.cols],
+        };
+        TrainSet { embeddings, qualities, mask }
+    }
+
+    pub fn new_masked(embeddings: Matrix, qualities: Matrix, mask: Matrix) -> Self {
+        assert_eq!(embeddings.rows, qualities.rows, "row count mismatch");
+        assert_eq!(qualities.rows, mask.rows, "mask rows");
+        assert_eq!(qualities.cols, mask.cols, "mask cols");
+        TrainSet { embeddings, qualities, mask }
+    }
+
+    /// Column means over observed labels (0.5 for never-observed models).
+    pub fn label_means(&self) -> Vec<f64> {
+        let m = self.n_models();
+        let mut sums = vec![0.0f64; m];
+        let mut counts = vec![0.0f64; m];
+        for i in 0..self.len() {
+            for j in 0..m {
+                let w = self.mask.at(i, j) as f64;
+                sums[j] += w * self.qualities.at(i, j) as f64;
+                counts[j] += w;
+            }
+        }
+        sums.iter()
+            .zip(&counts)
+            .map(|(s, c)| if *c > 0.0 { s / c } else { 0.5 })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.embeddings.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.qualities.cols
+    }
+
+    /// Concatenate another set (same dims) onto this one.
+    pub fn extend(&mut self, other: &TrainSet) {
+        assert_eq!(self.embeddings.cols, other.embeddings.cols);
+        assert_eq!(self.qualities.cols, other.qualities.cols);
+        self.embeddings.data.extend_from_slice(&other.embeddings.data);
+        self.embeddings.rows += other.embeddings.rows;
+        self.qualities.data.extend_from_slice(&other.qualities.data);
+        self.qualities.rows += other.qualities.rows;
+        self.mask.data.extend_from_slice(&other.mask.data);
+        self.mask.rows += other.mask.rows;
+    }
+
+    /// Rows [n..] as a copy (held-out remainder).
+    pub fn suffix(&self, n: usize) -> TrainSet {
+        let n = n.min(self.len());
+        TrainSet {
+            embeddings: Matrix {
+                rows: self.len() - n,
+                cols: self.embeddings.cols,
+                data: self.embeddings.data[n * self.embeddings.cols..].to_vec(),
+            },
+            qualities: Matrix {
+                rows: self.len() - n,
+                cols: self.qualities.cols,
+                data: self.qualities.data[n * self.qualities.cols..].to_vec(),
+            },
+            mask: Matrix {
+                rows: self.len() - n,
+                cols: self.mask.cols,
+                data: self.mask.data[n * self.mask.cols..].to_vec(),
+            },
+        }
+    }
+
+    /// First `n` rows as a view-copy (stage prefixes for Fig 3b).
+    pub fn prefix(&self, n: usize) -> TrainSet {
+        let n = n.min(self.len());
+        TrainSet {
+            embeddings: Matrix {
+                rows: n,
+                cols: self.embeddings.cols,
+                data: self.embeddings.data[..n * self.embeddings.cols].to_vec(),
+            },
+            qualities: Matrix {
+                rows: n,
+                cols: self.qualities.cols,
+                data: self.qualities.data[..n * self.qualities.cols].to_vec(),
+            },
+            mask: Matrix {
+                rows: n,
+                cols: self.mask.cols,
+                data: self.mask.data[..n * self.mask.cols].to_vec(),
+            },
+        }
+    }
+}
+
+/// Per-model quality prediction interface shared by the three baselines.
+pub trait QualityPredictor {
+    fn name(&self) -> &'static str;
+
+    /// Fit from scratch on `data`.
+    fn fit(&mut self, data: &TrainSet);
+
+    /// Online adaptation: baselines append + refit (full retraining cost).
+    fn update(&mut self, new_data: &TrainSet);
+
+    /// Predicted quality per model for one query embedding.
+    fn predict(&self, query: &[f32]) -> Vec<f64>;
+
+    /// Mean squared error over a labelled set (diagnostics).
+    fn mse(&self, data: &TrainSet) -> f64 {
+        let mut se = 0.0;
+        let mut n = 0usize;
+        for i in 0..data.len() {
+            let pred = self.predict(data.embeddings.row(i));
+            for (j, p) in pred.iter().enumerate() {
+                let d = p - data.qualities.at(i, j) as f64;
+                se += d * d;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            se / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::Rng;
+
+    /// A learnable synthetic task: quality_j(x) = sigmoid(w_j . x).
+    pub fn synthetic_regression(
+        rng: &mut Rng,
+        n: usize,
+        dim: usize,
+        n_models: usize,
+    ) -> (TrainSet, Vec<Vec<f32>>) {
+        let w: Vec<Vec<f32>> = (0..n_models)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut emb = Vec::with_capacity(n);
+        let mut qual = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            crate::util::l2_normalize(&mut x);
+            let q: Vec<f32> = w
+                .iter()
+                .map(|wj| {
+                    let s: f32 = wj.iter().zip(&x).map(|(a, b)| a * b).sum();
+                    1.0 / (1.0 + (-2.0 * s).exp())
+                })
+                .collect();
+            emb.push(x);
+            qual.push(q);
+        }
+        (
+            TrainSet::new(Matrix::from_rows(&emb), Matrix::from_rows(&qual)),
+            w,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trainset_extend_and_prefix() {
+        let a = TrainSet::new(
+            Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]),
+            Matrix::from_rows(&[vec![0.5], vec![0.7]]),
+        );
+        let mut ab = a.clone();
+        ab.extend(&a);
+        assert_eq!(ab.len(), 4);
+        assert_eq!(ab.n_models(), 1);
+        let p = ab.prefix(3);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.embeddings.row(2), &[1.0, 0.0]);
+        // prefix larger than len clamps
+        assert_eq!(ab.prefix(100).len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row count mismatch")]
+    fn trainset_rejects_mismatch() {
+        let _ = TrainSet::new(Matrix::zeros(2, 4), Matrix::zeros(3, 1));
+    }
+}

@@ -1,0 +1,223 @@
+//! SVM quality predictor: the paper's SVM baseline (Appendix A.2 —
+//! `LinearSVR` with epsilon = 0).
+//!
+//! One linear regressor per model, trained with SGD on the
+//! epsilon-insensitive loss + L2 regularization:
+//!
+//! ```text
+//! L(w, b) = C * mean_i max(0, |w.x_i + b - y_i| - eps) + 0.5 ||w||^2
+//! ```
+//!
+//! With eps = 0 this is L1 regression with ridge regularization, matching
+//! sklearn's default LinearSVR objective. `update` appends + refits.
+
+use super::linalg::vec_axpy;
+#[cfg(test)]
+use super::linalg::Matrix;
+use super::{QualityPredictor, TrainSet};
+use crate::util::Rng;
+use crate::vectordb::flat::dot_unrolled;
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SvmOptions {
+    pub epsilon: f64,
+    pub epochs: usize,
+    pub lr: f64,
+    /// Loss weight C (sklearn default 1.0).
+    pub c: f64,
+    pub seed: u64,
+}
+
+impl Default for SvmOptions {
+    fn default() -> Self {
+        SvmOptions { epsilon: 0.0, epochs: 40, lr: 1e-2, c: 1.0, seed: 0x5A }
+    }
+}
+
+/// Per-model LinearSVR bank.
+pub struct SvmPredictor {
+    opts: SvmOptions,
+    /// [n_models][dim] weight vectors.
+    weights: Vec<Vec<f32>>,
+    biases: Vec<f32>,
+    data: Option<TrainSet>,
+    fitted: bool,
+}
+
+impl SvmPredictor {
+    pub fn new(opts: SvmOptions) -> Self {
+        SvmPredictor { opts, weights: Vec::new(), biases: Vec::new(), data: None, fitted: false }
+    }
+
+    fn train(&mut self) {
+        let Some(data) = self.data.clone() else { return };
+        if data.is_empty() {
+            return;
+        }
+        let (n, dim, n_models) = (data.len(), data.embeddings.cols, data.n_models());
+        self.weights = vec![vec![0.0f32; dim]; n_models];
+        self.biases = vec![0.0f32; n_models];
+
+        let mut rng = Rng::new(self.opts.seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        let eps = self.opts.epsilon as f32;
+        let c = self.opts.c as f32;
+
+        for epoch in 0..self.opts.epochs {
+            rng.shuffle(&mut order);
+            // 1/t learning-rate decay
+            let lr = (self.opts.lr / (1.0 + epoch as f64 * 0.1)) as f32;
+            for &i in &order {
+                let x = data.embeddings.row(i);
+                for j in 0..n_models {
+                    if data.mask.at(i, j) == 0.0 {
+                        continue; // unobserved label (feedback supervision)
+                    }
+                    let y = data.qualities.at(i, j);
+                    let w = &mut self.weights[j];
+                    let pred = dot_unrolled(w, x) + self.biases[j];
+                    let r = pred - y;
+                    // subgradient of eps-insensitive L1
+                    let g = if r > eps {
+                        1.0
+                    } else if r < -eps {
+                        -1.0
+                    } else {
+                        0.0
+                    };
+                    if g != 0.0 {
+                        vec_axpy(w, -lr * c * g, x);
+                        self.biases[j] -= lr * c * g;
+                    }
+                    // L2 shrinkage (ridge term), scaled to per-sample
+                    let shrink = 1.0 - lr / n as f32;
+                    for wv in w.iter_mut() {
+                        *wv *= shrink;
+                    }
+                }
+            }
+        }
+        self.fitted = true;
+    }
+
+    /// Weight L2 norm of one model's regressor (diagnostics).
+    pub fn weight_norm(&self, model: usize) -> f32 {
+        self.weights[model].iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+impl QualityPredictor for SvmPredictor {
+    fn name(&self) -> &'static str {
+        "svm"
+    }
+
+    fn fit(&mut self, data: &TrainSet) {
+        self.data = Some(data.clone());
+        self.train();
+    }
+
+    fn update(&mut self, new_data: &TrainSet) {
+        match &mut self.data {
+            Some(d) => d.extend(new_data),
+            None => self.data = Some(new_data.clone()),
+        }
+        self.train(); // full refit: the paper's retraining cost
+    }
+
+    fn predict(&self, query: &[f32]) -> Vec<f64> {
+        if !self.fitted {
+            return Vec::new();
+        }
+        self.weights
+            .iter()
+            .zip(&self.biases)
+            .map(|(w, b)| (dot_unrolled(w, query) + b) as f64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::synthetic_regression;
+    use super::*;
+
+    fn quick_opts() -> SvmOptions {
+        SvmOptions { epochs: 30, lr: 5e-2, ..Default::default() }
+    }
+
+    #[test]
+    fn fits_linear_task_well() {
+        // purely linear targets: y_j = w_j . x (svm should nail this)
+        let mut rng = Rng::new(3);
+        let dim = 8;
+        let w_true: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 0.5).collect();
+        let mut emb = Vec::new();
+        let mut qual = Vec::new();
+        for _ in 0..300 {
+            let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let y: f32 = x.iter().zip(&w_true).map(|(a, b)| a * b).sum::<f32>() + 0.3;
+            emb.push(x);
+            qual.push(vec![y]);
+        }
+        let data = TrainSet::new(Matrix::from_rows(&emb), Matrix::from_rows(&qual));
+        let mut svm = SvmPredictor::new(quick_opts());
+        svm.fit(&data);
+        let mse = svm.mse(&data);
+        assert!(mse < 0.01, "mse = {mse}");
+    }
+
+    #[test]
+    fn learns_synthetic_task_reasonably() {
+        let mut rng = Rng::new(5);
+        let (all, _) = synthetic_regression(&mut rng, 500, 16, 3);
+        let (train, test) = (all.prefix(400), all.suffix(400));
+        let mut svm = SvmPredictor::new(quick_opts());
+        svm.fit(&train);
+        // sigmoid targets with a linear model: noticeably better than mean
+        let mse = svm.mse(&test);
+        assert!(mse < 0.05, "mse = {mse}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(7);
+        let (train, _) = synthetic_regression(&mut rng, 100, 8, 2);
+        let mut a = SvmPredictor::new(quick_opts());
+        let mut b = SvmPredictor::new(quick_opts());
+        a.fit(&train);
+        b.fit(&train);
+        assert_eq!(a.predict(train.embeddings.row(1)), b.predict(train.embeddings.row(1)));
+    }
+
+    #[test]
+    fn unfitted_returns_empty() {
+        let svm = SvmPredictor::new(quick_opts());
+        assert!(svm.predict(&[0.0; 4]).is_empty());
+    }
+
+    #[test]
+    fn update_refits_on_union() {
+        let mut rng = Rng::new(9);
+        let (a, _) = synthetic_regression(&mut rng, 50, 8, 2);
+        let (b, _) = synthetic_regression(&mut rng, 50, 8, 2);
+        let mut svm = SvmPredictor::new(quick_opts());
+        svm.fit(&a);
+        let norm_before = svm.weight_norm(0);
+        svm.update(&b);
+        assert_eq!(svm.data.as_ref().unwrap().len(), 100);
+        assert!(svm.weight_norm(0) > 0.0);
+        let _ = norm_before;
+    }
+
+    #[test]
+    fn regularization_bounds_weights() {
+        let mut rng = Rng::new(11);
+        let (train, _) = synthetic_regression(&mut rng, 200, 8, 2);
+        let mut svm = SvmPredictor::new(quick_opts());
+        svm.fit(&train);
+        for m in 0..2 {
+            assert!(svm.weight_norm(m) < 50.0);
+        }
+    }
+}

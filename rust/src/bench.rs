@@ -1,0 +1,167 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every target under `rust/benches/` (`harness = false`):
+//! warmup, timed iterations, mean/p50/p99, plus simple aligned-table
+//! printing for the figure/table reproductions.
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn per_second(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+
+    /// One formatted line, criterion-style.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<38} {:>10.2} us/iter  p50 {:>9.2} us  p99 {:>9.2} us  ({:.0}/s, {} iters)",
+            self.name,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p99_ns / 1e3,
+            self.per_second(),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` adaptively: warm up, then run enough iterations to fill
+/// ~`target_ms` of wall clock (min 10 iters), and report percentiles.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    // warmup: 3 runs or 50ms, whichever first
+    let warm_start = Instant::now();
+    for _ in 0..3 {
+        f();
+        if warm_start.elapsed().as_millis() > 50 {
+            break;
+        }
+    }
+    // estimate per-iter cost
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_nanos().max(1) as u64;
+    let target_ns = target_ms.saturating_mul(1_000_000);
+    let iters = (target_ns / est).clamp(10, 100_000);
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((q * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: p(0.50),
+        p99_ns: p(0.99),
+    }
+}
+
+/// Time a single run of `f` in seconds (for table-style results where the
+/// operation itself is the measurement, e.g. training time).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Print an aligned table (first row = header).
+pub fn print_table(title: &str, rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    if rows.is_empty() {
+        return;
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    for (ri, row) in rows.iter().enumerate() {
+        let line: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        println!("  {}", line.join("  "));
+        if ri == 0 {
+            let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+            println!("  {}", sep.join("  "));
+        }
+    }
+}
+
+/// Format a float with fixed decimals (table cells).
+pub fn fmt(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut count = 0u64;
+        let r = bench("noop", 5, || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        // warmup (3) + estimate (1) + timed iters
+        assert_eq!(count, r.iters + 4);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn bench_measures_sleep_roughly() {
+        let r = bench("sleep", 20, || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert!(r.mean_ns > 150_000.0, "mean = {}", r.mean_ns);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn line_and_table_do_not_panic() {
+        let r = bench("x", 1, || {});
+        let _ = r.line();
+        print_table(
+            "t",
+            &[
+                vec!["a".into(), "b".into()],
+                vec!["1".into(), "2.5".into()],
+            ],
+        );
+        assert_eq!(fmt(1.234, 2), "1.23");
+    }
+}

@@ -1,0 +1,415 @@
+//! Command-line interface (clap is unavailable offline; hand-rolled).
+//!
+//! ```text
+//! eagle serve   [--addr A] [--workers N] [--snapshot FILE] [--config FILE] [--set k=v]...
+//! eagle eval    [--per-dataset N] [--dataset NAME|all] [--routers eagle,knn,mlp,svm] [--seed S]
+//! eagle gen-data --out FILE [--per-dataset N] [--seed S]
+//! eagle info
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::baselines::knn::KnnPredictor;
+use crate::baselines::mlp::{MlpOptions, MlpPredictor};
+use crate::baselines::svm::{SvmOptions, SvmPredictor};
+use crate::baselines::QualityPredictor;
+use crate::bench::{fmt, print_table};
+use crate::config::Config;
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::router::EagleRouter;
+use crate::coordinator::PredictorRouter;
+use crate::eval::harness::{bench_data_params, EmbedderRig, Experiment};
+use crate::json::{self, Value};
+use crate::metrics::Metrics;
+use crate::routerbench::{gen, DATASETS};
+use crate::vectordb::flat::FlatStore;
+
+/// Simple flag parser: `--key value` pairs plus repeated `--set k=v`.
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.push((key.to_string(), val.clone()));
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}: not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}: not an integer")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+eagle — training-free multi-LLM router (reproduction of Zhao et al. 2024)
+
+USAGE:
+  eagle serve    [--addr HOST:PORT] [--workers N] [--snapshot FILE]
+                 [--snapshot-out FILE] [--config FILE] [--set key=value]...
+  eagle eval     [--per-dataset N] [--dataset NAME|all]
+                 [--routers eagle,eagle-global,eagle-local,knn,mlp,svm]
+                 [--seed S] [--config FILE]
+  eagle gen-data --out FILE [--per-dataset N] [--seed S]
+  eagle info     [--config FILE]
+  eagle help
+";
+
+/// Entry point; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(2);
+    };
+    let args = Args::parse(&argv[1..])?;
+    let cfg = load_config(&args)?;
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args, &cfg),
+        "eval" => cmd_eval(&args, &cfg),
+        "gen-data" => cmd_gen_data(&args, &cfg),
+        "info" => cmd_info(&cfg),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let overrides: Vec<(String, String)> = args
+        .get_all("set")
+        .iter()
+        .map(|kv| {
+            kv.split_once('=')
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .ok_or_else(|| anyhow!("--set expects key=value, got '{kv}'"))
+        })
+        .collect::<Result<_>>()?;
+    let path = args.get("config").map(Path::new);
+    Config::load(path, &overrides).map_err(|e| anyhow!("{e}"))
+}
+
+fn cmd_info(cfg: &Config) -> Result<i32> {
+    println!("eagle configuration:");
+    println!("  eagle: P={} N={} K={}", cfg.eagle.p, cfg.eagle.n_neighbors, cfg.eagle.k_factor);
+    println!("  artifacts: {}", cfg.embed.artifacts_dir);
+    match crate::runtime::Manifest::load(Path::new(&cfg.embed.artifacts_dir)) {
+        Ok(m) => println!(
+            "  manifest: d_model={} seq_len={} buckets={:?} (run `make artifacts` to rebuild)",
+            m.model.d_model, m.model.seq_len, m.embed_batch_sizes
+        ),
+        Err(e) => println!("  manifest: unavailable ({e})"),
+    }
+    let registry = ModelRegistry::routerbench();
+    let mut rows = vec![vec!["model".to_string(), "$/query (expected)".to_string()]];
+    for e in registry.entries() {
+        rows.push(vec![e.name.clone(), format!("{:.6}", e.expected_cost)]);
+    }
+    print_table("model pool", &rows);
+    Ok(0)
+}
+
+fn cmd_gen_data(args: &Args, cfg: &Config) -> Result<i32> {
+    let out = args.get("out").ok_or_else(|| anyhow!("gen-data requires --out FILE"))?;
+    let mut params = cfg.data.clone();
+    params.per_dataset = args.usize_or("per-dataset", params.per_dataset)?;
+    params.seed = args.u64_or("seed", params.seed)?;
+    let benchmark = gen::generate(&params);
+
+    // serialize: per split, samples + feedback
+    let splits: Vec<Value> = benchmark
+        .splits
+        .iter()
+        .map(|s| {
+            let samples: Vec<Value> = s
+                .train
+                .iter()
+                .chain(&s.test)
+                .map(|x| {
+                    json::obj(vec![
+                        ("text", json::str_v(&x.text)),
+                        ("topic", json::num(x.topic as f64)),
+                        ("quality", json::f32_arr(&x.quality)),
+                        ("cost", json::f32_arr(&x.cost)),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
+                ("dataset", json::str_v(DATASETS[s.dataset])),
+                ("n_train", json::num(s.train.len() as f64)),
+                ("n_test", json::num(s.test.len() as f64)),
+                ("samples", Value::Arr(samples)),
+                (
+                    "feedback",
+                    Value::Arr(
+                        s.feedback
+                            .iter()
+                            .map(|f| {
+                                json::obj(vec![
+                                    ("sample", json::num(f.sample as f64)),
+                                    ("a", json::num(f.comparison.a as f64)),
+                                    ("b", json::num(f.comparison.b as f64)),
+                                    ("s", json::num(f.comparison.outcome.encode())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("seed", json::num(params.seed as f64)),
+        ("per_dataset", json::num(params.per_dataset as f64)),
+        ("models", Value::Arr(
+            crate::routerbench::models::MODELS
+                .iter()
+                .map(|m| json::str_v(m.name))
+                .collect(),
+        )),
+        ("splits", Value::Arr(splits)),
+    ]);
+    std::fs::write(out, doc.to_json()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out} ({} datasets x {} prompts)", DATASETS.len(), params.per_dataset);
+    Ok(0)
+}
+
+fn cmd_eval(args: &Args, cfg: &Config) -> Result<i32> {
+    let per_dataset = args.usize_or("per-dataset", 600)?;
+    let seed = args.u64_or("seed", cfg.data.seed)?;
+    let routers_arg = args.get("routers").unwrap_or("eagle,knn,mlp,svm");
+    let dataset_arg = args.get("dataset").unwrap_or("all");
+
+    let rig = EmbedderRig::auto(Path::new(&cfg.embed.artifacts_dir));
+    println!(
+        "embedder: {}",
+        if rig.is_pjrt { "PJRT (AOT artifacts)" } else { "hash fallback" }
+    );
+    let exp = Experiment::build(&bench_data_params(seed, per_dataset), &rig);
+
+    let splits: Vec<usize> = if dataset_arg == "all" {
+        (0..DATASETS.len()).collect()
+    } else {
+        vec![DATASETS
+            .iter()
+            .position(|d| *d == dataset_arg)
+            .ok_or_else(|| anyhow!("unknown dataset '{dataset_arg}'"))?]
+    };
+
+    let mut rows = vec![{
+        let mut h = vec!["router".to_string()];
+        h.extend(splits.iter().map(|&s| DATASETS[s].to_string()));
+        h.push("sum".to_string());
+        h
+    }];
+
+    for rname in routers_arg.split(',') {
+        let mut row = vec![rname.to_string()];
+        let mut sum = 0.0;
+        for &si in &splits {
+            let auc = eval_one(&exp, cfg, rname, si)?;
+            sum += auc;
+            row.push(fmt(auc, 4));
+        }
+        row.push(fmt(sum, 4));
+        rows.push(row);
+    }
+    print_table(&format!("AUC (per-dataset={per_dataset}, seed={seed})"), &rows);
+    Ok(0)
+}
+
+/// Fit + evaluate one router by name on one split; returns AUC.
+pub fn eval_one(exp: &Experiment, cfg: &Config, name: &str, split: usize) -> Result<f64> {
+    let auc = match name {
+        "eagle" | "eagle-global" | "eagle-local" => {
+            let mut params = cfg.eagle.clone();
+            params.p = match name {
+                "eagle-global" => 1.0,
+                "eagle-local" => 0.0,
+                _ => params.p,
+            };
+            let router = exp.fit_eagle(split, params, 1.0);
+            exp.eval(&router, split).auc()
+        }
+        "knn" => {
+            let mut p = KnnPredictor::new(cfg.baselines.knn_neighbors);
+            p.fit(&exp.train_set_feedback(split, 1.0));
+            exp.eval(&PredictorRouter::new(p), split).auc()
+        }
+        "mlp" => {
+            let mut p = MlpPredictor::new(MlpOptions {
+                hidden: cfg.baselines.mlp_hidden,
+                epochs: cfg.baselines.mlp_epochs,
+                lr: cfg.baselines.mlp_lr,
+                ..Default::default()
+            });
+            p.fit(&exp.train_set_feedback(split, 1.0));
+            exp.eval(&PredictorRouter::new(p), split).auc()
+        }
+        "svm" => {
+            let mut p = SvmPredictor::new(SvmOptions {
+                epsilon: cfg.baselines.svm_epsilon,
+                epochs: cfg.baselines.svm_epochs,
+                lr: cfg.baselines.svm_lr,
+                ..Default::default()
+            });
+            p.fit(&exp.train_set_feedback(split, 1.0));
+            exp.eval(&PredictorRouter::new(p), split).auc()
+        }
+        "oracle" => {
+            crate::eval::oracle_curve(
+                &exp.split(split).test,
+                &exp.policy,
+                DATASETS[exp.split(split).dataset],
+            )
+            .auc()
+        }
+        other => bail!("unknown router '{other}'"),
+    };
+    Ok(auc)
+}
+
+fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
+    use std::sync::Arc;
+
+    let addr = args.get("addr").unwrap_or(&cfg.server.addr).to_string();
+    let workers = args.usize_or("workers", cfg.server.workers)?;
+    let metrics = Arc::new(Metrics::new());
+
+    let service = crate::embedding::EmbedService::start(
+        Path::new(&cfg.embed.artifacts_dir),
+        crate::embedding::BatcherOptions {
+            batch_window_us: cfg.embed.batch_window_us,
+            max_batch: cfg.embed.max_batch,
+        },
+        metrics.clone(),
+    )?;
+
+    let registry = ModelRegistry::routerbench();
+    let router = match args.get("snapshot") {
+        Some(path) => {
+            let r = crate::coordinator::state::load_from(Path::new(path))?;
+            println!("restored snapshot: {} feedback records", r.feedback_len());
+            r
+        }
+        None => EagleRouter::new(cfg.eagle.clone(), registry.len(), FlatStore::new(256)),
+    };
+
+    let mut state =
+        crate::server::ServerState::new(router, registry, service.handle(), metrics);
+    if let Some(out) = args.get("snapshot-out") {
+        state = state.with_snapshot_path(std::path::PathBuf::from(out));
+        println!("admin snapshot op enabled -> {out}");
+    }
+    let state = Arc::new(state);
+    let server = crate::server::Server::start(state, &addr, workers)?;
+    println!("eagle serving on {} ({} workers); Ctrl-C to stop", server.addr, workers);
+
+    // Block forever (Ctrl-C kills the process; state can be snapshotted
+    // via an admin op in a future protocol revision).
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn args_parse_flags_and_positional() {
+        let a = Args::parse(&argv(&["--x", "1", "pos", "--set", "a=b", "--set", "c=d"])).unwrap();
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.positional, vec!["pos"]);
+        assert_eq!(a.get_all("set"), vec!["a=b", "c=d"]);
+    }
+
+    #[test]
+    fn args_missing_value_errors() {
+        assert!(Args::parse(&argv(&["--x"])).is_err());
+    }
+
+    #[test]
+    fn run_help() {
+        assert_eq!(run(&argv(&["help"])).unwrap(), 0);
+        assert_eq!(run(&[]).unwrap(), 2);
+        assert_eq!(run(&argv(&["bogus"])).unwrap(), 2);
+    }
+
+    #[test]
+    fn config_overrides_via_set() {
+        let a = Args::parse(&argv(&["--set", "eagle.p=0.25"])).unwrap();
+        let cfg = load_config(&a).unwrap();
+        assert_eq!(cfg.eagle.p, 0.25);
+    }
+
+    #[test]
+    fn bad_set_syntax_errors() {
+        let a = Args::parse(&argv(&["--set", "nonsense"])).unwrap();
+        assert!(load_config(&a).is_err());
+    }
+
+    #[test]
+    fn gen_data_writes_file() {
+        let a = Args::parse(&argv(&[
+            "--out",
+            "/tmp/eagle_cli_gen_test.json",
+            "--per-dataset",
+            "20",
+        ]))
+        .unwrap();
+        let cfg = Config::default();
+        assert_eq!(cmd_gen_data(&a, &cfg).unwrap(), 0);
+        let text = std::fs::read_to_string("/tmp/eagle_cli_gen_test.json").unwrap();
+        let v = json::parse(&text).unwrap();
+        assert_eq!(v.get("splits").as_arr().unwrap().len(), 7);
+        std::fs::remove_file("/tmp/eagle_cli_gen_test.json").ok();
+    }
+}

@@ -1,0 +1,355 @@
+//! Configuration system: typed config structs + a minimal TOML-subset
+//! loader + `key=value` CLI overrides.
+//!
+//! The file format is the flat-table TOML subset we need:
+//!
+//! ```toml
+//! [eagle]
+//! p = 0.5
+//! n_neighbors = 20
+//! k_factor = 32.0
+//!
+//! [server]
+//! addr = "127.0.0.1:7878"
+//! workers = 4
+//! ```
+//!
+//! Every field has a default matching the paper's Appendix A, so an empty
+//! config is fully usable. CLI overrides use dotted paths:
+//! `--set eagle.p=0.7 --set server.workers=8`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Eagle router parameters (paper Appendix A.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EagleParams {
+    /// Global/local mixing weight P in `P*Global + (1-P)*Local`.
+    pub p: f64,
+    /// Local neighborhood size N.
+    pub n_neighbors: usize,
+    /// ELO K-factor.
+    pub k_factor: f64,
+}
+
+impl Default for EagleParams {
+    fn default() -> Self {
+        EagleParams { p: 0.5, n_neighbors: 20, k_factor: 32.0 }
+    }
+}
+
+/// Baseline router parameters (paper Appendix A.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineParams {
+    /// Neighbor size for KNN and the similarity-weighted features.
+    pub knn_neighbors: usize,
+    /// MLP hidden width.
+    pub mlp_hidden: usize,
+    /// MLP training epochs.
+    pub mlp_epochs: usize,
+    /// MLP learning rate.
+    pub mlp_lr: f64,
+    /// SVM (LinearSVR) epsilon.
+    pub svm_epsilon: f64,
+    /// SVM training epochs.
+    pub svm_epochs: usize,
+    /// SVM learning rate.
+    pub svm_lr: f64,
+}
+
+impl Default for BaselineParams {
+    fn default() -> Self {
+        BaselineParams {
+            knn_neighbors: 40,
+            mlp_hidden: 100,
+            mlp_epochs: 60,
+            mlp_lr: 1e-3,
+            svm_epsilon: 0.0,
+            svm_epochs: 40,
+            svm_lr: 1e-2,
+        }
+    }
+}
+
+/// Embedding-service parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmbedParams {
+    /// Directory holding the AOT artifacts (manifest.json etc.).
+    pub artifacts_dir: String,
+    /// Max time a request waits for batch-mates before dispatch.
+    pub batch_window_us: u64,
+    /// Upper bound on batch size (clamped to compiled buckets).
+    pub max_batch: usize,
+}
+
+impl Default for EmbedParams {
+    fn default() -> Self {
+        EmbedParams {
+            artifacts_dir: "artifacts".to_string(),
+            batch_window_us: 200,
+            max_batch: 32,
+        }
+    }
+}
+
+/// Serving front-end parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerParams {
+    pub addr: String,
+    pub workers: usize,
+}
+
+impl Default for ServerParams {
+    fn default() -> Self {
+        ServerParams { addr: "127.0.0.1:7878".to_string(), workers: 4 }
+    }
+}
+
+/// Synthetic RouterBench generation parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataParams {
+    pub seed: u64,
+    /// Prompts per dataset.
+    pub per_dataset: usize,
+    /// Train fraction (rest is test), paper: 0.7.
+    pub train_fraction: f64,
+    /// Pairwise comparisons sampled per training prompt.
+    pub comparisons_per_prompt: usize,
+}
+
+impl Default for DataParams {
+    fn default() -> Self {
+        DataParams {
+            seed: 0xEA61E,
+            per_dataset: 2800,
+            train_fraction: 0.7,
+            comparisons_per_prompt: 3,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub eagle: EagleParams,
+    pub baselines: BaselineParams,
+    pub embed: EmbedParams,
+    pub server: ServerParams,
+    pub data: DataParams,
+}
+
+/// Raw parsed file: section -> key -> raw value string.
+type RawConfig = BTreeMap<String, BTreeMap<String, String>>;
+
+/// Error type for config parsing/validation.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn parse_raw(text: &str) -> Result<RawConfig, ConfigError> {
+    let mut raw: RawConfig = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            raw.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| {
+            ConfigError(format!("line {}: expected 'key = value'", lineno + 1))
+        })?;
+        let value = value.trim().trim_matches('"').to_string();
+        raw.entry(section.clone())
+            .or_default()
+            .insert(key.trim().to_string(), value);
+    }
+    Ok(raw)
+}
+
+impl Config {
+    /// Defaults + file (if given) + overrides, in that order.
+    pub fn load(
+        path: Option<&Path>,
+        overrides: &[(String, String)],
+    ) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| ConfigError(format!("read {}: {e}", p.display())))?;
+            cfg.apply_raw(&parse_raw(&text)?)?;
+        }
+        for (k, v) in overrides {
+            cfg.set(k, v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_raw(&mut self, raw: &RawConfig) -> Result<(), ConfigError> {
+        for (section, entries) in raw {
+            for (key, value) in entries {
+                self.set(&format!("{section}.{key}"), value)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Set one dotted-path field from a string value.
+    pub fn set(&mut self, path: &str, value: &str) -> Result<(), ConfigError> {
+        fn f64_of(v: &str) -> Result<f64, ConfigError> {
+            v.parse().map_err(|_| ConfigError(format!("bad float '{v}'")))
+        }
+        fn usize_of(v: &str) -> Result<usize, ConfigError> {
+            v.parse().map_err(|_| ConfigError(format!("bad integer '{v}'")))
+        }
+        fn u64_of(v: &str) -> Result<u64, ConfigError> {
+            v.parse().map_err(|_| ConfigError(format!("bad integer '{v}'")))
+        }
+        match path {
+            "eagle.p" => self.eagle.p = f64_of(value)?,
+            "eagle.n_neighbors" => self.eagle.n_neighbors = usize_of(value)?,
+            "eagle.k_factor" => self.eagle.k_factor = f64_of(value)?,
+            "baselines.knn_neighbors" => self.baselines.knn_neighbors = usize_of(value)?,
+            "baselines.mlp_hidden" => self.baselines.mlp_hidden = usize_of(value)?,
+            "baselines.mlp_epochs" => self.baselines.mlp_epochs = usize_of(value)?,
+            "baselines.mlp_lr" => self.baselines.mlp_lr = f64_of(value)?,
+            "baselines.svm_epsilon" => self.baselines.svm_epsilon = f64_of(value)?,
+            "baselines.svm_epochs" => self.baselines.svm_epochs = usize_of(value)?,
+            "baselines.svm_lr" => self.baselines.svm_lr = f64_of(value)?,
+            "embed.artifacts_dir" => self.embed.artifacts_dir = value.to_string(),
+            "embed.batch_window_us" => self.embed.batch_window_us = u64_of(value)?,
+            "embed.max_batch" => self.embed.max_batch = usize_of(value)?,
+            "server.addr" => self.server.addr = value.to_string(),
+            "server.workers" => self.server.workers = usize_of(value)?,
+            "data.seed" => self.data.seed = u64_of(value)?,
+            "data.per_dataset" => self.data.per_dataset = usize_of(value)?,
+            "data.train_fraction" => self.data.train_fraction = f64_of(value)?,
+            "data.comparisons_per_prompt" => {
+                self.data.comparisons_per_prompt = usize_of(value)?
+            }
+            _ => return Err(ConfigError(format!("unknown config key '{path}'"))),
+        }
+        Ok(())
+    }
+
+    /// Sanity constraints.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !(0.0..=1.0).contains(&self.eagle.p) {
+            return Err(ConfigError(format!("eagle.p = {} not in [0,1]", self.eagle.p)));
+        }
+        if self.eagle.n_neighbors == 0 {
+            return Err(ConfigError("eagle.n_neighbors must be > 0".into()));
+        }
+        if self.eagle.k_factor <= 0.0 {
+            return Err(ConfigError("eagle.k_factor must be > 0".into()));
+        }
+        if !(0.0..1.0).contains(&self.data.train_fraction) || self.data.train_fraction == 0.0 {
+            return Err(ConfigError("data.train_fraction must be in (0,1)".into()));
+        }
+        if self.server.workers == 0 {
+            return Err(ConfigError("server.workers must be > 0".into()));
+        }
+        if self.embed.max_batch == 0 {
+            return Err(ConfigError("embed.max_batch must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_appendix_a() {
+        let c = Config::default();
+        assert_eq!(c.eagle.p, 0.5);
+        assert_eq!(c.eagle.n_neighbors, 20);
+        assert_eq!(c.eagle.k_factor, 32.0);
+        assert_eq!(c.baselines.knn_neighbors, 40);
+        assert_eq!(c.baselines.mlp_hidden, 100);
+        assert_eq!(c.baselines.svm_epsilon, 0.0);
+        assert_eq!(c.data.train_fraction, 0.7);
+    }
+
+    #[test]
+    fn parse_file_sections() {
+        let text = r#"
+# comment
+[eagle]
+p = 0.7          # inline comment
+n_neighbors = 10
+
+[server]
+addr = "0.0.0.0:9000"
+workers = 8
+"#;
+        let raw = parse_raw(text).unwrap();
+        let mut c = Config::default();
+        c.apply_raw(&raw).unwrap();
+        assert_eq!(c.eagle.p, 0.7);
+        assert_eq!(c.eagle.n_neighbors, 10);
+        assert_eq!(c.server.addr, "0.0.0.0:9000");
+        assert_eq!(c.server.workers, 8);
+    }
+
+    #[test]
+    fn overrides_win_over_defaults() {
+        let c = Config::load(
+            None,
+            &[("eagle.p".into(), "0.25".into()), ("data.seed".into(), "7".into())],
+        )
+        .unwrap();
+        assert_eq!(c.eagle.p, 0.25);
+        assert_eq!(c.data.seed, 7);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::default();
+        assert!(c.set("eagle.nope", "1").is_err());
+        assert!(c.set("nonsense", "1").is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut c = Config::default();
+        assert!(c.set("eagle.p", "abc").is_err());
+        assert!(c.set("server.workers", "-1").is_err());
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut c = Config::default();
+        c.eagle.p = 1.5;
+        assert!(c.validate().is_err());
+        c.eagle.p = 0.5;
+        c.eagle.n_neighbors = 0;
+        assert!(c.validate().is_err());
+        c.eagle.n_neighbors = 20;
+        c.data.train_fraction = 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn malformed_line_reported_with_lineno() {
+        let err = parse_raw("[a]\nthis is not kv").unwrap_err();
+        assert!(err.0.contains("line 2"), "{}", err.0);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(Config::load(Some(Path::new("/nonexistent/x.toml")), &[]).is_err());
+    }
+}

@@ -1,0 +1,312 @@
+//! Feedback pipeline: the paper's workflow step 5.
+//!
+//! After serving a response, Eagle may pick a *second* model and ask the
+//! user to compare the two responses; the resulting pairwise preference is
+//! the only supervision the router ever receives. This module implements:
+//!
+//! - the comparison-partner sampling policy (uncertainty-weighted: prefer
+//!   the model whose rating is closest to the served one — maximal ELO
+//!   information per comparison),
+//! - a bounded ingestion queue decoupling the serving path from router
+//!   updates (requests never block on feedback processing).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::elo::{Comparison, Outcome};
+use crate::util::Rng;
+
+use super::router::Observation;
+
+/// Chooses which second model (if any) to ask the user to compare against.
+#[derive(Debug, Clone)]
+pub struct ComparisonSampler {
+    /// Probability of requesting a comparison at all (paper: "optional").
+    pub sample_rate: f64,
+    /// Softmax temperature over negative rating distance.
+    pub temperature: f64,
+}
+
+impl Default for ComparisonSampler {
+    fn default() -> Self {
+        ComparisonSampler { sample_rate: 0.3, temperature: 50.0 }
+    }
+}
+
+impl ComparisonSampler {
+    /// Pick a comparison partner for `served` given current ratings, or
+    /// None if this request is not sampled for feedback.
+    pub fn pick_partner(
+        &self,
+        rng: &mut Rng,
+        served: usize,
+        ratings: &[f64],
+    ) -> Option<usize> {
+        if ratings.len() < 2 || !rng.chance(self.sample_rate) {
+            return None;
+        }
+        // softmax over -|rating gap| / T : close-rated models carry the most
+        // information per comparison (E near 0.5 maximizes K*(S-E) variance)
+        let mut weights = Vec::with_capacity(ratings.len());
+        let mut total = 0.0f64;
+        for (m, &r) in ratings.iter().enumerate() {
+            if m == served {
+                weights.push(0.0);
+                continue;
+            }
+            let w = (-(r - ratings[served]).abs() / self.temperature).exp();
+            weights.push(w);
+            total += w;
+        }
+        if total <= 0.0 {
+            return None;
+        }
+        let mut draw = rng.f64() * total;
+        for (m, w) in weights.iter().enumerate() {
+            draw -= w;
+            if draw <= 0.0 && *w > 0.0 {
+                return Some(m);
+            }
+        }
+        weights.iter().rposition(|&w| w > 0.0)
+    }
+}
+
+/// A pending user verdict on (model_a, model_b) for a prompt embedding.
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    pub embedding: Vec<f32>,
+    pub model_a: usize,
+    pub model_b: usize,
+    /// 1.0 a wins, 0.0 b wins, 0.5 draw.
+    pub score_a: f64,
+}
+
+impl Verdict {
+    pub fn to_observation(&self) -> Option<Observation> {
+        Outcome::decode(self.score_a).map(|outcome| {
+            Observation::single(
+                self.embedding.clone(),
+                Comparison { a: self.model_a, b: self.model_b, outcome },
+            )
+        })
+    }
+}
+
+/// Bounded MPSC queue with blocking pop; drops oldest on overflow (the
+/// router prefers fresh feedback over completeness under pressure).
+pub struct FeedbackQueue {
+    inner: Mutex<QueueInner>,
+    cond: Condvar,
+    capacity: usize,
+}
+
+struct QueueInner {
+    items: VecDeque<Verdict>,
+    dropped: u64,
+    closed: bool,
+}
+
+impl FeedbackQueue {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        FeedbackQueue {
+            inner: Mutex::new(QueueInner {
+                items: VecDeque::new(),
+                dropped: 0,
+                closed: false,
+            }),
+            cond: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Push a verdict; drops the oldest item if full. Returns false if the
+    /// queue is closed.
+    pub fn push(&self, v: Verdict) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return false;
+        }
+        if inner.items.len() >= self.capacity {
+            inner.items.pop_front();
+            inner.dropped += 1;
+        }
+        inner.items.push_back(v);
+        drop(inner);
+        self.cond.notify_one();
+        true
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop(&self) -> Option<Verdict> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = inner.items.pop_front() {
+                return Some(v);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cond.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking drain of everything queued.
+    pub fn drain(&self) -> Vec<Verdict> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.items.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Close the queue; blocked pops return None after drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_respects_rate() {
+        let s = ComparisonSampler { sample_rate: 0.0, temperature: 50.0 };
+        let mut rng = Rng::new(1);
+        assert_eq!(s.pick_partner(&mut rng, 0, &[1000.0, 1000.0]), None);
+
+        let s = ComparisonSampler { sample_rate: 1.0, temperature: 50.0 };
+        let hits = (0..100)
+            .filter(|_| s.pick_partner(&mut rng, 0, &[1000.0, 1000.0]).is_some())
+            .count();
+        assert_eq!(hits, 100);
+    }
+
+    #[test]
+    fn sampler_never_picks_served() {
+        let s = ComparisonSampler { sample_rate: 1.0, temperature: 50.0 };
+        let mut rng = Rng::new(2);
+        let ratings = vec![1000.0, 1100.0, 900.0, 1050.0];
+        for _ in 0..200 {
+            let p = s.pick_partner(&mut rng, 1, &ratings).unwrap();
+            assert_ne!(p, 1);
+        }
+    }
+
+    #[test]
+    fn sampler_prefers_close_ratings() {
+        let s = ComparisonSampler { sample_rate: 1.0, temperature: 30.0 };
+        let mut rng = Rng::new(3);
+        // model 1 is 10 points away, model 2 is 400 points away
+        let ratings = vec![1000.0, 1010.0, 1400.0];
+        let close = (0..500)
+            .filter(|_| s.pick_partner(&mut rng, 0, &ratings) == Some(1))
+            .count();
+        assert!(close > 400, "close picked {close}/500");
+    }
+
+    #[test]
+    fn sampler_single_model_none() {
+        let s = ComparisonSampler { sample_rate: 1.0, temperature: 50.0 };
+        let mut rng = Rng::new(4);
+        assert_eq!(s.pick_partner(&mut rng, 0, &[1000.0]), None);
+    }
+
+    #[test]
+    fn verdict_decodes_outcomes() {
+        let v = Verdict { embedding: vec![1.0], model_a: 0, model_b: 1, score_a: 1.0 };
+        assert_eq!(v.to_observation().unwrap().comparisons[0].outcome, Outcome::WinA);
+        let v = Verdict { score_a: 0.25, ..v };
+        assert!(v.to_observation().is_none());
+    }
+
+    #[test]
+    fn queue_fifo_and_drain() {
+        let q = FeedbackQueue::new(10);
+        for i in 0..3 {
+            q.push(Verdict {
+                embedding: vec![i as f32],
+                model_a: 0,
+                model_b: 1,
+                score_a: 1.0,
+            });
+        }
+        assert_eq!(q.len(), 3);
+        let all = q.drain();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].embedding, vec![0.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_drops_oldest_on_overflow() {
+        let q = FeedbackQueue::new(2);
+        for i in 0..5 {
+            q.push(Verdict {
+                embedding: vec![i as f32],
+                model_a: 0,
+                model_b: 1,
+                score_a: 0.0,
+            });
+        }
+        assert_eq!(q.dropped(), 3);
+        let all = q.drain();
+        assert_eq!(all[0].embedding, vec![3.0]);
+        assert_eq!(all[1].embedding, vec![4.0]);
+    }
+
+    #[test]
+    fn queue_close_unblocks_pop() {
+        use std::sync::Arc;
+        let q = Arc::new(FeedbackQueue::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+        assert!(!q.push(Verdict {
+            embedding: vec![],
+            model_a: 0,
+            model_b: 1,
+            score_a: 1.0
+        }));
+    }
+
+    #[test]
+    fn queue_concurrent_producers() {
+        use std::sync::Arc;
+        let q = Arc::new(FeedbackQueue::new(1000));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push(Verdict {
+                            embedding: vec![t as f32, i as f32],
+                            model_a: 0,
+                            model_b: 1,
+                            score_a: 0.5,
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.len(), 200);
+        assert_eq!(q.dropped(), 0);
+    }
+}

@@ -1,0 +1,78 @@
+//! The Eagle serving coordinator — the paper's system contribution.
+//!
+//! - [`registry`] — the model pool visible to the router (names + costs).
+//! - [`router`] — [`router::EagleRouter`]: global + local ELO scoring.
+//! - [`policy`] — budget-constrained model selection.
+//! - [`feedback`] — online feedback ingestion (paper workflow step 5).
+//! - [`state`] — snapshot/restore of router state.
+//!
+//! The [`Router`] trait is the uniform surface the evaluation harness and
+//! the server drive; Eagle and the three baselines all implement it.
+
+pub mod feedback;
+pub mod policy;
+pub mod registry;
+pub mod router;
+pub mod state;
+
+use crate::baselines::QualityPredictor;
+
+/// A router: maps a query embedding to a per-model desirability score.
+/// Scores are only compared *within* one call (rankings), never across
+/// routers — ELO points and predicted-quality units need not match.
+pub trait Router {
+    fn name(&self) -> String;
+
+    /// Per-model scores for one (already embedded) query. Higher = better.
+    fn scores(&self, query_emb: &[f32]) -> Vec<f64>;
+}
+
+/// Adapter: any [`QualityPredictor`] baseline is a [`Router`].
+pub struct PredictorRouter<P: QualityPredictor> {
+    inner: P,
+}
+
+impl<P: QualityPredictor> PredictorRouter<P> {
+    pub fn new(inner: P) -> Self {
+        PredictorRouter { inner }
+    }
+
+    pub fn inner(&self) -> &P {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut P {
+        &mut self.inner
+    }
+}
+
+impl<P: QualityPredictor> Router for PredictorRouter<P> {
+    fn name(&self) -> String {
+        self.inner.name().to_string()
+    }
+
+    fn scores(&self, query_emb: &[f32]) -> Vec<f64> {
+        self.inner.predict(query_emb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::knn::KnnPredictor;
+    use crate::baselines::linalg::Matrix;
+    use crate::baselines::TrainSet;
+
+    #[test]
+    fn predictor_router_adapts() {
+        let mut knn = KnnPredictor::new(1);
+        knn.fit(&TrainSet::new(
+            Matrix::from_rows(&[vec![1.0, 0.0]]),
+            Matrix::from_rows(&[vec![0.25, 0.75]]),
+        ));
+        let r = PredictorRouter::new(knn);
+        assert_eq!(r.name(), "knn");
+        let s = r.scores(&[1.0, 0.0]);
+        assert!((s[1] - 0.75).abs() < 1e-6);
+    }
+}

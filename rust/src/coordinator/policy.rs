@@ -1,0 +1,165 @@
+//! Budget policy: "select the highest-ranked model that falls within the
+//! user's specified budget" (paper §2).
+//!
+//! The budget is a willingness-to-pay in $ per query, compared against each
+//! model's *expected* per-query cost from the registry. If nothing is
+//! affordable the policy falls back to the cheapest available model — a
+//! serving system must answer every request.
+
+use super::registry::ModelRegistry;
+
+/// Budget-constrained selection over router scores.
+#[derive(Debug, Clone)]
+pub struct BudgetPolicy {
+    costs: Vec<f64>,
+    available: Vec<bool>,
+}
+
+impl BudgetPolicy {
+    pub fn new(registry: &ModelRegistry) -> Self {
+        BudgetPolicy {
+            costs: registry.costs(),
+            available: registry.entries().iter().map(|e| e.available).collect(),
+        }
+    }
+
+    /// Selection from explicit costs (tests, ablations).
+    pub fn from_costs(costs: Vec<f64>) -> Self {
+        let available = vec![true; costs.len()];
+        BudgetPolicy { costs, available }
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.costs.len()
+    }
+
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Highest-scoring model with expected cost <= budget; falls back to
+    /// the cheapest available model when nothing is affordable.
+    pub fn select(&self, scores: &[f64], budget: f64) -> usize {
+        debug_assert_eq!(scores.len(), self.costs.len());
+        let mut best: Option<usize> = None;
+        for m in 0..self.costs.len() {
+            if !self.available[m] || self.costs[m] > budget {
+                continue;
+            }
+            match best {
+                None => best = Some(m),
+                Some(b) => {
+                    // tie-break toward the cheaper model (same quality for less)
+                    if scores[m] > scores[b]
+                        || (scores[m] == scores[b] && self.costs[m] < self.costs[b])
+                    {
+                        best = Some(m);
+                    }
+                }
+            }
+        }
+        best.unwrap_or_else(|| self.cheapest())
+    }
+
+    /// Cheapest available model index.
+    pub fn cheapest(&self) -> usize {
+        (0..self.costs.len())
+            .filter(|&m| self.available[m])
+            .min_by(|&a, &b| self.costs[a].partial_cmp(&self.costs[b]).unwrap())
+            .expect("no available models")
+    }
+
+    /// A willingness-to-pay sweep covering the full cost range: one level
+    /// just below each distinct model cost, each exact cost, and one above
+    /// the max — the x-axis of Fig 2a.
+    pub fn budget_sweep(&self) -> Vec<f64> {
+        let mut costs: Vec<f64> = self.costs.clone();
+        costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        costs.dedup();
+        let mut levels = Vec::with_capacity(costs.len() * 2 + 1);
+        for &c in &costs {
+            levels.push(c * 0.999); // just below: excludes this tier
+            levels.push(c * 1.001); // just above: includes it
+        }
+        levels.push(costs.last().unwrap() * 1.5);
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn policy() -> BudgetPolicy {
+        BudgetPolicy::from_costs(vec![10.0, 1.0, 5.0])
+    }
+
+    #[test]
+    fn picks_best_affordable() {
+        let p = policy();
+        // scores favor model 0 but it costs 10
+        let scores = vec![3.0, 1.0, 2.0];
+        assert_eq!(p.select(&scores, 20.0), 0);
+        assert_eq!(p.select(&scores, 6.0), 2);
+        assert_eq!(p.select(&scores, 2.0), 1);
+    }
+
+    #[test]
+    fn unaffordable_falls_back_to_cheapest() {
+        let p = policy();
+        assert_eq!(p.select(&[1.0, 2.0, 3.0], 0.1), 1);
+    }
+
+    #[test]
+    fn tie_breaks_to_cheaper() {
+        let p = BudgetPolicy::from_costs(vec![10.0, 1.0]);
+        assert_eq!(p.select(&[2.0, 2.0], 20.0), 1);
+    }
+
+    #[test]
+    fn drained_model_never_selected() {
+        let mut p = policy();
+        p.available[0] = false;
+        assert_eq!(p.select(&[9.0, 1.0, 2.0], 100.0), 2);
+    }
+
+    #[test]
+    fn sweep_covers_all_tiers() {
+        let p = policy();
+        let sweep = p.budget_sweep();
+        // every model becomes affordable at some sweep level
+        for (m, &c) in p.costs().iter().enumerate() {
+            assert!(sweep.iter().any(|&b| b >= c), "model {m} never affordable");
+        }
+        // the lowest level excludes everything but the fallback
+        assert!(sweep[0] < p.costs().iter().cloned().fold(f64::MAX, f64::min));
+        // sorted
+        for w in sweep.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn budget_monotonicity() {
+        // larger budgets never select a *lower-scoring* model
+        prop::check("budget monotone", 200, |rng| {
+            let n = 2 + rng.below(8);
+            let costs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 10.0)).collect();
+            let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 1.0)).collect();
+            let p = BudgetPolicy::from_costs(costs);
+            let b1 = rng.range_f64(0.0, 12.0);
+            let b2 = b1 + rng.range_f64(0.0, 5.0);
+            let s1 = scores[p.select(&scores, b1)];
+            let s2 = scores[p.select(&scores, b2)];
+            // fallback cases can violate score order only when b1 affords nothing
+            let affordable1 = p.costs().iter().any(|&c| c <= b1);
+            if affordable1 {
+                prop::assert_prop(s2 >= s1 - 1e-12, "score decreased with budget")
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,113 @@
+//! Model registry: what the coordinator knows about each candidate LLM.
+//!
+//! The router and the budget policy only need names and expected per-query
+//! costs; the serving layer additionally tracks availability so an
+//! operator can drain a model from rotation without redeploying.
+
+use crate::routerbench::models::MODELS;
+
+/// One registered model.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    /// Expected $ cost of one query (used by the budget policy).
+    pub expected_cost: f64,
+    /// Whether the model may be routed to.
+    pub available: bool,
+}
+
+/// The model pool.
+#[derive(Debug, Clone, Default)]
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+}
+
+impl ModelRegistry {
+    /// Registry over the RouterBench model pool.
+    pub fn routerbench() -> Self {
+        ModelRegistry {
+            entries: MODELS
+                .iter()
+                .map(|m| ModelEntry {
+                    name: m.name.to_string(),
+                    expected_cost: m.expected_cost(),
+                    available: true,
+                })
+                .collect(),
+        }
+    }
+
+    /// Custom registry.
+    pub fn new(entries: Vec<ModelEntry>) -> Self {
+        ModelRegistry { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entry(&self, i: usize) -> &ModelEntry {
+        &self.entries[i]
+    }
+
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name)
+    }
+
+    /// Expected costs in model order.
+    pub fn costs(&self) -> Vec<f64> {
+        self.entries.iter().map(|e| e.expected_cost).collect()
+    }
+
+    /// Mark a model (un)available (operator drain).
+    pub fn set_available(&mut self, i: usize, available: bool) {
+        self.entries[i].available = available;
+    }
+
+    /// Cheapest available model (the universal fallback).
+    pub fn cheapest_available(&self) -> Option<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.available)
+            .min_by(|a, b| a.1.expected_cost.partial_cmp(&b.1.expected_cost).unwrap())
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routerbench_registry_matches_models() {
+        let r = ModelRegistry::routerbench();
+        assert_eq!(r.len(), MODELS.len());
+        assert_eq!(r.index_of("gpt-4"), Some(0));
+        assert!(r.entry(0).expected_cost > r.entry(r.index_of("mistral-7b-chat").unwrap()).expected_cost);
+    }
+
+    #[test]
+    fn cheapest_available_respects_drain() {
+        let mut r = ModelRegistry::routerbench();
+        let cheapest = r.cheapest_available().unwrap();
+        r.set_available(cheapest, false);
+        let second = r.cheapest_available().unwrap();
+        assert_ne!(cheapest, second);
+        assert!(r.entry(second).expected_cost >= r.entry(cheapest).expected_cost);
+    }
+
+    #[test]
+    fn unknown_model_none() {
+        let r = ModelRegistry::routerbench();
+        assert_eq!(r.index_of("gpt-9"), None);
+    }
+}

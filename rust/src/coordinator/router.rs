@@ -1,0 +1,351 @@
+//! The Eagle router: global + local ELO scoring (paper §2.2).
+//!
+//! ```text
+//! Score(X) = P * Global(X) + (1 - P) * Local(X)
+//! ```
+//!
+//! - **Eagle-Global**: one ELO table over every pairwise feedback record;
+//!   updated incrementally as feedback arrives (never retrained).
+//! - **Eagle-Local**: per query, retrieve the N nearest historical feedback
+//!   entries by embedding cosine similarity, seed a fresh ELO table from
+//!   the global ratings ("background knowledge"), and replay just those N
+//!   records.
+//!
+//! `P = 1` is the Eagle-Global ablation, `P = 0` Eagle-Local (Fig 4a);
+//! `N` sweeps give Fig 4b.
+
+use crate::config::EagleParams;
+use crate::elo::{Comparison, EloEngine, GlobalElo};
+use crate::vectordb::{Feedback, Hit, VectorIndex};
+
+use super::Router;
+
+/// All pairwise feedback collected for one prompt, tied to its embedding.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    pub embedding: Vec<f32>,
+    pub comparisons: Vec<Comparison>,
+}
+
+impl Observation {
+    pub fn single(embedding: Vec<f32>, comparison: Comparison) -> Self {
+        Observation { embedding, comparisons: vec![comparison] }
+    }
+}
+
+/// The Eagle router over a pluggable vector index.
+pub struct EagleRouter<I: VectorIndex + Send> {
+    params: EagleParams,
+    n_models: usize,
+    global: GlobalElo,
+    store: I,
+}
+
+impl<I: VectorIndex + Send> EagleRouter<I> {
+    /// Empty router (cold start: uniform global ratings, empty store).
+    pub fn new(params: EagleParams, n_models: usize, store: I) -> Self {
+        let global = GlobalElo::new(n_models, params.k_factor);
+        EagleRouter { params, n_models, global, store }
+    }
+
+    /// Initialize from a feedback history (paper: "training-free" setup —
+    /// one ELO replay plus vector inserts, no optimization loop).
+    pub fn fit(params: EagleParams, n_models: usize, store: I, history: &[Observation]) -> Self {
+        let mut router = EagleRouter::new(params, n_models, store);
+        router.update(history);
+        router
+    }
+
+    /// Incremental online update (the paper's 100-200x cheaper path):
+    /// O(new) ELO updates + O(new) vector inserts. No retraining.
+    pub fn update(&mut self, new_observations: &[Observation]) {
+        for obs in new_observations {
+            self.global.apply_new(&obs.comparisons);
+            self.store
+                .add(&obs.embedding, Feedback { comparisons: obs.comparisons.clone() });
+        }
+    }
+
+    /// Ingest one prompt's feedback (server path).
+    pub fn observe(&mut self, obs: Observation) {
+        self.global.apply_new(&obs.comparisons);
+        self.store.add(&obs.embedding, Feedback { comparisons: obs.comparisons });
+    }
+
+    /// Overwrite the global table from snapshot state (see
+    /// [`super::state`]); replay order is already folded into `ratings`.
+    pub fn restore_global(&mut self, ratings: &[f64], history_len: usize) {
+        assert_eq!(ratings.len(), self.n_models, "rating arity");
+        self.global = GlobalElo::restore(ratings.to_vec(), self.params.k_factor, history_len);
+    }
+
+    pub fn params(&self) -> &EagleParams {
+        &self.params
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.n_models
+    }
+
+    pub fn global(&self) -> &GlobalElo {
+        &self.global
+    }
+
+    pub fn store(&self) -> &I {
+        &self.store
+    }
+
+    pub fn feedback_len(&self) -> usize {
+        self.global.history_len()
+    }
+
+    /// The N retrieved neighbors for a query (diagnostics / tests).
+    pub fn neighbors(&self, query_emb: &[f32]) -> Vec<Hit> {
+        self.store.search(query_emb, self.params.n_neighbors)
+    }
+
+    /// Local ELO ratings for a query: global-seeded, neighbor-replayed.
+    ///
+    /// Neighbors are replayed in *ascending* similarity order so the
+    /// closest prompts' feedback lands last and carries the most weight in
+    /// the sequential ELO update — a strictly better use of the same N
+    /// records (EXPERIMENTS.md ablation).
+    pub fn local_ratings(&self, query_emb: &[f32]) -> Vec<f64> {
+        let seed = self.global.ratings();
+        let mut local = EloEngine::seeded(seed.clone(), self.params.k_factor);
+        let hits = self.store.search(query_emb, self.params.n_neighbors);
+        // Trajectory-average the local replay as well (same estimator as
+        // Eagle-Global): the mean over post-update states is far less
+        // order-sensitive than the last iterate.
+        let mut sum = seed;
+        let mut samples = 1u64;
+        for hit in hits.iter().rev() {
+            for &c in &self.store.feedback(hit.id).comparisons {
+                local.update(c);
+                for (s, &r) in sum.iter_mut().zip(local.ratings()) {
+                    *s += r;
+                }
+                samples += 1;
+            }
+        }
+        for s in sum.iter_mut() {
+            *s /= samples as f64;
+        }
+        sum
+    }
+
+    /// Combined Eagle scores (paper Eq. Score(X) = P*G + (1-P)*L).
+    pub fn combined_scores(&self, query_emb: &[f32]) -> Vec<f64> {
+        let p = self.params.p;
+        if p >= 1.0 {
+            // pure global: skip retrieval entirely
+            return self.global.ratings().to_vec();
+        }
+        let local = self.local_ratings(query_emb);
+        self.global
+            .ratings()
+            .iter()
+            .zip(&local)
+            .map(|(g, l)| p * g + (1.0 - p) * l)
+            .collect()
+    }
+}
+
+impl<I: VectorIndex + Send> Router for EagleRouter<I> {
+    fn name(&self) -> String {
+        match self.params.p {
+            p if p >= 1.0 => "eagle-global".to_string(),
+            p if p <= 0.0 => "eagle-local".to_string(),
+            _ => "eagle".to_string(),
+        }
+    }
+
+    fn scores(&self, query_emb: &[f32]) -> Vec<f64> {
+        self.combined_scores(query_emb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elo::Outcome;
+    use crate::util::{l2_normalize, Rng};
+    use crate::vectordb::flat::FlatStore;
+
+    const DIM: usize = 16;
+
+    fn unit(rng: &mut Rng) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    fn near(base: &[f32], rng: &mut Rng, eps: f32) -> Vec<f32> {
+        let mut v: Vec<f32> = base.iter().map(|&x| x + eps * rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    fn params(p: f64, n: usize) -> EagleParams {
+        EagleParams { p, n_neighbors: n, k_factor: 32.0 }
+    }
+
+    /// Build a history with a *global* winner (model 0) but a *local*
+    /// specialist (model 2 wins inside a cluster around `anchor`).
+    fn specialist_history(rng: &mut Rng, anchor: &[f32]) -> Vec<Observation> {
+        let mut hist = Vec::new();
+        for _ in 0..300 {
+            let emb = unit(rng);
+            let b = 1 + rng.below(2); // 1 or 2
+            hist.push(Observation::single(
+                emb,
+                Comparison { a: 0, b, outcome: Outcome::WinA },
+            ));
+        }
+        for _ in 0..60 {
+            let emb = near(anchor, rng, 0.05);
+            hist.push(Observation::single(
+                emb,
+                Comparison { a: 2, b: 0, outcome: Outcome::WinA },
+            ));
+        }
+        // interleave: an ordered stream (all specialist wins last) would
+        // legitimately push the specialist to the top of the *global* table
+        rng.shuffle(&mut hist);
+        hist
+    }
+
+    #[test]
+    fn fit_builds_global_and_store() {
+        let mut rng = Rng::new(1);
+        let anchor = unit(&mut rng);
+        let hist = specialist_history(&mut rng, &anchor);
+        let router =
+            EagleRouter::fit(params(0.5, 20), 3, FlatStore::new(DIM), &hist);
+        assert_eq!(router.feedback_len(), hist.len());
+        assert_eq!(router.store().len(), hist.len());
+        // model 0 dominates globally
+        assert_eq!(router.global().ranking()[0], 0);
+    }
+
+    #[test]
+    fn local_detects_specialist() {
+        let mut rng = Rng::new(2);
+        let anchor = unit(&mut rng);
+        let hist = specialist_history(&mut rng, &anchor);
+        let router =
+            EagleRouter::fit(params(0.0, 20), 3, FlatStore::new(DIM), &hist);
+        // near the anchor, local ELO must rank the specialist (2) first
+        let probe = near(&anchor, &mut rng, 0.02);
+        let scores = router.scores(&probe);
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 2, "scores = {scores:?}");
+    }
+
+    #[test]
+    fn global_ignores_locality() {
+        let mut rng = Rng::new(3);
+        let anchor = unit(&mut rng);
+        let hist = specialist_history(&mut rng, &anchor);
+        let router =
+            EagleRouter::fit(params(1.0, 20), 3, FlatStore::new(DIM), &hist);
+        let probe = near(&anchor, &mut rng, 0.02);
+        let far = unit(&mut rng);
+        assert_eq!(router.scores(&probe), router.scores(&far));
+        assert_eq!(router.name(), "eagle-global");
+    }
+
+    #[test]
+    fn combined_interpolates() {
+        let mut rng = Rng::new(4);
+        let anchor = unit(&mut rng);
+        let hist = specialist_history(&mut rng, &anchor);
+        let store = FlatStore::new(DIM);
+        let router = EagleRouter::fit(params(0.5, 20), 3, store, &hist);
+        let probe = near(&anchor, &mut rng, 0.02);
+
+        let global = router.global().ratings().to_vec();
+        let local = router.local_ratings(&probe);
+        let combined = router.combined_scores(&probe);
+        for m in 0..3 {
+            let expect = 0.5 * global[m] + 0.5 * local[m];
+            assert!((combined[m] - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn incremental_update_shifts_ratings() {
+        let mut rng = Rng::new(5);
+        let mut router =
+            EagleRouter::new(params(0.5, 10), 3, FlatStore::new(DIM));
+        let before = router.global().ratings().to_vec();
+        let obs: Vec<Observation> = (0..50)
+            .map(|_| {
+                Observation::single(
+                    unit(&mut rng),
+                    Comparison { a: 1, b: 2, outcome: Outcome::WinA },
+                )
+            })
+            .collect();
+        router.update(&obs);
+        assert!(router.global().ratings()[1] > before[1]);
+        assert!(router.global().ratings()[2] < before[2]);
+        assert_eq!(router.store().len(), 50);
+    }
+
+    #[test]
+    fn update_equals_fit_on_concatenation() {
+        // the incremental-vs-retrain equivalence behind Table 3a
+        let mut rng = Rng::new(6);
+        let anchor = unit(&mut rng);
+        let hist = specialist_history(&mut rng, &anchor);
+        let (old, new) = hist.split_at(200);
+
+        let mut incr =
+            EagleRouter::fit(params(0.5, 20), 3, FlatStore::new(DIM), old);
+        incr.update(new);
+        let full = EagleRouter::fit(params(0.5, 20), 3, FlatStore::new(DIM), &hist);
+
+        let probe = near(&anchor, &mut rng, 0.02);
+        let a = incr.scores(&probe);
+        let b = full.scores(&probe);
+        for m in 0..3 {
+            assert!((a[m] - b[m]).abs() < 1e-9, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn neighbors_limited_to_n() {
+        let mut rng = Rng::new(7);
+        let anchor = unit(&mut rng);
+        let hist = specialist_history(&mut rng, &anchor);
+        let router =
+            EagleRouter::fit(params(0.5, 5), 3, FlatStore::new(DIM), &hist);
+        assert_eq!(router.neighbors(&anchor).len(), 5);
+    }
+
+    #[test]
+    fn empty_router_scores_uniform() {
+        let router = EagleRouter::new(params(0.5, 20), 4, FlatStore::new(DIM));
+        let q = vec![1.0; DIM];
+        let s = router.scores(&q);
+        assert_eq!(s, vec![crate::elo::INITIAL_RATING; 4]);
+    }
+
+    #[test]
+    fn observe_single_record() {
+        let mut rng = Rng::new(8);
+        let mut router = EagleRouter::new(params(0.5, 20), 3, FlatStore::new(DIM));
+        router.observe(Observation::single(
+            unit(&mut rng),
+            Comparison { a: 0, b: 1, outcome: Outcome::WinB },
+        ));
+        assert_eq!(router.feedback_len(), 1);
+        assert!(router.global().ratings()[1] > router.global().ratings()[0]);
+    }
+}

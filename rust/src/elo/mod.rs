@@ -1,0 +1,473 @@
+//! ELO rating engine — the core of both Eagle-Global and Eagle-Local.
+//!
+//! Implements the paper's Eq. (1)–(2):
+//!
+//! ```text
+//! R' = R + K * (S - E)              (1)
+//! E  = 1 / (1 + 10^((R_opp - R)/400))   (2)
+//! ```
+//!
+//! Eagle-Global replays every pairwise feedback record once at startup and
+//! then applies new records *incrementally* (this is the source of the
+//! paper's 100–200x online-update speedup over retraining-based routers).
+//! Eagle-Local seeds a fresh engine from the global ratings and replays only
+//! the N retrieved neighbors per query.
+
+use std::collections::HashMap;
+
+/// Initial rating for a model never seen before (chess convention, and the
+/// value any constant shift of which cancels in rankings).
+pub const INITIAL_RATING: f64 = 1000.0;
+
+/// Paper default K-factor (Appendix A.1).
+pub const DEFAULT_K: f64 = 32.0;
+
+/// Outcome of one pairwise comparison between model `a` and model `b`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    WinA,
+    WinB,
+    Draw,
+}
+
+impl Outcome {
+    /// Actual score S for player `a` (1 win, 0.5 draw, 0 loss).
+    pub fn score_a(self) -> f64 {
+        match self {
+            Outcome::WinA => 1.0,
+            Outcome::Draw => 0.5,
+            Outcome::WinB => 0.0,
+        }
+    }
+
+    /// The outcome with the roles of a and b swapped.
+    pub fn flipped(self) -> Outcome {
+        match self {
+            Outcome::WinA => Outcome::WinB,
+            Outcome::WinB => Outcome::WinA,
+            Outcome::Draw => Outcome::Draw,
+        }
+    }
+
+    /// Encode for snapshots: 1.0 / 0.5 / 0.0 (= S for a).
+    pub fn encode(self) -> f64 {
+        self.score_a()
+    }
+
+    pub fn decode(x: f64) -> Option<Outcome> {
+        if x == 1.0 {
+            Some(Outcome::WinA)
+        } else if x == 0.5 {
+            Some(Outcome::Draw)
+        } else if x == 0.0 {
+            Some(Outcome::WinB)
+        } else {
+            None
+        }
+    }
+}
+
+/// One pairwise feedback record: "model `a` vs model `b` on some prompt".
+/// Models are dense indices into the model registry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Comparison {
+    pub a: usize,
+    pub b: usize,
+    pub outcome: Outcome,
+}
+
+/// Expected score E of a player rated `r` against an opponent rated `r_opp`
+/// (paper Eq. 2).
+pub fn expected_score(r: f64, r_opp: f64) -> f64 {
+    1.0 / (1.0 + 10f64.powf((r_opp - r) / 400.0))
+}
+
+/// An ELO rating table over a fixed number of models.
+///
+/// Dense `Vec<f64>` storage: model ids are registry indices, and the local
+/// engine is rebuilt per request — allocation-free ops matter (§Perf).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EloEngine {
+    ratings: Vec<f64>,
+    k: f64,
+    updates: u64,
+}
+
+impl EloEngine {
+    /// Fresh engine: every model starts at [`INITIAL_RATING`].
+    pub fn new(n_models: usize, k: f64) -> Self {
+        EloEngine { ratings: vec![INITIAL_RATING; n_models], k, updates: 0 }
+    }
+
+    /// Engine seeded from existing ratings (Eagle-Local seeds from global).
+    pub fn seeded(ratings: Vec<f64>, k: f64) -> Self {
+        EloEngine { ratings, k, updates: 0 }
+    }
+
+    /// Re-seed in place without reallocating (hot path of Eagle-Local).
+    pub fn reseed_from(&mut self, ratings: &[f64]) {
+        debug_assert_eq!(ratings.len(), self.ratings.len());
+        self.ratings.copy_from_slice(ratings);
+        self.updates = 0;
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.ratings.len()
+    }
+
+    pub fn k(&self) -> f64 {
+        self.k
+    }
+
+    /// Number of comparisons applied since creation / reseed.
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    pub fn rating(&self, model: usize) -> f64 {
+        self.ratings[model]
+    }
+
+    pub fn ratings(&self) -> &[f64] {
+        &self.ratings
+    }
+
+    /// Apply one comparison (paper Eq. 1). O(1).
+    pub fn update(&mut self, cmp: Comparison) {
+        debug_assert!(cmp.a != cmp.b, "self-play comparison");
+        let ra = self.ratings[cmp.a];
+        let rb = self.ratings[cmp.b];
+        let ea = expected_score(ra, rb);
+        let sa = cmp.outcome.score_a();
+        let delta = self.k * (sa - ea);
+        self.ratings[cmp.a] = ra + delta;
+        self.ratings[cmp.b] = rb - delta;
+        self.updates += 1;
+    }
+
+    /// Replay a batch of comparisons in order.
+    pub fn replay(&mut self, cmps: &[Comparison]) {
+        for &c in cmps {
+            self.update(c);
+        }
+    }
+
+    /// Models sorted by rating, best first. Ties break by lower index
+    /// (deterministic).
+    pub fn ranking(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.ratings.len()).collect();
+        idx.sort_by(|&i, &j| {
+            self.ratings[j]
+                .partial_cmp(&self.ratings[i])
+                .unwrap()
+                .then(i.cmp(&j))
+        });
+        idx
+    }
+
+    /// Sum of all ratings; conserved by [`update`] (zero-sum exchanges).
+    pub fn total_rating(&self) -> f64 {
+        self.ratings.iter().sum()
+    }
+}
+
+/// Eagle-Global: an [`EloEngine`] plus bookkeeping for incremental updates.
+///
+/// `apply_new` consumes only the new feedback records — the paper's
+/// "updating global scores once, rather than iteratively optimizing".
+///
+/// Ratings are **trajectory-averaged** (the paper: "we calculate the
+/// *average* ELO rating across all pairwise feedback information"): the
+/// reported rating of a model is the mean of its rating after every
+/// update, not the last iterate. Sequential ELO's last iterate
+/// random-walks with std ~K/2 points, which drowns the 20-40 point gaps
+/// between mid-tier models; the trajectory mean converges like 1/sqrt(T)
+/// (ablation in EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct GlobalElo {
+    engine: EloEngine,
+    history_len: usize,
+    rating_sum: Vec<f64>,
+    samples: u64,
+}
+
+impl GlobalElo {
+    pub fn new(n_models: usize, k: f64) -> Self {
+        GlobalElo {
+            engine: EloEngine::new(n_models, k),
+            history_len: 0,
+            rating_sum: vec![0.0; n_models],
+            samples: 0,
+        }
+    }
+
+    /// Initialize from a full history (one pass, no retraining).
+    pub fn initialize(n_models: usize, k: f64, history: &[Comparison]) -> Self {
+        let mut g = GlobalElo::new(n_models, k);
+        g.apply_new(history);
+        g
+    }
+
+    /// Restore from a snapshot: averaged ratings verbatim, no replay.
+    /// The trajectory restarts from the restored point (the sequential
+    /// engine is reseeded at the averaged ratings).
+    pub fn restore(ratings: Vec<f64>, k: f64, history_len: usize) -> Self {
+        GlobalElo {
+            rating_sum: ratings.clone(),
+            samples: 1,
+            engine: EloEngine::seeded(ratings, k),
+            history_len,
+        }
+    }
+
+    /// Incrementally fold in newly collected feedback.
+    pub fn apply_new(&mut self, new_records: &[Comparison]) {
+        for &c in new_records {
+            self.engine.update(c);
+            for (sum, &r) in self.rating_sum.iter_mut().zip(self.engine.ratings()) {
+                *sum += r;
+            }
+            self.samples += 1;
+        }
+        self.history_len += new_records.len();
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.history_len
+    }
+
+    /// Trajectory-averaged ratings (the scores Eagle uses).
+    pub fn ratings(&self) -> Vec<f64> {
+        if self.samples == 0 {
+            return self.engine.ratings().to_vec();
+        }
+        self.rating_sum.iter().map(|s| s / self.samples as f64).collect()
+    }
+
+    /// Last-iterate (sequential) ratings — exposed for the averaging
+    /// ablation and diagnostics.
+    pub fn last_iterate(&self) -> &[f64] {
+        self.engine.ratings()
+    }
+
+    pub fn engine(&self) -> &EloEngine {
+        &self.engine
+    }
+
+    /// Models sorted by averaged rating, best first.
+    pub fn ranking(&self) -> Vec<usize> {
+        let ratings = self.ratings();
+        let mut idx: Vec<usize> = (0..ratings.len()).collect();
+        idx.sort_by(|&i, &j| ratings[j].partial_cmp(&ratings[i]).unwrap().then(i.cmp(&j)));
+        idx
+    }
+}
+
+/// Convert named pairwise records to dense [`Comparison`]s given a
+/// name -> index map (used by dataset loaders and the server).
+pub fn to_dense(
+    records: &[(String, String, Outcome)],
+    index: &HashMap<String, usize>,
+) -> Result<Vec<Comparison>, String> {
+    records
+        .iter()
+        .map(|(a, b, o)| {
+            let ia = *index.get(a).ok_or_else(|| format!("unknown model '{a}'"))?;
+            let ib = *index.get(b).ok_or_else(|| format!("unknown model '{b}'"))?;
+            Ok(Comparison { a: ia, b: ib, outcome: *o })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn rand_cmp(rng: &mut Rng, n: usize) -> Comparison {
+        let a = rng.below(n);
+        let mut b = rng.below(n - 1);
+        if b >= a {
+            b += 1;
+        }
+        let outcome = match rng.below(3) {
+            0 => Outcome::WinA,
+            1 => Outcome::WinB,
+            _ => Outcome::Draw,
+        };
+        Comparison { a, b, outcome }
+    }
+
+    #[test]
+    fn expected_score_symmetry() {
+        prop::check("E(a,b) + E(b,a) = 1", 200, |rng| {
+            let ra = rng.range_f64(0.0, 3000.0);
+            let rb = rng.range_f64(0.0, 3000.0);
+            prop::assert_close(
+                expected_score(ra, rb) + expected_score(rb, ra),
+                1.0,
+                1e-12,
+                "symmetry",
+            )
+        });
+    }
+
+    #[test]
+    fn expected_score_equal_ratings() {
+        assert!((expected_score(1000.0, 1000.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_score_400_gap_is_10x() {
+        // A 400-point gap means 10:1 odds: E = 10/11.
+        let e = expected_score(1400.0, 1000.0);
+        assert!((e - 10.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_win_raises_loser_drops() {
+        let mut e = EloEngine::new(2, DEFAULT_K);
+        e.update(Comparison { a: 0, b: 1, outcome: Outcome::WinA });
+        assert!(e.rating(0) > INITIAL_RATING);
+        assert!(e.rating(1) < INITIAL_RATING);
+        // equal ratings, K=32: delta is exactly 16
+        assert!((e.rating(0) - 1016.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn draw_between_equals_is_noop() {
+        let mut e = EloEngine::new(2, DEFAULT_K);
+        e.update(Comparison { a: 0, b: 1, outcome: Outcome::Draw });
+        assert_eq!(e.rating(0), INITIAL_RATING);
+        assert_eq!(e.rating(1), INITIAL_RATING);
+    }
+
+    #[test]
+    fn rating_sum_conserved() {
+        prop::check("total rating conserved", 100, |rng| {
+            let n = 2 + rng.below(10);
+            let mut e = EloEngine::new(n, DEFAULT_K);
+            let before = e.total_rating();
+            for _ in 0..200 {
+                e.update(rand_cmp(rng, n));
+            }
+            prop::assert_close(e.total_rating(), before, 1e-6, "conservation")
+        });
+    }
+
+    #[test]
+    fn stronger_model_ranks_higher() {
+        // model 0 beats model 1 80% of the time -> must rank above it.
+        let mut rng = Rng::new(42);
+        let mut e = EloEngine::new(2, DEFAULT_K);
+        for _ in 0..500 {
+            let outcome = if rng.chance(0.8) { Outcome::WinA } else { Outcome::WinB };
+            e.update(Comparison { a: 0, b: 1, outcome });
+        }
+        assert_eq!(e.ranking(), vec![0, 1]);
+        assert!(e.rating(0) - e.rating(1) > 100.0);
+    }
+
+    #[test]
+    fn transitive_strength_recovered() {
+        // latent order 0 > 1 > 2 with noisy outcomes.
+        let mut rng = Rng::new(7);
+        let strength = [3.0f64, 1.5, 0.0];
+        let mut e = EloEngine::new(3, DEFAULT_K);
+        for _ in 0..3000 {
+            let c = rand_cmp(&mut rng, 3);
+            let pa = 1.0 / (1.0 + (-(strength[c.a] - strength[c.b])).exp());
+            let outcome = if rng.chance(pa) { Outcome::WinA } else { Outcome::WinB };
+            e.update(Comparison { outcome, ..c });
+        }
+        assert_eq!(e.ranking(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn flipped_comparison_equivalent() {
+        prop::check("a-vs-b == b-vs-a flipped", 100, |rng| {
+            let c = rand_cmp(rng, 5);
+            let mut e1 = EloEngine::new(5, DEFAULT_K);
+            let mut e2 = EloEngine::new(5, DEFAULT_K);
+            e1.update(c);
+            e2.update(Comparison { a: c.b, b: c.a, outcome: c.outcome.flipped() });
+            for m in 0..5 {
+                prop::assert_close(e1.rating(m), e2.rating(m), 1e-12, "flip")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_equals_full_replay() {
+        // The property behind Table 3a: applying new records to an existing
+        // global engine is identical to replaying the concatenated history.
+        prop::check("incremental == replay", 50, |rng| {
+            let n = 3 + rng.below(6);
+            let hist: Vec<Comparison> = (0..300).map(|_| rand_cmp(rng, n)).collect();
+            let (old, new) = hist.split_at(200);
+
+            let mut incremental = GlobalElo::initialize(n, DEFAULT_K, old);
+            incremental.apply_new(new);
+
+            let full = GlobalElo::initialize(n, DEFAULT_K, &hist);
+            for m in 0..n {
+                prop::assert_close(
+                    incremental.ratings()[m],
+                    full.ratings()[m],
+                    1e-9,
+                    "ratings",
+                )?;
+            }
+            prop::assert_prop(incremental.history_len() == 300, "history len")
+        });
+    }
+
+    #[test]
+    fn reseed_resets_to_given_ratings() {
+        let mut e = EloEngine::new(3, DEFAULT_K);
+        e.update(Comparison { a: 0, b: 1, outcome: Outcome::WinA });
+        let seed = vec![900.0, 1100.0, 1000.0];
+        e.reseed_from(&seed);
+        assert_eq!(e.ratings(), seed.as_slice());
+        assert_eq!(e.updates(), 0);
+    }
+
+    #[test]
+    fn k_scales_adjustment() {
+        let mut lo = EloEngine::new(2, 16.0);
+        let mut hi = EloEngine::new(2, 64.0);
+        let c = Comparison { a: 0, b: 1, outcome: Outcome::WinA };
+        lo.update(c);
+        hi.update(c);
+        let d_lo = lo.rating(0) - INITIAL_RATING;
+        let d_hi = hi.rating(0) - INITIAL_RATING;
+        assert!((d_hi / d_lo - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranking_deterministic_ties() {
+        let e = EloEngine::new(4, DEFAULT_K);
+        assert_eq!(e.ranking(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn outcome_encode_decode() {
+        for o in [Outcome::WinA, Outcome::WinB, Outcome::Draw] {
+            assert_eq!(Outcome::decode(o.encode()), Some(o));
+        }
+        assert_eq!(Outcome::decode(0.3), None);
+    }
+
+    #[test]
+    fn to_dense_maps_names() {
+        let mut index = HashMap::new();
+        index.insert("gpt".to_string(), 0);
+        index.insert("claude".to_string(), 1);
+        let recs = vec![("gpt".to_string(), "claude".to_string(), Outcome::WinB)];
+        let dense = to_dense(&recs, &index).unwrap();
+        assert_eq!(dense[0], Comparison { a: 0, b: 1, outcome: Outcome::WinB });
+        let bad = vec![("nope".to_string(), "claude".to_string(), Outcome::Draw)];
+        assert!(to_dense(&bad, &index).is_err());
+    }
+}

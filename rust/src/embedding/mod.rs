@@ -1,0 +1,399 @@
+//! Embedding service: tokenization + dynamic batching in front of the PJRT
+//! embedder.
+//!
+//! PJRT handles are `!Send`, so a dedicated **engine thread** owns the
+//! [`Runtime`]; callers talk to it through an mpsc channel and get their
+//! vector back on a oneshot-style reply channel. The engine loop implements
+//! the classic dynamic batcher: it drains whatever is queued (up to
+//! `max_batch`), waits at most `batch_window_us` for batch-mates, pads to
+//! the smallest compiled bucket, and runs one PJRT dispatch for the whole
+//! batch — amortizing dispatch overhead exactly like a vLLM-style serving
+//! engine batches decode steps.
+//!
+//! [`HashEmbedder`] is a pure-rust fallback (hashed bag-of-words random
+//! projection) used by unit tests and benches that must run without built
+//! artifacts; it preserves the only property the routers rely on (shared
+//! tokens => nearby vectors) but is NOT the serving path.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::Metrics;
+use crate::runtime::Runtime;
+use crate::tokenizer::{self, Tokenized};
+use crate::util::l2_normalize;
+
+/// Anything that maps texts to L2-normalized embedding vectors.
+pub trait Embedder: Send {
+    /// Embedding dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Embed a batch of texts (one vector per text, unit L2 norm or zero).
+    fn embed(&self, texts: &[&str]) -> Vec<Vec<f32>>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-backed service
+
+enum EngineMsg {
+    Embed { tokenized: Tokenized, reply: mpsc::Sender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// Handle to the embedding engine thread. Cloneable; cheap.
+#[derive(Clone)]
+pub struct EmbedHandle {
+    tx: mpsc::Sender<EngineMsg>,
+    dim: usize,
+    seq_len: usize,
+    vocab: u32,
+}
+
+/// The engine thread plus its handle. Dropping joins the thread.
+pub struct EmbedService {
+    handle: EmbedHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Dynamic-batcher tuning knobs (see [`crate::config::EmbedParams`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherOptions {
+    pub batch_window_us: u64,
+    pub max_batch: usize,
+}
+
+impl Default for BatcherOptions {
+    fn default() -> Self {
+        BatcherOptions { batch_window_us: 200, max_batch: 32 }
+    }
+}
+
+impl EmbedService {
+    /// Start the engine thread over the artifacts in `dir`.
+    pub fn start(dir: &Path, opts: BatcherOptions, metrics: Arc<Metrics>) -> Result<EmbedService> {
+        // Load the manifest on the caller thread first so startup errors
+        // surface synchronously and we know dim/seq for the handle.
+        let manifest = crate::runtime::Manifest::load(dir)?;
+        let dim = manifest.model.d_model;
+        let seq_len = manifest.model.seq_len;
+        let vocab = manifest.model.vocab_size;
+        let dir = dir.to_path_buf();
+
+        let (tx, rx) = mpsc::channel::<EngineMsg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let join = std::thread::Builder::new()
+            .name("eagle-embed-engine".to_string())
+            .spawn(move || {
+                let runtime = match Runtime::load(&dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                engine_loop(runtime, rx, opts, metrics);
+            })
+            .map_err(|e| anyhow!("spawn engine thread: {e}"))?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+
+        Ok(EmbedService {
+            handle: EmbedHandle { tx, dim, seq_len, vocab },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> EmbedHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for EmbedService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(EngineMsg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EmbedHandle {
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Embed one text (blocks until the engine replies).
+    pub fn embed_one(&self, text: &str) -> Result<Vec<f32>> {
+        let tokenized = tokenizer::tokenize(text, self.seq_len, self.vocab);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(EngineMsg::Embed { tokenized, reply: reply_tx })
+            .map_err(|_| anyhow!("embed engine is down"))?;
+        reply_rx.recv().map_err(|_| anyhow!("embed engine dropped request"))?
+    }
+
+    /// Embed many texts; the engine batches them into compiled buckets.
+    pub fn embed_many(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
+        let mut replies = Vec::with_capacity(texts.len());
+        for t in texts {
+            let tokenized = tokenizer::tokenize(t, self.seq_len, self.vocab);
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.tx
+                .send(EngineMsg::Embed { tokenized, reply: reply_tx })
+                .map_err(|_| anyhow!("embed engine is down"))?;
+            replies.push(reply_rx);
+        }
+        replies
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow!("embed engine dropped request"))?)
+            .collect()
+    }
+}
+
+/// The engine loop: drain-or-wait batching, bucket padding, PJRT dispatch.
+fn engine_loop(
+    runtime: Runtime,
+    rx: mpsc::Receiver<EngineMsg>,
+    opts: BatcherOptions,
+    metrics: Arc<Metrics>,
+) {
+    let seq = runtime.manifest().model.seq_len;
+    let dim = runtime.manifest().model.d_model;
+    let max_batch = opts.max_batch.min(runtime.manifest().max_bucket()).max(1);
+    let window = Duration::from_micros(opts.batch_window_us);
+
+    loop {
+        // Block for the first request.
+        let first = match rx.recv() {
+            Ok(EngineMsg::Embed { tokenized, reply }) => (tokenized, reply),
+            Ok(EngineMsg::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        // Linger up to `window` for batch-mates.
+        let deadline = Instant::now() + window;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            let timeout = deadline.saturating_duration_since(now);
+            match rx.recv_timeout(timeout) {
+                Ok(EngineMsg::Embed { tokenized, reply }) => batch.push((tokenized, reply)),
+                Ok(EngineMsg::Shutdown) => {
+                    run_batch(&runtime, &mut batch, seq, dim, &metrics);
+                    return;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    run_batch(&runtime, &mut batch, seq, dim, &metrics);
+                    return;
+                }
+            }
+            if timeout.is_zero() {
+                break;
+            }
+        }
+        run_batch(&runtime, &mut batch, seq, dim, &metrics);
+    }
+}
+
+fn run_batch(
+    runtime: &Runtime,
+    batch: &mut Vec<(Tokenized, mpsc::Sender<Result<Vec<f32>>>)>,
+    seq: usize,
+    dim: usize,
+    metrics: &Metrics,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let t0 = Instant::now();
+    let n = batch.len();
+    let bucket = match runtime.manifest().pick_bucket(n) {
+        Some(b) => b,
+        None => {
+            // Shouldn't happen (engine_loop caps at max_bucket); fail soft.
+            for (_, reply) in batch.drain(..) {
+                let _ = reply.send(Err(anyhow!("batch exceeds compiled buckets")));
+            }
+            metrics.errors.inc();
+            return;
+        }
+    };
+
+    // Pad to the bucket with empty rows.
+    let mut tokens = vec![0i32; bucket * seq];
+    let mut mask = vec![0f32; bucket * seq];
+    for (i, (t, _)) in batch.iter().enumerate() {
+        tokens[i * seq..(i + 1) * seq].copy_from_slice(&t.ids);
+        mask[i * seq..(i + 1) * seq].copy_from_slice(&t.mask);
+    }
+
+    match runtime.embed_batch(&tokens, &mask, bucket) {
+        Ok(flat) => {
+            // Record metrics BEFORE replying: callers may read counters as
+            // soon as their reply arrives (tests do exactly that).
+            metrics.embed_batches.inc();
+            metrics.embed_queries.add(n as u64);
+            metrics.embed_latency.record(t0.elapsed());
+            for (i, (_, reply)) in batch.drain(..).enumerate() {
+                let v = flat[i * dim..(i + 1) * dim].to_vec();
+                let _ = reply.send(Ok(v));
+            }
+        }
+        Err(e) => {
+            metrics.errors.inc();
+            let msg = format!("{e}");
+            for (_, reply) in batch.drain(..) {
+                let _ = reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+/// Blocking [`Embedder`] adapter over an [`EmbedHandle`].
+pub struct ServiceEmbedder {
+    handle: EmbedHandle,
+}
+
+impl ServiceEmbedder {
+    pub fn new(handle: EmbedHandle) -> Self {
+        ServiceEmbedder { handle }
+    }
+}
+
+impl Embedder for ServiceEmbedder {
+    fn dim(&self) -> usize {
+        self.handle.dim()
+    }
+
+    fn embed(&self, texts: &[&str]) -> Vec<Vec<f32>> {
+        self.handle
+            .embed_many(texts)
+            .unwrap_or_else(|_| texts.iter().map(|_| vec![0.0; self.handle.dim()]).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pure-rust fallback embedder
+
+/// Hashed bag-of-words random-projection embedder (test/bench fallback).
+///
+/// Each vocabulary word deterministically seeds a pseudo-random unit
+/// direction; a text embeds as the normalized sum of its word directions
+/// (with positional damping so word order matters slightly). Shares the
+/// tokenizer with the real path.
+#[derive(Debug, Clone)]
+pub struct HashEmbedder {
+    dim: usize,
+}
+
+impl HashEmbedder {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0);
+        HashEmbedder { dim }
+    }
+
+    fn word_direction(&self, id: i32, out: &mut [f32]) {
+        let mut rng = crate::util::Rng::with_stream(id as u64, 0xE19);
+        for x in out.iter_mut() {
+            *x = (rng.normal()) as f32;
+        }
+        l2_normalize(out);
+    }
+}
+
+impl Embedder for HashEmbedder {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn embed(&self, texts: &[&str]) -> Vec<Vec<f32>> {
+        let mut dir = vec![0f32; self.dim];
+        texts
+            .iter()
+            .map(|t| {
+                let tok = tokenizer::tokenize_default(t);
+                let mut v = vec![0f32; self.dim];
+                for (pos, (&id, &m)) in tok.ids.iter().zip(&tok.mask).enumerate() {
+                    if m == 0.0 {
+                        break;
+                    }
+                    self.word_direction(id, &mut dir);
+                    // light positional damping: later tokens weigh less
+                    let w = 1.0 / (1.0 + 0.02 * pos as f32);
+                    for (o, &d) in v.iter_mut().zip(dir.iter()) {
+                        *o += w * d;
+                    }
+                }
+                l2_normalize(&mut v);
+                v
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cosine;
+
+    #[test]
+    fn hash_embedder_unit_norm() {
+        let e = HashEmbedder::new(64);
+        let vs = e.embed(&["hello world", "", "one two three"]);
+        assert!((norm(&vs[0]) - 1.0).abs() < 1e-5);
+        assert_eq!(norm(&vs[1]), 0.0); // empty text -> zero vector
+        assert!((norm(&vs[2]) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hash_embedder_deterministic() {
+        let e = HashEmbedder::new(32);
+        assert_eq!(e.embed(&["alpha beta"]), e.embed(&["alpha beta"]));
+    }
+
+    #[test]
+    fn hash_embedder_token_overlap_similarity() {
+        let e = HashEmbedder::new(128);
+        let vs = e.embed(&[
+            "solve the quadratic equation for x",
+            "solve the linear equation for y",
+            "write a poem about autumn leaves",
+        ]);
+        let same_domain = cosine(&vs[0], &vs[1]);
+        let cross_domain = cosine(&vs[0], &vs[2]);
+        assert!(
+            same_domain > cross_domain + 0.1,
+            "same={same_domain} cross={cross_domain}"
+        );
+    }
+
+    #[test]
+    fn hash_embedder_case_insensitive() {
+        let e = HashEmbedder::new(32);
+        let vs = e.embed(&["Hello World", "hello world!"]);
+        assert!((cosine(&vs[0], &vs[1]) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn batcher_options_default() {
+        let o = BatcherOptions::default();
+        assert_eq!(o.max_batch, 32);
+        assert!(o.batch_window_us > 0);
+    }
+
+    fn norm(v: &[f32]) -> f32 {
+        v.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    // EmbedService integration tests (needing artifacts) live in
+    // rust/tests/runtime_integration.rs.
+}

@@ -1,0 +1,295 @@
+//! Experiment harness shared by the CLI, the examples, and every
+//! figure/table bench: build the benchmark, embed all prompts through the
+//! serving embedder, fit routers, evaluate curves.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::baselines::linalg::Matrix;
+use crate::baselines::TrainSet;
+use crate::config::{Config, DataParams, EagleParams};
+use crate::coordinator::policy::BudgetPolicy;
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::router::{EagleRouter, Observation};
+use crate::embedding::{BatcherOptions, EmbedService, Embedder, HashEmbedder, ServiceEmbedder};
+use crate::metrics::Metrics;
+use crate::routerbench::models::MODELS;
+use crate::routerbench::{gen, Benchmark, DatasetSplit};
+use crate::vectordb::flat::FlatStore;
+
+use super::CostQualityCurve;
+
+/// An embedder plus whatever service it needs kept alive.
+pub struct EmbedderRig {
+    /// Kept alive for the lifetime of the rig (engine thread).
+    _service: Option<EmbedService>,
+    embedder: Box<dyn Embedder>,
+    /// True when backed by the PJRT artifacts (serving path), false for
+    /// the pure-rust fallback.
+    pub is_pjrt: bool,
+}
+
+impl EmbedderRig {
+    /// PJRT-backed if `artifacts_dir` holds a manifest, otherwise the
+    /// HashEmbedder fallback (tests / artifact-less benches).
+    pub fn auto(artifacts_dir: &Path) -> EmbedderRig {
+        match EmbedService::start(
+            artifacts_dir,
+            BatcherOptions { batch_window_us: 100, max_batch: 32 },
+            Arc::new(Metrics::new()),
+        ) {
+            Ok(svc) => {
+                let handle = svc.handle();
+                EmbedderRig {
+                    embedder: Box::new(ServiceEmbedder::new(handle)),
+                    _service: Some(svc),
+                    is_pjrt: true,
+                }
+            }
+            Err(e) => {
+                eprintln!(
+                    "note: PJRT embedder unavailable ({e}); using HashEmbedder fallback"
+                );
+                EmbedderRig::hash()
+            }
+        }
+    }
+
+    /// Pure-rust fallback rig.
+    pub fn hash() -> EmbedderRig {
+        EmbedderRig {
+            _service: None,
+            embedder: Box::new(HashEmbedder::new(256)),
+            is_pjrt: false,
+        }
+    }
+
+    pub fn embedder(&self) -> &dyn Embedder {
+        self.embedder.as_ref()
+    }
+
+    /// Embed a batch of texts (chunked to keep reply queues bounded).
+    pub fn embed_texts(&self, texts: &[&str]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(texts.len());
+        for chunk in texts.chunks(256) {
+            out.extend(self.embedder.embed(chunk));
+        }
+        out
+    }
+}
+
+/// A fully-embedded benchmark: prompts + their vectors, per split.
+pub struct Experiment {
+    pub benchmark: Benchmark,
+    /// train_emb[split][i] = embedding of splits[split].train[i]
+    pub train_emb: Vec<Vec<Vec<f32>>>,
+    pub test_emb: Vec<Vec<Vec<f32>>>,
+    pub registry: ModelRegistry,
+    pub policy: BudgetPolicy,
+}
+
+impl Experiment {
+    /// Generate + embed the full benchmark.
+    pub fn build(params: &DataParams, rig: &EmbedderRig) -> Experiment {
+        let benchmark = gen::generate(params);
+        let mut train_emb = Vec::with_capacity(benchmark.splits.len());
+        let mut test_emb = Vec::with_capacity(benchmark.splits.len());
+        for split in &benchmark.splits {
+            let train_texts: Vec<&str> = split.train.iter().map(|s| s.text.as_str()).collect();
+            let test_texts: Vec<&str> = split.test.iter().map(|s| s.text.as_str()).collect();
+            train_emb.push(rig.embed_texts(&train_texts));
+            test_emb.push(rig.embed_texts(&test_texts));
+        }
+        let registry = ModelRegistry::routerbench();
+        let policy = BudgetPolicy::new(&registry);
+        Experiment { benchmark, train_emb, test_emb, registry, policy }
+    }
+
+    pub fn n_models(&self) -> usize {
+        MODELS.len()
+    }
+
+    pub fn split(&self, idx: usize) -> &DatasetSplit {
+        &self.benchmark.splits[idx]
+    }
+
+    /// Regression training set (baselines) over the first `frac` of the
+    /// train split (1.0 = all).
+    pub fn train_set(&self, split: usize, frac: f64) -> TrainSet {
+        let s = &self.benchmark.splits[split];
+        let n = ((s.train.len() as f64) * frac).round() as usize;
+        let n = n.min(s.train.len()).max(1);
+        let emb: Vec<Vec<f32>> = self.train_emb[split][..n].to_vec();
+        let qual: Vec<Vec<f32>> = s.train[..n].iter().map(|x| x.quality.clone()).collect();
+        TrainSet::new(Matrix::from_rows(&emb), Matrix::from_rows(&qual))
+    }
+
+    /// Feedback-supervision training set (the paper's online protocol):
+    /// labels exist only for the models compared on each prompt — win=1,
+    /// loss=0, draw=0.5 — exactly the information Eagle's ELO consumes.
+    /// Multiple comparisons touching the same (prompt, model) average.
+    pub fn train_set_feedback(&self, split: usize, frac: f64) -> TrainSet {
+        let s = &self.benchmark.splits[split];
+        let n = ((s.train.len() as f64) * frac).round() as usize;
+        let n = n.min(s.train.len()).max(1);
+        let m = MODELS.len();
+        let mut label_sum = vec![0.0f32; n * m];
+        let mut label_cnt = vec![0.0f32; n * m];
+        for f in &s.feedback {
+            if f.sample >= n {
+                continue;
+            }
+            let sa = f.comparison.outcome.score_a() as f32;
+            label_sum[f.sample * m + f.comparison.a] += sa;
+            label_cnt[f.sample * m + f.comparison.a] += 1.0;
+            label_sum[f.sample * m + f.comparison.b] += 1.0 - sa;
+            label_cnt[f.sample * m + f.comparison.b] += 1.0;
+        }
+        let emb: Vec<Vec<f32>> = self.train_emb[split][..n].to_vec();
+        let mut qualities = Matrix::zeros(n, m);
+        let mut mask = Matrix::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                let c = label_cnt[i * m + j];
+                if c > 0.0 {
+                    *qualities.at_mut(i, j) = label_sum[i * m + j] / c;
+                    *mask.at_mut(i, j) = 1.0;
+                }
+            }
+        }
+        TrainSet::new_masked(Matrix::from_rows(&emb), qualities, mask)
+    }
+
+    /// Eagle observations from the feedback stream: records whose sample
+    /// index falls inside the first `frac` of the train split, grouped per
+    /// prompt (the vector DB stores one entry per prompt holding all of
+    /// its pairwise records).
+    pub fn observations(&self, split: usize, frac: f64) -> Vec<Observation> {
+        let s = &self.benchmark.splits[split];
+        let n = ((s.train.len() as f64) * frac).round() as usize;
+        let mut per_prompt: Vec<Vec<crate::elo::Comparison>> = vec![Vec::new(); n];
+        for f in &s.feedback {
+            if f.sample < n {
+                per_prompt[f.sample].push(f.comparison);
+            }
+        }
+        per_prompt
+            .into_iter()
+            .enumerate()
+            .filter(|(_, c)| !c.is_empty())
+            .map(|(i, comparisons)| Observation {
+                embedding: self.train_emb[split][i].clone(),
+                comparisons,
+            })
+            .collect()
+    }
+
+    /// Fit an Eagle router on a feedback prefix of one dataset.
+    pub fn fit_eagle(&self, split: usize, params: EagleParams, frac: f64) -> EagleRouter<FlatStore> {
+        let dim = self.train_emb[split].first().map(|v| v.len()).unwrap_or(256);
+        let obs = self.observations(split, frac);
+        EagleRouter::fit(params, self.n_models(), FlatStore::with_capacity(dim, obs.len()), &obs)
+    }
+
+    /// Evaluate a router on one dataset's test split.
+    pub fn eval(&self, router: &dyn crate::coordinator::Router, split: usize) -> CostQualityCurve {
+        super::evaluate_router(
+            router,
+            &self.benchmark.splits[split].test,
+            &self.test_emb[split],
+            &self.policy,
+            crate::routerbench::DATASETS[self.benchmark.splits[split].dataset],
+        )
+    }
+}
+
+/// Build the default experiment from a [`Config`] (shared CLI/bench entry).
+pub fn default_experiment(cfg: &Config) -> Result<(EmbedderRig, Experiment)> {
+    let rig = EmbedderRig::auto(Path::new(&cfg.embed.artifacts_dir));
+    let exp = Experiment::build(&cfg.data, &rig);
+    Ok((rig, exp))
+}
+
+/// Smaller data params for fast benches (documented in EXPERIMENTS.md).
+pub fn bench_data_params(seed: u64, per_dataset: usize) -> DataParams {
+    DataParams {
+        seed,
+        per_dataset,
+        train_fraction: 0.7,
+        comparisons_per_prompt: 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_exp() -> Experiment {
+        let rig = EmbedderRig::hash();
+        Experiment::build(&bench_data_params(3, 120), &rig)
+    }
+
+    #[test]
+    fn build_embeds_every_prompt() {
+        let exp = small_exp();
+        for (si, split) in exp.benchmark.splits.iter().enumerate() {
+            assert_eq!(exp.train_emb[si].len(), split.train.len());
+            assert_eq!(exp.test_emb[si].len(), split.test.len());
+        }
+    }
+
+    #[test]
+    fn train_set_fraction() {
+        let exp = small_exp();
+        let full = exp.train_set(0, 1.0);
+        let half = exp.train_set(0, 0.5);
+        assert_eq!(full.len(), exp.split(0).train.len());
+        assert_eq!(half.len(), exp.split(0).train.len() / 2);
+    }
+
+    #[test]
+    fn observations_respect_prefix() {
+        let exp = small_exp();
+        let all = exp.observations(0, 1.0);
+        let some = exp.observations(0, 0.5);
+        assert!(some.len() < all.len());
+        // one observation per prompt, carrying all of its comparisons
+        assert_eq!(all.len(), exp.split(0).train.len());
+        let total: usize = all.iter().map(|o| o.comparisons.len()).sum();
+        assert_eq!(total, exp.split(0).feedback.len());
+    }
+
+    #[test]
+    fn fit_and_eval_eagle_runs() {
+        let exp = small_exp();
+        let router = exp.fit_eagle(0, EagleParams::default(), 1.0);
+        let curve = exp.eval(&router, 0);
+        assert!(!curve.points.is_empty());
+        let auc = curve.auc();
+        assert!((0.0..=1.0).contains(&auc), "auc = {auc}");
+    }
+
+    #[test]
+    fn eagle_beats_random_scores_on_synthetic() {
+        use crate::coordinator::Router;
+        struct RandomRouter;
+        impl Router for RandomRouter {
+            fn name(&self) -> String {
+                "random".into()
+            }
+            fn scores(&self, q: &[f32]) -> Vec<f64> {
+                // arbitrary but query-dependent noise
+                (0..MODELS.len())
+                    .map(|m| (q[m % q.len()] as f64 * 1000.0).sin())
+                    .collect()
+            }
+        }
+        let exp = small_exp();
+        let eagle = exp.fit_eagle(0, EagleParams::default(), 1.0);
+        let e_auc = exp.eval(&eagle, 0).auc();
+        let r_auc = exp.eval(&RandomRouter, 0).auc();
+        assert!(e_auc > r_auc, "eagle {e_auc} vs random {r_auc}");
+    }
+}

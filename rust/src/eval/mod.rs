@@ -1,0 +1,276 @@
+//! Evaluation harness: the paper's §3 protocol.
+//!
+//! For each router and dataset: sweep willingness-to-pay levels, route
+//! every test prompt under each budget, and record (mean $ cost, mean
+//! quality). The **AUC** is the trapezoidal integral of quality over the
+//! *normalized* cost axis — "a router's average performance across all
+//! cost scenarios" (Fig 2b). Also computes the non-decreasing convex
+//! envelope RouterBench uses so pathological routers don't get credit for
+//! spending more and scoring less.
+
+pub mod harness;
+
+use crate::coordinator::policy::BudgetPolicy;
+use crate::coordinator::Router;
+use crate::routerbench::Sample;
+use crate::util::trapezoid_auc;
+
+/// One point on a router's cost-quality curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    pub budget: f64,
+    pub mean_cost: f64,
+    pub mean_quality: f64,
+}
+
+/// A router's full cost-quality curve on one dataset.
+#[derive(Debug, Clone)]
+pub struct CostQualityCurve {
+    pub router: String,
+    pub dataset: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl CostQualityCurve {
+    /// Non-decreasing quality envelope over increasing cost: for every
+    /// point, the best quality achievable at or below that cost.
+    pub fn envelope(&self) -> Vec<(f64, f64)> {
+        let mut pts: Vec<(f64, f64)> =
+            self.points.iter().map(|p| (p.mean_cost, p.mean_quality)).collect();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut best = f64::MIN;
+        for p in &mut pts {
+            best = best.max(p.1);
+            p.1 = best;
+        }
+        pts
+    }
+
+    /// AUC: trapezoidal integral of mean quality over the
+    /// willingness-to-pay axis, normalized by the budget span (paper Fig
+    /// 2a/2b: "average performance across all cost scenarios"). All
+    /// routers on a dataset share the same budget sweep, so AUCs are
+    /// directly comparable and the per-sample oracle provably dominates.
+    pub fn auc(&self) -> f64 {
+        if self.points.len() < 2 {
+            return self.points.first().map(|p| p.mean_quality).unwrap_or(0.0);
+        }
+        let pts: Vec<(f64, f64)> =
+            self.points.iter().map(|p| (p.budget, p.mean_quality)).collect();
+        let span = pts.last().unwrap().0 - pts.first().unwrap().0;
+        if span <= 0.0 {
+            return pts.last().unwrap().1;
+        }
+        trapezoid_auc(&pts) / span
+    }
+}
+
+/// Evaluate one router on one dataset's test split.
+///
+/// `embeddings[i]` must be the embedding of `test[i]`'s prompt.
+pub fn evaluate_router(
+    router: &dyn Router,
+    test: &[Sample],
+    embeddings: &[Vec<f32>],
+    policy: &BudgetPolicy,
+    dataset: &str,
+) -> CostQualityCurve {
+    assert_eq!(test.len(), embeddings.len(), "embedding/sample mismatch");
+    let budgets = policy.budget_sweep();
+    let mut points = Vec::with_capacity(budgets.len());
+
+    // score each test prompt once; selection per budget reuses the scores
+    let scores: Vec<Vec<f64>> = embeddings.iter().map(|e| router.scores(e)).collect();
+
+    for &budget in &budgets {
+        let mut cost_sum = 0.0f64;
+        let mut quality_sum = 0.0f64;
+        for (sample, score) in test.iter().zip(&scores) {
+            let choice = policy.select(score, budget);
+            cost_sum += sample.cost[choice] as f64;
+            quality_sum += sample.quality[choice] as f64;
+        }
+        let n = test.len().max(1) as f64;
+        points.push(CurvePoint {
+            budget,
+            mean_cost: cost_sum / n,
+            mean_quality: quality_sum / n,
+        });
+    }
+    CostQualityCurve { router: router.name(), dataset: dataset.to_string(), points }
+}
+
+/// Reference curves: the oracle (per-sample best affordable model) and each
+/// single model, for context in reports.
+pub fn oracle_curve(test: &[Sample], policy: &BudgetPolicy, dataset: &str) -> CostQualityCurve {
+    let budgets = policy.budget_sweep();
+    let mut points = Vec::with_capacity(budgets.len());
+    for &budget in &budgets {
+        let mut cost_sum = 0.0;
+        let mut quality_sum = 0.0;
+        for s in test {
+            // oracle: best quality among affordable; ties -> cheapest
+            let mut best: Option<usize> = None;
+            for m in 0..s.quality.len() {
+                if policy.costs()[m] > budget {
+                    continue;
+                }
+                best = match best {
+                    None => Some(m),
+                    Some(b) => {
+                        if s.quality[m] > s.quality[b]
+                            || (s.quality[m] == s.quality[b]
+                                && s.cost[m] < s.cost[b])
+                        {
+                            Some(m)
+                        } else {
+                            Some(b)
+                        }
+                    }
+                };
+            }
+            let choice = best.unwrap_or_else(|| policy.cheapest());
+            cost_sum += s.cost[choice] as f64;
+            quality_sum += s.quality[choice] as f64;
+        }
+        let n = test.len().max(1) as f64;
+        points.push(CurvePoint {
+            budget,
+            mean_cost: cost_sum / n,
+            mean_quality: quality_sum / n,
+        });
+    }
+    CostQualityCurve { router: "oracle".into(), dataset: dataset.into(), points }
+}
+
+/// Mean quality and cost of always using one model (row for reports).
+pub fn single_model_point(test: &[Sample], model: usize) -> (f64, f64) {
+    let n = test.len().max(1) as f64;
+    let cost = test.iter().map(|s| s.cost[model] as f64).sum::<f64>() / n;
+    let quality = test.iter().map(|s| s.quality[model] as f64).sum::<f64>() / n;
+    (cost, quality)
+}
+
+/// Summed AUC across datasets (the paper's headline aggregate).
+pub fn summed_auc(curves: &[CostQualityCurve]) -> f64 {
+    curves.iter().map(|c| c.auc()).sum()
+}
+
+/// Percentage improvement of `ours` over `baseline`.
+pub fn improvement_pct(ours: f64, baseline: f64) -> f64 {
+    if baseline == 0.0 {
+        0.0
+    } else {
+        (ours - baseline) / baseline * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Router;
+
+    struct FixedRouter(Vec<f64>);
+
+    impl Router for FixedRouter {
+        fn name(&self) -> String {
+            "fixed".into()
+        }
+        fn scores(&self, _q: &[f32]) -> Vec<f64> {
+            self.0.clone()
+        }
+    }
+
+    fn mk_samples() -> Vec<Sample> {
+        // 2 models: model 0 cheap/bad, model 1 pricey/good
+        (0..10)
+            .map(|i| Sample {
+                dataset: 0,
+                topic: 0,
+                text: format!("q{i}"),
+                difficulty: 0.5,
+                quality: vec![0.2, 0.9],
+                cost: vec![0.001, 0.01],
+            })
+            .collect()
+    }
+
+    fn mk_embeddings(n: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| vec![1.0, 0.0]).collect()
+    }
+
+    #[test]
+    fn curve_shape_quality_rises_with_budget() {
+        let samples = mk_samples();
+        let policy = BudgetPolicy::from_costs(vec![0.001, 0.01]);
+        let router = FixedRouter(vec![0.2, 0.9]);
+        let curve =
+            evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "test");
+        let q_low = curve.points.first().unwrap().mean_quality;
+        let q_high = curve.points.last().unwrap().mean_quality;
+        assert!(q_low < q_high);
+        assert!((q_high - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn auc_between_extremes() {
+        let samples = mk_samples();
+        let policy = BudgetPolicy::from_costs(vec![0.001, 0.01]);
+        let router = FixedRouter(vec![0.2, 0.9]);
+        let curve =
+            evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "test");
+        let auc = curve.auc();
+        assert!(auc > 0.2 && auc <= 0.9, "auc = {auc}");
+    }
+
+    #[test]
+    fn envelope_is_nondecreasing() {
+        let c = CostQualityCurve {
+            router: "x".into(),
+            dataset: "d".into(),
+            points: vec![
+                CurvePoint { budget: 1.0, mean_cost: 1.0, mean_quality: 0.5 },
+                CurvePoint { budget: 2.0, mean_cost: 2.0, mean_quality: 0.3 },
+                CurvePoint { budget: 3.0, mean_cost: 3.0, mean_quality: 0.8 },
+            ],
+        };
+        let env = c.envelope();
+        assert_eq!(env[1].1, 0.5); // lifted from 0.3
+        assert_eq!(env[2].1, 0.8);
+    }
+
+    #[test]
+    fn oracle_at_least_as_good_as_any_router() {
+        let samples = mk_samples();
+        let policy = BudgetPolicy::from_costs(vec![0.001, 0.01]);
+        let router = FixedRouter(vec![0.9, 0.2]); // deliberately wrong
+        let rc = evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "t");
+        let oc = oracle_curve(&samples, &policy, "t");
+        assert!(oc.auc() >= rc.auc() - 1e-9);
+    }
+
+    #[test]
+    fn single_model_point_means() {
+        let samples = mk_samples();
+        let (c, q) = single_model_point(&samples, 1);
+        assert!((c - 0.01).abs() < 1e-6);
+        assert!((q - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn improvement_pct_math() {
+        assert!((improvement_pct(1.2, 1.0) - 20.0).abs() < 1e-9);
+        assert_eq!(improvement_pct(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn summed_auc_adds() {
+        let samples = mk_samples();
+        let policy = BudgetPolicy::from_costs(vec![0.001, 0.01]);
+        let router = FixedRouter(vec![0.2, 0.9]);
+        let c1 = evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "a");
+        let c2 = c1.clone();
+        let total = summed_auc(&[c1.clone(), c2]);
+        assert!((total - 2.0 * c1.auc()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,42 @@
+//! # Eagle — Efficient Training-Free Router for Multi-LLM Inference
+//!
+//! A rust + JAX + Pallas reproduction of *Eagle* (Zhao, Jin, Mao 2024):
+//! a serving-side router that picks, per query and per budget, the LLM
+//! expected to give the best answer, using a **global** ELO ranking over
+//! all pairwise user feedback combined with a **local** ELO computed from
+//! the N nearest historical queries by embedding similarity:
+//!
+//! ```text
+//! Score(X) = P * Global(X) + (1 - P) * Local(X)
+//! ```
+//!
+//! ## Architecture (three layers, python never serves)
+//!
+//! - **Layer 3 (this crate)** — the serving coordinator: request routing,
+//!   dynamic embed batching, vector database, ELO engines, budget policy,
+//!   feedback ingestion, baselines, evaluation harness, TCP front-end.
+//! - **Layer 2** — `python/compile/model.py`: the MiniStella JAX encoder,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`.
+//! - **Layer 1** — `python/compile/kernels/`: Pallas flash-attention and
+//!   similarity kernels inside the lowered HLO.
+//!
+//! The [`runtime`] module loads the HLO artifacts via the PJRT C API and
+//! executes them on the request path. See DESIGN.md for the experiment
+//! index and EXPERIMENTS.md for measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod elo;
+pub mod embedding;
+pub mod eval;
+pub mod runtime;
+pub mod json;
+pub mod metrics;
+pub mod routerbench;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod vectordb;

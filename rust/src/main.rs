@@ -1,0 +1,12 @@
+//! `eagle` binary: CLI entry point (see [`eagle::cli`]).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match eagle::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

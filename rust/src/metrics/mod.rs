@@ -1,0 +1,285 @@
+//! Serving metrics: counters and log-bucketed latency histograms.
+//!
+//! Lock-free on the hot path (atomics only); snapshots are consistent
+//! enough for reporting. The histogram uses power-of-two-ish log buckets
+//! (HdrHistogram-style, 4 sub-buckets per octave) over microseconds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of histogram buckets: covers ~1us to ~1.2e9 us (20 min).
+const N_BUCKETS: usize = 128;
+const SUB_BUCKETS_LOG2: u32 = 2; // 4 sub-buckets per octave
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter { value: AtomicU64::new(0) }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram over microsecond samples.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // log-bucket with 2^SUB_BUCKETS_LOG2 sub-buckets per octave
+        let v = us.max(1);
+        let octave = 63 - v.leading_zeros();
+        let sub = if octave >= SUB_BUCKETS_LOG2 {
+            ((v >> (octave - SUB_BUCKETS_LOG2)) & ((1 << SUB_BUCKETS_LOG2) - 1)) as usize
+        } else {
+            0
+        };
+        (((octave as usize) << SUB_BUCKETS_LOG2) + sub).min(N_BUCKETS - 1)
+    }
+
+    /// Representative (upper-bound) value of a bucket, in microseconds.
+    fn bucket_value(idx: usize) -> u64 {
+        let octave = (idx >> SUB_BUCKETS_LOG2) as u32;
+        let sub = (idx & ((1 << SUB_BUCKETS_LOG2) - 1)) as u64;
+        if octave < SUB_BUCKETS_LOG2 {
+            return 1u64 << octave;
+        }
+        let base = 1u64 << octave;
+        base + ((sub + 1) * (base >> SUB_BUCKETS_LOG2)) - 1
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Record a `Duration`.
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (0.0..=1.0) from the bucket histogram.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_value(i).min(self.max_us());
+            }
+        }
+        self.max_us()
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={}us p90={}us p99={}us max={}us",
+            self.count(),
+            self.mean_us(),
+            self.quantile_us(0.50),
+            self.quantile_us(0.90),
+            self.quantile_us(0.99),
+            self.max_us(),
+        )
+    }
+}
+
+/// Metrics registry for the serving stack.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: Counter,
+    pub feedback: Counter,
+    pub embed_batches: Counter,
+    pub embed_queries: Counter,
+    pub route_latency: Histogram,
+    pub embed_latency: Histogram,
+    pub search_latency: Histogram,
+    pub errors: Counter,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Multi-line report for logs / the stats endpoint.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} feedback={} errors={}\n\
+             embed: batches={} queries={} avg_batch={:.2}\n\
+             route_latency: {}\n\
+             embed_latency: {}\n\
+             search_latency: {}",
+            self.requests.get(),
+            self.feedback.get(),
+            self.errors.get(),
+            self.embed_batches.get(),
+            self.embed_queries.get(),
+            self.embed_queries.get() as f64 / self.embed_batches.get().max(1) as f64,
+            self.route_latency.summary(),
+            self.embed_latency.summary(),
+            self.search_latency.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn histogram_single_sample() {
+        let h = Histogram::new();
+        h.record_us(100);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean_us(), 100.0);
+        assert_eq!(h.max_us(), 100);
+        // quantile is bucket-quantized but capped at max
+        assert!(h.quantile_us(0.5) <= 100);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record_us(i);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p90 = h.quantile_us(0.9);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // log-buckets: p50 within a factor of ~1.35 of the true median
+        assert!((3500..=7000).contains(&p50), "p50={p50}");
+        assert!(p99 <= h.max_us());
+    }
+
+    #[test]
+    fn bucket_of_monotone() {
+        let mut prev = 0;
+        for us in [1u64, 2, 3, 5, 10, 100, 1_000, 65_536, 1_000_000] {
+            let b = Histogram::bucket_of(us);
+            assert!(b >= prev, "bucket({us}) = {b} < {prev}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bucket_value_covers_bucket_of() {
+        for us in [1u64, 7, 63, 64, 65, 999, 123_456] {
+            let idx = Histogram::bucket_of(us);
+            assert!(Histogram::bucket_value(idx) >= us, "us={us} idx={idx}");
+        }
+    }
+
+    #[test]
+    fn zero_latency_recorded() {
+        let h = Histogram::new();
+        h.record_us(0);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn metrics_report_contains_sections() {
+        let m = Metrics::new();
+        m.requests.inc();
+        m.route_latency.record_us(42);
+        let r = m.report();
+        assert!(r.contains("requests=1"));
+        assert!(r.contains("route_latency"));
+    }
+
+    #[test]
+    fn histogram_concurrent_recording() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record_us(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

@@ -1,0 +1,510 @@
+//! Deterministic generator for the synthetic RouterBench benchmark.
+//!
+//! See the module docs in [`super`] for the statistical design. The load-
+//! bearing properties (checked by tests):
+//!
+//! 1. same-(dataset, topic) prompts share keyword tokens => they cluster
+//!    under any token-overlap-preserving embedder (MiniStella, HashEmbedder);
+//! 2. model quality orderings differ *across* datasets and *across* topics
+//!    within a dataset — routing has signal to find;
+//! 3. quality is a noisy draw per sample — routers must generalize, not
+//!    memorize;
+//! 4. the whole benchmark is a pure function of `DataParams`.
+
+use crate::config::DataParams;
+use crate::util::Rng;
+
+use super::models::{ModelSpec, MODELS};
+use super::{
+    outcome_from_quality, Benchmark, DatasetSplit, FeedbackRecord, Sample, DATASETS,
+    TOPICS_PER_DATASET,
+};
+use crate::elo::Comparison;
+
+/// Per-dataset prompt scaffolding: (prefix pool, suffix pool).
+const PREFIXES: &[(&str, &[&str], &[&str])] = &[
+    (
+        "mmlu",
+        &[
+            "Which of the following statements about",
+            "According to standard theory, the correct answer regarding",
+            "Choose the best option concerning",
+            "In an exam question about",
+        ],
+        &["is correct?", "best explains the phenomenon?", "holds true?", "applies here?"],
+    ),
+    (
+        "hellaswag",
+        &[
+            "Finish the sentence naturally:",
+            "What happens next in this scene about",
+            "Pick the most plausible continuation involving",
+            "Complete this everyday situation about",
+        ],
+        &["in the most sensible way", "so the story flows", "given common sense", "naturally"],
+    ),
+    (
+        "gsm8k",
+        &[
+            "Solve this word problem about",
+            "A grade school math question involving",
+            "Compute the answer step by step for",
+            "Work out the arithmetic in this story about",
+        ],
+        &["show your reasoning", "give the final number", "explain each step", "what is the total?"],
+    ),
+    (
+        "arc-challenge",
+        &[
+            "A science exam question about",
+            "Which scientific principle explains",
+            "Reason about this grade school science item on",
+            "Select the correct science answer about",
+        ],
+        &["choose one option", "justify briefly", "which is right?", "pick the best answer"],
+    ),
+    (
+        "winogrande",
+        &[
+            "Resolve the pronoun in this sentence about",
+            "Who does 'they' refer to in the scenario about",
+            "Fill in the blank with the right entity:",
+            "Commonsense coreference puzzle involving",
+        ],
+        &["explain the reference", "which entity fits?", "resolve the ambiguity", "pick the referent"],
+    ),
+    (
+        "mbpp",
+        &[
+            "Write a python function that",
+            "Implement code to",
+            "Complete this programming task:",
+            "Produce a short python snippet that",
+        ],
+        &["include a docstring", "handle edge cases", "return the result", "with unit tests"],
+    ),
+    (
+        "mt-bench",
+        &[
+            "In a multi turn conversation, the user asks about",
+            "Compose a helpful assistant reply concerning",
+            "Follow up thoughtfully on a question about",
+            "Draft a detailed yet concise response about",
+        ],
+        &["address the follow up", "keep the tone friendly", "structure the answer", "be specific"],
+    ),
+];
+
+/// Topic keyword banks: TOPICS_PER_DATASET topics x 4 keywords, per dataset.
+/// Keywords are the cluster anchors — every prompt from a topic includes
+/// 2–3 of them.
+const TOPIC_KEYWORDS: &[&[&[&str]]] = &[
+    // mmlu
+    &[
+        &["anatomy", "organ", "tissue", "physiology"],
+        &["astronomy", "planet", "orbit", "telescope"],
+        &["microeconomics", "market", "elasticity", "demand"],
+        &["jurisprudence", "statute", "precedent", "liability"],
+        &["virology", "pathogen", "vaccine", "antibody"],
+        &["philosophy", "ethics", "epistemology", "metaphysics"],
+        &["electrical", "circuit", "voltage", "resistor"],
+        &["geography", "climate", "continent", "biome"],
+    ],
+    // hellaswag
+    &[
+        &["cooking", "kitchen", "recipe", "oven"],
+        &["skateboard", "ramp", "trick", "helmet"],
+        &["gardening", "soil", "seedling", "watering"],
+        &["swimming", "pool", "stroke", "goggles"],
+        &["camping", "tent", "campfire", "sleeping"],
+        &["haircut", "salon", "scissors", "stylist"],
+        &["fishing", "rod", "bait", "riverbank"],
+        &["painting", "canvas", "brush", "easel"],
+    ],
+    // gsm8k
+    &[
+        &["apples", "baskets", "orchard", "dozen"],
+        &["train", "speed", "distance", "hours"],
+        &["allowance", "savings", "dollars", "weekly"],
+        &["bakery", "loaves", "flour", "batches"],
+        &["marbles", "bags", "shared", "friends"],
+        &["fence", "perimeter", "meters", "posts"],
+        &["tickets", "concert", "rows", "seats"],
+        &["paint", "gallons", "walls", "coats"],
+    ],
+    // arc-challenge
+    &[
+        &["photosynthesis", "chlorophyll", "sunlight", "glucose"],
+        &["magnets", "poles", "attract", "repel"],
+        &["erosion", "sediment", "weathering", "riverbed"],
+        &["food", "chain", "predator", "herbivore"],
+        &["states", "matter", "evaporation", "condensation"],
+        &["inheritance", "traits", "genes", "offspring"],
+        &["gravity", "mass", "acceleration", "falling"],
+        &["volcano", "magma", "eruption", "crust"],
+    ],
+    // winogrande
+    &[
+        &["trophy", "suitcase", "fit", "because"],
+        &["doctor", "patient", "appointment", "because"],
+        &["neighbor", "ladder", "borrowed", "because"],
+        &["teacher", "student", "homework", "because"],
+        &["waiter", "customer", "order", "because"],
+        &["plumber", "homeowner", "leak", "because"],
+        &["coach", "player", "practice", "because"],
+        &["librarian", "visitor", "book", "because"],
+    ],
+    // mbpp
+    &[
+        &["sort", "list", "ascending", "integers"],
+        &["string", "reverse", "palindrome", "characters"],
+        &["dictionary", "keys", "merge", "values"],
+        &["prime", "factorial", "number", "compute"],
+        &["matrix", "transpose", "rows", "columns"],
+        &["file", "read", "lines", "parse"],
+        &["regex", "match", "pattern", "extract"],
+        &["recursion", "fibonacci", "sequence", "memoize"],
+    ],
+    // mt-bench
+    &[
+        &["travel", "itinerary", "hawaii", "attractions"],
+        &["resume", "career", "interview", "skills"],
+        &["startup", "pitch", "investors", "revenue"],
+        &["nutrition", "diet", "protein", "meals"],
+        &["novel", "plot", "character", "chapter"],
+        &["economics", "inflation", "policy", "rates"],
+        &["parenting", "toddler", "routine", "bedtime"],
+        &["chess", "opening", "strategy", "endgame"],
+    ],
+];
+
+/// Small shared filler pool plus an unbounded pseudo-word generator.
+///
+/// Real prompts carry heavy prompt-specific vocabulary (names, numbers,
+/// phrasing) that embeds as per-prompt noise on top of the topical signal;
+/// a tiny closed filler pool would make topic clusters unrealistically
+/// clean and per-query regression unrealistically easy. `gibberish`
+/// produces deterministic unique words, emulating that long tail.
+const FILLERS: &[&str] = &[
+    "please", "carefully", "consider", "the", "given", "details", "and", "provide",
+    "an", "answer", "that", "is", "clear", "complete", "correct", "for", "this",
+    "specific", "case", "with", "all", "relevant", "information", "included",
+];
+
+/// A deterministic pseudo-word of 3-8 lowercase letters.
+fn gibberish(rng: &mut Rng) -> String {
+    let len = 3 + rng.below(6);
+    (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+/// Latent per-(model, dataset, topic) skill table.
+#[derive(Debug, Clone)]
+pub struct SkillTable {
+    /// [model][dataset][topic] -> skill in [0,1]
+    skills: Vec<Vec<Vec<f64>>>,
+}
+
+impl SkillTable {
+    /// Deterministic skills: spec base + per-topic affinity noise.
+    pub fn generate(seed: u64) -> SkillTable {
+        let mut root = Rng::with_stream(seed, 0x5111);
+        let mut skills = Vec::with_capacity(MODELS.len());
+        for (mi, spec) in MODELS.iter().enumerate() {
+            let mut per_ds = Vec::with_capacity(DATASETS.len());
+            for (di, ds) in DATASETS.iter().enumerate() {
+                let mut rng = root.fork((mi * 64 + di) as u64);
+                let base = spec.skill_on(ds);
+                let topics = (0..TOPICS_PER_DATASET)
+                    .map(|_| (base + 0.12 * rng.normal()).clamp(0.02, 0.98))
+                    .collect();
+                per_ds.push(topics);
+            }
+            skills.push(per_ds);
+        }
+        SkillTable { skills }
+    }
+
+    pub fn skill(&self, model: usize, dataset: usize, topic: usize) -> f64 {
+        self.skills[model][dataset][topic]
+    }
+}
+
+/// Generate one prompt for (dataset, topic).
+fn gen_prompt(rng: &mut Rng, dataset: usize, topic: usize) -> String {
+    let (_, prefixes, suffixes) = PREFIXES[dataset];
+    let keywords = TOPIC_KEYWORDS[dataset][topic];
+    let mut text = String::new();
+    text.push_str(*rng.choose(prefixes));
+    // 2-3 topic keywords anchor the cluster
+    let n_kw = 2 + rng.below(2);
+    for &i in rng.sample_indices(keywords.len(), n_kw).iter() {
+        text.push(' ');
+        text.push_str(keywords[i]);
+    }
+    // 2-4 shared filler words + 2-4 prompt-specific pseudo-words
+    for _ in 0..(2 + rng.below(3)) {
+        text.push(' ');
+        text.push_str(*rng.choose(FILLERS));
+    }
+    for _ in 0..(2 + rng.below(3)) {
+        text.push(' ');
+        let w = gibberish(rng);
+        text.push_str(&w);
+    }
+    text.push(' ');
+    text.push_str(*rng.choose(suffixes));
+    text
+}
+
+/// Draw the observed quality of `spec` on a sample.
+fn draw_quality(
+    rng: &mut Rng,
+    spec: &ModelSpec,
+    skill: f64,
+    difficulty: f64,
+    binary: bool,
+) -> f32 {
+    let _ = spec;
+    let p = (skill + 0.45 - 0.90 * difficulty + 0.05 * rng.normal()).clamp(0.0, 1.0);
+    if binary {
+        if rng.chance(p) {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        (p + 0.10 * rng.normal()).clamp(0.0, 1.0) as f32
+    }
+}
+
+/// Draw the observed $ cost of `spec` on one query.
+fn draw_cost(rng: &mut Rng, spec: &ModelSpec) -> f32 {
+    let sigma = 0.30;
+    let mu = spec.mean_tokens.ln() - sigma * sigma / 2.0;
+    let tokens = rng.log_normal(mu, sigma);
+    (spec.price_per_mtok * tokens / 1e6) as f32
+}
+
+/// Generate the full benchmark from `params`.
+pub fn generate(params: &DataParams) -> Benchmark {
+    let skill_table = SkillTable::generate(params.seed);
+    let mut root = Rng::with_stream(params.seed, 0xBE7C);
+    let n_models = MODELS.len();
+
+    let mut splits = Vec::with_capacity(DATASETS.len());
+    for (di, ds_name) in DATASETS.iter().enumerate() {
+        let binary = *ds_name != "mt-bench";
+        let mut rng = root.fork(di as u64 + 1);
+
+        // --- samples ---
+        let mut samples = Vec::with_capacity(params.per_dataset);
+        for _ in 0..params.per_dataset {
+            let topic = rng.below(TOPICS_PER_DATASET);
+            let text = gen_prompt(&mut rng, di, topic);
+            // difficulty: uniform, wide — unpredictable from the prompt text
+            let difficulty = rng.f64();
+            let mut quality = Vec::with_capacity(n_models);
+            let mut cost = Vec::with_capacity(n_models);
+            for (mi, spec) in MODELS.iter().enumerate() {
+                let skill = skill_table.skill(mi, di, topic);
+                quality.push(draw_quality(&mut rng, spec, skill, difficulty, binary));
+                cost.push(draw_cost(&mut rng, spec));
+            }
+            samples.push(Sample { dataset: di, topic, text, difficulty, quality, cost });
+        }
+        rng.shuffle(&mut samples);
+
+        // --- split ---
+        let n_train = ((samples.len() as f64) * params.train_fraction).round() as usize;
+        let test = samples.split_off(n_train);
+        let train = samples;
+
+        // --- pairwise feedback over train, in stream order ---
+        let mut feedback = Vec::with_capacity(train.len() * params.comparisons_per_prompt);
+        for (si, s) in train.iter().enumerate() {
+            for _ in 0..params.comparisons_per_prompt {
+                let a = rng.below(n_models);
+                let mut b = rng.below(n_models - 1);
+                if b >= a {
+                    b += 1;
+                }
+                let outcome = outcome_from_quality(s.quality[a], s.quality[b]);
+                feedback.push(FeedbackRecord {
+                    sample: si,
+                    comparison: Comparison { a, b, outcome },
+                });
+            }
+        }
+
+        splits.push(DatasetSplit { dataset: di, train, test, feedback });
+    }
+    Benchmark { splits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routerbench::models::model_index;
+
+    fn small_params() -> DataParams {
+        DataParams { seed: 42, per_dataset: 200, train_fraction: 0.7, comparisons_per_prompt: 3 }
+    }
+
+    #[test]
+    fn static_tables_consistent() {
+        assert_eq!(PREFIXES.len(), DATASETS.len());
+        assert_eq!(TOPIC_KEYWORDS.len(), DATASETS.len());
+        for (di, (name, prefixes, suffixes)) in PREFIXES.iter().enumerate() {
+            assert_eq!(*name, DATASETS[di]);
+            assert!(!prefixes.is_empty() && !suffixes.is_empty());
+            assert_eq!(TOPIC_KEYWORDS[di].len(), TOPICS_PER_DATASET);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&small_params());
+        let b = generate(&small_params());
+        assert_eq!(a.splits[0].train[0].text, b.splits[0].train[0].text);
+        assert_eq!(a.splits[3].test[5].quality, b.splits[3].test[5].quality);
+        assert_eq!(a.splits[6].feedback[17], b.splits[6].feedback[17]);
+    }
+
+    #[test]
+    fn seed_changes_output() {
+        let a = generate(&small_params());
+        let mut p = small_params();
+        p.seed = 43;
+        let b = generate(&p);
+        assert_ne!(a.splits[0].train[0].text, b.splits[0].train[0].text);
+    }
+
+    #[test]
+    fn split_sizes_respect_fraction() {
+        let b = generate(&small_params());
+        for s in &b.splits {
+            assert_eq!(s.train.len(), 140);
+            assert_eq!(s.test.len(), 60);
+            assert_eq!(s.feedback.len(), 140 * 3);
+        }
+    }
+
+    #[test]
+    fn qualities_and_costs_in_range() {
+        let b = generate(&small_params());
+        for s in &b.splits {
+            for smp in s.train.iter().chain(&s.test) {
+                assert_eq!(smp.quality.len(), MODELS.len());
+                for &q in &smp.quality {
+                    assert!((0.0..=1.0).contains(&q));
+                }
+                for (&c, spec) in smp.cost.iter().zip(MODELS) {
+                    assert!(c > 0.0);
+                    // within ~5x of expected cost (log-normal tail)
+                    assert!((c as f64) < spec.expected_cost() * 6.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_datasets_binary_quality() {
+        let b = generate(&small_params());
+        for s in &b.splits {
+            if DATASETS[s.dataset] == "mt-bench" {
+                continue;
+            }
+            for smp in &s.train {
+                for &q in &smp.quality {
+                    assert!(q == 0.0 || q == 1.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn feedback_outcomes_consistent_with_quality() {
+        let b = generate(&small_params());
+        for s in &b.splits {
+            for f in &s.feedback {
+                let smp = &s.train[f.sample];
+                let expect =
+                    outcome_from_quality(smp.quality[f.comparison.a], smp.quality[f.comparison.b]);
+                assert_eq!(f.comparison.outcome, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn gpt4_beats_llama13b_on_average() {
+        let b = generate(&small_params());
+        let g = model_index("gpt-4").unwrap();
+        let l = model_index("llama-2-13b-chat").unwrap();
+        let (mut qg, mut ql, mut n) = (0.0f64, 0.0f64, 0);
+        for s in &b.splits {
+            for smp in &s.train {
+                qg += smp.quality[g] as f64;
+                ql += smp.quality[l] as f64;
+                n += 1;
+            }
+        }
+        assert!(qg / n as f64 > ql / n as f64 + 0.15);
+    }
+
+    #[test]
+    fn code_llama_specialist_on_mbpp() {
+        let b = generate(&small_params());
+        let cl = model_index("code-llama-34b").unwrap();
+        let mbpp = b.split("mbpp").unwrap();
+        let mmlu = b.split("mmlu").unwrap();
+        let mean = |s: &[Sample]| {
+            s.iter().map(|x| x.quality[cl] as f64).sum::<f64>() / s.len() as f64
+        };
+        assert!(mean(&mbpp.train) > mean(&mmlu.train) + 0.15);
+    }
+
+    #[test]
+    fn topic_skills_vary_within_dataset() {
+        // Eagle-Local's signal: per-topic spread must exist.
+        let t = SkillTable::generate(7);
+        let mut any_spread = false;
+        for m in 0..MODELS.len() {
+            for d in 0..DATASETS.len() {
+                let skills: Vec<f64> =
+                    (0..TOPICS_PER_DATASET).map(|k| t.skill(m, d, k)).collect();
+                let max = skills.iter().cloned().fold(f64::MIN, f64::max);
+                let min = skills.iter().cloned().fold(f64::MAX, f64::min);
+                if max - min > 0.15 {
+                    any_spread = true;
+                }
+            }
+        }
+        assert!(any_spread);
+    }
+
+    #[test]
+    fn same_topic_prompts_share_tokens() {
+        let params = small_params();
+        let b = generate(&params);
+        let split = &b.splits[0];
+        // group by topic; same-topic pairs share at least one keyword token
+        let kw: Vec<Vec<&str>> =
+            TOPIC_KEYWORDS[0].iter().map(|t| t.to_vec()).collect();
+        for s in split.train.iter().take(50) {
+            let hits = kw[s.topic].iter().filter(|k| s.text.contains(**k)).count();
+            assert!(hits >= 2, "prompt missing topic anchors: {}", s.text);
+        }
+    }
+
+    #[test]
+    fn prompt_fits_tokenizer_seq_len() {
+        let b = generate(&small_params());
+        for s in &b.splits {
+            for smp in s.train.iter().take(20) {
+                let t = crate::tokenizer::tokenize_default(&smp.text);
+                assert!(!t.is_empty());
+                assert!(t.len() <= crate::tokenizer::SEQ_LEN);
+            }
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Synthetic RouterBench substrate.
+//!
+//! The paper evaluates on the RouterBench dataset [Hu et al. 2024]: 7
+//! public benchmarks, 11 LLMs, per-sample quality and cost for every
+//! (prompt, model) pair. That dataset (and the authors' stella embeddings
+//! of it) is not available offline, so this module regenerates its
+//! *statistics* (DESIGN.md §Substitutions):
+//!
+//! - 7 datasets with templated prompts that cluster per (dataset, topic)
+//!   in embedding space,
+//! - 11 models with latent per-(model, dataset, topic) skills — overall
+//!   ability ordering and specialist structure mirroring the real roster,
+//! - per-sample binary/continuous quality draws and $ costs (price x
+//!   log-normal token count),
+//! - pairwise feedback records derived from quality comparisons — the only
+//!   supervision Eagle sees (baselines also get the quality labels, as
+//!   RouterBench's regression formulation does).
+//!
+//! Everything is deterministic given `DataParams::seed`.
+
+pub mod gen;
+pub mod models;
+
+use crate::elo::{Comparison, Outcome};
+
+/// The seven RouterBench datasets.
+pub const DATASETS: &[&str] = &[
+    "mmlu",
+    "hellaswag",
+    "gsm8k",
+    "arc-challenge",
+    "winogrande",
+    "mbpp",
+    "mt-bench",
+];
+
+/// Topics per dataset (sub-domains within which model skills vary — the
+/// structure Eagle-Local exploits).
+pub const TOPICS_PER_DATASET: usize = 8;
+
+/// One benchmark prompt with per-model ground truth.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Dataset index into [`DATASETS`].
+    pub dataset: usize,
+    /// Topic index within the dataset.
+    pub topic: usize,
+    /// Prompt text (templated; embeds near same-topic prompts).
+    pub text: String,
+    /// Latent difficulty in [0,1].
+    pub difficulty: f64,
+    /// Observed response quality per model in [0,1].
+    pub quality: Vec<f32>,
+    /// Observed $ cost per model.
+    pub cost: Vec<f32>,
+}
+
+impl Sample {
+    /// Best achievable quality over all models (oracle).
+    pub fn oracle_quality(&self) -> f32 {
+        self.quality.iter().cloned().fold(0.0, f32::max)
+    }
+}
+
+/// A pairwise feedback record tied to a prompt (what users give Eagle).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeedbackRecord {
+    /// Index into the owning split's sample vector.
+    pub sample: usize,
+    pub comparison: Comparison,
+}
+
+/// One dataset's train/test split.
+#[derive(Debug, Clone)]
+pub struct DatasetSplit {
+    /// Dataset index into [`DATASETS`].
+    pub dataset: usize,
+    pub train: Vec<Sample>,
+    pub test: Vec<Sample>,
+    /// Pairwise feedback over `train` samples, in collection order
+    /// (prefixes of this stream define the 70%/85%/100% online stages).
+    pub feedback: Vec<FeedbackRecord>,
+}
+
+/// The full synthetic benchmark.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    pub splits: Vec<DatasetSplit>,
+}
+
+impl Benchmark {
+    pub fn split(&self, dataset_name: &str) -> Option<&DatasetSplit> {
+        let idx = DATASETS.iter().position(|d| *d == dataset_name)?;
+        self.splits.iter().find(|s| s.dataset == idx)
+    }
+
+    /// Total number of train samples across datasets.
+    pub fn train_len(&self) -> usize {
+        self.splits.iter().map(|s| s.train.len()).sum()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.splits.iter().map(|s| s.test.len()).sum()
+    }
+}
+
+/// Derive a pairwise outcome from two observed qualities.
+pub fn outcome_from_quality(qa: f32, qb: f32) -> Outcome {
+    if (qa - qb).abs() < 1e-6 {
+        Outcome::Draw
+    } else if qa > qb {
+        Outcome::WinA
+    } else {
+        Outcome::WinB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_datasets() {
+        assert_eq!(DATASETS.len(), 7);
+    }
+
+    #[test]
+    fn outcome_rules() {
+        assert_eq!(outcome_from_quality(1.0, 0.0), Outcome::WinA);
+        assert_eq!(outcome_from_quality(0.0, 1.0), Outcome::WinB);
+        assert_eq!(outcome_from_quality(0.5, 0.5), Outcome::Draw);
+    }
+
+    #[test]
+    fn oracle_quality_is_max() {
+        let s = Sample {
+            dataset: 0,
+            topic: 0,
+            text: "x".into(),
+            difficulty: 0.5,
+            quality: vec![0.2, 0.9, 0.4],
+            cost: vec![0.1; 3],
+        };
+        assert_eq!(s.oracle_quality(), 0.9);
+    }
+}

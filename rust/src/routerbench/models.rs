@@ -1,0 +1,195 @@
+//! The model pool: 11 LLMs mirroring RouterBench's roster in capability
+//! ordering and cost spread (DESIGN.md §Substitutions).
+//!
+//! Prices are blended $/1M tokens in the ballpark of the public 2024 price
+//! sheets; `general` is the latent overall strength in [0,1];
+//! `dataset_mods` are per-dataset latent skill adjustments capturing the
+//! specialist structure the paper's routers exploit (code models good at
+//! MBPP, math-tuned models at GSM8K, ...).
+
+#[cfg(test)]
+use super::DATASETS;
+
+/// Static description of one candidate LLM.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Blended price, $ per 1M tokens.
+    pub price_per_mtok: f64,
+    /// Mean total tokens (prompt + completion) this model spends per query
+    /// (verbosity differs across models).
+    pub mean_tokens: f64,
+    /// Latent general ability in [0, 1].
+    pub general: f64,
+    /// (dataset name, additive skill modifier).
+    pub dataset_mods: &'static [(&'static str, f64)],
+}
+
+impl ModelSpec {
+    /// Latent skill on a dataset (before per-topic variation).
+    pub fn skill_on(&self, dataset: &str) -> f64 {
+        let m = self
+            .dataset_mods
+            .iter()
+            .find(|(d, _)| *d == dataset)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0);
+        (self.general + m).clamp(0.02, 0.98)
+    }
+
+    /// Expected $ cost of one query.
+    pub fn expected_cost(&self) -> f64 {
+        self.price_per_mtok * self.mean_tokens / 1e6
+    }
+}
+
+/// The 11-model pool.
+pub const MODELS: &[ModelSpec] = &[
+    ModelSpec {
+        name: "gpt-4",
+        price_per_mtok: 37.5,
+        mean_tokens: 820.0,
+        general: 0.90,
+        dataset_mods: &[("mbpp", 0.04), ("gsm8k", 0.05), ("mt-bench", 0.06)],
+    },
+    ModelSpec {
+        name: "gpt-3.5-turbo",
+        price_per_mtok: 1.5,
+        mean_tokens: 700.0,
+        general: 0.70,
+        dataset_mods: &[("gsm8k", 0.02), ("hellaswag", -0.04)],
+    },
+    ModelSpec {
+        name: "claude-v2",
+        price_per_mtok: 24.0,
+        mean_tokens: 900.0,
+        general: 0.85,
+        dataset_mods: &[("mt-bench", 0.05), ("arc-challenge", 0.03), ("mbpp", -0.05)],
+    },
+    ModelSpec {
+        name: "claude-v1",
+        price_per_mtok: 16.0,
+        mean_tokens: 850.0,
+        general: 0.78,
+        dataset_mods: &[("winogrande", 0.04), ("mbpp", -0.06)],
+    },
+    ModelSpec {
+        name: "claude-instant-v1",
+        price_per_mtok: 1.6,
+        mean_tokens: 750.0,
+        general: 0.66,
+        dataset_mods: &[("hellaswag", 0.04), ("gsm8k", -0.08)],
+    },
+    ModelSpec {
+        name: "llama-2-70b-chat",
+        price_per_mtok: 1.0,
+        mean_tokens: 800.0,
+        general: 0.60,
+        dataset_mods: &[("winogrande", 0.05), ("mbpp", -0.12), ("mt-bench", 0.02)],
+    },
+    ModelSpec {
+        name: "llama-2-13b-chat",
+        price_per_mtok: 0.3,
+        mean_tokens: 760.0,
+        general: 0.45,
+        dataset_mods: &[("hellaswag", 0.05), ("gsm8k", -0.12)],
+    },
+    ModelSpec {
+        name: "mixtral-8x7b-chat",
+        price_per_mtok: 0.6,
+        mean_tokens: 780.0,
+        general: 0.68,
+        dataset_mods: &[("gsm8k", 0.08), ("mmlu", 0.04), ("mt-bench", -0.03)],
+    },
+    ModelSpec {
+        name: "mistral-7b-chat",
+        price_per_mtok: 0.2,
+        mean_tokens: 720.0,
+        general: 0.50,
+        dataset_mods: &[("arc-challenge", 0.04), ("mbpp", -0.08)],
+    },
+    ModelSpec {
+        name: "wizardlm-13b",
+        price_per_mtok: 0.3,
+        mean_tokens: 880.0,
+        general: 0.47,
+        dataset_mods: &[("mt-bench", 0.08), ("gsm8k", -0.10), ("mmlu", -0.04)],
+    },
+    ModelSpec {
+        name: "code-llama-34b",
+        price_per_mtok: 0.8,
+        mean_tokens: 640.0,
+        general: 0.52,
+        dataset_mods: &[("mbpp", 0.30), ("gsm8k", 0.08), ("mt-bench", -0.10), ("winogrande", -0.08)],
+    },
+];
+
+/// Number of models in the pool.
+pub fn n_models() -> usize {
+    MODELS.len()
+}
+
+/// Index of a model by name.
+pub fn model_index(name: &str) -> Option<usize> {
+    MODELS.iter().position(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eleven_models_like_routerbench() {
+        assert_eq!(MODELS.len(), 11);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = MODELS.iter().map(|m| m.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), MODELS.len());
+    }
+
+    #[test]
+    fn dataset_mods_reference_real_datasets() {
+        for m in MODELS {
+            for (d, _) in m.dataset_mods {
+                assert!(DATASETS.contains(d), "{} references unknown dataset {d}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn cost_spread_covers_two_orders_of_magnitude() {
+        let costs: Vec<f64> = MODELS.iter().map(|m| m.expected_cost()).collect();
+        let max = costs.iter().cloned().fold(0.0, f64::max);
+        let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 50.0, "spread {}x", max / min);
+    }
+
+    #[test]
+    fn gpt4_strongest_overall_and_most_expensive() {
+        let gpt4 = &MODELS[model_index("gpt-4").unwrap()];
+        for m in MODELS {
+            assert!(gpt4.general >= m.general);
+            assert!(gpt4.expected_cost() >= m.expected_cost());
+        }
+    }
+
+    #[test]
+    fn code_llama_best_at_mbpp_per_dollar_class() {
+        let cl = &MODELS[model_index("code-llama-34b").unwrap()];
+        assert!(cl.skill_on("mbpp") > cl.skill_on("mmlu") + 0.2);
+    }
+
+    #[test]
+    fn skill_clamped() {
+        for m in MODELS {
+            for d in DATASETS {
+                let s = m.skill_on(d);
+                assert!((0.0..=1.0).contains(&s));
+            }
+        }
+    }
+}

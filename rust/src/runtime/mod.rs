@@ -1,0 +1,403 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) and executes them.
+//!
+//! This is the only module that touches the `xla` crate. Flow per artifact
+//! (see /opt/xla-example/load_hlo for the reference wiring):
+//!
+//! ```text
+//! HloModuleProto::from_text_file -> XlaComputation::from_proto
+//!   -> PjRtClient::compile -> PjRtLoadedExecutable::execute_b
+//! ```
+//!
+//! Model weights are read from `weights.bin` once, transferred to the
+//! device once (`buffer_from_host_buffer`), and reused across every embed
+//! call — only the token/mask tensors move host->device per request
+//! (§Perf: this is what keeps the request path allocation-light).
+//!
+//! PJRT handles are raw pointers (`!Send`): the embedding service owns a
+//! [`Runtime`] on a dedicated engine thread and communicates over channels
+//! (see [`crate::embedding`]).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json;
+
+/// Model hyper-parameters recorded by the AOT pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub vocab_size: u32,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seed: u64,
+}
+
+/// One weight tensor's layout inside weights.bin.
+#[derive(Debug, Clone)]
+pub struct TensorRecord {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_elems: usize,
+}
+
+impl TensorRecord {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub embed_batch_sizes: Vec<usize>,
+    pub scorer_shapes: Vec<(usize, usize)>,
+    pub embed_files: BTreeMap<usize, String>,
+    pub scorer_files: BTreeMap<(usize, usize), String>,
+    pub weights_file: String,
+    pub weights_total_elems: usize,
+    pub tensors: Vec<TensorRecord>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let m = v.get("model");
+        let model = ModelInfo {
+            vocab_size: m.get("vocab_size").as_usize().context("model.vocab_size")? as u32,
+            seq_len: m.get("seq_len").as_usize().context("model.seq_len")?,
+            d_model: m.get("d_model").as_usize().context("model.d_model")?,
+            n_heads: m.get("n_heads").as_usize().context("model.n_heads")?,
+            n_layers: m.get("n_layers").as_usize().context("model.n_layers")?,
+            d_ff: m.get("d_ff").as_usize().context("model.d_ff")?,
+            seed: m.get("seed").as_i64().unwrap_or(0) as u64,
+        };
+
+        let mut embed_files = BTreeMap::new();
+        let mut scorer_files = BTreeMap::new();
+        for art in v.get("artifacts").as_arr().context("artifacts")? {
+            let file = art.get("file").as_str().context("artifact.file")?.to_string();
+            match art.get("kind").as_str() {
+                Some("embed") => {
+                    let b = art.get("batch").as_usize().context("artifact.batch")?;
+                    embed_files.insert(b, file);
+                }
+                Some("scorer") => {
+                    let q = art.get("queries").as_usize().context("artifact.queries")?;
+                    let n = art.get("corpus").as_usize().context("artifact.corpus")?;
+                    scorer_files.insert((q, n), file);
+                }
+                k => bail!("unknown artifact kind {k:?}"),
+            }
+        }
+
+        let w = v.get("weights");
+        let tensors = w
+            .get("tensors")
+            .as_arr()
+            .context("weights.tensors")?
+            .iter()
+            .map(|t| {
+                Ok(TensorRecord {
+                    name: t.get("name").as_str().context("tensor.name")?.to_string(),
+                    shape: t
+                        .get("shape")
+                        .as_arr()
+                        .context("tensor.shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("tensor dim"))
+                        .collect::<Result<_>>()?,
+                    offset_elems: t.get("offset_elems").as_usize().context("offset")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            embed_batch_sizes: embed_files.keys().copied().collect(),
+            scorer_shapes: scorer_files.keys().copied().collect(),
+            embed_files,
+            scorer_files,
+            weights_file: w.get("file").as_str().unwrap_or("weights.bin").to_string(),
+            weights_total_elems: w.get("total_elems").as_usize().context("total_elems")?,
+            tensors,
+        })
+    }
+
+    /// Smallest compiled batch bucket that fits `n` queries.
+    pub fn pick_bucket(&self, n: usize) -> Option<usize> {
+        self.embed_batch_sizes.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Largest compiled batch bucket.
+    pub fn max_bucket(&self) -> usize {
+        self.embed_batch_sizes.last().copied().unwrap_or(0)
+    }
+}
+
+/// Read weights.bin (little-endian f32) and validate its length.
+pub fn read_weights(manifest: &Manifest) -> Result<Vec<f32>> {
+    let path = manifest.dir.join(&manifest.weights_file);
+    let bytes =
+        std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != manifest.weights_total_elems * 4 {
+        bail!(
+            "{}: expected {} bytes, found {}",
+            path.display(),
+            manifest.weights_total_elems * 4,
+            bytes.len()
+        );
+    }
+    let mut out = Vec::with_capacity(manifest.weights_total_elems);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(out)
+}
+
+/// A loaded PJRT runtime: compiled executables + device-resident weights.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    embed_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    scorer_exes: BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir`, compile, and stage weights on device.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", path.display()))
+        };
+
+        let mut embed_exes = BTreeMap::new();
+        for (&batch, file) in &manifest.embed_files {
+            embed_exes.insert(batch, compile(file)?);
+        }
+        let mut scorer_exes = BTreeMap::new();
+        for (&shape, file) in &manifest.scorer_files {
+            scorer_exes.insert(shape, compile(file)?);
+        }
+
+        // One-time host->device transfer of all weight tensors.
+        let flat = read_weights(&manifest)?;
+        let mut weight_bufs = Vec::with_capacity(manifest.tensors.len());
+        for t in &manifest.tensors {
+            let data = &flat[t.offset_elems..t.offset_elems + t.elems()];
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, &t.shape, None)
+                .map_err(|e| anyhow!("staging weight {}: {e}", t.name))?;
+            weight_bufs.push(buf);
+        }
+
+        Ok(Runtime { client, manifest, embed_exes, scorer_exes, weight_bufs })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Embed a padded batch.
+    ///
+    /// `tokens` is `[batch * seq_len]` i32 row-major, `mask` likewise f32;
+    /// `batch` must be a compiled bucket. Returns `[batch * d_model]` f32.
+    pub fn embed_batch(&self, tokens: &[i32], mask: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let seq = self.manifest.model.seq_len;
+        if tokens.len() != batch * seq || mask.len() != batch * seq {
+            bail!(
+                "embed_batch: expected {}x{} inputs, got tokens={} mask={}",
+                batch,
+                seq,
+                tokens.len(),
+                mask.len()
+            );
+        }
+        let exe = self
+            .embed_exes
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no compiled embed bucket for batch {batch}"))?;
+
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(tokens, &[batch, seq], None)
+            .map_err(|e| anyhow!("tokens upload: {e}"))?;
+        let mask_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(mask, &[batch, seq], None)
+            .map_err(|e| anyhow!("mask upload: {e}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + self.weight_bufs.len());
+        args.push(&tok_buf);
+        args.push(&mask_buf);
+        args.extend(self.weight_bufs.iter());
+
+        let result = exe.execute_b(&args).map_err(|e| anyhow!("embed execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("embed readback: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("embed untuple: {e}"))?;
+        let out = lit.to_vec::<f32>().map_err(|e| anyhow!("embed to_vec: {e}"))?;
+        let d = self.manifest.model.d_model;
+        if out.len() != batch * d {
+            bail!("embed output: expected {} floats, got {}", batch * d, out.len());
+        }
+        Ok(out)
+    }
+
+    /// Score `q_n` queries against a corpus slab via the Pallas scorer HLO.
+    ///
+    /// `queries` is `[q_n * d]`, `corpus` is `[n * d]`; `(q_n, n)` must be a
+    /// compiled bucket. Returns `[q_n * n]` scores.
+    pub fn score(&self, queries: &[f32], q_n: usize, corpus: &[f32], n: usize) -> Result<Vec<f32>> {
+        let d = self.manifest.model.d_model;
+        if queries.len() != q_n * d || corpus.len() != n * d {
+            bail!("score: bad input lengths");
+        }
+        let exe = self
+            .scorer_exes
+            .get(&(q_n, n))
+            .ok_or_else(|| anyhow!("no compiled scorer bucket for ({q_n},{n})"))?;
+        let q_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(queries, &[q_n, d], None)
+            .map_err(|e| anyhow!("queries upload: {e}"))?;
+        let c_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(corpus, &[n, d], None)
+            .map_err(|e| anyhow!("corpus upload: {e}"))?;
+        let result = exe
+            .execute_b(&[&q_buf, &c_buf])
+            .map_err(|e| anyhow!("score execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("score readback: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("score untuple: {e}"))?;
+        let out = lit.to_vec::<f32>().map_err(|e| anyhow!("score to_vec: {e}"))?;
+        if out.len() != q_n * n {
+            bail!("score output: expected {} floats, got {}", q_n * n, out.len());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full Runtime tests live in rust/tests/runtime_integration.rs (they
+    // need built artifacts). Here: manifest parsing over a synthetic dir.
+
+    fn write_fake_manifest(dir: &Path, total_elems: usize) {
+        let manifest = format!(
+            r#"{{
+  "format_version": 1,
+  "model": {{"vocab_size": 64, "seq_len": 8, "d_model": 16, "n_heads": 2,
+             "n_layers": 1, "d_ff": 32, "seed": 1}},
+  "embed_batch_sizes": [1, 4],
+  "scorer_shapes": [[1, 128]],
+  "artifacts": [
+    {{"name": "embed_b1", "kind": "embed", "file": "embed_b1.hlo.txt", "batch": 1,
+      "seq_len": 8, "out_dim": 16}},
+    {{"name": "embed_b4", "kind": "embed", "file": "embed_b4.hlo.txt", "batch": 4,
+      "seq_len": 8, "out_dim": 16}},
+    {{"name": "scorer_q1_n128", "kind": "scorer", "file": "s.hlo.txt",
+      "queries": 1, "corpus": 128, "dim": 16}}
+  ],
+  "weights": {{"file": "weights.bin", "dtype": "f32_le", "total_elems": {total_elems},
+    "sha256": "x",
+    "tensors": [{{"name": "a", "shape": [2, 4], "offset_elems": 0}},
+                 {{"name": "b", "shape": [4], "offset_elems": 8}}]}}
+}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("eagle_rt_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = tmpdir("parse");
+        write_fake_manifest(&dir, 12);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_model, 16);
+        assert_eq!(m.embed_batch_sizes, vec![1, 4]);
+        assert_eq!(m.scorer_shapes, vec![(1, 128)]);
+        assert_eq!(m.tensors.len(), 2);
+        assert_eq!(m.tensors[1].offset_elems, 8);
+    }
+
+    #[test]
+    fn pick_bucket_smallest_fitting() {
+        let dir = tmpdir("bucket");
+        write_fake_manifest(&dir, 12);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pick_bucket(1), Some(1));
+        assert_eq!(m.pick_bucket(2), Some(4));
+        assert_eq!(m.pick_bucket(4), Some(4));
+        assert_eq!(m.pick_bucket(5), None);
+        assert_eq!(m.max_bucket(), 4);
+    }
+
+    #[test]
+    fn read_weights_validates_length() {
+        let dir = tmpdir("weights");
+        write_fake_manifest(&dir, 12);
+        std::fs::write(dir.join("weights.bin"), vec![0u8; 12 * 4]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let w = read_weights(&m).unwrap();
+        assert_eq!(w.len(), 12);
+
+        std::fs::write(dir.join("weights.bin"), vec![0u8; 11 * 4]).unwrap();
+        assert!(read_weights(&m).is_err());
+    }
+
+    #[test]
+    fn weights_little_endian_decode() {
+        let dir = tmpdir("le");
+        write_fake_manifest(&dir, 12);
+        let mut bytes = Vec::new();
+        for i in 0..12 {
+            bytes.extend_from_slice(&(i as f32 * 0.5).to_le_bytes());
+        }
+        std::fs::write(dir.join("weights.bin"), bytes).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let w = read_weights(&m).unwrap();
+        assert_eq!(w[3], 1.5);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = tmpdir("missing");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

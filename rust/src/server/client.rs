@@ -1,0 +1,128 @@
+//! Blocking client for the Eagle serving protocol (examples + load gen).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::protocol::{encode_response, parse_response, Response};
+use crate::json::{self, Value};
+
+/// A routed decision as seen by the client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteDecision {
+    pub model: String,
+    pub model_index: usize,
+    pub compare_with: Option<String>,
+    pub expected_cost: f64,
+}
+
+/// One TCP connection to an Eagle server.
+pub struct EagleClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl EagleClient {
+    pub fn connect(addr: &str) -> Result<EagleClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let writer = stream.try_clone()?;
+        Ok(EagleClient { reader: BufReader::new(stream), writer })
+    }
+
+    fn call(&mut self, request_json: String) -> Result<Response> {
+        let mut line = request_json;
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            bail!("server closed connection");
+        }
+        parse_response(&resp).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Route a query under a budget.
+    pub fn route(&mut self, text: &str, budget: f64) -> Result<RouteDecision> {
+        let req = json::obj(vec![
+            ("op", json::str_v("route")),
+            ("text", json::str_v(text)),
+            ("budget", json::num(budget)),
+        ])
+        .to_json();
+        match self.call(req)? {
+            Response::Routed { model, model_index, compare_with, expected_cost } => {
+                Ok(RouteDecision { model, model_index, compare_with, expected_cost })
+            }
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Submit a pairwise feedback verdict (score_a: 1 / 0.5 / 0).
+    pub fn feedback(
+        &mut self,
+        text: &str,
+        model_a: &str,
+        model_b: &str,
+        score_a: f64,
+    ) -> Result<()> {
+        let req = json::obj(vec![
+            ("op", json::str_v("feedback")),
+            ("text", json::str_v(text)),
+            ("model_a", json::str_v(model_a)),
+            ("model_b", json::str_v(model_b)),
+            ("score_a", json::num(score_a)),
+        ])
+        .to_json();
+        match self.call(req)? {
+            Response::FeedbackAccepted => Ok(()),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics report.
+    pub fn stats(&mut self) -> Result<(String, u64, u64)> {
+        let req = json::obj(vec![("op", json::str_v("stats"))]).to_json();
+        match self.call(req)? {
+            Response::Stats { report, requests, feedback } => Ok((report, requests, feedback)),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Ask the server to persist its router state (admin op).
+    pub fn snapshot(&mut self) -> Result<(String, u64)> {
+        let req = json::obj(vec![("op", json::str_v("snapshot"))]).to_json();
+        match self.call(req)? {
+            Response::SnapshotSaved { path, entries } => Ok((path, entries)),
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<()> {
+        let req = json::obj(vec![("op", json::str_v("ping"))]).to_json();
+        match self.call(req)? {
+            Response::Pong => Ok(()),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+}
+
+// Silence unused-import warning for Value used in doc contexts.
+#[allow(unused)]
+fn _encode_sanity(r: &Response) -> (String, Value) {
+    (encode_response(r), Value::Null)
+}
+
+#[cfg(test)]
+mod tests {
+    // Full client/server round-trips live in rust/tests/server_e2e.rs
+    // (they need built artifacts for the embedder).
+}

@@ -1,0 +1,328 @@
+//! Serving front-end: a threaded TCP server speaking the newline-JSON
+//! protocol, wired to the Eagle router, the embedding service, and the
+//! feedback pipeline.
+//!
+//! ```text
+//!         TCP workers (N)        engine thread          applier thread
+//! route:  parse -> embed ------> PJRT batch ----+
+//!         -> router.scores ---------------------+--> reply
+//! feedback: parse -> queue.push               (async)
+//!                         applier: pop -> embed -> router.observe
+//! ```
+//!
+//! The router sits behind an `RwLock`: routes take the read lock (scores
+//! are pure), the single applier thread takes the write lock per feedback
+//! record — request tail latency is unaffected by feedback bursts
+//! (backpressure lands on the bounded [`FeedbackQueue`] instead).
+
+pub mod client;
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::feedback::{ComparisonSampler, FeedbackQueue, Verdict};
+use crate::coordinator::policy::BudgetPolicy;
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::router::EagleRouter;
+use crate::embedding::EmbedHandle;
+use crate::metrics::Metrics;
+use crate::util::Rng;
+use crate::vectordb::flat::FlatStore;
+
+use protocol::{encode_response, parse_request, Request, Response};
+
+/// Shared server state.
+pub struct ServerState {
+    pub router: RwLock<EagleRouter<FlatStore>>,
+    pub registry: ModelRegistry,
+    pub policy: BudgetPolicy,
+    pub embed: EmbedHandle,
+    pub metrics: Arc<Metrics>,
+    pub sampler: ComparisonSampler,
+    pub queue: FeedbackQueue,
+    /// Where the admin `snapshot` op persists state (None = op disabled).
+    pub snapshot_path: Option<std::path::PathBuf>,
+    stop: AtomicBool,
+}
+
+impl ServerState {
+    pub fn new(
+        router: EagleRouter<FlatStore>,
+        registry: ModelRegistry,
+        embed: EmbedHandle,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let policy = BudgetPolicy::new(&registry);
+        ServerState {
+            router: RwLock::new(router),
+            registry,
+            policy,
+            embed,
+            metrics,
+            sampler: ComparisonSampler::default(),
+            queue: FeedbackQueue::new(4096),
+            snapshot_path: None,
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Enable the admin `snapshot` op, persisting to `path`.
+    pub fn with_snapshot_path(mut self, path: std::path::PathBuf) -> Self {
+        self.snapshot_path = Some(path);
+        self
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Handle one parsed request (shared by TCP handler and tests).
+    pub fn handle(&self, req: Request, rng: &mut Rng) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Snapshot => match &self.snapshot_path {
+                None => Response::Error("snapshot op disabled (no path configured)".into()),
+                Some(path) => {
+                    let router = self.router.read().unwrap();
+                    let entries = {
+                        use crate::vectordb::VectorIndex as _;
+                        router.store().len() as u64
+                    };
+                    match crate::coordinator::state::save_to(&router, path) {
+                        Ok(()) => Response::SnapshotSaved {
+                            path: path.display().to_string(),
+                            entries,
+                        },
+                        Err(e) => {
+                            self.metrics.errors.inc();
+                            Response::Error(format!("snapshot: {e}"))
+                        }
+                    }
+                }
+            },
+            Request::Stats => Response::Stats {
+                report: self.metrics.report(),
+                requests: self.metrics.requests.get(),
+                feedback: self.metrics.feedback.get(),
+            },
+            Request::Route { text, budget } => {
+                let t0 = Instant::now();
+                self.metrics.requests.inc();
+                let emb = match self.embed.embed_one(&text) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        self.metrics.errors.inc();
+                        return Response::Error(format!("embed: {e}"));
+                    }
+                };
+                let (scores, ratings) = {
+                    let router = self.router.read().unwrap();
+                    let s = router.combined_scores(&emb);
+                    let g = router.global().ratings().to_vec();
+                    (s, g)
+                };
+                let choice = self.policy.select(&scores, budget);
+                let compare_with = self
+                    .sampler
+                    .pick_partner(rng, choice, &ratings)
+                    .map(|m| self.registry.entry(m).name.clone());
+                self.metrics.route_latency.record(t0.elapsed());
+                Response::Routed {
+                    model: self.registry.entry(choice).name.clone(),
+                    model_index: choice,
+                    compare_with,
+                    expected_cost: self.registry.entry(choice).expected_cost,
+                }
+            }
+            Request::Feedback { text, model_a, model_b, score_a } => {
+                let (Some(a), Some(b)) =
+                    (self.registry.index_of(&model_a), self.registry.index_of(&model_b))
+                else {
+                    self.metrics.errors.inc();
+                    return Response::Error(format!(
+                        "unknown model in feedback: {model_a} / {model_b}"
+                    ));
+                };
+                if a == b {
+                    self.metrics.errors.inc();
+                    return Response::Error("feedback: model_a == model_b".into());
+                }
+                if ![0.0, 0.5, 1.0].contains(&score_a) {
+                    self.metrics.errors.inc();
+                    return Response::Error("feedback: score_a must be 0, 0.5 or 1".into());
+                }
+                // Embed synchronously (cheap relative to the round trip),
+                // queue the router update for the applier thread.
+                let emb = match self.embed.embed_one(&text) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        self.metrics.errors.inc();
+                        return Response::Error(format!("embed: {e}"));
+                    }
+                };
+                self.metrics.feedback.inc();
+                self.queue.push(Verdict { embedding: emb, model_a: a, model_b: b, score_a });
+                Response::FeedbackAccepted
+            }
+        }
+    }
+}
+
+/// The running server: worker threads + feedback applier.
+pub struct Server {
+    pub state: Arc<ServerState>,
+    pub addr: std::net::SocketAddr,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    applier: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving on `addr` ("127.0.0.1:0" picks a free port).
+    pub fn start(state: Arc<ServerState>, addr: &str, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers.max(1) {
+            let listener = listener.try_clone()?;
+            let state = state.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("eagle-worker-{w}"))
+                    .spawn(move || worker_loop(listener, state, w as u64))
+                    .map_err(|e| anyhow!("spawn worker: {e}"))?,
+            );
+        }
+
+        // feedback applier: single writer
+        let applier_state = state.clone();
+        let applier = std::thread::Builder::new()
+            .name("eagle-feedback-applier".into())
+            .spawn(move || applier_loop(applier_state))
+            .map_err(|e| anyhow!("spawn applier: {e}"))?;
+
+        Ok(Server { state, addr: local, workers: handles, applier: Some(applier) })
+    }
+
+    /// Signal shutdown and join all threads.
+    pub fn shutdown(mut self) {
+        self.state.stop();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(a) = self.applier.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+fn worker_loop(listener: TcpListener, state: Arc<ServerState>, seed: u64) {
+    let mut rng = Rng::with_stream(0x5EED, seed);
+    loop {
+        if state.stopped() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nodelay(true).ok();
+                if let Err(e) = handle_connection(stream, &state, &mut rng) {
+                    // connection errors are per-client, not fatal
+                    let _ = e;
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, rng: &mut Rng) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if state.stopped() {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                let resp = match parse_request(&line) {
+                    Ok(req) => state.handle(req, rng),
+                    Err(e) => {
+                        state.metrics.errors.inc();
+                        Response::Error(e)
+                    }
+                };
+                let mut out = encode_response(&resp);
+                out.push('\n');
+                writer.write_all(out.as_bytes())?;
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // idle keep-alive; re-check stop flag
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Applier: drains the feedback queue into the router (single writer).
+fn applier_loop(state: Arc<ServerState>) {
+    while let Some(verdict) = state.queue.pop() {
+        if let Some(obs) = verdict.to_observation() {
+            let mut router = state.router.write().unwrap();
+            router.observe(obs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EagleParams;
+    use crate::embedding::{BatcherOptions, EmbedService};
+
+    // In-process handler tests that need no artifacts are below; full TCP
+    // round-trips (with the PJRT embedder) live in rust/tests/server_e2e.rs.
+
+    #[test]
+    fn state_rejects_bad_feedback_models() {
+        // Use a stats/ping-only state: embed handle requires artifacts, so
+        // construct is deferred to e2e tests; here we exercise pure logic.
+        // (Request::Stats and parse-level validation are covered in
+        // protocol tests.)
+        let req = parse_request(r#"{"op":"feedback","text":"t","model_a":"gpt-4","model_b":"gpt-4","score_a":1}"#).unwrap();
+        match req {
+            Request::Feedback { model_a, model_b, .. } => assert_eq!(model_a, model_b),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn server_struct_is_send() {
+        fn assert_send<T: Send + Sync>() {}
+        assert_send::<ServerState>();
+        let _ = EagleParams::default();
+        let _ = BatcherOptions::default();
+        let _: Option<EmbedService> = None;
+    }
+}

@@ -1,0 +1,243 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Requests (client -> server), one JSON object per line:
+//!
+//! ```json
+//! {"op":"route","text":"...","budget":0.02}
+//! {"op":"feedback","text":"...","model_a":"gpt-4","model_b":"claude-v2","score_a":1.0}
+//! {"op":"stats"}
+//! {"op":"ping"}
+//! ```
+//!
+//! Responses mirror the request with `"ok":true` or carry
+//! `{"ok":false,"error":"..."}`.
+
+use crate::json::{self, Value};
+
+/// Parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Route { text: String, budget: f64 },
+    Feedback { text: String, model_a: String, model_b: String, score_a: f64 },
+    Stats,
+    Ping,
+    /// Admin: persist router state to the server-configured snapshot path.
+    Snapshot,
+}
+
+/// Server response payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Routed {
+        model: String,
+        model_index: usize,
+        /// Optional comparison partner (paper workflow step 5).
+        compare_with: Option<String>,
+        /// Expected $ cost of the chosen model.
+        expected_cost: f64,
+    },
+    FeedbackAccepted,
+    Stats { report: String, requests: u64, feedback: u64 },
+    Pong,
+    /// Snapshot written: path + number of stored prompts.
+    SnapshotSaved { path: String, entries: u64 },
+    Error(String),
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = json::parse(line.trim()).map_err(|e| format!("bad json: {e}"))?;
+    match v.get("op").as_str() {
+        Some("route") => {
+            let text = v
+                .get("text")
+                .as_str()
+                .ok_or("route: missing text")?
+                .to_string();
+            let budget = v.get("budget").as_f64().ok_or("route: missing budget")?;
+            if !budget.is_finite() || budget < 0.0 {
+                return Err("route: budget must be a non-negative number".into());
+            }
+            Ok(Request::Route { text, budget })
+        }
+        Some("feedback") => Ok(Request::Feedback {
+            text: v.get("text").as_str().ok_or("feedback: missing text")?.to_string(),
+            model_a: v
+                .get("model_a")
+                .as_str()
+                .ok_or("feedback: missing model_a")?
+                .to_string(),
+            model_b: v
+                .get("model_b")
+                .as_str()
+                .ok_or("feedback: missing model_b")?
+                .to_string(),
+            score_a: v.get("score_a").as_f64().ok_or("feedback: missing score_a")?,
+        }),
+        Some("stats") => Ok(Request::Stats),
+        Some("ping") => Ok(Request::Ping),
+        Some("snapshot") => Ok(Request::Snapshot),
+        Some(op) => Err(format!("unknown op '{op}'")),
+        None => Err("missing op".into()),
+    }
+}
+
+/// Serialize a response to one line (no trailing newline).
+pub fn encode_response(r: &Response) -> String {
+    match r {
+        Response::Routed { model, model_index, compare_with, expected_cost } => {
+            let mut fields = vec![
+                ("ok", Value::Bool(true)),
+                ("model", json::str_v(model)),
+                ("model_index", json::num(*model_index as f64)),
+                ("expected_cost", json::num(*expected_cost)),
+            ];
+            if let Some(c) = compare_with {
+                fields.push(("compare_with", json::str_v(c)));
+            }
+            json::obj(fields).to_json()
+        }
+        Response::FeedbackAccepted => {
+            json::obj(vec![("ok", Value::Bool(true)), ("accepted", Value::Bool(true))]).to_json()
+        }
+        Response::Stats { report, requests, feedback } => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("report", json::str_v(report)),
+            ("requests", json::num(*requests as f64)),
+            ("feedback", json::num(*feedback as f64)),
+        ])
+        .to_json(),
+        Response::Pong => {
+            json::obj(vec![("ok", Value::Bool(true)), ("pong", Value::Bool(true))]).to_json()
+        }
+        Response::SnapshotSaved { path, entries } => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("snapshot", json::str_v(path)),
+            ("entries", json::num(*entries as f64)),
+        ])
+        .to_json(),
+        Response::Error(msg) => {
+            json::obj(vec![("ok", Value::Bool(false)), ("error", json::str_v(msg))]).to_json()
+        }
+    }
+}
+
+/// Parse a response line (client side).
+pub fn parse_response(line: &str) -> Result<Response, String> {
+    let v = json::parse(line.trim()).map_err(|e| format!("bad json: {e}"))?;
+    if v.get("ok").as_bool() != Some(true) {
+        return Ok(Response::Error(
+            v.get("error").as_str().unwrap_or("unknown error").to_string(),
+        ));
+    }
+    if v.get("pong").as_bool() == Some(true) {
+        return Ok(Response::Pong);
+    }
+    if v.get("accepted").as_bool() == Some(true) {
+        return Ok(Response::FeedbackAccepted);
+    }
+    if let Some(path) = v.get("snapshot").as_str() {
+        return Ok(Response::SnapshotSaved {
+            path: path.to_string(),
+            entries: v.get("entries").as_f64().unwrap_or(0.0) as u64,
+        });
+    }
+    if let Some(model) = v.get("model").as_str() {
+        return Ok(Response::Routed {
+            model: model.to_string(),
+            model_index: v.get("model_index").as_usize().ok_or("missing model_index")?,
+            compare_with: v.get("compare_with").as_str().map(|s| s.to_string()),
+            expected_cost: v.get("expected_cost").as_f64().unwrap_or(0.0),
+        });
+    }
+    if !v.get("report").is_null() {
+        return Ok(Response::Stats {
+            report: v.get("report").as_str().unwrap_or("").to_string(),
+            requests: v.get("requests").as_f64().unwrap_or(0.0) as u64,
+            feedback: v.get("feedback").as_f64().unwrap_or(0.0) as u64,
+        });
+    }
+    Err("unrecognized response".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_route() {
+        let r = parse_request(r#"{"op":"route","text":"hi","budget":0.5}"#).unwrap();
+        assert_eq!(r, Request::Route { text: "hi".into(), budget: 0.5 });
+    }
+
+    #[test]
+    fn parse_feedback() {
+        let r = parse_request(
+            r#"{"op":"feedback","text":"q","model_a":"a","model_b":"b","score_a":0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Feedback {
+                text: "q".into(),
+                model_a: "a".into(),
+                model_b: "b".into(),
+                score_a: 0.5
+            }
+        );
+    }
+
+    #[test]
+    fn parse_snapshot_op() {
+        assert_eq!(parse_request(r#"{"op":"snapshot"}"#).unwrap(), Request::Snapshot);
+    }
+
+    #[test]
+    fn parse_rejects_bad_requests() {
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
+        assert!(parse_request(r#"{"op":"route","text":"x"}"#).is_err());
+        assert!(parse_request(r#"{"op":"route","text":"x","budget":-1}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_routed() {
+        let r = Response::Routed {
+            model: "gpt-4".into(),
+            model_index: 0,
+            compare_with: Some("claude-v2".into()),
+            expected_cost: 0.03,
+        };
+        assert_eq!(parse_response(&encode_response(&r)).unwrap(), r);
+        let r2 = Response::Routed {
+            model: "gpt-4".into(),
+            model_index: 0,
+            compare_with: None,
+            expected_cost: 0.03,
+        };
+        assert_eq!(parse_response(&encode_response(&r2)).unwrap(), r2);
+    }
+
+    #[test]
+    fn response_roundtrip_others() {
+        for r in [
+            Response::FeedbackAccepted,
+            Response::Pong,
+            Response::Stats { report: "r".into(), requests: 5, feedback: 2 },
+            Response::SnapshotSaved { path: "/tmp/x.json".into(), entries: 42 },
+            Response::Error("boom".into()),
+        ] {
+            assert_eq!(parse_response(&encode_response(&r)).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn unicode_text_survives() {
+        let line = encode_response(&Response::Error("caf\u{e9} \u{1F600}".into()));
+        match parse_response(&line).unwrap() {
+            Response::Error(e) => assert_eq!(e, "caf\u{e9} \u{1F600}"),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Hash tokenizer — bit-identical mirror of `python/compile/tokenizer.py`.
+//!
+//! The rust coordinator tokenizes on the request path; the python compile
+//! path tokenizes when generating golden vectors. Both sides pin the same
+//! golden values in their test suites (change one side, change both):
+//!
+//! 1. lowercase (ASCII folding only),
+//! 2. split into maximal ASCII-alphanumeric runs,
+//! 3. id = `1 + FNV1a64(word) % (vocab - 1)`,
+//! 4. truncate / right-pad with `PAD_ID` (=0) to `seq_len`.
+
+/// Vocabulary size baked into the MiniStella artifacts.
+pub const VOCAB_SIZE: u32 = 8192;
+/// Sequence length baked into the MiniStella artifacts.
+pub const SEQ_LEN: usize = 64;
+/// Padding token id.
+pub const PAD_ID: i32 = 0;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// 64-bit FNV-1a hash.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Lowercased maximal ASCII-alphanumeric runs, in order.
+pub fn words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        match ch {
+            'A'..='Z' => cur.push(ch.to_ascii_lowercase()),
+            'a'..='z' | '0'..='9' => cur.push(ch),
+            _ => {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+            }
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Token id of a single (already lowercased) word.
+pub fn word_id(word: &str, vocab_size: u32) -> i32 {
+    (1 + fnv1a64(word.as_bytes()) % (vocab_size as u64 - 1)) as i32
+}
+
+/// Tokenized prompt: ids + mask, both `seq_len` long.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tokenized {
+    pub ids: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl Tokenized {
+    /// Number of real (non-padding) tokens.
+    pub fn len(&self) -> usize {
+        self.mask.iter().filter(|&&m| m == 1.0).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Tokenize `text` into exactly `seq_len` (id, mask) pairs.
+pub fn tokenize(text: &str, seq_len: usize, vocab_size: u32) -> Tokenized {
+    let mut ids: Vec<i32> = words(text)
+        .iter()
+        .take(seq_len)
+        .map(|w| word_id(w, vocab_size))
+        .collect();
+    let real = ids.len();
+    ids.resize(seq_len, PAD_ID);
+    let mut mask = vec![1.0f32; real];
+    mask.resize(seq_len, 0.0);
+    Tokenized { ids, mask }
+}
+
+/// Tokenize with the artifact defaults (SEQ_LEN, VOCAB_SIZE).
+pub fn tokenize_default(text: &str) -> Tokenized {
+    tokenize(text, SEQ_LEN, VOCAB_SIZE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    // ---- golden values duplicated in python/tests/test_tokenizer.py ----
+
+    #[test]
+    fn golden_fnv_hello() {
+        assert_eq!(fnv1a64(b"hello"), 11831194018420276491);
+    }
+
+    #[test]
+    fn golden_fnv_empty() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+    }
+
+    #[test]
+    fn golden_word_ids() {
+        assert_eq!(word_id("hello", VOCAB_SIZE), 8181);
+        assert_eq!(word_id("world", VOCAB_SIZE), 5097);
+        assert_eq!(word_id("the", VOCAB_SIZE), 4062);
+        assert_eq!(word_id("42", VOCAB_SIZE), 5912);
+    }
+
+    #[test]
+    fn golden_tokenize() {
+        let t = tokenize("Hello, World! 42", 8, VOCAB_SIZE);
+        assert_eq!(t.ids, vec![8181, 5097, 5912, 0, 0, 0, 0, 0]);
+        assert_eq!(t.mask, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn golden_words_split() {
+        assert_eq!(words("a-b_c  D9"), vec!["a", "b", "c", "d9"]);
+    }
+
+    // ---- behavior ----
+
+    #[test]
+    fn unicode_is_separator() {
+        assert_eq!(words("caf\u{e9} bar"), vec!["caf", "bar"]);
+    }
+
+    #[test]
+    fn truncation() {
+        let long = vec!["w"; 100].join(" ");
+        let t = tokenize(&long, 16, VOCAB_SIZE);
+        assert_eq!(t.ids.len(), 16);
+        assert_eq!(t.len(), 16);
+    }
+
+    #[test]
+    fn empty_text() {
+        let t = tokenize("", 8, VOCAB_SIZE);
+        assert!(t.is_empty());
+        assert_eq!(t.ids, vec![0; 8]);
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        prop::check("token ids in range", 200, |rng| {
+            let text = prop::sentence(rng, 20);
+            let t = tokenize(&text, SEQ_LEN, VOCAB_SIZE);
+            prop::assert_prop(
+                t.ids.iter().all(|&i| (0..VOCAB_SIZE as i32).contains(&i)),
+                "id out of range",
+            )
+        });
+    }
+
+    #[test]
+    fn mask_is_prefix_of_ones() {
+        prop::check("mask prefix", 200, |rng| {
+            let text = prop::sentence(rng, 80);
+            let t = tokenize(&text, 32, VOCAB_SIZE);
+            let first_pad = t.mask.iter().position(|&m| m == 0.0).unwrap_or(32);
+            for (i, (&id, &m)) in t.ids.iter().zip(&t.mask).enumerate() {
+                prop::assert_prop((m == 1.0) == (i < first_pad), "mask not prefix")?;
+                prop::assert_prop((m == 1.0) == (id != PAD_ID), "mask/id mismatch")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = tokenize("some fixed text 123", 32, VOCAB_SIZE);
+        let b = tokenize("some fixed text 123", 32, VOCAB_SIZE);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn case_and_punct_insensitive() {
+        let a = tokenize("Hello World", 8, VOCAB_SIZE);
+        let b = tokenize("hello, world!!!", 8, VOCAB_SIZE);
+        assert_eq!(a, b);
+    }
+}

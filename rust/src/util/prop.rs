@@ -1,0 +1,149 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a closure over `n` deterministically generated cases and
+//! reports the seed of the first failing case so it can be replayed with
+//! [`replay`]. Generators are plain functions over [`Rng`].
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla_extension rpath (lib tests
+//! # // cover this API); compile-checked only.
+//! use eagle::util::prop;
+//! prop::check("sum commutes", 256, |rng| {
+//!     let a = rng.f64();
+//!     let b = rng.f64();
+//!     prop::assert_close(a + b, b + a, 1e-12, "commutativity")
+//! });
+//! ```
+
+use super::Rng;
+
+/// Result of a single property case. `Err` carries a human-readable reason.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` deterministic cases of `property`. Panics (with the failing
+/// case seed) on the first failure.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    for case in 0..cases {
+        let seed = fixed_seed(name, case);
+        let mut rng = Rng::new(seed);
+        if let Err(reason) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}): {reason}"
+            );
+        }
+    }
+}
+
+/// Re-run a single case by seed (for debugging a reported failure).
+pub fn replay<F>(seed: u64, mut property: F) -> CaseResult
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    let mut rng = Rng::new(seed);
+    property(&mut rng)
+}
+
+/// Deterministic per-case seed derived from the property name.
+fn fixed_seed(name: &str, case: u64) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ case.wrapping_mul(0x9e3779b97f4a7c15)
+}
+
+/// Approximate float equality assertion for property bodies.
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> CaseResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+/// Boolean assertion for property bodies.
+pub fn assert_prop(cond: bool, what: &str) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+/// Generate a random f32 vector with entries in [-1, 1).
+pub fn vec_f32(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+/// Generate a random lowercase ASCII "sentence" of 1..=max_words words.
+pub fn sentence(rng: &mut Rng, max_words: usize) -> String {
+    let n = 1 + rng.below(max_words);
+    let mut out = String::new();
+    for i in 0..n {
+        if i > 0 {
+            out.push(' ');
+        }
+        let wlen = 1 + rng.below(8);
+        for _ in 0..wlen {
+            out.push((b'a' + rng.below(26) as u8) as char);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 64, |rng| {
+            let x = rng.f64();
+            assert_prop((0.0..1.0).contains(&x), "f64 in unit interval")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 8, |rng| {
+            assert_prop(rng.f64() < -1.0, "impossible")
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        let mut captured = Vec::new();
+        check("capture", 4, |rng| {
+            captured.push(rng.next_u64());
+            Ok(())
+        });
+        let seed = fixed_seed("capture", 2);
+        let r = replay(seed, |rng| {
+            assert_prop(rng.next_u64() == captured[2], "replay mismatch")
+        });
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn sentence_is_nonempty_lowercase() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let s = sentence(&mut rng, 10);
+            assert!(!s.is_empty());
+            assert!(s.chars().all(|c| c.is_ascii_lowercase() || c == ' '));
+        }
+    }
+
+    #[test]
+    fn vec_f32_range() {
+        let mut rng = Rng::new(2);
+        for x in vec_f32(&mut rng, 1000) {
+            assert!((-1.0..1.0).contains(&x));
+        }
+    }
+}

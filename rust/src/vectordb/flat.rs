@@ -1,0 +1,242 @@
+//! Exact flat (brute-force) vector index with a blocked scan.
+//!
+//! Vectors live in one contiguous row-major matrix; the scan walks it in
+//! cache-friendly blocks computing dot products with 4-way unrolling and
+//! feeds a bounded [`TopK`]. For the corpus sizes RouterBench yields
+//! (10^3–10^4 entries at D=256) an exact scan is faster than any index —
+//! this is the default request-path store (§Perf).
+
+use super::topk::TopK;
+use super::{Feedback, Hit, VectorIndex};
+
+/// Rows scanned per block; sized so a block (BLOCK_ROWS x 256 f32 = 64 KiB)
+/// stays L2-resident.
+const BLOCK_ROWS: usize = 64;
+
+/// Exact flat store.
+#[derive(Debug, Clone)]
+pub struct FlatStore {
+    dim: usize,
+    data: Vec<f32>,
+    payloads: Vec<Feedback>,
+}
+
+impl FlatStore {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        FlatStore { dim, data: Vec::new(), payloads: Vec::new() }
+    }
+
+    /// Pre-allocate for `capacity` vectors.
+    pub fn with_capacity(dim: usize, capacity: usize) -> Self {
+        let mut s = Self::new(dim);
+        s.data.reserve(capacity * dim);
+        s.payloads.reserve(capacity);
+        s
+    }
+
+    /// Raw row access (used by the IVF builder).
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Scan scoring into a caller-provided TopK (allocation-free reuse).
+    pub fn search_into(&self, query: &[f32], topk: &mut TopK) {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        let n = self.payloads.len();
+        let mut base = 0usize;
+        while base < n {
+            let end = (base + BLOCK_ROWS).min(n);
+            for i in base..end {
+                let row = &self.data[i * self.dim..(i + 1) * self.dim];
+                let s = dot_unrolled(row, query);
+                topk.push(i as u32, s);
+            }
+            base = end;
+        }
+    }
+
+    /// Dot product of the query against every stored row (dense scores).
+    /// Used by tests and by the HLO-scorer agreement checks.
+    pub fn score_all(&self, query: &[f32]) -> Vec<f32> {
+        assert_eq!(query.len(), self.dim);
+        (0..self.payloads.len())
+            .map(|i| dot_unrolled(self.row(i), query))
+            .collect()
+    }
+}
+
+/// 4-way unrolled dot product; the scan hot loop.
+#[inline]
+pub(crate) fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+impl VectorIndex for FlatStore {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.payloads.len()
+    }
+
+    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32 {
+        assert_eq!(vector.len(), self.dim, "vector dim mismatch");
+        let id = self.payloads.len() as u32;
+        self.data.extend_from_slice(vector);
+        self.payloads.push(feedback);
+        id
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        let mut topk = TopK::new(k);
+        self.search_into(query, &mut topk);
+        topk.into_sorted()
+            .into_iter()
+            .map(|(id, score)| Hit { id, score })
+            .collect()
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        &self.payloads[id as usize]
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        self.row(id as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn add_and_len() {
+        let mut s = FlatStore::new(4);
+        assert!(s.is_empty());
+        let id = s.add(&[1.0, 0.0, 0.0, 0.0], dummy_feedback(0));
+        assert_eq!(id, 0);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.vector(0), &[1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn rejects_wrong_dim() {
+        let mut s = FlatStore::new(4);
+        s.add(&[1.0, 0.0], dummy_feedback(0));
+    }
+
+    #[test]
+    fn search_exact_match_first() {
+        let mut rng = Rng::new(1);
+        let mut s = FlatStore::new(16);
+        let mut vectors = Vec::new();
+        for i in 0..50 {
+            let v = random_unit(&mut rng, 16);
+            s.add(&v, dummy_feedback(i));
+            vectors.push(v);
+        }
+        let hits = s.search(&vectors[17], 5);
+        assert_eq!(hits[0].id, 17);
+        assert!((hits[0].score - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn search_matches_naive_reference() {
+        prop::check("flat == naive", 60, |rng| {
+            let dim = [8, 16, 256][rng.below(3)];
+            let n = 1 + rng.below(300);
+            let k = 1 + rng.below(25);
+            let mut s = FlatStore::new(dim);
+            let mut vectors = Vec::new();
+            for i in 0..n {
+                let v = random_unit(rng, dim);
+                s.add(&v, dummy_feedback(i));
+                vectors.push(v);
+            }
+            let q = random_unit(rng, dim);
+            let hits = s.search(&q, k);
+            let naive = naive_search(&vectors, &q, k);
+            prop::assert_prop(hits.len() == naive.len(), "lengths differ")?;
+            for (h, (ni, ns)) in hits.iter().zip(&naive) {
+                // scores must agree tightly; ids may differ only on ties
+                prop::assert_close(h.score as f64, *ns as f64, 1e-5, "score")?;
+                if (h.score - ns).abs() > 1e-6 {
+                    prop::assert_prop(h.id == *ni, "id mismatch")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn search_k_larger_than_store() {
+        let mut s = FlatStore::new(4);
+        s.add(&[1.0, 0.0, 0.0, 0.0], dummy_feedback(0));
+        let hits = s.search(&[1.0, 0.0, 0.0, 0.0], 10);
+        assert_eq!(hits.len(), 1);
+    }
+
+    #[test]
+    fn search_empty_store() {
+        let s = FlatStore::new(4);
+        assert!(s.search(&[1.0, 0.0, 0.0, 0.0], 3).is_empty());
+    }
+
+    #[test]
+    fn score_all_matches_search_scores() {
+        let mut rng = Rng::new(5);
+        let mut s = FlatStore::new(32);
+        for i in 0..40 {
+            s.add(&random_unit(&mut rng, 32), dummy_feedback(i));
+        }
+        let q = random_unit(&mut rng, 32);
+        let dense = s.score_all(&q);
+        for h in s.search(&q, 40) {
+            assert!((dense[h.id as usize] - h.score).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        prop::check("dot unrolled", 100, |rng| {
+            let n = rng.below(70);
+            let a = prop::vec_f32(rng, n);
+            let b = prop::vec_f32(rng, n);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            prop::assert_close(
+                dot_unrolled(&a, &b) as f64,
+                naive as f64,
+                1e-4,
+                "dot",
+            )
+        });
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        let mut s = FlatStore::new(4);
+        let fb = dummy_feedback(3);
+        let id = s.add(&[0.5, 0.5, 0.5, 0.5], fb.clone());
+        assert_eq!(s.feedback(id), &fb);
+    }
+}

@@ -1,0 +1,367 @@
+//! IVF (inverted-file) approximate index: k-means coarse quantizer over the
+//! stored vectors; queries probe the `nprobe` nearest cells.
+//!
+//! This is the scaling path for stores beyond what the exact scan handles
+//! within the latency budget. Recall is tunable via `nprobe`; with
+//! `nprobe == n_cells` the search is exhaustive and exactly matches
+//! [`super::flat::FlatStore`] (tested below).
+//!
+//! Online inserts assign to the nearest existing centroid — O(n_cells · D) —
+//! so feedback ingestion never triggers a rebuild (the paper's real-time
+//! adaptation requirement). Centroids can be refreshed offline with
+//! [`IvfIndex::rebuild`].
+
+use super::flat::dot_unrolled;
+use super::topk::TopK;
+use super::{Feedback, Hit, VectorIndex};
+use crate::util::Rng;
+
+/// IVF build/search parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct IvfParams {
+    pub n_cells: usize,
+    pub nprobe: usize,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for IvfParams {
+    fn default() -> Self {
+        IvfParams { n_cells: 64, nprobe: 8, kmeans_iters: 10, seed: 0x1f5 }
+    }
+}
+
+/// Inverted-file index.
+#[derive(Debug, Clone)]
+pub struct IvfIndex {
+    dim: usize,
+    params: IvfParams,
+    centroids: Vec<f32>,       // [n_cells, dim]
+    cells: Vec<Vec<u32>>,      // entry ids per cell
+    data: Vec<f32>,            // all vectors, row-major by id
+    payloads: Vec<Feedback>,
+}
+
+impl IvfIndex {
+    /// Build from existing vectors (k-means over a sample).
+    pub fn build(dim: usize, vectors: &[Vec<f32>], payloads: Vec<Feedback>, params: IvfParams) -> Self {
+        assert_eq!(vectors.len(), payloads.len());
+        let mut idx = IvfIndex {
+            dim,
+            params,
+            centroids: Vec::new(),
+            cells: Vec::new(),
+            data: Vec::new(),
+            payloads: Vec::new(),
+        };
+        for v in vectors {
+            assert_eq!(v.len(), dim);
+            idx.data.extend_from_slice(v);
+        }
+        idx.payloads = payloads;
+        idx.rebuild();
+        idx
+    }
+
+    /// Empty index; first `rebuild` happens lazily once vectors exist.
+    pub fn new(dim: usize, params: IvfParams) -> Self {
+        IvfIndex {
+            dim,
+            params,
+            centroids: Vec::new(),
+            cells: Vec::new(),
+            data: Vec::new(),
+            payloads: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> IvfParams {
+        self.params
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    /// Nearest centroid by dot product (vectors are normalized).
+    fn assign(&self, v: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_s = f32::NEG_INFINITY;
+        for c in 0..self.n_cells() {
+            let s = dot_unrolled(self.centroid(c), v);
+            if s > best_s {
+                best_s = s;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Re-run k-means over the current contents and re-assign every vector.
+    pub fn rebuild(&mut self) {
+        let n = self.payloads.len();
+        if n == 0 {
+            self.centroids.clear();
+            self.cells.clear();
+            return;
+        }
+        let k = self.params.n_cells.min(n).max(1);
+        let mut rng = Rng::new(self.params.seed);
+
+        // init: k distinct random rows
+        let init = rng.sample_indices(n, k);
+        let mut centroids = Vec::with_capacity(k * self.dim);
+        for &i in &init {
+            centroids.extend_from_slice(self.row(i));
+        }
+        self.centroids = centroids;
+        self.cells = vec![Vec::new(); k];
+
+        let mut assignment = vec![0usize; n];
+        for _ in 0..self.params.kmeans_iters {
+            // assignment step
+            for i in 0..n {
+                assignment[i] = self.assign(self.row(i));
+            }
+            // update step (mean then renormalize — spherical k-means)
+            let mut sums = vec![0.0f32; k * self.dim];
+            let mut counts = vec![0usize; k];
+            for i in 0..n {
+                let c = assignment[i];
+                counts[c] += 1;
+                let row = &self.data[i * self.dim..(i + 1) * self.dim];
+                for (d, &x) in row.iter().enumerate() {
+                    sums[c * self.dim + d] += x;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    // re-seed empty cell with a random row
+                    let r = rng.below(n);
+                    sums[c * self.dim..(c + 1) * self.dim]
+                        .copy_from_slice(self.row(r));
+                    counts[c] = 1;
+                }
+                let slice = &mut sums[c * self.dim..(c + 1) * self.dim];
+                crate::util::l2_normalize(slice);
+            }
+            self.centroids = sums;
+        }
+
+        // final assignment into cells
+        for cell in &mut self.cells {
+            cell.clear();
+        }
+        for i in 0..n {
+            let c = self.assign(self.row(i));
+            self.cells[c].push(i as u32);
+        }
+    }
+
+    /// Fraction of vectors in the largest cell (balance diagnostic).
+    pub fn max_cell_load(&self) -> f64 {
+        let n = self.payloads.len().max(1);
+        self.cells.iter().map(|c| c.len()).max().unwrap_or(0) as f64 / n as f64
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.payloads.len()
+    }
+
+    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32 {
+        assert_eq!(vector.len(), self.dim, "vector dim mismatch");
+        let id = self.payloads.len() as u32;
+        self.data.extend_from_slice(vector);
+        self.payloads.push(feedback);
+        if self.cells.is_empty() {
+            // bootstrap: first vector becomes the first centroid
+            self.centroids.extend_from_slice(vector);
+            self.cells.push(vec![id]);
+        } else {
+            let c = self.assign(vector);
+            self.cells[c].push(id);
+        }
+        id
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        if self.payloads.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        // rank cells by centroid similarity
+        let mut cell_scores = TopK::new(self.params.nprobe.max(1).min(self.n_cells()));
+        for c in 0..self.n_cells() {
+            cell_scores.push(c as u32, dot_unrolled(self.centroid(c), query));
+        }
+        let mut topk = TopK::new(k);
+        for (cell, _) in cell_scores.into_sorted() {
+            for &id in &self.cells[cell as usize] {
+                let s = dot_unrolled(self.row(id as usize), query);
+                topk.push(id, s);
+            }
+        }
+        topk.into_sorted()
+            .into_iter()
+            .map(|(id, score)| Hit { id, score })
+            .collect()
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        &self.payloads[id as usize]
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        self.row(id as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn build_random(
+        rng: &mut Rng,
+        n: usize,
+        dim: usize,
+        params: IvfParams,
+    ) -> (IvfIndex, Vec<Vec<f32>>) {
+        let vectors: Vec<Vec<f32>> = (0..n).map(|_| random_unit(rng, dim)).collect();
+        let payloads = (0..n).map(dummy_feedback).collect();
+        (IvfIndex::build(dim, &vectors, payloads, params), vectors)
+    }
+
+    #[test]
+    fn full_probe_matches_flat_exactly() {
+        prop::check("ivf nprobe=all == exact", 20, |rng| {
+            let n = 50 + rng.below(200);
+            let params = IvfParams { n_cells: 8, nprobe: 8, kmeans_iters: 4, seed: 1 };
+            let (idx, vectors) = build_random(rng, n, 16, params);
+            let q = random_unit(rng, 16);
+            let hits = idx.search(&q, 10);
+            let naive = naive_search(&vectors, &q, 10);
+            for (h, (ni, ns)) in hits.iter().zip(&naive) {
+                prop::assert_close(h.score as f64, *ns as f64, 1e-5, "score")?;
+                if (h.score - ns).abs() > 1e-6 {
+                    prop::assert_prop(h.id == *ni, "id")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partial_probe_recall_reasonable() {
+        // clustered data: recall@10 with nprobe=4/32 should be high
+        let mut rng = Rng::new(11);
+        let dim = 32;
+        let n_clusters = 16;
+        let centers: Vec<Vec<f32>> =
+            (0..n_clusters).map(|_| random_unit(&mut rng, dim)).collect();
+        let mut vectors = Vec::new();
+        for i in 0..800 {
+            let c = &centers[i % n_clusters];
+            let mut v: Vec<f32> = c
+                .iter()
+                .map(|&x| x + 0.15 * rng.normal() as f32)
+                .collect();
+            crate::util::l2_normalize(&mut v);
+            vectors.push(v);
+        }
+        let payloads = (0..vectors.len()).map(dummy_feedback).collect();
+        let params = IvfParams { n_cells: 32, nprobe: 4, kmeans_iters: 10, seed: 3 };
+        let idx = IvfIndex::build(dim, &vectors, payloads, params);
+
+        let mut recall_sum = 0.0;
+        let trials = 40;
+        for t in 0..trials {
+            let q = &vectors[t * 7 % vectors.len()];
+            let approx: Vec<u32> = idx.search(q, 10).iter().map(|h| h.id).collect();
+            let exact: Vec<u32> =
+                naive_search(&vectors, q, 10).iter().map(|(i, _)| *i).collect();
+            let inter = approx.iter().filter(|i| exact.contains(i)).count();
+            recall_sum += inter as f64 / 10.0;
+        }
+        let recall = recall_sum / trials as f64;
+        assert!(recall > 0.8, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn online_insert_searchable() {
+        let mut rng = Rng::new(5);
+        let (mut idx, _) = build_random(&mut rng, 100, 16, IvfParams::default());
+        let v = random_unit(&mut rng, 16);
+        let id = idx.add(&v, dummy_feedback(999));
+        // exhaustive probe must find the fresh vector as its own NN
+        let mut p = idx.params();
+        p.nprobe = idx.n_cells();
+        let exhaustive = IvfIndex { params: p, ..idx.clone() };
+        let hits = exhaustive.search(&v, 1);
+        assert_eq!(hits[0].id, id);
+        assert!((hits[0].score - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_index_bootstrap() {
+        let mut idx = IvfIndex::new(8, IvfParams::default());
+        assert!(idx.search(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], 3).is_empty());
+        let mut rng = Rng::new(2);
+        let v = random_unit(&mut rng, 8);
+        idx.add(&v, dummy_feedback(0));
+        assert_eq!(idx.search(&v, 1)[0].id, 0);
+    }
+
+    #[test]
+    fn rebuild_preserves_contents() {
+        let mut rng = Rng::new(9);
+        let (mut idx, vectors) = build_random(&mut rng, 150, 16, IvfParams::default());
+        idx.rebuild();
+        assert_eq!(idx.len(), 150);
+        // every id still present in exactly one cell
+        let mut seen = vec![false; 150];
+        for c in 0..idx.n_cells() {
+            for &id in &idx.cells[c] {
+                assert!(!seen[id as usize], "duplicate id {id}");
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // vectors unchanged
+        for (i, v) in vectors.iter().enumerate() {
+            assert_eq!(idx.vector(i as u32), v.as_slice());
+        }
+    }
+
+    #[test]
+    fn cells_not_degenerate() {
+        let mut rng = Rng::new(13);
+        let (idx, _) = build_random(&mut rng, 500, 16, IvfParams::default());
+        assert!(idx.max_cell_load() < 0.5, "load = {}", idx.max_cell_load());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(21);
+        let mut r2 = Rng::new(21);
+        let (a, _) = build_random(&mut r1, 120, 8, IvfParams::default());
+        let (b, _) = build_random(&mut r2, 120, 8, IvfParams::default());
+        let q = random_unit(&mut Rng::new(22), 8);
+        assert_eq!(a.search(&q, 5), b.search(&q, 5));
+    }
+}

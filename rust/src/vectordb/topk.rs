@@ -1,0 +1,203 @@
+//! Bounded top-k selector over (index, score) pairs.
+//!
+//! A fixed-capacity binary min-heap on score: O(n log k) selection with no
+//! per-candidate allocation — this sits inside the vector-scan hot loop.
+
+/// Collects the k highest-scoring items.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    // min-heap: heap[0] is the *worst* retained item
+    heap: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, heap: Vec::with_capacity(k) }
+    }
+
+    /// Reset for reuse without freeing the buffer.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current admission threshold: items scoring <= this (when full) are
+    /// rejected without a heap operation.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::NEG_INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    /// `a` is strictly worse than `b`: lower score, or equal score with a
+    /// higher index (so ties resolve to the lowest indices, matching a
+    /// stable sort by (score desc, index asc)).
+    #[inline]
+    fn worse(a: (f32, u32), b: (f32, u32)) -> bool {
+        a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+    }
+
+    /// Offer a candidate.
+    #[inline]
+    pub fn push(&mut self, index: u32, score: f32) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push((score, index));
+            self.sift_up(self.heap.len() - 1);
+        } else if Self::worse(self.heap[0], (score, index)) {
+            self.heap[0] = (score, index);
+            self.sift_down(0);
+        }
+    }
+
+    /// Drain into a (index, score) vector sorted by descending score.
+    /// Ties break by ascending index (deterministic).
+    pub fn into_sorted(mut self) -> Vec<(u32, f32)> {
+        self.heap
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap.into_iter().map(|(s, i)| (i, s)).collect()
+    }
+
+    /// Sorted snapshot without consuming (allocates).
+    pub fn sorted(&self) -> Vec<(u32, f32)> {
+        self.clone().into_sorted()
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::worse(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < n && Self::worse(self.heap[l], self.heap[worst]) {
+                worst = l;
+            }
+            if r < n && Self::worse(self.heap[r], self.heap[worst]) {
+                worst = r;
+            }
+            if worst == i {
+                return;
+            }
+            self.heap.swap(i, worst);
+            i = worst;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn selects_top_k() {
+        let mut t = TopK::new(3);
+        for (i, s) in [(0u32, 1.0f32), (1, 5.0), (2, 3.0), (3, 4.0), (4, 2.0)] {
+            t.push(i, s);
+        }
+        let out = t.into_sorted();
+        assert_eq!(out, vec![(1, 5.0), (3, 4.0), (2, 3.0)]);
+    }
+
+    #[test]
+    fn fewer_items_than_k() {
+        let mut t = TopK::new(10);
+        t.push(7, 0.5);
+        assert_eq!(t.into_sorted(), vec![(7, 0.5)]);
+    }
+
+    #[test]
+    fn k_zero() {
+        let mut t = TopK::new(0);
+        t.push(0, 1.0);
+        assert!(t.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn tie_break_by_index() {
+        let mut t = TopK::new(2);
+        t.push(9, 1.0);
+        t.push(3, 1.0);
+        t.push(5, 1.0);
+        let out = t.into_sorted();
+        assert_eq!(out[0].0, 3);
+    }
+
+    #[test]
+    fn threshold_tracks_worst() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), f32::NEG_INFINITY);
+        t.push(0, 1.0);
+        t.push(1, 2.0);
+        assert_eq!(t.threshold(), 1.0);
+        t.push(2, 3.0);
+        assert_eq!(t.threshold(), 2.0);
+    }
+
+    #[test]
+    fn clear_allows_reuse() {
+        let mut t = TopK::new(2);
+        t.push(0, 1.0);
+        t.clear();
+        assert!(t.is_empty());
+        t.push(1, 9.0);
+        assert_eq!(t.into_sorted(), vec![(1, 9.0)]);
+    }
+
+    #[test]
+    fn matches_naive_sort() {
+        prop::check("topk == sort-take-k", 200, |rng| {
+            let n = 1 + rng.below(200);
+            let k = 1 + rng.below(20);
+            let scores: Vec<f32> = (0..n).map(|_| (rng.below(1000) as f32) / 10.0).collect();
+            let mut t = TopK::new(k);
+            for (i, &s) in scores.iter().enumerate() {
+                t.push(i as u32, s);
+            }
+            let got = t.into_sorted();
+
+            let mut naive: Vec<(u32, f32)> =
+                scores.iter().enumerate().map(|(i, &s)| (i as u32, s)).collect();
+            naive.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            naive.truncate(k);
+            prop::assert_prop(got == naive, "mismatch with naive selection")
+        });
+    }
+
+    #[test]
+    fn deterministic_given_inputs() {
+        let run = || {
+            let mut rng = Rng::new(3);
+            let mut t = TopK::new(8);
+            for i in 0..500 {
+                t.push(i, rng.f32());
+            }
+            t.into_sorted()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,240 @@
+//! Robustness & extension coverage: failure injection on the artifact
+//! loading path, IVF-backed routing, config files on disk, snapshot
+//! corruption. No built artifacts required.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use eagle::config::{Config, EagleParams};
+use eagle::coordinator::router::{EagleRouter, Observation};
+use eagle::coordinator::Router;
+use eagle::elo::{Comparison, Outcome};
+use eagle::embedding::{BatcherOptions, EmbedService};
+use eagle::metrics::Metrics;
+use eagle::runtime::{Manifest, Runtime};
+use eagle::util::{l2_normalize, Rng};
+use eagle::vectordb::flat::FlatStore;
+use eagle::vectordb::ivf::{IvfIndex, IvfParams};
+use eagle::vectordb::VectorIndex;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eagle_robust_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    l2_normalize(&mut v);
+    v
+}
+
+fn rand_obs(rng: &mut Rng, dim: usize, n: usize) -> Vec<Observation> {
+    (0..n)
+        .map(|_| {
+            let a = rng.below(5);
+            let mut b = rng.below(4);
+            if b >= a {
+                b += 1;
+            }
+            let outcome = match rng.below(3) {
+                0 => Outcome::WinA,
+                1 => Outcome::WinB,
+                _ => Outcome::Draw,
+            };
+            Observation {
+                embedding: unit(rng, dim),
+                comparisons: vec![Comparison { a, b, outcome }],
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// failure injection: artifact loading
+
+#[test]
+fn embed_service_fails_cleanly_without_manifest() {
+    let dir = tmpdir("nomanifest");
+    let err = EmbedService::start(&dir, BatcherOptions::default(), Arc::new(Metrics::new()));
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("manifest.json"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn runtime_rejects_corrupt_manifest_json() {
+    let dir = tmpdir("badjson");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn runtime_rejects_missing_hlo_file() {
+    let dir = tmpdir("missinghlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format_version":1,
+            "model":{"vocab_size":64,"seq_len":8,"d_model":16,"n_heads":2,
+                     "n_layers":1,"d_ff":32,"seed":1},
+            "embed_batch_sizes":[1],"scorer_shapes":[],
+            "artifacts":[{"name":"embed_b1","kind":"embed",
+                          "file":"embed_b1.hlo.txt","batch":1,
+                          "seq_len":8,"out_dim":16}],
+            "weights":{"file":"weights.bin","dtype":"f32_le","total_elems":4,
+                       "sha256":"x","tensors":[
+                       {"name":"a","shape":[4],"offset_elems":0}]}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("weights.bin"), vec![0u8; 16]).unwrap();
+    let err = Runtime::load(&dir);
+    assert!(err.is_err());
+}
+
+#[test]
+fn runtime_rejects_garbage_hlo_text() {
+    let dir = tmpdir("garbagehlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format_version":1,
+            "model":{"vocab_size":64,"seq_len":8,"d_model":16,"n_heads":2,
+                     "n_layers":1,"d_ff":32,"seed":1},
+            "embed_batch_sizes":[1],"scorer_shapes":[],
+            "artifacts":[{"name":"embed_b1","kind":"embed",
+                          "file":"embed_b1.hlo.txt","batch":1,
+                          "seq_len":8,"out_dim":16}],
+            "weights":{"file":"weights.bin","dtype":"f32_le","total_elems":4,
+                       "sha256":"x","tensors":[
+                       {"name":"a","shape":[4],"offset_elems":0}]}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("weights.bin"), vec![0u8; 16]).unwrap();
+    std::fs::write(dir.join("embed_b1.hlo.txt"), "this is not hlo").unwrap();
+    assert!(Runtime::load(&dir).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// IVF-backed router (scaling path)
+
+#[test]
+fn ivf_router_agrees_with_flat_router() {
+    let mut rng = Rng::new(41);
+    let dim = 32;
+    let obs = rand_obs(&mut rng, dim, 600);
+
+    let flat = EagleRouter::fit(
+        EagleParams::default(),
+        5,
+        FlatStore::with_capacity(dim, obs.len()),
+        &obs,
+    );
+    let vectors: Vec<Vec<f32>> = obs.iter().map(|o| o.embedding.clone()).collect();
+    let payloads = obs
+        .iter()
+        .map(|o| eagle::vectordb::Feedback { comparisons: o.comparisons.clone() })
+        .collect();
+    let params = IvfParams { n_cells: 16, nprobe: 16, kmeans_iters: 6, seed: 2 };
+    let ivf_store = IvfIndex::build(dim, &vectors, payloads, params);
+    let mut ivf = EagleRouter::new(EagleParams::default(), 5, ivf_store);
+    // align the global tables (store contents already match)
+    ivf.restore_global(flat.global().ratings().as_slice(), flat.feedback_len());
+
+    // exhaustive probe => identical neighbor sets => identical scores
+    let mut agreements = 0;
+    for i in 0..50 {
+        let q = unit(&mut Rng::new(1000 + i), dim);
+        let sf = flat.scores(&q);
+        let si = ivf.scores(&q);
+        let top_f = sf.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let top_i = si.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        if top_f == top_i {
+            agreements += 1;
+        }
+    }
+    assert!(agreements >= 45, "flat/ivf top-choice agreement {agreements}/50");
+}
+
+#[test]
+fn ivf_router_online_insert() {
+    let mut rng = Rng::new(43);
+    let dim = 16;
+    let store = IvfIndex::new(dim, IvfParams::default());
+    let mut router = EagleRouter::new(EagleParams::default(), 5, store);
+    for obs in rand_obs(&mut rng, dim, 100) {
+        router.observe(obs);
+    }
+    assert_eq!(router.store().len(), 100);
+    let q = unit(&mut rng, dim);
+    assert_eq!(router.scores(&q).len(), 5);
+}
+
+// ---------------------------------------------------------------------------
+// config file on disk
+
+#[test]
+fn config_file_roundtrip() {
+    let dir = tmpdir("config");
+    let path = dir.join("eagle.toml");
+    std::fs::write(
+        &path,
+        "# test config\n[eagle]\np = 0.25\nn_neighbors = 10\n\n[server]\nworkers = 2\n",
+    )
+    .unwrap();
+    let cfg = Config::load(Some(&path), &[]).unwrap();
+    assert_eq!(cfg.eagle.p, 0.25);
+    assert_eq!(cfg.eagle.n_neighbors, 10);
+    assert_eq!(cfg.server.workers, 2);
+    // CLI override beats file
+    let cfg2 = Config::load(Some(&path), &[("eagle.p".into(), "0.75".into())]).unwrap();
+    assert_eq!(cfg2.eagle.p, 0.75);
+}
+
+#[test]
+fn config_file_invalid_values_rejected() {
+    let dir = tmpdir("badconfig");
+    let path = dir.join("eagle.toml");
+    std::fs::write(&path, "[eagle]\np = 1.5\n").unwrap();
+    assert!(Config::load(Some(&path), &[]).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// snapshot corruption
+
+#[test]
+fn snapshot_corruption_detected() {
+    let mut rng = Rng::new(47);
+    let obs = rand_obs(&mut rng, 8, 40);
+    let router = EagleRouter::fit(EagleParams::default(), 5, FlatStore::new(8), &obs);
+    let snap = eagle::coordinator::state::snapshot(&router);
+
+    // truncation
+    assert!(eagle::coordinator::state::restore(&snap[..snap.len() / 2]).is_err());
+    // rating arity mismatch
+    let bad = snap.replace("\"n_models\":5", "\"n_models\":7");
+    assert!(eagle::coordinator::state::restore(&bad).is_err());
+}
+
+#[test]
+fn snapshot_restore_after_many_updates() {
+    let mut rng = Rng::new(53);
+    let mut router = EagleRouter::fit(
+        EagleParams::default(),
+        5,
+        FlatStore::new(8),
+        &rand_obs(&mut rng, 8, 50),
+    );
+    for chunk in rand_obs(&mut rng, 8, 200).chunks(10) {
+        router.update(chunk);
+    }
+    let restored =
+        eagle::coordinator::state::restore(&eagle::coordinator::state::snapshot(&router))
+            .unwrap();
+    assert_eq!(restored.feedback_len(), router.feedback_len());
+    let q = unit(&mut rng, 8);
+    let a = router.scores(&q);
+    let b = restored.scores(&q);
+    for m in 0..5 {
+        assert!((a[m] - b[m]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,183 @@
+//! End-to-end router pipeline tests over the synthetic benchmark
+//! (HashEmbedder rig: artifact-free, fast, deterministic). The paper's
+//! qualitative claims are asserted here at small scale; full-scale numbers
+//! live in the bench targets + EXPERIMENTS.md.
+
+use eagle::baselines::knn::KnnPredictor;
+use eagle::baselines::mlp::{MlpOptions, MlpPredictor};
+use eagle::baselines::svm::{SvmOptions, SvmPredictor};
+use eagle::baselines::QualityPredictor;
+use eagle::config::EagleParams;
+use eagle::coordinator::{PredictorRouter, Router};
+use eagle::eval::harness::{bench_data_params, EmbedderRig, Experiment};
+use eagle::eval::{oracle_curve, summed_auc};
+use eagle::routerbench::DATASETS;
+
+fn experiment(seed: u64, per_dataset: usize) -> Experiment {
+    let rig = EmbedderRig::hash();
+    Experiment::build(&bench_data_params(seed, per_dataset), &rig)
+}
+
+#[test]
+fn eagle_beats_every_baseline_on_summed_auc() {
+    let exp = experiment(11, 400);
+    let cfg = eagle::config::Config::default();
+
+    let mut sums = std::collections::BTreeMap::new();
+    for si in 0..DATASETS.len() {
+        // eagle
+        let router = exp.fit_eagle(si, EagleParams::default(), 1.0);
+        *sums.entry("eagle").or_insert(0.0) += exp.eval(&router, si).auc();
+        // knn
+        let mut knn = KnnPredictor::new(cfg.baselines.knn_neighbors);
+        knn.fit(&exp.train_set_feedback(si, 1.0));
+        *sums.entry("knn").or_insert(0.0) += exp.eval(&PredictorRouter::new(knn), si).auc();
+        // svm
+        let mut svm = SvmPredictor::new(SvmOptions::default());
+        svm.fit(&exp.train_set_feedback(si, 1.0));
+        *sums.entry("svm").or_insert(0.0) += exp.eval(&PredictorRouter::new(svm), si).auc();
+        // mlp (reduced epochs for test speed)
+        let mut mlp = MlpPredictor::new(MlpOptions { epochs: 25, ..Default::default() });
+        mlp.fit(&exp.train_set_feedback(si, 1.0));
+        *sums.entry("mlp").or_insert(0.0) += exp.eval(&PredictorRouter::new(mlp), si).auc();
+    }
+    let eagle = sums["eagle"];
+    println!("summed AUC: {sums:?}");
+    for (name, auc) in &sums {
+        if *name != "eagle" {
+            assert!(
+                eagle > auc - 1e-9,
+                "eagle ({eagle:.4}) must match-or-beat {name} ({auc:.4})"
+            );
+        }
+    }
+    // and strictly beat at least two of the three baselines
+    let strictly = sums.iter().filter(|(n, a)| **n != "eagle" && eagle > **a).count();
+    assert!(strictly >= 2, "eagle strictly beats only {strictly} baselines: {sums:?}");
+}
+
+#[test]
+fn oracle_dominates_all_routers() {
+    let exp = experiment(13, 250);
+    for si in [0, 3, 5] {
+        let router = exp.fit_eagle(si, EagleParams::default(), 1.0);
+        let r_auc = exp.eval(&router, si).auc();
+        let o_auc = oracle_curve(&exp.split(si).test, &exp.policy, DATASETS[si]).auc();
+        assert!(o_auc >= r_auc - 1e-9, "oracle {o_auc} vs eagle {r_auc} on {si}");
+    }
+}
+
+#[test]
+fn combined_beats_both_ablations_in_aggregate() {
+    // Fig 4a's shape: Eagle >= max(Eagle-Global, Eagle-Local) summed.
+    let exp = experiment(17, 400);
+    let mut full = Vec::new();
+    let mut global = Vec::new();
+    let mut local = Vec::new();
+    for si in 0..DATASETS.len() {
+        let mk = |p: f64| exp.fit_eagle(si, EagleParams { p, ..Default::default() }, 1.0);
+        full.push(exp.eval(&mk(0.5), si));
+        global.push(exp.eval(&mk(1.0), si));
+        local.push(exp.eval(&mk(0.0), si));
+    }
+    let (f, g, l) = (summed_auc(&full), summed_auc(&global), summed_auc(&local));
+    println!("full={f:.4} global={g:.4} local={l:.4}");
+    assert!(f >= g - 0.02, "combined ({f}) much worse than global ({g})");
+    assert!(f >= l - 0.02, "combined ({f}) much worse than local ({l})");
+    // and strictly better than at least one ablation
+    assert!(f > g || f > l, "combined adds nothing: f={f} g={g} l={l}");
+}
+
+#[test]
+fn more_data_does_not_hurt_eagle() {
+    // Fig 3b's shape: AUC at 100% >= AUC at 70% (up to noise), summed.
+    let exp = experiment(19, 400);
+    let mut auc70 = 0.0;
+    let mut auc100 = 0.0;
+    for si in 0..DATASETS.len() {
+        let r70 = exp.fit_eagle(si, EagleParams::default(), 0.7);
+        let r100 = exp.fit_eagle(si, EagleParams::default(), 1.0);
+        auc70 += exp.eval(&r70, si).auc();
+        auc100 += exp.eval(&r100, si).auc();
+    }
+    println!("sum AUC 70%={auc70:.4} 100%={auc100:.4}");
+    assert!(auc100 >= auc70 - 0.05, "quality collapsed with more data");
+}
+
+#[test]
+fn incremental_update_is_much_faster_than_baseline_retrain() {
+    // Table 3a's shape at test scale: Eagle's +15% update beats MLP
+    // retraining by a wide margin.
+    use std::time::Instant;
+    let exp = experiment(23, 400);
+    let si = 0;
+
+    // Eagle: fit on 70%, time the +15% increment.
+    let mut router = exp.fit_eagle(si, EagleParams::default(), 0.7);
+    let obs85 = exp.observations(si, 0.85);
+    let new: Vec<_> = obs85[exp.observations(si, 0.7).len()..].to_vec();
+    let t0 = Instant::now();
+    router.update(&new);
+    let eagle_update = t0.elapsed().as_secs_f64();
+
+    // MLP: fit on 70%, time the retrain at 85%.
+    let mut mlp = MlpPredictor::new(MlpOptions { epochs: 20, ..Default::default() });
+    mlp.fit(&exp.train_set_feedback(si, 0.7));
+    let t1 = Instant::now();
+    let inc = exp.train_set_feedback(si, 0.85);
+    let delta = inc.suffix(exp.train_set_feedback(si, 0.7).len());
+    mlp.update(&delta);
+    let mlp_update = t1.elapsed().as_secs_f64();
+
+    println!("eagle update {eagle_update:.6}s vs mlp retrain {mlp_update:.6}s");
+    assert!(
+        mlp_update > eagle_update * 20.0,
+        "expected >=20x gap, got eagle={eagle_update} mlp={mlp_update}"
+    );
+}
+
+#[test]
+fn router_scores_are_deterministic() {
+    let exp = experiment(29, 150);
+    let r1 = exp.fit_eagle(0, EagleParams::default(), 1.0);
+    let r2 = exp.fit_eagle(0, EagleParams::default(), 1.0);
+    for emb in exp.test_emb[0].iter().take(20) {
+        assert_eq!(r1.scores(emb), r2.scores(emb));
+    }
+}
+
+#[test]
+fn neighbor_size_sweep_runs_and_n1_is_weakest() {
+    // Fig 4b's endpoints: a starved neighborhood (N=1) shouldn't beat the
+    // paper's N=20 on aggregate (local-only emphasis).
+    let exp = experiment(31, 400);
+    let mut auc_n1 = 0.0;
+    let mut auc_n20 = 0.0;
+    for si in 0..DATASETS.len() {
+        let mk = |n: usize| {
+            exp.fit_eagle(
+                si,
+                EagleParams { p: 0.0, n_neighbors: n, ..Default::default() },
+                1.0,
+            )
+        };
+        auc_n1 += exp.eval(&mk(1), si).auc();
+        auc_n20 += exp.eval(&mk(20), si).auc();
+    }
+    println!("local-only sum AUC N=1 {auc_n1:.4} vs N=20 {auc_n20:.4}");
+    // Our trajectory-averaged local estimator degrades gracefully at small
+    // N (it stays near the global seed), so the paper's sharp N=10 dropoff
+    // softens; assert the weak form (see EXPERIMENTS.md Fig 4b notes).
+    assert!(auc_n20 >= auc_n1 - 0.05);
+}
+
+#[test]
+fn snapshot_roundtrip_preserves_eval() {
+    let exp = experiment(37, 200);
+    let router = exp.fit_eagle(2, EagleParams::default(), 1.0);
+    let snap = eagle::coordinator::state::snapshot(&router);
+    let restored = eagle::coordinator::state::restore(&snap).unwrap();
+    let a = exp.eval(&router, 2).auc();
+    let b = exp.eval(&restored, 2).auc();
+    assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+}

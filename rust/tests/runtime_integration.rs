@@ -1,0 +1,236 @@
+//! End-to-end runtime integration: load real AOT artifacts, execute on the
+//! PJRT CPU client, and compare against golden vectors emitted by the
+//! python compile path. Skipped (with a message) if `make artifacts` has
+//! not been run.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use eagle::embedding::{BatcherOptions, EmbedService, Embedder, ServiceEmbedder};
+use eagle::json;
+use eagle::metrics::Metrics;
+use eagle::runtime::{Manifest, Runtime};
+use eagle::util::cosine;
+use eagle::vectordb::flat::FlatStore;
+use eagle::vectordb::VectorIndex;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+struct Golden {
+    texts: Vec<String>,
+    embeddings: Vec<Vec<f32>>,
+    tokens: Vec<Vec<i32>>,
+}
+
+fn load_golden(dir: &Path) -> Golden {
+    let text = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    let v = json::parse(&text).unwrap();
+    let texts = v
+        .get("texts")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_str().unwrap().to_string())
+        .collect();
+    let embeddings = v
+        .get("embeddings")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as f32).collect())
+        .collect();
+    let tokens = v
+        .get("tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect())
+        .collect();
+    Golden { texts, embeddings, tokens }
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.model.seq_len, eagle::tokenizer::SEQ_LEN);
+    assert_eq!(m.model.vocab_size, eagle::tokenizer::VOCAB_SIZE);
+    assert!(!m.embed_batch_sizes.is_empty());
+    assert!(!m.scorer_shapes.is_empty());
+    let w = eagle::runtime::read_weights(&m).unwrap();
+    assert_eq!(w.len(), m.weights_total_elems);
+}
+
+#[test]
+fn tokenizer_parity_with_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let golden = load_golden(&dir);
+    for (text, expected) in golden.texts.iter().zip(&golden.tokens) {
+        let t = eagle::tokenizer::tokenize_default(text);
+        assert_eq!(&t.ids, expected, "tokenizer parity broke for {text:?}");
+    }
+}
+
+#[test]
+fn embed_matches_python_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    let golden = load_golden(&dir);
+    let m = runtime.manifest();
+    let seq = m.model.seq_len;
+    let d = m.model.d_model;
+
+    for (text, expected) in golden.texts.iter().zip(&golden.embeddings) {
+        let t = eagle::tokenizer::tokenize_default(text);
+        let out = runtime.embed_batch(&t.ids, &t.mask, 1).unwrap();
+        assert_eq!(out.len(), d);
+        let _ = seq;
+        let cos = cosine(&out, expected);
+        let max_err = out
+            .iter()
+            .zip(expected)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        // CPU XLA vs jax CPU: tiny numeric drift is expected.
+        if expected.iter().any(|&x| x != 0.0) {
+            assert!(cos > 0.9999, "cosine {cos} for {text:?}");
+        }
+        assert!(max_err < 1e-3, "max err {max_err} for {text:?}");
+    }
+}
+
+#[test]
+fn embed_batched_buckets_agree_with_b1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    let m = runtime.manifest();
+    let seq = m.model.seq_len;
+    let d = m.model.d_model;
+    let texts = ["alpha beta gamma", "the quick brown fox", "solve for x"];
+
+    // batch of 3 -> bucket 4 (padded)
+    let bucket = m.pick_bucket(texts.len()).unwrap();
+    let mut tokens = vec![0i32; bucket * seq];
+    let mut mask = vec![0f32; bucket * seq];
+    for (i, t) in texts.iter().enumerate() {
+        let tok = eagle::tokenizer::tokenize_default(t);
+        tokens[i * seq..(i + 1) * seq].copy_from_slice(&tok.ids);
+        mask[i * seq..(i + 1) * seq].copy_from_slice(&tok.mask);
+    }
+    let batched = runtime.embed_batch(&tokens, &mask, bucket).unwrap();
+
+    for (i, t) in texts.iter().enumerate() {
+        let tok = eagle::tokenizer::tokenize_default(t);
+        let single = runtime.embed_batch(&tok.ids, &tok.mask, 1).unwrap();
+        let row = &batched[i * d..(i + 1) * d];
+        let max_err = row
+            .iter()
+            .zip(&single)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-4, "bucket/b1 mismatch {max_err} for {t:?}");
+    }
+}
+
+#[test]
+fn scorer_hlo_matches_rust_scan() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    let m = runtime.manifest();
+    let d = m.model.d_model;
+    let (q_n, n) = m.scorer_shapes[0];
+
+    let mut rng = eagle::util::Rng::new(99);
+    let mut store = FlatStore::new(d);
+    let mut corpus = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        eagle::util::l2_normalize(&mut v);
+        corpus.extend_from_slice(&v);
+        store.add(
+            &v,
+            eagle::vectordb::Feedback::single(eagle::elo::Comparison {
+                a: 0,
+                b: 1,
+                outcome: eagle::elo::Outcome::WinA,
+            }),
+        );
+        let _ = i;
+    }
+    let mut queries = Vec::with_capacity(q_n * d);
+    for _ in 0..q_n {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        eagle::util::l2_normalize(&mut v);
+        queries.extend_from_slice(&v);
+    }
+
+    let hlo_scores = runtime.score(&queries, q_n, &corpus, n).unwrap();
+    for qi in 0..q_n {
+        let q = &queries[qi * d..(qi + 1) * d];
+        let rust_scores = store.score_all(q);
+        for i in 0..n {
+            let diff = (hlo_scores[qi * n + i] - rust_scores[i]).abs();
+            assert!(diff < 1e-4, "scorer mismatch at ({qi},{i}): {diff}");
+        }
+    }
+}
+
+#[test]
+fn embed_service_batches_concurrent_callers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let svc = EmbedService::start(
+        &dir,
+        BatcherOptions { batch_window_us: 2000, max_batch: 16 },
+        metrics.clone(),
+    )
+    .unwrap();
+    let handle = svc.handle();
+
+    let threads: Vec<_> = (0..8)
+        .map(|i| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let text = format!("request number {i} about topic {}", i % 3);
+                h.embed_one(&text).unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<Vec<f32>> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    for v in &results {
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3);
+    }
+    assert_eq!(metrics.embed_queries.get(), 8);
+    // with an ample window at least some requests must have shared a batch
+    assert!(
+        metrics.embed_batches.get() < 8,
+        "no batching happened: {} batches",
+        metrics.embed_batches.get()
+    );
+
+    // identical text embeds identically through the service
+    let a = handle.embed_one("same text twice").unwrap();
+    let b = handle.embed_one("same text twice").unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn service_embedder_trait_adapter() {
+    let Some(dir) = artifacts_dir() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let svc = EmbedService::start(&dir, BatcherOptions::default(), metrics).unwrap();
+    let embedder = ServiceEmbedder::new(svc.handle());
+    assert_eq!(embedder.dim(), 256);
+    let vs = embedder.embed(&["one", "two"]);
+    assert_eq!(vs.len(), 2);
+    assert_ne!(vs[0], vs[1]);
+}

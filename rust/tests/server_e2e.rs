@@ -1,0 +1,228 @@
+//! Full-stack serving tests: TCP server + PJRT embedder + Eagle router.
+//! Skipped when artifacts are missing (run `make artifacts`).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use eagle::config::EagleParams;
+use eagle::coordinator::registry::ModelRegistry;
+use eagle::coordinator::router::EagleRouter;
+use eagle::embedding::{BatcherOptions, EmbedService};
+use eagle::metrics::Metrics;
+use eagle::server::client::EagleClient;
+use eagle::server::{Server, ServerState};
+use eagle::vectordb::flat::FlatStore;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn start_server(dir: &Path) -> (Server, EmbedService, String) {
+    start_server_with_snapshot(dir, None)
+}
+
+fn start_server_with_snapshot(
+    dir: &Path,
+    snapshot: Option<std::path::PathBuf>,
+) -> (Server, EmbedService, String) {
+    let metrics = Arc::new(Metrics::new());
+    let service = EmbedService::start(
+        dir,
+        BatcherOptions { batch_window_us: 100, max_batch: 16 },
+        metrics.clone(),
+    )
+    .unwrap();
+    let registry = ModelRegistry::routerbench();
+    let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(256));
+    let mut state = ServerState::new(router, registry, service.handle(), metrics);
+    if let Some(p) = snapshot {
+        state = state.with_snapshot_path(p);
+    }
+    let state = Arc::new(state);
+    let server = Server::start(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    (server, service, addr)
+}
+
+#[test]
+fn snapshot_op_persists_live_state() {
+    let Some(dir) = artifacts_dir() else { return };
+    let snap_path = std::env::temp_dir()
+        .join(format!("eagle_server_snap_{}.json", std::process::id()));
+    let (server, _service, addr) = start_server_with_snapshot(&dir, Some(snap_path.clone()));
+    let mut client = EagleClient::connect(&addr).unwrap();
+
+    for i in 0..5 {
+        client
+            .feedback(&format!("snapshot test prompt {i}"), "gpt-4", "mistral-7b-chat", 1.0)
+            .unwrap();
+    }
+    // wait for applier
+    for _ in 0..50 {
+        if server.state.router.read().unwrap().feedback_len() == 5 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let (path, entries) = client.snapshot().unwrap();
+    assert_eq!(path, snap_path.display().to_string());
+    assert_eq!(entries, 5);
+
+    // the snapshot restores to an equivalent router
+    let restored = eagle::coordinator::state::load_from(&snap_path).unwrap();
+    assert_eq!(restored.feedback_len(), 5);
+    let g = ModelRegistry::routerbench().index_of("gpt-4").unwrap();
+    let m = ModelRegistry::routerbench().index_of("mistral-7b-chat").unwrap();
+    assert!(restored.global().ratings()[g] > restored.global().ratings()[m]);
+
+    std::fs::remove_file(&snap_path).ok();
+    server.shutdown();
+}
+
+#[test]
+fn snapshot_op_disabled_without_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (server, _service, addr) = start_server(&dir);
+    let mut client = EagleClient::connect(&addr).unwrap();
+    let err = client.snapshot();
+    assert!(err.is_err());
+    assert!(format!("{:#}", err.err().unwrap()).contains("disabled"));
+    server.shutdown();
+}
+
+#[test]
+fn route_feedback_stats_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (server, _service, addr) = start_server(&dir);
+
+    let mut client = EagleClient::connect(&addr).unwrap();
+    client.ping().unwrap();
+
+    // generous budget -> strongest global model initially arbitrary, but a
+    // decision must come back with a known model name
+    let d = client.route("solve the equation 3x + 5 = 20", 1.0).unwrap();
+    let registry = ModelRegistry::routerbench();
+    assert!(registry.index_of(&d.model).is_some(), "unknown model {}", d.model);
+    assert_eq!(registry.index_of(&d.model), Some(d.model_index));
+
+    // tiny budget -> cheapest model
+    let cheap = client.route("cheap question", 1e-9).unwrap();
+    let cheapest = registry.cheapest_available().unwrap();
+    assert_eq!(cheap.model_index, cheapest);
+
+    // feedback: gpt-4 beat llama-2-13b-chat on a math prompt
+    client
+        .feedback("solve the equation 3x + 5 = 20", "gpt-4", "llama-2-13b-chat", 1.0)
+        .unwrap();
+
+    // give the applier a moment, then check state moved
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    {
+        let router = server.state.router.read().unwrap();
+        assert_eq!(router.feedback_len(), 1);
+        let g = registry.index_of("gpt-4").unwrap();
+        let l = registry.index_of("llama-2-13b-chat").unwrap();
+        assert!(router.global().ratings()[g] > router.global().ratings()[l]);
+    }
+
+    let (report, requests, feedback) = client.stats().unwrap();
+    assert!(requests >= 2, "requests = {requests}");
+    assert_eq!(feedback, 1);
+    assert!(report.contains("route_latency"));
+
+    server.shutdown();
+}
+
+#[test]
+fn feedback_moves_routing_decisions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (server, _service, addr) = start_server(&dir);
+    let mut client = EagleClient::connect(&addr).unwrap();
+
+    // hammer feedback: mistral-7b-chat (cheap) beats everything on "poetry"
+    for i in 0..40 {
+        let text = format!("write a short poem about the sea {i}");
+        client.feedback(&text, "mistral-7b-chat", "gpt-4", 1.0).unwrap();
+        client.feedback(&text, "mistral-7b-chat", "claude-v2", 1.0).unwrap();
+    }
+    // wait for the applier to drain
+    for _ in 0..50 {
+        if server.state.router.read().unwrap().feedback_len() == 80 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    assert_eq!(server.state.router.read().unwrap().feedback_len(), 80);
+
+    // now route a poetry query with a huge budget: trained preference wins
+    let d = client.route("write a short poem about the sea", 10.0).unwrap();
+    assert_eq!(d.model, "mistral-7b-chat", "routing ignored feedback");
+
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_errors_not_disconnects() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (server, _service, addr) = start_server(&dir);
+
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    for bad in [
+        "this is not json\n",
+        "{\"op\":\"bogus\"}\n",
+        "{\"op\":\"route\",\"text\":\"x\"}\n",
+        "{\"op\":\"feedback\",\"text\":\"x\",\"model_a\":\"gpt-4\",\"model_b\":\"gpt-4\",\"score_a\":1}\n",
+        "{\"op\":\"feedback\",\"text\":\"x\",\"model_a\":\"gpt-4\",\"model_b\":\"nope\",\"score_a\":1}\n",
+        "{\"op\":\"feedback\",\"text\":\"x\",\"model_a\":\"gpt-4\",\"model_b\":\"claude-v2\",\"score_a\":0.3}\n",
+    ] {
+        writer.write_all(bad.as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "expected error for {bad:?}, got {line}");
+    }
+
+    // connection still usable
+    writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"pong\":true"));
+
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (server, _service, addr) = start_server(&dir);
+
+    let handles: Vec<_> = (0..6)
+        .map(|t| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = EagleClient::connect(&addr).unwrap();
+                let mut models = Vec::new();
+                for i in 0..10 {
+                    let d = c.route(&format!("query {t}-{i} about topic {}", t % 3), 0.5).unwrap();
+                    models.push(d.model);
+                }
+                models
+            })
+        })
+        .collect();
+    for h in handles {
+        let models = h.join().unwrap();
+        assert_eq!(models.len(), 10);
+    }
+    assert!(server.state.metrics.requests.get() >= 60);
+    server.shutdown();
+}
