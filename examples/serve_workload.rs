@@ -22,7 +22,7 @@ use eagle::eval::harness::{bench_data_params, EmbedderRig, Experiment};
 use eagle::metrics::Metrics;
 use eagle::server::client::EagleClient;
 use eagle::server::{Server, ServerState};
-use eagle::vectordb::VectorIndex;
+use eagle::vectordb::ReadIndex;
 use eagle::util::{percentile, Rng};
 
 fn arg(name: &str, default: f64) -> f64 {
@@ -97,11 +97,26 @@ fn main() -> anyhow::Result<()> {
                 let mut client = EagleClient::connect(&addr)?;
                 let mut rng = Rng::new(c as u64 + 1);
                 let mut lat = Vec::with_capacity(per_client);
-                for i in 0..per_client {
+                let mut i = 0usize;
+                while i < per_client {
+                    // alternate single routes with batched slabs of 8 to
+                    // exercise the amortized route path
+                    if rng.chance(0.5) && per_client - i >= 8 {
+                        let slab: Vec<&str> = (0..8)
+                            .map(|j| prompts[(c * per_client + i + j) % prompts.len()].as_str())
+                            .collect();
+                        let t = Instant::now();
+                        let ds = client.route_batch(&slab, budget)?;
+                        let per = t.elapsed().as_secs_f64() * 1e3 / ds.len() as f64;
+                        lat.extend(std::iter::repeat(per).take(ds.len()));
+                        i += ds.len();
+                        continue;
+                    }
                     let prompt = &prompts[(c * per_client + i) % prompts.len()];
                     let t = Instant::now();
                     let d = client.route(prompt, budget)?;
                     lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    i += 1;
                     // 20% of requests yield a comparison verdict
                     if let Some(other) = d.compare_with {
                         if rng.chance(0.66) {
@@ -140,8 +155,17 @@ fn main() -> anyhow::Result<()> {
         metrics.embed_queries.get() as f64 / metrics.embed_batches.get().max(1) as f64
     );
     println!("server metrics  :\n{}", metrics.report());
-    let fb = server.state.router.read().unwrap().feedback_len();
+    let fb = {
+        let writer = server.state.writer.lock().unwrap();
+        writer.router().feedback_len()
+    };
+    let snap = server.state.snapshots.load();
     println!("feedback folded : {fb} comparisons (online, no retraining)");
+    println!(
+        "snapshot epoch  : {} ({} records visible to the route path)",
+        snap.epoch(),
+        snap.history_len()
+    );
 
     server.shutdown();
     Ok(())

@@ -4,17 +4,22 @@
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
-use eagle::config::EagleParams;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use eagle::config::{EagleParams, EpochParams};
 use eagle::coordinator::router::{EagleRouter, Observation};
+use eagle::coordinator::snapshot::RouterWriter;
 use eagle::coordinator::Router;
 use eagle::elo::{Comparison, EloEngine, GlobalElo, Outcome};
 use eagle::embedding::{BatcherOptions, EmbedService, Embedder, HashEmbedder};
 use eagle::metrics::Metrics;
 use eagle::tokenizer;
-use eagle::util::{l2_normalize, Rng};
+use eagle::util::{l2_normalize, percentile, Rng};
 use eagle::vectordb::flat::FlatStore;
 use eagle::vectordb::ivf::{IvfIndex, IvfParams};
-use eagle::vectordb::{Feedback, VectorIndex};
+use eagle::vectordb::{Feedback, ReadIndex, VectorIndex};
 
 const DIM: usize = 256;
 
@@ -112,6 +117,10 @@ fn main() {
     results.push(eagle::bench::bench("router/combined_scores_store5k", 400, || {
         std::hint::black_box(router.scores(&q));
     }));
+    let batch_queries: Vec<Vec<f32>> = (0..32).map(|_| unit(&mut rng)).collect();
+    results.push(eagle::bench::bench("router/score_batch32_store5k", 400, || {
+        std::hint::black_box(router.score_batch(&batch_queries));
+    }));
     let global_router = EagleRouter::fit(
         EagleParams { p: 1.0, ..Default::default() },
         11,
@@ -150,8 +159,159 @@ fn main() {
         println!("(skipping PJRT embed benches: artifacts not built)");
     }
 
+    // --- snapshot routing: ring load + scoring through a snapshot ---
+    let snap_writer = {
+        let mut w = RouterWriter::new(
+            EagleParams::default(),
+            11,
+            DIM,
+            EpochParams { publish_every: 64, publish_interval_ms: 5 },
+        );
+        for obs in &obs {
+            w.observe(obs.clone());
+        }
+        w.publish();
+        w
+    };
+    let ring = snap_writer.ring();
+    results.push(eagle::bench::bench("snapshot/ring_load", 100, || {
+        std::hint::black_box(ring.load());
+    }));
+    results.push(eagle::bench::bench("snapshot/scores_store5k", 400, || {
+        let snap = ring.load();
+        std::hint::black_box(snap.scores(&q));
+    }));
+
     println!("\n== perf_hotpath ==");
     for r in &results {
         println!("{}", r.line());
+    }
+
+    contention_scenario(snap_writer);
+}
+
+/// The acceptance scenario for RCU snapshot routing: batched route
+/// throughput while the applier ingests >= 10k records/s must stay within
+/// 10% of the zero-feedback baseline. Quiet and stormy measurement
+/// windows alternate so the growing store affects both modes equally.
+fn contention_scenario(mut writer: RouterWriter) {
+    const BATCH: usize = 32;
+    const WINDOW: Duration = Duration::from_millis(30);
+    const WINDOWS_PER_MODE: usize = 12;
+    const TARGET_INGEST_PER_S: u64 = 20_000;
+
+    let ring = writer.ring();
+    let stop = Arc::new(AtomicBool::new(false));
+    let storm_on = Arc::new(AtomicBool::new(false));
+    let ingested = Arc::new(AtomicU64::new(0));
+    let storm_ns = Arc::new(AtomicU64::new(0));
+
+    let stop_w = stop.clone();
+    let storm_on_w = storm_on.clone();
+    let ingested_w = ingested.clone();
+    let storm_ns_w = storm_ns.clone();
+    let feeder = std::thread::spawn(move || {
+        let mut rng = Rng::new(0x570F);
+        // throttle to ~TARGET_INGEST_PER_S: ingest small bursts, then nap
+        let burst = 32u64;
+        let nap = Duration::from_nanos(1_000_000_000 * burst / TARGET_INGEST_PER_S);
+        while !stop_w.load(Ordering::Relaxed) {
+            if !storm_on_w.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_micros(200));
+                continue;
+            }
+            let t0 = Instant::now();
+            for _ in 0..burst {
+                let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+                l2_normalize(&mut v);
+                let a = rng.below(11);
+                let mut b = rng.below(10);
+                if b >= a {
+                    b += 1;
+                }
+                writer.observe(Observation::single(
+                    v,
+                    Comparison { a, b, outcome: Outcome::WinA },
+                ));
+            }
+            ingested_w.fetch_add(burst, Ordering::Relaxed);
+            let spent = t0.elapsed();
+            storm_ns_w.fetch_add(spent.as_nanos() as u64, Ordering::Relaxed);
+            if spent < nap {
+                std::thread::sleep(nap - spent);
+                storm_ns_w.fetch_add((nap - spent).as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+    });
+
+    let mut rng = Rng::new(0xBEEF);
+    let queries: Vec<Vec<f32>> = (0..BATCH)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+            l2_normalize(&mut v);
+            v
+        })
+        .collect();
+
+    // (queries served, busy seconds, per-batch latencies in us)
+    let mut measure = |lat: &mut Vec<f64>| -> (u64, f64) {
+        let until = Instant::now() + WINDOW;
+        let mut served = 0u64;
+        let t0 = Instant::now();
+        while Instant::now() < until {
+            let tb = Instant::now();
+            let snap = ring.load();
+            std::hint::black_box(snap.score_batch(&queries));
+            lat.push(tb.elapsed().as_nanos() as f64 / 1e3);
+            served += BATCH as u64;
+        }
+        (served, t0.elapsed().as_secs_f64())
+    };
+
+    let (mut quiet_lat, mut storm_lat) = (Vec::new(), Vec::new());
+    let (mut quiet_served, mut quiet_secs) = (0u64, 0f64);
+    let (mut storm_served, mut storm_secs) = (0u64, 0f64);
+    for _ in 0..WINDOWS_PER_MODE {
+        storm_on.store(false, Ordering::Relaxed);
+        let (s, t) = measure(&mut quiet_lat);
+        quiet_served += s;
+        quiet_secs += t;
+
+        storm_on.store(true, Ordering::Relaxed);
+        let (s, t) = measure(&mut storm_lat);
+        storm_served += s;
+        storm_secs += t;
+    }
+    storm_on.store(false, Ordering::Relaxed);
+    stop.store(true, Ordering::Relaxed);
+    feeder.join().unwrap();
+
+    let quiet_tput = quiet_served as f64 / quiet_secs;
+    let storm_tput = storm_served as f64 / storm_secs;
+    let ingest_rate =
+        ingested.load(Ordering::Relaxed) as f64 / (storm_ns.load(Ordering::Relaxed) as f64 / 1e9);
+    let ratio = storm_tput / quiet_tput;
+
+    println!("\n== snapshot contention (batched route, {BATCH} q/batch) ==");
+    println!(
+        "  quiet: {:>9.0} q/s  p50 {:>8.1} us/batch  p99 {:>8.1} us/batch",
+        quiet_tput,
+        percentile(&quiet_lat, 50.0),
+        percentile(&quiet_lat, 99.0),
+    );
+    println!(
+        "  storm: {:>9.0} q/s  p50 {:>8.1} us/batch  p99 {:>8.1} us/batch  \
+         (applier ingesting {:.0} rec/s)",
+        storm_tput,
+        percentile(&storm_lat, 50.0),
+        percentile(&storm_lat, 99.0),
+        ingest_rate,
+    );
+    let verdict = if ratio >= 0.90 { "PASS" } else { "WARN" };
+    println!(
+        "  storm/quiet throughput ratio = {ratio:.3}  (target >= 0.900: {verdict})"
+    );
+    if ingest_rate < 10_000.0 {
+        println!("  WARN: ingest rate below the 10k rec/s storm target");
     }
 }

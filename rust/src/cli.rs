@@ -135,6 +135,10 @@ fn load_config(args: &Args) -> Result<Config> {
 fn cmd_info(cfg: &Config) -> Result<i32> {
     println!("eagle configuration:");
     println!("  eagle: P={} N={} K={}", cfg.eagle.p, cfg.eagle.n_neighbors, cfg.eagle.k_factor);
+    println!(
+        "  epoch: publish_every={} publish_interval_ms={}",
+        cfg.epoch.publish_every, cfg.epoch.publish_interval_ms
+    );
     println!("  artifacts: {}", cfg.embed.artifacts_dir);
     match crate::runtime::Manifest::load(Path::new(&cfg.embed.artifacts_dir)) {
         Ok(m) => println!(
@@ -338,15 +342,23 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         None => EagleRouter::new(cfg.eagle.clone(), registry.len(), FlatStore::new(256)),
     };
 
-    let mut state =
-        crate::server::ServerState::new(router, registry, service.handle(), metrics);
+    let mut state = crate::server::ServerState::with_epoch(
+        router,
+        registry,
+        service.handle(),
+        metrics,
+        cfg.epoch.clone(),
+    );
     if let Some(out) = args.get("snapshot-out") {
         state = state.with_snapshot_path(std::path::PathBuf::from(out));
         println!("admin snapshot op enabled -> {out}");
     }
     let state = Arc::new(state);
     let server = crate::server::Server::start(state, &addr, workers)?;
-    println!("eagle serving on {} ({} workers); Ctrl-C to stop", server.addr, workers);
+    println!(
+        "eagle serving on {} ({} workers, epoch cadence: every {} records / {} ms); Ctrl-C to stop",
+        server.addr, workers, cfg.epoch.publish_every, cfg.epoch.publish_interval_ms
+    );
 
     // Block forever (Ctrl-C kills the process; state can be snapshotted
     // via an admin op in a future protocol revision).

@@ -105,6 +105,27 @@ impl Default for ServerParams {
     }
 }
 
+/// Snapshot-publication (epoch) cadence for the RCU routing core
+/// ([`crate::coordinator::snapshot`]). The writer republishes the scoring
+/// snapshot after `publish_every` new feedback records, or once
+/// `publish_interval_ms` has elapsed with any records pending — whichever
+/// trips first. Smaller values tighten feedback-to-routing latency;
+/// larger values amortize publication under storms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochParams {
+    /// Publish after this many new records (K).
+    pub publish_every: usize,
+    /// Publish pending records no later than this many ms after the last
+    /// publish (T).
+    pub publish_interval_ms: u64,
+}
+
+impl Default for EpochParams {
+    fn default() -> Self {
+        EpochParams { publish_every: 64, publish_interval_ms: 25 }
+    }
+}
+
 /// Synthetic RouterBench generation parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataParams {
@@ -135,6 +156,7 @@ pub struct Config {
     pub baselines: BaselineParams,
     pub embed: EmbedParams,
     pub server: ServerParams,
+    pub epoch: EpochParams,
     pub data: DataParams,
 }
 
@@ -232,6 +254,8 @@ impl Config {
             "embed.max_batch" => self.embed.max_batch = usize_of(value)?,
             "server.addr" => self.server.addr = value.to_string(),
             "server.workers" => self.server.workers = usize_of(value)?,
+            "epoch.publish_every" => self.epoch.publish_every = usize_of(value)?,
+            "epoch.publish_interval_ms" => self.epoch.publish_interval_ms = u64_of(value)?,
             "data.seed" => self.data.seed = u64_of(value)?,
             "data.per_dataset" => self.data.per_dataset = usize_of(value)?,
             "data.train_fraction" => self.data.train_fraction = f64_of(value)?,
@@ -262,6 +286,9 @@ impl Config {
         }
         if self.embed.max_batch == 0 {
             return Err(ConfigError("embed.max_batch must be > 0".into()));
+        }
+        if self.epoch.publish_every == 0 {
+            return Err(ConfigError("epoch.publish_every must be > 0".into()));
         }
         Ok(())
     }
@@ -313,6 +340,24 @@ workers = 8
         .unwrap();
         assert_eq!(c.eagle.p, 0.25);
         assert_eq!(c.data.seed, 7);
+    }
+
+    #[test]
+    fn epoch_knobs_parse_and_validate() {
+        let c = Config::load(
+            None,
+            &[
+                ("epoch.publish_every".into(), "16".into()),
+                ("epoch.publish_interval_ms".into(), "5".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.epoch.publish_every, 16);
+        assert_eq!(c.epoch.publish_interval_ms, 5);
+        assert_eq!(Config::default().epoch, EpochParams::default());
+        let mut bad = Config::default();
+        bad.epoch.publish_every = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -152,6 +152,35 @@ impl FeedbackQueue {
         }
     }
 
+    /// Batched pop for the applier: blocks up to `timeout` for the first
+    /// item, then greedily drains up to `max` items without blocking.
+    ///
+    /// Returns `None` once the queue is closed and drained; an empty vec
+    /// means the timeout elapsed (the caller uses that beat to flush a
+    /// stale snapshot epoch).
+    pub fn pop_batch(&self, max: usize, timeout: std::time::Duration) -> Option<Vec<Verdict>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.items.is_empty() {
+                let take = inner.items.len().min(max.max(1));
+                return Some(inner.items.drain(..take).collect());
+            }
+            if inner.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Some(Vec::new());
+            }
+            let (guard, res) = self.cond.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if res.timed_out() && inner.items.is_empty() {
+                return if inner.closed { None } else { Some(Vec::new()) };
+            }
+        }
+    }
+
     /// Non-blocking drain of everything queued.
     pub fn drain(&self) -> Vec<Verdict> {
         let mut inner = self.inner.lock().unwrap();
@@ -282,6 +311,38 @@ mod tests {
             model_b: 1,
             score_a: 1.0
         }));
+    }
+
+    #[test]
+    fn pop_batch_drains_up_to_max() {
+        let q = FeedbackQueue::new(100);
+        for i in 0..7 {
+            q.push(Verdict { embedding: vec![i as f32], model_a: 0, model_b: 1, score_a: 1.0 });
+        }
+        let batch = q.pop_batch(5, std::time::Duration::from_millis(100)).unwrap();
+        assert_eq!(batch.len(), 5);
+        assert_eq!(batch[0].embedding, vec![0.0]);
+        let rest = q.pop_batch(5, std::time::Duration::from_millis(100)).unwrap();
+        assert_eq!(rest.len(), 2);
+    }
+
+    #[test]
+    fn pop_batch_timeout_returns_empty() {
+        let q = FeedbackQueue::new(4);
+        let t0 = std::time::Instant::now();
+        let batch = q.pop_batch(8, std::time::Duration::from_millis(30)).unwrap();
+        assert!(batch.is_empty());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+    }
+
+    #[test]
+    fn pop_batch_none_after_close() {
+        let q = FeedbackQueue::new(4);
+        q.push(Verdict { embedding: vec![1.0], model_a: 0, model_b: 1, score_a: 0.5 });
+        q.close();
+        // drains what's left, then reports closed
+        assert_eq!(q.pop_batch(8, std::time::Duration::from_millis(10)).unwrap().len(), 1);
+        assert!(q.pop_batch(8, std::time::Duration::from_millis(10)).is_none());
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! - [`router`] — [`router::EagleRouter`]: global + local ELO scoring.
 //! - [`policy`] — budget-constrained model selection.
 //! - [`feedback`] — online feedback ingestion (paper workflow step 5).
-//! - [`state`] — snapshot/restore of router state.
+//! - [`snapshot`] — RCU snapshot routing: lock-free scoring snapshots
+//!   published at epoch cadence by a single-writer ingest side.
+//! - [`state`] — snapshot/restore of router state (persistence).
 //!
 //! The [`Router`] trait is the uniform surface the evaluation harness and
 //! the server drive; Eagle and the three baselines all implement it.
@@ -13,6 +15,7 @@ pub mod feedback;
 pub mod policy;
 pub mod registry;
 pub mod router;
+pub mod snapshot;
 pub mod state;
 
 use crate::baselines::QualityPredictor;

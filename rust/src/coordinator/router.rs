@@ -16,9 +16,66 @@
 
 use crate::config::EagleParams;
 use crate::elo::{Comparison, EloEngine, GlobalElo};
-use crate::vectordb::{Feedback, Hit, VectorIndex};
+use crate::vectordb::{Feedback, Hit, ReadIndex, VectorIndex};
 
 use super::Router;
+
+/// Local ELO ratings for one query over any read-only index:
+/// global-seeded, neighbor-replayed, trajectory-averaged.
+///
+/// This is the scoring core shared by [`EagleRouter`] (mutable store) and
+/// [`super::snapshot::RouterSnapshot`] (immutable view): both call the
+/// exact same code over the exact same stored data, which is what makes
+/// the locked-vs-snapshot score-equivalence tests bit-exact.
+///
+/// Neighbors are replayed in *ascending* similarity order so the closest
+/// prompts' feedback lands last and carries the most weight in the
+/// sequential ELO update (EXPERIMENTS.md ablation), and the replay is
+/// trajectory-averaged like Eagle-Global.
+pub fn local_ratings_from<R: ReadIndex + ?Sized>(
+    params: &EagleParams,
+    global_avg: &[f64],
+    index: &R,
+    query_emb: &[f32],
+) -> Vec<f64> {
+    let mut local = EloEngine::seeded(global_avg.to_vec(), params.k_factor);
+    let hits = index.search(query_emb, params.n_neighbors);
+    let mut sum = global_avg.to_vec();
+    let mut samples = 1u64;
+    for hit in hits.iter().rev() {
+        for &c in &index.feedback(hit.id).comparisons {
+            local.update(c);
+            for (s, &r) in sum.iter_mut().zip(local.ratings()) {
+                *s += r;
+            }
+            samples += 1;
+        }
+    }
+    for s in sum.iter_mut() {
+        *s /= samples as f64;
+    }
+    sum
+}
+
+/// Combined Eagle scores (paper Eq. `Score(X) = P*G + (1-P)*L`) from
+/// precomputed trajectory-averaged global ratings and a read-only index.
+pub fn mixed_scores_from<R: ReadIndex + ?Sized>(
+    params: &EagleParams,
+    global_avg: &[f64],
+    index: &R,
+    query_emb: &[f32],
+) -> Vec<f64> {
+    if params.p >= 1.0 {
+        // pure global: skip retrieval entirely
+        return global_avg.to_vec();
+    }
+    let local = local_ratings_from(params, global_avg, index, query_emb);
+    global_avg
+        .iter()
+        .zip(&local)
+        .map(|(g, l)| params.p * g + (1.0 - params.p) * l)
+        .collect()
+}
 
 /// All pairwise feedback collected for one prompt, tied to its embedding.
 #[derive(Debug, Clone)]
@@ -79,6 +136,23 @@ impl<I: VectorIndex + Send> EagleRouter<I> {
         self.global = GlobalElo::restore(ratings.to_vec(), self.params.k_factor, history_len);
     }
 
+    /// Rebuild this router over a different store representation, keeping
+    /// the global ELO state (including its averaging trajectory) intact.
+    /// Used to move a flat-store router onto the segmented snapshot store
+    /// at server bring-up.
+    pub fn map_store<J, F>(self, f: F) -> EagleRouter<J>
+    where
+        J: VectorIndex + Send,
+        F: FnOnce(I) -> J,
+    {
+        EagleRouter {
+            params: self.params,
+            n_models: self.n_models,
+            global: self.global,
+            store: f(self.store),
+        }
+    }
+
     pub fn params(&self) -> &EagleParams {
         &self.params
     }
@@ -95,6 +169,11 @@ impl<I: VectorIndex + Send> EagleRouter<I> {
         &self.store
     }
 
+    /// Mutable store access (snapshot publication freezes through this).
+    pub fn store_mut(&mut self) -> &mut I {
+        &mut self.store
+    }
+
     pub fn feedback_len(&self) -> usize {
         self.global.history_len()
     }
@@ -104,49 +183,25 @@ impl<I: VectorIndex + Send> EagleRouter<I> {
         self.store.search(query_emb, self.params.n_neighbors)
     }
 
-    /// Local ELO ratings for a query: global-seeded, neighbor-replayed.
-    ///
-    /// Neighbors are replayed in *ascending* similarity order so the
-    /// closest prompts' feedback lands last and carries the most weight in
-    /// the sequential ELO update — a strictly better use of the same N
-    /// records (EXPERIMENTS.md ablation).
+    /// Local ELO ratings for a query: global-seeded, neighbor-replayed
+    /// (see [`local_ratings_from`] for the shared core).
     pub fn local_ratings(&self, query_emb: &[f32]) -> Vec<f64> {
-        let seed = self.global.ratings();
-        let mut local = EloEngine::seeded(seed.clone(), self.params.k_factor);
-        let hits = self.store.search(query_emb, self.params.n_neighbors);
-        // Trajectory-average the local replay as well (same estimator as
-        // Eagle-Global): the mean over post-update states is far less
-        // order-sensitive than the last iterate.
-        let mut sum = seed;
-        let mut samples = 1u64;
-        for hit in hits.iter().rev() {
-            for &c in &self.store.feedback(hit.id).comparisons {
-                local.update(c);
-                for (s, &r) in sum.iter_mut().zip(local.ratings()) {
-                    *s += r;
-                }
-                samples += 1;
-            }
-        }
-        for s in sum.iter_mut() {
-            *s /= samples as f64;
-        }
-        sum
+        local_ratings_from(&self.params, &self.global.ratings(), &self.store, query_emb)
     }
 
     /// Combined Eagle scores (paper Eq. Score(X) = P*G + (1-P)*L).
     pub fn combined_scores(&self, query_emb: &[f32]) -> Vec<f64> {
-        let p = self.params.p;
-        if p >= 1.0 {
-            // pure global: skip retrieval entirely
-            return self.global.ratings().to_vec();
-        }
-        let local = self.local_ratings(query_emb);
-        self.global
-            .ratings()
+        mixed_scores_from(&self.params, &self.global.ratings(), &self.store, query_emb)
+    }
+
+    /// Score a whole batch of queries against one consistent state,
+    /// computing the trajectory-averaged global table once for the batch
+    /// (the per-query path recomputes it every call).
+    pub fn score_batch(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        let global = self.global.ratings();
+        query_embs
             .iter()
-            .zip(&local)
-            .map(|(g, l)| p * g + (1.0 - p) * l)
+            .map(|q| mixed_scores_from(&self.params, &global, &self.store, q))
             .collect()
     }
 }
@@ -335,6 +390,20 @@ mod tests {
         let q = vec![1.0; DIM];
         let s = router.scores(&q);
         assert_eq!(s, vec![crate::elo::INITIAL_RATING; 4]);
+    }
+
+    #[test]
+    fn score_batch_matches_singles() {
+        let mut rng = Rng::new(9);
+        let anchor = unit(&mut rng);
+        let hist = specialist_history(&mut rng, &anchor);
+        let router = EagleRouter::fit(params(0.5, 20), 3, FlatStore::new(DIM), &hist);
+        let queries: Vec<Vec<f32>> = (0..8).map(|_| unit(&mut rng)).collect();
+        let batch = router.score_batch(&queries);
+        assert_eq!(batch.len(), queries.len());
+        for (q, b) in queries.iter().zip(&batch) {
+            assert_eq!(&router.scores(q), b, "batch path must be bit-identical");
+        }
     }
 
     #[test]

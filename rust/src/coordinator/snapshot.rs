@@ -1,0 +1,497 @@
+//! Read-copy-update snapshot routing: the lock-free serving core.
+//!
+//! The old serving path funneled every request through one
+//! `RwLock<EagleRouter>`; a feedback burst's write locks stalled all route
+//! reads. This module splits the router into:
+//!
+//! - [`RouterSnapshot`] — an immutable scoring state (trajectory-averaged
+//!   global ELO table + a frozen vector-index view), cheap to clone and
+//!   safe to score against from any number of threads;
+//! - [`RouterWriter`] — the single-writer ingest side. It owns the live
+//!   `EagleRouter<SegmentStore>`, applies feedback with **no lock of any
+//!   kind**, and republishes a fresh snapshot at a configurable epoch
+//!   cadence (every K records or T ms, [`crate::config::EpochParams`]);
+//! - [`SnapshotRing`] — the publication point. A fixed ring of
+//!   `RwLock<Arc<RouterSnapshot>>` slots plus an atomic cursor: readers
+//!   acquire the *current* slot, the writer only ever writes the *next*
+//!   slot, so a route read never contends with publication (let alone
+//!   with feedback application) unless a reader stalls for a full ring
+//!   revolution — `RING_SLOTS` publishes — between loading the cursor and
+//!   locking the slot. Readers therefore never block in practice, and the
+//!   design stays 100% safe Rust (no hazard pointers, no leaked
+//!   graveyard).
+//!
+//! Consistency: a snapshot is built by one thread and published via an
+//! `Arc` swap, so every reader observes an internally consistent
+//! `(epoch, ratings, view)` triple — torn reads are impossible by
+//! construction, which `rust/tests/snapshot_routing.rs` verifies under a
+//! feedback storm.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::config::{EagleParams, EpochParams};
+use crate::vectordb::flat::FlatStore;
+use crate::vectordb::ivf::IvfView;
+use crate::vectordb::view::{FrozenView, SegmentStore};
+use crate::vectordb::{Feedback, Hit, ReadIndex};
+
+use super::router::{mixed_scores_from, EagleRouter, Observation};
+
+/// Number of publication slots. Also the number of historical snapshots
+/// kept alive (snapshots share segment storage, so this costs O(RING ·
+/// (n_models + log n)) small allocations, not O(RING · corpus)).
+pub const RING_SLOTS: usize = 64;
+
+/// The frozen index inside a snapshot: exact segmented view for the
+/// serving default, IVF core + exact tail for large corpora.
+#[derive(Debug, Clone)]
+pub enum SnapshotView {
+    Flat(FrozenView),
+    Ivf(IvfView),
+}
+
+impl ReadIndex for SnapshotView {
+    fn dim(&self) -> usize {
+        match self {
+            SnapshotView::Flat(v) => v.dim(),
+            SnapshotView::Ivf(v) => v.dim(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            SnapshotView::Flat(v) => v.len(),
+            SnapshotView::Ivf(v) => v.len(),
+        }
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        match self {
+            SnapshotView::Flat(v) => v.search(query, k),
+            SnapshotView::Ivf(v) => v.search(query, k),
+        }
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        match self {
+            SnapshotView::Flat(v) => v.feedback(id),
+            SnapshotView::Ivf(v) => v.feedback(id),
+        }
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        match self {
+            SnapshotView::Flat(v) => v.vector(id),
+            SnapshotView::Ivf(v) => v.vector(id),
+        }
+    }
+}
+
+/// An immutable scoring state published at one epoch. Scoring against it
+/// takes no lock and sees no concurrent mutation, ever.
+#[derive(Debug, Clone)]
+pub struct RouterSnapshot {
+    epoch: u64,
+    params: EagleParams,
+    n_models: usize,
+    global_ratings: Vec<f64>,
+    history_len: usize,
+    view: SnapshotView,
+}
+
+impl RouterSnapshot {
+    /// Build a snapshot directly from parts (tests, custom publishers).
+    pub fn with_view(
+        epoch: u64,
+        params: EagleParams,
+        global_ratings: Vec<f64>,
+        history_len: usize,
+        view: SnapshotView,
+    ) -> Self {
+        let n_models = global_ratings.len();
+        RouterSnapshot { epoch, params, n_models, global_ratings, history_len, view }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn params(&self) -> &EagleParams {
+        &self.params
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.n_models
+    }
+
+    /// Trajectory-averaged global ratings frozen at publish time.
+    pub fn global_ratings(&self) -> &[f64] {
+        &self.global_ratings
+    }
+
+    /// Feedback records folded in up to this epoch.
+    pub fn history_len(&self) -> usize {
+        self.history_len
+    }
+
+    pub fn view(&self) -> &SnapshotView {
+        &self.view
+    }
+
+    /// Stored prompts visible to this snapshot.
+    pub fn store_len(&self) -> usize {
+        self.view.len()
+    }
+
+    /// Combined Eagle scores for one embedded query (same math, same
+    /// tie-breaks as `EagleRouter::combined_scores` over the same data).
+    pub fn scores(&self, query_emb: &[f32]) -> Vec<f64> {
+        mixed_scores_from(&self.params, &self.global_ratings, &self.view, query_emb)
+    }
+
+    /// Score a batch of queries against this one frozen state: a single
+    /// snapshot acquisition amortized over the whole batch.
+    pub fn score_batch(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        query_embs.iter().map(|q| self.scores(q)).collect()
+    }
+}
+
+/// The lock-free publication point (see module docs for the ring
+/// argument). Readers call [`SnapshotRing::load`]; only the single
+/// [`RouterWriter`] calls `publish`.
+pub struct SnapshotRing {
+    slots: Vec<RwLock<Arc<RouterSnapshot>>>,
+    /// Monotone publish counter; `counter % RING_SLOTS` is the live slot.
+    cursor: AtomicUsize,
+}
+
+impl SnapshotRing {
+    fn new(initial: Arc<RouterSnapshot>) -> Self {
+        SnapshotRing {
+            slots: (0..RING_SLOTS).map(|_| RwLock::new(initial.clone())).collect(),
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// The current snapshot. Wait-free against feedback application and
+    /// effectively uncontended against publication (one uncontended
+    /// `RwLock` read of a slot the writer is not touching).
+    pub fn load(&self) -> Arc<RouterSnapshot> {
+        let c = self.cursor.load(Ordering::Acquire);
+        self.slots[c % RING_SLOTS].read().unwrap().clone()
+    }
+
+    /// Epoch of the current snapshot (diagnostics).
+    pub fn current_epoch(&self) -> u64 {
+        self.load().epoch()
+    }
+
+    /// Single-writer publish: install into the *next* slot, then advance
+    /// the cursor.
+    fn publish(&self, snap: Arc<RouterSnapshot>) {
+        let next = self.cursor.load(Ordering::Relaxed) + 1;
+        *self.slots[next % RING_SLOTS].write().unwrap() = snap;
+        self.cursor.store(next, Ordering::Release);
+    }
+}
+
+/// The single-writer ingest side: applies feedback to the live router
+/// (lock-free — it owns it) and republishes snapshots at epoch cadence.
+pub struct RouterWriter {
+    router: EagleRouter<SegmentStore>,
+    ring: Arc<SnapshotRing>,
+    cadence: EpochParams,
+    epoch: u64,
+    since_publish: usize,
+    last_publish: Instant,
+}
+
+impl RouterWriter {
+    /// Cold-start writer; publishes the empty epoch-0 snapshot.
+    pub fn new(params: EagleParams, n_models: usize, dim: usize, cadence: EpochParams) -> Self {
+        Self::from_router_generic(
+            EagleRouter::new(params, n_models, SegmentStore::new(dim)),
+            cadence,
+        )
+    }
+
+    /// Take over a flat-store router (disk restore / pre-fit history),
+    /// keeping its global ELO state intact.
+    pub fn from_router(router: EagleRouter<FlatStore>, cadence: EpochParams) -> Self {
+        Self::from_router_generic(
+            router.map_store(|flat| SegmentStore::from_flat(&flat)),
+            cadence,
+        )
+    }
+
+    fn from_router_generic(mut router: EagleRouter<SegmentStore>, cadence: EpochParams) -> Self {
+        let initial = Arc::new(RouterSnapshot {
+            epoch: 0,
+            params: router.params().clone(),
+            n_models: router.n_models(),
+            global_ratings: router.global().ratings(),
+            history_len: router.feedback_len(),
+            view: SnapshotView::Flat(router.store_mut().freeze()),
+        });
+        RouterWriter {
+            router,
+            ring: Arc::new(SnapshotRing::new(initial)),
+            cadence,
+            epoch: 0,
+            since_publish: 0,
+            last_publish: Instant::now(),
+        }
+    }
+
+    /// The publication ring handle to hand to readers.
+    pub fn ring(&self) -> Arc<SnapshotRing> {
+        self.ring.clone()
+    }
+
+    /// The live (writer-side) router. Reads here see unpublished records;
+    /// use for persistence and diagnostics, never for serving.
+    pub fn router(&self) -> &EagleRouter<SegmentStore> {
+        &self.router
+    }
+
+    pub fn cadence(&self) -> &EpochParams {
+        &self.cadence
+    }
+
+    /// Last published epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Records applied but not yet visible to readers.
+    pub fn unpublished(&self) -> usize {
+        self.since_publish
+    }
+
+    /// Ingest one observation and republish if the epoch cadence says so.
+    /// Returns the new epoch if a publish happened.
+    pub fn observe(&mut self, obs: Observation) -> Option<u64> {
+        self.router.observe(obs);
+        self.since_publish += 1;
+        self.maybe_publish()
+    }
+
+    /// Publish if either cadence threshold (K records / T ms with pending
+    /// records) has tripped.
+    pub fn maybe_publish(&mut self) -> Option<u64> {
+        if self.since_publish == 0 {
+            return None;
+        }
+        let due = self.since_publish >= self.cadence.publish_every.max(1)
+            || self.last_publish.elapsed()
+                >= Duration::from_millis(self.cadence.publish_interval_ms);
+        due.then(|| self.publish())
+    }
+
+    /// Unconditional publish of the current writer state.
+    pub fn publish(&mut self) -> u64 {
+        self.epoch += 1;
+        let snap = RouterSnapshot {
+            epoch: self.epoch,
+            params: self.router.params().clone(),
+            n_models: self.router.n_models(),
+            global_ratings: self.router.global().ratings(),
+            history_len: self.router.feedback_len(),
+            view: SnapshotView::Flat(self.router.store_mut().freeze()),
+        };
+        self.ring.publish(Arc::new(snap));
+        self.since_publish = 0;
+        self.last_publish = Instant::now();
+        self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elo::{Comparison, Outcome};
+    use crate::util::{l2_normalize, Rng};
+
+    const DIM: usize = 16;
+
+    fn unit(rng: &mut Rng) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    fn rand_obs(rng: &mut Rng, n_models: usize) -> Observation {
+        let a = rng.below(n_models);
+        let mut b = rng.below(n_models - 1);
+        if b >= a {
+            b += 1;
+        }
+        let outcome = match rng.below(3) {
+            0 => Outcome::WinA,
+            1 => Outcome::WinB,
+            _ => Outcome::Draw,
+        };
+        Observation::single(unit(rng), Comparison { a, b, outcome })
+    }
+
+    fn cadence(every: usize, ms: u64) -> EpochParams {
+        EpochParams { publish_every: every, publish_interval_ms: ms }
+    }
+
+    #[test]
+    fn cold_start_publishes_empty_epoch_zero() {
+        let writer = RouterWriter::new(EagleParams::default(), 4, DIM, cadence(8, 10_000));
+        let snap = writer.ring().load();
+        assert_eq!(snap.epoch(), 0);
+        assert_eq!(snap.store_len(), 0);
+        assert_eq!(snap.scores(&vec![1.0; DIM]).len(), 4);
+    }
+
+    #[test]
+    fn record_cadence_publishes_every_k() {
+        let mut rng = Rng::new(1);
+        let mut writer = RouterWriter::new(EagleParams::default(), 4, DIM, cadence(8, 10_000));
+        let ring = writer.ring();
+        for i in 0..7 {
+            assert_eq!(writer.observe(rand_obs(&mut rng, 4)), None, "record {i}");
+        }
+        assert_eq!(ring.load().epoch(), 0, "no publish before K records");
+        assert_eq!(writer.observe(rand_obs(&mut rng, 4)), Some(1));
+        let snap = ring.load();
+        assert_eq!(snap.epoch(), 1);
+        assert_eq!(snap.history_len(), 8);
+        assert_eq!(snap.store_len(), 8);
+    }
+
+    #[test]
+    fn time_cadence_publishes_stale_records() {
+        let mut rng = Rng::new(2);
+        let mut writer = RouterWriter::new(EagleParams::default(), 4, DIM, cadence(1_000, 20));
+        writer.observe(rand_obs(&mut rng, 4));
+        assert_eq!(writer.ring().load().epoch(), 0);
+        std::thread::sleep(Duration::from_millis(30));
+        // next arrival trips the time threshold
+        assert!(writer.observe(rand_obs(&mut rng, 4)).is_some());
+        assert_eq!(writer.ring().load().history_len(), 2);
+        // and maybe_publish with nothing pending is a no-op
+        assert_eq!(writer.maybe_publish(), None);
+    }
+
+    #[test]
+    fn snapshot_scores_equal_locked_router_exactly() {
+        // the acceptance-criterion equivalence: same records => the
+        // published snapshot scores bit-identically to a flat-store
+        // EagleRouter over the same history prefix
+        let mut rng = Rng::new(3);
+        let params = EagleParams::default();
+        let mut writer = RouterWriter::new(params.clone(), 5, DIM, cadence(10, 10_000));
+        let mut reference = EagleRouter::new(params, 5, FlatStore::new(DIM));
+
+        let ring = writer.ring();
+        for step in 0..100 {
+            let obs = rand_obs(&mut rng, 5);
+            reference.observe(obs.clone());
+            writer.observe(obs);
+            if (step + 1) % 10 == 0 {
+                let snap = ring.load();
+                assert_eq!(snap.history_len(), step + 1);
+                for _ in 0..3 {
+                    let q = unit(&mut rng);
+                    assert_eq!(
+                        snap.scores(&q),
+                        reference.combined_scores(&q),
+                        "divergence at history {}",
+                        step + 1
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn old_snapshots_stay_consistent_after_more_publishes() {
+        let mut rng = Rng::new(4);
+        let mut writer = RouterWriter::new(EagleParams::default(), 4, DIM, cadence(5, 10_000));
+        let ring = writer.ring();
+        for _ in 0..5 {
+            writer.observe(rand_obs(&mut rng, 4));
+        }
+        let pinned = ring.load();
+        assert_eq!(pinned.epoch(), 1);
+        let q = unit(&mut rng);
+        let before = pinned.scores(&q);
+        // 20 more epochs of churn, including segment merges
+        for _ in 0..100 {
+            writer.observe(rand_obs(&mut rng, 4));
+        }
+        assert_eq!(ring.load().epoch(), 21);
+        assert_eq!(pinned.scores(&q), before, "pinned snapshot mutated");
+        assert_eq!(pinned.history_len(), 5);
+    }
+
+    #[test]
+    fn from_router_keeps_state() {
+        let mut rng = Rng::new(5);
+        let mut flat_router = EagleRouter::new(EagleParams::default(), 4, FlatStore::new(DIM));
+        let mut probe_scores = Vec::new();
+        for _ in 0..30 {
+            flat_router.observe(rand_obs(&mut rng, 4));
+        }
+        let q = unit(&mut rng);
+        probe_scores.push(flat_router.combined_scores(&q));
+        let writer = RouterWriter::from_router(flat_router, cadence(8, 10_000));
+        let snap = writer.ring().load();
+        assert_eq!(snap.history_len(), 30);
+        assert_eq!(snap.store_len(), 30);
+        assert_eq!(snap.scores(&q), probe_scores[0]);
+    }
+
+    #[test]
+    fn ivf_view_snapshot_scores() {
+        use crate::vectordb::ivf::{IvfIndex, IvfParams};
+        use crate::vectordb::VectorIndex;
+
+        let mut rng = Rng::new(6);
+        let params = EagleParams::default();
+        let mut flat_router = EagleRouter::new(params.clone(), 4, FlatStore::new(DIM));
+        let params_ivf = IvfParams { n_cells: 4, nprobe: 4, kmeans_iters: 3, seed: 9 };
+        let mut core = IvfIndex::new(DIM, params_ivf);
+        let mut tail = SegmentStore::new(DIM);
+        for i in 0..120 {
+            let obs = rand_obs(&mut rng, 4);
+            let fb = Feedback { comparisons: obs.comparisons.clone() };
+            if i < 100 {
+                core.add(&obs.embedding, fb);
+            } else {
+                tail.add(&obs.embedding, fb);
+            }
+            flat_router.observe(obs);
+        }
+        let snap = RouterSnapshot::with_view(
+            7,
+            params,
+            flat_router.global().ratings(),
+            flat_router.feedback_len(),
+            SnapshotView::Ivf(IvfView::new(Arc::new(core), tail.freeze())),
+        );
+        assert_eq!(snap.epoch(), 7);
+        assert_eq!(snap.store_len(), 120);
+        // exhaustive probe (nprobe == n_cells) => identical scores
+        let q = unit(&mut rng);
+        assert_eq!(snap.scores(&q), flat_router.combined_scores(&q));
+    }
+
+    #[test]
+    fn ring_survives_many_wraps() {
+        let mut rng = Rng::new(7);
+        let mut writer = RouterWriter::new(EagleParams::default(), 3, DIM, cadence(1, 10_000));
+        let ring = writer.ring();
+        // 3 full ring revolutions of publishes
+        for i in 0..(3 * RING_SLOTS) {
+            writer.observe(rand_obs(&mut rng, 3));
+            assert_eq!(ring.load().epoch(), (i + 1) as u64);
+        }
+    }
+}

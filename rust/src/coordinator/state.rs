@@ -14,7 +14,7 @@ use crate::config::EagleParams;
 use crate::elo::{Comparison, Outcome};
 use crate::json::{self, Value};
 use crate::vectordb::flat::FlatStore;
-use crate::vectordb::VectorIndex;
+use crate::vectordb::{ReadIndex, VectorIndex};
 
 use super::router::{EagleRouter, Observation};
 #[cfg(test)]
@@ -22,9 +22,17 @@ use super::Router as _;
 
 const FORMAT_VERSION: f64 = 1.0;
 
-/// Serialize a router (flat-store backed) to a JSON string.
-pub fn snapshot(router: &EagleRouter<FlatStore>) -> String {
-    let store = router.store();
+/// Serialize routing state from parts over any *read-only* index: the
+/// writer-side [`crate::vectordb::view::SegmentStore`], a flat store, or
+/// a published snapshot's frozen view all pass through here. Restore
+/// always rebuilds onto a flat store.
+pub fn snapshot_parts<R: ReadIndex + ?Sized>(
+    params: &EagleParams,
+    n_models: usize,
+    global_ratings: &[f64],
+    history_len: usize,
+    store: &R,
+) -> String {
     let mut entries = Vec::with_capacity(store.len());
     for id in 0..store.len() as u32 {
         let fb = store.feedback(id);
@@ -47,18 +55,29 @@ pub fn snapshot(router: &EagleRouter<FlatStore>) -> String {
     json::obj(vec![
         ("format_version", json::num(FORMAT_VERSION)),
         ("dim", json::num(store.dim() as f64)),
-        ("p", json::num(router.params().p)),
-        ("n_neighbors", json::num(router.params().n_neighbors as f64)),
-        ("k_factor", json::num(router.params().k_factor)),
-        ("n_models", json::num(router.n_models() as f64)),
+        ("p", json::num(params.p)),
+        ("n_neighbors", json::num(params.n_neighbors as f64)),
+        ("k_factor", json::num(params.k_factor)),
+        ("n_models", json::num(n_models as f64)),
         (
             "global_ratings",
-            Value::Arr(router.global().ratings().iter().map(|&r| json::num(r)).collect()),
+            Value::Arr(global_ratings.iter().map(|&r| json::num(r)).collect()),
         ),
-        ("history_len", json::num(router.feedback_len() as f64)),
+        ("history_len", json::num(history_len as f64)),
         ("entries", Value::Arr(entries)),
     ])
     .to_json()
+}
+
+/// Serialize a router to a JSON string.
+pub fn snapshot<I: VectorIndex + Send>(router: &EagleRouter<I>) -> String {
+    snapshot_parts(
+        router.params(),
+        router.n_models(),
+        &router.global().ratings(),
+        router.feedback_len(),
+        router.store(),
+    )
 }
 
 /// Restore a router from a snapshot string.
@@ -139,7 +158,7 @@ pub fn restore(text: &str) -> Result<EagleRouter<FlatStore>> {
 }
 
 /// Write a snapshot to disk atomically (tmp + rename).
-pub fn save_to(router: &EagleRouter<FlatStore>, path: &Path) -> Result<()> {
+pub fn save_to<I: VectorIndex + Send>(router: &EagleRouter<I>, path: &Path) -> Result<()> {
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, snapshot(router))
         .with_context(|| format!("writing {}", tmp.display()))?;
@@ -221,6 +240,20 @@ mod tests {
             Comparison { a: 0, b: 1, outcome: Outcome::WinA },
         ));
         assert_eq!(restored.feedback_len(), 51);
+    }
+
+    #[test]
+    fn segment_store_router_snapshots_equivalently() {
+        // the server's writer-side router persists through the same path
+        use crate::vectordb::view::SegmentStore;
+        let flat_router = build_router(7, 80);
+        let seg_router = build_router(7, 80)
+            .map_store(|flat| SegmentStore::from_flat(&flat));
+        assert_eq!(snapshot(&flat_router), snapshot(&seg_router));
+        let restored = restore(&snapshot(&seg_router)).unwrap();
+        assert_eq!(restored.feedback_len(), 80);
+        let q = vec![0.5f32; 8];
+        assert_eq!(restored.scores(&q), flat_router.scores(&q));
     }
 
     #[test]

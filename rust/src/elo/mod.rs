@@ -460,6 +460,91 @@ mod tests {
     }
 
     #[test]
+    fn prop_decode_encode_roundtrips() {
+        // decode ∘ encode ≡ id on outcomes; everything else decodes to None
+        prop::check("decode(encode(o)) == o", 100, |rng| {
+            let o = [Outcome::WinA, Outcome::WinB, Outcome::Draw][rng.below(3)];
+            prop::assert_prop(Outcome::decode(o.encode()) == Some(o), "roundtrip")?;
+            let junk = rng.f64();
+            if junk != 0.0 && junk != 0.5 && junk != 1.0 {
+                prop::assert_prop(
+                    Outcome::decode(junk).is_none(),
+                    "non-score decoded to an outcome",
+                )?;
+            }
+            prop::assert_prop(Outcome::decode(f64::NAN).is_none(), "NaN decoded")?;
+            prop::assert_prop(Outcome::decode(-1.0).is_none(), "negative decoded")
+        });
+    }
+
+    #[test]
+    fn prop_updates_zero_sum_for_non_draw() {
+        // a non-draw update transfers rating: the winner's gain equals the
+        // loser's loss (one shared delta), every bystander is untouched,
+        // and the transfer is strictly nonzero
+        prop::check("non-draw updates are zero-sum", 200, |rng| {
+            let n = 2 + rng.below(8);
+            let mut e = EloEngine::new(n, DEFAULT_K);
+            // randomize the table first so ratings are unequal
+            for _ in 0..rng.below(100) {
+                e.update(rand_cmp(rng, n));
+            }
+            let before = e.ratings().to_vec();
+            let mut c = rand_cmp(rng, n);
+            c.outcome = if rng.chance(0.5) { Outcome::WinA } else { Outcome::WinB };
+            e.update(c);
+            let delta_a = e.rating(c.a) - before[c.a];
+            let delta_b = e.rating(c.b) - before[c.b];
+            prop::assert_prop(delta_a != 0.0 && delta_b != 0.0, "no transfer happened")?;
+            let (winner_delta, loser_delta) = match c.outcome {
+                Outcome::WinA => (delta_a, delta_b),
+                _ => (delta_b, delta_a),
+            };
+            prop::assert_prop(winner_delta > 0.0, "winner did not gain")?;
+            prop::assert_prop(loser_delta < 0.0, "loser did not lose")?;
+            prop::assert_close(delta_a + delta_b, 0.0, 1e-9, "zero-sum")?;
+            for m in 0..n {
+                if m != c.a && m != c.b {
+                    prop::assert_prop(e.rating(m) == before[m], "bystander moved")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_incremental_update_equals_full_replay_any_split() {
+        // Table 3a's foundation, over arbitrary split points (the fixed
+        // 200/100 split lives in incremental_equals_full_replay)
+        prop::check("incremental == replay at any split", 40, |rng| {
+            let n = 2 + rng.below(8);
+            let len = 1 + rng.below(400);
+            let hist: Vec<Comparison> = (0..len).map(|_| rand_cmp(rng, n)).collect();
+            let cut = rng.below(len + 1);
+
+            let mut incremental = GlobalElo::initialize(n, DEFAULT_K, &hist[..cut]);
+            incremental.apply_new(&hist[cut..]);
+            let full = GlobalElo::initialize(n, DEFAULT_K, &hist);
+
+            for m in 0..n {
+                prop::assert_close(
+                    incremental.ratings()[m],
+                    full.ratings()[m],
+                    1e-9,
+                    "averaged ratings",
+                )?;
+                prop::assert_close(
+                    incremental.last_iterate()[m],
+                    full.last_iterate()[m],
+                    1e-9,
+                    "last iterate",
+                )?;
+            }
+            prop::assert_prop(incremental.history_len() == len, "history length")
+        });
+    }
+
+    #[test]
     fn to_dense_maps_names() {
         let mut index = HashMap::new();
         index.insert("gpt".to_string(), 0);

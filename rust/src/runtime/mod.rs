@@ -16,6 +16,13 @@
 //! PJRT handles are raw pointers (`!Send`): the embedding service owns a
 //! [`Runtime`] on a dedicated engine thread and communicates over channels
 //! (see [`crate::embedding`]).
+//!
+//! The `xla` crate is only linked when the `pjrt` cargo feature is on.
+//! Without it this module compiles a stub [`Runtime`] whose `load` fails
+//! with a clear message and whose [`Runtime::available`] returns `false`
+//! — tests and the serving fallback gate on that, so `cargo test -q` is
+//! green on a bare machine with no XLA toolchain. Manifest parsing and
+//! weight reading are pure rust and always available.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -167,6 +174,7 @@ pub fn read_weights(manifest: &Manifest) -> Result<Vec<f32>> {
 }
 
 /// A loaded PJRT runtime: compiled executables + device-resident weights.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -175,7 +183,13 @@ pub struct Runtime {
     weight_bufs: Vec<xla::PjRtBuffer>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
+    /// True when the PJRT runtime is compiled into this binary.
+    pub fn available() -> bool {
+        true
+    }
+
     /// Load every artifact in `dir`, compile, and stage weights on device.
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
@@ -302,6 +316,55 @@ impl Runtime {
             bail!("score output: expected {} floats, got {}", q_n * n, out.len());
         }
         Ok(out)
+    }
+}
+
+/// Stub runtime compiled when the `pjrt` feature is off: loading always
+/// fails (after surfacing manifest problems first, so error paths match),
+/// and [`Runtime::available`] lets callers skip cleanly.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// False: the PJRT runtime is not compiled into this binary.
+    pub fn available() -> bool {
+        false
+    }
+
+    /// Validates the manifest (so corrupt-artifact errors surface the same
+    /// way as in the real runtime), then fails with a clear message.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let _manifest = Manifest::load(dir)?;
+        bail!(
+            "PJRT runtime unavailable: this binary was built without the \
+             `pjrt` cargo feature (the xla crate is not linked). Rebuild \
+             with `--features pjrt` in an environment that provides it."
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-unavailable".to_string()
+    }
+
+    pub fn embed_batch(&self, _tokens: &[i32], _mask: &[f32], _batch: usize) -> Result<Vec<f32>> {
+        bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+    }
+
+    pub fn score(
+        &self,
+        _queries: &[f32],
+        _q_n: usize,
+        _corpus: &[f32],
+        _n: usize,
+    ) -> Result<Vec<f32>> {
+        bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
     }
 }
 

@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::protocol::{encode_response, parse_response, Response};
+use super::protocol::{encode_response, parse_response, Response, RouteReply};
 use crate::json::{self, Value};
 
 /// A routed decision as seen by the client.
@@ -57,6 +57,33 @@ impl EagleClient {
             Response::Routed { model, model_index, compare_with, expected_cost } => {
                 Ok(RouteDecision { model, model_index, compare_with, expected_cost })
             }
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Route a batch of queries under one budget: a single round trip,
+    /// one embed dispatch and one snapshot acquisition server-side.
+    pub fn route_batch(&mut self, texts: &[&str], budget: f64) -> Result<Vec<RouteDecision>> {
+        let req = json::obj(vec![
+            ("op", json::str_v("route_batch")),
+            (
+                "texts",
+                Value::Arr(texts.iter().map(|t| json::str_v(t)).collect()),
+            ),
+            ("budget", json::num(budget)),
+        ])
+        .to_json();
+        match self.call(req)? {
+            Response::RoutedBatch(replies) => Ok(replies
+                .into_iter()
+                .map(|r: RouteReply| RouteDecision {
+                    model: r.model,
+                    model_index: r.model_index,
+                    compare_with: r.compare_with,
+                    expected_cost: r.expected_cost,
+                })
+                .collect()),
             Response::Error(e) => bail!("server error: {e}"),
             other => bail!("unexpected response: {other:?}"),
         }

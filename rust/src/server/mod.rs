@@ -1,19 +1,28 @@
 //! Serving front-end: a threaded TCP server speaking the newline-JSON
-//! protocol, wired to the Eagle router, the embedding service, and the
-//! feedback pipeline.
+//! protocol, wired to the RCU snapshot router, the embedding service, and
+//! the feedback pipeline.
 //!
 //! ```text
-//!         TCP workers (N)        engine thread          applier thread
-//! route:  parse -> embed ------> PJRT batch ----+
-//!         -> router.scores ---------------------+--> reply
-//! feedback: parse -> queue.push               (async)
-//!                         applier: pop -> embed -> router.observe
+//!         TCP workers (N)           engine thread          applier thread
+//! route:  parse (pipeline-drain) -> PJRT batch ----+
+//!         -> snapshot.score_batch ------------------+--> reply
+//! feedback: parse -> queue.push                  (async)
+//!            applier: pop_batch -> writer.observe -> publish @ epoch
 //! ```
 //!
-//! The router sits behind an `RwLock`: routes take the read lock (scores
-//! are pure), the single applier thread takes the write lock per feedback
-//! record — request tail latency is unaffected by feedback bursts
-//! (backpressure lands on the bounded [`FeedbackQueue`] instead).
+//! Route scoring is **lock-free with respect to feedback application**:
+//! readers load an immutable [`RouterSnapshot`] from the
+//! [`SnapshotRing`] and score against it; the single applier thread owns
+//! the [`RouterWriter`] (behind a `Mutex` shared only with the admin
+//! snapshot op) and republishes at the configured epoch cadence. A
+//! feedback storm can no longer stall route reads — backpressure lands on
+//! the bounded [`FeedbackQueue`], and snapshot staleness is bounded by
+//! [`crate::config::EpochParams`].
+//!
+//! Workers batch-drain: each connection handler pulls every pipelined
+//! request already buffered and serves all route requests in it with one
+//! embed round trip + one snapshot acquisition (`route_batch` gives
+//! clients the same amortization explicitly).
 
 pub mod client;
 pub mod protocol;
@@ -21,25 +30,38 @@ pub mod protocol;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::config::EpochParams;
 use crate::coordinator::feedback::{ComparisonSampler, FeedbackQueue, Verdict};
 use crate::coordinator::policy::BudgetPolicy;
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::router::EagleRouter;
+use crate::coordinator::snapshot::{RouterSnapshot, RouterWriter, SnapshotRing};
 use crate::embedding::EmbedHandle;
 use crate::metrics::Metrics;
 use crate::util::Rng;
 use crate::vectordb::flat::FlatStore;
+use crate::vectordb::ReadIndex as _;
 
-use protocol::{encode_response, parse_request, Request, Response};
+use protocol::{encode_response, parse_request, Request, Response, RouteReply};
+
+/// Max pipelined requests drained per connection read (worker batching).
+const MAX_PIPELINE: usize = 32;
+
+/// Max feedback records the applier folds in per writer-lock acquisition.
+const APPLIER_BATCH: usize = 256;
 
 /// Shared server state.
 pub struct ServerState {
-    pub router: RwLock<EagleRouter<FlatStore>>,
+    /// Lock-free publication point for the route path.
+    pub snapshots: Arc<SnapshotRing>,
+    /// Single-writer ingest side. Locked by the applier thread and the
+    /// admin snapshot op only — never by route reads.
+    pub writer: Mutex<RouterWriter>,
     pub registry: ModelRegistry,
     pub policy: BudgetPolicy,
     pub embed: EmbedHandle,
@@ -48,6 +70,7 @@ pub struct ServerState {
     pub queue: FeedbackQueue,
     /// Where the admin `snapshot` op persists state (None = op disabled).
     pub snapshot_path: Option<std::path::PathBuf>,
+    epoch_params: EpochParams,
     stop: AtomicBool,
 }
 
@@ -58,9 +81,22 @@ impl ServerState {
         embed: EmbedHandle,
         metrics: Arc<Metrics>,
     ) -> Self {
+        Self::with_epoch(router, registry, embed, metrics, EpochParams::default())
+    }
+
+    /// Construct with an explicit snapshot-publication cadence.
+    pub fn with_epoch(
+        router: EagleRouter<FlatStore>,
+        registry: ModelRegistry,
+        embed: EmbedHandle,
+        metrics: Arc<Metrics>,
+        epoch_params: EpochParams,
+    ) -> Self {
+        let writer = RouterWriter::from_router(router, epoch_params.clone());
         let policy = BudgetPolicy::new(&registry);
         ServerState {
-            router: RwLock::new(router),
+            snapshots: writer.ring(),
+            writer: Mutex::new(writer),
             registry,
             policy,
             embed,
@@ -68,6 +104,7 @@ impl ServerState {
             sampler: ComparisonSampler::default(),
             queue: FeedbackQueue::new(4096),
             snapshot_path: None,
+            epoch_params,
             stop: AtomicBool::new(false),
         }
     }
@@ -87,6 +124,59 @@ impl ServerState {
         self.stop.load(Ordering::SeqCst)
     }
 
+    /// Force an immediate snapshot publish of everything ingested so far
+    /// (tests / admin; the applier publishes on cadence by itself).
+    pub fn force_publish(&self) -> u64 {
+        self.writer.lock().unwrap().publish()
+    }
+
+    /// Route a slab of texts: one embed round trip, one snapshot
+    /// acquisition, `texts.len()` scored decisions. `budgets` is parallel
+    /// to `texts`.
+    fn route_many(
+        &self,
+        texts: &[&str],
+        budgets: &[f64],
+        rng: &mut Rng,
+    ) -> Result<Vec<RouteReply>, String> {
+        debug_assert_eq!(texts.len(), budgets.len());
+        let t0 = Instant::now();
+        self.metrics.requests.add(texts.len() as u64);
+        let embs = match self.embed.embed_many(texts) {
+            Ok(e) => e,
+            Err(e) => {
+                self.metrics.errors.add(texts.len() as u64);
+                return Err(format!("embed: {e}"));
+            }
+        };
+        let snap: Arc<RouterSnapshot> = self.snapshots.load();
+        let ratings = snap.global_ratings();
+        let replies = embs
+            .iter()
+            .zip(budgets)
+            .map(|(emb, &budget)| {
+                let scores = snap.scores(emb);
+                let choice = self.policy.select(&scores, budget);
+                let compare_with = self
+                    .sampler
+                    .pick_partner(rng, choice, ratings)
+                    .map(|m| self.registry.entry(m).name.clone());
+                RouteReply {
+                    model: self.registry.entry(choice).name.clone(),
+                    model_index: choice,
+                    compare_with,
+                    expected_cost: self.registry.entry(choice).expected_cost,
+                }
+            })
+            .collect();
+        // per-decision latency: the batch amortizes embed + snapshot load
+        let per = t0.elapsed() / texts.len().max(1) as u32;
+        for _ in 0..texts.len() {
+            self.metrics.route_latency.record(per);
+        }
+        Ok(replies)
+    }
+
     /// Handle one parsed request (shared by TCP handler and tests).
     pub fn handle(&self, req: Request, rng: &mut Rng) -> Response {
         match req {
@@ -94,12 +184,9 @@ impl ServerState {
             Request::Snapshot => match &self.snapshot_path {
                 None => Response::Error("snapshot op disabled (no path configured)".into()),
                 Some(path) => {
-                    let router = self.router.read().unwrap();
-                    let entries = {
-                        use crate::vectordb::VectorIndex as _;
-                        router.store().len() as u64
-                    };
-                    match crate::coordinator::state::save_to(&router, path) {
+                    let writer = self.writer.lock().unwrap();
+                    let entries = writer.router().store().len() as u64;
+                    match crate::coordinator::state::save_to(writer.router(), path) {
                         Ok(()) => Response::SnapshotSaved {
                             path: path.display().to_string(),
                             entries,
@@ -117,32 +204,25 @@ impl ServerState {
                 feedback: self.metrics.feedback.get(),
             },
             Request::Route { text, budget } => {
-                let t0 = Instant::now();
-                self.metrics.requests.inc();
-                let emb = match self.embed.embed_one(&text) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        self.metrics.errors.inc();
-                        return Response::Error(format!("embed: {e}"));
+                match self.route_many(&[text.as_str()], &[budget], rng) {
+                    Ok(mut replies) => {
+                        let r = replies.pop().expect("one reply per text");
+                        Response::Routed {
+                            model: r.model,
+                            model_index: r.model_index,
+                            compare_with: r.compare_with,
+                            expected_cost: r.expected_cost,
+                        }
                     }
-                };
-                let (scores, ratings) = {
-                    let router = self.router.read().unwrap();
-                    let s = router.combined_scores(&emb);
-                    let g = router.global().ratings().to_vec();
-                    (s, g)
-                };
-                let choice = self.policy.select(&scores, budget);
-                let compare_with = self
-                    .sampler
-                    .pick_partner(rng, choice, &ratings)
-                    .map(|m| self.registry.entry(m).name.clone());
-                self.metrics.route_latency.record(t0.elapsed());
-                Response::Routed {
-                    model: self.registry.entry(choice).name.clone(),
-                    model_index: choice,
-                    compare_with,
-                    expected_cost: self.registry.entry(choice).expected_cost,
+                    Err(e) => Response::Error(e),
+                }
+            }
+            Request::RouteBatch { texts, budget } => {
+                let refs: Vec<&str> = texts.iter().map(|t| t.as_str()).collect();
+                let budgets = vec![budget; refs.len()];
+                match self.route_many(&refs, &budgets, rng) {
+                    Ok(replies) => Response::RoutedBatch(replies),
+                    Err(e) => Response::Error(e),
                 }
             }
             Request::Feedback { text, model_a, model_b, score_a } => {
@@ -176,6 +256,60 @@ impl ServerState {
                 Response::FeedbackAccepted
             }
         }
+    }
+
+    /// Handle a pipelined batch of request lines, preserving order.
+    /// All single `route` requests in the batch are served together
+    /// through [`ServerState::route_many`].
+    pub fn handle_lines(&self, lines: &[String], rng: &mut Rng) -> Vec<Response> {
+        let parsed: Vec<Result<Request, String>> =
+            lines.iter().map(|l| parse_request(l)).collect();
+        let mut out: Vec<Option<Response>> = (0..lines.len()).map(|_| None).collect();
+
+        // co-batch the single routes (2+ makes the amortization worth it)
+        let routes: Vec<(usize, String, f64)> = parsed
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| match r {
+                Ok(Request::Route { text, budget }) => Some((i, text.clone(), *budget)),
+                _ => None,
+            })
+            .collect();
+        if routes.len() >= 2 {
+            let texts: Vec<&str> = routes.iter().map(|(_, t, _)| t.as_str()).collect();
+            let budgets: Vec<f64> = routes.iter().map(|(_, _, b)| *b).collect();
+            match self.route_many(&texts, &budgets, rng) {
+                Ok(replies) => {
+                    for ((i, _, _), r) in routes.iter().zip(replies) {
+                        out[*i] = Some(Response::Routed {
+                            model: r.model,
+                            model_index: r.model_index,
+                            compare_with: r.compare_with,
+                            expected_cost: r.expected_cost,
+                        });
+                    }
+                }
+                Err(e) => {
+                    for (i, _, _) in &routes {
+                        out[*i] = Some(Response::Error(e.clone()));
+                    }
+                }
+            }
+        }
+
+        for (i, req) in parsed.into_iter().enumerate() {
+            if out[i].is_some() {
+                continue;
+            }
+            out[i] = Some(match req {
+                Ok(r) => self.handle(r, rng),
+                Err(e) => {
+                    self.metrics.errors.inc();
+                    Response::Error(e)
+                }
+            });
+        }
+        out.into_iter().map(|r| r.expect("every line answered")).collect()
     }
 }
 
@@ -254,31 +388,49 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, rng: &mut Rng)
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let mut lines: Vec<String> = Vec::new();
+    // Accumulates across read timeouts: a request line split over slow TCP
+    // segments keeps its consumed prefix here instead of being dropped.
+    let mut pending = String::new();
     loop {
         if state.stopped() {
             return Ok(());
         }
-        line.clear();
-        match reader.read_line(&mut line) {
+        lines.clear();
+        match reader.read_line(&mut pending) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {
-                let resp = match parse_request(&line) {
-                    Ok(req) => state.handle(req, rng),
-                    Err(e) => {
-                        state.metrics.errors.inc();
-                        Response::Error(e)
+                lines.push(std::mem::take(&mut pending));
+                // batch-drain: pull every complete pipelined line already
+                // sitting in the read buffer (no extra syscalls, no
+                // blocking) so co-batched routes share one embed dispatch
+                while lines.len() < MAX_PIPELINE && reader.buffer().contains(&b'\n') {
+                    let mut next = String::new();
+                    match reader.read_line(&mut next) {
+                        Ok(0) => break,
+                        Ok(_) => lines.push(next),
+                        Err(_) => {
+                            // a line was consumed but is unreadable (e.g.
+                            // invalid UTF-8): answer it with a parse error
+                            // to keep one response per request line
+                            lines.push(next);
+                            break;
+                        }
                     }
-                };
-                let mut out = encode_response(&resp);
-                out.push('\n');
+                }
+                let mut out = String::new();
+                for resp in state.handle_lines(&lines, rng) {
+                    out.push_str(&encode_response(&resp));
+                    out.push('\n');
+                }
                 writer.write_all(out.as_bytes())?;
             }
             Err(ref e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                continue; // idle keep-alive; re-check stop flag
+                // idle keep-alive; any partial line stays in `pending`
+                continue;
             }
             Err(e) => return Err(e.into()),
         }
@@ -286,11 +438,34 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, rng: &mut Rng)
 }
 
 /// Applier: drains the feedback queue into the router (single writer).
+/// Batched: one writer-lock acquisition folds in up to [`APPLIER_BATCH`]
+/// records; the pop timeout doubles as the staleness beat that flushes a
+/// pending epoch when feedback goes quiet.
 fn applier_loop(state: Arc<ServerState>) {
-    while let Some(verdict) = state.queue.pop() {
-        if let Some(obs) = verdict.to_observation() {
-            let mut router = state.router.write().unwrap();
-            router.observe(obs);
+    let beat = Duration::from_millis(state.epoch_params.publish_interval_ms.max(1));
+    loop {
+        match state.queue.pop_batch(APPLIER_BATCH, beat) {
+            None => {
+                // closed: flush anything ingested but not yet published
+                let mut w = state.writer.lock().unwrap();
+                if w.unpublished() > 0 {
+                    w.publish();
+                }
+                return;
+            }
+            Some(batch) if batch.is_empty() => {
+                // timeout beat: publish a stale epoch if records pend
+                let mut w = state.writer.lock().unwrap();
+                w.maybe_publish();
+            }
+            Some(batch) => {
+                let mut w = state.writer.lock().unwrap();
+                for verdict in batch {
+                    if let Some(obs) = verdict.to_observation() {
+                        w.observe(obs);
+                    }
+                }
+            }
         }
     }
 }

@@ -4,6 +4,7 @@
 //!
 //! ```json
 //! {"op":"route","text":"...","budget":0.02}
+//! {"op":"route_batch","texts":["...","..."],"budget":0.02}
 //! {"op":"feedback","text":"...","model_a":"gpt-4","model_b":"claude-v2","score_a":1.0}
 //! {"op":"stats"}
 //! {"op":"ping"}
@@ -14,15 +15,33 @@
 
 use crate::json::{self, Value};
 
+/// Largest accepted `route_batch` request (also the cap on server-side
+/// pipelined batching); keeps one request from monopolizing the embedder.
+pub const MAX_ROUTE_BATCH: usize = 256;
+
 /// Parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Route { text: String, budget: f64 },
+    /// Batched routing: all texts share one budget; one embed round trip
+    /// and one snapshot acquisition serve the whole batch.
+    RouteBatch { texts: Vec<String>, budget: f64 },
     Feedback { text: String, model_a: String, model_b: String, score_a: f64 },
     Stats,
     Ping,
     /// Admin: persist router state to the server-configured snapshot path.
     Snapshot,
+}
+
+/// One routed decision (shared by single and batch responses).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteReply {
+    pub model: String,
+    pub model_index: usize,
+    /// Optional comparison partner (paper workflow step 5).
+    pub compare_with: Option<String>,
+    /// Expected $ cost of the chosen model.
+    pub expected_cost: f64,
 }
 
 /// Server response payload.
@@ -36,6 +55,8 @@ pub enum Response {
         /// Expected $ cost of the chosen model.
         expected_cost: f64,
     },
+    /// One decision per text of a `route_batch`, in request order.
+    RoutedBatch(Vec<RouteReply>),
     FeedbackAccepted,
     Stats { report: String, requests: u64, feedback: u64 },
     Pong,
@@ -59,6 +80,27 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 return Err("route: budget must be a non-negative number".into());
             }
             Ok(Request::Route { text, budget })
+        }
+        Some("route_batch") => {
+            let texts: Vec<String> = v
+                .get("texts")
+                .as_arr()
+                .ok_or("route_batch: missing texts")?
+                .iter()
+                .map(|t| t.as_str().map(|s| s.to_string()))
+                .collect::<Option<_>>()
+                .ok_or("route_batch: texts must be strings")?;
+            if texts.is_empty() {
+                return Err("route_batch: texts must be non-empty".into());
+            }
+            if texts.len() > MAX_ROUTE_BATCH {
+                return Err(format!("route_batch: at most {MAX_ROUTE_BATCH} texts"));
+            }
+            let budget = v.get("budget").as_f64().ok_or("route_batch: missing budget")?;
+            if !budget.is_finite() || budget < 0.0 {
+                return Err("route_batch: budget must be a non-negative number".into());
+            }
+            Ok(Request::RouteBatch { texts, budget })
         }
         Some("feedback") => Ok(Request::Feedback {
             text: v.get("text").as_str().ok_or("feedback: missing text")?.to_string(),
@@ -96,6 +138,23 @@ pub fn encode_response(r: &Response) -> String {
                 fields.push(("compare_with", json::str_v(c)));
             }
             json::obj(fields).to_json()
+        }
+        Response::RoutedBatch(replies) => {
+            let items: Vec<Value> = replies
+                .iter()
+                .map(|r| {
+                    let mut fields = vec![
+                        ("model", json::str_v(&r.model)),
+                        ("model_index", json::num(r.model_index as f64)),
+                        ("expected_cost", json::num(r.expected_cost)),
+                    ];
+                    if let Some(c) = &r.compare_with {
+                        fields.push(("compare_with", json::str_v(c)));
+                    }
+                    json::obj(fields)
+                })
+                .collect();
+            json::obj(vec![("ok", Value::Bool(true)), ("batch", Value::Arr(items))]).to_json()
         }
         Response::FeedbackAccepted => {
             json::obj(vec![("ok", Value::Bool(true)), ("accepted", Value::Bool(true))]).to_json()
@@ -135,6 +194,23 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
     }
     if v.get("accepted").as_bool() == Some(true) {
         return Ok(Response::FeedbackAccepted);
+    }
+    if let Some(items) = v.get("batch").as_arr() {
+        let replies = items
+            .iter()
+            .map(|r| {
+                Ok(RouteReply {
+                    model: r.get("model").as_str().ok_or("batch item: missing model")?.to_string(),
+                    model_index: r
+                        .get("model_index")
+                        .as_usize()
+                        .ok_or("batch item: missing model_index")?,
+                    compare_with: r.get("compare_with").as_str().map(|s| s.to_string()),
+                    expected_cost: r.get("expected_cost").as_f64().unwrap_or(0.0),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        return Ok(Response::RoutedBatch(replies));
     }
     if let Some(path) = v.get("snapshot").as_str() {
         return Ok(Response::SnapshotSaved {
@@ -185,6 +261,38 @@ mod tests {
                 score_a: 0.5
             }
         );
+    }
+
+    #[test]
+    fn parse_route_batch() {
+        let r = parse_request(r#"{"op":"route_batch","texts":["a","b"],"budget":0.1}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::RouteBatch { texts: vec!["a".into(), "b".into()], budget: 0.1 }
+        );
+        assert!(parse_request(r#"{"op":"route_batch","texts":[],"budget":0.1}"#).is_err());
+        assert!(parse_request(r#"{"op":"route_batch","texts":[1],"budget":0.1}"#).is_err());
+        assert!(parse_request(r#"{"op":"route_batch","budget":0.1}"#).is_err());
+        assert!(parse_request(r#"{"op":"route_batch","texts":["a"],"budget":-1}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_routed_batch() {
+        let r = Response::RoutedBatch(vec![
+            RouteReply {
+                model: "gpt-4".into(),
+                model_index: 0,
+                compare_with: Some("claude-v2".into()),
+                expected_cost: 0.03,
+            },
+            RouteReply {
+                model: "mistral-7b-chat".into(),
+                model_index: 3,
+                compare_with: None,
+                expected_cost: 0.0004,
+            },
+        ]);
+        assert_eq!(parse_response(&encode_response(&r)).unwrap(), r);
     }
 
     #[test]

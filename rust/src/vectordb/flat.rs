@@ -7,7 +7,7 @@
 //! this is the default request-path store (§Perf).
 
 use super::topk::TopK;
-use super::{Feedback, Hit, VectorIndex};
+use super::{Feedback, Hit, ReadIndex, VectorIndex};
 
 /// Rows scanned per block; sized so a block (BLOCK_ROWS x 256 f32 = 64 KiB)
 /// stays L2-resident.
@@ -87,21 +87,13 @@ pub(crate) fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-impl VectorIndex for FlatStore {
+impl ReadIndex for FlatStore {
     fn dim(&self) -> usize {
         self.dim
     }
 
     fn len(&self) -> usize {
         self.payloads.len()
-    }
-
-    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32 {
-        assert_eq!(vector.len(), self.dim, "vector dim mismatch");
-        let id = self.payloads.len() as u32;
-        self.data.extend_from_slice(vector);
-        self.payloads.push(feedback);
-        id
     }
 
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
@@ -119,6 +111,16 @@ impl VectorIndex for FlatStore {
 
     fn vector(&self, id: u32) -> &[f32] {
         self.row(id as usize)
+    }
+}
+
+impl VectorIndex for FlatStore {
+    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32 {
+        assert_eq!(vector.len(), self.dim, "vector dim mismatch");
+        let id = self.payloads.len() as u32;
+        self.data.extend_from_slice(vector);
+        self.payloads.push(feedback);
+        id
     }
 }
 

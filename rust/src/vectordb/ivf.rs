@@ -11,9 +11,12 @@
 //! adaptation requirement). Centroids can be refreshed offline with
 //! [`IvfIndex::rebuild`].
 
+use std::sync::Arc;
+
 use super::flat::dot_unrolled;
 use super::topk::TopK;
-use super::{Feedback, Hit, VectorIndex};
+use super::view::FrozenView;
+use super::{Feedback, Hit, ReadIndex, VectorIndex};
 use crate::util::Rng;
 
 /// IVF build/search parameters.
@@ -173,29 +176,86 @@ impl IvfIndex {
     }
 }
 
-impl VectorIndex for IvfIndex {
+/// Read-only snapshot view for large stores: an immutable IVF *core*
+/// (probed approximately) plus an exact-scanned segmented *tail* of
+/// entries inserted after the core was built. Global ids continue the
+/// core's id space, so a view over (core of the first n, tail of the
+/// rest) addresses the same entries as a flat store of all of them.
+///
+/// The writer refreshes the core off the read path (an [`IvfIndex`]
+/// rebuild over the full contents) and starts a fresh tail; readers keep
+/// whatever `Arc`s their snapshot pinned.
+#[derive(Debug, Clone)]
+pub struct IvfView {
+    core: Arc<IvfIndex>,
+    tail: FrozenView,
+}
+
+impl IvfView {
+    pub fn new(core: Arc<IvfIndex>, tail: FrozenView) -> Self {
+        assert_eq!(core.dim, tail.dim(), "core/tail dim mismatch");
+        IvfView { core, tail }
+    }
+
+    pub fn core_len(&self) -> usize {
+        self.core.payloads.len()
+    }
+
+    pub fn tail_len(&self) -> usize {
+        self.tail.len()
+    }
+}
+
+impl ReadIndex for IvfView {
+    fn dim(&self) -> usize {
+        self.core.dim
+    }
+
+    fn len(&self) -> usize {
+        self.core_len() + self.tail.len()
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        let base = self.core_len() as u32;
+        let mut topk = TopK::new(k);
+        for hit in self.core.search(query, k) {
+            topk.push(hit.id, hit.score);
+        }
+        for hit in self.tail.search(query, k) {
+            topk.push(base + hit.id, hit.score);
+        }
+        topk.into_sorted()
+            .into_iter()
+            .map(|(id, score)| Hit { id, score })
+            .collect()
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        let base = self.core_len() as u32;
+        if id < base {
+            self.core.feedback(id)
+        } else {
+            self.tail.feedback(id - base)
+        }
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        let base = self.core_len() as u32;
+        if id < base {
+            self.core.vector(id)
+        } else {
+            self.tail.vector(id - base)
+        }
+    }
+}
+
+impl ReadIndex for IvfIndex {
     fn dim(&self) -> usize {
         self.dim
     }
 
     fn len(&self) -> usize {
         self.payloads.len()
-    }
-
-    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32 {
-        assert_eq!(vector.len(), self.dim, "vector dim mismatch");
-        let id = self.payloads.len() as u32;
-        self.data.extend_from_slice(vector);
-        self.payloads.push(feedback);
-        if self.cells.is_empty() {
-            // bootstrap: first vector becomes the first centroid
-            self.centroids.extend_from_slice(vector);
-            self.cells.push(vec![id]);
-        } else {
-            let c = self.assign(vector);
-            self.cells[c].push(id);
-        }
-        id
     }
 
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
@@ -227,6 +287,24 @@ impl VectorIndex for IvfIndex {
 
     fn vector(&self, id: u32) -> &[f32] {
         self.row(id as usize)
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32 {
+        assert_eq!(vector.len(), self.dim, "vector dim mismatch");
+        let id = self.payloads.len() as u32;
+        self.data.extend_from_slice(vector);
+        self.payloads.push(feedback);
+        if self.cells.is_empty() {
+            // bootstrap: first vector becomes the first centroid
+            self.centroids.extend_from_slice(vector);
+            self.cells.push(vec![id]);
+        } else {
+            let c = self.assign(vector);
+            self.cells[c].push(id);
+        }
+        id
     }
 }
 
@@ -353,6 +431,99 @@ mod tests {
         let mut rng = Rng::new(13);
         let (idx, _) = build_random(&mut rng, 500, 16, IvfParams::default());
         assert!(idx.max_cell_load() < 0.5, "load = {}", idx.max_cell_load());
+    }
+
+    #[test]
+    fn exhaustive_probe_equals_flat_store_exactly() {
+        // ISSUE property: with nprobe == n_cells the IVF search is
+        // exhaustive and must return *exactly* FlatStore's top-k —
+        // same ids, same scores, same tie-breaks — on random stores of
+        // size 1..=2048 and random dims, both for a batch-built index
+        // and after interleaved online inserts.
+        use super::super::flat::FlatStore;
+        prop::check("ivf(nprobe=all) == flat", 12, |rng| {
+            let dim = [4, 8, 16, 32][rng.below(4)];
+            let n = 1 + rng.below(2048);
+            let n_cells = 1 + rng.below(24);
+            let params = IvfParams {
+                n_cells,
+                nprobe: n_cells,
+                kmeans_iters: 3,
+                seed: rng.next_u64(),
+            };
+            // batch-build over the first half, then interleave online
+            // inserts with searches for the second half
+            let half = n / 2;
+            let vectors: Vec<Vec<f32>> =
+                (0..n).map(|_| random_unit(rng, dim)).collect();
+            let payloads = (0..half).map(dummy_feedback).collect();
+            let mut idx = IvfIndex::build(dim, &vectors[..half], payloads, params);
+            let mut flat = FlatStore::new(dim);
+            for (i, v) in vectors[..half].iter().enumerate() {
+                flat.add(v, dummy_feedback(i));
+            }
+            for (i, v) in vectors[half..].iter().enumerate() {
+                // interleave: check agreement periodically mid-insert
+                // (every insert would be O(n^2) in debug builds)
+                if i % 41 == 0 {
+                    // nprobe tracks the (possibly grown) cell count so
+                    // the probe stays exhaustive after online inserts
+                    idx.params.nprobe = idx.n_cells().max(1);
+                    let k = 1 + rng.below(20);
+                    let q = random_unit(rng, dim);
+                    prop::assert_prop(
+                        idx.search(&q, k) == flat.search(&q, k),
+                        "exhaustive ivf != flat during interleaved inserts",
+                    )?;
+                }
+                idx.add(v, dummy_feedback(half + i));
+                flat.add(v, dummy_feedback(half + i));
+            }
+            idx.params.nprobe = idx.n_cells().max(1);
+            let q = random_unit(rng, dim);
+            let k = 1 + rng.below(20);
+            prop::assert_prop(
+                idx.search(&q, k) == flat.search(&q, k),
+                "exhaustive ivf != flat after all inserts",
+            )
+        });
+    }
+
+    #[test]
+    fn ivf_view_matches_flat_over_core_plus_tail() {
+        use super::super::flat::FlatStore;
+        use super::super::view::SegmentStore;
+        prop::check("ivf view == flat", 15, |rng| {
+            let dim = 16;
+            let n_core = 30 + rng.below(200);
+            let n_tail = rng.below(100);
+            let vectors: Vec<Vec<f32>> =
+                (0..n_core + n_tail).map(|_| random_unit(rng, dim)).collect();
+            let params = IvfParams { n_cells: 8, nprobe: 8, kmeans_iters: 3, seed: 5 };
+            let payloads = (0..n_core).map(dummy_feedback).collect();
+            let core = Arc::new(IvfIndex::build(dim, &vectors[..n_core], payloads, params));
+            let mut tail_store = SegmentStore::new(dim);
+            let mut flat = FlatStore::new(dim);
+            for (i, v) in vectors.iter().enumerate() {
+                flat.add(v, dummy_feedback(i));
+                if i >= n_core {
+                    VectorIndex::add(&mut tail_store, v, dummy_feedback(i));
+                }
+            }
+            let view = IvfView::new(core, tail_store.freeze());
+            prop::assert_prop(view.len() == n_core + n_tail, "view length")?;
+            let q = random_unit(rng, dim);
+            let a = view.search(&q, 12);
+            let b = flat.search(&q, 12);
+            prop::assert_prop(a == b, "view hits != flat hits")?;
+            // payload/vector addressing agrees across the core/tail seam
+            for _ in 0..10 {
+                let id = rng.below(n_core + n_tail) as u32;
+                prop::assert_prop(view.vector(id) == flat.vector(id), "vector mismatch")?;
+                prop::assert_prop(view.feedback(id) == flat.feedback(id), "payload mismatch")?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -18,6 +18,7 @@
 pub mod flat;
 pub mod ivf;
 pub mod topk;
+pub mod view;
 
 use crate::elo::Comparison;
 
@@ -43,23 +44,24 @@ pub struct Hit {
     pub score: f32,
 }
 
-/// Common interface over exact and approximate indexes.
-pub trait VectorIndex {
+/// The read-only surface of an index: everything the scoring path needs
+/// and nothing the ingest path has. Snapshot views ([`view::FrozenView`],
+/// [`ivf::IvfView`]) implement only this; full indexes implement the
+/// [`VectorIndex`] extension on top. Scoring code written against
+/// `ReadIndex` runs unchanged over a mutable store or an immutable
+/// snapshot view.
+pub trait ReadIndex {
     /// Dimensionality of stored vectors.
     fn dim(&self) -> usize;
 
-    /// Number of stored vectors.
+    /// Number of visible vectors.
     fn len(&self) -> usize;
 
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Insert a vector (assumed L2-normalized) with its feedback payload;
-    /// returns its id.
-    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32;
-
-    /// The k nearest stored vectors by dot product, best first.
+    /// The k nearest visible vectors by dot product, best first.
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
 
     /// Feedback payload for an entry id.
@@ -67,6 +69,13 @@ pub trait VectorIndex {
 
     /// Stored vector for an entry id.
     fn vector(&self, id: u32) -> &[f32];
+}
+
+/// Common interface over exact and approximate *writable* indexes.
+pub trait VectorIndex: ReadIndex {
+    /// Insert a vector (assumed L2-normalized) with its feedback payload;
+    /// returns its id.
+    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32;
 }
 
 #[cfg(test)]

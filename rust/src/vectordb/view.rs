@@ -1,0 +1,437 @@
+//! Segmented append-only storage with O(1) freeze — the vector-index half
+//! of snapshot routing (see [`crate::coordinator::snapshot`]).
+//!
+//! The single-writer ingest side owns a [`SegmentStore`]: new vectors land
+//! in a mutable *pending* segment; [`SegmentStore::freeze`] seals pending
+//! into an immutable [`Segment`] behind an `Arc` and hands out a
+//! [`FrozenView`] — a list of `Arc<Segment>` clones plus a visible length.
+//! Publishing a snapshot therefore costs O(records since last publish)
+//! to seal plus a handful of refcount bumps, never a copy of the corpus.
+//!
+//! Sealed segments are merged binary-counter style (merge the last two
+//! while the newer one is at least as large) so a store of n vectors holds
+//! O(log n) segments and each vector is copied O(log n) times total —
+//! scans stay cache-friendly without ever blocking readers, who keep their
+//! own `Arc`s to the pre-merge segments.
+//!
+//! Entry ids are global insertion indices; segment order is insertion
+//! order, and a [`FrozenView`] scan pushes candidates in ascending id
+//! order, so search results (including tie-breaks) are bit-identical to a
+//! [`super::flat::FlatStore`] holding the same vectors.
+
+use std::sync::Arc;
+
+use super::flat::dot_unrolled;
+use super::topk::TopK;
+use super::{Feedback, Hit, ReadIndex, VectorIndex};
+
+/// Locate a global id among sealed segments: `(segment index, local
+/// index)`. `bases` holds each segment's first global id, ascending;
+/// callers guarantee `id` falls inside a sealed segment.
+fn locate_sealed(bases: &[u32], id: u32) -> (usize, usize) {
+    let si = bases.partition_point(|&b| b <= id) - 1;
+    (si, (id - bases[si]) as usize)
+}
+
+/// An immutable block of vectors + payloads. Never mutated once sealed.
+#[derive(Debug)]
+pub struct Segment {
+    dim: usize,
+    data: Vec<f32>,
+    payloads: Vec<Feedback>,
+}
+
+impl Segment {
+    fn new(dim: usize) -> Self {
+        Segment { dim, data: Vec::new(), payloads: Vec::new() }
+    }
+
+    fn with_capacity(dim: usize, capacity: usize) -> Self {
+        Segment {
+            dim,
+            data: Vec::with_capacity(capacity * dim),
+            payloads: Vec::with_capacity(capacity),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.payloads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payloads.is_empty()
+    }
+
+    fn push(&mut self, vector: &[f32], feedback: Feedback) {
+        debug_assert_eq!(vector.len(), self.dim);
+        self.data.extend_from_slice(vector);
+        self.payloads.push(feedback);
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Scan this segment into `topk`, offsetting local indices by `base`.
+    fn scan_into(&self, query: &[f32], base: u32, topk: &mut TopK) {
+        for i in 0..self.payloads.len() {
+            topk.push(base + i as u32, dot_unrolled(self.row(i), query));
+        }
+    }
+}
+
+/// An immutable, cheaply-clonable view over a prefix of a [`SegmentStore`].
+///
+/// Cloning copies `O(segments)` `Arc`s. Safe to share across threads and
+/// to keep alive across writer merges — the `Arc`s pin the exact segments
+/// this view was built from.
+#[derive(Debug, Clone)]
+pub struct FrozenView {
+    dim: usize,
+    len: usize,
+    segments: Vec<Arc<Segment>>,
+    /// Global id of the first entry of each segment (parallel to
+    /// `segments`); ascending.
+    bases: Vec<u32>,
+}
+
+impl FrozenView {
+    /// An empty view (what a cold-started router publishes first).
+    pub fn empty(dim: usize) -> Self {
+        FrozenView { dim, len: 0, segments: Vec::new(), bases: Vec::new() }
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Locate (segment index, local index) for a global id.
+    fn locate(&self, id: u32) -> (usize, usize) {
+        debug_assert!((id as usize) < self.len, "id {id} out of view");
+        locate_sealed(&self.bases, id)
+    }
+}
+
+impl ReadIndex for FrozenView {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        let mut topk = TopK::new(k);
+        for (seg, &base) in self.segments.iter().zip(&self.bases) {
+            seg.scan_into(query, base, &mut topk);
+        }
+        topk.into_sorted()
+            .into_iter()
+            .map(|(id, score)| Hit { id, score })
+            .collect()
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        let (si, li) = self.locate(id);
+        &self.segments[si].payloads[li]
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        let (si, li) = self.locate(id);
+        self.segments[si].row(li)
+    }
+}
+
+/// The writer-owned segmented store. Implements [`VectorIndex`] so it can
+/// sit inside an `EagleRouter` unchanged; additionally supports
+/// [`SegmentStore::freeze`] for snapshot publication.
+#[derive(Debug)]
+pub struct SegmentStore {
+    dim: usize,
+    sealed: Vec<Arc<Segment>>,
+    bases: Vec<u32>,
+    sealed_len: usize,
+    pending: Segment,
+}
+
+impl SegmentStore {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        SegmentStore {
+            dim,
+            sealed: Vec::new(),
+            bases: Vec::new(),
+            sealed_len: 0,
+            pending: Segment::new(dim),
+        }
+    }
+
+    /// Copy an existing flat store (snapshot restore / server bring-up).
+    pub fn from_flat(flat: &super::flat::FlatStore) -> Self {
+        let dim = flat.dim();
+        let n = flat.len();
+        let mut seg = Segment::with_capacity(dim, n);
+        for id in 0..n as u32 {
+            seg.push(flat.vector(id), flat.feedback(id).clone());
+        }
+        let mut store = SegmentStore::new(dim);
+        if !seg.is_empty() {
+            store.sealed_len = seg.len();
+            store.bases.push(0);
+            store.sealed.push(Arc::new(seg));
+        }
+        store
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.sealed.len() + usize::from(!self.pending.is_empty())
+    }
+
+    /// Seal the pending segment (if any) and merge binary-counter style:
+    /// while the newest sealed segment is at least as large as its
+    /// predecessor, replace the pair with their concatenation. Keeps the
+    /// segment count at O(log n) with O(log n) amortized copies per entry.
+    fn seal_and_merge(&mut self) {
+        if !self.pending.is_empty() {
+            let seg = std::mem::replace(&mut self.pending, Segment::new(self.dim));
+            self.bases.push(self.sealed_len as u32);
+            self.sealed_len += seg.len();
+            self.sealed.push(Arc::new(seg));
+        }
+        while self.sealed.len() >= 2
+            && self.sealed[self.sealed.len() - 1].len() >= self.sealed[self.sealed.len() - 2].len()
+        {
+            let newer = self.sealed.pop().unwrap();
+            let older = self.sealed.pop().unwrap();
+            self.bases.pop();
+            let mut merged = Segment::with_capacity(self.dim, older.len() + newer.len());
+            for seg in [&older, &newer] {
+                merged.data.extend_from_slice(&seg.data);
+                merged.payloads.extend_from_slice(&seg.payloads);
+            }
+            self.sealed.push(Arc::new(merged));
+        }
+    }
+
+    /// Freeze the current contents into an immutable view. O(pending) to
+    /// seal + O(log n) `Arc` clones; the writer keeps appending afterwards
+    /// without ever touching what the view pinned.
+    pub fn freeze(&mut self) -> FrozenView {
+        self.seal_and_merge();
+        FrozenView {
+            dim: self.dim,
+            len: self.sealed_len,
+            segments: self.sealed.clone(),
+            bases: self.bases.clone(),
+        }
+    }
+}
+
+impl ReadIndex for SegmentStore {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.sealed_len + self.pending.len()
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        let mut topk = TopK::new(k);
+        for (seg, &base) in self.sealed.iter().zip(&self.bases) {
+            seg.scan_into(query, base, &mut topk);
+        }
+        self.pending.scan_into(query, self.sealed_len as u32, &mut topk);
+        topk.into_sorted()
+            .into_iter()
+            .map(|(id, score)| Hit { id, score })
+            .collect()
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        if (id as usize) >= self.sealed_len {
+            return &self.pending.payloads[id as usize - self.sealed_len];
+        }
+        let (si, li) = locate_sealed(&self.bases, id);
+        &self.sealed[si].payloads[li]
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        if (id as usize) >= self.sealed_len {
+            return self.pending.row(id as usize - self.sealed_len);
+        }
+        let (si, li) = locate_sealed(&self.bases, id);
+        self.sealed[si].row(li)
+    }
+}
+
+impl VectorIndex for SegmentStore {
+    fn add(&mut self, vector: &[f32], feedback: Feedback) -> u32 {
+        assert_eq!(vector.len(), self.dim, "vector dim mismatch");
+        let id = self.len() as u32;
+        self.pending.push(vector, feedback);
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::flat::FlatStore;
+    use super::super::testutil::*;
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    /// Build a flat store and a segment store with identical contents,
+    /// freezing the segment store every `freeze_every` inserts.
+    fn twin_stores(
+        rng: &mut Rng,
+        n: usize,
+        dim: usize,
+        freeze_every: usize,
+    ) -> (FlatStore, SegmentStore, Vec<FrozenView>) {
+        let mut flat = FlatStore::new(dim);
+        let mut seg = SegmentStore::new(dim);
+        let mut views = Vec::new();
+        for i in 0..n {
+            let v = random_unit(rng, dim);
+            flat.add(&v, dummy_feedback(i));
+            seg.add(&v, dummy_feedback(i));
+            if freeze_every > 0 && (i + 1) % freeze_every == 0 {
+                views.push(seg.freeze());
+            }
+        }
+        (flat, seg, views)
+    }
+
+    #[test]
+    fn segment_store_matches_flat_exactly() {
+        prop::check("segmented == flat", 40, |rng| {
+            let dim = [4, 16, 64][rng.below(3)];
+            let n = 1 + rng.below(400);
+            let k = 1 + rng.below(30);
+            let freeze_every = 1 + rng.below(50);
+            let (flat, seg, _) = twin_stores(rng, n, dim, freeze_every);
+            let q = random_unit(rng, dim);
+            let a = flat.search(&q, k);
+            let b = seg.search(&q, k);
+            prop::assert_prop(a == b, "hit lists differ")
+        });
+    }
+
+    #[test]
+    fn frozen_view_matches_flat_prefix() {
+        prop::check("frozen view == flat prefix", 30, |rng| {
+            let dim = 16;
+            let n = 50 + rng.below(300);
+            let freeze_every = 1 + rng.below(40);
+            let (flat, _, views) = twin_stores(rng, n, dim, freeze_every);
+            let q = random_unit(rng, dim);
+            for (vi, view) in views.iter().enumerate() {
+                let visible = (vi + 1) * freeze_every;
+                prop::assert_prop(view.len() == visible, "view length")?;
+                // rebuild the prefix flat store for an exact comparison
+                let mut prefix = FlatStore::new(dim);
+                for id in 0..visible as u32 {
+                    prefix.add(flat.vector(id), flat.feedback(id).clone());
+                }
+                let a = prefix.search(&q, 10);
+                let b = view.search(&q, 10);
+                prop::assert_prop(a == b, "prefix hit lists differ")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn views_survive_later_merges() {
+        // a view taken early must keep returning its exact contents even
+        // after the writer merges/compacts segments many times over
+        let mut rng = Rng::new(7);
+        let dim = 8;
+        let mut seg = SegmentStore::new(dim);
+        let mut vectors = Vec::new();
+        for i in 0..32 {
+            let v = random_unit(&mut rng, dim);
+            seg.add(&v, dummy_feedback(i));
+            vectors.push(v);
+        }
+        let early = seg.freeze();
+        for i in 32..512 {
+            seg.add(&random_unit(&mut rng, dim), dummy_feedback(i));
+            if i % 17 == 0 {
+                let _ = seg.freeze();
+            }
+        }
+        assert_eq!(early.len(), 32);
+        for (i, v) in vectors.iter().enumerate() {
+            assert_eq!(early.vector(i as u32), v.as_slice());
+            assert_eq!(early.feedback(i as u32), &dummy_feedback(i));
+        }
+    }
+
+    #[test]
+    fn merge_keeps_log_segments() {
+        let mut rng = Rng::new(9);
+        let mut seg = SegmentStore::new(4);
+        for i in 0..4096 {
+            seg.add(&random_unit(&mut rng, 4), dummy_feedback(i));
+            if i % 3 == 0 {
+                let _ = seg.freeze();
+            }
+        }
+        let view = seg.freeze();
+        assert_eq!(view.len(), 4096);
+        // binary-counter merging: segment count stays logarithmic
+        assert!(
+            view.segment_count() <= 14,
+            "{} segments for 4096 entries",
+            view.segment_count()
+        );
+    }
+
+    #[test]
+    fn from_flat_roundtrip() {
+        let mut rng = Rng::new(11);
+        let mut flat = FlatStore::new(8);
+        for i in 0..100 {
+            flat.add(&random_unit(&mut rng, 8), dummy_feedback(i));
+        }
+        let mut seg = SegmentStore::from_flat(&flat);
+        assert_eq!(seg.len(), 100);
+        let q = random_unit(&mut rng, 8);
+        assert_eq!(flat.search(&q, 7), seg.search(&q, 7));
+        let view = seg.freeze();
+        assert_eq!(view.search(&q, 7), flat.search(&q, 7));
+    }
+
+    #[test]
+    fn empty_store_and_view() {
+        let mut seg = SegmentStore::new(4);
+        assert!(seg.is_empty());
+        let view = seg.freeze();
+        assert_eq!(view.len(), 0);
+        assert!(view.search(&[1.0, 0.0, 0.0, 0.0], 5).is_empty());
+        let empty = FrozenView::empty(4);
+        assert!(empty.search(&[1.0, 0.0, 0.0, 0.0], 3).is_empty());
+    }
+
+    #[test]
+    fn freeze_excludes_later_inserts() {
+        let mut rng = Rng::new(13);
+        let mut seg = SegmentStore::new(8);
+        for i in 0..10 {
+            seg.add(&random_unit(&mut rng, 8), dummy_feedback(i));
+        }
+        let view = seg.freeze();
+        let probe = random_unit(&mut rng, 8);
+        seg.add(&probe, dummy_feedback(99));
+        assert_eq!(view.len(), 10);
+        // the probe vector is its own nearest neighbor in the store but
+        // must be invisible to the earlier view
+        assert_eq!(seg.search(&probe, 1)[0].id, 10);
+        assert!(view.search(&probe, 11).iter().all(|h| h.id < 10));
+    }
+}

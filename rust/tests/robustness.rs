@@ -15,7 +15,7 @@ use eagle::runtime::{Manifest, Runtime};
 use eagle::util::{l2_normalize, Rng};
 use eagle::vectordb::flat::FlatStore;
 use eagle::vectordb::ivf::{IvfIndex, IvfParams};
-use eagle::vectordb::VectorIndex;
+use eagle::vectordb::ReadIndex;
 
 fn tmpdir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("eagle_robust_{tag}_{}", std::process::id()));

@@ -15,6 +15,13 @@ use eagle::vectordb::flat::FlatStore;
 use eagle::vectordb::VectorIndex;
 
 fn artifacts_dir() -> Option<PathBuf> {
+    if !Runtime::available() {
+        eprintln!(
+            "skipping: PJRT runtime not compiled in (build with `--features pjrt` \
+             in an environment that provides the xla crate)"
+        );
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)

@@ -4,16 +4,24 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use eagle::config::EagleParams;
+use eagle::config::{EagleParams, EpochParams};
 use eagle::coordinator::registry::ModelRegistry;
 use eagle::coordinator::router::EagleRouter;
 use eagle::embedding::{BatcherOptions, EmbedService};
 use eagle::metrics::Metrics;
+use eagle::runtime::Runtime;
 use eagle::server::client::EagleClient;
 use eagle::server::{Server, ServerState};
 use eagle::vectordb::flat::FlatStore;
 
 fn artifacts_dir() -> Option<PathBuf> {
+    if !Runtime::available() {
+        eprintln!(
+            "skipping: PJRT runtime not compiled in (build with `--features pjrt` \
+             in an environment that provides the xla crate)"
+        );
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)
@@ -21,6 +29,11 @@ fn artifacts_dir() -> Option<PathBuf> {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         None
     }
+}
+
+/// Feedback records visible to the writer (ingested, published or not).
+fn ingested(server: &Server) -> usize {
+    server.state.writer.lock().unwrap().router().feedback_len()
 }
 
 fn start_server(dir: &Path) -> (Server, EmbedService, String) {
@@ -40,7 +53,9 @@ fn start_server_with_snapshot(
     .unwrap();
     let registry = ModelRegistry::routerbench();
     let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(256));
-    let mut state = ServerState::new(router, registry, service.handle(), metrics);
+    // tight cadence so feedback becomes routable quickly in tests
+    let epoch = EpochParams { publish_every: 8, publish_interval_ms: 10 };
+    let mut state = ServerState::with_epoch(router, registry, service.handle(), metrics, epoch);
     if let Some(p) = snapshot {
         state = state.with_snapshot_path(p);
     }
@@ -65,7 +80,7 @@ fn snapshot_op_persists_live_state() {
     }
     // wait for applier
     for _ in 0..50 {
-        if server.state.router.read().unwrap().feedback_len() == 5 {
+        if ingested(&server) == 5 {
             break;
         }
         std::thread::sleep(std::time::Duration::from_millis(50));
@@ -124,12 +139,16 @@ fn route_feedback_stats_roundtrip() {
     // give the applier a moment, then check state moved
     std::thread::sleep(std::time::Duration::from_millis(300));
     {
-        let router = server.state.router.read().unwrap();
-        assert_eq!(router.feedback_len(), 1);
+        let writer = server.state.writer.lock().unwrap();
+        assert_eq!(writer.router().feedback_len(), 1);
         let g = registry.index_of("gpt-4").unwrap();
         let l = registry.index_of("llama-2-13b-chat").unwrap();
-        assert!(router.global().ratings()[g] > router.global().ratings()[l]);
+        let ratings = writer.router().global().ratings();
+        assert!(ratings[g] > ratings[l]);
     }
+    // the stale-publish beat must make the record visible to readers
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert_eq!(server.state.snapshots.load().history_len(), 1);
 
     let (report, requests, feedback) = client.stats().unwrap();
     assert!(requests >= 2, "requests = {requests}");
@@ -153,17 +172,94 @@ fn feedback_moves_routing_decisions() {
     }
     // wait for the applier to drain
     for _ in 0..50 {
-        if server.state.router.read().unwrap().feedback_len() == 80 {
+        if ingested(&server) == 80 {
             break;
         }
         std::thread::sleep(std::time::Duration::from_millis(50));
     }
-    assert_eq!(server.state.router.read().unwrap().feedback_len(), 80);
+    assert_eq!(ingested(&server), 80);
+    // make everything ingested visible to the route path immediately
+    server.state.force_publish();
+    assert_eq!(server.state.snapshots.load().history_len(), 80);
 
     // now route a poetry query with a huge budget: trained preference wins
     let d = client.route("write a short poem about the sea", 10.0).unwrap();
     assert_eq!(d.model, "mistral-7b-chat", "routing ignored feedback");
 
+    server.shutdown();
+}
+
+#[test]
+fn route_batch_matches_singles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (server, _service, addr) = start_server(&dir);
+    let mut client = EagleClient::connect(&addr).unwrap();
+
+    // seed some feedback so scores are non-uniform, then publish
+    for i in 0..10 {
+        client
+            .feedback(&format!("math problem {i}"), "gpt-4", "claude-v2", 1.0)
+            .unwrap();
+    }
+    for _ in 0..50 {
+        if ingested(&server) == 10 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    server.state.force_publish();
+
+    let texts = [
+        "solve the equation 3x + 5 = 20",
+        "write a poem about the sea",
+        "translate hello to french",
+        "what is the capital of peru",
+    ];
+    let batch = client.route_batch(&texts, 0.5).unwrap();
+    assert_eq!(batch.len(), texts.len());
+    for (text, b) in texts.iter().zip(&batch) {
+        let single = client.route(text, 0.5).unwrap();
+        assert_eq!(single.model, b.model, "batch/single diverge for {text:?}");
+        assert_eq!(single.model_index, b.model_index);
+        assert_eq!(single.expected_cost, b.expected_cost);
+    }
+
+    // batch of one works, and oversized batches are rejected cleanly
+    let one = client.route_batch(&["just one"], 0.5).unwrap();
+    assert_eq!(one.len(), 1);
+    let too_many: Vec<String> = (0..300).map(|i| format!("q{i}")).collect();
+    let refs: Vec<&str> = too_many.iter().map(|s| s.as_str()).collect();
+    assert!(client.route_batch(&refs, 0.5).is_err());
+
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_routes_are_cobatched() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (server, _service, addr) = start_server(&dir);
+
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // write 8 pipelined route requests in one burst; the worker should
+    // answer all of them, in order
+    let mut burst = String::new();
+    for i in 0..8 {
+        burst.push_str(&format!(
+            "{{\"op\":\"route\",\"text\":\"pipelined query {i}\",\"budget\":0.5}}\n"
+        ));
+    }
+    writer.write_all(burst.as_bytes()).unwrap();
+    for _ in 0..8 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "bad response: {line}");
+        assert!(line.contains("\"model\""), "bad response: {line}");
+    }
+    assert!(server.state.metrics.requests.get() >= 8);
     server.shutdown();
 }
 

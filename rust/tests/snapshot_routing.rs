@@ -1,0 +1,317 @@
+//! Concurrency stress + equivalence suite for RCU snapshot routing
+//! (`eagle::coordinator::snapshot`).
+//!
+//! The contract under test:
+//! - **No torn reads**: every `(epoch, history_len, ratings)` triple a
+//!   reader observes matches exactly what the writer published for that
+//!   epoch — never a mix of two epochs.
+//! - **Readers never block**: route-side snapshot acquisition is one
+//!   uncontended slot read; even under a full-rate feedback storm the
+//!   readers keep making progress and no single acquisition stalls.
+//! - **Snapshot ≡ locked router**: scores from a published snapshot are
+//!   bit-identical to a flat-store `EagleRouter` rebuilt over the same
+//!   feedback prefix (the acceptance criterion for the RCU refactor).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use eagle::config::{EagleParams, EpochParams};
+use eagle::coordinator::router::{EagleRouter, Observation};
+use eagle::coordinator::snapshot::{RouterSnapshot, RouterWriter};
+use eagle::elo::{Comparison, Outcome};
+use eagle::util::{l2_normalize, Rng};
+use eagle::vectordb::flat::FlatStore;
+
+const DIM: usize = 16;
+const N_MODELS: usize = 6;
+
+/// Serializes the thread-heavy tests in this binary: cargo's parallel
+/// test runner would otherwise pile ~10 busy threads onto a small CI
+/// runner and turn scheduling gaps into spurious stall reports.
+static STORM_GATE: Mutex<()> = Mutex::new(());
+
+fn storm_slot() -> std::sync::MutexGuard<'static, ()> {
+    STORM_GATE.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn unit(rng: &mut Rng) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+    l2_normalize(&mut v);
+    v
+}
+
+/// Deterministic feedback stream; the prefix of length h is exactly what
+/// a snapshot with `history_len == h` has folded in.
+fn obs_stream(seed: u64, n: usize) -> Vec<Observation> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let a = rng.below(N_MODELS);
+            let mut b = rng.below(N_MODELS - 1);
+            if b >= a {
+                b += 1;
+            }
+            let outcome = match rng.below(3) {
+                0 => Outcome::WinA,
+                1 => Outcome::WinB,
+                _ => Outcome::Draw,
+            };
+            Observation::single(unit(&mut rng), Comparison { a, b, outcome })
+        })
+        .collect()
+}
+
+/// One observed routing state: (epoch, history_len, ratings).
+type Observed = (u64, usize, Vec<f64>);
+
+/// What the writer records at each publish, keyed by epoch.
+type PublishLog = Mutex<HashMap<u64, (usize, Vec<f64>)>>;
+
+struct StormResult {
+    /// Per-reader observations.
+    observed: Vec<Vec<Observed>>,
+    /// A few snapshots pinned by readers mid-storm, for score replay.
+    pinned: Vec<Arc<RouterSnapshot>>,
+    /// Worst single snapshot acquisition per reader.
+    max_load: Vec<Duration>,
+    log: HashMap<u64, (usize, Vec<f64>)>,
+}
+
+/// Run `n_readers` scoring threads against a writer ingesting `stream`
+/// at full rate with the given cadence.
+fn run_storm(stream: Vec<Observation>, cadence: EpochParams, n_readers: usize) -> StormResult {
+    let mut writer = RouterWriter::new(EagleParams::default(), N_MODELS, DIM, cadence);
+    let ring = writer.ring();
+    let log: Arc<PublishLog> = Arc::new(Mutex::new(HashMap::new()));
+    {
+        let snap = ring.load();
+        log.lock().unwrap().insert(
+            snap.epoch(),
+            (snap.history_len(), snap.global_ratings().to_vec()),
+        );
+    }
+    let done = Arc::new(AtomicBool::new(false));
+
+    let writer_log = log.clone();
+    let writer_done = done.clone();
+    let writer_thread = std::thread::spawn(move || {
+        let record = |w: &RouterWriter, epoch: u64| {
+            writer_log.lock().unwrap().insert(
+                epoch,
+                (w.router().feedback_len(), w.router().global().ratings()),
+            );
+        };
+        for obs in stream {
+            if let Some(epoch) = writer.observe(obs) {
+                record(&writer, epoch);
+            }
+        }
+        // flush the tail so the final state is published too
+        if writer.unpublished() > 0 {
+            let epoch = writer.publish();
+            record(&writer, epoch);
+        }
+        writer_done.store(true, Ordering::SeqCst);
+    });
+
+    let readers: Vec<_> = (0..n_readers)
+        .map(|r| {
+            let ring = ring.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + r as u64);
+                let mut observed = Vec::new();
+                let mut pinned: Vec<Arc<RouterSnapshot>> = Vec::new();
+                let mut max_load = Duration::ZERO;
+                let mut last_epoch = 0u64;
+                let mut iters = 0u64;
+                // run through the storm, and keep going for a minimum
+                // number of iterations in case the writer outpaced thread
+                // startup on a fast machine
+                while !done.load(Ordering::SeqCst) || iters < 200 {
+                    let t0 = Instant::now();
+                    let snap = ring.load();
+                    max_load = max_load.max(t0.elapsed());
+                    // epochs move forward only
+                    assert!(
+                        snap.epoch() >= last_epoch,
+                        "epoch went backwards: {} -> {}",
+                        last_epoch,
+                        snap.epoch()
+                    );
+                    last_epoch = snap.epoch();
+                    // actually score against it (exercises the view)
+                    let q = unit(&mut rng);
+                    let scores = snap.scores(&q);
+                    assert_eq!(scores.len(), N_MODELS);
+                    assert!(scores.iter().all(|s| s.is_finite()), "non-finite score");
+                    observed.push((
+                        snap.epoch(),
+                        snap.history_len(),
+                        snap.global_ratings().to_vec(),
+                    ));
+                    if iters % 64 == 0 && pinned.len() < 8 {
+                        pinned.push(snap);
+                    }
+                    iters += 1;
+                }
+                (observed, pinned, max_load, iters)
+            })
+        })
+        .collect();
+
+    writer_thread.join().unwrap();
+    let mut result = StormResult {
+        observed: Vec::new(),
+        pinned: Vec::new(),
+        max_load: Vec::new(),
+        log: HashMap::new(),
+    };
+    for r in readers {
+        let (observed, pinned, max_load, iters) = r.join().unwrap();
+        assert!(iters >= 20, "reader starved: only {iters} iterations");
+        result.observed.push(observed);
+        result.pinned.extend(pinned);
+        result.max_load.push(max_load);
+    }
+    result.log = Arc::try_unwrap(log)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+    result
+}
+
+/// Rebuild the locked-router baseline over the stream prefix.
+fn reference_router(stream: &[Observation], prefix: usize) -> EagleRouter<FlatStore> {
+    let mut r = EagleRouter::new(EagleParams::default(), N_MODELS, FlatStore::new(DIM));
+    for obs in &stream[..prefix] {
+        r.observe(obs.clone());
+    }
+    r
+}
+
+#[test]
+fn feedback_storm_no_torn_reads_and_readers_progress() {
+    let _slot = storm_slot();
+    let stream = obs_stream(0xA11CE, 20_000);
+    let cadence = EpochParams { publish_every: 32, publish_interval_ms: 5 };
+    let result = run_storm(stream, cadence, 4);
+
+    // every reader observation corresponds exactly to a published epoch
+    let mut checked = 0usize;
+    for per_reader in &result.observed {
+        for (epoch, history_len, ratings) in per_reader {
+            let (pub_len, pub_ratings) = result
+                .log
+                .get(epoch)
+                .unwrap_or_else(|| panic!("reader saw unpublished epoch {epoch}"));
+            assert_eq!(history_len, pub_len, "torn read at epoch {epoch}");
+            assert_eq!(ratings, pub_ratings, "torn ratings at epoch {epoch}");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 80, "too few observations checked: {checked}");
+
+    // readers never block: a snapshot acquisition is a slot read; even on
+    // a loaded CI box a full second means something held the reader
+    // (scheduling noise is why this is not tighter)
+    for (r, max_load) in result.max_load.iter().enumerate() {
+        assert!(
+            *max_load < Duration::from_secs(1),
+            "reader {r} stalled {max_load:?} acquiring a snapshot"
+        );
+    }
+}
+
+#[test]
+fn snapshot_scores_equal_locked_router_for_same_epoch() {
+    let _slot = storm_slot();
+    let stream = obs_stream(0xB0B, 6_000);
+    let cadence = EpochParams { publish_every: 64, publish_interval_ms: 1_000 };
+    let result = run_storm(stream.clone(), cadence, 2);
+
+    // dedupe pinned snapshots by epoch, keep a handful
+    let mut by_epoch: HashMap<u64, Arc<RouterSnapshot>> = HashMap::new();
+    for snap in result.pinned {
+        by_epoch.entry(snap.epoch()).or_insert(snap);
+    }
+    assert!(!by_epoch.is_empty(), "no snapshots pinned during the storm");
+
+    let mut rng = Rng::new(0xCAFE);
+    let probes: Vec<Vec<f32>> = (0..3).map(|_| unit(&mut rng)).collect();
+    for (epoch, snap) in by_epoch.iter().take(6) {
+        let reference = reference_router(&stream, snap.history_len());
+        assert_eq!(
+            snap.global_ratings(),
+            &reference.global().ratings()[..],
+            "global table diverged at epoch {epoch}"
+        );
+        for q in &probes {
+            assert_eq!(
+                snap.scores(q),
+                reference.combined_scores(q),
+                "snapshot scores != locked-router scores at epoch {epoch}"
+            );
+        }
+        // batched path agrees with singles on the same snapshot
+        let batch = snap.score_batch(&probes);
+        for (q, b) in probes.iter().zip(&batch) {
+            assert_eq!(&snap.scores(q), b);
+        }
+    }
+}
+
+#[test]
+fn ring_wraps_safely_under_concurrent_load() {
+    let _slot = storm_slot();
+    // publish on every record: thousands of publishes force many full
+    // revolutions of the publication ring while readers hammer it
+    let stream = obs_stream(0xD00D, 4_000);
+    let cadence = EpochParams { publish_every: 1, publish_interval_ms: 1_000 };
+    let result = run_storm(stream, cadence, 4);
+
+    let max_epoch = result.log.keys().copied().max().unwrap();
+    assert_eq!(max_epoch, 4_000, "every record published its own epoch");
+    for per_reader in &result.observed {
+        for (epoch, history_len, _) in per_reader {
+            // with publish_every=1, epoch == history_len exactly
+            assert_eq!(*epoch as usize, *history_len, "epoch/history skew");
+        }
+    }
+}
+
+#[test]
+fn queue_backpressure_never_reaches_readers() {
+    let _slot = storm_slot();
+    // a writer that also sleeps (simulating embed work) while readers
+    // score: reader progress must not depend on writer progress
+    let stream = obs_stream(0x5EED, 200);
+    let mut writer = RouterWriter::new(
+        EagleParams::default(),
+        N_MODELS,
+        DIM,
+        EpochParams { publish_every: 10, publish_interval_ms: 1_000 },
+    );
+    let ring = writer.ring();
+    let done = Arc::new(AtomicBool::new(false));
+    let done_w = done.clone();
+    let writer_thread = std::thread::spawn(move || {
+        for obs in stream {
+            writer.observe(obs);
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        done_w.store(true, Ordering::SeqCst);
+    });
+    let mut rng = Rng::new(1);
+    let mut iters = 0u64;
+    while !done.load(Ordering::SeqCst) {
+        let snap = ring.load();
+        let _ = snap.scores(&unit(&mut rng));
+        iters += 1;
+    }
+    writer_thread.join().unwrap();
+    // 200 records * 200us of writer-side work = at least ~40ms of storm;
+    // an unblocked reader fits thousands of iterations in that window
+    assert!(iters > 500, "reader made only {iters} iterations");
+}
