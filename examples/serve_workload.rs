@@ -157,7 +157,7 @@ fn main() -> anyhow::Result<()> {
     println!("server metrics  :\n{}", metrics.report());
     let fb = {
         let writer = server.state.writer.lock().unwrap();
-        writer.router().feedback_len()
+        writer.history_len()
     };
     let snap = server.state.snapshots.load();
     println!("feedback folded : {fb} comparisons (online, no retraining)");

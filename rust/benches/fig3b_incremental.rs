@@ -6,11 +6,15 @@
 //! baselines' mean.
 //!
 //! Plus the serving-side counterpart of the incremental-update claim:
-//! route latency (p50/p99 through a published snapshot) stays flat while
-//! the writer ingests the 70%->100% feedback delta as a storm — the RCU
-//! snapshot core keeps online adaptation off the read path.
+//! route latency (p50/p99 through published snapshots) stays flat while
+//! the writer ingests the 70%->100% feedback delta as a storm — swept
+//! over shard counts, since the sharded scatter-gather core is how the
+//! serving path absorbs the storm at scale.
 //!
 //! Run: `cargo bench --bench fig3b_incremental`
+//!
+//! `EAGLE_BENCH_SMOKE=1` shrinks the storm windows for CI;
+//! `EAGLE_BENCH_JSON=1` (implied) writes `BENCH_fig3b_incremental.json`.
 
 mod common;
 
@@ -18,10 +22,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use eagle::bench::{fmt, print_table};
-use eagle::config::EpochParams;
+use eagle::bench::{fmt, print_table, JsonReport};
+use eagle::config::{EpochParams, ShardParams};
 use eagle::coordinator::router::EagleRouter;
-use eagle::coordinator::snapshot::RouterWriter;
+use eagle::coordinator::sharded::ShardedRouter;
 use eagle::routerbench::DATASETS;
 use eagle::util::percentile;
 use eagle::vectordb::flat::FlatStore;
@@ -59,6 +63,7 @@ fn main() {
     print_table("Fig 3b — summed AUC by feedback stage", &rows);
 
     println!();
+    let mut report = JsonReport::new("fig3b_incremental");
     for (stage_i, (label, paper)) in
         [("70%", 8.65), ("85%", 9.21), ("100%", 9.92)].iter().enumerate()
     {
@@ -69,14 +74,25 @@ fn main() {
             "stage {label}: eagle improvement over baseline mean = {imp:+.2}% \
              (paper: +{paper:.2}%)"
         );
+        report.push(&format!("auc.eagle.stage{stage_i}"), sums[0][stage_i]);
+        report.push(&format!("auc.improvement_pct.stage{stage_i}"), imp);
     }
 
-    incremental_storm_arm(&exp, &cfg);
+    incremental_storm_arm(&exp, &cfg, &mut report);
+    if eagle::bench::json_enabled() {
+        let path = report.write().expect("write bench json");
+        println!("\nwrote {}", path.display());
+    }
 }
 
-/// Route p50/p99 through the RCU snapshot core while the 70%->100%
-/// feedback delta streams in at full rate, vs. idle before and after.
-fn incremental_storm_arm(exp: &eagle::eval::harness::Experiment, cfg: &eagle::config::Config) {
+/// Route p50/p99 through published snapshots while the 70%->100%
+/// feedback delta streams in at full rate, vs. idle before and after —
+/// swept over shard counts of the scatter-gather router.
+fn incremental_storm_arm(
+    exp: &eagle::eval::harness::Experiment,
+    cfg: &eagle::config::Config,
+    report: &mut JsonReport,
+) {
     let split = 0;
     let warm = exp.observations(split, 0.70);
     let all = exp.observations(split, 1.0);
@@ -87,77 +103,87 @@ fn incremental_storm_arm(exp: &eagle::eval::harness::Experiment, cfg: &eagle::co
     let delta: Vec<_> = all[warm.len()..].to_vec();
     let probes: Vec<Vec<f32>> =
         warm.iter().step_by(37).take(24).map(|o| o.embedding.clone()).collect();
+    let idle_batches = if eagle::bench::smoke() { 120 } else { 400 };
+    let min_storm_ms = if eagle::bench::smoke() { 150 } else { 400 };
+    let shard_counts: &[usize] = if eagle::bench::smoke() { &[1, 2] } else { &[1, 4] };
 
-    let base = EagleRouter::fit(
-        cfg.eagle.clone(),
-        exp.n_models(),
-        FlatStore::new(probes[0].len()),
-        &warm,
-    );
-    let mut writer = RouterWriter::from_router(
-        base,
-        EpochParams { publish_every: 64, publish_interval_ms: 5 },
-    );
-    let ring = writer.ring();
+    for &k in shard_counts {
+        let base = EagleRouter::fit(
+            cfg.eagle.clone(),
+            exp.n_models(),
+            FlatStore::new(probes[0].len()),
+            &warm,
+        );
+        let mut sharded = ShardedRouter::from_router(
+            base,
+            EpochParams { publish_every: 64, publish_interval_ms: 5 },
+            ShardParams { count: k, hash_seed: 0xEA61E },
+        );
+        let handle = sharded.handle();
+        let delta_k = delta.clone();
 
-    let sample = |keep: &dyn Fn(usize) -> bool| -> (f64, f64, usize) {
-        let mut lat = Vec::new();
-        let mut i = 0usize;
-        while keep(i) {
+        let sample = |keep: &dyn Fn(usize) -> bool| -> (f64, f64, usize) {
+            let mut lat = Vec::new();
+            let mut i = 0usize;
+            while keep(i) {
+                let t0 = Instant::now();
+                let snap = handle.load();
+                std::hint::black_box(snap.score_batch(&probes));
+                lat.push(t0.elapsed().as_nanos() as f64 / 1e3);
+                i += 1;
+            }
+            (percentile(&lat, 50.0), percentile(&lat, 99.0), lat.len())
+        };
+
+        // idle baseline at 70%
+        let (idle_p50, idle_p99, _) = sample(&|i| i < idle_batches);
+
+        // storm: stream the 70%->100% delta in, replaying it cyclically so
+        // the storm lasts long enough to measure (>= one full pass)
+        let storming = Arc::new(AtomicBool::new(true));
+        let storming_w = storming.clone();
+        let feeder = std::thread::spawn(move || {
             let t0 = Instant::now();
-            let snap = ring.load();
-            std::hint::black_box(snap.score_batch(&probes));
-            lat.push(t0.elapsed().as_nanos() as f64 / 1e3);
-            i += 1;
-        }
-        (percentile(&lat, 50.0), percentile(&lat, 99.0), lat.len())
-    };
-
-    // idle baseline at 70%
-    let (idle_p50, idle_p99, _) = sample(&|i| i < 400);
-
-    // storm: stream the 70%->100% delta in, replaying it cyclically so
-    // the storm lasts long enough to measure (>= one full pass, >= 400ms)
-    let storming = Arc::new(AtomicBool::new(true));
-    let storming_w = storming.clone();
-    let feeder = std::thread::spawn(move || {
-        let t0 = Instant::now();
-        let mut n = 0usize;
-        'storm: loop {
-            for obs in &delta {
-                writer.observe(obs.clone());
-                n += 1;
-                if n >= delta.len() && t0.elapsed().as_millis() >= 400 {
-                    break 'storm;
+            let mut n = 0usize;
+            'storm: loop {
+                for obs in &delta_k {
+                    sharded.observe(obs.clone());
+                    n += 1;
+                    if n >= delta_k.len() && t0.elapsed().as_millis() >= min_storm_ms {
+                        break 'storm;
+                    }
                 }
             }
-        }
-        writer.publish();
-        let secs = t0.elapsed().as_secs_f64();
-        storming_w.store(false, Ordering::Relaxed);
-        (n, secs)
-    });
-    let (storm_p50, storm_p99, storm_batches) =
-        sample(&|_| storming.load(Ordering::Relaxed));
-    let (n_delta, ingest_secs) = feeder.join().unwrap();
+            sharded.publish_all();
+            let secs = t0.elapsed().as_secs_f64();
+            storming_w.store(false, Ordering::Relaxed);
+            (n, secs)
+        });
+        let (storm_p50, storm_p99, storm_batches) =
+            sample(&|_| storming.load(Ordering::Relaxed));
+        let (n_delta, ingest_secs) = feeder.join().unwrap();
 
-    // idle again at 100%
-    let (after_p50, after_p99, _) = sample(&|i| i < 400);
+        // idle again at 100%
+        let (after_p50, after_p99, _) = sample(&|i| i < idle_batches);
 
-    println!(
-        "\n== route latency under incremental update (batch {}, split {}) ==",
-        probes.len(),
-        DATASETS[split]
-    );
-    println!("  idle @70%:  p50 {idle_p50:>8.1} us/batch  p99 {idle_p99:>8.1} us/batch");
-    println!(
-        "  storm:      p50 {storm_p50:>8.1} us/batch  p99 {storm_p99:>8.1} us/batch  \
-         ({n_delta} records in {ingest_secs:.3}s = {:.0} rec/s, {storm_batches} batches sampled)",
-        n_delta as f64 / ingest_secs.max(1e-9)
-    );
-    println!("  idle @100%: p50 {after_p50:>8.1} us/batch  p99 {after_p99:>8.1} us/batch");
-    println!(
-        "  flat-p99 check: storm p99 / idle-span p99 = {:.3}",
-        storm_p99 / idle_p99.max(after_p99).max(1e-9)
-    );
+        println!(
+            "\n== route latency under incremental update (batch {}, split {}, K={k}) ==",
+            probes.len(),
+            DATASETS[split]
+        );
+        println!("  idle @70%:  p50 {idle_p50:>8.1} us/batch  p99 {idle_p99:>8.1} us/batch");
+        println!(
+            "  storm:      p50 {storm_p50:>8.1} us/batch  p99 {storm_p99:>8.1} us/batch  \
+             ({n_delta} records in {ingest_secs:.3}s = {:.0} rec/s, {storm_batches} batches \
+             sampled)",
+            n_delta as f64 / ingest_secs.max(1e-9)
+        );
+        println!("  idle @100%: p50 {after_p50:>8.1} us/batch  p99 {after_p99:>8.1} us/batch");
+        let flat_p99 = storm_p99 / idle_p99.max(after_p99).max(1e-9);
+        println!("  flat-p99 check: storm p99 / idle-span p99 = {flat_p99:.3}");
+        report.push(&format!("storm.k{k}.idle_p99_us"), idle_p99);
+        report.push(&format!("storm.k{k}.storm_p99_us"), storm_p99);
+        report.push(&format!("storm.k{k}.flat_p99_ratio"), flat_p99);
+        report.push(&format!("storm.k{k}.ingest_rps"), n_delta as f64 / ingest_secs.max(1e-9));
+    }
 }

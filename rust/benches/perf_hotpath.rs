@@ -3,13 +3,18 @@
 //! `eagle::bench` (adaptive iteration counts, p50/p99).
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! `EAGLE_BENCH_SMOKE=1` shrinks every measurement window for CI;
+//! `EAGLE_BENCH_JSON=1` (implied by smoke) writes `BENCH_perf_hotpath.json`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use eagle::config::{EagleParams, EpochParams};
+use eagle::bench::JsonReport;
+use eagle::config::{EagleParams, EpochParams, ShardParams};
 use eagle::coordinator::router::{EagleRouter, Observation};
+use eagle::coordinator::sharded::ShardedRouter;
 use eagle::coordinator::snapshot::RouterWriter;
 use eagle::coordinator::Router;
 use eagle::elo::{Comparison, EloEngine, GlobalElo, Outcome};
@@ -22,6 +27,15 @@ use eagle::vectordb::ivf::{IvfIndex, IvfParams};
 use eagle::vectordb::{Feedback, ReadIndex, VectorIndex};
 
 const DIM: usize = 256;
+
+/// Per-bench time target, capped hard in smoke mode.
+fn target_ms(full: u64) -> u64 {
+    if eagle::bench::smoke() {
+        full.min(10)
+    } else {
+        full
+    }
+}
 
 fn unit(rng: &mut Rng) -> Vec<f32> {
     let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
@@ -50,17 +64,17 @@ fn main() {
     // --- tokenizer ---
     let text = "Solve this word problem about train speed distance hours \
                 please carefully show your reasoning with all details";
-    results.push(eagle::bench::bench("tokenizer/tokenize_64", 200, || {
+    results.push(eagle::bench::bench("tokenizer/tokenize_64", target_ms(200), || {
         std::hint::black_box(tokenizer::tokenize_default(text));
     }));
 
     // --- ELO ---
     let cmps: Vec<Comparison> = (0..1000).map(|_| rand_cmp(&mut rng)).collect();
     let mut engine = EloEngine::new(11, 32.0);
-    results.push(eagle::bench::bench("elo/update_x1000", 200, || {
+    results.push(eagle::bench::bench("elo/update_x1000", target_ms(200), || {
         engine.replay(&cmps);
     }));
-    results.push(eagle::bench::bench("elo/global_init_10k_records", 300, || {
+    results.push(eagle::bench::bench("elo/global_init_10k_records", target_ms(300), || {
         let mut g = GlobalElo::new(11, 32.0);
         for chunk in cmps.chunks(100) {
             for _ in 0..1 {
@@ -80,7 +94,7 @@ fn main() {
         let q = unit(&mut rng);
         results.push(eagle::bench::bench(
             &format!("vectordb/flat_scan_top20_n{n}"),
-            300,
+            target_ms(300),
             || {
                 std::hint::black_box(flat.search(&q, 20));
             },
@@ -93,7 +107,7 @@ fn main() {
         let ivf = IvfIndex::build(DIM, &vectors, payloads, IvfParams::default());
         results.push(eagle::bench::bench(
             &format!("vectordb/ivf_top20_n{n}_probe8of64"),
-            300,
+            target_ms(300),
             || {
                 std::hint::black_box(ivf.search(&q, 20));
             },
@@ -114,11 +128,11 @@ fn main() {
         &obs,
     );
     let q = unit(&mut rng);
-    results.push(eagle::bench::bench("router/combined_scores_store5k", 400, || {
+    results.push(eagle::bench::bench("router/combined_scores_store5k", target_ms(400), || {
         std::hint::black_box(router.scores(&q));
     }));
     let batch_queries: Vec<Vec<f32>> = (0..32).map(|_| unit(&mut rng)).collect();
-    results.push(eagle::bench::bench("router/score_batch32_store5k", 400, || {
+    results.push(eagle::bench::bench("router/score_batch32_store5k", target_ms(400), || {
         std::hint::black_box(router.score_batch(&batch_queries));
     }));
     let global_router = EagleRouter::fit(
@@ -127,13 +141,13 @@ fn main() {
         FlatStore::with_capacity(DIM, obs.len()),
         &obs,
     );
-    results.push(eagle::bench::bench("router/global_only_store5k", 200, || {
+    results.push(eagle::bench::bench("router/global_only_store5k", target_ms(200), || {
         std::hint::black_box(global_router.scores(&q));
     }));
 
     // --- hash embedder (fallback path) ---
     let hash = HashEmbedder::new(DIM);
-    results.push(eagle::bench::bench("embed/hash_fallback_1", 200, || {
+    results.push(eagle::bench::bench("embed/hash_fallback_1", target_ms(200), || {
         std::hint::black_box(hash.embed(&[text]));
     }));
 
@@ -148,11 +162,11 @@ fn main() {
         )
         .expect("embed service");
         let handle = svc.handle();
-        results.push(eagle::bench::bench("embed/pjrt_single", 2_000, || {
+        results.push(eagle::bench::bench("embed/pjrt_single", target_ms(2_000), || {
             std::hint::black_box(handle.embed_one(text).unwrap());
         }));
         let texts: Vec<&str> = (0..32).map(|_| text).collect();
-        results.push(eagle::bench::bench("embed/pjrt_batch32", 4_000, || {
+        results.push(eagle::bench::bench("embed/pjrt_batch32", target_ms(4_000), || {
             std::hint::black_box(handle.embed_many(&texts).unwrap());
         }));
     } else {
@@ -174,10 +188,10 @@ fn main() {
         w
     };
     let ring = snap_writer.ring();
-    results.push(eagle::bench::bench("snapshot/ring_load", 100, || {
+    results.push(eagle::bench::bench("snapshot/ring_load", target_ms(100), || {
         std::hint::black_box(ring.load());
     }));
-    results.push(eagle::bench::bench("snapshot/scores_store5k", 400, || {
+    results.push(eagle::bench::bench("snapshot/scores_store5k", target_ms(400), || {
         let snap = ring.load();
         std::hint::black_box(snap.scores(&q));
     }));
@@ -187,18 +201,27 @@ fn main() {
         println!("{}", r.line());
     }
 
-    contention_scenario(snap_writer);
+    let mut report = JsonReport::new("perf_hotpath");
+    for r in &results {
+        report.push_result(r);
+    }
+    contention_scenario(snap_writer, &mut report);
+    sharded_storm_sweep(&obs, &mut report);
+    if eagle::bench::json_enabled() {
+        let path = report.write().expect("write bench json");
+        println!("\nwrote {}", path.display());
+    }
 }
 
 /// The acceptance scenario for RCU snapshot routing: batched route
 /// throughput while the applier ingests >= 10k records/s must stay within
 /// 10% of the zero-feedback baseline. Quiet and stormy measurement
 /// windows alternate so the growing store affects both modes equally.
-fn contention_scenario(mut writer: RouterWriter) {
+fn contention_scenario(mut writer: RouterWriter, report: &mut JsonReport) {
     const BATCH: usize = 32;
     const WINDOW: Duration = Duration::from_millis(30);
-    const WINDOWS_PER_MODE: usize = 12;
     const TARGET_INGEST_PER_S: u64 = 20_000;
+    let windows_per_mode: usize = if eagle::bench::smoke() { 3 } else { 12 };
 
     let ring = writer.ring();
     let stop = Arc::new(AtomicBool::new(false));
@@ -271,7 +294,7 @@ fn contention_scenario(mut writer: RouterWriter) {
     let (mut quiet_lat, mut storm_lat) = (Vec::new(), Vec::new());
     let (mut quiet_served, mut quiet_secs) = (0u64, 0f64);
     let (mut storm_served, mut storm_secs) = (0u64, 0f64);
-    for _ in 0..WINDOWS_PER_MODE {
+    for _ in 0..windows_per_mode {
         storm_on.store(false, Ordering::Relaxed);
         let (s, t) = measure(&mut quiet_lat);
         quiet_served += s;
@@ -313,5 +336,108 @@ fn contention_scenario(mut writer: RouterWriter) {
     );
     if ingest_rate < 10_000.0 {
         println!("  WARN: ingest rate below the 10k rec/s storm target");
+    }
+    report.push("contention.quiet_qps", quiet_tput);
+    report.push("contention.storm_qps", storm_tput);
+    report.push("contention.storm_quiet_ratio", ratio);
+    report.push("contention.ingest_rps", ingest_rate);
+}
+
+/// The sharded scatter-gather arm: batched route throughput through a
+/// `ShardedRouter` handle while a feeder ingests a >= 10k records/s storm
+/// through the same router, swept over shard counts. Scatter parallelism
+/// should scale throughput with K (up to the core count); every K scores
+/// bit-identically, so this sweep is purely a performance surface.
+fn sharded_storm_sweep(obs: &[Observation], report: &mut JsonReport) {
+    const BATCH: usize = 32;
+    const TARGET_INGEST_PER_S: u64 = 20_000;
+    let shard_counts: &[usize] =
+        if eagle::bench::smoke() { &[1, 4] } else { &[1, 2, 4, 8] };
+    let window = if eagle::bench::smoke() {
+        Duration::from_millis(150)
+    } else {
+        Duration::from_millis(600)
+    };
+
+    println!("\n== sharded scatter-gather (batched route, {BATCH} q/batch, ingest storm) ==");
+    for &k in shard_counts {
+        let mut router = ShardedRouter::new(
+            EagleParams::default(),
+            11,
+            DIM,
+            EpochParams { publish_every: 64, publish_interval_ms: 5 },
+            ShardParams { count: k, hash_seed: 0xEA61E },
+        );
+        for o in obs {
+            router.observe(o.clone());
+        }
+        router.publish_all();
+        let handle = router.handle();
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let ingested = Arc::new(AtomicU64::new(0));
+        let stop_w = stop.clone();
+        let ingested_w = ingested.clone();
+        let feeder = std::thread::spawn(move || {
+            let mut rng = Rng::new(0x570F + k as u64);
+            let burst = 32u64;
+            let nap = Duration::from_nanos(1_000_000_000 * burst / TARGET_INGEST_PER_S);
+            let t0 = Instant::now();
+            while !stop_w.load(Ordering::Relaxed) {
+                let tb = Instant::now();
+                for _ in 0..burst {
+                    let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+                    l2_normalize(&mut v);
+                    let a = rng.below(11);
+                    let mut b = rng.below(10);
+                    if b >= a {
+                        b += 1;
+                    }
+                    router.observe(Observation::single(
+                        v,
+                        Comparison { a, b, outcome: Outcome::WinA },
+                    ));
+                }
+                ingested_w.fetch_add(burst, Ordering::Relaxed);
+                let spent = tb.elapsed();
+                if spent < nap {
+                    std::thread::sleep(nap - spent);
+                }
+            }
+            t0.elapsed().as_secs_f64()
+        });
+
+        let mut rng = Rng::new(0xBEEF);
+        let queries: Vec<Vec<f32>> = (0..BATCH).map(|_| unit(&mut rng)).collect();
+        let mut lat = Vec::new();
+        let mut served = 0u64;
+        let until = Instant::now() + window;
+        let t0 = Instant::now();
+        while Instant::now() < until {
+            let tb = Instant::now();
+            let snap = handle.load();
+            std::hint::black_box(snap.score_batch(&queries));
+            lat.push(tb.elapsed().as_nanos() as f64 / 1e3);
+            served += BATCH as u64;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        stop.store(true, Ordering::Relaxed);
+        let storm_secs = feeder.join().unwrap();
+
+        let tput = served as f64 / secs;
+        let ingest_rate = ingested.load(Ordering::Relaxed) as f64 / storm_secs.max(1e-9);
+        println!(
+            "  K={k}: {tput:>9.0} q/s  p50 {:>8.1} us/batch  p99 {:>8.1} us/batch  \
+             (ingest {ingest_rate:.0} rec/s)",
+            percentile(&lat, 50.0),
+            percentile(&lat, 99.0),
+        );
+        if ingest_rate < 10_000.0 {
+            println!("       WARN: ingest rate below the 10k rec/s storm target");
+        }
+        report.push(&format!("sharded.k{k}.route_qps"), tput);
+        report.push(&format!("sharded.k{k}.p50_us"), percentile(&lat, 50.0));
+        report.push(&format!("sharded.k{k}.p99_us"), percentile(&lat, 99.0));
+        report.push(&format!("sharded.k{k}.ingest_rps"), ingest_rate);
     }
 }

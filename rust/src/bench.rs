@@ -79,6 +79,77 @@ pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
     }
 }
 
+/// True when benches should run in CI smoke mode (`EAGLE_BENCH_SMOKE=1`):
+/// capped iteration targets and shortened measurement windows, so the
+/// full bench suite finishes in seconds and still emits every metric.
+pub fn smoke() -> bool {
+    std::env::var("EAGLE_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// True when benches should write `BENCH_<name>.json` result files
+/// (`EAGLE_BENCH_JSON=1`, or implied by smoke mode so CI always gets its
+/// artifact).
+pub fn json_enabled() -> bool {
+    std::env::var("EAGLE_BENCH_JSON").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+        || smoke()
+}
+
+/// Flat machine-readable bench report: metric name -> value. Written as
+/// `BENCH_<name>.json` (into `EAGLE_BENCH_JSON_DIR`, default the current
+/// directory) so CI can upload the perf trajectory per PR as an artifact.
+pub struct JsonReport {
+    name: String,
+    metrics: Vec<(String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> Self {
+        JsonReport { name: name.to_string(), metrics: Vec::new() }
+    }
+
+    /// Record one scalar metric.
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// Record a [`BenchResult`]'s mean/p50/p99 (microseconds).
+    pub fn push_result(&mut self, r: &BenchResult) {
+        self.push(&format!("{}.mean_us", r.name), r.mean_ns / 1e3);
+        self.push(&format!("{}.p50_us", r.name), r.p50_ns / 1e3);
+        self.push(&format!("{}.p99_us", r.name), r.p99_ns / 1e3);
+    }
+
+    /// Write `BENCH_<name>.json` into `EAGLE_BENCH_JSON_DIR` (default the
+    /// current directory); returns the path written.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("EAGLE_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(std::path::Path::new(&dir))
+    }
+
+    /// Write `BENCH_<name>.json` into an explicit directory.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        use crate::json::{self, Value};
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let doc = json::obj(vec![
+            ("bench", json::str_v(&self.name)),
+            ("smoke", json::num(f64::from(u8::from(smoke())))),
+            (
+                "metrics",
+                Value::Arr(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| {
+                            json::obj(vec![("name", json::str_v(k)), ("value", json::num(*v))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_json())?;
+        Ok(path)
+    }
+}
+
 /// Time a single run of `f` in seconds (for table-style results where the
 /// operation itself is the measurement, e.g. training time).
 pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
@@ -149,6 +220,26 @@ mod tests {
         let (v, secs) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn json_report_roundtrips_through_codec() {
+        let mut report = JsonReport::new("unit_test");
+        report.push("route.qps", 1234.5);
+        let r = bench("noop2", 1, || {});
+        report.push_result(&r);
+        let dir = std::env::temp_dir().join(format!("eagle_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = report.write_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "BENCH_unit_test.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").as_str().unwrap(), "unit_test");
+        let metrics = v.get("metrics").as_arr().unwrap();
+        assert_eq!(metrics.len(), 4);
+        assert_eq!(metrics[0].get("name").as_str().unwrap(), "route.qps");
+        assert!((metrics[0].get("value").as_f64().unwrap() - 1234.5).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -139,6 +139,10 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         "  epoch: publish_every={} publish_interval_ms={}",
         cfg.epoch.publish_every, cfg.epoch.publish_interval_ms
     );
+    println!(
+        "  shards: count={} hash_seed={:#x}",
+        cfg.shards.count, cfg.shards.hash_seed
+    );
     println!("  artifacts: {}", cfg.embed.artifacts_dir);
     match crate::runtime::Manifest::load(Path::new(&cfg.embed.artifacts_dir)) {
         Ok(m) => println!(
@@ -342,12 +346,13 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         None => EagleRouter::new(cfg.eagle.clone(), registry.len(), FlatStore::new(256)),
     };
 
-    let mut state = crate::server::ServerState::with_epoch(
+    let mut state = crate::server::ServerState::with_topology(
         router,
         registry,
         service.handle(),
         metrics,
         cfg.epoch.clone(),
+        cfg.shards.clone(),
     );
     if let Some(out) = args.get("snapshot-out") {
         state = state.with_snapshot_path(std::path::PathBuf::from(out));
@@ -356,8 +361,13 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
     let state = Arc::new(state);
     let server = crate::server::Server::start(state, &addr, workers)?;
     println!(
-        "eagle serving on {} ({} workers, epoch cadence: every {} records / {} ms); Ctrl-C to stop",
-        server.addr, workers, cfg.epoch.publish_every, cfg.epoch.publish_interval_ms
+        "eagle serving on {} ({} workers, {} shard(s), epoch cadence: every {} records / {} ms); \
+         Ctrl-C to stop",
+        server.addr,
+        workers,
+        cfg.shards.count,
+        cfg.epoch.publish_every,
+        cfg.epoch.publish_interval_ms
     );
 
     // Block forever (Ctrl-C kills the process; state can be snapshotted

@@ -126,6 +126,26 @@ impl Default for EpochParams {
     }
 }
 
+/// Sharding topology for scatter-gather snapshot routing
+/// ([`crate::coordinator::sharded`]). The corpus is partitioned across
+/// `count` shards by a deterministic hash of the embedding bits (seeded
+/// by `hash_seed`); each shard gets its own writer and publication ring.
+/// `count = 1` is the single-shard RCU path, scoring-identical at any
+/// count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardParams {
+    /// Number of shards (1..=64).
+    pub count: usize,
+    /// Seed for the embedding-hash partitioner.
+    pub hash_seed: u64,
+}
+
+impl Default for ShardParams {
+    fn default() -> Self {
+        ShardParams { count: 1, hash_seed: 0xEA61E }
+    }
+}
+
 /// Synthetic RouterBench generation parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataParams {
@@ -157,6 +177,7 @@ pub struct Config {
     pub embed: EmbedParams,
     pub server: ServerParams,
     pub epoch: EpochParams,
+    pub shards: ShardParams,
     pub data: DataParams,
 }
 
@@ -256,6 +277,8 @@ impl Config {
             "server.workers" => self.server.workers = usize_of(value)?,
             "epoch.publish_every" => self.epoch.publish_every = usize_of(value)?,
             "epoch.publish_interval_ms" => self.epoch.publish_interval_ms = u64_of(value)?,
+            "shards.count" => self.shards.count = usize_of(value)?,
+            "shards.hash_seed" => self.shards.hash_seed = u64_of(value)?,
             "data.seed" => self.data.seed = u64_of(value)?,
             "data.per_dataset" => self.data.per_dataset = usize_of(value)?,
             "data.train_fraction" => self.data.train_fraction = f64_of(value)?,
@@ -289,6 +312,12 @@ impl Config {
         }
         if self.epoch.publish_every == 0 {
             return Err(ConfigError("epoch.publish_every must be > 0".into()));
+        }
+        if self.shards.count == 0 || self.shards.count > 64 {
+            return Err(ConfigError(format!(
+                "shards.count = {} not in 1..=64",
+                self.shards.count
+            )));
         }
         Ok(())
     }
@@ -357,6 +386,27 @@ workers = 8
         assert_eq!(Config::default().epoch, EpochParams::default());
         let mut bad = Config::default();
         bad.epoch.publish_every = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn shard_knobs_parse_and_validate() {
+        let c = Config::load(
+            None,
+            &[
+                ("shards.count".into(), "8".into()),
+                ("shards.hash_seed".into(), "42".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.shards.count, 8);
+        assert_eq!(c.shards.hash_seed, 42);
+        assert_eq!(Config::default().shards, ShardParams::default());
+        assert_eq!(ShardParams::default().count, 1);
+        let mut bad = Config::default();
+        bad.shards.count = 0;
+        assert!(bad.validate().is_err());
+        bad.shards.count = 65;
         assert!(bad.validate().is_err());
     }
 

@@ -6,6 +6,8 @@
 //! - [`feedback`] — online feedback ingestion (paper workflow step 5).
 //! - [`snapshot`] — RCU snapshot routing: lock-free scoring snapshots
 //!   published at epoch cadence by a single-writer ingest side.
+//! - [`sharded`] — K-shard scatter-gather routing over the RCU core:
+//!   hash-partitioned corpus, one writer per shard, shared global ELO.
 //! - [`state`] — snapshot/restore of router state (persistence).
 //!
 //! The [`Router`] trait is the uniform surface the evaluation harness and
@@ -15,6 +17,7 @@ pub mod feedback;
 pub mod policy;
 pub mod registry;
 pub mod router;
+pub mod sharded;
 pub mod snapshot;
 pub mod state;
 

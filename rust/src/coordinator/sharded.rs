@@ -1,0 +1,1056 @@
+//! Sharded scatter-gather snapshot routing: the multi-writer scale-out of
+//! the RCU core in [`super::snapshot`].
+//!
+//! PR 1 made the scoring state an immutable value (snapshot + single
+//! writer). This module partitions that value across K shards so both
+//! read throughput and feedback ingest scale with cores:
+//!
+//! - the corpus is partitioned by a deterministic **embedding hash**
+//!   ([`shard_of`]): every stored prompt lives in exactly one shard, and
+//!   feedback ingest routes by the same hash, so each shard's
+//!   [`RouterWriter`] applies and republishes **independently** (the
+//!   multi-writer ingest prerequisite — see [`ShardedRouter::into_lanes`]);
+//! - the **global ELO table is shared**, maintained in feedback-stream
+//!   order by a [`GlobalLane`] and published through its own RCU cell —
+//!   sharding the vector store must not change the global ranking;
+//! - reads do lock-free **scatter-gather**: load one snapshot per shard
+//!   plus the shared global table, fan the query across the per-shard
+//!   views, and merge the per-shard top-N candidates into the exact
+//!   global top-N (ties and all) before replaying the local ELO.
+//!
+//! ## Bit-exactness
+//!
+//! A [`ShardedSnapshot`] scores **bit-identically** to a single-shard
+//! router over the same feedback stream, at every K:
+//!
+//! - entries carry their **global arrival id** through per-shard id maps
+//!   ([`FrozenIds`]), so the merged candidate order — descending score,
+//!   ascending global id — is exactly the order a single store's
+//!   [`crate::vectordb::topk::TopK`] produces;
+//! - a shard's local ids are assigned in arrival order, so within one
+//!   shard (score, local id) sorts the same as (score, global id), and
+//!   every member of the global top-N is inside its own shard's top-N —
+//!   the K·N candidate union provably contains the answer;
+//! - the merged neighbor list is scored through the *same*
+//!   [`mixed_scores_from`] code path the single-shard scorer uses, seeded
+//!   from the shared global table.
+//!
+//! `rust/tests/snapshot_routing.rs` property-tests this for
+//! K ∈ {1, 2, 3, 8} over interleaved inserts.
+//!
+//! ## Publication ordering
+//!
+//! A lane publishes its id map *before* its snapshot, and readers load
+//! the snapshot *before* the id map. Id maps are append-only with an
+//! immutable prefix, so a reader always holds an id map at least as long
+//! as its snapshot's view — every visible local id resolves.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{EagleParams, EpochParams, ShardParams};
+use crate::elo::{Comparison, GlobalElo};
+use crate::vectordb::flat::FlatStore;
+use crate::vectordb::view::SegmentStore;
+use crate::vectordb::{Feedback, Hit, ReadIndex, VectorIndex};
+
+use super::router::{mixed_scores_from, EagleRouter, Observation};
+use super::snapshot::{RcuCell, RouterSnapshot, RouterWriter, SnapshotRing};
+
+/// Batches below this size score serially even on a sharded snapshot
+/// (thread fan-out would cost more than it saves).
+const PAR_MIN_BATCH: usize = 2;
+
+/// Corpora below this size score serially even on a sharded snapshot.
+const PAR_MIN_CORPUS: usize = 4096;
+
+/// Minimum total scan work (queries × rows × dims ≈ multiply-adds) before
+/// `score_batch` fans out threads: roughly a millisecond of serial scan,
+/// comfortably above per-batch thread create/join cost. Smaller batches
+/// stay serial even over a sharded corpus — identical results either way.
+const PAR_MIN_WORK: usize = 4_000_000;
+
+/// Deterministic shard assignment from the embedding bits: an FNV-style
+/// fold over the raw `f32` bit patterns with a seed, finished with an
+/// avalanche so the modulo sees every coordinate. Identical bits always
+/// land on the same shard, so re-partitioning a restored corpus
+/// reproduces the original placement.
+pub fn shard_of(embedding: &[f32], hash_seed: u64, count: usize) -> usize {
+    if count <= 1 {
+        return 0;
+    }
+    let mut h = hash_seed ^ 0x9E37_79B9_7F4A_7C15;
+    for &x in embedding {
+        h ^= u64::from(x.to_bits());
+        h = h.wrapping_mul(0x100_0000_01B3);
+        h ^= h >> 29;
+    }
+    h ^= h >> 32;
+    h = h.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    h ^= h >> 32;
+    (h % count as u64) as usize
+}
+
+/// Sort candidates exactly like [`crate::vectordb::topk::TopK::into_sorted`]:
+/// descending score, ties by ascending (global) id.
+fn sort_hits(hits: &mut [Hit]) {
+    hits.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap().then(a.id.cmp(&b.id)));
+}
+
+/// Immutable local→global id map published alongside a shard snapshot.
+///
+/// Blocks hold ascending global ids (appends happen in arrival order and
+/// merges concatenate adjacent blocks), which makes the reverse lookup a
+/// two-level binary search.
+#[derive(Debug, Clone, Default)]
+pub struct FrozenIds {
+    blocks: Vec<Arc<Vec<u32>>>,
+    /// Local offset of each block's first entry (parallel to `blocks`).
+    starts: Vec<usize>,
+    len: usize,
+}
+
+impl FrozenIds {
+    /// The empty map (what a cold-started lane publishes first).
+    pub fn empty() -> Self {
+        FrozenIds::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Global arrival id of a shard-local entry.
+    pub fn global_of(&self, local: u32) -> u32 {
+        let b = self.starts.partition_point(|&s| s <= local as usize) - 1;
+        self.blocks[b][local as usize - self.starts[b]]
+    }
+
+    /// Shard-local id of a global arrival id, if this shard holds it.
+    pub fn local_of(&self, global: u32) -> Option<u32> {
+        // blocks are never empty and ascending across the concatenation
+        let b = self.blocks.partition_point(|blk| blk[0] <= global);
+        if b == 0 {
+            return None;
+        }
+        let blk = &self.blocks[b - 1];
+        blk.binary_search(&global)
+            .ok()
+            .map(|i| (self.starts[b - 1] + i) as u32)
+    }
+}
+
+/// Writer-side append-only id map with O(pending) freeze. Sealed blocks
+/// merge binary-counter style (like
+/// [`crate::vectordb::view::SegmentStore`]) so a map of n entries holds
+/// O(log n) blocks and each id is copied O(log n) times total.
+#[derive(Debug, Default)]
+pub struct IdBlocks {
+    blocks: Vec<Arc<Vec<u32>>>,
+    starts: Vec<usize>,
+    sealed_len: usize,
+    pending: Vec<u32>,
+}
+
+impl IdBlocks {
+    pub fn new() -> Self {
+        IdBlocks::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sealed_len + self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append the next global id (must be strictly increasing).
+    pub fn push(&mut self, global_id: u32) {
+        self.pending.push(global_id);
+    }
+
+    /// Seal pending ids and hand out an immutable view of everything.
+    pub fn freeze(&mut self) -> FrozenIds {
+        if !self.pending.is_empty() {
+            let blk = std::mem::take(&mut self.pending);
+            self.starts.push(self.sealed_len);
+            self.sealed_len += blk.len();
+            self.blocks.push(Arc::new(blk));
+            while self.blocks.len() >= 2
+                && self.blocks[self.blocks.len() - 1].len()
+                    >= self.blocks[self.blocks.len() - 2].len()
+            {
+                let newer = self.blocks.pop().unwrap();
+                let older = self.blocks.pop().unwrap();
+                self.starts.pop();
+                let mut merged = Vec::with_capacity(older.len() + newer.len());
+                merged.extend_from_slice(&older);
+                merged.extend_from_slice(&newer);
+                self.blocks.push(Arc::new(merged));
+            }
+        }
+        FrozenIds {
+            blocks: self.blocks.clone(),
+            starts: self.starts.clone(),
+            len: self.sealed_len,
+        }
+    }
+}
+
+/// The shared global-ELO table frozen at one publish: the "background
+/// knowledge" every shard's local replay seeds from.
+#[derive(Debug, Clone)]
+pub struct SharedGlobal {
+    /// Trajectory-averaged ratings over the *full* feedback stream.
+    pub ratings: Vec<f64>,
+    /// Feedback records folded in up to this publish.
+    pub history_len: usize,
+}
+
+/// The stream-order writer for the shared global table. Exactly one
+/// thread applies; publication goes through an [`RcuCell`] so readers
+/// never block on it.
+pub struct GlobalLane {
+    elo: GlobalElo,
+    cell: Arc<RcuCell<SharedGlobal>>,
+    cadence: EpochParams,
+    since_publish: usize,
+    last_publish: Instant,
+}
+
+impl GlobalLane {
+    fn from_elo(elo: GlobalElo, cadence: EpochParams) -> Self {
+        let initial = SharedGlobal { ratings: elo.ratings(), history_len: elo.history_len() };
+        GlobalLane {
+            elo,
+            cell: Arc::new(RcuCell::new(Arc::new(initial))),
+            cadence,
+            since_publish: 0,
+            last_publish: Instant::now(),
+        }
+    }
+
+    /// Fold one observation's comparisons into the global table, in
+    /// feedback-stream order.
+    pub fn apply(&mut self, comparisons: &[Comparison]) {
+        self.elo.apply_new(comparisons);
+        self.since_publish += 1;
+    }
+
+    /// True when the epoch cadence says pending records should publish.
+    pub fn publish_due(&self) -> bool {
+        self.since_publish != 0
+            && (self.since_publish >= self.cadence.publish_every.max(1)
+                || self.last_publish.elapsed()
+                    >= Duration::from_millis(self.cadence.publish_interval_ms))
+    }
+
+    /// Publish if the cadence has tripped; returns whether it did.
+    pub fn maybe_publish(&mut self) -> bool {
+        if self.publish_due() {
+            self.publish();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Unconditional publish of the current table.
+    pub fn publish(&mut self) {
+        self.cell.publish(Arc::new(SharedGlobal {
+            ratings: self.elo.ratings(),
+            history_len: self.elo.history_len(),
+        }));
+        self.since_publish = 0;
+        self.last_publish = Instant::now();
+    }
+
+    /// Records applied to the table but not yet republished.
+    pub fn unpublished(&self) -> usize {
+        self.since_publish
+    }
+
+    /// Live (writer-side) comparisons applied, published or not.
+    pub fn history_len(&self) -> usize {
+        self.elo.history_len()
+    }
+
+    /// The live table (diagnostics / persistence; readers use the cell).
+    pub fn elo(&self) -> &GlobalElo {
+        &self.elo
+    }
+}
+
+/// One shard's independent writer: a [`RouterWriter`] plus the id map
+/// that names its entries globally. Lanes are `Send`, so each can live on
+/// its own ingest thread (multi-writer ingest).
+pub struct ShardLane {
+    writer: RouterWriter,
+    ids: IdBlocks,
+    ids_cell: Arc<RcuCell<FrozenIds>>,
+}
+
+impl ShardLane {
+    fn with_ids(writer: RouterWriter, mut ids: IdBlocks) -> Self {
+        let initial = ids.freeze();
+        debug_assert_eq!(initial.len(), writer.router().store().len(), "ids/store skew");
+        ShardLane { writer, ids, ids_cell: Arc::new(RcuCell::new(Arc::new(initial))) }
+    }
+
+    /// Apply one observation routed to this shard. `global_id` is the
+    /// record's arrival index in the full stream; ids must arrive in
+    /// increasing order per lane.
+    pub fn apply(&mut self, global_id: u32, obs: Observation) {
+        self.ids.push(global_id);
+        self.writer.apply(obs);
+    }
+
+    /// Publish if this lane's epoch cadence has tripped.
+    pub fn maybe_publish(&mut self) -> Option<u64> {
+        self.writer.publish_due().then(|| self.publish())
+    }
+
+    /// Unconditional publish: the id map first, then the snapshot (see
+    /// module docs for why this order matters).
+    pub fn publish(&mut self) -> u64 {
+        self.ids_cell.publish(Arc::new(self.ids.freeze()));
+        self.writer.publish()
+    }
+
+    /// Records applied to this lane but not yet visible to readers.
+    pub fn unpublished(&self) -> usize {
+        self.writer.unpublished()
+    }
+
+    /// The wrapped single-shard writer (diagnostics).
+    pub fn writer(&self) -> &RouterWriter {
+        &self.writer
+    }
+}
+
+/// The sharded ingest side: a shared global lane plus one [`ShardLane`]
+/// per shard. Single-threaded callers drive [`ShardedRouter::observe`];
+/// multi-writer deployments split it with [`ShardedRouter::into_lanes`].
+pub struct ShardedRouter {
+    params: EagleParams,
+    n_models: usize,
+    dim: usize,
+    shard_params: ShardParams,
+    global: GlobalLane,
+    lanes: Vec<ShardLane>,
+    next_id: u32,
+}
+
+impl ShardedRouter {
+    /// Cold-start router: K empty shards, uniform global table.
+    pub fn new(
+        params: EagleParams,
+        n_models: usize,
+        dim: usize,
+        cadence: EpochParams,
+        shards: ShardParams,
+    ) -> Self {
+        assert!(shards.count >= 1, "shard count must be >= 1");
+        let lanes = (0..shards.count)
+            .map(|_| {
+                ShardLane::with_ids(
+                    RouterWriter::new(params.clone(), n_models, dim, cadence.clone()),
+                    IdBlocks::new(),
+                )
+            })
+            .collect();
+        let global = GlobalLane::from_elo(GlobalElo::new(n_models, params.k_factor), cadence);
+        ShardedRouter {
+            params,
+            n_models,
+            dim,
+            shard_params: shards,
+            global,
+            lanes,
+            next_id: 0,
+        }
+    }
+
+    /// Partition an existing flat-store router (disk restore / pre-fit
+    /// history) across K shards, keeping its global ELO state — including
+    /// the averaging trajectory — intact.
+    pub fn from_router(
+        router: EagleRouter<FlatStore>,
+        cadence: EpochParams,
+        shards: ShardParams,
+    ) -> Self {
+        assert!(shards.count >= 1, "shard count must be >= 1");
+        let params = router.params().clone();
+        let n_models = router.n_models();
+        let dim = router.store().dim();
+        let n = router.store().len();
+        let mut stores: Vec<SegmentStore> =
+            (0..shards.count).map(|_| SegmentStore::new(dim)).collect();
+        let mut id_maps: Vec<IdBlocks> = (0..shards.count).map(|_| IdBlocks::new()).collect();
+        for id in 0..n as u32 {
+            let v = router.store().vector(id);
+            let s = shard_of(v, shards.hash_seed, shards.count);
+            stores[s].add(v, router.store().feedback(id).clone());
+            id_maps[s].push(id);
+        }
+        let global = GlobalLane::from_elo(router.global().clone(), cadence.clone());
+        let lanes = stores
+            .into_iter()
+            .zip(id_maps)
+            .map(|(store, ids)| {
+                ShardLane::with_ids(
+                    RouterWriter::from_segment_router(
+                        EagleRouter::new(params.clone(), n_models, store),
+                        cadence.clone(),
+                    ),
+                    ids,
+                )
+            })
+            .collect();
+        ShardedRouter {
+            params,
+            n_models,
+            dim,
+            shard_params: shards,
+            global,
+            lanes,
+            next_id: n as u32,
+        }
+    }
+
+    /// The lock-free reader handle (cheap to clone, `Send + Sync`).
+    pub fn handle(&self) -> ShardedHandle {
+        ShardedHandle {
+            params: self.params.clone(),
+            dim: self.dim,
+            rings: self.lanes.iter().map(|l| l.writer.ring()).collect(),
+            ids: self.lanes.iter().map(|l| l.ids_cell.clone()).collect(),
+            global: self.global.cell.clone(),
+        }
+    }
+
+    /// Ingest one observation: fold into the shared global table (stream
+    /// order), route to its shard by embedding hash, and let both lanes
+    /// publish on their own cadence. Returns the shard's new epoch if its
+    /// snapshot republished.
+    pub fn observe(&mut self, obs: Observation) -> Option<u64> {
+        let shard = shard_of(&obs.embedding, self.shard_params.hash_seed, self.lanes.len());
+        let gid = self.next_id;
+        self.next_id += 1;
+        self.global.apply(&obs.comparisons);
+        self.global.maybe_publish();
+        let lane = &mut self.lanes[shard];
+        lane.apply(gid, obs);
+        lane.maybe_publish()
+    }
+
+    /// Publish every lane and the global table unconditionally; returns
+    /// the highest shard epoch afterwards.
+    pub fn publish_all(&mut self) -> u64 {
+        self.global.publish();
+        self.lanes.iter_mut().map(|l| l.publish()).max().unwrap_or(0)
+    }
+
+    /// Publish whichever lanes (and the global table) have tripped their
+    /// cadence — the applier's staleness beat.
+    pub fn maybe_publish_all(&mut self) {
+        self.global.maybe_publish();
+        for lane in &mut self.lanes {
+            lane.maybe_publish();
+        }
+    }
+
+    /// Records applied but not yet visible to readers: shard lanes plus
+    /// the shared global table (whose cadence can trail the lanes', so a
+    /// shutdown flush must not be skipped on lane counts alone).
+    pub fn unpublished(&self) -> usize {
+        self.lanes.iter().map(|l| l.unpublished()).sum::<usize>() + self.global.unpublished()
+    }
+
+    /// Comparisons folded into the shared global table (ingested,
+    /// published or not).
+    pub fn history_len(&self) -> usize {
+        self.global.history_len()
+    }
+
+    /// Stored prompts across all shards (writer side).
+    pub fn store_len(&self) -> usize {
+        self.lanes.iter().map(|l| l.writer.router().store().len()).sum()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn params(&self) -> &EagleParams {
+        &self.params
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.n_models
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Which shard an embedding routes to.
+    pub fn shard_for(&self, embedding: &[f32]) -> usize {
+        shard_of(embedding, self.shard_params.hash_seed, self.lanes.len())
+    }
+
+    /// Decompose into independent writer lanes for multi-threaded ingest:
+    /// one thread owns the [`GlobalLane`] (the full stream in order), one
+    /// thread owns each [`ShardLane`] (its hash partition, with
+    /// pre-assigned global ids). Reader handles taken before the split
+    /// keep working.
+    pub fn into_lanes(self) -> (GlobalLane, Vec<ShardLane>) {
+        (self.global, self.lanes)
+    }
+
+    /// Persist the full sharded state as one flat snapshot (global-id
+    /// order), readable by [`super::state::load_from`]. Publishes
+    /// everything first so the serialized view is complete.
+    pub fn save_to(&mut self, path: &Path) -> Result<()> {
+        self.publish_all();
+        let snap = self.handle().load();
+        let text = super::state::snapshot_parts(
+            &self.params,
+            self.n_models,
+            snap.global_ratings(),
+            snap.history_len(),
+            &snap.scatter(),
+        );
+        super::state::write_atomic(path, &text)
+    }
+}
+
+/// Cheap-to-clone reader side: one ring per shard, one id-map cell per
+/// shard, one shared-global cell.
+#[derive(Clone)]
+pub struct ShardedHandle {
+    params: EagleParams,
+    dim: usize,
+    rings: Vec<Arc<SnapshotRing>>,
+    ids: Vec<Arc<RcuCell<FrozenIds>>>,
+    global: Arc<RcuCell<SharedGlobal>>,
+}
+
+impl ShardedHandle {
+    /// Acquire a consistent-enough scoring state: per shard, the snapshot
+    /// is loaded *before* its id map (the writer publishes in the
+    /// opposite order), so every visible local id resolves globally.
+    /// Cross-shard staleness is bounded by the epoch cadence.
+    pub fn load(&self) -> ShardedSnapshot {
+        let shards: Vec<Arc<RouterSnapshot>> = self.rings.iter().map(|r| r.load()).collect();
+        let ids: Vec<Arc<FrozenIds>> = self.ids.iter().map(|c| c.load()).collect();
+        let global = self.global.load();
+        ShardedSnapshot { params: self.params.clone(), dim: self.dim, global, shards, ids }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Current epoch of each shard ring (diagnostics).
+    pub fn shard_epochs(&self) -> Vec<u64> {
+        self.rings.iter().map(|r| r.current_epoch()).collect()
+    }
+}
+
+/// An immutable K-shard scoring state: per-shard snapshots + id maps +
+/// the shared global table. Scoring takes no lock and sees no concurrent
+/// mutation, ever — same contract as [`RouterSnapshot`], same math.
+pub struct ShardedSnapshot {
+    params: EagleParams,
+    dim: usize,
+    global: Arc<SharedGlobal>,
+    shards: Vec<Arc<RouterSnapshot>>,
+    ids: Vec<Arc<FrozenIds>>,
+}
+
+impl ShardedSnapshot {
+    /// Shared trajectory-averaged global ratings.
+    pub fn global_ratings(&self) -> &[f64] {
+        &self.global.ratings
+    }
+
+    /// Feedback records folded into the shared global table.
+    pub fn history_len(&self) -> usize {
+        self.global.history_len
+    }
+
+    /// Stored prompts visible across all shard views.
+    pub fn store_len(&self) -> usize {
+        self.shards.iter().map(|s| s.store_len()).sum()
+    }
+
+    /// Highest shard epoch in this snapshot (display/diagnostics; shards
+    /// publish independently, see [`ShardedSnapshot::shard_epochs`]).
+    pub fn epoch(&self) -> u64 {
+        self.shards.iter().map(|s| s.epoch()).max().unwrap_or(0)
+    }
+
+    pub fn shard_epochs(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.epoch()).collect()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn params(&self) -> &EagleParams {
+        &self.params
+    }
+
+    /// The merged read-only index over every shard view (global ids).
+    pub fn scatter(&self) -> ScatterView<'_> {
+        ScatterView { dim: self.dim, shards: &self.shards, ids: &self.ids }
+    }
+
+    /// Combined Eagle scores for one embedded query — bit-identical to a
+    /// single-shard [`RouterSnapshot`] over the same feedback stream.
+    pub fn scores(&self, query_emb: &[f32]) -> Vec<f64> {
+        if self.shards.len() == 1 {
+            // K=1 fast path: local ids ARE global ids, so the id-mapping
+            // merge is the identity — score the lone view directly (the
+            // default single-shard config pays nothing for the machinery)
+            return mixed_scores_from(
+                &self.params,
+                &self.global.ratings,
+                self.shards[0].view(),
+                query_emb,
+            );
+        }
+        mixed_scores_from(&self.params, &self.global.ratings, &self.scatter(), query_emb)
+    }
+
+    /// Score a batch against this one frozen state. Large batches over
+    /// large sharded corpora fan the scan across one thread per shard
+    /// ([`ShardedSnapshot::score_batch_scatter`]); results are
+    /// bit-identical either way.
+    pub fn score_batch(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        let rows = self.store_len();
+        let work = query_embs.len().saturating_mul(rows).saturating_mul(self.dim);
+        let parallel = self.shards.len() > 1
+            && self.params.p < 1.0
+            && query_embs.len() >= PAR_MIN_BATCH
+            && rows >= PAR_MIN_CORPUS
+            && work >= PAR_MIN_WORK;
+        if parallel {
+            self.score_batch_scatter(query_embs)
+        } else {
+            query_embs.iter().map(|q| self.scores(q)).collect()
+        }
+    }
+
+    /// The explicit parallel scatter-gather path: every shard scans the
+    /// whole query slab on its own thread (scatter), then each query's
+    /// K sorted candidate lists merge into the exact global top-N and
+    /// finish through the same scoring code as the serial path (gather).
+    pub fn score_batch_scatter(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        if self.shards.len() <= 1 || self.params.p >= 1.0 {
+            return query_embs.iter().map(|q| self.scores(q)).collect();
+        }
+        let n = self.params.n_neighbors;
+        let per_shard = std::thread::scope(|scope| {
+            let tasks: Vec<_> = self
+                .shards
+                .iter()
+                .zip(&self.ids)
+                .map(|(snap, ids)| {
+                    scope.spawn(move || {
+                        query_embs
+                            .iter()
+                            .map(|q| {
+                                snap.view()
+                                    .search(q, n)
+                                    .into_iter()
+                                    .map(|h| Hit { id: ids.global_of(h.id), score: h.score })
+                                    .collect::<Vec<Hit>>()
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            tasks
+                .into_iter()
+                .map(|t| t.join().expect("scatter thread panicked"))
+                .collect::<Vec<_>>()
+        });
+        query_embs
+            .iter()
+            .enumerate()
+            .map(|(qi, q)| {
+                let mut merged: Vec<Hit> =
+                    per_shard.iter().flat_map(|hits| hits[qi].iter().copied()).collect();
+                sort_hits(&mut merged);
+                merged.truncate(n);
+                let view = PremergedView { hits: merged, inner: self.scatter() };
+                mixed_scores_from(&self.params, &self.global.ratings, &view, q)
+            })
+            .collect()
+    }
+}
+
+/// Read-only merged index over K shard views, addressed by global ids.
+/// This is what makes sharded scoring reuse the single-shard code path
+/// verbatim: [`mixed_scores_from`] neither knows nor cares that search
+/// and payload lookup scatter under the hood.
+pub struct ScatterView<'a> {
+    dim: usize,
+    shards: &'a [Arc<RouterSnapshot>],
+    ids: &'a [Arc<FrozenIds>],
+}
+
+impl ScatterView<'_> {
+    fn locate(&self, global: u32) -> (usize, u32) {
+        for (s, ids) in self.ids.iter().enumerate() {
+            if let Some(local) = ids.local_of(global) {
+                if (local as usize) < self.shards[s].store_len() {
+                    return (s, local);
+                }
+            }
+        }
+        panic!("global id {global} not visible in any shard view");
+    }
+}
+
+impl ReadIndex for ScatterView<'_> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.store_len()).sum()
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        let mut merged = Vec::new();
+        for (snap, ids) in self.shards.iter().zip(self.ids) {
+            for h in snap.view().search(query, k) {
+                merged.push(Hit { id: ids.global_of(h.id), score: h.score });
+            }
+        }
+        sort_hits(&mut merged);
+        merged.truncate(k);
+        merged
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        let (s, local) = self.locate(id);
+        self.shards[s].view().feedback(local)
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        let (s, local) = self.locate(id);
+        self.shards[s].view().vector(local)
+    }
+}
+
+/// A [`ScatterView`] whose top-N for one known query was already merged
+/// by the parallel scatter; `search` hands it back so the shared scoring
+/// code replays exactly the candidates the gather selected.
+struct PremergedView<'a> {
+    hits: Vec<Hit>,
+    inner: ScatterView<'a>,
+}
+
+impl ReadIndex for PremergedView<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn search(&self, _query: &[f32], _k: usize) -> Vec<Hit> {
+        self.hits.clone()
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        self.inner.feedback(id)
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        self.inner.vector(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elo::{Comparison, Outcome};
+    use crate::util::{l2_normalize, Rng};
+
+    const DIM: usize = 16;
+    const N_MODELS: usize = 5;
+
+    fn unit(rng: &mut Rng) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    fn rand_obs(rng: &mut Rng) -> Observation {
+        let a = rng.below(N_MODELS);
+        let mut b = rng.below(N_MODELS - 1);
+        if b >= a {
+            b += 1;
+        }
+        let outcome = match rng.below(3) {
+            0 => Outcome::WinA,
+            1 => Outcome::WinB,
+            _ => Outcome::Draw,
+        };
+        Observation::single(unit(rng), Comparison { a, b, outcome })
+    }
+
+    fn cadence(every: usize) -> EpochParams {
+        EpochParams { publish_every: every, publish_interval_ms: 10_000 }
+    }
+
+    fn shards(count: usize) -> ShardParams {
+        ShardParams { count, hash_seed: 0xEA61E }
+    }
+
+    fn reference(stream: &[Observation]) -> EagleRouter<FlatStore> {
+        let mut r = EagleRouter::new(EagleParams::default(), N_MODELS, FlatStore::new(DIM));
+        for obs in stream {
+            r.observe(obs.clone());
+        }
+        r
+    }
+
+    #[test]
+    fn shard_hash_is_deterministic_in_range_and_spread() {
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0usize; 4];
+        for _ in 0..2000 {
+            let v = unit(&mut rng);
+            let s = shard_of(&v, 7, 4);
+            assert_eq!(s, shard_of(&v, 7, 4), "hash not deterministic");
+            assert!(s < 4);
+            counts[s] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(c > 200, "shard {s} got only {c}/2000 vectors");
+        }
+        // seed changes the partition
+        let v = unit(&mut rng);
+        assert_eq!(shard_of(&v, 3, 1), 0);
+        let moved = (0..100)
+            .map(|_| unit(&mut rng))
+            .filter(|v| shard_of(v, 1, 8) != shard_of(v, 2, 8))
+            .count();
+        assert!(moved > 10, "hash seed has no effect ({moved}/100 moved)");
+    }
+
+    #[test]
+    fn id_blocks_roundtrip_and_merge() {
+        let mut rng = Rng::new(2);
+        let mut ids = IdBlocks::new();
+        let mut expect = Vec::new();
+        let mut next = 0u32;
+        let mut last = FrozenIds::empty();
+        for round in 0..200 {
+            for _ in 0..(1 + rng.below(5)) {
+                // strictly increasing, gappy global ids (as one shard sees)
+                next += 1 + rng.below(3) as u32;
+                ids.push(next);
+                expect.push(next);
+            }
+            if round % 3 == 0 {
+                last = ids.freeze();
+            }
+        }
+        let frozen = ids.freeze();
+        assert_eq!(frozen.len(), expect.len());
+        for (local, &gid) in expect.iter().enumerate() {
+            assert_eq!(frozen.global_of(local as u32), gid);
+            assert_eq!(frozen.local_of(gid), Some(local as u32));
+        }
+        // ids never inserted resolve to None
+        assert_eq!(frozen.local_of(0), None);
+        assert_eq!(frozen.local_of(next + 100), None);
+        // binary-counter merging keeps the block count logarithmic
+        assert!(
+            frozen.block_count() <= 16,
+            "{} blocks for {} ids",
+            frozen.block_count(),
+            frozen.len()
+        );
+        // earlier freezes stay valid prefixes
+        for local in 0..last.len() as u32 {
+            assert_eq!(last.global_of(local), frozen.global_of(local));
+        }
+    }
+
+    #[test]
+    fn empty_sharded_router_scores_uniform() {
+        let router = ShardedRouter::new(EagleParams::default(), 4, DIM, cadence(8), shards(3));
+        let snap = router.handle().load();
+        assert_eq!(snap.store_len(), 0);
+        assert_eq!(snap.history_len(), 0);
+        assert_eq!(snap.shard_count(), 3);
+        let q = vec![1.0; DIM];
+        assert_eq!(snap.scores(&q), vec![crate::elo::INITIAL_RATING; 4]);
+    }
+
+    #[test]
+    fn sharded_scores_match_reference_at_k4() {
+        let mut rng = Rng::new(3);
+        let mut sharded =
+            ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(7), shards(4));
+        let handle = sharded.handle();
+        let mut stream = Vec::new();
+        for step in 0..400 {
+            let obs = rand_obs(&mut rng);
+            stream.push(obs.clone());
+            sharded.observe(obs);
+            if (step + 1) % 83 == 0 {
+                sharded.publish_all();
+                let snap = handle.load();
+                let reference = reference(&stream);
+                assert_eq!(snap.history_len(), reference.feedback_len());
+                assert_eq!(snap.store_len(), stream.len());
+                for _ in 0..3 {
+                    let q = unit(&mut rng);
+                    assert_eq!(
+                        snap.scores(&q),
+                        reference.combined_scores(&q),
+                        "divergence at step {step}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_scatter_is_bit_identical_to_serial() {
+        // at DIM=16 the auto path stays serial (below the work gate), so
+        // the threaded path is exercised explicitly via
+        // score_batch_scatter; both must agree with per-query scores
+        let mut rng = Rng::new(4);
+        let mut sharded =
+            ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(512), shards(3));
+        let mut stream = Vec::new();
+        for _ in 0..(PAR_MIN_CORPUS + 500) {
+            let obs = rand_obs(&mut rng);
+            stream.push(obs.clone());
+            sharded.observe(obs);
+        }
+        sharded.publish_all();
+        let snap = sharded.handle().load();
+        assert!(snap.store_len() >= PAR_MIN_CORPUS);
+        let queries: Vec<Vec<f32>> = (0..8).map(|_| unit(&mut rng)).collect();
+        let batch = snap.score_batch(&queries);
+        let scatter = snap.score_batch_scatter(&queries);
+        let reference = reference(&stream);
+        for (i, q) in queries.iter().enumerate() {
+            let serial = snap.scores(q);
+            assert_eq!(batch[i], serial, "auto batch path diverged at query {i}");
+            assert_eq!(scatter[i], serial, "scatter path diverged at query {i}");
+            assert_eq!(serial, reference.combined_scores(q), "reference diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn from_router_preserves_state_and_scores() {
+        let mut rng = Rng::new(5);
+        let mut flat = EagleRouter::new(EagleParams::default(), N_MODELS, FlatStore::new(DIM));
+        for _ in 0..250 {
+            flat.observe(rand_obs(&mut rng));
+        }
+        let probes: Vec<Vec<f32>> = (0..4).map(|_| unit(&mut rng)).collect();
+        let expected: Vec<Vec<f64>> =
+            probes.iter().map(|q| flat.combined_scores(q)).collect();
+        let feedback_len = flat.feedback_len();
+        let mut sharded = ShardedRouter::from_router(flat, cadence(8), shards(4));
+        assert_eq!(sharded.history_len(), feedback_len);
+        assert_eq!(sharded.store_len(), 250);
+        let snap = sharded.handle().load();
+        for (q, want) in probes.iter().zip(&expected) {
+            assert_eq!(&snap.scores(q), want);
+        }
+        // and it keeps ingesting consistently after the takeover
+        let mut stream_tail = Vec::new();
+        for _ in 0..60 {
+            let obs = rand_obs(&mut rng);
+            stream_tail.push(obs.clone());
+            sharded.observe(obs);
+        }
+        sharded.publish_all();
+        assert_eq!(sharded.handle().load().store_len(), 310);
+    }
+
+    #[test]
+    fn save_restore_roundtrips_through_flat_snapshot() {
+        let mut rng = Rng::new(6);
+        let mut sharded =
+            ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(9), shards(3));
+        let mut stream = Vec::new();
+        for _ in 0..150 {
+            let obs = rand_obs(&mut rng);
+            stream.push(obs.clone());
+            sharded.observe(obs);
+        }
+        let dir = std::env::temp_dir()
+            .join(format!("eagle_sharded_state_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sharded.json");
+        sharded.save_to(&path).unwrap();
+        let restored = super::super::state::load_from(&path).unwrap();
+        assert_eq!(restored.feedback_len(), 150);
+        assert_eq!(restored.store().len(), 150);
+        let snap = sharded.handle().load();
+        for _ in 0..4 {
+            let q = unit(&mut rng);
+            assert_eq!(restored.combined_scores(&q), snap.scores(&q));
+        }
+        // and re-sharding the restored router reproduces the same scores
+        let reloaded = ShardedRouter::from_router(restored, cadence(9), shards(3));
+        let snap2 = reloaded.handle().load();
+        let q = unit(&mut rng);
+        assert_eq!(snap.scores(&q), snap2.scores(&q));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lanes_decompose_and_keep_handles_working() {
+        let mut rng = Rng::new(7);
+        let sharded =
+            ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(1), shards(2));
+        let handle = sharded.handle();
+        let stream: Vec<Observation> = (0..40).map(|_| rand_obs(&mut rng)).collect();
+        let (mut global, mut lanes) = sharded.into_lanes();
+        for (gid, obs) in stream.iter().enumerate() {
+            global.apply(&obs.comparisons);
+            let s = shard_of(&obs.embedding, 0xEA61E, 2);
+            lanes[s].apply(gid as u32, obs.clone());
+            lanes[s].maybe_publish();
+        }
+        global.publish();
+        for lane in &mut lanes {
+            lane.publish();
+        }
+        let snap = handle.load();
+        assert_eq!(snap.store_len(), 40);
+        let reference = reference(&stream);
+        let q = unit(&mut rng);
+        assert_eq!(snap.scores(&q), reference.combined_scores(&q));
+    }
+}

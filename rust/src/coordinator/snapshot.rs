@@ -38,11 +38,59 @@ use crate::vectordb::view::{FrozenView, SegmentStore};
 use crate::vectordb::{Feedback, Hit, ReadIndex};
 
 use super::router::{mixed_scores_from, EagleRouter, Observation};
+use super::Router;
 
 /// Number of publication slots. Also the number of historical snapshots
 /// kept alive (snapshots share segment storage, so this costs O(RING ·
 /// (n_models + log n)) small allocations, not O(RING · corpus)).
 pub const RING_SLOTS: usize = 64;
+
+/// A generic single-writer RCU publication cell: a fixed ring of
+/// `RwLock<Arc<T>>` slots plus an atomic cursor. Readers lock the
+/// *current* slot, the writer only ever writes the *next* slot, so a
+/// `load` never contends with a `publish` unless a reader stalls for a
+/// full ring revolution between loading the cursor and locking the slot.
+///
+/// This is the publication mechanism behind [`SnapshotRing`], factored
+/// out so the sharded router ([`super::sharded`]) can publish other
+/// immutable values (shared global-ELO tables, id maps) the same way.
+#[derive(Debug)]
+pub struct RcuCell<T> {
+    slots: Vec<RwLock<Arc<T>>>,
+    /// Monotone publish counter; `counter % slots.len()` is the live slot.
+    cursor: AtomicUsize,
+}
+
+impl<T> RcuCell<T> {
+    /// Cell with the default [`RING_SLOTS`] depth.
+    pub fn new(initial: Arc<T>) -> Self {
+        Self::with_slots(initial, RING_SLOTS)
+    }
+
+    /// Cell with an explicit slot count (>= 2).
+    pub fn with_slots(initial: Arc<T>, slots: usize) -> Self {
+        assert!(slots >= 2, "an RCU cell needs at least 2 slots");
+        RcuCell {
+            slots: (0..slots).map(|_| RwLock::new(initial.clone())).collect(),
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// The current value. Wait-free against the writer in practice (one
+    /// uncontended `RwLock` read of a slot the writer is not touching).
+    pub fn load(&self) -> Arc<T> {
+        let c = self.cursor.load(Ordering::Acquire);
+        self.slots[c % self.slots.len()].read().unwrap().clone()
+    }
+
+    /// Single-writer publish: install into the *next* slot, then advance
+    /// the cursor. Callers must ensure only one thread publishes.
+    pub fn publish(&self, value: Arc<T>) {
+        let next = self.cursor.load(Ordering::Relaxed) + 1;
+        *self.slots[next % self.slots.len()].write().unwrap() = value;
+        self.cursor.store(next, Ordering::Release);
+    }
+}
 
 /// The frozen index inside a snapshot: exact segmented view for the
 /// serving default, IVF core + exact tail for large corpora.
@@ -162,25 +210,19 @@ impl RouterSnapshot {
 /// argument). Readers call [`SnapshotRing::load`]; only the single
 /// [`RouterWriter`] calls `publish`.
 pub struct SnapshotRing {
-    slots: Vec<RwLock<Arc<RouterSnapshot>>>,
-    /// Monotone publish counter; `counter % RING_SLOTS` is the live slot.
-    cursor: AtomicUsize,
+    cell: RcuCell<RouterSnapshot>,
 }
 
 impl SnapshotRing {
     fn new(initial: Arc<RouterSnapshot>) -> Self {
-        SnapshotRing {
-            slots: (0..RING_SLOTS).map(|_| RwLock::new(initial.clone())).collect(),
-            cursor: AtomicUsize::new(0),
-        }
+        SnapshotRing { cell: RcuCell::new(initial) }
     }
 
     /// The current snapshot. Wait-free against feedback application and
     /// effectively uncontended against publication (one uncontended
     /// `RwLock` read of a slot the writer is not touching).
     pub fn load(&self) -> Arc<RouterSnapshot> {
-        let c = self.cursor.load(Ordering::Acquire);
-        self.slots[c % RING_SLOTS].read().unwrap().clone()
+        self.cell.load()
     }
 
     /// Epoch of the current snapshot (diagnostics).
@@ -188,12 +230,23 @@ impl SnapshotRing {
         self.load().epoch()
     }
 
-    /// Single-writer publish: install into the *next* slot, then advance
-    /// the cursor.
+    /// Single-writer publish (the [`RouterWriter`] owning this ring).
     fn publish(&self, snap: Arc<RouterSnapshot>) {
-        let next = self.cursor.load(Ordering::Relaxed) + 1;
-        *self.slots[next % RING_SLOTS].write().unwrap() = snap;
-        self.cursor.store(next, Ordering::Release);
+        self.cell.publish(snap);
+    }
+}
+
+/// A [`SnapshotRing`] is itself a [`Router`]: every call scores against
+/// the currently published snapshot. This is the serving read path as a
+/// trait object — the evaluation harness can drive it like any other
+/// router, so quality numbers come from exactly what the server serves.
+impl Router for SnapshotRing {
+    fn name(&self) -> String {
+        "eagle-snapshot".to_string()
+    }
+
+    fn scores(&self, query_emb: &[f32]) -> Vec<f64> {
+        self.load().scores(query_emb)
     }
 }
 
@@ -224,6 +277,12 @@ impl RouterWriter {
             router.map_store(|flat| SegmentStore::from_flat(&flat)),
             cadence,
         )
+    }
+
+    /// Take over a segment-store router directly (sharded lanes restore a
+    /// pre-partitioned corpus through this).
+    pub fn from_segment_router(router: EagleRouter<SegmentStore>, cadence: EpochParams) -> Self {
+        Self::from_router_generic(router, cadence)
     }
 
     fn from_router_generic(mut router: EagleRouter<SegmentStore>, cadence: EpochParams) -> Self {
@@ -273,21 +332,32 @@ impl RouterWriter {
     /// Ingest one observation and republish if the epoch cadence says so.
     /// Returns the new epoch if a publish happened.
     pub fn observe(&mut self, obs: Observation) -> Option<u64> {
+        self.apply(obs);
+        self.maybe_publish()
+    }
+
+    /// Apply one observation *without* checking the publish cadence.
+    /// Callers that coordinate a multi-part publication (the sharded
+    /// lanes publish an id map before the snapshot) drive
+    /// [`RouterWriter::publish_due`] + [`RouterWriter::publish`]
+    /// themselves.
+    pub fn apply(&mut self, obs: Observation) {
         self.router.observe(obs);
         self.since_publish += 1;
-        self.maybe_publish()
+    }
+
+    /// True when the epoch cadence says pending records should publish.
+    pub fn publish_due(&self) -> bool {
+        self.since_publish != 0
+            && (self.since_publish >= self.cadence.publish_every.max(1)
+                || self.last_publish.elapsed()
+                    >= Duration::from_millis(self.cadence.publish_interval_ms))
     }
 
     /// Publish if either cadence threshold (K records / T ms with pending
     /// records) has tripped.
     pub fn maybe_publish(&mut self) -> Option<u64> {
-        if self.since_publish == 0 {
-            return None;
-        }
-        let due = self.since_publish >= self.cadence.publish_every.max(1)
-            || self.last_publish.elapsed()
-                >= Duration::from_millis(self.cadence.publish_interval_ms);
-        due.then(|| self.publish())
+        self.publish_due().then(|| self.publish())
     }
 
     /// Unconditional publish of the current writer state.
@@ -481,6 +551,51 @@ mod tests {
         // exhaustive probe (nprobe == n_cells) => identical scores
         let q = unit(&mut rng);
         assert_eq!(snap.scores(&q), flat_router.combined_scores(&q));
+    }
+
+    #[test]
+    fn rcu_cell_publish_load_roundtrip() {
+        let cell = RcuCell::with_slots(Arc::new(0u64), 4);
+        assert_eq!(*cell.load(), 0);
+        for v in 1..=10u64 {
+            cell.publish(Arc::new(v));
+            assert_eq!(*cell.load(), v, "cell lost publish {v}");
+        }
+        // old Arcs pinned by readers stay valid across wraps
+        let pinned = cell.load();
+        for v in 11..=20u64 {
+            cell.publish(Arc::new(v));
+        }
+        assert_eq!(*pinned, 10);
+        assert_eq!(*cell.load(), 20);
+    }
+
+    #[test]
+    fn ring_is_a_router_over_the_current_snapshot() {
+        let mut rng = Rng::new(21);
+        let mut writer = RouterWriter::new(EagleParams::default(), 4, DIM, cadence(1, 10_000));
+        let ring = writer.ring();
+        let q = unit(&mut rng);
+        assert_eq!(Router::scores(&*ring, &q), ring.load().scores(&q));
+        writer.observe(rand_obs(&mut rng, 4));
+        assert_eq!(ring.name(), "eagle-snapshot");
+        assert_eq!(Router::scores(&*ring, &q), ring.load().scores(&q));
+        assert_eq!(ring.load().epoch(), 1);
+    }
+
+    #[test]
+    fn apply_defers_publication_until_driven() {
+        let mut rng = Rng::new(22);
+        let mut writer = RouterWriter::new(EagleParams::default(), 4, DIM, cadence(2, 10_000));
+        writer.apply(rand_obs(&mut rng, 4));
+        writer.apply(rand_obs(&mut rng, 4));
+        writer.apply(rand_obs(&mut rng, 4));
+        // cadence tripped but apply never publishes by itself
+        assert!(writer.publish_due());
+        assert_eq!(writer.ring().load().epoch(), 0);
+        assert_eq!(writer.maybe_publish(), Some(1));
+        assert_eq!(writer.ring().load().history_len(), 3);
+        assert!(!writer.publish_due());
     }
 
     #[test]

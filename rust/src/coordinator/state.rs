@@ -157,13 +157,18 @@ pub fn restore(text: &str) -> Result<EagleRouter<FlatStore>> {
     Ok(router)
 }
 
-/// Write a snapshot to disk atomically (tmp + rename).
-pub fn save_to<I: VectorIndex + Send>(router: &EagleRouter<I>, path: &Path) -> Result<()> {
+/// Write serialized snapshot text to disk atomically (tmp + rename).
+/// Shared by the flat-router and sharded-router persistence paths.
+pub fn write_atomic(path: &Path, text: &str) -> Result<()> {
     let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, snapshot(router))
-        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
     std::fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
     Ok(())
+}
+
+/// Write a snapshot to disk atomically (tmp + rename).
+pub fn save_to<I: VectorIndex + Send>(router: &EagleRouter<I>, path: &Path) -> Result<()> {
+    write_atomic(path, &snapshot(router))
 }
 
 /// Load a snapshot from disk.

@@ -11,13 +11,17 @@
 //! ```
 //!
 //! Route scoring is **lock-free with respect to feedback application**:
-//! readers load an immutable [`RouterSnapshot`] from the
-//! [`SnapshotRing`] and score against it; the single applier thread owns
-//! the [`RouterWriter`] (behind a `Mutex` shared only with the admin
-//! snapshot op) and republishes at the configured epoch cadence. A
-//! feedback storm can no longer stall route reads — backpressure lands on
-//! the bounded [`FeedbackQueue`], and snapshot staleness is bounded by
-//! [`crate::config::EpochParams`].
+//! readers load an immutable [`ShardedSnapshot`] (per-shard RCU
+//! snapshots + the shared global-ELO table) from the [`ShardedHandle`]
+//! and score against it; the applier thread owns the [`ShardedRouter`]
+//! (behind a `Mutex` shared only with the admin snapshot op), routes each
+//! verdict to its hash shard, and every lane republishes at the
+//! configured epoch cadence. A feedback storm can no longer stall route
+//! reads — backpressure lands on the bounded [`FeedbackQueue`], and
+//! snapshot staleness is bounded by [`crate::config::EpochParams`]. With
+//! `[shards] count = 1` (the default) this is exactly the single-shard
+//! RCU path; higher counts scatter-gather batched scoring across shards
+//! with bit-identical results.
 //!
 //! Workers batch-drain: each connection handler pulls every pipelined
 //! request already buffered and serves all route requests in it with one
@@ -35,17 +39,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::EpochParams;
+use crate::config::{EpochParams, ShardParams};
 use crate::coordinator::feedback::{ComparisonSampler, FeedbackQueue, Verdict};
 use crate::coordinator::policy::BudgetPolicy;
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::router::EagleRouter;
-use crate::coordinator::snapshot::{RouterSnapshot, RouterWriter, SnapshotRing};
+use crate::coordinator::sharded::{ShardedHandle, ShardedRouter, ShardedSnapshot};
 use crate::embedding::EmbedHandle;
 use crate::metrics::Metrics;
 use crate::util::Rng;
 use crate::vectordb::flat::FlatStore;
-use crate::vectordb::ReadIndex as _;
 
 use protocol::{encode_response, parse_request, Request, Response, RouteReply};
 
@@ -57,11 +60,12 @@ const APPLIER_BATCH: usize = 256;
 
 /// Shared server state.
 pub struct ServerState {
-    /// Lock-free publication point for the route path.
-    pub snapshots: Arc<SnapshotRing>,
-    /// Single-writer ingest side. Locked by the applier thread and the
-    /// admin snapshot op only — never by route reads.
-    pub writer: Mutex<RouterWriter>,
+    /// Lock-free publication point for the route path (one ring per
+    /// shard plus the shared global table).
+    pub snapshots: ShardedHandle,
+    /// Sharded ingest side. Locked by the applier thread and the admin
+    /// snapshot op only — never by route reads.
+    pub writer: Mutex<ShardedRouter>,
     pub registry: ModelRegistry,
     pub policy: BudgetPolicy,
     pub embed: EmbedHandle,
@@ -84,7 +88,8 @@ impl ServerState {
         Self::with_epoch(router, registry, embed, metrics, EpochParams::default())
     }
 
-    /// Construct with an explicit snapshot-publication cadence.
+    /// Construct with an explicit snapshot-publication cadence (single
+    /// shard).
     pub fn with_epoch(
         router: EagleRouter<FlatStore>,
         registry: ModelRegistry,
@@ -92,10 +97,31 @@ impl ServerState {
         metrics: Arc<Metrics>,
         epoch_params: EpochParams,
     ) -> Self {
-        let writer = RouterWriter::from_router(router, epoch_params.clone());
+        Self::with_topology(
+            router,
+            registry,
+            embed,
+            metrics,
+            epoch_params,
+            ShardParams::default(),
+        )
+    }
+
+    /// Construct with an explicit cadence and sharding topology. The
+    /// corpus is hash-partitioned across `shard_params.count` shards;
+    /// scoring is bit-identical at any count.
+    pub fn with_topology(
+        router: EagleRouter<FlatStore>,
+        registry: ModelRegistry,
+        embed: EmbedHandle,
+        metrics: Arc<Metrics>,
+        epoch_params: EpochParams,
+        shard_params: ShardParams,
+    ) -> Self {
+        let writer = ShardedRouter::from_router(router, epoch_params.clone(), shard_params);
         let policy = BudgetPolicy::new(&registry);
         ServerState {
-            snapshots: writer.ring(),
+            snapshots: writer.handle(),
             writer: Mutex::new(writer),
             registry,
             policy,
@@ -124,10 +150,11 @@ impl ServerState {
         self.stop.load(Ordering::SeqCst)
     }
 
-    /// Force an immediate snapshot publish of everything ingested so far
-    /// (tests / admin; the applier publishes on cadence by itself).
+    /// Force an immediate publish of everything ingested so far — every
+    /// shard lane and the shared global table (tests / admin; the applier
+    /// publishes on cadence by itself). Returns the highest shard epoch.
     pub fn force_publish(&self) -> u64 {
-        self.writer.lock().unwrap().publish()
+        self.writer.lock().unwrap().publish_all()
     }
 
     /// Route a slab of texts: one embed round trip, one snapshot
@@ -149,13 +176,13 @@ impl ServerState {
                 return Err(format!("embed: {e}"));
             }
         };
-        let snap: Arc<RouterSnapshot> = self.snapshots.load();
+        let snap: ShardedSnapshot = self.snapshots.load();
         let ratings = snap.global_ratings();
-        let replies = embs
-            .iter()
+        let replies = snap
+            .score_batch(&embs)
+            .into_iter()
             .zip(budgets)
-            .map(|(emb, &budget)| {
-                let scores = snap.scores(emb);
+            .map(|(scores, &budget)| {
                 let choice = self.policy.select(&scores, budget);
                 let compare_with = self
                     .sampler
@@ -184,9 +211,9 @@ impl ServerState {
             Request::Snapshot => match &self.snapshot_path {
                 None => Response::Error("snapshot op disabled (no path configured)".into()),
                 Some(path) => {
-                    let writer = self.writer.lock().unwrap();
-                    let entries = writer.router().store().len() as u64;
-                    match crate::coordinator::state::save_to(writer.router(), path) {
+                    let mut writer = self.writer.lock().unwrap();
+                    let entries = writer.store_len() as u64;
+                    match writer.save_to(path) {
                         Ok(()) => Response::SnapshotSaved {
                             path: path.display().to_string(),
                             entries,
@@ -449,14 +476,14 @@ fn applier_loop(state: Arc<ServerState>) {
                 // closed: flush anything ingested but not yet published
                 let mut w = state.writer.lock().unwrap();
                 if w.unpublished() > 0 {
-                    w.publish();
+                    w.publish_all();
                 }
                 return;
             }
             Some(batch) if batch.is_empty() => {
-                // timeout beat: publish a stale epoch if records pend
+                // timeout beat: publish stale epochs if records pend
                 let mut w = state.writer.lock().unwrap();
-                w.maybe_publish();
+                w.maybe_publish_all();
             }
             Some(batch) => {
                 let mut w = state.writer.lock().unwrap();

@@ -33,7 +33,7 @@ fn artifacts_dir() -> Option<PathBuf> {
 
 /// Feedback records visible to the writer (ingested, published or not).
 fn ingested(server: &Server) -> usize {
-    server.state.writer.lock().unwrap().router().feedback_len()
+    server.state.writer.lock().unwrap().history_len()
 }
 
 fn start_server(dir: &Path) -> (Server, EmbedService, String) {

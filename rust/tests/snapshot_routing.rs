@@ -11,14 +11,20 @@
 //! - **Snapshot ≡ locked router**: scores from a published snapshot are
 //!   bit-identical to a flat-store `EagleRouter` rebuilt over the same
 //!   feedback prefix (the acceptance criterion for the RCU refactor).
+//! - **K-shard ≡ 1-shard**: scatter-gather scoring through a
+//!   `ShardedRouter` (serial, batched, and parallel-scatter paths) is
+//!   bit-identical to the single-shard scorer at every K, and readers
+//!   keep making progress while every shard lane publishes at full rate
+//!   from its own thread (multi-writer ingest).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use eagle::config::{EagleParams, EpochParams};
+use eagle::config::{EagleParams, EpochParams, ShardParams};
 use eagle::coordinator::router::{EagleRouter, Observation};
+use eagle::coordinator::sharded::{shard_of, ShardedRouter};
 use eagle::coordinator::snapshot::{RouterSnapshot, RouterWriter};
 use eagle::elo::{Comparison, Outcome};
 use eagle::util::{l2_normalize, Rng};
@@ -278,6 +284,161 @@ fn ring_wraps_safely_under_concurrent_load() {
             // with publish_every=1, epoch == history_len exactly
             assert_eq!(*epoch as usize, *history_len, "epoch/history skew");
         }
+    }
+}
+
+/// The sharding acceptance criterion: K-shard scatter-gather
+/// `score_batch` is bit-identical to the single-shard scorer on the same
+/// feedback stream, for K in {1, 2, 3, 8}, over interleaved inserts
+/// (checkpoints land mid-stream, between lane publishes, after segment
+/// and id-block merges).
+#[test]
+fn sharded_scatter_gather_matches_single_shard_scores() {
+    for &k in &[1usize, 2, 3, 8] {
+        let mut rng = Rng::new(0x5EEDED + k as u64);
+        let stream = obs_stream(0xC0DE + k as u64, 700);
+        let mut sharded = ShardedRouter::new(
+            EagleParams::default(),
+            N_MODELS,
+            DIM,
+            EpochParams { publish_every: 7, publish_interval_ms: 10_000 },
+            ShardParams { count: k, hash_seed: 0xEA61E },
+        );
+        let handle = sharded.handle();
+        for (step, obs) in stream.iter().enumerate() {
+            sharded.observe(obs.clone());
+            if (step + 1) % 167 == 0 || step + 1 == stream.len() {
+                sharded.publish_all();
+                let snap = handle.load();
+                let reference = reference_router(&stream, step + 1);
+                assert_eq!(snap.history_len(), reference.feedback_len(), "K={k}");
+                assert_eq!(snap.store_len(), step + 1, "K={k}");
+                assert_eq!(
+                    snap.global_ratings(),
+                    &reference.global().ratings()[..],
+                    "shared global table diverged at K={k}, step {step}"
+                );
+                let queries: Vec<Vec<f32>> = (0..6).map(|_| unit(&mut rng)).collect();
+                let batch = snap.score_batch(&queries);
+                let scatter = snap.score_batch_scatter(&queries);
+                for (qi, q) in queries.iter().enumerate() {
+                    let want = reference.combined_scores(q);
+                    assert_eq!(
+                        snap.scores(q),
+                        want,
+                        "serial sharded scores != single-shard at K={k}, step {step}"
+                    );
+                    assert_eq!(batch[qi], want, "score_batch diverged at K={k}, step {step}");
+                    assert_eq!(
+                        scatter[qi], want,
+                        "parallel scatter diverged at K={k}, step {step}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Multi-writer shard storm: one thread per shard lane applies its hash
+/// partition and publishes at full rate while a stream-order thread
+/// drives the shared global lane and reader threads score continuously.
+/// Readers must make progress throughout (per-shard epochs only move
+/// forward), and the quiescent final state must equal a single-shard
+/// replay of the whole stream.
+#[test]
+fn shard_storm_readers_progress_while_all_writers_publish() {
+    let _slot = storm_slot();
+    const K: usize = 4;
+    const HASH_SEED: u64 = 0xEA61E;
+    let stream = obs_stream(0x5A4D, 8_000);
+    let sharded = ShardedRouter::new(
+        EagleParams::default(),
+        N_MODELS,
+        DIM,
+        EpochParams { publish_every: 16, publish_interval_ms: 5 },
+        ShardParams { count: K, hash_seed: HASH_SEED },
+    );
+    let handle = sharded.handle();
+    let (mut global_lane, lanes) = sharded.into_lanes();
+
+    // pre-partition deterministically, preserving arrival order per lane
+    let mut per_lane: Vec<Vec<(u32, Observation)>> = (0..K).map(|_| Vec::new()).collect();
+    for (gid, obs) in stream.iter().enumerate() {
+        let s = shard_of(&obs.embedding, HASH_SEED, K);
+        per_lane[s].push((gid as u32, obs.clone()));
+    }
+
+    let done = Arc::new(AtomicBool::new(false));
+    let global_stream = stream.clone();
+    let global_thread = std::thread::spawn(move || {
+        for obs in &global_stream {
+            global_lane.apply(&obs.comparisons);
+            global_lane.maybe_publish();
+        }
+        global_lane.publish();
+    });
+    let lane_threads: Vec<_> = lanes
+        .into_iter()
+        .zip(per_lane)
+        .map(|(mut lane, work)| {
+            std::thread::spawn(move || {
+                for (gid, obs) in work {
+                    lane.apply(gid, obs);
+                    lane.maybe_publish();
+                }
+                lane.publish();
+            })
+        })
+        .collect();
+
+    let readers: Vec<_> = (0..3)
+        .map(|r| {
+            let handle = handle.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(2000 + r as u64);
+                let mut last_epochs = vec![0u64; K];
+                let mut iters = 0u64;
+                while !done.load(Ordering::SeqCst) || iters < 200 {
+                    let snap = handle.load();
+                    let epochs = snap.shard_epochs();
+                    for (s, (&prev, &cur)) in last_epochs.iter().zip(&epochs).enumerate() {
+                        assert!(cur >= prev, "shard {s} epoch went backwards: {prev} -> {cur}");
+                    }
+                    last_epochs = epochs;
+                    let scores = snap.scores(&unit(&mut rng));
+                    assert_eq!(scores.len(), N_MODELS);
+                    assert!(scores.iter().all(|s| s.is_finite()), "non-finite score");
+                    iters += 1;
+                }
+                iters
+            })
+        })
+        .collect();
+
+    global_thread.join().unwrap();
+    for t in lane_threads {
+        t.join().unwrap();
+    }
+    done.store(true, Ordering::SeqCst);
+    for r in readers {
+        let iters = r.join().unwrap();
+        assert!(iters >= 20, "reader starved: only {iters} iterations");
+    }
+
+    // quiescent equivalence: the sharded state == single-shard replay
+    let snap = handle.load();
+    assert_eq!(snap.store_len(), stream.len());
+    assert_eq!(snap.history_len(), stream.len());
+    let reference = reference_router(&stream, stream.len());
+    let mut rng = Rng::new(0xFACE);
+    for _ in 0..4 {
+        let q = unit(&mut rng);
+        assert_eq!(
+            snap.scores(&q),
+            reference.combined_scores(&q),
+            "post-storm sharded scores diverged from single-shard replay"
+        );
     }
 }
 
