@@ -155,10 +155,8 @@ fn main() -> anyhow::Result<()> {
         metrics.embed_queries.get() as f64 / metrics.embed_batches.get().max(1) as f64
     );
     println!("server metrics  :\n{}", metrics.report());
-    let fb = {
-        let writer = server.state.writer.lock().unwrap();
-        writer.history_len()
-    };
+    println!("ingest          : {}", server.state.ingest_metrics().report());
+    let fb = server.state.ingest_metrics().folded_global.get();
     let snap = server.state.snapshots.load();
     println!("feedback folded : {fb} comparisons (online, no retraining)");
     println!(

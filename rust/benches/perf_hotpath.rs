@@ -13,6 +13,8 @@ use std::time::{Duration, Instant};
 
 use eagle::bench::JsonReport;
 use eagle::config::{EagleParams, EpochParams, ShardParams};
+use eagle::coordinator::feedback::Verdict;
+use eagle::coordinator::ingest::{IngestOptions, IngestPipeline};
 use eagle::coordinator::router::{EagleRouter, Observation};
 use eagle::coordinator::sharded::ShardedRouter;
 use eagle::coordinator::snapshot::RouterWriter;
@@ -207,6 +209,7 @@ fn main() {
     }
     contention_scenario(snap_writer, &mut report);
     sharded_storm_sweep(&obs, &mut report);
+    ingest_pipeline_sweep(&mut report);
     if eagle::bench::json_enabled() {
         let path = report.write().expect("write bench json");
         println!("\nwrote {}", path.display());
@@ -341,6 +344,110 @@ fn contention_scenario(mut writer: RouterWriter, report: &mut JsonReport) {
     report.push("contention.storm_qps", storm_tput);
     report.push("contention.storm_quiet_ratio", ratio);
     report.push("contention.ingest_rps", ingest_rate);
+}
+
+/// The sharded ingest-pipeline arm (ISSUE 3 acceptance): end-to-end
+/// feedback ingest throughput through the dispatcher + per-shard applier
+/// threads, swept over the applier count K. Producers push pre-embedded
+/// verdicts (the embed stage is the engine thread's own bench above);
+/// the clock stops at the flush barrier, so every record is applied AND
+/// published when the window closes. Target: K=4 >= 2x K=1.
+fn ingest_pipeline_sweep(report: &mut JsonReport) {
+    const N_MODELS: usize = 11;
+    let shard_counts: &[usize] =
+        if eagle::bench::smoke() { &[1, 4] } else { &[1, 2, 4, 8] };
+    let records: usize = if eagle::bench::smoke() { 8_000 } else { 60_000 };
+    const PRODUCERS: usize = 2;
+
+    println!("\n== sharded ingest pipeline ({records} records, {PRODUCERS} producers, flush-to-publish) ==");
+    let mut k1_rps = 0.0f64;
+    for &k in shard_counts {
+        // pre-generate the stream so producer-side RNG cost stays out of
+        // the measurement window
+        let mut rng = Rng::new(0x1A6E57 + k as u64);
+        let per_producer = records / PRODUCERS;
+        let slabs: Vec<Vec<Verdict>> = (0..PRODUCERS)
+            .map(|_| {
+                (0..per_producer)
+                    .map(|_| {
+                        let a = rng.below(N_MODELS);
+                        let mut b = rng.below(N_MODELS - 1);
+                        if b >= a {
+                            b += 1;
+                        }
+                        Verdict {
+                            embedding: unit(&mut rng),
+                            model_a: a,
+                            model_b: b,
+                            score_a: [0.0, 0.5, 1.0][rng.below(3)],
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let router = ShardedRouter::new(
+            EagleParams::default(),
+            N_MODELS,
+            DIM,
+            EpochParams { publish_every: 64, publish_interval_ms: 5 },
+            ShardParams { count: k, hash_seed: 0xEA61E },
+        );
+        let pipeline = Arc::new(IngestPipeline::start(
+            router,
+            None,
+            IngestOptions {
+                epoch: EpochParams { publish_every: 64, publish_interval_ms: 5 },
+                // lane queues sized so backpressure throttles producers at
+                // the raw queue only — the applied-count assert below
+                // demands zero drops
+                lane_queue_capacity: records,
+                ..Default::default()
+            },
+        ));
+
+        let t0 = Instant::now();
+        let producers: Vec<_> = slabs
+            .into_iter()
+            .map(|slab| {
+                let p = pipeline.clone();
+                std::thread::spawn(move || {
+                    for mut v in slab {
+                        // bounded queues throttle the producer instead of
+                        // dropping: retry until accepted
+                        loop {
+                            v = match p.try_push_verdict(v) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    std::thread::yield_now();
+                                    back
+                                }
+                            };
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        pipeline.flush();
+        let secs = t0.elapsed().as_secs_f64();
+        pipeline.shutdown();
+
+        let m = pipeline.metrics();
+        assert_eq!(m.applied.get() as usize, records, "pipeline lost records");
+        let rps = records as f64 / secs;
+        if k == 1 {
+            k1_rps = rps;
+        }
+        let speedup = rps / k1_rps.max(1e-9);
+        println!(
+            "  K={k}: {rps:>9.0} rec/s applied+published  ({secs:.3} s, {speedup:.2}x vs K=1)"
+        );
+        report.push(&format!("ingest.k{k}.rps"), rps);
+        report.push(&format!("ingest.k{k}.speedup_vs_k1"), speedup);
+    }
 }
 
 /// The sharded scatter-gather arm: batched route throughput through a

@@ -25,6 +25,7 @@ use crate::json::{self, Value};
 use crate::metrics::Metrics;
 use crate::routerbench::{gen, DATASETS};
 use crate::vectordb::flat::FlatStore;
+use crate::vectordb::ReadIndex;
 
 /// Simple flag parser: `--key value` pairs plus repeated `--set k=v`.
 pub struct Args {
@@ -142,6 +143,15 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
     println!(
         "  shards: count={} hash_seed={:#x}",
         cfg.shards.count, cfg.shards.hash_seed
+    );
+    println!(
+        "  ivf: publish_threshold={} n_cells={} nprobe={}",
+        cfg.ivf.publish_threshold, cfg.ivf.n_cells, cfg.ivf.nprobe
+    );
+    println!(
+        "  persist: interval_ms={} path={}",
+        cfg.persist.interval_ms,
+        if cfg.persist.path.is_empty() { "<snapshot-out>" } else { &cfg.persist.path }
     );
     println!("  artifacts: {}", cfg.embed.artifacts_dir);
     match crate::runtime::Manifest::load(Path::new(&cfg.embed.artifacts_dir)) {
@@ -327,15 +337,6 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
     let workers = args.usize_or("workers", cfg.server.workers)?;
     let metrics = Arc::new(Metrics::new());
 
-    let service = crate::embedding::EmbedService::start(
-        Path::new(&cfg.embed.artifacts_dir),
-        crate::embedding::BatcherOptions {
-            batch_window_us: cfg.embed.batch_window_us,
-            max_batch: cfg.embed.max_batch,
-        },
-        metrics.clone(),
-    )?;
-
     let registry = ModelRegistry::routerbench();
     let router = match args.get("snapshot") {
         Some(path) => {
@@ -346,28 +347,84 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         None => EagleRouter::new(cfg.eagle.clone(), registry.len(), FlatStore::new(256)),
     };
 
-    let mut state = crate::server::ServerState::with_topology(
+    let batcher = crate::embedding::BatcherOptions {
+        batch_window_us: cfg.embed.batch_window_us,
+        max_batch: cfg.embed.max_batch,
+    };
+    let service = match crate::embedding::EmbedService::start(
+        Path::new(&cfg.embed.artifacts_dir),
+        batcher,
+        metrics.clone(),
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            println!(
+                "warning: PJRT embed service unavailable ({e}); serving with the \
+                 pure-rust hash embedder (dev/e2e quality, NOT the paper's embedder)"
+            );
+            crate::embedding::EmbedService::start_hash(
+                router.store().dim(),
+                batcher,
+                metrics.clone(),
+            )
+        }
+    };
+
+    // periodic persistence target: [persist] path, falling back to the
+    // admin --snapshot-out path
+    let snapshot_out = args.get("snapshot-out").map(std::path::PathBuf::from);
+    let persist_path = if cfg.persist.path.is_empty() {
+        snapshot_out.clone()
+    } else {
+        Some(std::path::PathBuf::from(&cfg.persist.path))
+    };
+    if cfg.persist.interval_ms > 0 {
+        match &persist_path {
+            Some(p) => println!(
+                "periodic persistence every {} ms -> {}",
+                cfg.persist.interval_ms,
+                p.display()
+            ),
+            None => println!(
+                "warning: persist.interval_ms set but no persist.path / --snapshot-out; \
+                 periodic persistence disabled"
+            ),
+        }
+    }
+
+    let mut state = crate::server::ServerState::with_options(
         router,
         registry,
         service.handle(),
         metrics,
-        cfg.epoch.clone(),
-        cfg.shards.clone(),
+        crate::server::ServerOptions {
+            epoch: cfg.epoch.clone(),
+            shards: cfg.shards.clone(),
+            ivf: cfg.ivf.clone(),
+            persist_interval_ms: cfg.persist.interval_ms,
+            persist_path,
+        },
     );
-    if let Some(out) = args.get("snapshot-out") {
-        state = state.with_snapshot_path(std::path::PathBuf::from(out));
-        println!("admin snapshot op enabled -> {out}");
+    if let Some(out) = snapshot_out {
+        println!("admin snapshot op enabled -> {}", out.display());
+        state = state.with_snapshot_path(out);
     }
     let state = Arc::new(state);
     let server = crate::server::Server::start(state, &addr, workers)?;
     println!(
-        "eagle serving on {} ({} workers, {} shard(s), epoch cadence: every {} records / {} ms); \
+        "eagle serving on {} ({} workers, {} shard(s) with one applier each, \
+         epoch cadence: every {} records / {} ms, ivf publish threshold: {}); \
          Ctrl-C to stop",
         server.addr,
         workers,
         cfg.shards.count,
         cfg.epoch.publish_every,
-        cfg.epoch.publish_interval_ms
+        cfg.epoch.publish_interval_ms,
+        if cfg.ivf.publish_threshold == 0 {
+            "off".to_string()
+        } else {
+            format!("{} entries/shard", cfg.ivf.publish_threshold)
+        },
     );
 
     // Block forever (Ctrl-C kills the process; state can be snapshotted

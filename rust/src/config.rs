@@ -146,6 +146,54 @@ impl Default for ShardParams {
     }
 }
 
+/// IVF snapshot-publication policy for the writer side
+/// ([`crate::coordinator::snapshot::RouterWriter`]). Once a shard's corpus
+/// reaches `publish_threshold` entries, the writer rebuilds an IVF core
+/// over the full shard contents at compaction time (off the route path —
+/// readers keep their pinned snapshots) and publishes
+/// `SnapshotView::Ivf` (core probed at `nprobe` of `n_cells` cells +
+/// an exact-scanned tail of newer entries) instead of the flat view, so
+/// per-query search cost stops growing linearly with corpus size.
+/// `publish_threshold = 0` disables IVF publication entirely.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IvfPublishParams {
+    /// Corpus size (per shard) beyond which snapshots publish an IVF view
+    /// (0 = never).
+    pub publish_threshold: usize,
+    /// Number of k-means cells in the rebuilt core.
+    pub n_cells: usize,
+    /// Cells probed per query; `nprobe == n_cells` is exhaustive and
+    /// scores bit-identically to the flat view.
+    pub nprobe: usize,
+}
+
+impl Default for IvfPublishParams {
+    fn default() -> Self {
+        IvfPublishParams { publish_threshold: 262_144, n_cells: 256, nprobe: 32 }
+    }
+}
+
+/// Background persistence cadence for the sharded ingest pipeline
+/// ([`crate::coordinator::ingest`]): every `interval_ms`, the dispatcher
+/// beat publishes a consistent cut (every lane + the global table) and
+/// persists it to `path` via
+/// [`crate::coordinator::state::write_atomic`]. `interval_ms = 0`
+/// disables periodic persistence (the admin `snapshot` op still works).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PersistParams {
+    /// Persist at most this often, driven by the applier beat (0 = off).
+    pub interval_ms: u64,
+    /// Snapshot file path; empty = fall back to the server's
+    /// `--snapshot-out` path.
+    pub path: String,
+}
+
+impl Default for PersistParams {
+    fn default() -> Self {
+        PersistParams { interval_ms: 0, path: String::new() }
+    }
+}
+
 /// Synthetic RouterBench generation parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataParams {
@@ -178,6 +226,8 @@ pub struct Config {
     pub server: ServerParams,
     pub epoch: EpochParams,
     pub shards: ShardParams,
+    pub ivf: IvfPublishParams,
+    pub persist: PersistParams,
     pub data: DataParams,
 }
 
@@ -279,6 +329,11 @@ impl Config {
             "epoch.publish_interval_ms" => self.epoch.publish_interval_ms = u64_of(value)?,
             "shards.count" => self.shards.count = usize_of(value)?,
             "shards.hash_seed" => self.shards.hash_seed = u64_of(value)?,
+            "ivf.publish_threshold" => self.ivf.publish_threshold = usize_of(value)?,
+            "ivf.n_cells" => self.ivf.n_cells = usize_of(value)?,
+            "ivf.nprobe" => self.ivf.nprobe = usize_of(value)?,
+            "persist.interval_ms" => self.persist.interval_ms = u64_of(value)?,
+            "persist.path" => self.persist.path = value.to_string(),
             "data.seed" => self.data.seed = u64_of(value)?,
             "data.per_dataset" => self.data.per_dataset = usize_of(value)?,
             "data.train_fraction" => self.data.train_fraction = f64_of(value)?,
@@ -318,6 +373,17 @@ impl Config {
                 "shards.count = {} not in 1..=64",
                 self.shards.count
             )));
+        }
+        if self.ivf.publish_threshold > 0 {
+            if self.ivf.n_cells == 0 {
+                return Err(ConfigError("ivf.n_cells must be > 0".into()));
+            }
+            if self.ivf.nprobe == 0 || self.ivf.nprobe > self.ivf.n_cells {
+                return Err(ConfigError(format!(
+                    "ivf.nprobe = {} not in 1..=n_cells ({})",
+                    self.ivf.nprobe, self.ivf.n_cells
+                )));
+            }
         }
         Ok(())
     }
@@ -408,6 +474,41 @@ workers = 8
         assert!(bad.validate().is_err());
         bad.shards.count = 65;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn ivf_and_persist_knobs_parse_and_validate() {
+        let c = Config::load(
+            None,
+            &[
+                ("ivf.publish_threshold".into(), "5000".into()),
+                ("ivf.n_cells".into(), "32".into()),
+                ("ivf.nprobe".into(), "32".into()),
+                ("persist.interval_ms".into(), "250".into()),
+                ("persist.path".into(), "/tmp/eagle.json".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.ivf.publish_threshold, 5000);
+        assert_eq!(c.ivf.n_cells, 32);
+        assert_eq!(c.ivf.nprobe, 32);
+        assert_eq!(c.persist.interval_ms, 250);
+        assert_eq!(c.persist.path, "/tmp/eagle.json");
+        // defaults: IVF engages only at production-scale corpora, no
+        // periodic persistence
+        assert_eq!(Config::default().persist, PersistParams::default());
+        assert_eq!(PersistParams::default().interval_ms, 0);
+        assert!(IvfPublishParams::default().publish_threshold > 100_000);
+        // nprobe must stay within the cell count when IVF is enabled
+        let mut bad = Config::default();
+        bad.ivf.publish_threshold = 100;
+        bad.ivf.nprobe = bad.ivf.n_cells + 1;
+        assert!(bad.validate().is_err());
+        bad.ivf.nprobe = 0;
+        assert!(bad.validate().is_err());
+        // ...but is unconstrained while IVF publication is disabled
+        bad.ivf.publish_threshold = 0;
+        assert!(bad.validate().is_ok());
     }
 
     #[test]

@@ -7,8 +7,11 @@
 //! - the comparison-partner sampling policy (uncertainty-weighted: prefer
 //!   the model whose rating is closest to the served one — maximal ELO
 //!   information per comparison),
-//! - a bounded ingestion queue decoupling the serving path from router
-//!   updates (requests never block on feedback processing).
+//! - a generic bounded ingestion queue ([`Queue`]) decoupling the serving
+//!   path from router updates (requests never block on feedback
+//!   processing); the sharded ingest pipeline
+//!   ([`super::ingest`]) runs one per shard lane plus one for the raw
+//!   feedback stream.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -72,6 +75,19 @@ impl ComparisonSampler {
     }
 }
 
+/// A raw (not yet embedded) user verdict on (model_a, model_b) for a
+/// prompt *text*. The request handler enqueues these; embedding happens on
+/// the ingest pipeline's applier side, batched through the same PJRT
+/// bucket path the route slabs use (see [`super::ingest`]).
+#[derive(Debug, Clone)]
+pub struct RawVerdict {
+    pub text: String,
+    pub model_a: usize,
+    pub model_b: usize,
+    /// 1.0 a wins, 0.0 b wins, 0.5 draw.
+    pub score_a: f64,
+}
+
 /// A pending user verdict on (model_a, model_b) for a prompt embedding.
 #[derive(Debug, Clone)]
 pub struct Verdict {
@@ -91,26 +107,47 @@ impl Verdict {
             )
         })
     }
+
+    /// Consuming conversion: moves the embedding instead of cloning it
+    /// (the ingest hot path converts every record exactly once).
+    pub fn into_observation(self) -> Option<Observation> {
+        Outcome::decode(self.score_a).map(|outcome| {
+            Observation::single(
+                self.embedding,
+                Comparison { a: self.model_a, b: self.model_b, outcome },
+            )
+        })
+    }
 }
 
-/// Bounded MPSC queue with blocking pop; drops oldest on overflow (the
-/// router prefers fresh feedback over completeness under pressure).
-pub struct FeedbackQueue {
-    inner: Mutex<QueueInner>,
+/// Generic bounded MPSC queue with blocking batched pop.
+///
+/// Data pushes go through [`Queue::push_bounded`], which rejects (drops
+/// the *incoming* item) when the queue is at capacity so the caller can
+/// count the drop — backpressure lands on the producer, never on a
+/// blocked consumer. Control messages (flush barriers) use
+/// [`Queue::push`], which ignores the capacity so a full queue can never
+/// wedge a flush.
+pub struct Queue<T> {
+    inner: Mutex<QueueInner<T>>,
     cond: Condvar,
     capacity: usize,
 }
 
-struct QueueInner {
-    items: VecDeque<Verdict>,
+/// The server's feedback ingestion queue (kept as an alias for the
+/// historical name).
+pub type FeedbackQueue = Queue<Verdict>;
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
     dropped: u64,
     closed: bool,
 }
 
-impl FeedbackQueue {
+impl<T> Queue<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
-        FeedbackQueue {
+        Queue {
             inner: Mutex::new(QueueInner {
                 items: VecDeque::new(),
                 dropped: 0,
@@ -121,16 +158,12 @@ impl FeedbackQueue {
         }
     }
 
-    /// Push a verdict; drops the oldest item if full. Returns false if the
-    /// queue is closed.
-    pub fn push(&self, v: Verdict) -> bool {
+    /// Push unconditionally (control messages / trusted producers).
+    /// Returns false if the queue is closed.
+    pub fn push(&self, v: T) -> bool {
         let mut inner = self.inner.lock().unwrap();
         if inner.closed {
             return false;
-        }
-        if inner.items.len() >= self.capacity {
-            inner.items.pop_front();
-            inner.dropped += 1;
         }
         inner.items.push_back(v);
         drop(inner);
@@ -138,8 +171,22 @@ impl FeedbackQueue {
         true
     }
 
+    /// Push unless the queue is full or closed; a rejected item is handed
+    /// back so the caller can count it as dropped.
+    pub fn push_bounded(&self, v: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.items.len() >= self.capacity {
+            inner.dropped += u64::from(!inner.closed);
+            return Err(v);
+        }
+        inner.items.push_back(v);
+        drop(inner);
+        self.cond.notify_one();
+        Ok(())
+    }
+
     /// Blocking pop; None once closed and drained.
-    pub fn pop(&self) -> Option<Verdict> {
+    pub fn pop(&self) -> Option<T> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(v) = inner.items.pop_front() {
@@ -158,7 +205,7 @@ impl FeedbackQueue {
     /// Returns `None` once the queue is closed and drained; an empty vec
     /// means the timeout elapsed (the caller uses that beat to flush a
     /// stale snapshot epoch).
-    pub fn pop_batch(&self, max: usize, timeout: std::time::Duration) -> Option<Vec<Verdict>> {
+    pub fn pop_batch(&self, max: usize, timeout: std::time::Duration) -> Option<Vec<T>> {
         let deadline = std::time::Instant::now() + timeout;
         let mut inner = self.inner.lock().unwrap();
         loop {
@@ -182,7 +229,7 @@ impl FeedbackQueue {
     }
 
     /// Non-blocking drain of everything queued.
-    pub fn drain(&self) -> Vec<Verdict> {
+    pub fn drain(&self) -> Vec<T> {
         let mut inner = self.inner.lock().unwrap();
         inner.items.drain(..).collect()
     }
@@ -195,6 +242,8 @@ impl FeedbackQueue {
         self.len() == 0
     }
 
+    /// Items rejected by [`Queue::push_bounded`] because the queue was at
+    /// capacity.
     pub fn dropped(&self) -> u64 {
         self.inner.lock().unwrap().dropped
     }
@@ -280,20 +329,47 @@ mod tests {
     }
 
     #[test]
-    fn queue_drops_oldest_on_overflow() {
+    fn queue_bounded_push_rejects_on_overflow() {
         let q = FeedbackQueue::new(2);
+        let mut rejected = 0;
         for i in 0..5 {
-            q.push(Verdict {
+            let v = Verdict {
                 embedding: vec![i as f32],
                 model_a: 0,
                 model_b: 1,
                 score_a: 0.0,
-            });
+            };
+            if let Err(back) = q.push_bounded(v) {
+                // the rejected item is handed back intact
+                assert_eq!(back.embedding, vec![i as f32]);
+                rejected += 1;
+            }
         }
+        assert_eq!(rejected, 3);
         assert_eq!(q.dropped(), 3);
+        // the oldest items survive (backpressure drops the incoming ones)
         let all = q.drain();
-        assert_eq!(all[0].embedding, vec![3.0]);
-        assert_eq!(all[1].embedding, vec![4.0]);
+        assert_eq!(all[0].embedding, vec![0.0]);
+        assert_eq!(all[1].embedding, vec![1.0]);
+        // unconditional push ignores capacity (control messages)
+        for i in 0..5 {
+            assert!(q.push(Verdict {
+                embedding: vec![i as f32],
+                model_a: 0,
+                model_b: 1,
+                score_a: 0.0,
+            }));
+        }
+        assert_eq!(q.len(), 5);
+    }
+
+    #[test]
+    fn verdict_into_observation_moves_embedding() {
+        let v = Verdict { embedding: vec![1.0, 2.0], model_a: 0, model_b: 1, score_a: 0.0 };
+        let obs = v.clone().into_observation().unwrap();
+        assert_eq!(obs.embedding, vec![1.0, 2.0]);
+        assert_eq!(obs.comparisons[0].outcome, Outcome::WinB);
+        assert!(Verdict { score_a: 0.7, ..v }.into_observation().is_none());
     }
 
     #[test]

@@ -1,0 +1,809 @@
+//! Sharded feedback-ingest pipeline: multi-threaded, embed-on-applier
+//! scale-out of the server's old single applier thread.
+//!
+//! ```text
+//!  request handlers (N)        dispatcher thread          shard appliers (K)
+//!  feedback: validate ──► raw queue ──► batch-embed (PJRT buckets)
+//!                                   ──► GlobalLane.apply  (stream order)
+//!                                   ──► shard_of(embedding) ──► lane queue s
+//!                                                               └► ShardLane.apply
+//!                                                                  + publish @ epoch
+//! ```
+//!
+//! The request path enqueues **raw text** and returns immediately —
+//! embedding happens on the ingest side, batched through the same PJRT
+//! bucket path the route slabs use, so an embed failure becomes an ingest
+//! metric ([`IngestMetrics::dropped_embed`]) instead of a request error.
+//! The dispatcher owns the shared [`GlobalLane`] and folds every record
+//! into the global ELO table **in arrival order** (the stream-order
+//! invariant sharding must not break), assigns the record its global
+//! arrival id, and hands it to its hash shard's queue. One applier thread
+//! per [`ShardLane`] drains its queue independently, so store inserts,
+//! segment merges, and snapshot publication scale with the shard count.
+//!
+//! Route scoring never touches any of this: readers keep loading
+//! immutable snapshots from the [`ShardedHandle`]; backpressure lands on
+//! the bounded queues (drops are counted per reason, never blocking), and
+//! a [`IngestPipeline::flush`] barrier flows through the same queues so
+//! "everything enqueued before the flush" is applied and published when
+//! it returns.
+//!
+//! The dispatcher beat also drives optional background persistence
+//! ([`crate::config::PersistParams`]): every `interval_ms` it publishes
+//! a consistent cut (global table + a barrier through every lane) and
+//! snapshots it through the reader handle
+//! ([`super::sharded::ShardedSnapshot::persist`]) — no writer lane is
+//! ever locked for persistence, and route reads are untouched.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::EpochParams;
+use crate::embedding::EmbedHandle;
+use crate::metrics::Counter;
+
+use super::feedback::{Queue, RawVerdict, Verdict};
+use super::router::Observation;
+use super::sharded::{shard_of, GlobalLane, ShardLane, ShardedHandle, ShardedRouter};
+
+/// Max messages the dispatcher folds per queue pop (also the embed batch
+/// ceiling; the embed engine re-buckets internally).
+const DISPATCH_BATCH: usize = 256;
+
+/// Max lane messages a shard applier folds per queue pop.
+const LANE_BATCH: usize = 64;
+
+/// Per-reason drop counters plus queue/apply progress, shared between the
+/// pipeline threads and the stats endpoint. All counters are atomics; the
+/// ingest hot path never locks to record them.
+#[derive(Debug)]
+pub struct IngestMetrics {
+    /// Records accepted onto the raw ingest queue.
+    pub queued: Counter,
+    /// Records folded into the shared global table (stream order).
+    pub folded_global: Counter,
+    /// Records applied to a shard lane (store insert done).
+    pub applied: Counter,
+    /// Rejected at the raw-queue push — the client saw an error reply.
+    pub dropped_overflow: Counter,
+    /// Silently dropped *after* acceptance because a shard lane's queue
+    /// was at capacity (the client already got FeedbackAccepted); kept
+    /// separate from [`IngestMetrics::dropped_overflow`] so acknowledged
+    /// data loss is distinguishable in the stats op.
+    pub dropped_lane_backlog: Counter,
+    /// Dropped on the ingest side because embedding failed.
+    pub dropped_embed: Counter,
+    /// Rejected at the request handler: unknown model name.
+    pub dropped_unknown_model: Counter,
+    /// Dropped because the verdict did not decode to a valid outcome.
+    pub dropped_invalid: Counter,
+    /// Background persistence attempts / failures.
+    pub persists: Counter,
+    pub persist_failures: Counter,
+    shards: Vec<ShardCounters>,
+}
+
+/// Per-shard ingest progress.
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    /// Records handed to this shard's queue.
+    pub queued: Counter,
+    /// Records this shard's applier folded into its lane.
+    pub applied: Counter,
+}
+
+impl IngestMetrics {
+    pub fn new(shard_count: usize) -> Self {
+        IngestMetrics {
+            queued: Counter::new(),
+            folded_global: Counter::new(),
+            applied: Counter::new(),
+            dropped_overflow: Counter::new(),
+            dropped_lane_backlog: Counter::new(),
+            dropped_embed: Counter::new(),
+            dropped_unknown_model: Counter::new(),
+            dropped_invalid: Counter::new(),
+            persists: Counter::new(),
+            persist_failures: Counter::new(),
+            shards: (0..shard_count).map(|_| ShardCounters::default()).collect(),
+        }
+    }
+
+    pub fn shard(&self, s: usize) -> &ShardCounters {
+        &self.shards[s]
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total records dropped, across every reason.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped_overflow.get()
+            + self.dropped_lane_backlog.get()
+            + self.dropped_embed.get()
+            + self.dropped_unknown_model.get()
+            + self.dropped_invalid.get()
+    }
+
+    /// One ingest section for the stats endpoint / logs.
+    pub fn report(&self) -> String {
+        let per_shard: Vec<String> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, c)| format!("s{s}:{}/{}", c.applied.get(), c.queued.get()))
+            .collect();
+        format!(
+            "ingest: queued={} folded_global={} applied={} dropped(overflow={} lane_backlog={} \
+             embed={} unknown_model={} invalid={}) persists={}/{} shards(applied/queued)=[{}]",
+            self.queued.get(),
+            self.folded_global.get(),
+            self.applied.get(),
+            self.dropped_overflow.get(),
+            self.dropped_lane_backlog.get(),
+            self.dropped_embed.get(),
+            self.dropped_unknown_model.get(),
+            self.dropped_invalid.get(),
+            self.persists.get() - self.persist_failures.get(),
+            self.persists.get(),
+            per_shard.join(" "),
+        )
+    }
+}
+
+/// A countdown barrier that rides the queues: `flush` pushes one, the
+/// dispatcher forwards a clone to every shard lane *behind* everything
+/// already queued, and each lane publishes then counts down. FIFO order
+/// is the correctness argument: when the barrier resolves, every record
+/// enqueued before the flush is applied and visible to readers.
+#[derive(Clone)]
+pub struct FlushBarrier {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl FlushBarrier {
+    fn new(count: usize) -> Self {
+        FlushBarrier { inner: Arc::new((Mutex::new(count), Condvar::new())) }
+    }
+
+    fn count_down(&self) {
+        let (lock, cond) = &*self.inner;
+        let mut left = lock.lock().unwrap();
+        *left = left.saturating_sub(1);
+        if *left == 0 {
+            cond.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let (lock, cond) = &*self.inner;
+        let mut left = lock.lock().unwrap();
+        while *left > 0 {
+            left = cond.wait(left).unwrap();
+        }
+    }
+}
+
+/// A message on the raw ingest queue (request handlers → dispatcher).
+pub enum IngestMsg {
+    /// Raw text to embed on the ingest side (the serving path).
+    Raw(RawVerdict),
+    /// Pre-embedded verdict (benches, replay drivers, back-compat).
+    Embedded(Verdict),
+    /// Flush barrier (see [`FlushBarrier`]).
+    Flush(FlushBarrier),
+}
+
+/// A message on one shard lane's queue (dispatcher → shard applier).
+enum LaneMsg {
+    /// A batch of (global arrival id, observation) for this shard, in
+    /// stream order.
+    Apply(Vec<(u32, Observation)>),
+    Flush(FlushBarrier),
+}
+
+/// Background-persistence target for the dispatcher beat.
+#[derive(Debug, Clone)]
+pub struct PersistTarget {
+    pub path: PathBuf,
+    pub interval: Duration,
+}
+
+/// Tuning for [`IngestPipeline::start`].
+#[derive(Debug, Clone)]
+pub struct IngestOptions {
+    /// Capacity of the raw ingest queue (records).
+    pub queue_capacity: usize,
+    /// Capacity of each shard lane queue, in messages (each message
+    /// carries up to one dispatch batch of records).
+    pub lane_queue_capacity: usize,
+    /// Epoch cadence; `publish_interval_ms` doubles as the beat that
+    /// flushes stale epochs and drives persistence.
+    pub epoch: EpochParams,
+    /// Periodic background persistence (None = admin-op only).
+    pub persist: Option<PersistTarget>,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions {
+            queue_capacity: 8192,
+            lane_queue_capacity: 1024,
+            epoch: EpochParams::default(),
+            persist: None,
+        }
+    }
+}
+
+/// The running ingest pipeline: one dispatcher thread (embed + global
+/// ELO + shard routing) plus one applier thread per shard lane. See the
+/// module docs for the dataflow.
+pub struct IngestPipeline {
+    ingest: Arc<Queue<IngestMsg>>,
+    metrics: Arc<IngestMetrics>,
+    handle: ShardedHandle,
+    shard_count: usize,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl IngestPipeline {
+    /// Decompose `router` into its lanes and spawn the pipeline threads.
+    /// `embed = None` builds an embedded-verdicts-only pipeline (raw text
+    /// is counted as an embed drop) — benches and tests use this.
+    pub fn start(
+        router: ShardedRouter,
+        embed: Option<EmbedHandle>,
+        opts: IngestOptions,
+    ) -> IngestPipeline {
+        let handle = router.handle();
+        let shard_params = router.shard_params().clone();
+        let next_gid = router.next_global_id();
+        let (global, lanes) = router.into_lanes();
+        let shard_count = lanes.len();
+        let metrics = Arc::new(IngestMetrics::new(shard_count));
+        let ingest: Arc<Queue<IngestMsg>> = Arc::new(Queue::new(opts.queue_capacity));
+        let lane_queues: Vec<Arc<Queue<LaneMsg>>> =
+            (0..shard_count).map(|_| Arc::new(Queue::new(opts.lane_queue_capacity))).collect();
+        let beat = Duration::from_millis(opts.epoch.publish_interval_ms.max(1));
+
+        let mut threads = Vec::with_capacity(shard_count + 1);
+        for (s, lane) in lanes.into_iter().enumerate() {
+            let q = lane_queues[s].clone();
+            let m = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("eagle-shard-applier-{s}"))
+                    .spawn(move || applier_loop(lane, q, s, m, beat))
+                    .expect("spawn shard applier"),
+            );
+        }
+        let dispatcher = Dispatcher {
+            global,
+            lanes: lane_queues,
+            lane_capacity: opts.lane_queue_capacity,
+            embed,
+            metrics: metrics.clone(),
+            handle: handle.clone(),
+            hash_seed: shard_params.hash_seed,
+            next_gid,
+            persist: opts.persist,
+            last_persist: Instant::now(),
+        };
+        let q = ingest.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("eagle-ingest-dispatcher".into())
+                .spawn(move || dispatcher.run(q, beat))
+                .expect("spawn ingest dispatcher"),
+        );
+
+        IngestPipeline { ingest, metrics, handle, shard_count, threads: Mutex::new(threads) }
+    }
+
+    /// Enqueue a raw-text verdict (the request path). Never blocks;
+    /// returns false when the queue is full or the pipeline is shutting
+    /// down (the drop is counted either way).
+    pub fn push_raw(&self, v: RawVerdict) -> bool {
+        match self.ingest.push_bounded(IngestMsg::Raw(v)) {
+            Ok(()) => {
+                self.metrics.queued.inc();
+                true
+            }
+            Err(_) => {
+                self.metrics.dropped_overflow.inc();
+                false
+            }
+        }
+    }
+
+    /// Enqueue a pre-embedded verdict (benches / replay drivers).
+    pub fn push_verdict(&self, v: Verdict) -> bool {
+        match self.ingest.push_bounded(IngestMsg::Embedded(v)) {
+            Ok(()) => {
+                self.metrics.queued.inc();
+                true
+            }
+            Err(_) => {
+                self.metrics.dropped_overflow.inc();
+                false
+            }
+        }
+    }
+
+    /// Like [`IngestPipeline::push_verdict`] but hands a rejected verdict
+    /// back *without* counting a drop, so producers can treat
+    /// backpressure as blocking and retry.
+    pub fn try_push_verdict(&self, v: Verdict) -> Result<(), Verdict> {
+        match self.ingest.push_bounded(IngestMsg::Embedded(v)) {
+            Ok(()) => {
+                self.metrics.queued.inc();
+                Ok(())
+            }
+            Err(IngestMsg::Embedded(v)) => Err(v),
+            Err(_) => unreachable!("push_bounded returns the message it was given"),
+        }
+    }
+
+    /// Barrier: apply and publish everything enqueued before this call
+    /// (every shard lane and the shared global table). Returns false if
+    /// the pipeline is already shut down.
+    pub fn flush(&self) -> bool {
+        let barrier = FlushBarrier::new(self.shard_count);
+        if !self.ingest.push(IngestMsg::Flush(barrier.clone())) {
+            return false;
+        }
+        barrier.wait();
+        true
+    }
+
+    /// The lock-free reader handle this pipeline publishes through.
+    pub fn handle(&self) -> &ShardedHandle {
+        &self.handle
+    }
+
+    pub fn metrics(&self) -> &Arc<IngestMetrics> {
+        &self.metrics
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shard_count
+    }
+
+    /// Records sitting in the raw queue right now (diagnostics).
+    pub fn queue_len(&self) -> usize {
+        self.ingest.len()
+    }
+
+    /// Close the intake, drain everything already queued (publishing the
+    /// tails), and join all pipeline threads. Idempotent.
+    pub fn shutdown(&self) {
+        self.ingest.close();
+        let threads: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for IngestPipeline {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Dispatcher state (owned by the dispatcher thread).
+struct Dispatcher {
+    global: GlobalLane,
+    lanes: Vec<Arc<Queue<LaneMsg>>>,
+    lane_capacity: usize,
+    embed: Option<EmbedHandle>,
+    metrics: Arc<IngestMetrics>,
+    handle: ShardedHandle,
+    hash_seed: u64,
+    next_gid: u32,
+    persist: Option<PersistTarget>,
+    last_persist: Instant,
+}
+
+impl Dispatcher {
+    fn run(mut self, queue: Arc<Queue<IngestMsg>>, beat: Duration) {
+        loop {
+            match queue.pop_batch(DISPATCH_BATCH, beat) {
+                None => {
+                    // closed and drained: flush the global tail, then let
+                    // the lanes drain theirs
+                    if self.global.unpublished() > 0 {
+                        self.global.publish();
+                    }
+                    for q in &self.lanes {
+                        q.close();
+                    }
+                    return;
+                }
+                Some(batch) if batch.is_empty() => {
+                    // timeout beat: publish a stale global epoch, persist
+                    self.global.maybe_publish();
+                    self.maybe_persist();
+                }
+                Some(batch) => {
+                    self.dispatch(batch);
+                    self.global.maybe_publish();
+                    self.maybe_persist();
+                }
+            }
+        }
+    }
+
+    /// Fold one popped batch: embed the raw records in one slab, then
+    /// walk the batch in arrival order applying the global table and
+    /// routing each observation to its shard queue.
+    fn dispatch(&mut self, batch: Vec<IngestMsg>) {
+        // one embed round trip for every raw record in the batch — the
+        // same amortization the batched route path gets
+        let texts: Vec<&str> = batch
+            .iter()
+            .filter_map(|m| match m {
+                IngestMsg::Raw(r) => Some(r.text.as_str()),
+                _ => None,
+            })
+            .collect();
+        // per-text results: a single bad embed drops exactly that record,
+        // never the rest of the (already acknowledged) slab
+        let mut embeddings = match (&self.embed, texts.is_empty()) {
+            (Some(handle), false) => handle.embed_each(&texts).into_iter(),
+            (None, false) => {
+                self.metrics.dropped_embed.add(texts.len() as u64);
+                Vec::new().into_iter()
+            }
+            _ => Vec::new().into_iter(),
+        };
+
+        let mut staged: Vec<Vec<(u32, Observation)>> =
+            (0..self.lanes.len()).map(|_| Vec::new()).collect();
+        for msg in batch {
+            let obs = match msg {
+                IngestMsg::Raw(r) => match embeddings.next() {
+                    Some(Ok(embedding)) => Verdict {
+                        embedding,
+                        model_a: r.model_a,
+                        model_b: r.model_b,
+                        score_a: r.score_a,
+                    }
+                    .into_observation(),
+                    Some(Err(_)) => {
+                        self.metrics.dropped_embed.inc();
+                        continue;
+                    }
+                    // no embed handle configured; already counted above
+                    None => continue,
+                },
+                IngestMsg::Embedded(v) => v.into_observation(),
+                IngestMsg::Flush(barrier) => {
+                    // barrier: everything staged so far must reach the
+                    // lanes first, then every lane publishes + acks
+                    self.flush_staged(&mut staged);
+                    self.global.publish();
+                    for q in &self.lanes {
+                        q.push(LaneMsg::Flush(barrier.clone()));
+                    }
+                    continue;
+                }
+            };
+            let Some(obs) = obs else {
+                self.metrics.dropped_invalid.inc();
+                continue;
+            };
+            let shard = shard_of(&obs.embedding, self.hash_seed, self.lanes.len());
+            // the dispatcher is the only producer on lane queues, so this
+            // capacity check cannot race: drop *before* the global apply
+            // to keep the global table and the stores consistent
+            if self.lanes[shard].len() >= self.lane_capacity {
+                self.metrics.dropped_lane_backlog.inc();
+                continue;
+            }
+            let gid = self.next_gid;
+            self.next_gid += 1;
+            self.global.apply(&obs.comparisons);
+            self.metrics.folded_global.inc();
+            self.metrics.shard(shard).queued.inc();
+            staged[shard].push((gid, obs));
+        }
+        self.flush_staged(&mut staged);
+    }
+
+    /// Hand each shard its staged slab as one queue message (one lock
+    /// acquisition per shard per batch).
+    fn flush_staged(&self, staged: &mut [Vec<(u32, Observation)>]) {
+        for (s, items) in staged.iter_mut().enumerate() {
+            if !items.is_empty() {
+                self.lanes[s].push(LaneMsg::Apply(std::mem::take(items)));
+            }
+        }
+    }
+
+    fn maybe_persist(&mut self) {
+        let Some(target) = &self.persist else { return };
+        if self.last_persist.elapsed() < target.interval {
+            return;
+        }
+        self.last_persist = Instant::now();
+        // publish a consistent cut first: the global table, then a
+        // barrier through every lane so all dispatched global ids are
+        // visible. The persisted ScatterView walks ids densely, so a
+        // gap (one lane published ahead of another) would panic; the
+        // barrier makes the published id set a complete prefix.
+        self.global.publish();
+        let barrier = FlushBarrier::new(self.lanes.len());
+        for q in &self.lanes {
+            q.push(LaneMsg::Flush(barrier.clone()));
+        }
+        barrier.wait();
+        self.metrics.persists.inc();
+        if self.handle.load().persist(&target.path).is_err() {
+            self.metrics.persist_failures.inc();
+        }
+    }
+}
+
+/// One shard's applier: drains its queue into the lane, publishing at
+/// the epoch cadence (plus the timeout beat for stale epochs).
+fn applier_loop(
+    mut lane: ShardLane,
+    queue: Arc<Queue<LaneMsg>>,
+    shard: usize,
+    metrics: Arc<IngestMetrics>,
+    beat: Duration,
+) {
+    loop {
+        match queue.pop_batch(LANE_BATCH, beat) {
+            None => {
+                if lane.unpublished() > 0 {
+                    lane.publish();
+                }
+                return;
+            }
+            Some(msgs) if msgs.is_empty() => {
+                lane.maybe_publish();
+            }
+            Some(msgs) => {
+                for msg in msgs {
+                    match msg {
+                        LaneMsg::Apply(items) => {
+                            let n = items.len() as u64;
+                            for (gid, obs) in items {
+                                lane.apply(gid, obs);
+                            }
+                            metrics.shard(shard).applied.add(n);
+                            metrics.applied.add(n);
+                            lane.maybe_publish();
+                        }
+                        LaneMsg::Flush(barrier) => {
+                            lane.publish();
+                            barrier.count_down();
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EagleParams, ShardParams};
+    use crate::coordinator::router::EagleRouter;
+    use crate::util::{l2_normalize, Rng};
+    use crate::vectordb::flat::FlatStore;
+
+    const DIM: usize = 16;
+    const N_MODELS: usize = 5;
+
+    fn unit(rng: &mut Rng) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    fn rand_verdict(rng: &mut Rng) -> Verdict {
+        let a = rng.below(N_MODELS);
+        let mut b = rng.below(N_MODELS - 1);
+        if b >= a {
+            b += 1;
+        }
+        let score_a = [0.0, 0.5, 1.0][rng.below(3)];
+        Verdict { embedding: unit(rng), model_a: a, model_b: b, score_a }
+    }
+
+    fn start_pipeline(k: usize, publish_every: usize) -> IngestPipeline {
+        let router = ShardedRouter::new(
+            EagleParams::default(),
+            N_MODELS,
+            DIM,
+            EpochParams { publish_every, publish_interval_ms: 5 },
+            ShardParams { count: k, hash_seed: 0xEA61E },
+        );
+        IngestPipeline::start(
+            router,
+            None,
+            IngestOptions {
+                epoch: EpochParams { publish_every, publish_interval_ms: 5 },
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn pipeline_matches_reference_replay_at_k3() {
+        let mut rng = Rng::new(41);
+        let pipeline = start_pipeline(3, 7);
+        let mut reference = EagleRouter::new(EagleParams::default(), N_MODELS, FlatStore::new(DIM));
+        let verdicts: Vec<Verdict> = (0..400).map(|_| rand_verdict(&mut rng)).collect();
+        for v in &verdicts {
+            reference.observe(v.clone().into_observation().unwrap());
+            assert!(pipeline.push_verdict(v.clone()));
+        }
+        assert!(pipeline.flush());
+        let m = pipeline.metrics();
+        assert_eq!(m.queued.get(), 400);
+        assert_eq!(m.folded_global.get(), 400);
+        assert_eq!(m.applied.get(), 400);
+        assert_eq!(m.dropped_total(), 0);
+        let per_shard: u64 = (0..3).map(|s| m.shard(s).applied.get()).sum();
+        assert_eq!(per_shard, 400);
+
+        // flush made everything visible: scores == in-order replay
+        let snap = pipeline.handle().load();
+        assert_eq!(snap.store_len(), 400);
+        assert_eq!(snap.history_len(), 400);
+        assert_eq!(snap.global_ratings(), &reference.global().ratings()[..]);
+        for _ in 0..4 {
+            let q = unit(&mut rng);
+            assert_eq!(snap.scores(&q), reference.combined_scores(&q));
+        }
+        pipeline.shutdown();
+    }
+
+    #[test]
+    fn concurrent_producers_preserve_global_history_count() {
+        let pipeline = Arc::new(start_pipeline(4, 16));
+        let producers: Vec<_> = (0..4)
+            .map(|t| {
+                let p = pipeline.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(100 + t);
+                    let mut accepted = 0u64;
+                    for _ in 0..200 {
+                        if p.push_verdict(rand_verdict(&mut rng)) {
+                            accepted += 1;
+                        }
+                    }
+                    accepted
+                })
+            })
+            .collect();
+        let accepted: u64 = producers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(pipeline.flush());
+        // queues are far below capacity at this volume: nothing drops
+        let m = pipeline.metrics();
+        assert_eq!(accepted, 800);
+        assert_eq!(m.dropped_total(), 0);
+        assert_eq!(m.folded_global.get(), 800);
+        assert_eq!(m.applied.get(), 800);
+        let snap = pipeline.handle().load();
+        assert_eq!(snap.history_len(), 800);
+        assert_eq!(snap.store_len(), 800);
+        pipeline.shutdown();
+    }
+
+    #[test]
+    fn invalid_scores_and_raw_without_embedder_are_counted_drops() {
+        let mut rng = Rng::new(43);
+        let pipeline = start_pipeline(2, 4);
+        // invalid score: decodes to no outcome
+        let mut bad = rand_verdict(&mut rng);
+        bad.score_a = 0.25;
+        assert!(pipeline.push_verdict(bad));
+        // raw text without an embed handle: counted as embed drop
+        assert!(pipeline.push_raw(RawVerdict {
+            text: "no embedder available".into(),
+            model_a: 0,
+            model_b: 1,
+            score_a: 1.0,
+        }));
+        let good = rand_verdict(&mut rng);
+        assert!(pipeline.push_verdict(good));
+        assert!(pipeline.flush());
+        let m = pipeline.metrics();
+        assert_eq!(m.dropped_invalid.get(), 1);
+        assert_eq!(m.dropped_embed.get(), 1);
+        assert_eq!(m.applied.get(), 1);
+        assert_eq!(pipeline.handle().load().store_len(), 1);
+        pipeline.shutdown();
+    }
+
+    #[test]
+    fn shutdown_publishes_queued_tail() {
+        let mut rng = Rng::new(44);
+        // record cadence far above the stream: publication relies on the
+        // beat and the shutdown flush
+        let pipeline = start_pipeline(2, 1_000_000);
+        for _ in 0..30 {
+            assert!(pipeline.push_verdict(rand_verdict(&mut rng)));
+        }
+        pipeline.shutdown();
+        let snap = pipeline.handle().load();
+        assert_eq!(snap.store_len(), 30);
+        assert_eq!(snap.history_len(), 30);
+        // shutdown is idempotent, flush after shutdown reports failure
+        pipeline.shutdown();
+        assert!(!pipeline.flush());
+        assert!(!pipeline.push_verdict(rand_verdict(&mut rng)));
+    }
+
+    #[test]
+    fn periodic_persistence_writes_restorable_snapshots() {
+        let mut rng = Rng::new(45);
+        let dir = std::env::temp_dir().join(format!("eagle_ingest_persist_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("persist.json");
+        let router = ShardedRouter::new(
+            EagleParams::default(),
+            N_MODELS,
+            DIM,
+            EpochParams { publish_every: 8, publish_interval_ms: 3 },
+            ShardParams { count: 2, hash_seed: 0xEA61E },
+        );
+        let pipeline = IngestPipeline::start(
+            router,
+            None,
+            IngestOptions {
+                epoch: EpochParams { publish_every: 8, publish_interval_ms: 3 },
+                persist: Some(PersistTarget {
+                    path: path.clone(),
+                    interval: Duration::from_millis(10),
+                }),
+                ..Default::default()
+            },
+        );
+        for _ in 0..120 {
+            pipeline.push_verdict(rand_verdict(&mut rng));
+        }
+        pipeline.flush();
+        // wait for at least one persistence beat to land
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pipeline.metrics().persists.get() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // nudge the beat once more so the post-flush state is captured
+        std::thread::sleep(Duration::from_millis(30));
+        pipeline.flush();
+        std::thread::sleep(Duration::from_millis(30));
+        pipeline.shutdown();
+        let m = pipeline.metrics();
+        assert!(m.persists.get() >= 1, "no persistence beat fired");
+        assert_eq!(m.persist_failures.get(), 0);
+        let restored = crate::coordinator::state::load_from(&path).unwrap();
+        assert!(restored.feedback_len() > 0, "persisted snapshot is empty");
+        assert_eq!(restored.store().len(), restored.feedback_len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flush_barrier_counts_down_exactly() {
+        let b = FlushBarrier::new(2);
+        let waiter = {
+            let b = b.clone();
+            std::thread::spawn(move || b.wait())
+        };
+        b.count_down();
+        assert!(!waiter.is_finished());
+        b.count_down();
+        waiter.join().unwrap();
+        // extra count_downs are harmless; zero-count barriers don't wait
+        b.count_down();
+        FlushBarrier::new(0).wait();
+    }
+}

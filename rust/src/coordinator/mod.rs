@@ -8,12 +8,15 @@
 //!   published at epoch cadence by a single-writer ingest side.
 //! - [`sharded`] — K-shard scatter-gather routing over the RCU core:
 //!   hash-partitioned corpus, one writer per shard, shared global ELO.
+//! - [`ingest`] — the sharded ingest pipeline: embed-on-applier batching,
+//!   a stream-order global dispatcher, one applier thread per shard lane.
 //! - [`state`] — snapshot/restore of router state (persistence).
 //!
 //! The [`Router`] trait is the uniform surface the evaluation harness and
 //! the server drive; Eagle and the three baselines all implement it.
 
 pub mod feedback;
+pub mod ingest;
 pub mod policy;
 pub mod registry;
 pub mod router;

@@ -51,7 +51,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{EagleParams, EpochParams, ShardParams};
+use crate::config::{EagleParams, EpochParams, IvfPublishParams, ShardParams};
 use crate::elo::{Comparison, GlobalElo};
 use crate::vectordb::flat::FlatStore;
 use crate::vectordb::view::SegmentStore;
@@ -334,6 +334,13 @@ impl ShardLane {
         self.writer.unpublished()
     }
 
+    /// Install the IVF publication policy on this lane's writer (see
+    /// [`RouterWriter::set_ivf`]); the threshold applies to the *shard's*
+    /// corpus, so K shards each flip to IVF independently.
+    pub fn set_ivf(&mut self, params: IvfPublishParams) {
+        self.writer.set_ivf(params);
+    }
+
     /// The wrapped single-shard writer (diagnostics).
     pub fn writer(&self) -> &RouterWriter {
         &self.writer
@@ -498,6 +505,10 @@ impl ShardedRouter {
         &self.params
     }
 
+    pub fn shard_params(&self) -> &ShardParams {
+        &self.shard_params
+    }
+
     pub fn n_models(&self) -> usize {
         self.n_models
     }
@@ -511,13 +522,30 @@ impl ShardedRouter {
         shard_of(embedding, self.shard_params.hash_seed, self.lanes.len())
     }
 
+    /// Install the IVF publication policy on every shard lane (see
+    /// [`RouterWriter::set_ivf`]). Call before ingest starts; per-shard
+    /// corpora past `publish_threshold` publish IVF views.
+    pub fn set_ivf(&mut self, params: IvfPublishParams) {
+        for lane in &mut self.lanes {
+            lane.set_ivf(params.clone());
+        }
+    }
+
     /// Decompose into independent writer lanes for multi-threaded ingest:
     /// one thread owns the [`GlobalLane`] (the full stream in order), one
     /// thread owns each [`ShardLane`] (its hash partition, with
     /// pre-assigned global ids). Reader handles taken before the split
-    /// keep working.
+    /// keep working. The next global arrival id to assign is
+    /// [`ShardedRouter::next_global_id`].
     pub fn into_lanes(self) -> (GlobalLane, Vec<ShardLane>) {
         (self.global, self.lanes)
+    }
+
+    /// The next unassigned global arrival id (multi-writer callers that
+    /// split via [`ShardedRouter::into_lanes`] continue the id space from
+    /// here).
+    pub fn next_global_id(&self) -> u32 {
+        self.next_id
     }
 
     /// Persist the full sharded state as one flat snapshot (global-id
@@ -525,15 +553,7 @@ impl ShardedRouter {
     /// everything first so the serialized view is complete.
     pub fn save_to(&mut self, path: &Path) -> Result<()> {
         self.publish_all();
-        let snap = self.handle().load();
-        let text = super::state::snapshot_parts(
-            &self.params,
-            self.n_models,
-            snap.global_ratings(),
-            snap.history_len(),
-            &snap.scatter(),
-        );
-        super::state::write_atomic(path, &text)
+        self.handle().load().persist(path)
     }
 }
 
@@ -618,6 +638,27 @@ impl ShardedSnapshot {
     /// The merged read-only index over every shard view (global ids).
     pub fn scatter(&self) -> ScatterView<'_> {
         ScatterView { dim: self.dim, shards: &self.shards, ids: &self.ids }
+    }
+
+    /// Persist this (already published, immutable) routing state as one
+    /// flat snapshot in global-id order, readable by
+    /// [`super::state::load_from`]. Safe to call from any thread — no
+    /// writer lane is touched.
+    ///
+    /// The snapshot's published global-id set must be a **complete
+    /// prefix** of the id space (guaranteed right after
+    /// [`ShardedRouter::publish_all`] or an ingest flush barrier): the
+    /// serializer walks ids densely, so persisting a multi-shard state
+    /// whose lanes published unevenly panics on the first gap.
+    pub fn persist(&self, path: &Path) -> Result<()> {
+        let text = super::state::snapshot_parts(
+            &self.params,
+            self.global.ratings.len(),
+            self.global_ratings(),
+            self.history_len(),
+            &self.scatter(),
+        );
+        super::state::write_atomic(path, &text)
     }
 
     /// Combined Eagle scores for one embedded query — bit-identical to a

@@ -31,11 +31,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::config::{EagleParams, EpochParams};
+use crate::config::{EagleParams, EpochParams, IvfPublishParams};
 use crate::vectordb::flat::FlatStore;
-use crate::vectordb::ivf::IvfView;
+use crate::vectordb::ivf::{IvfIndex, IvfParams, IvfView};
 use crate::vectordb::view::{FrozenView, SegmentStore};
-use crate::vectordb::{Feedback, Hit, ReadIndex};
+use crate::vectordb::{Feedback, Hit, ReadIndex, VectorIndex};
 
 use super::router::{mixed_scores_from, EagleRouter, Observation};
 use super::Router;
@@ -250,8 +250,27 @@ impl Router for SnapshotRing {
     }
 }
 
+/// Once the IVF tail reaches this fraction of the core, the next publish
+/// rebuilds the core over the full contents (geometric compaction: the
+/// O(n) rebuild amortizes to O(log n) rebuilds over the corpus lifetime,
+/// and the exact-scanned tail never exceeds half the core).
+const IVF_REBUILD_TAIL_FRACTION: f64 = 0.5;
+
+/// k-means refinement passes per core rebuild (cells only need to be
+/// good enough for probing; exactness comes from `nprobe`, and
+/// `nprobe == n_cells` is exhaustive regardless of cell quality).
+const IVF_KMEANS_ITERS: usize = 6;
+
 /// The single-writer ingest side: applies feedback to the live router
 /// (lock-free — it owns it) and republishes snapshots at epoch cadence.
+///
+/// With an IVF publication policy installed ([`RouterWriter::set_ivf`]),
+/// the writer additionally maintains an IVF *core* + exact *tail* beside
+/// the authoritative segment store: past the corpus-size threshold,
+/// publishes hand out [`SnapshotView::Ivf`] instead of the flat view, and
+/// the core is rebuilt over the full contents at compaction time — on the
+/// ingest thread, never on the route path (readers keep their pinned
+/// snapshots throughout a rebuild).
 pub struct RouterWriter {
     router: EagleRouter<SegmentStore>,
     ring: Arc<SnapshotRing>,
@@ -259,6 +278,14 @@ pub struct RouterWriter {
     epoch: u64,
     since_publish: usize,
     last_publish: Instant,
+    /// IVF publication policy; `None` (or `publish_threshold == 0`) keeps
+    /// every publish on the exact flat view.
+    ivf: Option<IvfPublishParams>,
+    /// The immutable IVF core shared with published snapshots.
+    ivf_core: Option<Arc<IvfIndex>>,
+    /// Entries ingested since the core was last rebuilt (ids continue the
+    /// core's id space).
+    ivf_tail: Option<SegmentStore>,
 }
 
 impl RouterWriter {
@@ -301,7 +328,32 @@ impl RouterWriter {
             epoch: 0,
             since_publish: 0,
             last_publish: Instant::now(),
+            ivf: None,
+            ivf_core: None,
+            ivf_tail: None,
         }
+    }
+
+    /// Install (or replace) the IVF publication policy. A
+    /// `publish_threshold` of 0 disables IVF publication; the next
+    /// publish past the threshold builds the first core.
+    pub fn set_ivf(&mut self, params: IvfPublishParams) {
+        if params.publish_threshold == 0 {
+            self.ivf = None;
+            self.ivf_core = None;
+            self.ivf_tail = None;
+        } else {
+            self.ivf = Some(params);
+        }
+    }
+
+    /// Entries currently inside the IVF core / tail (diagnostics; (0, 0)
+    /// while publishing flat views).
+    pub fn ivf_core_tail_len(&self) -> (usize, usize) {
+        (
+            self.ivf_core.as_ref().map_or(0, |c| c.len()),
+            self.ivf_tail.as_ref().map_or(0, |t| t.len()),
+        )
     }
 
     /// The publication ring handle to hand to readers.
@@ -342,6 +394,11 @@ impl RouterWriter {
     /// [`RouterWriter::publish_due`] + [`RouterWriter::publish`]
     /// themselves.
     pub fn apply(&mut self, obs: Observation) {
+        if let Some(tail) = &mut self.ivf_tail {
+            // mirror into the IVF tail: ids continue the core's space, so
+            // core.len() + tail ids == the authoritative store's ids
+            tail.add(&obs.embedding, Feedback { comparisons: obs.comparisons.clone() });
+        }
         self.router.observe(obs);
         self.since_publish += 1;
     }
@@ -363,18 +420,75 @@ impl RouterWriter {
     /// Unconditional publish of the current writer state.
     pub fn publish(&mut self) -> u64 {
         self.epoch += 1;
+        let view = self.build_view();
         let snap = RouterSnapshot {
             epoch: self.epoch,
             params: self.router.params().clone(),
             n_models: self.router.n_models(),
             global_ratings: self.router.global().ratings(),
             history_len: self.router.feedback_len(),
-            view: SnapshotView::Flat(self.router.store_mut().freeze()),
+            view,
         };
         self.ring.publish(Arc::new(snap));
         self.since_publish = 0;
         self.last_publish = Instant::now();
         self.epoch
+    }
+
+    /// The frozen index for the next snapshot: the exact flat view below
+    /// the IVF threshold, IVF core + exact tail beyond it (rebuilding the
+    /// core first when the tail has outgrown its compaction budget).
+    fn build_view(&mut self) -> SnapshotView {
+        let threshold = match &self.ivf {
+            Some(p) if p.publish_threshold > 0 => p.publish_threshold,
+            _ => return SnapshotView::Flat(self.router.store_mut().freeze()),
+        };
+        let total = self.router.store().len();
+        if total < threshold {
+            return SnapshotView::Flat(self.router.store_mut().freeze());
+        }
+        let due = match (&self.ivf_core, &self.ivf_tail) {
+            (Some(core), Some(tail)) => {
+                tail.len() as f64 >= core.len().max(1) as f64 * IVF_REBUILD_TAIL_FRACTION
+            }
+            _ => true,
+        };
+        if due {
+            self.rebuild_ivf_core();
+        }
+        let core = self.ivf_core.as_ref().expect("core exists past threshold").clone();
+        let tail = self.ivf_tail.as_mut().expect("tail exists past threshold").freeze();
+        debug_assert_eq!(core.len() + tail.len(), total, "ivf core/tail id-space skew");
+        SnapshotView::Ivf(IvfView::new(core, tail))
+    }
+
+    /// Compaction: re-cluster the *entire* current contents into a fresh
+    /// IVF core and reset the tail. O(n · n_cells · kmeans_iters) on the
+    /// ingest thread; route scoring is untouched (readers pin the old
+    /// core's `Arc` until their snapshots retire).
+    fn rebuild_ivf_core(&mut self) {
+        let params = self.ivf.as_ref().expect("rebuild without ivf policy");
+        let store = self.router.store_mut().freeze();
+        let n = store.len();
+        let mut vectors = Vec::with_capacity(n);
+        let mut payloads = Vec::with_capacity(n);
+        for id in 0..n as u32 {
+            vectors.push(store.vector(id).to_vec());
+            payloads.push(store.feedback(id).clone());
+        }
+        let core = IvfIndex::build(
+            store.dim(),
+            &vectors,
+            payloads,
+            IvfParams {
+                n_cells: params.n_cells,
+                nprobe: params.nprobe,
+                kmeans_iters: IVF_KMEANS_ITERS,
+                seed: 0x1F5 ^ self.epoch,
+            },
+        );
+        self.ivf_core = Some(Arc::new(core));
+        self.ivf_tail = Some(SegmentStore::new(store.dim()));
     }
 }
 
@@ -551,6 +665,84 @@ mod tests {
         // exhaustive probe (nprobe == n_cells) => identical scores
         let q = unit(&mut rng);
         assert_eq!(snap.scores(&q), flat_router.combined_scores(&q));
+    }
+
+    #[test]
+    fn ivf_publish_engages_past_threshold_and_scores_exactly() {
+        // exhaustive probe (nprobe == n_cells): the published IVF view
+        // must score bit-identically to the flat reference at every epoch
+        let mut rng = Rng::new(31);
+        let params = EagleParams::default();
+        let mut writer = RouterWriter::new(params.clone(), 5, DIM, cadence(25, 10_000));
+        writer.set_ivf(IvfPublishParams { publish_threshold: 60, n_cells: 8, nprobe: 8 });
+        let mut reference = EagleRouter::new(params, 5, FlatStore::new(DIM));
+        let ring = writer.ring();
+        let mut saw_flat = false;
+        let mut saw_ivf = false;
+        for step in 0..300 {
+            let obs = rand_obs(&mut rng, 5);
+            reference.observe(obs.clone());
+            writer.observe(obs);
+            if (step + 1) % 25 == 0 {
+                let snap = ring.load();
+                match snap.view() {
+                    SnapshotView::Flat(_) => {
+                        saw_flat = true;
+                        assert!(snap.store_len() < 60, "flat view past threshold");
+                    }
+                    SnapshotView::Ivf(v) => {
+                        saw_ivf = true;
+                        assert!(snap.store_len() >= 60);
+                        assert_eq!(v.core_len() + v.tail_len(), snap.store_len());
+                    }
+                }
+                for _ in 0..2 {
+                    let q = unit(&mut rng);
+                    assert_eq!(
+                        snap.scores(&q),
+                        reference.combined_scores(&q),
+                        "ivf-published snapshot diverged at step {step}"
+                    );
+                }
+            }
+        }
+        assert!(saw_flat && saw_ivf, "both view kinds must be exercised");
+        let (core, tail) = writer.ivf_core_tail_len();
+        assert!(core >= 60 && core + tail == 300);
+    }
+
+    #[test]
+    fn ivf_compaction_resets_tail_and_keeps_old_snapshots_valid() {
+        let mut rng = Rng::new(32);
+        let mut writer = RouterWriter::new(EagleParams::default(), 4, DIM, cadence(10, 10_000));
+        writer.set_ivf(IvfPublishParams { publish_threshold: 40, n_cells: 4, nprobe: 4 });
+        for _ in 0..50 {
+            writer.observe(rand_obs(&mut rng, 4));
+        }
+        let pinned = ring_snapshot(&writer);
+        let q = unit(&mut rng);
+        let before = pinned.scores(&q);
+        // enough churn to force several core rebuilds (tail >= core/2)
+        for _ in 0..400 {
+            writer.observe(rand_obs(&mut rng, 4));
+        }
+        let (core, tail) = writer.ivf_core_tail_len();
+        assert!(core > 50, "core never rebuilt (len {core})");
+        assert!(
+            (tail as f64) < core as f64 * 0.75,
+            "tail ({tail}) outgrew its compaction budget (core {core})"
+        );
+        // the pinned pre-compaction snapshot still scores identically
+        assert_eq!(pinned.scores(&q), before, "pinned snapshot mutated by rebuild");
+        // disabling the policy falls back to flat publishes
+        writer.set_ivf(IvfPublishParams { publish_threshold: 0, n_cells: 0, nprobe: 0 });
+        writer.observe(rand_obs(&mut rng, 4));
+        writer.publish();
+        assert!(matches!(ring_snapshot(&writer).view(), SnapshotView::Flat(_)));
+    }
+
+    fn ring_snapshot(writer: &RouterWriter) -> Arc<RouterSnapshot> {
+        writer.ring().load()
     }
 
     #[test]

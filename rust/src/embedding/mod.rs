@@ -73,6 +73,29 @@ impl Default for BatcherOptions {
 }
 
 impl EmbedService {
+    /// Start an engine thread backed by the pure-rust [`HashEmbedder`]
+    /// instead of PJRT: same handle type, same dynamic batcher, no
+    /// artifacts required. Tests and benches that exercise the serving
+    /// stack end-to-end (batching, embed-on-applier ingest) use this so
+    /// they run on a bare machine; it is NOT the serving path.
+    pub fn start_hash(dim: usize, opts: BatcherOptions, metrics: Arc<Metrics>) -> EmbedService {
+        let (tx, rx) = mpsc::channel::<EngineMsg>();
+        let embedder = HashEmbedder::new(dim);
+        let join = std::thread::Builder::new()
+            .name("eagle-embed-hash".to_string())
+            .spawn(move || hash_engine_loop(embedder, rx, opts, metrics))
+            .expect("spawn hash embed thread");
+        EmbedService {
+            handle: EmbedHandle {
+                tx,
+                dim,
+                seq_len: tokenizer::SEQ_LEN,
+                vocab: tokenizer::VOCAB_SIZE,
+            },
+            join: Some(join),
+        }
+    }
+
     /// Start the engine thread over the artifacts in `dir`.
     pub fn start(dir: &Path, opts: BatcherOptions, metrics: Arc<Metrics>) -> Result<EmbedService> {
         // Load the manifest on the caller thread first so startup errors
@@ -158,6 +181,71 @@ impl EmbedHandle {
             .map(|rx| rx.recv().map_err(|_| anyhow!("embed engine dropped request"))?)
             .collect()
     }
+
+    /// Embed many texts with **per-text** results: a failed text yields
+    /// its own `Err` without poisoning the rest of the slab. The ingest
+    /// pipeline uses this so one bad record (or one transient engine
+    /// error) drops exactly the affected records, never the whole batch.
+    pub fn embed_each(&self, texts: &[&str]) -> Vec<Result<Vec<f32>>> {
+        let mut replies = Vec::with_capacity(texts.len());
+        for t in texts {
+            let tokenized = tokenizer::tokenize(t, self.seq_len, self.vocab);
+            let (reply_tx, reply_rx) = mpsc::channel();
+            match self.tx.send(EngineMsg::Embed { tokenized, reply: reply_tx }) {
+                Ok(()) => replies.push(Some(reply_rx)),
+                Err(_) => replies.push(None),
+            }
+        }
+        replies
+            .into_iter()
+            .map(|rx| match rx {
+                Some(rx) => match rx.recv() {
+                    Ok(res) => res,
+                    Err(_) => Err(anyhow!("embed engine dropped request")),
+                },
+                None => Err(anyhow!("embed engine is down")),
+            })
+            .collect()
+    }
+}
+
+/// One queued embed request awaiting its engine reply.
+type PendingEmbed = (Tokenized, mpsc::Sender<Result<Vec<f32>>>);
+
+/// The drain-or-wait batching state machine shared by the PJRT and hash
+/// engine threads: block for the first request, linger up to `window`
+/// for batch-mates (capped at `max_batch`), hand the batch to `run`, and
+/// flush the partial batch once on shutdown/disconnect.
+fn batch_loop<F>(rx: mpsc::Receiver<EngineMsg>, window: Duration, max_batch: usize, mut run: F)
+where
+    F: FnMut(&mut Vec<PendingEmbed>),
+{
+    let max_batch = max_batch.max(1);
+    loop {
+        // Block for the first request.
+        let first = match rx.recv() {
+            Ok(EngineMsg::Embed { tokenized, reply }) => (tokenized, reply),
+            Ok(EngineMsg::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        // Linger up to `window` for batch-mates.
+        let deadline = Instant::now() + window;
+        while batch.len() < max_batch {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(EngineMsg::Embed { tokenized, reply }) => batch.push((tokenized, reply)),
+                Ok(EngineMsg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    run(&mut batch);
+                    return;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+            }
+            if timeout.is_zero() {
+                break;
+            }
+        }
+        run(&mut batch);
+    }
 }
 
 /// The engine loop: drain-or-wait batching, bucket padding, PJRT dispatch.
@@ -171,37 +259,9 @@ fn engine_loop(
     let dim = runtime.manifest().model.d_model;
     let max_batch = opts.max_batch.min(runtime.manifest().max_bucket()).max(1);
     let window = Duration::from_micros(opts.batch_window_us);
-
-    loop {
-        // Block for the first request.
-        let first = match rx.recv() {
-            Ok(EngineMsg::Embed { tokenized, reply }) => (tokenized, reply),
-            Ok(EngineMsg::Shutdown) | Err(_) => return,
-        };
-        let mut batch = vec![first];
-        // Linger up to `window` for batch-mates.
-        let deadline = Instant::now() + window;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            let timeout = deadline.saturating_duration_since(now);
-            match rx.recv_timeout(timeout) {
-                Ok(EngineMsg::Embed { tokenized, reply }) => batch.push((tokenized, reply)),
-                Ok(EngineMsg::Shutdown) => {
-                    run_batch(&runtime, &mut batch, seq, dim, &metrics);
-                    return;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    run_batch(&runtime, &mut batch, seq, dim, &metrics);
-                    return;
-                }
-            }
-            if timeout.is_zero() {
-                break;
-            }
-        }
-        run_batch(&runtime, &mut batch, seq, dim, &metrics);
-    }
+    batch_loop(rx, window, max_batch, |batch| {
+        run_batch(&runtime, batch, seq, dim, &metrics)
+    });
 }
 
 fn run_batch(
@@ -258,6 +318,33 @@ fn run_batch(
     }
 }
 
+/// The hash-backend engine loop: the same [`batch_loop`] state machine as
+/// the PJRT engine, with the PJRT dispatch replaced by
+/// [`HashEmbedder::embed_tokenized`]. Embeddings are bit-identical to
+/// calling [`HashEmbedder::embed`] on the same text (both sides share the
+/// default tokenizer parameters), which is what lets end-to-end tests
+/// replay the server's ingest stream against a reference router.
+fn hash_engine_loop(
+    embedder: HashEmbedder,
+    rx: mpsc::Receiver<EngineMsg>,
+    opts: BatcherOptions,
+    metrics: Arc<Metrics>,
+) {
+    let window = Duration::from_micros(opts.batch_window_us);
+    batch_loop(rx, window, opts.max_batch, |batch| {
+        if batch.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        metrics.embed_batches.inc();
+        metrics.embed_queries.add(batch.len() as u64);
+        for (tok, reply) in batch.drain(..) {
+            let _ = reply.send(Ok(embedder.embed_tokenized(&tok)));
+        }
+        metrics.embed_latency.record(t0.elapsed());
+    });
+}
+
 /// Blocking [`Embedder`] adapter over an [`EmbedHandle`].
 pub struct ServiceEmbedder {
     handle: EmbedHandle,
@@ -308,6 +395,27 @@ impl HashEmbedder {
         }
         l2_normalize(out);
     }
+
+    /// Embed an already-tokenized prompt (the hash engine-thread path).
+    /// [`HashEmbedder::embed`] is exactly
+    /// `embed_tokenized(tokenize_default(text))`.
+    pub fn embed_tokenized(&self, tok: &Tokenized) -> Vec<f32> {
+        let mut dir = vec![0f32; self.dim];
+        let mut v = vec![0f32; self.dim];
+        for (pos, (&id, &m)) in tok.ids.iter().zip(&tok.mask).enumerate() {
+            if m == 0.0 {
+                break;
+            }
+            self.word_direction(id, &mut dir);
+            // light positional damping: later tokens weigh less
+            let w = 1.0 / (1.0 + 0.02 * pos as f32);
+            for (o, &d) in v.iter_mut().zip(dir.iter()) {
+                *o += w * d;
+            }
+        }
+        l2_normalize(&mut v);
+        v
+    }
 }
 
 impl Embedder for HashEmbedder {
@@ -316,26 +424,9 @@ impl Embedder for HashEmbedder {
     }
 
     fn embed(&self, texts: &[&str]) -> Vec<Vec<f32>> {
-        let mut dir = vec![0f32; self.dim];
         texts
             .iter()
-            .map(|t| {
-                let tok = tokenizer::tokenize_default(t);
-                let mut v = vec![0f32; self.dim];
-                for (pos, (&id, &m)) in tok.ids.iter().zip(&tok.mask).enumerate() {
-                    if m == 0.0 {
-                        break;
-                    }
-                    self.word_direction(id, &mut dir);
-                    // light positional damping: later tokens weigh less
-                    let w = 1.0 / (1.0 + 0.02 * pos as f32);
-                    for (o, &d) in v.iter_mut().zip(dir.iter()) {
-                        *o += w * d;
-                    }
-                }
-                l2_normalize(&mut v);
-                v
-            })
+            .map(|t| self.embed_tokenized(&tokenizer::tokenize_default(t)))
             .collect()
     }
 }
@@ -388,6 +479,28 @@ mod tests {
         let o = BatcherOptions::default();
         assert_eq!(o.max_batch, 32);
         assert!(o.batch_window_us > 0);
+    }
+
+    #[test]
+    fn hash_service_matches_direct_embedder_exactly() {
+        // the hash-backed engine must be bit-identical to HashEmbedder so
+        // e2e tests can replay server streams against a reference router
+        let metrics = std::sync::Arc::new(crate::metrics::Metrics::new());
+        let svc = EmbedService::start_hash(
+            64,
+            BatcherOptions { batch_window_us: 50, max_batch: 8 },
+            metrics.clone(),
+        );
+        let handle = svc.handle();
+        assert_eq!(handle.dim(), 64);
+        let direct = HashEmbedder::new(64);
+        let texts = ["solve for x", "write a poem", "", "hello hello world"];
+        let via_service = handle.embed_many(&texts).unwrap();
+        let via_direct = direct.embed(&texts);
+        assert_eq!(via_service, via_direct);
+        assert_eq!(handle.embed_one(texts[0]).unwrap(), via_direct[0]);
+        assert!(metrics.embed_batches.get() >= 1);
+        assert_eq!(metrics.embed_queries.get(), 5);
     }
 
     fn norm(v: &[f32]) -> f32 {

@@ -1,32 +1,38 @@
 //! Serving front-end: a threaded TCP server speaking the newline-JSON
 //! protocol, wired to the RCU snapshot router, the embedding service, and
-//! the feedback pipeline.
+//! the sharded feedback-ingest pipeline.
 //!
 //! ```text
-//!         TCP workers (N)           engine thread          applier thread
-//! route:  parse (pipeline-drain) -> PJRT batch ----+
-//!         -> snapshot.score_batch ------------------+--> reply
-//! feedback: parse -> queue.push                  (async)
-//!            applier: pop_batch -> writer.observe -> publish @ epoch
+//!         acceptor ──► TCP workers (N)      engine thread    ingest pipeline (K+1 threads)
+//! route:   parse (pipeline-drain) ──► PJRT batch ──► snapshot.score_batch ──► reply
+//! feedback: validate ──► raw queue ──► dispatcher: batch-embed + global ELO
+//!                                        ──► per-shard queue ──► lane applier
+//!                                                                + publish @ epoch
 //! ```
 //!
 //! Route scoring is **lock-free with respect to feedback application**:
-//! readers load an immutable [`ShardedSnapshot`] (per-shard RCU
-//! snapshots + the shared global-ELO table) from the [`ShardedHandle`]
-//! and score against it; the applier thread owns the [`ShardedRouter`]
-//! (behind a `Mutex` shared only with the admin snapshot op), routes each
-//! verdict to its hash shard, and every lane republishes at the
-//! configured epoch cadence. A feedback storm can no longer stall route
-//! reads — backpressure lands on the bounded [`FeedbackQueue`], and
-//! snapshot staleness is bounded by [`crate::config::EpochParams`]. With
-//! `[shards] count = 1` (the default) this is exactly the single-shard
-//! RCU path; higher counts scatter-gather batched scoring across shards
-//! with bit-identical results.
+//! readers load an immutable [`ShardedSnapshot`] (per-shard RCU snapshots
+//! + the shared global-ELO table) from the [`ShardedHandle`] and score
+//! against it. Feedback ingest is the sharded pipeline of
+//! [`crate::coordinator::ingest`]: the request handler enqueues **raw
+//! text** and returns; the dispatcher thread batch-embeds through the
+//! same PJRT bucket path the route slabs use, folds the shared global
+//! table in stream order, and routes each record to its hash shard, where
+//! a dedicated applier thread owns the [`crate::coordinator::sharded::ShardLane`]
+//! and republishes at the epoch cadence. A feedback storm can no longer
+//! stall route reads — backpressure lands on the bounded ingest queues
+//! (drops are counted in [`crate::coordinator::ingest::IngestMetrics`]),
+//! and snapshot staleness is bounded by [`crate::config::EpochParams`].
+//! With `[shards] count = 1` (the default) this is the single-shard RCU
+//! path with one applier; higher counts scale both scatter-gather reads
+//! and ingest with bit-identical scores.
 //!
 //! Workers batch-drain: each connection handler pulls every pipelined
 //! request already buffered and serves all route requests in it with one
 //! embed round trip + one snapshot acquisition (`route_batch` gives
-//! clients the same amortization explicitly).
+//! clients the same amortization explicitly). Connections are handed to
+//! workers by a single blocking acceptor thread, so idle workers burn no
+//! CPU polling the listener.
 
 pub mod client;
 pub mod protocol;
@@ -34,13 +40,14 @@ pub mod protocol;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::{EpochParams, ShardParams};
-use crate::coordinator::feedback::{ComparisonSampler, FeedbackQueue, Verdict};
+use crate::config::{EpochParams, IvfPublishParams, ShardParams};
+use crate::coordinator::feedback::{ComparisonSampler, RawVerdict};
+use crate::coordinator::ingest::{IngestMetrics, IngestOptions, IngestPipeline, PersistTarget};
 use crate::coordinator::policy::BudgetPolicy;
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::router::EagleRouter;
@@ -55,26 +62,37 @@ use protocol::{encode_response, parse_request, Request, Response, RouteReply};
 /// Max pipelined requests drained per connection read (worker batching).
 const MAX_PIPELINE: usize = 32;
 
-/// Max feedback records the applier folds in per writer-lock acquisition.
-const APPLIER_BATCH: usize = 256;
+/// Everything configurable about the serving state in one place (epoch
+/// cadence, sharding topology, IVF publication, background persistence).
+#[derive(Debug, Clone, Default)]
+pub struct ServerOptions {
+    pub epoch: EpochParams,
+    pub shards: ShardParams,
+    /// IVF publication policy for every shard lane (threshold 0 = flat
+    /// views only).
+    pub ivf: IvfPublishParams,
+    /// Periodic background persistence from the ingest beat (0 = off).
+    pub persist_interval_ms: u64,
+    /// Where periodic persistence writes (falls back to the admin
+    /// snapshot path when unset).
+    pub persist_path: Option<std::path::PathBuf>,
+}
 
 /// Shared server state.
 pub struct ServerState {
     /// Lock-free publication point for the route path (one ring per
     /// shard plus the shared global table).
     pub snapshots: ShardedHandle,
-    /// Sharded ingest side. Locked by the applier thread and the admin
-    /// snapshot op only — never by route reads.
-    pub writer: Mutex<ShardedRouter>,
+    /// The sharded ingest side: per-shard applier threads fed by a raw
+    /// feedback queue; never touched by route reads.
+    pub ingest: IngestPipeline,
     pub registry: ModelRegistry,
     pub policy: BudgetPolicy,
     pub embed: EmbedHandle,
     pub metrics: Arc<Metrics>,
     pub sampler: ComparisonSampler,
-    pub queue: FeedbackQueue,
     /// Where the admin `snapshot` op persists state (None = op disabled).
     pub snapshot_path: Option<std::path::PathBuf>,
-    epoch_params: EpochParams,
     stop: AtomicBool,
 }
 
@@ -85,7 +103,7 @@ impl ServerState {
         embed: EmbedHandle,
         metrics: Arc<Metrics>,
     ) -> Self {
-        Self::with_epoch(router, registry, embed, metrics, EpochParams::default())
+        Self::with_options(router, registry, embed, metrics, ServerOptions::default())
     }
 
     /// Construct with an explicit snapshot-publication cadence (single
@@ -97,13 +115,12 @@ impl ServerState {
         metrics: Arc<Metrics>,
         epoch_params: EpochParams,
     ) -> Self {
-        Self::with_topology(
+        Self::with_options(
             router,
             registry,
             embed,
             metrics,
-            epoch_params,
-            ShardParams::default(),
+            ServerOptions { epoch: epoch_params, ..Default::default() },
         )
     }
 
@@ -118,19 +135,49 @@ impl ServerState {
         epoch_params: EpochParams,
         shard_params: ShardParams,
     ) -> Self {
-        let writer = ShardedRouter::from_router(router, epoch_params.clone(), shard_params);
+        Self::with_options(
+            router,
+            registry,
+            embed,
+            metrics,
+            ServerOptions { epoch: epoch_params, shards: shard_params, ..Default::default() },
+        )
+    }
+
+    /// Construct with the full option set — this starts the ingest
+    /// pipeline threads (one dispatcher + one applier per shard).
+    pub fn with_options(
+        router: EagleRouter<FlatStore>,
+        registry: ModelRegistry,
+        embed: EmbedHandle,
+        metrics: Arc<Metrics>,
+        opts: ServerOptions,
+    ) -> Self {
+        let mut writer = ShardedRouter::from_router(router, opts.epoch.clone(), opts.shards);
+        writer.set_ivf(opts.ivf);
+        let snapshots = writer.handle();
+        let persist = match (&opts.persist_path, opts.persist_interval_ms) {
+            (Some(path), ms) if ms > 0 => Some(PersistTarget {
+                path: path.clone(),
+                interval: Duration::from_millis(ms),
+            }),
+            _ => None,
+        };
+        let ingest = IngestPipeline::start(
+            writer,
+            Some(embed.clone()),
+            IngestOptions { epoch: opts.epoch, persist, ..Default::default() },
+        );
         let policy = BudgetPolicy::new(&registry);
         ServerState {
-            snapshots: writer.handle(),
-            writer: Mutex::new(writer),
+            snapshots,
+            ingest,
             registry,
             policy,
             embed,
             metrics,
             sampler: ComparisonSampler::default(),
-            queue: FeedbackQueue::new(4096),
             snapshot_path: None,
-            epoch_params,
             stop: AtomicBool::new(false),
         }
     }
@@ -141,20 +188,29 @@ impl ServerState {
         self
     }
 
+    /// Ingest-side progress counters (queued/applied/dropped, per shard).
+    pub fn ingest_metrics(&self) -> &Arc<IngestMetrics> {
+        self.ingest.metrics()
+    }
+
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        self.queue.close();
+        // closes the intake, drains + publishes the tails, joins the
+        // pipeline threads (idempotent)
+        self.ingest.shutdown();
     }
 
     pub fn stopped(&self) -> bool {
         self.stop.load(Ordering::SeqCst)
     }
 
-    /// Force an immediate publish of everything ingested so far — every
-    /// shard lane and the shared global table (tests / admin; the applier
-    /// publishes on cadence by itself). Returns the highest shard epoch.
+    /// Barrier: apply and publish everything ingested so far — every
+    /// shard lane and the shared global table (tests / admin; the
+    /// appliers publish on cadence by themselves). Returns the highest
+    /// shard epoch.
     pub fn force_publish(&self) -> u64 {
-        self.writer.lock().unwrap().publish_all()
+        self.ingest.flush();
+        self.snapshots.shard_epochs().into_iter().max().unwrap_or(0)
     }
 
     /// Route a slab of texts: one embed round trip, one snapshot
@@ -211,9 +267,13 @@ impl ServerState {
             Request::Snapshot => match &self.snapshot_path {
                 None => Response::Error("snapshot op disabled (no path configured)".into()),
                 Some(path) => {
-                    let mut writer = self.writer.lock().unwrap();
-                    let entries = writer.store_len() as u64;
-                    match writer.save_to(path) {
+                    // flush the pipeline so the persisted snapshot covers
+                    // everything accepted before this op, then write the
+                    // published state — no writer lane is ever locked
+                    self.ingest.flush();
+                    let snap = self.snapshots.load();
+                    let entries = snap.store_len() as u64;
+                    match snap.persist(path) {
                         Ok(()) => Response::SnapshotSaved {
                             path: path.display().to_string(),
                             entries,
@@ -226,7 +286,11 @@ impl ServerState {
                 }
             },
             Request::Stats => Response::Stats {
-                report: self.metrics.report(),
+                report: format!(
+                    "{}\n{}",
+                    self.metrics.report(),
+                    self.ingest.metrics().report()
+                ),
                 requests: self.metrics.requests.get(),
                 feedback: self.metrics.feedback.get(),
             },
@@ -257,6 +321,7 @@ impl ServerState {
                     (self.registry.index_of(&model_a), self.registry.index_of(&model_b))
                 else {
                     self.metrics.errors.inc();
+                    self.ingest.metrics().dropped_unknown_model.inc();
                     return Response::Error(format!(
                         "unknown model in feedback: {model_a} / {model_b}"
                     ));
@@ -269,18 +334,15 @@ impl ServerState {
                     self.metrics.errors.inc();
                     return Response::Error("feedback: score_a must be 0, 0.5 or 1".into());
                 }
-                // Embed synchronously (cheap relative to the round trip),
-                // queue the router update for the applier thread.
-                let emb = match self.embed.embed_one(&text) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        self.metrics.errors.inc();
-                        return Response::Error(format!("embed: {e}"));
-                    }
-                };
-                self.metrics.feedback.inc();
-                self.queue.push(Verdict { embedding: emb, model_a: a, model_b: b, score_a });
-                Response::FeedbackAccepted
+                // enqueue the raw text; the ingest pipeline embeds it on
+                // the applier side (batched through the PJRT bucket path)
+                if self.ingest.push_raw(RawVerdict { text, model_a: a, model_b: b, score_a }) {
+                    self.metrics.feedback.inc();
+                    Response::FeedbackAccepted
+                } else {
+                    self.metrics.errors.inc();
+                    Response::Error("feedback dropped: ingest queue full".into())
+                }
             }
         }
     }
@@ -340,12 +402,13 @@ impl ServerState {
     }
 }
 
-/// The running server: worker threads + feedback applier.
+/// The running server: a blocking acceptor + worker pool. Feedback
+/// application lives in the state's [`IngestPipeline`], not here.
 pub struct Server {
     pub state: Arc<ServerState>,
     pub addr: std::net::SocketAddr,
     workers: Vec<std::thread::JoinHandle<()>>,
-    applier: Option<std::thread::JoinHandle<()>>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -353,44 +416,60 @@ impl Server {
     pub fn start(state: Arc<ServerState>, addr: &str, workers: usize) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
+
+        // one blocking acceptor hands streams to the worker pool over a
+        // *bounded* channel; idle workers block on the channel instead of
+        // polling the listener (no per-worker wakeup tax at high worker
+        // counts), and when every worker is busy the acceptor stops
+        // accepting, so excess clients throttle in the kernel listen
+        // backlog instead of piling fds into an unbounded queue
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(workers.max(1) * 2);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
 
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers.max(1) {
-            let listener = listener.try_clone()?;
+            let rx = conn_rx.clone();
             let state = state.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("eagle-worker-{w}"))
-                    .spawn(move || worker_loop(listener, state, w as u64))
+                    .spawn(move || worker_loop(rx, state, w as u64))
                     .map_err(|e| anyhow!("spawn worker: {e}"))?,
             );
         }
 
-        // feedback applier: single writer
-        let applier_state = state.clone();
-        let applier = std::thread::Builder::new()
-            .name("eagle-feedback-applier".into())
-            .spawn(move || applier_loop(applier_state))
-            .map_err(|e| anyhow!("spawn applier: {e}"))?;
+        let acceptor_state = state.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("eagle-acceptor".into())
+            .spawn(move || acceptor_loop(listener, conn_tx, acceptor_state))
+            .map_err(|e| anyhow!("spawn acceptor: {e}"))?;
 
-        Ok(Server { state, addr: local, workers: handles, applier: Some(applier) })
+        Ok(Server { state, addr: local, workers: handles, acceptor: Some(acceptor) })
     }
 
-    /// Signal shutdown and join all threads.
+    /// Signal shutdown and join all threads (including the ingest
+    /// pipeline, which publishes everything already accepted).
     pub fn shutdown(mut self) {
         self.state.stop();
+        // wake the acceptor out of its blocking accept
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
-        }
-        if let Some(a) = self.applier.take() {
-            let _ = a.join();
         }
     }
 }
 
-fn worker_loop(listener: TcpListener, state: Arc<ServerState>, seed: u64) {
-    let mut rng = Rng::with_stream(0x5EED, seed);
+/// Blocking accept loop: hands each connection to the worker pool.
+/// Exits when the state is stopped (woken by the shutdown self-connect)
+/// and drops the sender, which drains the worker pool.
+fn acceptor_loop(
+    listener: TcpListener,
+    tx: mpsc::SyncSender<TcpStream>,
+    state: Arc<ServerState>,
+) {
     loop {
         if state.stopped() {
             return;
@@ -398,15 +477,57 @@ fn worker_loop(listener: TcpListener, state: Arc<ServerState>, seed: u64) {
         match listener.accept() {
             Ok((stream, _)) => {
                 stream.set_nodelay(true).ok();
-                if let Err(e) = handle_connection(stream, &state, &mut rng) {
-                    // connection errors are per-client, not fatal
-                    let _ = e;
+                // never block forever on a full pool: retry with a stop
+                // check so shutdown can't deadlock behind busy workers,
+                // and pause accepting (kernel backlog throttles clients)
+                let mut pending = stream;
+                loop {
+                    if state.stopped() {
+                        return;
+                    }
+                    match tx.try_send(pending) {
+                        Ok(()) => break,
+                        Err(mpsc::TrySendError::Full(back)) => {
+                            pending = back;
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(mpsc::TrySendError::Disconnected(_)) => return,
+                    }
                 }
             }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+            Err(_) => {
+                if state.stopped() {
+                    return;
+                }
+                // transient accept error (EMFILE etc.); back off briefly
                 std::thread::sleep(Duration::from_millis(5));
             }
-            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Worker: blocks on the connection channel, serves one connection at a
+/// time. Returns when the acceptor drops the channel.
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>,
+    state: Arc<ServerState>,
+    seed: u64,
+) {
+    let mut rng = Rng::with_stream(0x5EED, seed);
+    loop {
+        let stream = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(s) => s,
+                Err(_) => return,
+            }
+        };
+        if state.stopped() {
+            return;
+        }
+        if let Err(e) = handle_connection(stream, &state, &mut rng) {
+            // connection errors are per-client, not fatal
+            let _ = e;
         }
     }
 }
@@ -464,39 +585,6 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, rng: &mut Rng)
     }
 }
 
-/// Applier: drains the feedback queue into the router (single writer).
-/// Batched: one writer-lock acquisition folds in up to [`APPLIER_BATCH`]
-/// records; the pop timeout doubles as the staleness beat that flushes a
-/// pending epoch when feedback goes quiet.
-fn applier_loop(state: Arc<ServerState>) {
-    let beat = Duration::from_millis(state.epoch_params.publish_interval_ms.max(1));
-    loop {
-        match state.queue.pop_batch(APPLIER_BATCH, beat) {
-            None => {
-                // closed: flush anything ingested but not yet published
-                let mut w = state.writer.lock().unwrap();
-                if w.unpublished() > 0 {
-                    w.publish_all();
-                }
-                return;
-            }
-            Some(batch) if batch.is_empty() => {
-                // timeout beat: publish stale epochs if records pend
-                let mut w = state.writer.lock().unwrap();
-                w.maybe_publish_all();
-            }
-            Some(batch) => {
-                let mut w = state.writer.lock().unwrap();
-                for verdict in batch {
-                    if let Some(obs) = verdict.to_observation() {
-                        w.observe(obs);
-                    }
-                }
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -504,7 +592,8 @@ mod tests {
     use crate::embedding::{BatcherOptions, EmbedService};
 
     // In-process handler tests that need no artifacts are below; full TCP
-    // round-trips (with the PJRT embedder) live in rust/tests/server_e2e.rs.
+    // round-trips live in rust/tests/server_e2e.rs (hash-embedder-backed
+    // tests run everywhere; PJRT ones skip without artifacts).
 
     #[test]
     fn state_rejects_bad_feedback_models() {
@@ -526,5 +615,15 @@ mod tests {
         let _ = EagleParams::default();
         let _ = BatcherOptions::default();
         let _: Option<EmbedService> = None;
+    }
+
+    #[test]
+    fn server_options_default_matches_config_defaults() {
+        let opts = ServerOptions::default();
+        assert_eq!(opts.epoch, EpochParams::default());
+        assert_eq!(opts.shards, ShardParams::default());
+        assert_eq!(opts.ivf, IvfPublishParams::default());
+        assert_eq!(opts.persist_interval_ms, 0);
+        assert!(opts.persist_path.is_none());
     }
 }

@@ -1,17 +1,25 @@
-//! Full-stack serving tests: TCP server + PJRT embedder + Eagle router.
-//! Skipped when artifacts are missing (run `make artifacts`).
+//! Full-stack serving tests: TCP server + embedder + Eagle router.
+//!
+//! Two tiers:
+//! - **hash-backed** tests (`EmbedService::start_hash`) run everywhere —
+//!   no artifacts needed — and cover the sharded ingest pipeline
+//!   end-to-end, including the K>1 applier feedback storm;
+//! - **PJRT** tests skip when artifacts are missing (run `make
+//!   artifacts`).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use eagle::config::{EagleParams, EpochParams};
+use eagle::config::{EagleParams, EpochParams, ShardParams};
 use eagle::coordinator::registry::ModelRegistry;
 use eagle::coordinator::router::EagleRouter;
-use eagle::embedding::{BatcherOptions, EmbedService};
+use eagle::elo::{Comparison, GlobalElo, Outcome};
+use eagle::embedding::{BatcherOptions, EmbedService, Embedder, HashEmbedder};
 use eagle::metrics::Metrics;
 use eagle::runtime::Runtime;
 use eagle::server::client::EagleClient;
-use eagle::server::{Server, ServerState};
+use eagle::server::{Server, ServerOptions, ServerState};
+use eagle::util::Rng;
 use eagle::vectordb::flat::FlatStore;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -31,9 +39,10 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-/// Feedback records visible to the writer (ingested, published or not).
+/// Feedback records folded into the shared global table (stream order,
+/// published or not).
 fn ingested(server: &Server) -> usize {
-    server.state.writer.lock().unwrap().history_len()
+    server.state.ingest_metrics().folded_global.get() as usize
 }
 
 fn start_server(dir: &Path) -> (Server, EmbedService, String) {
@@ -65,6 +74,267 @@ fn start_server_with_snapshot(
     (server, service, addr)
 }
 
+/// Hash-embedder-backed server: the full serving stack minus PJRT, so the
+/// ingest pipeline is exercised on any machine. `dim` must match the
+/// reference [`HashEmbedder`] used to replay the stream.
+fn start_hash_server(
+    dim: usize,
+    shards: usize,
+    workers: usize,
+    snapshot: Option<PathBuf>,
+) -> (Server, EmbedService, String) {
+    let metrics = Arc::new(Metrics::new());
+    let service = EmbedService::start_hash(
+        dim,
+        BatcherOptions { batch_window_us: 100, max_batch: 16 },
+        metrics.clone(),
+    );
+    let registry = ModelRegistry::routerbench();
+    let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(dim));
+    let mut state = ServerState::with_options(
+        router,
+        registry,
+        service.handle(),
+        metrics,
+        ServerOptions {
+            epoch: EpochParams { publish_every: 16, publish_interval_ms: 5 },
+            shards: ShardParams { count: shards, hash_seed: 0xEA61E },
+            ..Default::default()
+        },
+    );
+    if let Some(p) = snapshot {
+        state = state.with_snapshot_path(p);
+    }
+    let state = Arc::new(state);
+    let server = Server::start(state, "127.0.0.1:0", workers).unwrap();
+    let addr = server.addr.to_string();
+    (server, service, addr)
+}
+
+/// A deterministic feedback stream over the RouterBench model pool:
+/// (text, a, b, score). Outcomes vary so the global ELO trajectory is
+/// order-sensitive — matching the in-order replay proves stream order.
+fn feedback_stream(n: usize, seed: u64, n_models: usize) -> Vec<(String, usize, usize, f64)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let a = rng.below(n_models);
+            let mut b = rng.below(n_models - 1);
+            if b >= a {
+                b += 1;
+            }
+            let score = [0.0, 0.5, 1.0][rng.below(3)];
+            let text = format!("storm prompt {i} about topic {}", i % 17);
+            (text, a, b, score)
+        })
+        .collect()
+}
+
+#[test]
+fn hash_server_route_feedback_stats_roundtrip() {
+    let (server, _service, addr) = start_hash_server(64, 1, 2, None);
+    let mut client = EagleClient::connect(&addr).unwrap();
+    client.ping().unwrap();
+
+    let registry = ModelRegistry::routerbench();
+    let d = client.route("solve the equation 3x + 5 = 20", 1.0).unwrap();
+    assert!(registry.index_of(&d.model).is_some(), "unknown model {}", d.model);
+
+    // tiny budget -> cheapest model
+    let cheap = client.route("cheap question", 1e-9).unwrap();
+    assert_eq!(cheap.model_index, registry.cheapest_available().unwrap());
+
+    client
+        .feedback("solve the equation 3x + 5 = 20", "gpt-4", "llama-2-13b-chat", 1.0)
+        .unwrap();
+    // barrier: everything accepted above is applied and published
+    server.state.force_publish();
+    assert_eq!(ingested(&server), 1);
+    let snap = server.state.snapshots.load();
+    assert_eq!(snap.history_len(), 1);
+    let g = registry.index_of("gpt-4").unwrap();
+    let l = registry.index_of("llama-2-13b-chat").unwrap();
+    assert!(snap.global_ratings()[g] > snap.global_ratings()[l]);
+
+    let (report, requests, feedback) = client.stats().unwrap();
+    assert!(requests >= 2, "requests = {requests}");
+    assert_eq!(feedback, 1);
+    assert!(report.contains("route_latency"));
+    assert!(report.contains("ingest:"), "stats missing ingest section: {report}");
+    assert!(report.contains("applied=1"), "ingest counters not reported: {report}");
+
+    server.shutdown();
+}
+
+/// The ISSUE acceptance test: a feedback storm through K=4 shard-applier
+/// threads must (a) preserve global-ELO stream order exactly, (b) keep
+/// route reads progressing throughout, and (c) end bit-identical to a
+/// single-threaded in-order replay of the same stream.
+#[test]
+fn feedback_storm_k4_preserves_stream_order_and_routes_progress() {
+    const DIM: usize = 64;
+    const N_FEEDBACK: usize = 500;
+    let (server, _service, addr) = start_hash_server(DIM, 4, 3, None);
+    let registry = ModelRegistry::routerbench();
+    let n_models = registry.len();
+    let stream = feedback_stream(N_FEEDBACK, 0x57AB1E, n_models);
+
+    // route readers hammer concurrently with the storm; every route must
+    // come back (progress), none may error
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let readers: Vec<_> = (0..2)
+        .map(|r| {
+            let addr = addr.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut c = EagleClient::connect(&addr).unwrap();
+                let mut routed = 0u64;
+                let mut i = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let d = c
+                        .route(&format!("reader {r} query {i}"), 0.5)
+                        .expect("route failed during feedback storm");
+                    assert!(!d.model.is_empty());
+                    routed += 1;
+                    i += 1;
+                }
+                routed
+            })
+        })
+        .collect();
+
+    // the storm: one connection => server-side arrival order == send order
+    let mut client = EagleClient::connect(&addr).unwrap();
+    for (text, a, b, score) in &stream {
+        let name_a = &registry.entry(*a).name;
+        let name_b = &registry.entry(*b).name;
+        client.feedback(text, name_a, name_b, *score).unwrap();
+    }
+
+    // barrier: everything accepted is applied + published
+    server.state.force_publish();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let routed: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(routed >= 20, "route readers starved during the storm ({routed} routes)");
+
+    let m = server.state.ingest_metrics();
+    assert_eq!(m.queued.get() as usize, N_FEEDBACK);
+    assert_eq!(m.folded_global.get() as usize, N_FEEDBACK, "records lost in the pipeline");
+    assert_eq!(m.applied.get() as usize, N_FEEDBACK);
+    assert_eq!(m.dropped_total(), 0);
+    // work actually spread across the K=4 appliers
+    let busy_shards = (0..4).filter(|&s| m.shard(s).applied.get() > 0).count();
+    assert!(busy_shards >= 3, "only {busy_shards}/4 shard appliers saw work");
+
+    // (a) global-ELO stream order: the shared table equals an in-order
+    // replay (ELO updates do not commute, so any reordering diverges)
+    let params = EagleParams::default();
+    let mut reference_global = GlobalElo::new(n_models, params.k_factor);
+    for (_, a, b, score) in &stream {
+        let outcome = Outcome::decode(*score).unwrap();
+        reference_global.apply_new(&[Comparison { a: *a, b: *b, outcome }]);
+    }
+    let snap = server.state.snapshots.load();
+    assert_eq!(snap.history_len(), N_FEEDBACK);
+    assert_eq!(
+        snap.global_ratings(),
+        &reference_global.ratings()[..],
+        "global ELO diverged from stream order under K=4 appliers"
+    );
+
+    // (c) full scoring equivalence: server state == single-threaded
+    // replay through a flat-store router over hash embeddings
+    let embedder = HashEmbedder::new(DIM);
+    let mut reference = EagleRouter::new(params, n_models, FlatStore::new(DIM));
+    for (text, a, b, score) in &stream {
+        let emb = embedder.embed(&[text.as_str()]).pop().unwrap();
+        let outcome = Outcome::decode(*score).unwrap();
+        reference.observe(eagle::coordinator::router::Observation::single(
+            emb,
+            Comparison { a: *a, b: *b, outcome },
+        ));
+    }
+    assert_eq!(snap.store_len(), N_FEEDBACK);
+    let mut rng = Rng::new(0xFACADE);
+    for i in 0..5 {
+        let probe = embedder
+            .embed(&[format!("equivalence probe {} {}", i, rng.below(1000)).as_str()])
+            .pop()
+            .unwrap();
+        assert_eq!(
+            snap.scores(&probe),
+            reference.combined_scores(&probe),
+            "sharded embed-on-applier ingest diverged from in-order replay"
+        );
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn hash_server_snapshot_op_flushes_and_persists() {
+    let snap_path = std::env::temp_dir()
+        .join(format!("eagle_hash_server_snap_{}.json", std::process::id()));
+    let (server, _service, addr) = start_hash_server(64, 2, 2, Some(snap_path.clone()));
+    let mut client = EagleClient::connect(&addr).unwrap();
+    for i in 0..5 {
+        client
+            .feedback(&format!("snapshot test prompt {i}"), "gpt-4", "mistral-7b-chat", 1.0)
+            .unwrap();
+    }
+    // no waiting: the snapshot op runs a pipeline flush barrier itself
+    let (path, entries) = client.snapshot().unwrap();
+    assert_eq!(path, snap_path.display().to_string());
+    assert_eq!(entries, 5);
+
+    let restored = eagle::coordinator::state::load_from(&snap_path).unwrap();
+    assert_eq!(restored.feedback_len(), 5);
+    assert_eq!(restored.store().len(), 5);
+    let g = ModelRegistry::routerbench().index_of("gpt-4").unwrap();
+    let m = ModelRegistry::routerbench().index_of("mistral-7b-chat").unwrap();
+    assert!(restored.global().ratings()[g] > restored.global().ratings()[m]);
+
+    std::fs::remove_file(&snap_path).ok();
+    server.shutdown();
+}
+
+#[test]
+fn hash_server_overload_drops_are_observable_not_fatal() {
+    // a burst bigger than anything a test should drop: every record must
+    // be either applied or counted in a drop counter — never lost
+    let (server, _service, addr) = start_hash_server(32, 2, 2, None);
+    let mut client = EagleClient::connect(&addr).unwrap();
+    let mut accepted = 0u64;
+    let mut rejected = 0u64;
+    for i in 0..300 {
+        match client.feedback(&format!("burst {i}"), "gpt-4", "claude-v2", 1.0) {
+            Ok(()) => accepted += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    server.state.force_publish();
+    let m = server.state.ingest_metrics();
+    assert_eq!(m.queued.get(), accepted);
+    // conservation: every accepted record is either applied or counted in
+    // exactly one post-acceptance drop bucket
+    assert_eq!(
+        m.folded_global.get()
+            + m.dropped_embed.get()
+            + m.dropped_invalid.get()
+            + m.dropped_lane_backlog.get(),
+        accepted
+    );
+    assert_eq!(
+        m.applied.get(),
+        m.folded_global.get(),
+        "applied diverged from globally folded"
+    );
+    assert_eq!(rejected, m.dropped_overflow.get());
+    // connection still healthy after the burst
+    client.ping().unwrap();
+    server.shutdown();
+}
+
 #[test]
 fn snapshot_op_persists_live_state() {
     let Some(dir) = artifacts_dir() else { return };
@@ -78,16 +348,11 @@ fn snapshot_op_persists_live_state() {
             .feedback(&format!("snapshot test prompt {i}"), "gpt-4", "mistral-7b-chat", 1.0)
             .unwrap();
     }
-    // wait for applier
-    for _ in 0..50 {
-        if ingested(&server) == 5 {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(50));
-    }
+    // the snapshot op flushes the ingest pipeline before persisting
     let (path, entries) = client.snapshot().unwrap();
     assert_eq!(path, snap_path.display().to_string());
     assert_eq!(entries, 5);
+    assert_eq!(ingested(&server), 5);
 
     // the snapshot restores to an equivalent router
     let restored = eagle::coordinator::state::load_from(&snap_path).unwrap();
@@ -136,24 +401,20 @@ fn route_feedback_stats_roundtrip() {
         .feedback("solve the equation 3x + 5 = 20", "gpt-4", "llama-2-13b-chat", 1.0)
         .unwrap();
 
-    // give the applier a moment, then check state moved
-    std::thread::sleep(std::time::Duration::from_millis(300));
-    {
-        let writer = server.state.writer.lock().unwrap();
-        assert_eq!(writer.router().feedback_len(), 1);
-        let g = registry.index_of("gpt-4").unwrap();
-        let l = registry.index_of("llama-2-13b-chat").unwrap();
-        let ratings = writer.router().global().ratings();
-        assert!(ratings[g] > ratings[l]);
-    }
-    // the stale-publish beat must make the record visible to readers
-    std::thread::sleep(std::time::Duration::from_millis(100));
-    assert_eq!(server.state.snapshots.load().history_len(), 1);
+    // barrier: the record is embedded on the applier, applied, published
+    server.state.force_publish();
+    assert_eq!(ingested(&server), 1);
+    let snap = server.state.snapshots.load();
+    assert_eq!(snap.history_len(), 1);
+    let g = registry.index_of("gpt-4").unwrap();
+    let l = registry.index_of("llama-2-13b-chat").unwrap();
+    assert!(snap.global_ratings()[g] > snap.global_ratings()[l]);
 
     let (report, requests, feedback) = client.stats().unwrap();
     assert!(requests >= 2, "requests = {requests}");
     assert_eq!(feedback, 1);
     assert!(report.contains("route_latency"));
+    assert!(report.contains("ingest:"));
 
     server.shutdown();
 }
@@ -170,16 +431,9 @@ fn feedback_moves_routing_decisions() {
         client.feedback(&text, "mistral-7b-chat", "gpt-4", 1.0).unwrap();
         client.feedback(&text, "mistral-7b-chat", "claude-v2", 1.0).unwrap();
     }
-    // wait for the applier to drain
-    for _ in 0..50 {
-        if ingested(&server) == 80 {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(50));
-    }
-    assert_eq!(ingested(&server), 80);
     // make everything ingested visible to the route path immediately
     server.state.force_publish();
+    assert_eq!(ingested(&server), 80);
     assert_eq!(server.state.snapshots.load().history_len(), 80);
 
     // now route a poetry query with a huge budget: trained preference wins
@@ -201,13 +455,8 @@ fn route_batch_matches_singles() {
             .feedback(&format!("math problem {i}"), "gpt-4", "claude-v2", 1.0)
             .unwrap();
     }
-    for _ in 0..50 {
-        if ingested(&server) == 10 {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(50));
-    }
     server.state.force_publish();
+    assert_eq!(ingested(&server), 10);
 
     let texts = [
         "solve the equation 3x + 5 = 20",

@@ -22,10 +22,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use eagle::config::{EagleParams, EpochParams, ShardParams};
+use eagle::config::{EagleParams, EpochParams, IvfPublishParams, ShardParams};
 use eagle::coordinator::router::{EagleRouter, Observation};
 use eagle::coordinator::sharded::{shard_of, ShardedRouter};
-use eagle::coordinator::snapshot::{RouterSnapshot, RouterWriter};
+use eagle::coordinator::snapshot::{RouterSnapshot, RouterWriter, SnapshotView};
 use eagle::elo::{Comparison, Outcome};
 use eagle::util::{l2_normalize, Rng};
 use eagle::vectordb::flat::FlatStore;
@@ -439,6 +439,156 @@ fn shard_storm_readers_progress_while_all_writers_publish() {
             reference.combined_scores(&q),
             "post-storm sharded scores diverged from single-shard replay"
         );
+    }
+}
+
+/// The IVF acceptance property: with `nprobe == n_cells` (exhaustive
+/// probe) an IVF-published snapshot scores **bit-identically** to the
+/// flat view — across random thresholds, cell counts, stream lengths,
+/// mid-stream checkpoints, and core rebuilds, single-shard and K-shard.
+#[test]
+fn ivf_published_snapshots_score_identically_to_flat_property() {
+    let mut cfg_rng = Rng::new(0x1FF);
+    for trial in 0..6 {
+        let n_cells = 2 + cfg_rng.below(14);
+        let threshold = 50 + cfg_rng.below(200);
+        let n = threshold + 150 + cfg_rng.below(300);
+        let publish_every = 5 + cfg_rng.below(40);
+        let k = [1usize, 3][trial % 2];
+        let stream = obs_stream(0x1F5 + trial as u64, n);
+        let mut sharded = ShardedRouter::new(
+            EagleParams::default(),
+            N_MODELS,
+            DIM,
+            EpochParams { publish_every, publish_interval_ms: 10_000 },
+            ShardParams { count: k, hash_seed: 0xEA61E },
+        );
+        sharded.set_ivf(IvfPublishParams {
+            publish_threshold: threshold,
+            n_cells,
+            nprobe: n_cells,
+        });
+        let handle = sharded.handle();
+        let mut rng = Rng::new(0xAB + trial as u64);
+        for (step, obs) in stream.iter().enumerate() {
+            sharded.observe(obs.clone());
+            let at_checkpoint = (step + 1) % 157 == 0 || step + 1 == n;
+            if !at_checkpoint {
+                continue;
+            }
+            sharded.publish_all();
+            let snap = handle.load();
+            let reference = reference_router(&stream, step + 1);
+            for _ in 0..3 {
+                let q = unit(&mut rng);
+                assert_eq!(
+                    snap.scores(&q),
+                    reference.combined_scores(&q),
+                    "ivf snapshot diverged: trial {trial} K={k} n_cells={n_cells} \
+                     threshold={threshold} step {step}"
+                );
+            }
+        }
+    }
+
+    // and the view kind actually flips past the threshold (single shard,
+    // where the lane corpus size is the stream length)
+    let stream = obs_stream(0x1F6, 200);
+    let mut writer = RouterWriter::new(
+        EagleParams::default(),
+        N_MODELS,
+        DIM,
+        EpochParams { publish_every: 1_000_000, publish_interval_ms: 1_000_000 },
+    );
+    writer.set_ivf(IvfPublishParams { publish_threshold: 100, n_cells: 8, nprobe: 8 });
+    for obs in &stream[..99] {
+        writer.apply(obs.clone());
+    }
+    writer.publish();
+    assert!(matches!(writer.ring().load().view(), SnapshotView::Flat(_)));
+    for obs in &stream[99..] {
+        writer.apply(obs.clone());
+    }
+    writer.publish();
+    assert!(matches!(writer.ring().load().view(), SnapshotView::Ivf(_)));
+}
+
+/// The compaction stress criterion: IVF core rebuilds happen on the
+/// ingest thread at full feedback rate while readers score continuously —
+/// readers must keep progressing, never observe a stalled acquisition,
+/// and the final state must equal an in-order flat replay.
+#[test]
+fn ivf_compaction_never_blocks_route_scoring() {
+    let _slot = storm_slot();
+    let stream = obs_stream(0x1F7, 12_000);
+    let mut writer = RouterWriter::new(
+        EagleParams::default(),
+        N_MODELS,
+        DIM,
+        EpochParams { publish_every: 64, publish_interval_ms: 5 },
+    );
+    // low threshold + small cells: many core rebuilds over the storm
+    writer.set_ivf(IvfPublishParams { publish_threshold: 500, n_cells: 16, nprobe: 16 });
+    let ring = writer.ring();
+    let done = Arc::new(AtomicBool::new(false));
+
+    let done_w = done.clone();
+    let reference_stream = stream.clone();
+    let writer_thread = std::thread::spawn(move || {
+        for obs in stream {
+            writer.observe(obs);
+        }
+        if writer.unpublished() > 0 {
+            writer.publish();
+        }
+        let (core, tail) = writer.ivf_core_tail_len();
+        done_w.store(true, Ordering::SeqCst);
+        (core, tail)
+    });
+
+    let readers: Vec<_> = (0..3)
+        .map(|r| {
+            let ring = ring.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(3000 + r as u64);
+                let mut iters = 0u64;
+                let mut max_load = Duration::ZERO;
+                let mut saw_ivf = false;
+                while !done.load(Ordering::SeqCst) || iters < 200 {
+                    let t0 = Instant::now();
+                    let snap = ring.load();
+                    max_load = max_load.max(t0.elapsed());
+                    saw_ivf |= matches!(snap.view(), SnapshotView::Ivf(_));
+                    let scores = snap.scores(&unit(&mut rng));
+                    assert!(scores.iter().all(|s| s.is_finite()));
+                    iters += 1;
+                }
+                (iters, max_load, saw_ivf)
+            })
+        })
+        .collect();
+
+    let (core, tail) = writer_thread.join().unwrap();
+    assert!(core >= 500, "core never rebuilt under storm (len {core})");
+    assert!(core + tail == 12_000, "core/tail skew: {core} + {tail}");
+    for r in readers {
+        let (iters, max_load, saw_ivf) = r.join().unwrap();
+        assert!(iters >= 20, "reader starved: only {iters} iterations");
+        assert!(saw_ivf, "reader never observed an IVF-published snapshot");
+        // a snapshot acquisition is a slot read; a full second means a
+        // core rebuild blocked the reader (the bug this test guards)
+        assert!(max_load < Duration::from_secs(1), "reader stalled {max_load:?}");
+    }
+
+    // quiescent equivalence after all the rebuilds
+    let snap = ring.load();
+    assert_eq!(snap.store_len(), 12_000);
+    let reference = reference_router(&reference_stream, 12_000);
+    let mut rng = Rng::new(0x1CE);
+    for _ in 0..4 {
+        let q = unit(&mut rng);
+        assert_eq!(snap.scores(&q), reference.combined_scores(&q));
     }
 }
 

@@ -1,0 +1,174 @@
+//! `bench-diff`: compare two `BENCH_*.json` artifacts and report
+//! regressions — the CI bench trend tool.
+//!
+//! ```bash
+//! cargo run --release --bin bench-diff -- baseline.json current.json \
+//!     [--threshold 0.15] [--strict]
+//! ```
+//!
+//! Direction is inferred from the metric name (`*_us`/`*latency*` are
+//! lower-is-better; `*qps`/`*rps`/`*ratio*`/`*speedup*` higher-is-better;
+//! anything else is reported as neutral). The exit code is 0 unless
+//! `--strict` is passed and at least one regression beyond the threshold
+//! was found, so the CI step stays non-blocking by default.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use eagle::bench::{fmt, print_table};
+use eagle::json;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+    Neutral,
+}
+
+fn direction_of(name: &str) -> Direction {
+    let lower = name.to_ascii_lowercase();
+    // latency-ish suffixes first: "route_latency.p99_us" must not match
+    // a higher-is-better token by accident
+    for token in ["_us", "_ms", "_ns", "latency", "secs", "_s."] {
+        if lower.contains(token) {
+            return Direction::LowerIsBetter;
+        }
+    }
+    for token in ["qps", "rps", "per_s", "ratio", "speedup", "recall", "auc", "throughput"] {
+        if lower.contains(token) {
+            return Direction::HigherIsBetter;
+        }
+    }
+    Direction::Neutral
+}
+
+/// metric name -> value, from one BENCH_*.json document.
+fn load_metrics(path: &str) -> Result<BTreeMap<String, f64>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+    let arr = doc
+        .get("metrics")
+        .as_arr()
+        .ok_or_else(|| format!("{path}: no metrics array"))?;
+    let mut out = BTreeMap::new();
+    for m in arr {
+        let name = m.get("name").as_str().ok_or_else(|| format!("{path}: metric without name"))?;
+        let value = m.get("value").as_f64().ok_or_else(|| format!("{path}: metric without value"))?;
+        out.insert(name.to_string(), value);
+    }
+    Ok(out)
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut threshold = 0.15f64;
+    let mut strict = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--threshold" => {
+                let Some(v) = argv.get(i + 1).and_then(|v| v.parse().ok()) else {
+                    eprintln!("--threshold needs a number");
+                    return ExitCode::from(2);
+                };
+                threshold = v;
+                i += 2;
+            }
+            "--strict" => {
+                strict = true;
+                i += 1;
+            }
+            other => {
+                paths.push(other.to_string());
+                i += 1;
+            }
+        }
+    }
+    if paths.len() != 2 {
+        eprintln!("usage: bench-diff BASELINE.json CURRENT.json [--threshold 0.15] [--strict]");
+        return ExitCode::from(2);
+    }
+
+    let (base, current) = match (load_metrics(&paths[0]), load_metrics(&paths[1])) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench-diff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut regressions = Vec::new();
+    let mut improvements = Vec::new();
+    let mut neutral_changes = Vec::new();
+    for (name, &base_v) in &base {
+        let Some(&cur_v) = current.get(name) else { continue };
+        if base_v == 0.0 {
+            continue;
+        }
+        let rel = (cur_v - base_v) / base_v.abs();
+        let row = vec![
+            name.clone(),
+            fmt(base_v, 2),
+            fmt(cur_v, 2),
+            format!("{:+.1}%", rel * 100.0),
+        ];
+        let worse = match direction_of(name) {
+            Direction::HigherIsBetter => -rel,
+            Direction::LowerIsBetter => rel,
+            Direction::Neutral => {
+                if rel.abs() > threshold {
+                    neutral_changes.push(row);
+                }
+                continue;
+            }
+        };
+        if worse > threshold {
+            regressions.push(row);
+        } else if worse < -threshold {
+            improvements.push(row);
+        }
+    }
+    let missing: Vec<&String> = base.keys().filter(|k| !current.contains_key(*k)).collect();
+    let added: Vec<&String> = current.keys().filter(|k| !base.contains_key(*k)).collect();
+
+    println!(
+        "bench-diff: {} vs {} ({} shared metrics, threshold {:.0}%)",
+        paths[0],
+        paths[1],
+        base.keys().filter(|k| current.contains_key(*k)).count(),
+        threshold * 100.0
+    );
+    let header = || {
+        vec!["metric".to_string(), "baseline".to_string(), "current".to_string(), "delta".to_string()]
+    };
+    if regressions.is_empty() {
+        println!("no regressions beyond the threshold");
+    } else {
+        let mut rows = vec![header()];
+        rows.extend(regressions.iter().cloned());
+        print_table(&format!("REGRESSIONS (> {:.0}% worse)", threshold * 100.0), &rows);
+    }
+    if !improvements.is_empty() {
+        let mut rows = vec![header()];
+        rows.extend(improvements.iter().cloned());
+        print_table("improvements", &rows);
+    }
+    if !neutral_changes.is_empty() {
+        let mut rows = vec![header()];
+        rows.extend(neutral_changes.iter().cloned());
+        print_table("changed (no known direction)", &rows);
+    }
+    if !missing.is_empty() {
+        println!("\nmetrics missing from current: {missing:?}");
+    }
+    if !added.is_empty() {
+        println!("new metrics (no baseline): {added:?}");
+    }
+
+    if strict && !regressions.is_empty() {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}
