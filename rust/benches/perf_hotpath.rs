@@ -210,6 +210,7 @@ fn main() {
     contention_scenario(snap_writer, &mut report);
     sharded_storm_sweep(&obs, &mut report);
     ingest_pipeline_sweep(&mut report);
+    persist_beat_sweep(&mut report);
     if eagle::bench::json_enabled() {
         let path = report.write().expect("write bench json");
         println!("\nwrote {}", path.display());
@@ -354,8 +355,7 @@ fn contention_scenario(mut writer: RouterWriter, report: &mut JsonReport) {
 /// published when the window closes. Target: K=4 >= 2x K=1.
 fn ingest_pipeline_sweep(report: &mut JsonReport) {
     const N_MODELS: usize = 11;
-    let shard_counts: &[usize] =
-        if eagle::bench::smoke() { &[1, 4] } else { &[1, 2, 4, 8] };
+    let shard_counts: &[usize] = if eagle::bench::smoke() { &[1, 4] } else { &[1, 2, 4, 8] };
     let records: usize = if eagle::bench::smoke() { 8_000 } else { 60_000 };
     const PRODUCERS: usize = 2;
 
@@ -450,6 +450,110 @@ fn ingest_pipeline_sweep(report: &mut JsonReport) {
     }
 }
 
+/// Bytes on disk under `dir`, recursively.
+fn dir_bytes(dir: &std::path::Path) -> u64 {
+    let mut total = 0;
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            total += dir_bytes(&path);
+        } else if let Ok(md) = std::fs::metadata(&path) {
+            total += md.len();
+        }
+    }
+    total
+}
+
+/// The ISSUE 4 acceptance sweep: persist-beat cost at growing corpus
+/// sizes. The legacy path rewrites the whole corpus as one JSON blob per
+/// beat (O(corpus)); the durable segment store appends + fsyncs the
+/// delta and swaps a small manifest (O(delta)). Both are measured on the
+/// same router state with the same fixed-size delta, so the emitted
+/// `persist.n{N}.*` metrics show the legacy bytes growing with N while
+/// the delta-beat bytes stay flat.
+fn persist_beat_sweep(report: &mut JsonReport) {
+    use eagle::coordinator::durable::{DurableOptions, DurableStore};
+    const N_MODELS: usize = 11;
+    const DELTA: usize = 256;
+    let sizes: &[usize] = if eagle::bench::smoke() { &[2_000, 8_000] } else { &[10_000, 40_000] };
+    let shards = ShardParams { count: 4, hash_seed: 0xEA61E };
+    let root = std::env::temp_dir().join(format!("eagle_persist_sweep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).expect("bench tmp dir");
+
+    println!("\n== persist beat cost (full JSON vs segment delta, {DELTA}-record beats) ==");
+    for &n in sizes {
+        let mut rng = Rng::new(0x9E57 + n as u64);
+        let mut router = ShardedRouter::new(
+            EagleParams::default(),
+            N_MODELS,
+            DIM,
+            EpochParams { publish_every: 64, publish_interval_ms: 5 },
+            shards.clone(),
+        );
+        for _ in 0..n {
+            let v = unit(&mut rng);
+            router.observe(Observation::single(v, rand_cmp(&mut rng)));
+        }
+        router.publish_all();
+
+        // (a) the legacy beat: serialize the world
+        let json_path = root.join(format!("full_{n}.json"));
+        let t0 = Instant::now();
+        router.handle().load().persist(&json_path).expect("full JSON persist");
+        let json_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let json_bytes = std::fs::metadata(&json_path).unwrap().len();
+
+        // (b) the durable beat: bootstrap the store from the same
+        // corpus, ingest a fixed delta, then fsync + checkpoint
+        let dir = root.join(format!("durable_{n}"));
+        let store = DurableStore::create_from_router(
+            &dir,
+            &router,
+            DurableOptions { seal_bytes: 16 << 20, fsync: true },
+        )
+        .expect("bootstrap durable store");
+        let mut writers: Vec<_> =
+            (0..shards.count).map(|s| store.lane_writer(s).expect("lane writer")).collect();
+        let deltas: Vec<(usize, u32, Observation)> = (0..DELTA)
+            .map(|_| {
+                let obs = Observation::single(unit(&mut rng), rand_cmp(&mut rng));
+                let shard = router.shard_for(&obs.embedding);
+                let gid = router.next_global_id();
+                router.observe(obs.clone());
+                (shard, gid, obs)
+            })
+            .collect();
+        let before = dir_bytes(&dir);
+        let t0 = Instant::now();
+        for (shard, gid, obs) in &deltas {
+            writers[*shard].append(*gid, obs).expect("delta append");
+        }
+        for w in &mut writers {
+            w.sync().expect("delta fsync");
+        }
+        store
+            .checkpoint_global(router.next_global_id(), router.global_elo().export_state())
+            .expect("checkpoint");
+        let delta_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let delta_bytes = dir_bytes(&dir).saturating_sub(before);
+
+        let ratio = json_bytes as f64 / delta_bytes.max(1) as f64;
+        println!(
+            "  n={n}: full-JSON {json_bytes} B / {json_ms:.1} ms per beat  |  \
+             segment delta {delta_bytes} B / {delta_ms:.2} ms per beat  \
+             (full/delta bytes = {ratio:.0}x)"
+        );
+        report.push(&format!("persist.n{n}.full_json_bytes"), json_bytes as f64);
+        report.push(&format!("persist.n{n}.full_json_ms"), json_ms);
+        report.push(&format!("persist.n{n}.delta_beat_bytes"), delta_bytes as f64);
+        report.push(&format!("persist.n{n}.delta_beat_ms"), delta_ms);
+        report.push(&format!("persist.n{n}.full_over_delta_bytes_ratio"), ratio);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 /// The sharded scatter-gather arm: batched route throughput through a
 /// `ShardedRouter` handle while a feeder ingests a >= 10k records/s storm
 /// through the same router, swept over shard counts. Scatter parallelism
@@ -458,8 +562,7 @@ fn ingest_pipeline_sweep(report: &mut JsonReport) {
 fn sharded_storm_sweep(obs: &[Observation], report: &mut JsonReport) {
     const BATCH: usize = 32;
     const TARGET_INGEST_PER_S: u64 = 20_000;
-    let shard_counts: &[usize] =
-        if eagle::bench::smoke() { &[1, 4] } else { &[1, 2, 4, 8] };
+    let shard_counts: &[usize] = if eagle::bench::smoke() { &[1, 4] } else { &[1, 2, 4, 8] };
     let window = if eagle::bench::smoke() {
         Duration::from_millis(150)
     } else {

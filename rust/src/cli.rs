@@ -149,8 +149,11 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         cfg.ivf.publish_threshold, cfg.ivf.n_cells, cfg.ivf.nprobe
     );
     println!(
-        "  persist: interval_ms={} path={}",
+        "  persist: interval_ms={} dir={} seal_bytes={} fsync={} path={}",
         cfg.persist.interval_ms,
+        if cfg.persist.dir.is_empty() { "<off>" } else { &cfg.persist.dir },
+        cfg.persist.seal_bytes,
+        cfg.persist.fsync,
         if cfg.persist.path.is_empty() { "<snapshot-out>" } else { &cfg.persist.path }
     );
     println!("  artifacts: {}", cfg.embed.artifacts_dir);
@@ -370,26 +373,56 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         }
     };
 
-    // periodic persistence target: [persist] path, falling back to the
-    // admin --snapshot-out path
+    // durable segment store ([persist] dir) wins over the legacy JSON
+    // path; the JSON path falls back to the admin --snapshot-out path
     let snapshot_out = args.get("snapshot-out").map(std::path::PathBuf::from);
+    let persist_dir = (!cfg.persist.dir.is_empty())
+        .then(|| std::path::PathBuf::from(&cfg.persist.dir));
     let persist_path = if cfg.persist.path.is_empty() {
         snapshot_out.clone()
     } else {
         Some(std::path::PathBuf::from(&cfg.persist.path))
     };
-    if cfg.persist.interval_ms > 0 {
-        match &persist_path {
+    match &persist_dir {
+        Some(dir) => {
+            if crate::coordinator::durable::DurableStore::exists(dir) {
+                println!(
+                    "durable store at {} exists: recovering (snapshot/cold-start state \
+                     is superseded by the recovered corpus)",
+                    dir.display()
+                );
+            } else {
+                println!(
+                    "durable store at {}: bootstrapping from the starting router \
+                     ({} records)",
+                    dir.display(),
+                    router.feedback_len()
+                );
+            }
+            println!(
+                "segment-granular persistence: seal_bytes={} fsync={} checkpoint beat={}",
+                cfg.persist.seal_bytes,
+                cfg.persist.fsync,
+                if cfg.persist.interval_ms == 0 {
+                    "flush/admin/shutdown only".to_string()
+                } else {
+                    format!("every {} ms", cfg.persist.interval_ms)
+                },
+            );
+        }
+        None if cfg.persist.interval_ms > 0 => match &persist_path {
             Some(p) => println!(
-                "periodic persistence every {} ms -> {}",
+                "periodic JSON persistence every {} ms -> {} (consider [persist] dir \
+                 for O(delta) beats)",
                 cfg.persist.interval_ms,
                 p.display()
             ),
             None => println!(
-                "warning: persist.interval_ms set but no persist.path / --snapshot-out; \
-                 periodic persistence disabled"
+                "warning: persist.interval_ms set but no persist.dir / persist.path / \
+                 --snapshot-out; periodic persistence disabled"
             ),
-        }
+        },
+        None => {}
     }
 
     let mut state = crate::server::ServerState::with_options(
@@ -403,11 +436,51 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
             ivf: cfg.ivf.clone(),
             persist_interval_ms: cfg.persist.interval_ms,
             persist_path,
+            persist_dir,
+            seal_bytes: cfg.persist.seal_bytes,
+            fsync: cfg.persist.fsync,
         },
     );
+    if let Some(store) = state.durable_store() {
+        println!(
+            "durable corpus ready: {} records ({} sealed segment file(s)) at {}",
+            state.snapshots.load().store_len(),
+            store.segment_counts().iter().sum::<usize>(),
+            store.dir().display()
+        );
+        // the on-disk partition is physical: a recovered store keeps its
+        // own topology and params, whatever the config now says
+        let meta = store.meta();
+        if meta.shards != cfg.shards {
+            println!(
+                "warning: [shards] config (count={} seed={:#x}) differs from the durable \
+                 store's (count={} seed={:#x}); the store's topology is in effect — \
+                 re-shard by bootstrapping a fresh persist.dir from a snapshot",
+                cfg.shards.count,
+                cfg.shards.hash_seed,
+                meta.shards.count,
+                meta.shards.hash_seed,
+            );
+        }
+        if meta.params != cfg.eagle {
+            println!(
+                "warning: [eagle] config differs from the durable store's params \
+                 (P={} N={} K={}); the store's params are in effect",
+                meta.params.p, meta.params.n_neighbors, meta.params.k_factor,
+            );
+        }
+    }
     if let Some(out) = snapshot_out {
-        println!("admin snapshot op enabled -> {}", out.display());
-        state = state.with_snapshot_path(out);
+        if state.durable_store().is_some() {
+            println!(
+                "note: --snapshot-out {} is ignored while [persist] dir is set — the \
+                 admin snapshot op checkpoints the durable store instead",
+                out.display()
+            );
+        } else {
+            println!("admin snapshot op enabled -> {}", out.display());
+            state = state.with_snapshot_path(out);
+        }
     }
     let state = Arc::new(state);
     let server = crate::server::Server::start(state, &addr, workers)?;

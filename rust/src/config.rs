@@ -173,24 +173,48 @@ impl Default for IvfPublishParams {
     }
 }
 
-/// Background persistence cadence for the sharded ingest pipeline
-/// ([`crate::coordinator::ingest`]): every `interval_ms`, the dispatcher
-/// beat publishes a consistent cut (every lane + the global table) and
-/// persists it to `path` via
-/// [`crate::coordinator::state::write_atomic`]. `interval_ms = 0`
-/// disables periodic persistence (the admin `snapshot` op still works).
+/// Background persistence for the sharded ingest pipeline
+/// ([`crate::coordinator::ingest`]), in one of two modes:
+///
+/// - **Durable segment store** (`dir` non-empty, the production mode):
+///   every ingested record is appended to its shard's delta log under
+///   `dir`, lanes seal immutable segment files past `seal_bytes`, and
+///   every `interval_ms` the beat fsyncs the logs + advances the
+///   manifest's global-ELO checkpoint — O(delta) per beat, never
+///   O(corpus). `eagle serve` recovers from `dir` on restart
+///   ([`crate::coordinator::durable`]).
+/// - **Legacy JSON** (`dir` empty): every `interval_ms` the dispatcher
+///   beat publishes a consistent cut and rewrites the full corpus to
+///   `path` via [`crate::coordinator::state::write_atomic`].
+///
+/// `interval_ms = 0` disables the periodic beat (a durable store still
+/// appends + seals inline and checkpoints on the admin `snapshot` op and
+/// clean shutdown; the legacy mode persists on the admin op only).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PersistParams {
     /// Persist at most this often, driven by the applier beat (0 = off).
     pub interval_ms: u64,
-    /// Snapshot file path; empty = fall back to the server's
-    /// `--snapshot-out` path.
+    /// Legacy JSON snapshot file path; empty = fall back to the server's
+    /// `--snapshot-out` path. Ignored when `dir` is set.
     pub path: String,
+    /// Durable segment-store directory (empty = legacy JSON mode).
+    pub dir: String,
+    /// Unsealed delta-log bytes per shard that seal into a segment file.
+    pub seal_bytes: usize,
+    /// fsync delta logs on the persist beat and segments/manifest at
+    /// seal time (disable only for tests/benches).
+    pub fsync: bool,
 }
 
 impl Default for PersistParams {
     fn default() -> Self {
-        PersistParams { interval_ms: 0, path: String::new() }
+        PersistParams {
+            interval_ms: 0,
+            path: String::new(),
+            dir: String::new(),
+            seal_bytes: 4 << 20,
+            fsync: true,
+        }
     }
 }
 
@@ -309,6 +333,13 @@ impl Config {
         fn u64_of(v: &str) -> Result<u64, ConfigError> {
             v.parse().map_err(|_| ConfigError(format!("bad integer '{v}'")))
         }
+        fn bool_of(v: &str) -> Result<bool, ConfigError> {
+            match v {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                _ => Err(ConfigError(format!("bad bool '{v}'"))),
+            }
+        }
         match path {
             "eagle.p" => self.eagle.p = f64_of(value)?,
             "eagle.n_neighbors" => self.eagle.n_neighbors = usize_of(value)?,
@@ -334,6 +365,9 @@ impl Config {
             "ivf.nprobe" => self.ivf.nprobe = usize_of(value)?,
             "persist.interval_ms" => self.persist.interval_ms = u64_of(value)?,
             "persist.path" => self.persist.path = value.to_string(),
+            "persist.dir" => self.persist.dir = value.to_string(),
+            "persist.seal_bytes" => self.persist.seal_bytes = usize_of(value)?,
+            "persist.fsync" => self.persist.fsync = bool_of(value)?,
             "data.seed" => self.data.seed = u64_of(value)?,
             "data.per_dataset" => self.data.per_dataset = usize_of(value)?,
             "data.train_fraction" => self.data.train_fraction = f64_of(value)?,
@@ -384,6 +418,9 @@ impl Config {
                     self.ivf.nprobe, self.ivf.n_cells
                 )));
             }
+        }
+        if self.persist.seal_bytes == 0 {
+            return Err(ConfigError("persist.seal_bytes must be > 0".into()));
         }
         Ok(())
     }
@@ -486,6 +523,9 @@ workers = 8
                 ("ivf.nprobe".into(), "32".into()),
                 ("persist.interval_ms".into(), "250".into()),
                 ("persist.path".into(), "/tmp/eagle.json".into()),
+                ("persist.dir".into(), "/tmp/eagle-durable".into()),
+                ("persist.seal_bytes".into(), "65536".into()),
+                ("persist.fsync".into(), "false".into()),
             ],
         )
         .unwrap();
@@ -494,6 +534,18 @@ workers = 8
         assert_eq!(c.ivf.nprobe, 32);
         assert_eq!(c.persist.interval_ms, 250);
         assert_eq!(c.persist.path, "/tmp/eagle.json");
+        assert_eq!(c.persist.dir, "/tmp/eagle-durable");
+        assert_eq!(c.persist.seal_bytes, 65536);
+        assert!(!c.persist.fsync);
+        // durable-store knobs: defaults + validation
+        let d = PersistParams::default();
+        assert!(d.dir.is_empty());
+        assert!(d.fsync);
+        assert!(d.seal_bytes >= 1 << 20);
+        let mut bad = Config::default();
+        bad.persist.seal_bytes = 0;
+        assert!(bad.validate().is_err());
+        assert!(Config::default().set("persist.fsync", "maybe").is_err());
         // defaults: IVF engages only at production-scale corpora, no
         // periodic persistence
         assert_eq!(Config::default().persist, PersistParams::default());

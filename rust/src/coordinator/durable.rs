@@ -1,0 +1,1301 @@
+//! Segment-granular durable persistence with crash recovery: the
+//! log-structured on-disk counterpart of the in-memory
+//! [`crate::vectordb::view::SegmentStore`].
+//!
+//! The legacy `[persist]` path serialized the *entire* corpus as one JSON
+//! blob every beat — an O(corpus) rewrite that erases Eagle's incremental
+//! -update win at production scale. This store makes durability cost
+//! proportional to what changed:
+//!
+//! ```text
+//! <dir>/
+//!   MANIFEST.json            atomically swapped (tmp + rename): the live
+//!                            segment set + delta log per shard, plus the
+//!                            global-ELO checkpoint
+//!   shard-0/
+//!     seg-00000001.seg       immutable sealed segments — written exactly
+//!     seg-00000003.seg       once (at seal time), never rewritten
+//!     delta-00000004.log     append-only delta log for the active tail
+//!   shard-1/ ...
+//! ```
+//!
+//! - Every ingested record is **appended** to its shard's delta log as one
+//!   checksummed frame `(global id, comparisons, embedding)`; the persist
+//!   beat is "flush + fsync the logs", O(records since last beat).
+//! - When a shard's unsealed tail reaches `seal_bytes`, the lane **seals**:
+//!   the tail becomes an immutable segment file (written once), a fresh
+//!   empty log is created, and the manifest swaps atomically to reference
+//!   the new segment + log. Shard lanes seal independently — one shard's
+//!   seal never rewrites another shard's data.
+//! - The **global-ELO checkpoint** in the manifest stores the *full*
+//!   resumable table state ([`crate::elo::GlobalEloState`]) plus the
+//!   number of records folded into it (`folded_gid`). It is only advanced
+//!   after a flush barrier proves every folded record is durable, so
+//!   recovery can never double-fold or fold lost records.
+//!
+//! ## Recovery
+//!
+//! [`DurableStore::open`] reads the manifest, loads every sealed segment
+//! (hard error on corruption — segments are written once and fsynced),
+//! replays the delta logs (a torn final write — short frame or checksum
+//! mismatch — truncates the log to the last full record), and rebuilds a
+//! [`ShardedRouter`] bit-identical to the pre-restart writer state: the
+//! stores and id maps come straight from the records, and the global table
+//! resumes from the checkpoint then refolds every durable record with
+//! `gid >= folded_gid` in global arrival order — the exact fold order the
+//! dispatcher used originally. `rust/tests/durable_recovery.rs`
+//! property-tests `recover(persist(state)) ≡ state` for K ∈ {1, 4},
+//! including after a torn tail write.
+//!
+//! ## Crash windows at seal time
+//!
+//! A seal performs: (1) write segment (tmp + rename + fsync), (2) create
+//! the fresh log, (3) swap the manifest. A crash before (3) leaves the old
+//! manifest referencing the old log, which still holds every record — the
+//! orphan segment/log files are swept on the next open. A crash after (3)
+//! is the committed state. The manifest swap is a single atomic rename,
+//! so recovery always sees one consistent cut.
+
+use std::collections::HashSet;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{EagleParams, EpochParams, ShardParams};
+use crate::elo::{Comparison, GlobalElo, GlobalEloState, Outcome};
+use crate::json::{self, Value};
+use crate::vectordb::view::SegmentStore;
+use crate::vectordb::{Feedback, ReadIndex, VectorIndex};
+
+use super::router::{EagleRouter, Observation};
+use super::sharded::{IdBlocks, ShardLane, ShardedRouter};
+use super::snapshot::RouterWriter;
+
+const MANIFEST: &str = "MANIFEST.json";
+const LOCK: &str = "LOCK";
+const MANIFEST_VERSION: f64 = 1.0;
+/// Segment file header: magic ("EAGS"), format version, dim, record count.
+const SEG_MAGIC: u32 = 0x4541_4753;
+const SEG_VERSION: u32 = 1;
+const SEG_HEADER_BYTES: usize = 16;
+
+/// Tuning for a [`DurableStore`].
+#[derive(Debug, Clone)]
+pub struct DurableOptions {
+    /// Unsealed delta-log bytes per shard that trigger sealing a segment.
+    pub seal_bytes: usize,
+    /// fsync logs on the persist beat and segments/manifest at seal.
+    /// Disabling trades crash-durability of the last beat for speed
+    /// (tests, benches); the format stays identical.
+    pub fsync: bool,
+}
+
+impl Default for DurableOptions {
+    fn default() -> Self {
+        DurableOptions { seal_bytes: 4 << 20, fsync: true }
+    }
+}
+
+/// Immutable identity of a store: everything recovery needs to rebuild
+/// the router shell before replaying records.
+#[derive(Debug, Clone)]
+pub struct StoreMeta {
+    pub params: EagleParams,
+    pub n_models: usize,
+    pub dim: usize,
+    pub shards: ShardParams,
+}
+
+/// One sealed segment as named by the manifest.
+#[derive(Debug, Clone)]
+struct SegmentEntry {
+    file: String,
+    records: usize,
+}
+
+/// One shard lane's durable state as named by the manifest.
+#[derive(Debug, Clone)]
+struct LaneManifest {
+    segments: Vec<SegmentEntry>,
+    /// Relative path of the live delta log.
+    log: String,
+    /// Monotone file-id allocator for this lane's segment/log names.
+    next_file_id: u64,
+}
+
+/// The manifest's global-ELO checkpoint: full table state + the number of
+/// records (== next gid at capture time) folded into it.
+#[derive(Debug, Clone)]
+struct GlobalCheckpoint {
+    folded_gid: u32,
+    state: GlobalEloState,
+}
+
+#[derive(Debug, Clone)]
+struct ManifestState {
+    global: GlobalCheckpoint,
+    lanes: Vec<LaneManifest>,
+}
+
+/// The shared durable store: owns the directory and the manifest. Lane
+/// writers ([`DurableStore::lane_writer`]) append independently; manifest
+/// swaps (seals, checkpoints) serialize on one mutex — both are rare
+/// relative to appends.
+pub struct DurableStore {
+    dir: PathBuf,
+    meta: StoreMeta,
+    opts: DurableOptions,
+    manifest: Mutex<ManifestState>,
+}
+
+/// Everything recovered from disk by [`DurableStore::open`], ready to be
+/// turned back into a live [`ShardedRouter`].
+pub struct Recovery {
+    pub meta: StoreMeta,
+    /// Records folded into the checkpointed global table.
+    pub folded_gid: u32,
+    /// The checkpointed global-ELO state (resume point for refolding).
+    pub global: GlobalEloState,
+    pub lanes: Vec<RecoveredLane>,
+    /// Bytes dropped from delta-log tails because the final write was
+    /// torn (0 on a clean shutdown).
+    pub torn_bytes: u64,
+}
+
+/// One shard's recovered records, in shard-local (ascending gid) order.
+pub struct RecoveredLane {
+    /// One entry per sealed segment file, in manifest order.
+    pub segments: Vec<Vec<(u32, Observation)>>,
+    /// The delta-log tail (records not yet sealed).
+    pub tail: Vec<(u32, Observation)>,
+}
+
+impl DurableStore {
+    /// True when `dir` holds a durable store (manifest present).
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(MANIFEST).is_file()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    pub fn options(&self) -> &DurableOptions {
+        &self.opts
+    }
+
+    /// Sealed-segment count per shard (diagnostics / tests).
+    pub fn segment_counts(&self) -> Vec<usize> {
+        let m = self.manifest.lock().unwrap();
+        m.lanes.iter().map(|l| l.segments.len()).collect()
+    }
+
+    /// Create an empty store at `dir` (fails if a manifest already
+    /// exists — open that instead).
+    pub fn create(dir: &Path, meta: StoreMeta, opts: DurableOptions) -> Result<Arc<DurableStore>> {
+        Self::create_with(dir, meta, opts, |_| Ok(Vec::new()), GlobalCheckpoint::empty)
+    }
+
+    /// Create a store at `dir` seeded with an existing router's full
+    /// corpus (migration from the legacy single-JSON snapshot, or any
+    /// pre-fit history): each non-empty shard lands as one initial sealed
+    /// segment, and the global checkpoint captures the router's table.
+    pub fn create_from_router(
+        dir: &Path,
+        router: &ShardedRouter,
+        opts: DurableOptions,
+    ) -> Result<Arc<DurableStore>> {
+        let meta = StoreMeta {
+            params: router.params().clone(),
+            n_models: router.n_models(),
+            dim: router.dim(),
+            shards: router.shard_params().clone(),
+        };
+        let lanes = router.lanes_ref();
+        Self::create_with(
+            dir,
+            meta,
+            opts,
+            |shard| {
+                let lane = &lanes[shard];
+                let store = lane.writer().router().store();
+                let ids = lane.ids_ref();
+                if store.is_empty() {
+                    return Ok(Vec::new());
+                }
+                let mut frames = Vec::new();
+                for local in 0..store.len() {
+                    encode_frame(
+                        &mut frames,
+                        ids.get(local),
+                        &store.feedback(local as u32).comparisons,
+                        store.vector(local as u32),
+                    );
+                }
+                Ok(vec![(frames, store.len())])
+            },
+            || GlobalCheckpoint {
+                folded_gid: router.next_global_id(),
+                state: router.global_elo().export_state(),
+            },
+        )
+    }
+
+    /// Shared creation path: lay out shard dirs, write any bootstrap
+    /// segments, create empty logs, swap in the first manifest.
+    fn create_with<F, G>(
+        dir: &Path,
+        meta: StoreMeta,
+        opts: DurableOptions,
+        mut bootstrap: F,
+        checkpoint: G,
+    ) -> Result<Arc<DurableStore>>
+    where
+        F: FnMut(usize) -> Result<Vec<(Vec<u8>, usize)>>,
+        G: FnOnce() -> GlobalCheckpoint,
+    {
+        if Self::exists(dir) {
+            bail!("durable store already exists at {}", dir.display());
+        }
+        fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        acquire_lock(dir)?;
+        let mut lanes = Vec::with_capacity(meta.shards.count);
+        for shard in 0..meta.shards.count {
+            let shard_dir = dir.join(format!("shard-{shard}"));
+            fs::create_dir_all(&shard_dir)
+                .with_context(|| format!("creating {}", shard_dir.display()))?;
+            let mut next_file_id = 1u64;
+            let mut segments = Vec::new();
+            for (frames, records) in bootstrap(shard)? {
+                let file = format!("shard-{shard}/seg-{next_file_id:08}.seg");
+                write_segment(&dir.join(&file), meta.dim, records, &frames, opts.fsync)?;
+                segments.push(SegmentEntry { file, records });
+                next_file_id += 1;
+            }
+            let log = format!("shard-{shard}/delta-{next_file_id:08}.log");
+            File::create(dir.join(&log)).with_context(|| format!("creating {log}"))?;
+            if opts.fsync {
+                fsync_dir(&shard_dir);
+            }
+            lanes.push(LaneManifest { segments, log, next_file_id: next_file_id + 1 });
+        }
+        let state = ManifestState { global: checkpoint(), lanes };
+        let store = DurableStore {
+            dir: dir.to_path_buf(),
+            meta,
+            opts,
+            manifest: Mutex::new(state),
+        };
+        store.write_manifest(&store.manifest.lock().unwrap())?;
+        Ok(Arc::new(store))
+    }
+
+    /// Open an existing store and recover everything durable: manifest +
+    /// sealed segments + delta-log replay (truncating a torn final
+    /// write). Orphan files from a crashed seal are swept.
+    pub fn open(dir: &Path, opts: DurableOptions) -> Result<(Arc<DurableStore>, Recovery)> {
+        let path = dir.join(MANIFEST);
+        let text =
+            fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        // take the advisory lock before any mutation (log truncation,
+        // orphan sweep)
+        acquire_lock(dir)?;
+        let (meta, state) = parse_manifest(&text)?;
+        let mut referenced: HashSet<PathBuf> = HashSet::new();
+        let mut lanes = Vec::with_capacity(state.lanes.len());
+        let mut torn_bytes = 0u64;
+        for (shard, lane) in state.lanes.iter().enumerate() {
+            let mut segments = Vec::with_capacity(lane.segments.len());
+            for seg in &lane.segments {
+                let seg_path = dir.join(&seg.file);
+                referenced.insert(seg_path.clone());
+                segments.push(
+                    read_segment(&seg_path, meta.dim, meta.n_models, seg.records)
+                        .with_context(|| format!("segment {}", seg.file))?,
+                );
+            }
+            let log_path = dir.join(&lane.log);
+            referenced.insert(log_path.clone());
+            let replay = recover_log(&log_path, meta.dim, meta.n_models)
+                .with_context(|| format!("delta log {}", lane.log))?;
+            let tail = replay.records;
+            torn_bytes += replay.lost;
+            let mut last_gid: Option<u32> = None;
+            for (gid, _) in segments.iter().flatten().chain(tail.iter()) {
+                if last_gid.is_some_and(|prev| *gid <= prev) {
+                    bail!("shard {shard}: non-monotone gid {gid} in durable records");
+                }
+                last_gid = Some(*gid);
+            }
+            lanes.push(RecoveredLane { segments, tail });
+        }
+        sweep_orphans(dir, state.lanes.len(), &referenced);
+        let recovery = Recovery {
+            meta: meta.clone(),
+            folded_gid: state.global.folded_gid,
+            global: state.global.state.clone(),
+            lanes,
+            torn_bytes,
+        };
+        let store = Arc::new(DurableStore {
+            dir: dir.to_path_buf(),
+            meta,
+            opts,
+            manifest: Mutex::new(state),
+        });
+        Ok((store, recovery))
+    }
+
+    /// One appending writer for a shard lane (the lane's applier thread
+    /// owns it). Reloads the live log's validated tail so sealing keeps
+    /// working across restarts.
+    pub fn lane_writer(self: &Arc<Self>, shard: usize) -> Result<DurableLaneWriter> {
+        let log_rel = {
+            let m = self.manifest.lock().unwrap();
+            m.lanes
+                .get(shard)
+                .ok_or_else(|| anyhow!("shard {shard} out of range"))?
+                .log
+                .clone()
+        };
+        let path = self.dir.join(&log_rel);
+        let replay = recover_log(&path, self.meta.dim, self.meta.n_models)
+            .with_context(|| format!("delta log {log_rel}"))?;
+        let log = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(DurableLaneWriter {
+            store: self.clone(),
+            shard,
+            log: BufWriter::new(log),
+            unsealed: replay.bytes,
+            unsealed_records: replay.records.len(),
+            appended_bytes: 0,
+        })
+    }
+
+    /// Advance the global-ELO checkpoint. Call only after every record
+    /// with `gid < folded_gid` is durably synced (the ingest pipeline's
+    /// persist beat runs a flush barrier through every lane first).
+    pub fn checkpoint_global(&self, folded_gid: u32, state: GlobalEloState) -> Result<()> {
+        let mut m = self.manifest.lock().unwrap();
+        let mut staged = m.clone();
+        staged.global = GlobalCheckpoint { folded_gid, state };
+        self.write_manifest(&staged)?;
+        *m = staged;
+        Ok(())
+    }
+
+    /// Serialize + atomically swap the manifest file.
+    fn write_manifest(&self, state: &ManifestState) -> Result<()> {
+        let text = manifest_json(&self.meta, state);
+        write_atomic(&self.dir.join(MANIFEST), text.as_bytes(), self.opts.fsync)
+    }
+}
+
+impl Drop for DurableStore {
+    /// Release the advisory lock if this process still owns it (a
+    /// SIGKILLed owner leaves the file behind; [`acquire_lock`] treats a
+    /// dead owner pid as released).
+    fn drop(&mut self) {
+        let path = self.dir.join(LOCK);
+        if let Ok(text) = fs::read_to_string(&path) {
+            if text.trim().parse::<u32>().ok() == Some(std::process::id()) {
+                let _ = fs::remove_file(&path);
+            }
+        }
+    }
+}
+
+/// The per-shard appending side: owned by one applier thread. Appends are
+/// buffered; [`DurableLaneWriter::sync`] (the persist beat / flush
+/// barrier) flushes + fsyncs; crossing `seal_bytes` seals the tail into
+/// an immutable segment and swaps the manifest.
+pub struct DurableLaneWriter {
+    store: Arc<DurableStore>,
+    shard: usize,
+    log: BufWriter<File>,
+    /// Encoded frames not yet sealed into a segment (mirrors the live
+    /// log's contents past the last seal; bounded by `seal_bytes`).
+    unsealed: Vec<u8>,
+    unsealed_records: usize,
+    /// Delta bytes appended by this writer since construction
+    /// (diagnostics; the persist-cost bench reads it).
+    appended_bytes: u64,
+}
+
+impl DurableLaneWriter {
+    /// Append one record to the delta log (buffered; durable after the
+    /// next [`DurableLaneWriter::sync`] or seal). Seals when the unsealed
+    /// tail crosses the seal threshold.
+    pub fn append(&mut self, gid: u32, obs: &Observation) -> Result<()> {
+        let start = self.unsealed.len();
+        encode_frame(&mut self.unsealed, gid, &obs.comparisons, &obs.embedding);
+        self.log
+            .write_all(&self.unsealed[start..])
+            .context("appending to delta log")?;
+        self.appended_bytes += (self.unsealed.len() - start) as u64;
+        self.unsealed_records += 1;
+        if self.unsealed.len() >= self.store.opts.seal_bytes {
+            self.seal()?;
+        }
+        Ok(())
+    }
+
+    /// Flush + fsync the delta log: everything appended so far is durable
+    /// when this returns. This is the whole cost of a persist beat —
+    /// O(bytes since the last sync), never O(corpus).
+    pub fn sync(&mut self) -> Result<()> {
+        self.log.flush().context("flushing delta log")?;
+        if self.store.opts.fsync {
+            self.log.get_ref().sync_data().context("fsync delta log")?;
+        }
+        Ok(())
+    }
+
+    pub fn appended_bytes(&self) -> u64 {
+        self.appended_bytes
+    }
+
+    pub fn unsealed_records(&self) -> usize {
+        self.unsealed_records
+    }
+
+    /// Seal the unsealed tail into an immutable segment file (written
+    /// exactly once), start a fresh delta log, and atomically swap the
+    /// manifest to the new live set. See the module docs for the crash
+    /// windows.
+    pub fn seal(&mut self) -> Result<()> {
+        if self.unsealed_records == 0 {
+            return Ok(());
+        }
+        self.log.flush().context("flushing delta log before seal")?;
+        let store = self.store.clone();
+        let mut m = store.manifest.lock().unwrap();
+        let mut staged = m.clone();
+        let lane = &mut staged.lanes[self.shard];
+        let seg_rel = format!("shard-{}/seg-{:08}.seg", self.shard, lane.next_file_id);
+        let log_rel = format!("shard-{}/delta-{:08}.log", self.shard, lane.next_file_id + 1);
+        lane.next_file_id += 2;
+        write_segment(
+            &store.dir.join(&seg_rel),
+            store.meta.dim,
+            self.unsealed_records,
+            &self.unsealed,
+            store.opts.fsync,
+        )?;
+        let new_log = File::create(store.dir.join(&log_rel))
+            .with_context(|| format!("creating {log_rel}"))?;
+        if store.opts.fsync {
+            fsync_dir(&store.dir.join(format!("shard-{}", self.shard)));
+        }
+        lane.segments.push(SegmentEntry { file: seg_rel, records: self.unsealed_records });
+        let old_log_rel = std::mem::replace(&mut lane.log, log_rel);
+        store.write_manifest(&staged)?;
+        *m = staged;
+        drop(m);
+        // committed: retire the writer onto the fresh log; the old log is
+        // garbage (its records live in the sealed segment now)
+        self.log = BufWriter::new(new_log);
+        self.unsealed.clear();
+        self.unsealed_records = 0;
+        let _ = fs::remove_file(store.dir.join(&old_log_rel));
+        Ok(())
+    }
+}
+
+impl GlobalCheckpoint {
+    fn empty() -> GlobalCheckpoint {
+        GlobalCheckpoint {
+            folded_gid: 0,
+            state: GlobalEloState {
+                last_iterate: Vec::new(),
+                rating_sum: Vec::new(),
+                samples: 0,
+                history_len: 0,
+            },
+        }
+    }
+}
+
+impl Recovery {
+    /// Durable records recovered across all shards.
+    pub fn total_records(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.tail.len() + l.segments.iter().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+
+    /// Rebuild the live [`ShardedRouter`]: per-shard stores + id maps
+    /// straight from the records (each segment file lands as one sealed
+    /// in-memory block), and the global table resumed from the checkpoint
+    /// with every durable record `gid >= folded_gid` refolded in global
+    /// arrival order — bit-identical to the pre-restart writer.
+    pub fn into_router(self, cadence: EpochParams) -> Result<ShardedRouter> {
+        let meta = self.meta;
+        if self.lanes.len() != meta.shards.count {
+            bail!(
+                "manifest lane count {} != shard count {}",
+                self.lanes.len(),
+                meta.shards.count
+            );
+        }
+        let mut next_id = self.folded_gid;
+        let mut replay: Vec<(u32, Vec<Comparison>)> = Vec::new();
+        let mut lanes = Vec::with_capacity(self.lanes.len());
+        for lane in &self.lanes {
+            let mut store = SegmentStore::new(meta.dim);
+            let mut ids = IdBlocks::new();
+            for block in &lane.segments {
+                store.push_sealed_block(block.iter().map(|(_, obs)| {
+                    (
+                        obs.embedding.as_slice(),
+                        Feedback { comparisons: obs.comparisons.clone() },
+                    )
+                }));
+                for (gid, _) in block {
+                    ids.push(*gid);
+                }
+            }
+            for (gid, obs) in &lane.tail {
+                store.add(
+                    &obs.embedding,
+                    Feedback { comparisons: obs.comparisons.clone() },
+                );
+                ids.push(*gid);
+            }
+            for (gid, obs) in lane.segments.iter().flatten().chain(lane.tail.iter()) {
+                if *gid >= self.folded_gid {
+                    replay.push((*gid, obs.comparisons.clone()));
+                }
+                next_id = next_id.max(gid + 1);
+            }
+            lanes.push(ShardLane::with_ids(
+                RouterWriter::from_segment_router(
+                    EagleRouter::new(meta.params.clone(), meta.n_models, store),
+                    cadence.clone(),
+                ),
+                ids,
+            ));
+        }
+        replay.sort_by_key(|(gid, _)| *gid);
+        let mut elo = if self.global.last_iterate.is_empty() {
+            GlobalElo::new(meta.n_models, meta.params.k_factor)
+        } else {
+            GlobalElo::from_state(self.global, meta.params.k_factor)
+        };
+        for (_, cmps) in &replay {
+            elo.apply_new(cmps);
+        }
+        Ok(ShardedRouter::from_parts(
+            meta.params,
+            meta.n_models,
+            meta.dim,
+            meta.shards,
+            elo,
+            cadence,
+            lanes,
+            next_id,
+        ))
+    }
+}
+
+// ---- record framing ----------------------------------------------------
+//
+// One frame: [payload_len: u32 LE][checksum: u32 LE][payload], where
+// payload = gid u32 | n_cmps u32 | n_cmps x (a u32, b u32, outcome u8) |
+// dim x f32 bit patterns, all LE. The checksum covers the payload; a
+// short or checksum-failing frame at a log's end is a torn write.
+
+/// FNV-1a 64 folded to 32 bits — torn-write detection, not cryptography.
+fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    (h ^ (h >> 32)) as u32
+}
+
+fn outcome_byte(o: Outcome) -> u8 {
+    match o {
+        Outcome::WinA => 0,
+        Outcome::WinB => 1,
+        Outcome::Draw => 2,
+    }
+}
+
+fn outcome_of(b: u8) -> Option<Outcome> {
+    match b {
+        0 => Some(Outcome::WinA),
+        1 => Some(Outcome::WinB),
+        2 => Some(Outcome::Draw),
+        _ => None,
+    }
+}
+
+/// Append one encoded frame to `out`.
+fn encode_frame(out: &mut Vec<u8>, gid: u32, comparisons: &[Comparison], embedding: &[f32]) {
+    let payload_len = 8 + comparisons.len() * 9 + embedding.len() * 4;
+    out.reserve(8 + payload_len);
+    let start = out.len();
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.extend_from_slice(&[0u8; 4]); // checksum backpatched below
+    out.extend_from_slice(&gid.to_le_bytes());
+    out.extend_from_slice(&(comparisons.len() as u32).to_le_bytes());
+    for c in comparisons {
+        out.extend_from_slice(&(c.a as u32).to_le_bytes());
+        out.extend_from_slice(&(c.b as u32).to_le_bytes());
+        out.push(outcome_byte(c.outcome));
+    }
+    for &x in embedding {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    let crc = checksum(&out[start + 8..]);
+    out[start + 4..start + 8].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// One scan step over framed bytes.
+enum Frame {
+    Record { next: usize, gid: u32, obs: Observation },
+    /// Ran off the end mid-frame (torn final write).
+    Truncated,
+    /// Structurally invalid or checksum-failing frame.
+    Corrupt,
+}
+
+fn u32_at(bytes: &[u8], pos: usize) -> u32 {
+    u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap())
+}
+
+/// Decode the frame starting at `pos`.
+fn decode_frame(bytes: &[u8], pos: usize, dim: usize, n_models: usize) -> Frame {
+    if bytes.len() - pos < 8 {
+        return Frame::Truncated;
+    }
+    let payload_len = u32_at(bytes, pos) as usize;
+    let emb_bytes = dim * 4;
+    if payload_len < 8 + emb_bytes || (payload_len - 8 - emb_bytes) % 9 != 0 {
+        // implausible frame length
+        return Frame::Corrupt;
+    }
+    if bytes.len() - pos - 8 < payload_len {
+        return Frame::Truncated;
+    }
+    let crc = u32_at(bytes, pos + 4);
+    let payload = &bytes[pos + 8..pos + 8 + payload_len];
+    if checksum(payload) != crc {
+        // checksum mismatch
+        return Frame::Corrupt;
+    }
+    let gid = u32_at(payload, 0);
+    let n_cmps = u32_at(payload, 4) as usize;
+    if 8 + n_cmps * 9 + emb_bytes != payload_len {
+        // comparison count disagrees with frame length
+        return Frame::Corrupt;
+    }
+    let mut comparisons = Vec::with_capacity(n_cmps);
+    let mut at = 8;
+    for _ in 0..n_cmps {
+        let a = u32_at(payload, at) as usize;
+        let b = u32_at(payload, at + 4) as usize;
+        let Some(outcome) = outcome_of(payload[at + 8]) else {
+            // bad outcome byte
+            return Frame::Corrupt;
+        };
+        if a >= n_models || b >= n_models {
+            // model index out of range
+            return Frame::Corrupt;
+        }
+        comparisons.push(Comparison { a, b, outcome });
+        at += 9;
+    }
+    let mut embedding = Vec::with_capacity(dim);
+    for _ in 0..dim {
+        embedding.push(f32::from_bits(u32_at(payload, at)));
+        at += 4;
+    }
+    Frame::Record {
+        next: pos + 8 + payload_len,
+        gid,
+        obs: Observation { embedding, comparisons },
+    }
+}
+
+/// Scan framed bytes, returning the decoded records and the byte length
+/// of the valid prefix (anything past it is a torn/corrupt tail).
+fn scan_frames(bytes: &[u8], dim: usize, n_models: usize) -> (Vec<(u32, Observation)>, usize) {
+    let mut records = Vec::new();
+    let mut pos = 0;
+    while pos < bytes.len() {
+        match decode_frame(bytes, pos, dim, n_models) {
+            Frame::Record { next, gid, obs } => {
+                records.push((gid, obs));
+                pos = next;
+            }
+            Frame::Truncated | Frame::Corrupt => break,
+        }
+    }
+    (records, pos)
+}
+
+// ---- file IO -----------------------------------------------------------
+
+/// tmp + rename (+ fsync file and directory when `fsync`): the write is
+/// atomic — readers see either the old file or the complete new one.
+fn write_atomic(path: &Path, bytes: &[u8], fsync: bool) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("writing {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        if fsync {
+            f.sync_data().with_context(|| format!("fsync {}", tmp.display()))?;
+        }
+    }
+    fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
+    if fsync {
+        if let Some(parent) = path.parent() {
+            fsync_dir(parent);
+        }
+    }
+    Ok(())
+}
+
+/// Best-effort directory fsync (makes renames/creates durable on linux;
+/// a no-op where directories cannot be opened).
+fn fsync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Advisory single-writer guard: a `LOCK` file holding the owner pid.
+/// A *different, still-running* process holding the lock refuses the
+/// open — two live servers appending to one store would interleave
+/// conflicting gid sequences and corrupt it. A dead owner (crash — the
+/// recovery case) or the same process (restart-in-process, tests) takes
+/// the lock over. Liveness is checked via `/proc/<pid>`; where that is
+/// unavailable the owner is assumed dead, keeping recovery possible.
+fn acquire_lock(dir: &Path) -> Result<()> {
+    let path = dir.join(LOCK);
+    let my_pid = std::process::id();
+    if let Ok(text) = fs::read_to_string(&path) {
+        if let Ok(pid) = text.trim().parse::<u32>() {
+            if pid != my_pid
+                && Path::new("/proc").is_dir()
+                && Path::new(&format!("/proc/{pid}")).is_dir()
+            {
+                bail!(
+                    "durable store {} is in use by live process {pid} \
+                     (delete {LOCK} only if that pid is not an eagle server)",
+                    dir.display()
+                );
+            }
+        }
+    }
+    fs::write(&path, my_pid.to_string()).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write one immutable segment file: header + pre-encoded frames.
+fn write_segment(
+    path: &Path,
+    dim: usize,
+    records: usize,
+    frames: &[u8],
+    fsync: bool,
+) -> Result<()> {
+    let mut bytes = Vec::with_capacity(SEG_HEADER_BYTES + frames.len());
+    bytes.extend_from_slice(&SEG_MAGIC.to_le_bytes());
+    bytes.extend_from_slice(&SEG_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&(dim as u32).to_le_bytes());
+    bytes.extend_from_slice(&(records as u32).to_le_bytes());
+    bytes.extend_from_slice(frames);
+    write_atomic(path, &bytes, fsync)
+}
+
+/// Read + fully validate one sealed segment. Segments are written once
+/// and fsynced before the manifest references them, so any damage is a
+/// hard error, never a silent truncation.
+fn read_segment(
+    path: &Path,
+    dim: usize,
+    n_models: usize,
+    expect_records: usize,
+) -> Result<Vec<(u32, Observation)>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < SEG_HEADER_BYTES {
+        bail!("segment shorter than its header");
+    }
+    if u32_at(&bytes, 0) != SEG_MAGIC {
+        bail!("bad segment magic");
+    }
+    if u32_at(&bytes, 4) != SEG_VERSION {
+        bail!("unsupported segment version {}", u32_at(&bytes, 4));
+    }
+    if u32_at(&bytes, 8) as usize != dim {
+        bail!("segment dim {} != store dim {dim}", u32_at(&bytes, 8));
+    }
+    let count = u32_at(&bytes, 12) as usize;
+    if count != expect_records {
+        bail!("segment holds {count} records, manifest says {expect_records}");
+    }
+    let (records, valid) = scan_frames(&bytes[SEG_HEADER_BYTES..], dim, n_models);
+    if records.len() != count || SEG_HEADER_BYTES + valid != bytes.len() {
+        bail!(
+            "segment corrupt: {} of {count} records decoded cleanly",
+            records.len()
+        );
+    }
+    Ok(records)
+}
+
+/// A delta log replayed back from disk (truncated to its valid prefix).
+struct LogReplay {
+    records: Vec<(u32, Observation)>,
+    /// The validated raw frame bytes (exactly what remains in the file).
+    bytes: Vec<u8>,
+    /// Bytes dropped because the final write was torn.
+    lost: u64,
+}
+
+/// Replay a delta log, truncating the file to the last full record if the
+/// final write was torn.
+fn recover_log(path: &Path, dim: usize, n_models: usize) -> Result<LogReplay> {
+    if !path.exists() {
+        // a crash between manifest swap and log creation: the live log is
+        // simply empty
+        File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        return Ok(LogReplay { records: Vec::new(), bytes: Vec::new(), lost: 0 });
+    }
+    let mut bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let (records, valid) = scan_frames(&bytes, dim, n_models);
+    let lost = (bytes.len() - valid) as u64;
+    if lost > 0 {
+        bytes.truncate(valid);
+        let f = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("truncating {}", path.display()))?;
+        f.set_len(valid as u64)
+            .with_context(|| format!("truncating {}", path.display()))?;
+        let _ = f.sync_data();
+    }
+    Ok(LogReplay { records, bytes, lost })
+}
+
+/// Delete files a crashed seal left behind (segments/logs/tmp files not
+/// referenced by the manifest).
+fn sweep_orphans(dir: &Path, shard_count: usize, referenced: &HashSet<PathBuf>) {
+    let _ = fs::remove_file(dir.join(MANIFEST).with_extension("tmp"));
+    for shard in 0..shard_count {
+        let Ok(entries) = fs::read_dir(dir.join(format!("shard-{shard}"))) else {
+            continue;
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.is_file() && !referenced.contains(&path) {
+                let _ = fs::remove_file(&path);
+            }
+        }
+    }
+}
+
+// ---- manifest (de)serialization ----------------------------------------
+
+fn f64_vec(vs: &[f64]) -> Value {
+    Value::Arr(vs.iter().map(|&v| json::num(v)).collect())
+}
+
+fn manifest_json(meta: &StoreMeta, state: &ManifestState) -> String {
+    let lanes: Vec<Value> = state
+        .lanes
+        .iter()
+        .map(|l| {
+            let segments: Vec<Value> = l
+                .segments
+                .iter()
+                .map(|s| {
+                    json::obj(vec![
+                        ("file", json::str_v(&s.file)),
+                        ("records", json::num(s.records as f64)),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
+                ("next_file_id", json::num(l.next_file_id as f64)),
+                ("log", json::str_v(&l.log)),
+                ("segments", Value::Arr(segments)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("format_version", json::num(MANIFEST_VERSION)),
+        ("dim", json::num(meta.dim as f64)),
+        ("n_models", json::num(meta.n_models as f64)),
+        ("p", json::num(meta.params.p)),
+        ("n_neighbors", json::num(meta.params.n_neighbors as f64)),
+        ("k_factor", json::num(meta.params.k_factor)),
+        ("shard_count", json::num(meta.shards.count as f64)),
+        // decimal string: u64 seeds must roundtrip exactly
+        ("hash_seed", json::str_v(&meta.shards.hash_seed.to_string())),
+        (
+            "global",
+            json::obj(vec![
+                ("folded_gid", json::num(f64::from(state.global.folded_gid))),
+                (
+                    "history_len",
+                    json::num(state.global.state.history_len as f64),
+                ),
+                ("samples", json::str_v(&state.global.state.samples.to_string())),
+                ("last", f64_vec(&state.global.state.last_iterate)),
+                ("sum", f64_vec(&state.global.state.rating_sum)),
+            ]),
+        ),
+        ("lanes", Value::Arr(lanes)),
+    ])
+    .to_json()
+}
+
+fn f64s_of(v: &Value, what: &str) -> Result<Vec<f64>> {
+    v.as_arr()
+        .with_context(|| format!("manifest: {what}"))?
+        .iter()
+        .map(|x| x.as_f64().with_context(|| format!("manifest: {what} entry")))
+        .collect()
+}
+
+fn parse_manifest(text: &str) -> Result<(StoreMeta, ManifestState)> {
+    let v = json::parse(text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let version = v.get("format_version").as_f64().context("format_version")?;
+    if version > MANIFEST_VERSION {
+        bail!("manifest version {version} is newer than supported {MANIFEST_VERSION}");
+    }
+    let meta = StoreMeta {
+        params: EagleParams {
+            p: v.get("p").as_f64().context("p")?,
+            n_neighbors: v.get("n_neighbors").as_usize().context("n_neighbors")?,
+            k_factor: v.get("k_factor").as_f64().context("k_factor")?,
+        },
+        n_models: v.get("n_models").as_usize().context("n_models")?,
+        dim: v.get("dim").as_usize().context("dim")?,
+        shards: ShardParams {
+            count: v.get("shard_count").as_usize().context("shard_count")?,
+            hash_seed: v
+                .get("hash_seed")
+                .as_str()
+                .context("hash_seed")?
+                .parse()
+                .context("hash_seed")?,
+        },
+    };
+    let g = v.get("global");
+    let global = GlobalCheckpoint {
+        folded_gid: g.get("folded_gid").as_usize().context("folded_gid")? as u32,
+        state: GlobalEloState {
+            last_iterate: f64s_of(g.get("last"), "global.last")?,
+            rating_sum: f64s_of(g.get("sum"), "global.sum")?,
+            samples: g
+                .get("samples")
+                .as_str()
+                .context("global.samples")?
+                .parse()
+                .context("global.samples")?,
+            history_len: g.get("history_len").as_usize().context("global.history_len")?,
+        },
+    };
+    if !global.state.last_iterate.is_empty()
+        && (global.state.last_iterate.len() != meta.n_models
+            || global.state.rating_sum.len() != meta.n_models)
+    {
+        bail!("global checkpoint width disagrees with n_models {}", meta.n_models);
+    }
+    let mut lanes = Vec::new();
+    for lane in v.get("lanes").as_arr().context("lanes")? {
+        let mut segments = Vec::new();
+        for s in lane.get("segments").as_arr().context("lane.segments")? {
+            segments.push(SegmentEntry {
+                file: s.get("file").as_str().context("segment.file")?.to_string(),
+                records: s.get("records").as_usize().context("segment.records")?,
+            });
+        }
+        lanes.push(LaneManifest {
+            segments,
+            log: lane.get("log").as_str().context("lane.log")?.to_string(),
+            next_file_id: lane.get("next_file_id").as_usize().context("lane.next_file_id")?
+                as u64,
+        });
+    }
+    if lanes.len() != meta.shards.count {
+        bail!("manifest lane count {} != shard_count {}", lanes.len(), meta.shards.count);
+    }
+    Ok((meta, ManifestState { global, lanes }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{l2_normalize, Rng};
+
+    const DIM: usize = 8;
+    const N_MODELS: usize = 4;
+
+    fn rand_obs(rng: &mut Rng) -> Observation {
+        let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        let a = rng.below(N_MODELS);
+        let mut b = rng.below(N_MODELS - 1);
+        if b >= a {
+            b += 1;
+        }
+        let outcome = match rng.below(3) {
+            0 => Outcome::WinA,
+            1 => Outcome::WinB,
+            _ => Outcome::Draw,
+        };
+        Observation::single(v, Comparison { a, b, outcome })
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("eagle_durable_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn meta(shards: usize) -> StoreMeta {
+        StoreMeta {
+            params: EagleParams::default(),
+            n_models: N_MODELS,
+            dim: DIM,
+            shards: ShardParams { count: shards, hash_seed: 0xEA61E },
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_corruption_detection() {
+        let mut rng = Rng::new(1);
+        let mut bytes = Vec::new();
+        let mut expect = Vec::new();
+        for gid in [0u32, 7, 1000, u32::MAX - 1] {
+            let obs = rand_obs(&mut rng);
+            encode_frame(&mut bytes, gid, &obs.comparisons, &obs.embedding);
+            expect.push((gid, obs));
+        }
+        let (records, valid) = scan_frames(&bytes, DIM, N_MODELS);
+        assert_eq!(valid, bytes.len());
+        assert_eq!(records.len(), expect.len());
+        for ((gid, obs), (egid, eobs)) in records.iter().zip(&expect) {
+            assert_eq!(gid, egid);
+            assert_eq!(obs.embedding, eobs.embedding);
+            assert_eq!(obs.comparisons, eobs.comparisons);
+        }
+        // a truncated tail stops the scan at the last full record
+        let cut = bytes.len() - 3;
+        let (partial, valid) = scan_frames(&bytes[..cut], DIM, N_MODELS);
+        assert_eq!(partial.len(), expect.len() - 1);
+        assert!(valid <= cut);
+        // a flipped payload byte fails the checksum
+        let mut corrupt = bytes.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0xFF;
+        let (partial, _) = scan_frames(&corrupt, DIM, N_MODELS);
+        assert_eq!(partial.len(), expect.len() - 1);
+    }
+
+    #[test]
+    fn manifest_roundtrips_bit_exactly() {
+        let m = meta(3);
+        let state = ManifestState {
+            global: GlobalCheckpoint {
+                folded_gid: 42,
+                state: GlobalEloState {
+                    last_iterate: vec![1000.123456789012, 999.9, 1002.5, 997.477],
+                    rating_sum: vec![1.5e7, 2.5e7, 3.5e7, 4.5e7 + 0.125],
+                    samples: 123_456,
+                    history_len: 41_152,
+                },
+            },
+            lanes: (0..3)
+                .map(|s| LaneManifest {
+                    segments: vec![SegmentEntry {
+                        file: format!("shard-{s}/seg-00000001.seg"),
+                        records: 10 + s,
+                    }],
+                    log: format!("shard-{s}/delta-00000002.log"),
+                    next_file_id: 3,
+                })
+                .collect(),
+        };
+        let text = manifest_json(&m, &state);
+        let (m2, s2) = parse_manifest(&text).unwrap();
+        assert_eq!(m2.dim, m.dim);
+        assert_eq!(m2.n_models, m.n_models);
+        assert_eq!(m2.params, m.params);
+        assert_eq!(m2.shards, m.shards);
+        assert_eq!(s2.global.folded_gid, 42);
+        assert_eq!(s2.global.state, state.global.state);
+        assert_eq!(s2.lanes.len(), 3);
+        assert_eq!(s2.lanes[1].segments[0].records, 11);
+        assert_eq!(s2.lanes[2].log, "shard-2/delta-00000002.log");
+    }
+
+    #[test]
+    fn create_open_roundtrip_empty() {
+        let dir = tmp_dir("empty");
+        let store = DurableStore::create(&dir, meta(2), DurableOptions::default()).unwrap();
+        assert!(DurableStore::exists(&dir));
+        assert_eq!(store.segment_counts(), vec![0, 0]);
+        // creating over an existing store is refused
+        assert!(DurableStore::create(&dir, meta(2), DurableOptions::default()).is_err());
+        drop(store);
+        let (_store, recovery) = DurableStore::open(&dir, DurableOptions::default()).unwrap();
+        assert_eq!(recovery.total_records(), 0);
+        assert_eq!(recovery.torn_bytes, 0);
+        let router = recovery.into_router(EpochParams::default()).unwrap();
+        assert_eq!(router.store_len(), 0);
+        assert_eq!(router.history_len(), 0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_seal_recover_keeps_every_record() {
+        let mut rng = Rng::new(2);
+        let dir = tmp_dir("seal");
+        // tiny seal threshold: force several seals over the run
+        let opts = DurableOptions { seal_bytes: 600, fsync: false };
+        let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
+        let mut writer = store.lane_writer(0).unwrap();
+        let mut expect = Vec::new();
+        for gid in 0..50u32 {
+            let obs = rand_obs(&mut rng);
+            writer.append(gid, &obs).unwrap();
+            expect.push((gid, obs));
+        }
+        writer.sync().unwrap();
+        assert!(store.segment_counts()[0] >= 2, "seal threshold never tripped");
+        drop(writer);
+        drop(store);
+        let (store2, recovery) = DurableStore::open(&dir, opts).unwrap();
+        assert_eq!(recovery.torn_bytes, 0);
+        assert_eq!(recovery.total_records(), 50);
+        let all: Vec<&(u32, Observation)> = recovery.lanes[0]
+            .segments
+            .iter()
+            .flatten()
+            .chain(recovery.lanes[0].tail.iter())
+            .collect();
+        for (got, want) in all.iter().zip(&expect) {
+            assert_eq!(got.0, want.0);
+            assert_eq!(got.1.embedding, want.1.embedding);
+            assert_eq!(got.1.comparisons, want.1.comparisons);
+        }
+        // the writer resumes appending + sealing after recovery
+        let mut writer = store2.lane_writer(0).unwrap();
+        for gid in 50..60u32 {
+            writer.append(gid, &rand_obs(&mut rng)).unwrap();
+        }
+        writer.sync().unwrap();
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_log_tail_truncates_to_last_full_record() {
+        let mut rng = Rng::new(3);
+        let dir = tmp_dir("torn");
+        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+        let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
+        let mut writer = store.lane_writer(0).unwrap();
+        for gid in 0..10u32 {
+            writer.append(gid, &rand_obs(&mut rng)).unwrap();
+        }
+        writer.sync().unwrap();
+        let log_path = dir.join("shard-0/delta-00000001.log");
+        let len = fs::metadata(&log_path).unwrap().len();
+        // tear the final record mid-frame
+        OpenOptions::new()
+            .write(true)
+            .open(&log_path)
+            .unwrap()
+            .set_len(len - 5)
+            .unwrap();
+        drop(writer);
+        drop(store);
+        let (_store, recovery) = DurableStore::open(&dir, opts.clone()).unwrap();
+        assert_eq!(recovery.total_records(), 9, "torn record must be dropped");
+        assert!(recovery.torn_bytes > 0);
+        // the truncation is persistent: a second open is clean
+        let (_store, again) = DurableStore::open(&dir, opts).unwrap();
+        assert_eq!(again.total_records(), 9);
+        assert_eq!(again.torn_bytes, 0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn orphan_files_from_crashed_seal_are_swept() {
+        let dir = tmp_dir("orphans");
+        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+        let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
+        drop(store);
+        // simulate a crash between segment write and manifest swap
+        fs::write(dir.join("shard-0/seg-00000009.seg"), b"orphan").unwrap();
+        fs::write(dir.join("shard-0/delta-00000010.log"), b"orphan").unwrap();
+        fs::write(dir.join("MANIFEST.tmp"), b"orphan").unwrap();
+        let (_store, recovery) = DurableStore::open(&dir, opts).unwrap();
+        assert_eq!(recovery.total_records(), 0);
+        assert!(!dir.join("shard-0/seg-00000009.seg").exists());
+        assert!(!dir.join("shard-0/delta-00000010.log").exists());
+        assert!(!dir.join("MANIFEST.tmp").exists());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lock_guards_foreign_live_owners_but_allows_recovery() {
+        let dir = tmp_dir("lock");
+        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+        let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
+        // same-process reopen is allowed (in-process restart, tests)
+        let (store2, _) = DurableStore::open(&dir, opts.clone()).unwrap();
+        drop(store2);
+        drop(store);
+        // dropping the owner releases the lock
+        assert!(!dir.join(LOCK).exists());
+        // a live foreign owner refuses the open (pid 1 always runs on
+        // linux; skip where /proc is unavailable)
+        fs::write(dir.join(LOCK), "1").unwrap();
+        if Path::new("/proc/1").is_dir() {
+            let err = DurableStore::open(&dir, opts.clone());
+            assert!(err.is_err(), "open must refuse a live foreign lock");
+        }
+        // a dead owner's lock is taken over (the crash-recovery case)
+        fs::write(dir.join(LOCK), u32::MAX.to_string()).unwrap();
+        let (_store, recovery) = DurableStore::open(&dir, opts).unwrap();
+        assert_eq!(recovery.total_records(), 0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_survives_reopen() {
+        let dir = tmp_dir("ckpt");
+        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+        let store = DurableStore::create(&dir, meta(2), opts.clone()).unwrap();
+        let mut elo = GlobalElo::new(N_MODELS, 32.0);
+        elo.apply_new(&[Comparison { a: 0, b: 1, outcome: Outcome::WinA }]);
+        store.checkpoint_global(1, elo.export_state()).unwrap();
+        drop(store);
+        let (_store, recovery) = DurableStore::open(&dir, opts).unwrap();
+        assert_eq!(recovery.folded_gid, 1);
+        assert_eq!(recovery.global, elo.export_state());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

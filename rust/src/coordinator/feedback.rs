@@ -228,6 +228,50 @@ impl<T> Queue<T> {
         }
     }
 
+    /// Like [`Queue::pop_batch`], but once the first item is available,
+    /// linger up to `linger` for batch-mates instead of draining
+    /// immediately — the same drain-or-wait shape as the embed engine's
+    /// batcher. Under a trickle this turns batch-of-1 pops into real
+    /// batches; under load the batch hits `max` and returns at once, so
+    /// the linger costs nothing at throughput.
+    pub fn pop_batch_linger(
+        &self,
+        max: usize,
+        timeout: std::time::Duration,
+        linger: std::time::Duration,
+    ) -> Option<Vec<T>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.items.is_empty() {
+                let max = max.max(1);
+                let linger_until = std::time::Instant::now() + linger;
+                while inner.items.len() < max && !inner.closed {
+                    let now = std::time::Instant::now();
+                    if now >= linger_until {
+                        break;
+                    }
+                    let (guard, _) = self.cond.wait_timeout(inner, linger_until - now).unwrap();
+                    inner = guard;
+                }
+                let take = inner.items.len().min(max);
+                return Some(inner.items.drain(..take).collect());
+            }
+            if inner.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Some(Vec::new());
+            }
+            let (guard, res) = self.cond.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if res.timed_out() && inner.items.is_empty() {
+                return if inner.closed { None } else { Some(Vec::new()) };
+            }
+        }
+    }
+
     /// Non-blocking drain of everything queued.
     pub fn drain(&self) -> Vec<T> {
         let mut inner = self.inner.lock().unwrap();
@@ -409,6 +453,67 @@ mod tests {
         let batch = q.pop_batch(8, std::time::Duration::from_millis(30)).unwrap();
         assert!(batch.is_empty());
         assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+    }
+
+    #[test]
+    fn pop_batch_linger_collects_a_trickle_into_one_batch() {
+        use std::sync::Arc;
+        use std::time::Duration;
+        let q = Arc::new(FeedbackQueue::new(100));
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..5 {
+                    q.push(Verdict {
+                        embedding: vec![i as f32],
+                        model_a: 0,
+                        model_b: 1,
+                        score_a: 1.0,
+                    });
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            })
+        };
+        // generous linger: the whole trickle lands in one batch
+        let batch = q
+            .pop_batch_linger(64, Duration::from_secs(5), Duration::from_millis(1500))
+            .unwrap();
+        producer.join().unwrap();
+        assert_eq!(batch.len(), 5, "linger failed to collect the trickle");
+        assert_eq!(batch[0].embedding, vec![0.0]);
+    }
+
+    #[test]
+    fn pop_batch_linger_returns_immediately_at_max() {
+        use std::time::{Duration, Instant};
+        let q = FeedbackQueue::new(100);
+        for i in 0..8 {
+            q.push(Verdict { embedding: vec![i as f32], model_a: 0, model_b: 1, score_a: 0.5 });
+        }
+        let t0 = Instant::now();
+        let batch = q
+            .pop_batch_linger(4, Duration::from_secs(5), Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(1), "lingered despite a full batch");
+        // zero linger behaves like pop_batch: immediate drain of the rest
+        let rest = q
+            .pop_batch_linger(8, Duration::from_millis(100), Duration::ZERO)
+            .unwrap();
+        assert_eq!(rest.len(), 4);
+        // timeout with an empty queue still returns the empty beat
+        let beat = q
+            .pop_batch_linger(8, Duration::from_millis(20), Duration::from_millis(5))
+            .unwrap();
+        assert!(beat.is_empty());
+        // close during a linger drains what is there
+        q.push(Verdict { embedding: vec![9.0], model_a: 0, model_b: 1, score_a: 0.5 });
+        q.close();
+        let last = q
+            .pop_batch_linger(8, Duration::from_millis(100), Duration::from_millis(50))
+            .unwrap();
+        assert_eq!(last.len(), 1);
+        assert!(q.pop_batch_linger(8, Duration::from_millis(10), Duration::ZERO).is_none());
     }
 
     #[test]

@@ -28,12 +28,29 @@
 //! "everything enqueued before the flush" is applied and published when
 //! it returns.
 //!
+//! The dispatcher pop **lingers** ([`IngestOptions::linger`], the same
+//! drain-or-wait shape as the embed engine's batcher): under a feedback
+//! trickle, records bucket into real batches instead of batch-of-1
+//! embeds; under load the batch fills to the dispatch ceiling and the
+//! linger costs nothing.
+//!
 //! The dispatcher beat also drives optional background persistence
-//! ([`crate::config::PersistParams`]): every `interval_ms` it publishes
-//! a consistent cut (global table + a barrier through every lane) and
-//! snapshots it through the reader handle
-//! ([`super::sharded::ShardedSnapshot::persist`]) — no writer lane is
-//! ever locked for persistence, and route reads are untouched.
+//! ([`crate::config::PersistParams`]), in one of two modes
+//! ([`PersistSink`]):
+//!
+//! - **Durable** (the default with `[persist] dir`): each shard applier
+//!   owns a [`DurableLaneWriter`] and appends every record to its shard's
+//!   delta log as it applies it; the beat publishes a consistent cut
+//!   (global table + a flush barrier through every lane, which fsyncs the
+//!   logs) and then advances the manifest's global-ELO checkpoint —
+//!   O(records since the last beat), never O(corpus). Seals happen inline
+//!   on the applier when a lane's tail crosses the seal threshold.
+//! - **Json** (legacy `[persist] path`): the beat snapshots the whole
+//!   corpus through the reader handle
+//!   ([`super::sharded::ShardedSnapshot::persist`]).
+//!
+//! Either way no writer lane is ever locked for persistence, and route
+//! reads are untouched.
 
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
@@ -43,6 +60,7 @@ use crate::config::EpochParams;
 use crate::embedding::EmbedHandle;
 use crate::metrics::Counter;
 
+use super::durable::{DurableLaneWriter, DurableStore};
 use super::feedback::{Queue, RawVerdict, Verdict};
 use super::router::Observation;
 use super::sharded::{shard_of, GlobalLane, ShardLane, ShardedHandle, ShardedRouter};
@@ -78,7 +96,13 @@ pub struct IngestMetrics {
     pub dropped_unknown_model: Counter,
     /// Dropped because the verdict did not decode to a valid outcome.
     pub dropped_invalid: Counter,
-    /// Background persistence attempts / failures.
+    /// Dispatcher batches that carried at least one feedback record —
+    /// `folded_global / dispatch_batches` is the mean embed-batch size
+    /// the linger achieved.
+    pub dispatch_batches: Counter,
+    /// Background persistence attempts / failures (JSON snapshots or
+    /// durable checkpoints, per [`PersistSink`]); `persist_failures` also
+    /// counts failed durable appends/syncs on the applier side.
     pub persists: Counter,
     pub persist_failures: Counter,
     shards: Vec<ShardCounters>,
@@ -104,6 +128,7 @@ impl IngestMetrics {
             dropped_embed: Counter::new(),
             dropped_unknown_model: Counter::new(),
             dropped_invalid: Counter::new(),
+            dispatch_batches: Counter::new(),
             persists: Counter::new(),
             persist_failures: Counter::new(),
             shards: (0..shard_count).map(|_| ShardCounters::default()).collect(),
@@ -136,11 +161,13 @@ impl IngestMetrics {
             .map(|(s, c)| format!("s{s}:{}/{}", c.applied.get(), c.queued.get()))
             .collect();
         format!(
-            "ingest: queued={} folded_global={} applied={} dropped(overflow={} lane_backlog={} \
-             embed={} unknown_model={} invalid={}) persists={}/{} shards(applied/queued)=[{}]",
+            "ingest: queued={} folded_global={} applied={} batches={} dropped(overflow={} \
+             lane_backlog={} embed={} unknown_model={} invalid={}) persists={}/{} \
+             shards(applied/queued)=[{}]",
             self.queued.get(),
             self.folded_global.get(),
             self.applied.get(),
+            self.dispatch_batches.get(),
             self.dropped_overflow.get(),
             self.dropped_lane_backlog.get(),
             self.dropped_embed.get(),
@@ -194,6 +221,9 @@ pub enum IngestMsg {
     Embedded(Verdict),
     /// Flush barrier (see [`FlushBarrier`]).
     Flush(FlushBarrier),
+    /// Run a persistence cut now (admin snapshot op), then resolve the
+    /// barrier.
+    PersistNow(FlushBarrier),
 }
 
 /// A message on one shard lane's queue (dispatcher → shard applier).
@@ -204,15 +234,28 @@ enum LaneMsg {
     Flush(FlushBarrier),
 }
 
-/// Background-persistence target for the dispatcher beat.
-#[derive(Debug, Clone)]
+/// Where the persistence beat writes (see the module docs).
+#[derive(Clone)]
+pub enum PersistSink {
+    /// Legacy whole-corpus JSON snapshot at this path.
+    Json(PathBuf),
+    /// Segment-granular durable store: appliers append delta-log frames
+    /// inline; the beat fsyncs + advances the global checkpoint.
+    Durable(Arc<DurableStore>),
+}
+
+/// Background-persistence target for the dispatcher beat. A zero
+/// `interval` disables the periodic beat; a durable sink still appends
+/// and seals inline, and flushes on barriers/shutdown and the admin
+/// [`IngestPipeline::persist_now`].
+#[derive(Clone)]
 pub struct PersistTarget {
-    pub path: PathBuf,
+    pub sink: PersistSink,
     pub interval: Duration,
 }
 
 /// Tuning for [`IngestPipeline::start`].
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct IngestOptions {
     /// Capacity of the raw ingest queue (records).
     pub queue_capacity: usize,
@@ -222,6 +265,10 @@ pub struct IngestOptions {
     /// Epoch cadence; `publish_interval_ms` doubles as the beat that
     /// flushes stale epochs and drives persistence.
     pub epoch: EpochParams,
+    /// How long the dispatcher lingers for batch-mates once the first
+    /// record of a pop arrives (the embed-batching window for trickle
+    /// feedback; zero drains immediately).
+    pub linger: Duration,
     /// Periodic background persistence (None = admin-op only).
     pub persist: Option<PersistTarget>,
 }
@@ -232,6 +279,7 @@ impl Default for IngestOptions {
             queue_capacity: 8192,
             lane_queue_capacity: 1024,
             epoch: EpochParams::default(),
+            linger: Duration::from_millis(2),
             persist: None,
         }
     }
@@ -245,6 +293,7 @@ pub struct IngestPipeline {
     metrics: Arc<IngestMetrics>,
     handle: ShardedHandle,
     shard_count: usize,
+    has_persist: bool,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -263,19 +312,29 @@ impl IngestPipeline {
         let (global, lanes) = router.into_lanes();
         let shard_count = lanes.len();
         let metrics = Arc::new(IngestMetrics::new(shard_count));
+        let has_persist = opts.persist.is_some();
         let ingest: Arc<Queue<IngestMsg>> = Arc::new(Queue::new(opts.queue_capacity));
         let lane_queues: Vec<Arc<Queue<LaneMsg>>> =
             (0..shard_count).map(|_| Arc::new(Queue::new(opts.lane_queue_capacity))).collect();
         let beat = Duration::from_millis(opts.epoch.publish_interval_ms.max(1));
 
+        // durable sink: every applier owns its shard's delta-log writer
+        let mut durable_writers: Vec<Option<DurableLaneWriter>> = match &opts.persist {
+            Some(PersistTarget { sink: PersistSink::Durable(store), .. }) => (0..shard_count)
+                .map(|s| Some(store.lane_writer(s).expect("durable store lane writer")))
+                .collect(),
+            _ => (0..shard_count).map(|_| None).collect(),
+        };
+
         let mut threads = Vec::with_capacity(shard_count + 1);
         for (s, lane) in lanes.into_iter().enumerate() {
             let q = lane_queues[s].clone();
             let m = metrics.clone();
+            let durable = durable_writers[s].take();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("eagle-shard-applier-{s}"))
-                    .spawn(move || applier_loop(lane, q, s, m, beat))
+                    .spawn(move || applier_loop(lane, q, s, m, beat, durable))
                     .expect("spawn shard applier"),
             );
         }
@@ -288,6 +347,7 @@ impl IngestPipeline {
             handle: handle.clone(),
             hash_seed: shard_params.hash_seed,
             next_gid,
+            linger: opts.linger,
             persist: opts.persist,
             last_persist: Instant::now(),
         };
@@ -299,7 +359,14 @@ impl IngestPipeline {
                 .expect("spawn ingest dispatcher"),
         );
 
-        IngestPipeline { ingest, metrics, handle, shard_count, threads: Mutex::new(threads) }
+        IngestPipeline {
+            ingest,
+            metrics,
+            handle,
+            shard_count,
+            has_persist,
+            threads: Mutex::new(threads),
+        }
     }
 
     /// Enqueue a raw-text verdict (the request path). Never blocks;
@@ -347,11 +414,29 @@ impl IngestPipeline {
     }
 
     /// Barrier: apply and publish everything enqueued before this call
-    /// (every shard lane and the shared global table). Returns false if
-    /// the pipeline is already shut down.
+    /// (every shard lane and the shared global table); with a durable
+    /// sink the lanes also fsync their delta logs. Returns false if the
+    /// pipeline is already shut down.
     pub fn flush(&self) -> bool {
         let barrier = FlushBarrier::new(self.shard_count);
         if !self.ingest.push(IngestMsg::Flush(barrier.clone())) {
+            return false;
+        }
+        barrier.wait();
+        true
+    }
+
+    /// Run a full persistence cut now, regardless of the beat interval:
+    /// flush + publish everything accepted so far, fsync the delta logs,
+    /// and advance the durable checkpoint (or write the JSON snapshot).
+    /// The admin `snapshot` op rides this. Returns false if the pipeline
+    /// is shut down or has no persist target.
+    pub fn persist_now(&self) -> bool {
+        if !self.has_persist {
+            return false;
+        }
+        let barrier = FlushBarrier::new(1);
+        if !self.ingest.push(IngestMsg::PersistNow(barrier.clone())) {
             return false;
         }
         barrier.wait();
@@ -403,6 +488,7 @@ struct Dispatcher {
     handle: ShardedHandle,
     hash_seed: u64,
     next_gid: u32,
+    linger: Duration,
     persist: Option<PersistTarget>,
     last_persist: Instant,
 }
@@ -410,15 +496,34 @@ struct Dispatcher {
 impl Dispatcher {
     fn run(mut self, queue: Arc<Queue<IngestMsg>>, beat: Duration) {
         loop {
-            match queue.pop_batch(DISPATCH_BATCH, beat) {
+            match queue.pop_batch_linger(DISPATCH_BATCH, beat, self.linger) {
                 None => {
                     // closed and drained: flush the global tail, then let
-                    // the lanes drain theirs
+                    // the lanes drain theirs (syncing their delta logs);
+                    // a durable sink gets one final checkpoint so a clean
+                    // shutdown recovers without any log replay
                     if self.global.unpublished() > 0 {
                         self.global.publish();
                     }
-                    for q in &self.lanes {
-                        q.close();
+                    if let Some(PersistTarget { sink: PersistSink::Durable(store), .. }) =
+                        self.persist.clone()
+                    {
+                        let folded_gid = self.next_gid;
+                        let state = self.global.elo().export_state();
+                        let barrier = FlushBarrier::new(self.lanes.len());
+                        for q in &self.lanes {
+                            q.push(LaneMsg::Flush(barrier.clone()));
+                            q.close();
+                        }
+                        barrier.wait();
+                        self.metrics.persists.inc();
+                        if store.checkpoint_global(folded_gid, state).is_err() {
+                            self.metrics.persist_failures.inc();
+                        }
+                    } else {
+                        for q in &self.lanes {
+                            q.close();
+                        }
                     }
                     return;
                 }
@@ -460,6 +565,13 @@ impl Dispatcher {
             _ => Vec::new().into_iter(),
         };
 
+        if batch
+            .iter()
+            .any(|m| matches!(m, IngestMsg::Raw(_) | IngestMsg::Embedded(_)))
+        {
+            self.metrics.dispatch_batches.inc();
+        }
+
         let mut staged: Vec<Vec<(u32, Observation)>> =
             (0..self.lanes.len()).map(|_| Vec::new()).collect();
         for msg in batch {
@@ -488,6 +600,15 @@ impl Dispatcher {
                     for q in &self.lanes {
                         q.push(LaneMsg::Flush(barrier.clone()));
                     }
+                    continue;
+                }
+                IngestMsg::PersistNow(barrier) => {
+                    // admin cut: everything staged reaches the lanes,
+                    // then a full persistence cut runs (blocking this
+                    // dispatcher on the lanes' sync barrier)
+                    self.flush_staged(&mut staged);
+                    self.persist_cut();
+                    barrier.count_down();
                     continue;
                 }
             };
@@ -525,42 +646,81 @@ impl Dispatcher {
 
     fn maybe_persist(&mut self) {
         let Some(target) = &self.persist else { return };
-        if self.last_persist.elapsed() < target.interval {
+        if target.interval.is_zero() || self.last_persist.elapsed() < target.interval {
             return;
         }
         self.last_persist = Instant::now();
-        // publish a consistent cut first: the global table, then a
-        // barrier through every lane so all dispatched global ids are
-        // visible. The persisted ScatterView walks ids densely, so a
-        // gap (one lane published ahead of another) would panic; the
-        // barrier makes the published id set a complete prefix.
-        self.global.publish();
-        let barrier = FlushBarrier::new(self.lanes.len());
-        for q in &self.lanes {
-            q.push(LaneMsg::Flush(barrier.clone()));
-        }
-        barrier.wait();
-        self.metrics.persists.inc();
-        if self.handle.load().persist(&target.path).is_err() {
-            self.metrics.persist_failures.inc();
+        self.persist_cut();
+    }
+
+    /// One persistence cut, whatever the sink (see [`PersistSink`]).
+    fn persist_cut(&mut self) {
+        let Some(target) = self.persist.clone() else { return };
+        match &target.sink {
+            PersistSink::Durable(store) => {
+                // capture the fold point *before* the barrier: every
+                // record folded so far was staged to its lane already, so
+                // the FIFO barrier proves all of them are applied AND
+                // fsynced before the checkpoint claims them
+                let folded_gid = self.next_gid;
+                let state = self.global.elo().export_state();
+                self.global.publish();
+                let barrier = FlushBarrier::new(self.lanes.len());
+                for q in &self.lanes {
+                    q.push(LaneMsg::Flush(barrier.clone()));
+                }
+                barrier.wait();
+                self.metrics.persists.inc();
+                if store.checkpoint_global(folded_gid, state).is_err() {
+                    self.metrics.persist_failures.inc();
+                }
+            }
+            PersistSink::Json(path) => {
+                // publish a consistent cut first: the global table, then
+                // a barrier through every lane so all dispatched global
+                // ids are visible. The persisted ScatterView walks ids
+                // densely, so a gap (one lane published ahead of
+                // another) would panic; the barrier makes the published
+                // id set a complete prefix.
+                self.global.publish();
+                let barrier = FlushBarrier::new(self.lanes.len());
+                for q in &self.lanes {
+                    q.push(LaneMsg::Flush(barrier.clone()));
+                }
+                barrier.wait();
+                self.metrics.persists.inc();
+                if self.handle.load().persist(path).is_err() {
+                    self.metrics.persist_failures.inc();
+                }
+            }
         }
     }
 }
 
 /// One shard's applier: drains its queue into the lane, publishing at
-/// the epoch cadence (plus the timeout beat for stale epochs).
+/// the epoch cadence (plus the timeout beat for stale epochs). With a
+/// durable sink it also owns the shard's delta-log writer: every record
+/// is appended (and the lane sealed past the threshold) as it is
+/// applied, and flush barriers fsync the log before acking — durability
+/// work stays on the ingest side, never on the route path.
 fn applier_loop(
     mut lane: ShardLane,
     queue: Arc<Queue<LaneMsg>>,
     shard: usize,
     metrics: Arc<IngestMetrics>,
     beat: Duration,
+    mut durable: Option<DurableLaneWriter>,
 ) {
     loop {
         match queue.pop_batch(LANE_BATCH, beat) {
             None => {
                 if lane.unpublished() > 0 {
                     lane.publish();
+                }
+                if let Some(d) = durable.as_mut() {
+                    if d.sync().is_err() {
+                        metrics.persist_failures.inc();
+                    }
                 }
                 return;
             }
@@ -573,6 +733,11 @@ fn applier_loop(
                         LaneMsg::Apply(items) => {
                             let n = items.len() as u64;
                             for (gid, obs) in items {
+                                if let Some(d) = durable.as_mut() {
+                                    if d.append(gid, &obs).is_err() {
+                                        metrics.persist_failures.inc();
+                                    }
+                                }
                                 lane.apply(gid, obs);
                             }
                             metrics.shard(shard).applied.add(n);
@@ -581,6 +746,11 @@ fn applier_loop(
                         }
                         LaneMsg::Flush(barrier) => {
                             lane.publish();
+                            if let Some(d) = durable.as_mut() {
+                                if d.sync().is_err() {
+                                    metrics.persist_failures.inc();
+                                }
+                            }
                             barrier.count_down();
                         }
                     }
@@ -762,7 +932,7 @@ mod tests {
             IngestOptions {
                 epoch: EpochParams { publish_every: 8, publish_interval_ms: 3 },
                 persist: Some(PersistTarget {
-                    path: path.clone(),
+                    sink: PersistSink::Json(path.clone()),
                     interval: Duration::from_millis(10),
                 }),
                 ..Default::default()
@@ -789,6 +959,111 @@ mod tests {
         assert!(restored.feedback_len() > 0, "persisted snapshot is empty");
         assert_eq!(restored.store().len(), restored.feedback_len());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn durable_sink_appends_syncs_and_recovers_through_the_pipeline() {
+        use crate::coordinator::durable::{DurableOptions, DurableStore, StoreMeta};
+        let mut rng = Rng::new(46);
+        let dir = std::env::temp_dir()
+            .join(format!("eagle_ingest_durable_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let shards = ShardParams { count: 2, hash_seed: 0xEA61E };
+        let store = DurableStore::create(
+            &dir,
+            StoreMeta {
+                params: EagleParams::default(),
+                n_models: N_MODELS,
+                dim: DIM,
+                shards: shards.clone(),
+            },
+            DurableOptions { seal_bytes: 2048, fsync: false },
+        )
+        .unwrap();
+        let epoch = EpochParams { publish_every: 8, publish_interval_ms: 5 };
+        let router =
+            ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, epoch.clone(), shards);
+        let pipeline = IngestPipeline::start(
+            router,
+            None,
+            IngestOptions {
+                epoch,
+                persist: Some(PersistTarget {
+                    sink: PersistSink::Durable(store),
+                    interval: Duration::from_millis(5),
+                }),
+                ..Default::default()
+            },
+        );
+        let mut reference = EagleRouter::new(EagleParams::default(), N_MODELS, FlatStore::new(DIM));
+        for _ in 0..200 {
+            let v = rand_verdict(&mut rng);
+            reference.observe(v.clone().into_observation().unwrap());
+            assert!(pipeline.push_verdict(v));
+        }
+        // the admin cut flushes, fsyncs, and advances the checkpoint
+        assert!(pipeline.persist_now());
+        assert!(pipeline.metrics().persists.get() >= 1);
+        assert_eq!(pipeline.metrics().persist_failures.get(), 0);
+        pipeline.shutdown();
+
+        let (_store, recovery) =
+            DurableStore::open(&dir, DurableOptions { seal_bytes: 2048, fsync: false }).unwrap();
+        assert_eq!(recovery.total_records(), 200);
+        assert_eq!(recovery.torn_bytes, 0);
+        let mut recovered = recovery
+            .into_router(EpochParams { publish_every: 8, publish_interval_ms: 5 })
+            .unwrap();
+        assert_eq!(recovered.store_len(), 200);
+        assert_eq!(recovered.history_len(), 200);
+        recovered.publish_all();
+        let snap = recovered.handle().load();
+        assert_eq!(snap.global_ratings(), &reference.global().ratings()[..]);
+        for _ in 0..4 {
+            let q = unit(&mut rng);
+            assert_eq!(snap.scores(&q), reference.combined_scores(&q));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn linger_buckets_trickle_feedback_into_batches() {
+        // a trickle of records spaced out in time must NOT dispatch as
+        // batch-of-1: the linger window buckets them (mirroring the embed
+        // engine's batcher). Generous timing so loaded CI cannot flake.
+        let mut rng = Rng::new(47);
+        let router = ShardedRouter::new(
+            EagleParams::default(),
+            N_MODELS,
+            DIM,
+            EpochParams { publish_every: 1024, publish_interval_ms: 2_000 },
+            ShardParams { count: 1, hash_seed: 0xEA61E },
+        );
+        let pipeline = IngestPipeline::start(
+            router,
+            None,
+            IngestOptions {
+                epoch: EpochParams { publish_every: 1024, publish_interval_ms: 2_000 },
+                linger: Duration::from_millis(400),
+                ..Default::default()
+            },
+        );
+        const RECORDS: u64 = 24;
+        for _ in 0..RECORDS {
+            assert!(pipeline.push_verdict(rand_verdict(&mut rng)));
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        pipeline.flush();
+        let m = pipeline.metrics();
+        assert_eq!(m.folded_global.get(), RECORDS);
+        let batches = m.dispatch_batches.get();
+        assert!(batches >= 1);
+        assert!(
+            m.folded_global.get() >= 2 * batches,
+            "linger failed: {RECORDS} records dispatched in {batches} batches \
+             (mean batch < 2)"
+        );
+        pipeline.shutdown();
     }
 
     #[test]

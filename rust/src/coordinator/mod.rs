@@ -10,11 +10,15 @@
 //!   hash-partitioned corpus, one writer per shard, shared global ELO.
 //! - [`ingest`] — the sharded ingest pipeline: embed-on-applier batching,
 //!   a stream-order global dispatcher, one applier thread per shard lane.
-//! - [`state`] — snapshot/restore of router state (persistence).
+//! - [`durable`] — segment-granular durable persistence: sealed segment
+//!   files + per-shard delta logs + an atomically-swapped manifest, with
+//!   crash recovery back to a bit-identical [`sharded::ShardedRouter`].
+//! - [`state`] — legacy single-JSON snapshot/restore of router state.
 //!
 //! The [`Router`] trait is the uniform surface the evaluation harness and
 //! the server drive; Eagle and the three baselines all implement it.
 
+pub mod durable;
 pub mod feedback;
 pub mod ingest;
 pub mod policy;

@@ -181,6 +181,17 @@ impl IdBlocks {
         self.pending.push(global_id);
     }
 
+    /// Global id of a shard-local entry (sealed or pending) — the
+    /// writer-side counterpart of [`FrozenIds::global_of`], used by the
+    /// durable store to serialize a lane without freezing it.
+    pub fn get(&self, local: usize) -> u32 {
+        if local >= self.sealed_len {
+            return self.pending[local - self.sealed_len];
+        }
+        let b = self.starts.partition_point(|&s| s <= local) - 1;
+        self.blocks[b][local - self.starts[b]]
+    }
+
     /// Seal pending ids and hand out an immutable view of everything.
     pub fn freeze(&mut self) -> FrozenIds {
         if !self.pending.is_empty() {
@@ -303,7 +314,7 @@ pub struct ShardLane {
 }
 
 impl ShardLane {
-    fn with_ids(writer: RouterWriter, mut ids: IdBlocks) -> Self {
+    pub(crate) fn with_ids(writer: RouterWriter, mut ids: IdBlocks) -> Self {
         let initial = ids.freeze();
         debug_assert_eq!(initial.len(), writer.router().store().len(), "ids/store skew");
         ShardLane { writer, ids, ids_cell: Arc::new(RcuCell::new(Arc::new(initial))) }
@@ -344,6 +355,11 @@ impl ShardLane {
     /// The wrapped single-shard writer (diagnostics).
     pub fn writer(&self) -> &RouterWriter {
         &self.writer
+    }
+
+    /// The writer-side id map (durable-store serialization).
+    pub(crate) fn ids_ref(&self) -> &IdBlocks {
+        &self.ids
     }
 }
 
@@ -435,6 +451,45 @@ impl ShardedRouter {
             lanes,
             next_id: n as u32,
         }
+    }
+
+    /// Reassemble a router from recovered parts (the durable store's
+    /// restart path, [`super::durable::Recovery::into_router`]): lanes
+    /// carry their restored stores + id maps, `elo` is the checkpointed
+    /// global table with the durable tail already refolded, and `next_id`
+    /// continues the global arrival-id space past every recovered record.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        params: EagleParams,
+        n_models: usize,
+        dim: usize,
+        shard_params: ShardParams,
+        elo: GlobalElo,
+        cadence: EpochParams,
+        lanes: Vec<ShardLane>,
+        next_id: u32,
+    ) -> Self {
+        assert_eq!(lanes.len(), shard_params.count, "lane/shard count skew");
+        ShardedRouter {
+            params,
+            n_models,
+            dim,
+            shard_params,
+            global: GlobalLane::from_elo(elo, cadence),
+            lanes,
+            next_id,
+        }
+    }
+
+    /// The live (writer-side) global-ELO table — what the durable
+    /// checkpoint captures.
+    pub fn global_elo(&self) -> &GlobalElo {
+        self.global.elo()
+    }
+
+    /// Writer-side lanes (durable-store bootstrap serialization).
+    pub(crate) fn lanes_ref(&self) -> &[ShardLane] {
+        &self.lanes
     }
 
     /// The lock-free reader handle (cheap to clone, `Send + Sync`).
@@ -1017,8 +1072,7 @@ mod tests {
             flat.observe(rand_obs(&mut rng));
         }
         let probes: Vec<Vec<f32>> = (0..4).map(|_| unit(&mut rng)).collect();
-        let expected: Vec<Vec<f64>> =
-            probes.iter().map(|q| flat.combined_scores(q)).collect();
+        let expected: Vec<Vec<f64>> = probes.iter().map(|q| flat.combined_scores(q)).collect();
         let feedback_len = flat.feedback_len();
         let mut sharded = ShardedRouter::from_router(flat, cadence(8), shards(4));
         assert_eq!(sharded.history_len(), feedback_len);

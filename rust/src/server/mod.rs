@@ -46,8 +46,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{EpochParams, IvfPublishParams, ShardParams};
+use crate::coordinator::durable::{DurableOptions, DurableStore};
 use crate::coordinator::feedback::{ComparisonSampler, RawVerdict};
-use crate::coordinator::ingest::{IngestMetrics, IngestOptions, IngestPipeline, PersistTarget};
+use crate::coordinator::ingest::{
+    IngestMetrics, IngestOptions, IngestPipeline, PersistSink, PersistTarget,
+};
 use crate::coordinator::policy::BudgetPolicy;
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::router::EagleRouter;
@@ -64,18 +67,46 @@ const MAX_PIPELINE: usize = 32;
 
 /// Everything configurable about the serving state in one place (epoch
 /// cadence, sharding topology, IVF publication, background persistence).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ServerOptions {
     pub epoch: EpochParams,
     pub shards: ShardParams,
     /// IVF publication policy for every shard lane (threshold 0 = flat
     /// views only).
     pub ivf: IvfPublishParams,
-    /// Periodic background persistence from the ingest beat (0 = off).
+    /// Periodic persistence beat from the ingest dispatcher (0 = no
+    /// beat; a durable store still appends + seals inline and
+    /// checkpoints on flush/admin/shutdown).
     pub persist_interval_ms: u64,
-    /// Where periodic persistence writes (falls back to the admin
-    /// snapshot path when unset).
+    /// Legacy whole-JSON persistence target (falls back to the admin
+    /// snapshot path when unset). Ignored when `persist_dir` is set.
     pub persist_path: Option<std::path::PathBuf>,
+    /// Durable segment-store directory (`[persist] dir`). When set, the
+    /// server recovers from it at startup if it exists (otherwise
+    /// bootstraps it from the starting router), appends every ingested
+    /// record to its delta logs, and the admin `snapshot` op rides the
+    /// store instead of writing a JSON blob.
+    pub persist_dir: Option<std::path::PathBuf>,
+    /// Durable-store seal threshold (`[persist] seal_bytes`).
+    pub seal_bytes: usize,
+    /// Durable-store fsync policy (`[persist] fsync`).
+    pub fsync: bool,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        let durable = DurableOptions::default();
+        ServerOptions {
+            epoch: EpochParams::default(),
+            shards: ShardParams::default(),
+            ivf: IvfPublishParams::default(),
+            persist_interval_ms: 0,
+            persist_path: None,
+            persist_dir: None,
+            seal_bytes: durable.seal_bytes,
+            fsync: durable.fsync,
+        }
+    }
 }
 
 /// Shared server state.
@@ -91,8 +122,12 @@ pub struct ServerState {
     pub embed: EmbedHandle,
     pub metrics: Arc<Metrics>,
     pub sampler: ComparisonSampler,
-    /// Where the admin `snapshot` op persists state (None = op disabled).
+    /// Where the admin `snapshot` op persists state as legacy JSON
+    /// (None = op disabled unless a durable store is attached).
     pub snapshot_path: Option<std::path::PathBuf>,
+    /// The durable segment store, when `[persist] dir` is configured —
+    /// the admin `snapshot` op checkpoints it instead of writing JSON.
+    durable: Option<Arc<DurableStore>>,
     stop: AtomicBool,
 }
 
@@ -144,8 +179,10 @@ impl ServerState {
         )
     }
 
-    /// Construct with the full option set — this starts the ingest
-    /// pipeline threads (one dispatcher + one applier per shard).
+    /// Construct with the full option set. With a `persist_dir`, the
+    /// durable store decides the starting state: an existing store is
+    /// recovered (the passed router only seeds a store that does not
+    /// exist yet — the migration path from legacy JSON snapshots).
     pub fn with_options(
         router: EagleRouter<FlatStore>,
         registry: ModelRegistry,
@@ -153,14 +190,57 @@ impl ServerState {
         metrics: Arc<Metrics>,
         opts: ServerOptions,
     ) -> Self {
-        let mut writer = ShardedRouter::from_router(router, opts.epoch.clone(), opts.shards);
+        let durable_opts =
+            DurableOptions { seal_bytes: opts.seal_bytes.max(1), fsync: opts.fsync };
+        let (writer, durable) = match &opts.persist_dir {
+            Some(dir) if DurableStore::exists(dir) => {
+                // the store is authoritative: recover it and drop the
+                // passed router without partitioning it first
+                let (store, recovery) =
+                    DurableStore::open(dir, durable_opts).expect("open durable store");
+                let writer = recovery
+                    .into_router(opts.epoch.clone())
+                    .expect("recover durable store");
+                (writer, Some(store))
+            }
+            Some(dir) => {
+                let writer =
+                    ShardedRouter::from_router(router, opts.epoch.clone(), opts.shards.clone());
+                let store = DurableStore::create_from_router(dir, &writer, durable_opts)
+                    .expect("create durable store");
+                (writer, Some(store))
+            }
+            None => (
+                ShardedRouter::from_router(router, opts.epoch.clone(), opts.shards.clone()),
+                None,
+            ),
+        };
+        Self::with_sharded(writer, durable, registry, embed, metrics, opts)
+    }
+
+    /// Construct around an explicit sharded writer (recovered or
+    /// pre-partitioned) — this starts the ingest pipeline threads (one
+    /// dispatcher + one applier per shard).
+    pub fn with_sharded(
+        mut writer: ShardedRouter,
+        durable: Option<Arc<DurableStore>>,
+        registry: ModelRegistry,
+        embed: EmbedHandle,
+        metrics: Arc<Metrics>,
+        opts: ServerOptions,
+    ) -> Self {
         writer.set_ivf(opts.ivf);
         let snapshots = writer.handle();
-        let persist = match (&opts.persist_path, opts.persist_interval_ms) {
-            (Some(path), ms) if ms > 0 => Some(PersistTarget {
-                path: path.clone(),
-                interval: Duration::from_millis(ms),
-            }),
+        let interval = Duration::from_millis(opts.persist_interval_ms);
+        let persist = match (&durable, &opts.persist_path, opts.persist_interval_ms) {
+            // the durable store always rides the pipeline (inline
+            // appends); the interval only paces the checkpoint beat
+            (Some(store), _, _) => {
+                Some(PersistTarget { sink: PersistSink::Durable(store.clone()), interval })
+            }
+            (None, Some(path), ms) if ms > 0 => {
+                Some(PersistTarget { sink: PersistSink::Json(path.clone()), interval })
+            }
             _ => None,
         };
         let ingest = IngestPipeline::start(
@@ -178,6 +258,7 @@ impl ServerState {
             metrics,
             sampler: ComparisonSampler::default(),
             snapshot_path: None,
+            durable,
             stop: AtomicBool::new(false),
         }
     }
@@ -186,6 +267,11 @@ impl ServerState {
     pub fn with_snapshot_path(mut self, path: std::path::PathBuf) -> Self {
         self.snapshot_path = Some(path);
         self
+    }
+
+    /// The attached durable store, if `[persist] dir` is configured.
+    pub fn durable_store(&self) -> Option<&Arc<DurableStore>> {
+        self.durable.as_ref()
     }
 
     /// Ingest-side progress counters (queued/applied/dropped, per shard).
@@ -264,9 +350,26 @@ impl ServerState {
     pub fn handle(&self, req: Request, rng: &mut Rng) -> Response {
         match req {
             Request::Ping => Response::Pong,
-            Request::Snapshot => match &self.snapshot_path {
-                None => Response::Error("snapshot op disabled (no path configured)".into()),
-                Some(path) => {
+            Request::Snapshot => match (&self.durable, &self.snapshot_path) {
+                (Some(store), _) => {
+                    // the durable store rides the op: flush + fsync every
+                    // delta log and advance the global checkpoint —
+                    // O(unsynced records), not O(corpus)
+                    if self.ingest.persist_now() {
+                        let entries = self.snapshots.load().store_len() as u64;
+                        Response::SnapshotSaved {
+                            path: store.dir().display().to_string(),
+                            entries,
+                        }
+                    } else {
+                        self.metrics.errors.inc();
+                        Response::Error("snapshot: ingest pipeline is shut down".into())
+                    }
+                }
+                (None, None) => {
+                    Response::Error("snapshot op disabled (no path configured)".into())
+                }
+                (None, Some(path)) => {
                     // flush the pipeline so the persisted snapshot covers
                     // everything accepted before this op, then write the
                     // published state — no writer lane is ever locked
@@ -351,8 +454,7 @@ impl ServerState {
     /// All single `route` requests in the batch are served together
     /// through [`ServerState::route_many`].
     pub fn handle_lines(&self, lines: &[String], rng: &mut Rng) -> Vec<Response> {
-        let parsed: Vec<Result<Request, String>> =
-            lines.iter().map(|l| parse_request(l)).collect();
+        let parsed: Vec<Result<Request, String>> = lines.iter().map(|l| parse_request(l)).collect();
         let mut out: Vec<Option<Response>> = (0..lines.len()).map(|_| None).collect();
 
         // co-batch the single routes (2+ makes the amortization worth it)
@@ -625,5 +727,12 @@ mod tests {
         assert_eq!(opts.ivf, IvfPublishParams::default());
         assert_eq!(opts.persist_interval_ms, 0);
         assert!(opts.persist_path.is_none());
+        assert!(opts.persist_dir.is_none());
+        let durable = DurableOptions::default();
+        assert_eq!(opts.seal_bytes, durable.seal_bytes);
+        assert_eq!(opts.fsync, durable.fsync);
+        let persist = crate::config::PersistParams::default();
+        assert_eq!(opts.seal_bytes, persist.seal_bytes);
+        assert_eq!(opts.fsync, persist.fsync);
     }
 }

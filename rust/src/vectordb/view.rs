@@ -189,6 +189,33 @@ impl SegmentStore {
         self.sealed.len() + usize::from(!self.pending.is_empty())
     }
 
+    /// Append one pre-sealed immutable block (durable-store recovery: each
+    /// on-disk segment file lands as one in-memory sealed segment, so a
+    /// restart costs one bulk copy per file instead of per-row inserts).
+    /// Rows keep arrival order, so ids stay insertion indices. Must be
+    /// called before any pending inserts — sealed ids precede pending ids.
+    /// No merging happens here; the next [`SegmentStore::freeze`] compacts
+    /// as usual.
+    pub fn push_sealed_block<'a, I>(&mut self, rows: I)
+    where
+        I: IntoIterator<Item = (&'a [f32], Feedback)>,
+    {
+        assert!(
+            self.pending.is_empty(),
+            "sealed blocks must precede pending inserts"
+        );
+        let mut seg = Segment::new(self.dim);
+        for (vector, feedback) in rows {
+            seg.push(vector, feedback);
+        }
+        if seg.is_empty() {
+            return;
+        }
+        self.bases.push(self.sealed_len as u32);
+        self.sealed_len += seg.len();
+        self.sealed.push(Arc::new(seg));
+    }
+
     /// Seal the pending segment (if any) and merge binary-counter style:
     /// while the newest sealed segment is at least as large as its
     /// predecessor, replace the pair with their concatenation. Keeps the
@@ -416,6 +443,50 @@ mod tests {
         assert!(view.search(&[1.0, 0.0, 0.0, 0.0], 5).is_empty());
         let empty = FrozenView::empty(4);
         assert!(empty.search(&[1.0, 0.0, 0.0, 0.0], 3).is_empty());
+    }
+
+    #[test]
+    fn sealed_blocks_match_flat_and_keep_ids() {
+        // the durable-recovery bulk path: pre-sealed blocks + pending
+        // inserts must be indistinguishable from row-at-a-time adds
+        let mut rng = Rng::new(17);
+        let dim = 8;
+        let mut flat = FlatStore::new(dim);
+        let mut seg = SegmentStore::new(dim);
+        let mut i = 0;
+        for _ in 0..5 {
+            let n = 3 + rng.below(20);
+            let rows: Vec<(Vec<f32>, Feedback)> = (0..n)
+                .map(|_| {
+                    let v = random_unit(&mut rng, dim);
+                    let fb = dummy_feedback(i);
+                    i += 1;
+                    (v, fb)
+                })
+                .collect();
+            for (v, fb) in &rows {
+                flat.add(v, fb.clone());
+            }
+            seg.push_sealed_block(rows.iter().map(|(v, fb)| (v.as_slice(), fb.clone())));
+        }
+        assert_eq!(seg.len(), flat.len());
+        for _ in 0..7 {
+            let v = random_unit(&mut rng, dim);
+            flat.add(&v, dummy_feedback(i));
+            seg.add(&v, dummy_feedback(i));
+            i += 1;
+        }
+        let q = random_unit(&mut rng, dim);
+        assert_eq!(flat.search(&q, 10), seg.search(&q, 10));
+        for id in 0..flat.len() as u32 {
+            assert_eq!(flat.vector(id), seg.vector(id));
+            assert_eq!(flat.feedback(id), seg.feedback(id));
+        }
+        let view = seg.freeze();
+        assert_eq!(view.search(&q, 10), flat.search(&q, 10));
+        // an empty block is a no-op
+        seg.push_sealed_block(std::iter::empty::<(&[f32], Feedback)>());
+        assert_eq!(seg.len(), flat.len());
     }
 
     #[test]

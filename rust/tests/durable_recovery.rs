@@ -1,0 +1,356 @@
+//! Durable-store crash recovery: property tests that
+//! `recover(persist(state)) ≡ state` — bit-identical `score_batch`
+//! results and global-ELO table — for K ∈ {1, 4} across interleaved
+//! seal/delta/ELO-fold histories, a torn-tail-write test, and a full
+//! SIGKILL-the-server crash/restart e2e (hash embedder, no artifacts).
+
+use std::path::{Path, PathBuf};
+
+use eagle::config::{EagleParams, EpochParams, ShardParams};
+use eagle::coordinator::durable::{DurableLaneWriter, DurableOptions, DurableStore, StoreMeta};
+use eagle::coordinator::router::Observation;
+use eagle::coordinator::sharded::{shard_of, ShardedRouter};
+use eagle::elo::{Comparison, Outcome};
+use eagle::util::{l2_normalize, Rng};
+
+const DIM: usize = 16;
+const N_MODELS: usize = 5;
+const HASH_SEED: u64 = 0xEA61E;
+
+fn unit(rng: &mut Rng) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+    l2_normalize(&mut v);
+    v
+}
+
+fn rand_obs(rng: &mut Rng) -> Observation {
+    let a = rng.below(N_MODELS);
+    let mut b = rng.below(N_MODELS - 1);
+    if b >= a {
+        b += 1;
+    }
+    let outcome = match rng.below(3) {
+        0 => Outcome::WinA,
+        1 => Outcome::WinB,
+        _ => Outcome::Draw,
+    };
+    Observation::single(unit(rng), Comparison { a, b, outcome })
+}
+
+fn cadence() -> EpochParams {
+    EpochParams { publish_every: 16, publish_interval_ms: 10_000 }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("eagle_recovery_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn meta(k: usize) -> StoreMeta {
+    StoreMeta {
+        params: EagleParams::default(),
+        n_models: N_MODELS,
+        dim: DIM,
+        shards: ShardParams { count: k, hash_seed: HASH_SEED },
+    }
+}
+
+/// Drive a [`ShardedRouter`] and its durable lane writers through one
+/// interleaved history: every record is observed in memory and appended
+/// to its shard's delta log (exactly what the ingest appliers do), with
+/// seals forced by the tiny seal threshold, explicit mid-stream seals,
+/// periodic syncs, and mid-stream global-ELO checkpoints.
+fn drive_history(
+    dir: &Path,
+    k: usize,
+    n: usize,
+    opts: &DurableOptions,
+    rng: &mut Rng,
+) -> (ShardedRouter, Vec<Observation>) {
+    let store = DurableStore::create(dir, meta(k), opts.clone()).unwrap();
+    let mut writers: Vec<DurableLaneWriter> =
+        (0..k).map(|s| store.lane_writer(s).unwrap()).collect();
+    let mut router =
+        ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(), meta(k).shards);
+    let mut stream = Vec::with_capacity(n);
+    for i in 0..n {
+        let obs = rand_obs(rng);
+        let shard = router.shard_for(&obs.embedding);
+        let gid = router.next_global_id();
+        router.observe(obs.clone());
+        writers[shard].append(gid, &obs).unwrap();
+        stream.push(obs);
+        // interleave seals, syncs, and checkpoints through the history
+        if i % 37 == 36 {
+            writers[rng.below(k)].seal().unwrap();
+        }
+        if i % 23 == 22 {
+            writers[rng.below(k)].sync().unwrap();
+        }
+        if i % 61 == 60 {
+            for w in &mut writers {
+                w.sync().unwrap();
+            }
+            store
+                .checkpoint_global(router.next_global_id(), router.global_elo().export_state())
+                .unwrap();
+        }
+    }
+    for w in &mut writers {
+        w.sync().unwrap();
+    }
+    (router, stream)
+}
+
+fn assert_equivalent(a: &mut ShardedRouter, b: &mut ShardedRouter, rng: &mut Rng, what: &str) {
+    a.publish_all();
+    b.publish_all();
+    assert_eq!(a.store_len(), b.store_len(), "{what}: store length");
+    assert_eq!(a.history_len(), b.history_len(), "{what}: history length");
+    assert_eq!(
+        a.global_elo().export_state(),
+        b.global_elo().export_state(),
+        "{what}: global-ELO state"
+    );
+    let snap_a = a.handle().load();
+    let snap_b = b.handle().load();
+    assert_eq!(snap_a.global_ratings(), snap_b.global_ratings(), "{what}: ratings");
+    let queries: Vec<Vec<f32>> = (0..6).map(|_| unit(rng)).collect();
+    assert_eq!(
+        snap_a.score_batch(&queries),
+        snap_b.score_batch(&queries),
+        "{what}: score_batch"
+    );
+}
+
+#[test]
+fn recover_equals_state_across_interleaved_histories() {
+    // the acceptance property: recover(persist(state)) ≡ state for
+    // K ∈ {1, 4}, across random interleavings of seals, delta appends,
+    // ELO folds, and checkpoints — and the equivalence survives further
+    // ingest (the averaging trajectory resumed, not just the ratings)
+    for &k in &[1usize, 4] {
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(0xD0_0D + seed * 101 + k as u64);
+            let dir = tmp_dir(&format!("prop_k{k}_s{seed}"));
+            let n = 150 + rng.below(150);
+            let opts = DurableOptions { seal_bytes: 500 + rng.below(1500), fsync: false };
+            let (mut original, _stream) = drive_history(&dir, k, n, &opts, &mut rng);
+
+            let (store, recovery) = DurableStore::open(&dir, opts.clone()).unwrap();
+            assert_eq!(recovery.torn_bytes, 0, "clean history must not lose bytes");
+            assert_eq!(recovery.total_records(), n);
+            let mut recovered = recovery.into_router(cadence()).unwrap();
+            assert_eq!(recovered.next_global_id(), original.next_global_id());
+            assert_equivalent(&mut original, &mut recovered, &mut rng, "post-recovery");
+
+            // both routers ingest the same continuation; the recovered
+            // one also keeps appending durably (writers survive reopen)
+            let mut writers: Vec<DurableLaneWriter> =
+                (0..k).map(|s| store.lane_writer(s).unwrap()).collect();
+            for _ in 0..60 {
+                let obs = rand_obs(&mut rng);
+                let shard = recovered.shard_for(&obs.embedding);
+                let gid = recovered.next_global_id();
+                original.observe(obs.clone());
+                recovered.observe(obs.clone());
+                writers[shard].append(gid, &obs).unwrap();
+            }
+            for w in &mut writers {
+                w.sync().unwrap();
+            }
+            assert_equivalent(&mut original, &mut recovered, &mut rng, "post-continuation");
+
+            // ...and a second recovery sees the continuation too
+            drop(writers);
+            drop(store);
+            let (_store, recovery) = DurableStore::open(&dir, opts).unwrap();
+            let mut twice = recovery.into_router(cadence()).unwrap();
+            assert_equivalent(&mut original, &mut twice, &mut rng, "second recovery");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+#[test]
+fn torn_tail_write_recovers_to_last_full_record() {
+    let mut rng = Rng::new(0x7EA2);
+    let k = 4;
+    let dir = tmp_dir("torn_tail");
+    // nothing seals: every record stays in its delta log, so truncating
+    // one log mid-frame tears exactly its last record
+    let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+    let (_original, stream) = drive_history(&dir, k, 200, &opts, &mut rng);
+
+    // tear the final record of the last observation's shard
+    let torn_shard = shard_of(&stream[199].embedding, HASH_SEED, k);
+    let log = std::fs::read_dir(dir.join(format!("shard-{torn_shard}")))
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "log"))
+        .unwrap();
+    let len = std::fs::metadata(&log).unwrap().len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&log)
+        .unwrap()
+        .set_len(len - 3)
+        .unwrap();
+
+    let (_store, recovery) = DurableStore::open(&dir, opts).unwrap();
+    assert!(recovery.torn_bytes > 0, "the torn tail must be detected");
+    assert_eq!(recovery.total_records(), 199, "recovery keeps every full record");
+    let mut recovered = recovery.into_router(cadence()).unwrap();
+
+    // reference: replay exactly the surviving records, preserving their
+    // original global arrival ids (the torn shard has a gap at its tail)
+    let torn_gid = stream[..200]
+        .iter()
+        .enumerate()
+        .filter(|(_, o)| shard_of(&o.embedding, HASH_SEED, k) == torn_shard)
+        .map(|(gid, _)| gid as u32)
+        .next_back()
+        .unwrap();
+    let reference_shell =
+        ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(), meta(k).shards);
+    let handle = reference_shell.handle();
+    let (mut global, mut lanes) = reference_shell.into_lanes();
+    for (gid, obs) in stream.iter().enumerate() {
+        let gid = gid as u32;
+        if gid == torn_gid {
+            continue;
+        }
+        global.apply(&obs.comparisons);
+        lanes[shard_of(&obs.embedding, HASH_SEED, k)].apply(gid, obs.clone());
+    }
+    global.publish();
+    for lane in &mut lanes {
+        lane.publish();
+    }
+    recovered.publish_all();
+    let snap_ref = handle.load();
+    let snap_rec = recovered.handle().load();
+    assert_eq!(snap_rec.store_len(), 199);
+    assert_eq!(snap_rec.global_ratings(), snap_ref.global_ratings());
+    for _ in 0..6 {
+        let q = unit(&mut rng);
+        assert_eq!(snap_rec.scores(&q), snap_ref.scores(&q), "torn recovery diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- SIGKILL crash/restart e2e ----------------------------------------
+
+/// Spawn `eagle serve` on a free port with a durable dir and hash
+/// embedder (no artifacts needed), returning the child + bound address.
+fn spawn_server(durable_dir: &std::path::Path) -> (std::process::Child, String) {
+    use std::io::{BufRead, BufReader};
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_eagle"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--workers",
+            "2",
+            "--set",
+            &format!("persist.dir={}", durable_dir.display()),
+            "--set",
+            "persist.interval_ms=20",
+            "--set",
+            "persist.seal_bytes=16384",
+            "--set",
+            "persist.fsync=false",
+            "--set",
+            "shards.count=2",
+            "--set",
+            "epoch.publish_every=8",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn eagle serve");
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut addr = None;
+    let mut line = String::new();
+    // the banner line is printed once serving starts
+    for _ in 0..64 {
+        line.clear();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        if let Some(rest) = line.strip_prefix("eagle serving on ") {
+            addr = rest.split_whitespace().next().map(str::to_string);
+            break;
+        }
+    }
+    // keep draining the pipe so the server never blocks on a full pipe
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).unwrap_or(0) > 0 {
+            sink.clear();
+        }
+    });
+    let addr = addr.expect("server banner with bound address");
+    (child, addr)
+}
+
+#[test]
+fn sigkill_mid_ingest_recovers_and_serves() {
+    use eagle::server::client::EagleClient;
+
+    let root = tmp_dir("sigkill");
+    let durable = root.join("durable");
+    std::fs::create_dir_all(&root).unwrap();
+
+    // phase 1: serve, storm feedback, checkpoint, storm more, SIGKILL
+    let (mut child, addr) = spawn_server(&durable);
+    let mut client = EagleClient::connect(&addr).expect("connect");
+    for i in 0..300 {
+        client
+            .feedback(&format!("crash recovery prompt {i}"), "gpt-4", "mistral-7b-chat", 1.0)
+            .expect("feedback accepted");
+    }
+    // the admin snapshot op = flush + fsync + checkpoint on the durable
+    // store: everything accepted so far is durable after this returns
+    let (snap_path, entries) = client.snapshot().expect("durable snapshot op");
+    assert_eq!(entries, 300, "checkpoint must cover every accepted record");
+    assert_eq!(snap_path, durable.display().to_string());
+    // keep ingesting so the kill lands mid-stream, then SIGKILL
+    for i in 300..400 {
+        let _ =
+            client.feedback(&format!("crash recovery prompt {i}"), "gpt-4", "gpt-3.5-turbo", 0.0);
+    }
+    child.kill().expect("SIGKILL server");
+    let _ = child.wait();
+    drop(client);
+
+    // phase 2: recover in-process — the checkpointed prefix survives
+    let opts = DurableOptions { seal_bytes: 16384, fsync: false };
+    let (_store, recovery) = DurableStore::open(&durable, opts).unwrap();
+    assert!(
+        recovery.total_records() >= 300,
+        "recovered {} records, checkpoint covered 300",
+        recovery.total_records()
+    );
+    let recovered = recovery
+        .into_router(EpochParams::default())
+        .expect("recovered router");
+    assert!(recovered.store_len() >= 300);
+    assert_eq!(recovered.store_len(), recovered.history_len());
+    drop(_store);
+
+    // phase 3: restart the server from the durable dir and route
+    let (mut child, addr) = spawn_server(&durable);
+    let mut client = EagleClient::connect(&addr).expect("reconnect");
+    let decision = client.route("which model should answer this?", 0.02).expect("route");
+    assert!(!decision.model.is_empty());
+    let (_, entries) = client.snapshot().expect("snapshot after restart");
+    assert!(entries >= 300, "restarted server lost the corpus ({entries} records)");
+    child.kill().ok();
+    let _ = child.wait();
+    std::fs::remove_dir_all(&root).ok();
+}

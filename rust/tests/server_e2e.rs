@@ -111,6 +111,83 @@ fn start_hash_server(
     (server, service, addr)
 }
 
+/// Hash-backed server with the durable segment store attached
+/// (`[persist] dir` equivalent): the with_options path creates the store
+/// on first boot and recovers from it on the next.
+fn start_hash_server_durable(
+    dim: usize,
+    shards: usize,
+    durable_dir: &Path,
+) -> (Server, EmbedService, String) {
+    let metrics = Arc::new(Metrics::new());
+    let service = EmbedService::start_hash(
+        dim,
+        BatcherOptions { batch_window_us: 100, max_batch: 16 },
+        metrics.clone(),
+    );
+    let registry = ModelRegistry::routerbench();
+    let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(dim));
+    let state = ServerState::with_options(
+        router,
+        registry,
+        service.handle(),
+        metrics,
+        ServerOptions {
+            epoch: EpochParams { publish_every: 16, publish_interval_ms: 5 },
+            shards: ShardParams { count: shards, hash_seed: 0xEA61E },
+            persist_interval_ms: 10,
+            persist_dir: Some(durable_dir.to_path_buf()),
+            seal_bytes: 8192,
+            fsync: false,
+            ..Default::default()
+        },
+    );
+    let server = Server::start(Arc::new(state), "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    (server, service, addr)
+}
+
+#[test]
+fn hash_server_durable_dir_survives_restart() {
+    let dim = 64;
+    let root = std::env::temp_dir()
+        .join(format!("eagle_server_durable_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let durable = root.join("store");
+
+    // first boot: bootstrap the store, ingest, checkpoint via the admin op
+    let (server, _service, addr) = start_hash_server_durable(dim, 2, &durable);
+    let mut client = EagleClient::connect(&addr).unwrap();
+    for (text, a, b, score) in feedback_stream(120, 0xD1, 4) {
+        let names = server.state.registry.entries();
+        client.feedback(&text, &names[a].name, &names[b].name, score).unwrap();
+    }
+    let (snap_path, entries) = client.snapshot().unwrap();
+    assert_eq!(entries, 120);
+    assert_eq!(snap_path, durable.display().to_string());
+    drop(client);
+    server.shutdown();
+
+    // second boot: with_options recovers the corpus from the durable dir
+    let (server, _service, addr) = start_hash_server_durable(dim, 2, &durable);
+    let snap = server.state.snapshots.load();
+    assert_eq!(snap.store_len(), 120, "restart lost the durable corpus");
+    assert_eq!(snap.history_len(), 120);
+    let mut client = EagleClient::connect(&addr).unwrap();
+    let decision = client.route("does routing still work after recovery?", 0.02).unwrap();
+    assert!(!decision.model.is_empty());
+    // and ingest keeps extending the same store across the restart
+    for (text, a, b, score) in feedback_stream(30, 0xD2, 4) {
+        let names = server.state.registry.entries();
+        client.feedback(&text, &names[a].name, &names[b].name, score).unwrap();
+    }
+    let (_, entries) = client.snapshot().unwrap();
+    assert_eq!(entries, 150);
+    drop(client);
+    server.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
 /// A deterministic feedback stream over the RouterBench model pool:
 /// (text, a, b, score). Outcomes vary so the global ELO trajectory is
 /// order-sensitive — matching the in-order replay proves stream order.

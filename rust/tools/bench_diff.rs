@@ -3,16 +3,20 @@
 //!
 //! ```bash
 //! cargo run --release --bin bench-diff -- baseline.json current.json \
-//!     [--threshold 0.15] [--strict]
+//!     [--threshold 0.15] [--md-out summary.md]
 //! ```
 //!
 //! Direction is inferred from the metric name (`*_us`/`*latency*` are
 //! lower-is-better; `*qps`/`*rps`/`*ratio*`/`*speedup*` higher-is-better;
-//! anything else is reported as neutral). The exit code is 0 unless
-//! `--strict` is passed and at least one regression beyond the threshold
-//! was found, so the CI step stays non-blocking by default.
+//! anything else is reported as neutral). The exit code is 1 when at
+//! least one regression beyond the threshold was found — the CI step
+//! wraps the call in `continue-on-error: true`, so the signal is visible
+//! (red step + summary table) without blocking the job. `--md-out FILE`
+//! appends a GitHub-flavored markdown rendering of the comparison (the
+//! CI step points it at `$GITHUB_STEP_SUMMARY`).
 
 use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::process::ExitCode;
 
 use eagle::bench::{fmt, print_table};
@@ -63,7 +67,7 @@ fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut paths = Vec::new();
     let mut threshold = 0.15f64;
-    let mut strict = false;
+    let mut md_out: Option<String> = None;
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
@@ -75,8 +79,16 @@ fn main() -> ExitCode {
                 threshold = v;
                 i += 2;
             }
+            "--md-out" => {
+                let Some(p) = argv.get(i + 1) else {
+                    eprintln!("--md-out needs a file path");
+                    return ExitCode::from(2);
+                };
+                md_out = Some(p.clone());
+                i += 2;
+            }
+            // kept for compatibility: regressions now always exit 1
             "--strict" => {
-                strict = true;
                 i += 1;
             }
             other => {
@@ -86,7 +98,9 @@ fn main() -> ExitCode {
         }
     }
     if paths.len() != 2 {
-        eprintln!("usage: bench-diff BASELINE.json CURRENT.json [--threshold 0.15] [--strict]");
+        eprintln!(
+            "usage: bench-diff BASELINE.json CURRENT.json [--threshold 0.15] [--md-out FILE]"
+        );
         return ExitCode::from(2);
     }
 
@@ -166,9 +180,77 @@ fn main() -> ExitCode {
         println!("new metrics (no baseline): {added:?}");
     }
 
-    if strict && !regressions.is_empty() {
-        ExitCode::from(1)
-    } else {
-        ExitCode::SUCCESS
+    if let Some(out) = &md_out {
+        if let Err(e) = append_markdown(
+            out,
+            &paths,
+            threshold,
+            &regressions,
+            &improvements,
+            &neutral_changes,
+            &missing,
+            &added,
+        ) {
+            eprintln!("bench-diff: writing {out}: {e}");
+        }
     }
+
+    if regressions.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+/// One markdown table per change class (rows are the same
+/// `[metric, baseline, current, delta]` vectors the console tables use).
+fn md_table(out: &mut String, title: &str, rows: &[Vec<String>]) {
+    if rows.is_empty() {
+        return;
+    }
+    out.push_str(&format!("\n#### {title}\n\n"));
+    out.push_str("| metric | baseline | current | delta |\n");
+    out.push_str("| --- | ---: | ---: | ---: |\n");
+    for row in rows {
+        out.push_str(&format!("| `{}` | {} | {} | {} |\n", row[0], row[1], row[2], row[3]));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn append_markdown(
+    path: &str,
+    paths: &[String],
+    threshold: f64,
+    regressions: &[Vec<String>],
+    improvements: &[Vec<String>],
+    neutral_changes: &[Vec<String>],
+    missing: &[&String],
+    added: &[&String],
+) -> std::io::Result<()> {
+    let mut md = String::new();
+    md.push_str(&format!(
+        "\n### Bench trend: `{}` vs `{}` (threshold {:.0}%)\n",
+        paths[1],
+        paths[0],
+        threshold * 100.0
+    ));
+    if regressions.is_empty() {
+        md.push_str("\nNo regressions beyond the threshold. :white_check_mark:\n");
+    } else {
+        md_table(
+            &mut md,
+            &format!(":red_circle: Regressions (> {:.0}% worse)", threshold * 100.0),
+            regressions,
+        );
+    }
+    md_table(&mut md, "Improvements", improvements);
+    md_table(&mut md, "Changed (no known direction)", neutral_changes);
+    if !missing.is_empty() {
+        md.push_str(&format!("\nMetrics missing from current: {missing:?}\n"));
+    }
+    if !added.is_empty() {
+        md.push_str(&format!("\nNew metrics (no baseline): {added:?}\n"));
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(md.as_bytes())
 }
