@@ -26,6 +26,9 @@ use eagle::tokenizer;
 use eagle::util::{l2_normalize, percentile, Rng};
 use eagle::vectordb::flat::FlatStore;
 use eagle::vectordb::ivf::{IvfIndex, IvfParams};
+use eagle::vectordb::kernel;
+use eagle::vectordb::topk::TopK;
+use eagle::vectordb::view::SegmentStore;
 use eagle::vectordb::{Feedback, ReadIndex, VectorIndex};
 
 const DIM: usize = 256;
@@ -207,6 +210,8 @@ fn main() {
     for r in &results {
         report.push_result(r);
     }
+    kernel_scan_sweep(&mut report);
+    ivf_nprobe_sweep(&mut report);
     contention_scenario(snap_writer, &mut report);
     sharded_storm_sweep(&obs, &mut report);
     ingest_pipeline_sweep(&mut report);
@@ -214,6 +219,188 @@ fn main() {
     if eagle::bench::json_enabled() {
         let path = report.write().expect("write bench json");
         println!("\nwrote {}", path.display());
+    }
+}
+
+/// The seed's scan hot loop (4-way unrolled scalar dot), re-implemented
+/// here verbatim so the kernel sweep's speedup is measured against the
+/// pre-kernel baseline in-artifact, whatever backend dispatch picked.
+fn seed_scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// The ISSUE 5 acceptance sweep: scan throughput over batch size × dim,
+/// three ways — the seed scalar path, the kernel single-query path, and
+/// the query-blocked multi-query path. Emits `kernel.b{B}.*` at the
+/// serving dim (256) and `kernel.d{D}.b{B}.*` otherwise; the acceptance
+/// gate is `kernel.b{B}.speedup_vs_scalar >= 2` at B >= 8.
+fn kernel_scan_sweep(report: &mut JsonReport) {
+    const K: usize = 20;
+    let n: usize = if eagle::bench::smoke() { 4_096 } else { 16_384 };
+    let dims: &[usize] = &[64, 256];
+    let batches: &[usize] = &[1, 8, 32];
+
+    println!(
+        "\n== scan kernels (backend {}, {n}-row corpus, top-{K}) ==",
+        kernel::active().name()
+    );
+    for &dim in dims {
+        let mut rng = Rng::new(0x5EED ^ dim as u64);
+        let mut store = SegmentStore::new(dim);
+        let mut slab: Vec<f32> = Vec::with_capacity(n * dim);
+        for _ in 0..n {
+            let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            l2_normalize(&mut v);
+            slab.extend_from_slice(&v);
+            store.add(&v, Feedback { comparisons: vec![rand_cmp(&mut rng)] });
+        }
+        let view = store.freeze();
+        for &b in batches {
+            let queries: Vec<Vec<f32>> = (0..b)
+                .map(|_| {
+                    let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                    l2_normalize(&mut v);
+                    v
+                })
+                .collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+
+            // sanity: the blocked path must retain exactly the per-query hits
+            let blocked_hits = view.search_batch(&qrefs, K);
+            for (q, hits) in qrefs.iter().zip(&blocked_hits) {
+                assert_eq!(hits, &view.search(q, K), "blocked scan diverged from singles");
+            }
+
+            let r_scalar = eagle::bench::bench(
+                &format!("kernel/scalar_d{dim}_b{b}"),
+                target_ms(150),
+                || {
+                    for q in &queries {
+                        let mut topk = TopK::new(K);
+                        for r in 0..n {
+                            topk.push(r as u32, seed_scalar_dot(&slab[r * dim..(r + 1) * dim], q));
+                        }
+                        std::hint::black_box(topk.into_sorted());
+                    }
+                },
+            );
+            let r_single = eagle::bench::bench(
+                &format!("kernel/single_d{dim}_b{b}"),
+                target_ms(150),
+                || {
+                    for q in &qrefs {
+                        std::hint::black_box(view.search(q, K));
+                    }
+                },
+            );
+            let r_blocked = eagle::bench::bench(
+                &format!("kernel/blocked_d{dim}_b{b}"),
+                target_ms(150),
+                || {
+                    std::hint::black_box(view.search_batch(&qrefs, K));
+                },
+            );
+            let qps = |r: &eagle::bench::BenchResult| b as f64 * 1e9 / r.mean_ns.max(1.0);
+            let (scalar_qps, single_qps, blocked_qps) =
+                (qps(&r_scalar), qps(&r_single), qps(&r_blocked));
+            let speedup = blocked_qps / scalar_qps.max(1e-9);
+            println!(
+                "  d={dim:<3} B={b:<2}: scalar {scalar_qps:>9.0} q/s | kernel single \
+                 {single_qps:>9.0} q/s | blocked {blocked_qps:>9.0} q/s  ({speedup:.2}x vs seed)"
+            );
+            let prefix = if dim == DIM {
+                format!("kernel.b{b}")
+            } else {
+                format!("kernel.d{dim}.b{b}")
+            };
+            report.push(&format!("{prefix}.scalar_qps"), scalar_qps);
+            report.push(&format!("{prefix}.single_qps"), single_qps);
+            report.push(&format!("{prefix}.qps"), blocked_qps);
+            report.push(&format!("{prefix}.speedup_vs_scalar"), speedup);
+        }
+    }
+}
+
+/// The ROADMAP-open IVF quality surface: recall@20 vs exact and probe
+/// throughput swept over `nprobe`, so the quality/cost trade-off of
+/// partial probes is tracked per PR (`ivf.p{P}.recall_ratio` /
+/// `ivf.p{P}.qps`).
+fn ivf_nprobe_sweep(report: &mut JsonReport) {
+    const K: usize = 20;
+    const DIM_IVF: usize = 64;
+    const N_CELLS: usize = 64;
+    let n: usize = if eagle::bench::smoke() { 4_000 } else { 20_000 };
+    let n_centers = 32;
+
+    // clustered corpus: partial probes have structure to exploit
+    let mut rng = Rng::new(0x1F5);
+    let centers: Vec<Vec<f32>> = (0..n_centers)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..DIM_IVF).map(|_| rng.normal() as f32).collect();
+            l2_normalize(&mut v);
+            v
+        })
+        .collect();
+    let mut vectors = Vec::with_capacity(n);
+    let mut flat = FlatStore::with_capacity(DIM_IVF, n);
+    for i in 0..n {
+        let c = &centers[i % n_centers];
+        let mut v: Vec<f32> = c.iter().map(|&x| x + 0.2 * rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        flat.add(&v, Feedback { comparisons: vec![rand_cmp(&mut rng)] });
+        vectors.push(v);
+    }
+    let payloads = (0..n).map(|_| Feedback { comparisons: vec![rand_cmp(&mut rng)] }).collect();
+    let params = IvfParams { n_cells: N_CELLS, nprobe: N_CELLS, kmeans_iters: 5, seed: 0x1F5 };
+    let base = IvfIndex::build(DIM_IVF, &vectors, payloads, params);
+
+    let queries: Vec<Vec<f32>> = (0..32)
+        .map(|i| {
+            let c = &centers[(i * 7) % n_centers];
+            let mut v: Vec<f32> = c.iter().map(|&x| x + 0.2 * rng.normal() as f32).collect();
+            l2_normalize(&mut v);
+            v
+        })
+        .collect();
+    let exact: Vec<Vec<u32>> = queries
+        .iter()
+        .map(|q| flat.search(q, K).into_iter().map(|h| h.id).collect())
+        .collect();
+
+    println!("\n== ivf nprobe sweep (n={n}, {N_CELLS} cells, recall@{K} vs exact) ==");
+    for &p in &[1usize, 2, 4, 8, 16, 32, 64] {
+        let mut idx = base.clone();
+        idx.set_nprobe(p);
+        let mut recall_sum = 0.0f64;
+        for (q, want) in queries.iter().zip(&exact) {
+            let got: Vec<u32> = idx.search(q, K).into_iter().map(|h| h.id).collect();
+            let inter = got.iter().filter(|id| want.contains(id)).count();
+            recall_sum += inter as f64 / K as f64;
+        }
+        let recall = recall_sum / queries.len() as f64;
+        let r = eagle::bench::bench(&format!("ivf/probe{p}of{N_CELLS}"), target_ms(100), || {
+            for q in &queries {
+                std::hint::black_box(idx.search(q, K));
+            }
+        });
+        let qps = queries.len() as f64 * 1e9 / r.mean_ns.max(1.0);
+        println!("  nprobe={p:<2}: recall@{K} {recall:.3}  {qps:>9.0} q/s");
+        report.push(&format!("ivf.p{p}.recall_ratio"), recall);
+        report.push(&format!("ivf.p{p}.qps"), qps);
     }
 }
 

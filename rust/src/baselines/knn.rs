@@ -6,7 +6,6 @@
 //! KNeighborsRegressor); prediction pays the scan.
 
 use super::{QualityPredictor, TrainSet};
-use crate::vectordb::flat::dot_unrolled;
 use crate::vectordb::topk::TopK;
 
 /// KNN regressor over cosine similarity.
@@ -60,9 +59,10 @@ impl QualityPredictor for KnnPredictor {
         if data.is_empty() {
             return vec![0.5; n_models];
         }
+        let dot = crate::vectordb::kernel::dot_fn();
         let mut topk = TopK::new(self.k);
         for i in 0..data.len() {
-            topk.push(i as u32, dot_unrolled(data.embeddings.row(i), query));
+            topk.push(i as u32, dot(data.embeddings.row(i), query));
         }
         let hits = topk.into_sorted();
         let mut out = vec![0.0f64; n_models];

@@ -102,13 +102,14 @@ impl Matrix {
     /// C = A @ Bᵀ  (A: m x k, B: n x k) — backprop through weights shape.
     pub fn matmul_t(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.cols, "matmul_t shape");
+        let dot = crate::vectordb::kernel::dot_fn();
         let (m, n) = (self.rows, b.rows);
         let mut c = Matrix::zeros(m, n);
         for i in 0..m {
             let a_row = self.row(i);
             let c_row = c.row_mut(i);
             for (j, cj) in c_row.iter_mut().enumerate() {
-                *cj = crate::vectordb::flat::dot_unrolled(a_row, b.row(j));
+                *cj = dot(a_row, b.row(j));
             }
         }
         c

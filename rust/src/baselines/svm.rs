@@ -16,7 +16,7 @@ use super::linalg::vec_axpy;
 use super::linalg::Matrix;
 use super::{QualityPredictor, TrainSet};
 use crate::util::Rng;
-use crate::vectordb::flat::dot_unrolled;
+use crate::vectordb::kernel;
 
 /// Training hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -63,6 +63,7 @@ impl SvmPredictor {
         let mut order: Vec<usize> = (0..n).collect();
         let eps = self.opts.epsilon as f32;
         let c = self.opts.c as f32;
+        let dot = kernel::dot_fn();
 
         for epoch in 0..self.opts.epochs {
             rng.shuffle(&mut order);
@@ -76,7 +77,7 @@ impl SvmPredictor {
                     }
                     let y = data.qualities.at(i, j);
                     let w = &mut self.weights[j];
-                    let pred = dot_unrolled(w, x) + self.biases[j];
+                    let pred = dot(w, x) + self.biases[j];
                     let r = pred - y;
                     // subgradient of eps-insensitive L1
                     let g = if r > eps {
@@ -129,10 +130,11 @@ impl QualityPredictor for SvmPredictor {
         if !self.fitted {
             return Vec::new();
         }
+        let dot = kernel::dot_fn();
         self.weights
             .iter()
             .zip(&self.biases)
-            .map(|(w, b)| (dot_unrolled(w, query) + b) as f64)
+            .map(|(w, b)| (dot(w, query) + b) as f64)
             .collect()
     }
 }

@@ -156,6 +156,11 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         cfg.persist.fsync,
         if cfg.persist.path.is_empty() { "<snapshot-out>" } else { &cfg.persist.path }
     );
+    println!(
+        "  kernel: backend={} (host detects {}; EAGLE_KERNEL overrides)",
+        cfg.kernel.backend,
+        crate::vectordb::kernel::detect().name()
+    );
     println!("  artifacts: {}", cfg.embed.artifacts_dir);
     match crate::runtime::Manifest::load(Path::new(&cfg.embed.artifacts_dir)) {
         Ok(m) => println!(
@@ -439,7 +444,13 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
             persist_dir,
             seal_bytes: cfg.persist.seal_bytes,
             fsync: cfg.persist.fsync,
+            kernel_backend: cfg.kernel.backend.clone(),
         },
+    );
+    println!(
+        "scoring kernel: {} (configured '{}'; EAGLE_KERNEL overrides)",
+        crate::vectordb::kernel::active().name(),
+        cfg.kernel.backend
     );
     if let Some(store) = state.durable_store() {
         println!(

@@ -218,6 +218,26 @@ impl Default for PersistParams {
     }
 }
 
+/// Scoring-kernel backend selection ([`crate::vectordb::kernel`]): which
+/// SIMD backend every scan dispatches to. `"auto"` (the default) detects
+/// the best available backend (AVX2 on x86_64, NEON on aarch64, portable
+/// elsewhere); naming a backend forces it, falling back to portable with
+/// a warning if the host lacks it. The `EAGLE_KERNEL` env var overrides
+/// this setting — that's what CI uses to run the whole suite on the
+/// portable arm. All backends score bit-identically (fixed-reduction
+/// contract), so this is purely a performance knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelParams {
+    /// One of `auto`, `portable`, `avx2`, `neon`.
+    pub backend: String,
+}
+
+impl Default for KernelParams {
+    fn default() -> Self {
+        KernelParams { backend: "auto".to_string() }
+    }
+}
+
 /// Synthetic RouterBench generation parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataParams {
@@ -252,6 +272,7 @@ pub struct Config {
     pub shards: ShardParams,
     pub ivf: IvfPublishParams,
     pub persist: PersistParams,
+    pub kernel: KernelParams,
     pub data: DataParams,
 }
 
@@ -368,6 +389,7 @@ impl Config {
             "persist.dir" => self.persist.dir = value.to_string(),
             "persist.seal_bytes" => self.persist.seal_bytes = usize_of(value)?,
             "persist.fsync" => self.persist.fsync = bool_of(value)?,
+            "kernel.backend" => self.kernel.backend = value.to_string(),
             "data.seed" => self.data.seed = u64_of(value)?,
             "data.per_dataset" => self.data.per_dataset = usize_of(value)?,
             "data.train_fraction" => self.data.train_fraction = f64_of(value)?,
@@ -422,6 +444,8 @@ impl Config {
         if self.persist.seal_bytes == 0 {
             return Err(ConfigError("persist.seal_bytes must be > 0".into()));
         }
+        crate::vectordb::kernel::parse_choice(&self.kernel.backend)
+            .map_err(|e| ConfigError(format!("kernel.backend: {e}")))?;
         Ok(())
     }
 }
@@ -561,6 +585,22 @@ workers = 8
         // ...but is unconstrained while IVF publication is disabled
         bad.ivf.publish_threshold = 0;
         assert!(bad.validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_backend_parses_and_validates() {
+        assert_eq!(Config::default().kernel.backend, "auto");
+        let c = Config::load(None, &[("kernel.backend".into(), "portable".into())]).unwrap();
+        assert_eq!(c.kernel.backend, "portable");
+        for good in ["auto", "portable", "avx2", "neon"] {
+            let mut c = Config::default();
+            c.kernel.backend = good.to_string();
+            assert!(c.validate().is_ok(), "{good} rejected");
+        }
+        let mut bad = Config::default();
+        bad.kernel.backend = "sse9".to_string();
+        let err = bad.validate().unwrap_err();
+        assert!(err.0.contains("kernel.backend"), "{}", err.0);
     }
 
     #[test]

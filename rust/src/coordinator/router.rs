@@ -16,9 +16,39 @@
 
 use crate::config::EagleParams;
 use crate::elo::{Comparison, EloEngine, GlobalElo};
-use crate::vectordb::{Feedback, Hit, ReadIndex, VectorIndex};
+use crate::vectordb::{BatchTopK, Feedback, Hit, ReadIndex, VectorIndex};
 
 use super::Router;
+
+/// Replay already-retrieved neighbors through a seeded local engine,
+/// trajectory-averaging into `sum`. `engine` must be freshly (re)seeded
+/// from the global averages and `sum` initialized to them; both are left
+/// dirty for the caller to reuse.
+///
+/// Neighbors are replayed in *ascending* similarity order so the closest
+/// prompts' feedback lands last and carries the most weight in the
+/// sequential ELO update (EXPERIMENTS.md ablation), and the replay is
+/// trajectory-averaged like Eagle-Global.
+fn replay_neighbors<R: ReadIndex + ?Sized>(
+    index: &R,
+    hits: &[Hit],
+    engine: &mut EloEngine,
+    sum: &mut [f64],
+) {
+    let mut samples = 1u64;
+    for hit in hits.iter().rev() {
+        for &c in &index.feedback(hit.id).comparisons {
+            engine.update(c);
+            for (s, &r) in sum.iter_mut().zip(engine.ratings()) {
+                *s += r;
+            }
+            samples += 1;
+        }
+    }
+    for s in sum.iter_mut() {
+        *s /= samples as f64;
+    }
+}
 
 /// Local ELO ratings for one query over any read-only index:
 /// global-seeded, neighbor-replayed, trajectory-averaged.
@@ -27,11 +57,6 @@ use super::Router;
 /// [`super::snapshot::RouterSnapshot`] (immutable view): both call the
 /// exact same code over the exact same stored data, which is what makes
 /// the locked-vs-snapshot score-equivalence tests bit-exact.
-///
-/// Neighbors are replayed in *ascending* similarity order so the closest
-/// prompts' feedback lands last and carries the most weight in the
-/// sequential ELO update (EXPERIMENTS.md ablation), and the replay is
-/// trajectory-averaged like Eagle-Global.
 pub fn local_ratings_from<R: ReadIndex + ?Sized>(
     params: &EagleParams,
     global_avg: &[f64],
@@ -41,19 +66,7 @@ pub fn local_ratings_from<R: ReadIndex + ?Sized>(
     let mut local = EloEngine::seeded(global_avg.to_vec(), params.k_factor);
     let hits = index.search(query_emb, params.n_neighbors);
     let mut sum = global_avg.to_vec();
-    let mut samples = 1u64;
-    for hit in hits.iter().rev() {
-        for &c in &index.feedback(hit.id).comparisons {
-            local.update(c);
-            for (s, &r) in sum.iter_mut().zip(local.ratings()) {
-                *s += r;
-            }
-            samples += 1;
-        }
-    }
-    for s in sum.iter_mut() {
-        *s /= samples as f64;
-    }
+    replay_neighbors(index, &hits, &mut local, &mut sum);
     sum
 }
 
@@ -75,6 +88,106 @@ pub fn mixed_scores_from<R: ReadIndex + ?Sized>(
         .zip(&local)
         .map(|(g, l)| params.p * g + (1.0 - params.p) * l)
         .collect()
+}
+
+/// Reusable scoring scratch for the batch route path: the batch search
+/// selectors/tile, the retrieved hit lists, and the local-replay engine +
+/// trajectory buffer. One of these per batch replaces the seed path's
+/// per-query `TopK` + hits + `EloEngine` + sum allocations.
+#[derive(Default)]
+pub struct ScoreScratch {
+    acc: BatchTopK,
+    hits: Vec<Vec<Hit>>,
+    engine: Option<EloEngine>,
+    sum: Vec<f64>,
+}
+
+impl ScoreScratch {
+    pub fn new() -> Self {
+        ScoreScratch::default()
+    }
+}
+
+/// (Re)build the scratch engine only when the model arity or K-factor
+/// changed; otherwise the existing allocation is reseeded per query.
+fn ensure_engine<'a>(
+    engine: &'a mut Option<EloEngine>,
+    params: &EagleParams,
+    global_avg: &[f64],
+) -> &'a mut EloEngine {
+    let stale = match engine.as_ref() {
+        None => true,
+        Some(e) => e.n_models() != global_avg.len() || e.k() != params.k_factor,
+    };
+    if stale {
+        *engine = Some(EloEngine::seeded(global_avg.to_vec(), params.k_factor));
+    }
+    engine.as_mut().expect("engine just ensured")
+}
+
+/// Combined Eagle scores for one query whose neighbor list was already
+/// retrieved (the sharded gather merges per-shard candidates first).
+/// Bit-identical to [`mixed_scores_from`] fed the same hits; reuses the
+/// scratch engine/buffers instead of allocating per query.
+pub(crate) fn mixed_scores_from_hits<R: ReadIndex + ?Sized>(
+    params: &EagleParams,
+    global_avg: &[f64],
+    index: &R,
+    hits: &[Hit],
+    scratch: &mut ScoreScratch,
+) -> Vec<f64> {
+    if params.p >= 1.0 {
+        return global_avg.to_vec();
+    }
+    let engine = ensure_engine(&mut scratch.engine, params, global_avg);
+    let sum = &mut scratch.sum;
+    engine.reseed_from(global_avg);
+    sum.clear();
+    sum.extend_from_slice(global_avg);
+    replay_neighbors(index, hits, engine, sum);
+    global_avg
+        .iter()
+        .zip(sum.iter())
+        .map(|(g, l)| params.p * g + (1.0 - params.p) * l)
+        .collect()
+}
+
+/// Batch counterpart of [`mixed_scores_from`]: one query-blocked
+/// retrieval pass over the index scores the whole batch (the corpus
+/// streams through the kernel once per
+/// [`crate::vectordb::kernel::QUERY_TILE`] queries instead of once per
+/// query), and the local replay reuses one scratch engine/buffer set
+/// across the batch. Scores are bit-identical to mapping
+/// [`mixed_scores_from`] per query.
+pub fn mixed_scores_batch_from<R: ReadIndex + ?Sized>(
+    params: &EagleParams,
+    global_avg: &[f64],
+    index: &R,
+    queries: &[&[f32]],
+    scratch: &mut ScoreScratch,
+) -> Vec<Vec<f64>> {
+    if params.p >= 1.0 {
+        return queries.iter().map(|_| global_avg.to_vec()).collect();
+    }
+    let ScoreScratch { acc, hits, engine, sum } = scratch;
+    index.search_batch_into(queries, params.n_neighbors, acc);
+    acc.drain_hits_into(hits);
+    let engine = ensure_engine(engine, params, global_avg);
+    let mut out = Vec::with_capacity(queries.len());
+    for hits_q in hits.iter().take(queries.len()) {
+        engine.reseed_from(global_avg);
+        sum.clear();
+        sum.extend_from_slice(global_avg);
+        replay_neighbors(index, hits_q, engine, sum);
+        out.push(
+            global_avg
+                .iter()
+                .zip(sum.iter())
+                .map(|(g, l)| params.p * g + (1.0 - params.p) * l)
+                .collect(),
+        );
+    }
+    out
 }
 
 /// All pairwise feedback collected for one prompt, tied to its embedding.
@@ -194,15 +307,16 @@ impl<I: VectorIndex + Send> EagleRouter<I> {
         mixed_scores_from(&self.params, &self.global.ratings(), &self.store, query_emb)
     }
 
-    /// Score a whole batch of queries against one consistent state,
-    /// computing the trajectory-averaged global table once for the batch
-    /// (the per-query path recomputes it every call).
+    /// Score a whole batch of queries against one consistent state:
+    /// the trajectory-averaged global table is computed once, retrieval
+    /// runs the query-blocked kernel scan, and the local replay reuses
+    /// one scratch buffer set across the batch — bit-identical scores to
+    /// mapping [`EagleRouter::combined_scores`] per query.
     pub fn score_batch(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
         let global = self.global.ratings();
-        query_embs
-            .iter()
-            .map(|q| mixed_scores_from(&self.params, &global, &self.store, q))
-            .collect()
+        let queries: Vec<&[f32]> = query_embs.iter().map(|q| q.as_slice()).collect();
+        let mut scratch = ScoreScratch::new();
+        mixed_scores_batch_from(&self.params, &global, &self.store, &queries, &mut scratch)
     }
 }
 

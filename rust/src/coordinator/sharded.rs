@@ -57,7 +57,10 @@ use crate::vectordb::flat::FlatStore;
 use crate::vectordb::view::SegmentStore;
 use crate::vectordb::{Feedback, Hit, ReadIndex, VectorIndex};
 
-use super::router::{mixed_scores_from, EagleRouter, Observation};
+use super::router::{
+    mixed_scores_batch_from, mixed_scores_from, mixed_scores_from_hits, EagleRouter, Observation,
+    ScoreScratch,
+};
 use super::snapshot::{RcuCell, RouterSnapshot, RouterWriter, SnapshotRing};
 
 /// Batches below this size score serially even on a sharded snapshot
@@ -733,10 +736,11 @@ impl ShardedSnapshot {
         mixed_scores_from(&self.params, &self.global.ratings, &self.scatter(), query_emb)
     }
 
-    /// Score a batch against this one frozen state. Large batches over
-    /// large sharded corpora fan the scan across one thread per shard
-    /// ([`ShardedSnapshot::score_batch_scatter`]); results are
-    /// bit-identical either way.
+    /// Score a batch against this one frozen state. Every path retrieves
+    /// through the query-blocked kernel scans; large batches over large
+    /// sharded corpora additionally fan the scan across one thread per
+    /// shard ([`ShardedSnapshot::score_batch_scatter`]). Results are
+    /// bit-identical whichever path runs.
     pub fn score_batch(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
         let rows = self.store_len();
         let work = query_embs.len().saturating_mul(rows).saturating_mul(self.dim);
@@ -748,57 +752,117 @@ impl ShardedSnapshot {
         if parallel {
             self.score_batch_scatter(query_embs)
         } else {
-            query_embs.iter().map(|q| self.scores(q)).collect()
+            self.score_batch_serial(query_embs)
         }
     }
 
-    /// The explicit parallel scatter-gather path: every shard scans the
-    /// whole query slab on its own thread (scatter), then each query's
-    /// K sorted candidate lists merge into the exact global top-N and
-    /// finish through the same scoring code as the serial path (gather).
-    pub fn score_batch_scatter(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
-        if self.shards.len() <= 1 || self.params.p >= 1.0 {
-            return query_embs.iter().map(|q| self.scores(q)).collect();
+    /// The single-threaded batch path: K=1 scores the lone view directly
+    /// through the blocked batch scorer; K>1 runs the same per-shard
+    /// blocked searches as the parallel scatter, minus the threads.
+    fn score_batch_serial(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        if self.params.p >= 1.0 {
+            return query_embs.iter().map(|_| self.global.ratings.clone()).collect();
+        }
+        let queries: Vec<&[f32]> = query_embs.iter().map(|q| q.as_slice()).collect();
+        let mut scratch = ScoreScratch::new();
+        if self.shards.len() == 1 {
+            // K=1 fast path: local ids ARE global ids, so the id-mapping
+            // merge is the identity — score the lone view directly (the
+            // default single-shard config pays nothing for the machinery)
+            return mixed_scores_batch_from(
+                &self.params,
+                &self.global.ratings,
+                self.shards[0].view(),
+                &queries,
+                &mut scratch,
+            );
         }
         let n = self.params.n_neighbors;
-        let per_shard = std::thread::scope(|scope| {
+        let per_shard: Vec<Vec<Vec<Hit>>> = self
+            .shards
+            .iter()
+            .zip(&self.ids)
+            .map(|(snap, ids)| shard_hits(snap, ids, &queries, n))
+            .collect();
+        self.gather_scores(queries.len(), &per_shard, &mut scratch)
+    }
+
+    /// The explicit parallel scatter-gather path: every shard runs the
+    /// blocked multi-query scan over the whole query slab on its own
+    /// thread (scatter), then each query's K sorted candidate lists merge
+    /// into the exact global top-N and finish through the same scoring
+    /// code as the serial path (gather).
+    pub fn score_batch_scatter(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
+        if self.shards.len() <= 1 || self.params.p >= 1.0 {
+            return self.score_batch_serial(query_embs);
+        }
+        let queries: Vec<&[f32]> = query_embs.iter().map(|q| q.as_slice()).collect();
+        let n = self.params.n_neighbors;
+        let qs: &[&[f32]] = &queries;
+        let per_shard: Vec<Vec<Vec<Hit>>> = std::thread::scope(|scope| {
             let tasks: Vec<_> = self
                 .shards
                 .iter()
                 .zip(&self.ids)
-                .map(|(snap, ids)| {
-                    scope.spawn(move || {
-                        query_embs
-                            .iter()
-                            .map(|q| {
-                                snap.view()
-                                    .search(q, n)
-                                    .into_iter()
-                                    .map(|h| Hit { id: ids.global_of(h.id), score: h.score })
-                                    .collect::<Vec<Hit>>()
-                            })
-                            .collect::<Vec<_>>()
-                    })
-                })
+                .map(|(snap, ids)| scope.spawn(move || shard_hits(snap, ids, qs, n)))
                 .collect();
             tasks
                 .into_iter()
                 .map(|t| t.join().expect("scatter thread panicked"))
-                .collect::<Vec<_>>()
+                .collect()
         });
-        query_embs
-            .iter()
-            .enumerate()
-            .map(|(qi, q)| {
-                let mut merged: Vec<Hit> =
-                    per_shard.iter().flat_map(|hits| hits[qi].iter().copied()).collect();
+        let mut scratch = ScoreScratch::new();
+        self.gather_scores(queries.len(), &per_shard, &mut scratch)
+    }
+
+    /// Merge each query's per-shard candidates into the exact global
+    /// top-N — descending score, ascending global id, exactly what a
+    /// single store's TopK yields — then replay through the shared
+    /// scoring core with one scratch buffer set for the whole batch.
+    fn gather_scores(
+        &self,
+        n_queries: usize,
+        per_shard: &[Vec<Vec<Hit>>],
+        scratch: &mut ScoreScratch,
+    ) -> Vec<Vec<f64>> {
+        let n = self.params.n_neighbors;
+        let scatter = self.scatter();
+        let mut merged: Vec<Hit> = Vec::new();
+        (0..n_queries)
+            .map(|qi| {
+                merged.clear();
+                merged.extend(per_shard.iter().flat_map(|hits| hits[qi].iter().copied()));
                 sort_hits(&mut merged);
                 merged.truncate(n);
-                let view = PremergedView { hits: merged, inner: self.scatter() };
-                mixed_scores_from(&self.params, &self.global.ratings, &view, q)
+                mixed_scores_from_hits(
+                    &self.params,
+                    &self.global.ratings,
+                    &scatter,
+                    &merged,
+                    scratch,
+                )
             })
             .collect()
     }
+}
+
+/// One shard's blocked batch search with local ids mapped to global —
+/// the per-thread body of the parallel scatter (and the serial K>1
+/// loop). Per-shard (score, local id) order sorts identically under
+/// global ids, so the mapped lists stay sorted for the gather merge.
+fn shard_hits(
+    snap: &RouterSnapshot,
+    ids: &FrozenIds,
+    queries: &[&[f32]],
+    n: usize,
+) -> Vec<Vec<Hit>> {
+    let mut hit_lists = snap.view().search_batch(queries, n);
+    for hits in &mut hit_lists {
+        for h in hits.iter_mut() {
+            h.id = ids.global_of(h.id);
+        }
+    }
+    hit_lists
 }
 
 /// Read-only merged index over K shard views, addressed by global ids.
@@ -853,36 +917,6 @@ impl ReadIndex for ScatterView<'_> {
     fn vector(&self, id: u32) -> &[f32] {
         let (s, local) = self.locate(id);
         self.shards[s].view().vector(local)
-    }
-}
-
-/// A [`ScatterView`] whose top-N for one known query was already merged
-/// by the parallel scatter; `search` hands it back so the shared scoring
-/// code replays exactly the candidates the gather selected.
-struct PremergedView<'a> {
-    hits: Vec<Hit>,
-    inner: ScatterView<'a>,
-}
-
-impl ReadIndex for PremergedView<'_> {
-    fn dim(&self) -> usize {
-        self.inner.dim()
-    }
-
-    fn len(&self) -> usize {
-        self.inner.len()
-    }
-
-    fn search(&self, _query: &[f32], _k: usize) -> Vec<Hit> {
-        self.hits.clone()
-    }
-
-    fn feedback(&self, id: u32) -> &Feedback {
-        self.inner.feedback(id)
-    }
-
-    fn vector(&self, id: u32) -> &[f32] {
-        self.inner.vector(id)
     }
 }
 

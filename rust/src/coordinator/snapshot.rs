@@ -35,9 +35,11 @@ use crate::config::{EagleParams, EpochParams, IvfPublishParams};
 use crate::vectordb::flat::FlatStore;
 use crate::vectordb::ivf::{IvfIndex, IvfParams, IvfView};
 use crate::vectordb::view::{FrozenView, SegmentStore};
-use crate::vectordb::{Feedback, Hit, ReadIndex, VectorIndex};
+use crate::vectordb::{BatchTopK, Feedback, Hit, ReadIndex, VectorIndex};
 
-use super::router::{mixed_scores_from, EagleRouter, Observation};
+use super::router::{
+    mixed_scores_batch_from, mixed_scores_from, EagleRouter, Observation, ScoreScratch,
+};
 use super::Router;
 
 /// Number of publication slots. Also the number of historical snapshots
@@ -122,6 +124,13 @@ impl ReadIndex for SnapshotView {
         }
     }
 
+    fn search_batch_into(&self, queries: &[&[f32]], k: usize, acc: &mut BatchTopK) {
+        match self {
+            SnapshotView::Flat(v) => v.search_batch_into(queries, k, acc),
+            SnapshotView::Ivf(v) => v.search_batch_into(queries, k, acc),
+        }
+    }
+
     fn feedback(&self, id: u32) -> &Feedback {
         match self {
             SnapshotView::Flat(v) => v.feedback(id),
@@ -200,9 +209,25 @@ impl RouterSnapshot {
     }
 
     /// Score a batch of queries against this one frozen state: a single
-    /// snapshot acquisition amortized over the whole batch.
+    /// snapshot acquisition amortized over the whole batch, retrieval
+    /// through the query-blocked kernel scan, one scratch buffer set for
+    /// the local replays — bit-identical to mapping
+    /// [`RouterSnapshot::scores`] per query.
     pub fn score_batch(&self, query_embs: &[Vec<f32>]) -> Vec<Vec<f64>> {
-        query_embs.iter().map(|q| self.scores(q)).collect()
+        let mut scratch = ScoreScratch::new();
+        self.score_batch_with(query_embs, &mut scratch)
+    }
+
+    /// [`RouterSnapshot::score_batch`] with a caller-held scratch, for
+    /// serving loops that score batch after batch (no allocation once the
+    /// scratch is warm).
+    pub fn score_batch_with(
+        &self,
+        query_embs: &[Vec<f32>],
+        scratch: &mut ScoreScratch,
+    ) -> Vec<Vec<f64>> {
+        let queries: Vec<&[f32]> = query_embs.iter().map(|q| q.as_slice()).collect();
+        mixed_scores_batch_from(&self.params, &self.global_ratings, &self.view, &queries, scratch)
     }
 }
 
@@ -592,6 +617,31 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn score_batch_bit_identical_to_singles_on_flat_and_ivf_views() {
+        let mut rng = Rng::new(41);
+        let mut writer = RouterWriter::new(EagleParams::default(), 5, DIM, cadence(20, 10_000));
+        writer.set_ivf(IvfPublishParams { publish_threshold: 80, n_cells: 6, nprobe: 3 });
+        let ring = writer.ring();
+        let mut saw_ivf = false;
+        for step in 0..200 {
+            writer.observe(rand_obs(&mut rng, 5));
+            if (step + 1) % 40 == 0 {
+                let snap = ring.load();
+                saw_ivf |= matches!(snap.view(), SnapshotView::Ivf(_));
+                let queries: Vec<Vec<f32>> = (0..9).map(|_| unit(&mut rng)).collect();
+                let batch = snap.score_batch(&queries);
+                assert_eq!(batch.len(), queries.len());
+                for (q, scores) in queries.iter().zip(&batch) {
+                    assert_eq!(scores, &snap.scores(q), "batch diverged at step {step}");
+                }
+            }
+        }
+        assert!(saw_ivf, "ivf view never exercised");
+        // empty batch is fine
+        assert!(ring.load().score_batch(&[]).is_empty());
     }
 
     #[test]

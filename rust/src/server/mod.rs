@@ -91,6 +91,9 @@ pub struct ServerOptions {
     pub seal_bytes: usize,
     /// Durable-store fsync policy (`[persist] fsync`).
     pub fsync: bool,
+    /// Scoring-kernel backend choice (`[kernel] backend`): installed as
+    /// the process default at startup; the `EAGLE_KERNEL` env var wins.
+    pub kernel_backend: String,
 }
 
 impl Default for ServerOptions {
@@ -105,6 +108,7 @@ impl Default for ServerOptions {
             persist_dir: None,
             seal_bytes: durable.seal_bytes,
             fsync: durable.fsync,
+            kernel_backend: "auto".to_string(),
         }
     }
 }
@@ -229,6 +233,12 @@ impl ServerState {
         metrics: Arc<Metrics>,
         opts: ServerOptions,
     ) -> Self {
+        // install the configured scoring-kernel default before the first
+        // scan resolves the dispatch (EAGLE_KERNEL still wins; config
+        // validation already rejected unknown names)
+        if let Err(e) = crate::vectordb::kernel::configure(&opts.kernel_backend) {
+            eprintln!("warning: [kernel] backend ignored: {e}");
+        }
         writer.set_ivf(opts.ivf);
         let snapshots = writer.handle();
         let interval = Duration::from_millis(opts.persist_interval_ms);

@@ -1,17 +1,16 @@
-//! Exact flat (brute-force) vector index with a blocked scan.
+//! Exact flat (brute-force) vector index with a kernel-backed scan.
 //!
-//! Vectors live in one contiguous row-major matrix; the scan walks it in
-//! cache-friendly blocks computing dot products with 4-way unrolling and
-//! feeds a bounded [`TopK`]. For the corpus sizes RouterBench yields
-//! (10^3–10^4 entries at D=256) an exact scan is faster than any index —
-//! this is the default request-path store (§Perf).
+//! Vectors live in one contiguous row-major matrix; scans stream it
+//! through the dispatched SIMD kernels ([`super::kernel`]) and feed a
+//! bounded [`TopK`]. Batched searches go through the query-blocked kernel
+//! so corpus bandwidth is amortized across the batch. For the corpus
+//! sizes RouterBench yields (10^3–10^4 entries at D=256) an exact scan is
+//! faster than any index — this is the default request-path store
+//! (§Perf).
 
+use super::kernel;
 use super::topk::TopK;
-use super::{Feedback, Hit, ReadIndex, VectorIndex};
-
-/// Rows scanned per block; sized so a block (BLOCK_ROWS x 256 f32 = 64 KiB)
-/// stays L2-resident.
-const BLOCK_ROWS: usize = 64;
+use super::{BatchTopK, Feedback, Hit, ReadIndex, VectorIndex};
 
 /// Exact flat store.
 #[derive(Debug, Clone)]
@@ -43,16 +42,10 @@ impl FlatStore {
     /// Scan scoring into a caller-provided TopK (allocation-free reuse).
     pub fn search_into(&self, query: &[f32], topk: &mut TopK) {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
-        let n = self.payloads.len();
-        let mut base = 0usize;
-        while base < n {
-            let end = (base + BLOCK_ROWS).min(n);
-            for i in base..end {
-                let row = &self.data[i * self.dim..(i + 1) * self.dim];
-                let s = dot_unrolled(row, query);
-                topk.push(i as u32, s);
-            }
-            base = end;
+        // resolve the kernel dispatch once for the whole scan
+        let dot = kernel::dot_fn();
+        for i in 0..self.payloads.len() {
+            topk.push(i as u32, dot(self.row(i), query));
         }
     }
 
@@ -60,31 +53,11 @@ impl FlatStore {
     /// Used by tests and by the HLO-scorer agreement checks.
     pub fn score_all(&self, query: &[f32]) -> Vec<f32> {
         assert_eq!(query.len(), self.dim);
+        let dot = kernel::dot_fn();
         (0..self.payloads.len())
-            .map(|i| dot_unrolled(self.row(i), query))
+            .map(|i| dot(self.row(i), query))
             .collect()
     }
-}
-
-/// 4-way unrolled dot product; the scan hot loop.
-#[inline]
-pub(crate) fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
 }
 
 impl ReadIndex for FlatStore {
@@ -103,6 +76,15 @@ impl ReadIndex for FlatStore {
             .into_iter()
             .map(|(id, score)| Hit { id, score })
             .collect()
+    }
+
+    fn search_batch_into(&self, queries: &[&[f32]], k: usize, acc: &mut BatchTopK) {
+        for q in queries {
+            assert_eq!(q.len(), self.dim, "query dim mismatch");
+        }
+        acc.begin(queries.len(), k);
+        let (topks, tile) = acc.parts_mut();
+        kernel::scan_rows_into(queries, self.dim, &self.data, 0, topks, tile);
     }
 
     fn feedback(&self, id: u32) -> &Feedback {
@@ -191,6 +173,30 @@ mod tests {
     }
 
     #[test]
+    fn search_batch_bit_identical_to_singles() {
+        // the blocked-kernel batch path must retain exactly the hits of
+        // per-query scans — ids, scores, and tie-breaks
+        prop::check("flat batch == singles", 30, |rng| {
+            let dim = [8, 31, 256][rng.below(3)];
+            let n = rng.below(400);
+            let k = 1 + rng.below(25);
+            let n_q = rng.below(12);
+            let mut s = FlatStore::new(dim);
+            for i in 0..n {
+                s.add(&random_unit(rng, dim), dummy_feedback(i));
+            }
+            let queries: Vec<Vec<f32>> = (0..n_q).map(|_| random_unit(rng, dim)).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let batch = s.search_batch(&qrefs, k);
+            prop::assert_prop(batch.len() == n_q, "batch length")?;
+            for (q, hits) in qrefs.iter().zip(&batch) {
+                prop::assert_prop(hits == &s.search(q, k), "batch hits != single hits")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn search_k_larger_than_store() {
         let mut s = FlatStore::new(4);
         s.add(&[1.0, 0.0, 0.0, 0.0], dummy_feedback(0));
@@ -216,22 +222,6 @@ mod tests {
         for h in s.search(&q, 40) {
             assert!((dense[h.id as usize] - h.score).abs() < 1e-6);
         }
-    }
-
-    #[test]
-    fn dot_unrolled_matches_naive() {
-        prop::check("dot unrolled", 100, |rng| {
-            let n = rng.below(70);
-            let a = prop::vec_f32(rng, n);
-            let b = prop::vec_f32(rng, n);
-            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-            prop::assert_close(
-                dot_unrolled(&a, &b) as f64,
-                naive as f64,
-                1e-4,
-                "dot",
-            )
-        });
     }
 
     #[test]

@@ -13,10 +13,10 @@
 
 use std::sync::Arc;
 
-use super::flat::dot_unrolled;
+use super::kernel;
 use super::topk::TopK;
 use super::view::FrozenView;
-use super::{Feedback, Hit, ReadIndex, VectorIndex};
+use super::{BatchTopK, Feedback, Hit, ReadIndex, VectorIndex};
 use crate::util::Rng;
 
 /// IVF build/search parameters.
@@ -82,6 +82,13 @@ impl IvfIndex {
         self.params
     }
 
+    /// Change the probe width — the recall/latency knob — without
+    /// rebuilding (the `perf_hotpath` nprobe sweep rides this). Clamped
+    /// to the cell count at search time; 0 behaves as 1.
+    pub fn set_nprobe(&mut self, nprobe: usize) {
+        self.params.nprobe = nprobe;
+    }
+
     pub fn n_cells(&self) -> usize {
         self.cells.len()
     }
@@ -96,10 +103,11 @@ impl IvfIndex {
 
     /// Nearest centroid by dot product (vectors are normalized).
     fn assign(&self, v: &[f32]) -> usize {
+        let dot = kernel::dot_fn();
         let mut best = 0usize;
         let mut best_s = f32::NEG_INFINITY;
         for c in 0..self.n_cells() {
-            let s = dot_unrolled(self.centroid(c), v);
+            let s = dot(self.centroid(c), v);
             if s > best_s {
                 best_s = s;
                 best = c;
@@ -230,6 +238,17 @@ impl ReadIndex for IvfView {
             .collect()
     }
 
+    fn search_batch_into(&self, queries: &[&[f32]], k: usize, acc: &mut BatchTopK) {
+        // probed core candidates land first (begins `acc`), then the
+        // exact tail streams through the blocked kernel with ids offset
+        // past the core. Top-k of a union is insensitive to push order,
+        // so hits are bit-identical to the single-query merge.
+        self.core.search_batch_into(queries, k, acc);
+        let base = self.core_len() as u32;
+        let (topks, tile) = acc.parts_mut();
+        self.tail.scan_segments_into(queries, base, topks, tile);
+    }
+
     fn feedback(&self, id: u32) -> &Feedback {
         let base = self.core_len() as u32;
         if id < base {
@@ -264,14 +283,15 @@ impl ReadIndex for IvfIndex {
             return Vec::new();
         }
         // rank cells by centroid similarity
+        let dot = kernel::dot_fn();
         let mut cell_scores = TopK::new(self.params.nprobe.max(1).min(self.n_cells()));
         for c in 0..self.n_cells() {
-            cell_scores.push(c as u32, dot_unrolled(self.centroid(c), query));
+            cell_scores.push(c as u32, dot(self.centroid(c), query));
         }
         let mut topk = TopK::new(k);
         for (cell, _) in cell_scores.into_sorted() {
             for &id in &self.cells[cell as usize] {
-                let s = dot_unrolled(self.row(id as usize), query);
+                let s = dot(self.row(id as usize), query);
                 topk.push(id, s);
             }
         }
@@ -279,6 +299,41 @@ impl ReadIndex for IvfIndex {
             .into_iter()
             .map(|(id, score)| Hit { id, score })
             .collect()
+    }
+
+    fn search_batch_into(&self, queries: &[&[f32]], k: usize, acc: &mut BatchTopK) {
+        for q in queries {
+            assert_eq!(q.len(), self.dim, "query dim mismatch");
+        }
+        acc.begin(queries.len(), k);
+        if self.payloads.is_empty() || k == 0 {
+            return;
+        }
+        // rank every query's cells in one blocked pass over the (small,
+        // contiguous) centroid matrix — the GEMM-shaped part of probing
+        let n_cells = self.n_cells();
+        let nprobe = self.params.nprobe.max(1).min(n_cells);
+        let backend = kernel::active();
+        let dot = kernel::dot_fn();
+        let (topks, tile) = acc.parts_mut();
+        tile.clear();
+        tile.resize(queries.len() * n_cells, 0.0);
+        backend.scan_block_into(queries, self.dim, &self.centroids, tile.as_mut_slice());
+        let mut cell_sel = TopK::new(nprobe);
+        for (qi, topk) in topks.iter_mut().enumerate() {
+            cell_sel.reset(nprobe);
+            for (c, &s) in tile[qi * n_cells..(qi + 1) * n_cells].iter().enumerate() {
+                cell_sel.push(c as u32, s);
+            }
+            // member rows are scattered by id, so cells probe through the
+            // single-dot kernel — same scores as the single-query path
+            let query = queries[qi];
+            cell_sel.drain_sorted(|cell, _| {
+                for &id in &self.cells[cell as usize] {
+                    topk.push(id, dot(self.row(id as usize), query));
+                }
+            });
+        }
     }
 
     fn feedback(&self, id: u32) -> &Feedback {
@@ -521,6 +576,60 @@ mod tests {
                 let id = rng.below(n_core + n_tail) as u32;
                 prop::assert_prop(view.vector(id) == flat.vector(id), "vector mismatch")?;
                 prop::assert_prop(view.feedback(id) == flat.feedback(id), "payload mismatch")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_search_bit_identical_to_singles_at_any_nprobe() {
+        // the blocked centroid-ranking + probe path must return exactly
+        // the single-query hits — including *partial* probes, where the
+        // probed cell set itself must match
+        prop::check("ivf batch == singles", 15, |rng| {
+            let dim = [8, 16, 32][rng.below(3)];
+            let n = 1 + rng.below(600);
+            let n_cells = 1 + rng.below(24);
+            let nprobe = 1 + rng.below(n_cells);
+            let params = IvfParams { n_cells, nprobe, kmeans_iters: 3, seed: rng.next_u64() };
+            let (idx, _) = build_random(rng, n, dim, params);
+            let k = 1 + rng.below(20);
+            let n_q = 1 + rng.below(9);
+            let queries: Vec<Vec<f32>> = (0..n_q).map(|_| random_unit(rng, dim)).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let batch = idx.search_batch(&qrefs, k);
+            for (q, hits) in qrefs.iter().zip(&batch) {
+                prop::assert_prop(hits == &idx.search(q, k), "ivf batch hits != single hits")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ivf_view_batch_search_bit_identical_to_singles() {
+        use super::super::view::SegmentStore;
+        prop::check("ivf view batch == singles", 12, |rng| {
+            let dim = 16;
+            let n_core = 30 + rng.below(200);
+            let n_tail = rng.below(100);
+            let n_cells = 1 + rng.below(12);
+            let nprobe = 1 + rng.below(n_cells);
+            let params = IvfParams { n_cells, nprobe, kmeans_iters: 3, seed: 7 };
+            let vectors: Vec<Vec<f32>> =
+                (0..n_core + n_tail).map(|_| random_unit(rng, dim)).collect();
+            let payloads = (0..n_core).map(dummy_feedback).collect();
+            let core = IvfIndex::build(dim, &vectors[..n_core], payloads, params);
+            let mut tail = SegmentStore::new(dim);
+            for (i, v) in vectors[n_core..].iter().enumerate() {
+                VectorIndex::add(&mut tail, v, dummy_feedback(n_core + i));
+            }
+            let view = IvfView::new(Arc::new(core), tail.freeze());
+            let k = 1 + rng.below(15);
+            let queries: Vec<Vec<f32>> = (0..6).map(|_| random_unit(rng, dim)).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let batch = view.search_batch(&qrefs, k);
+            for (q, hits) in qrefs.iter().zip(&batch) {
+                prop::assert_prop(hits == &view.search(q, k), "view batch hits != singles")?;
             }
             Ok(())
         });

@@ -1,0 +1,678 @@
+//! SIMD + query-blocked scoring kernels: the single scoring backend for
+//! every scan in the system (§Perf).
+//!
+//! Every dot product on the serving path — flat scans, segment scans, IVF
+//! centroid ranking and cell probing, baseline feature math — funnels
+//! through one runtime-dispatched kernel: AVX2 on x86_64, NEON on
+//! aarch64, and a portable fallback everywhere (including when forced via
+//! `EAGLE_KERNEL=portable` or `[kernel] backend`).
+//!
+//! ## The bit-identity contract
+//!
+//! All backends implement the **same fixed reduction**: [`LANES`] = 8
+//! partial sums, lane `l` accumulating elements `l, l+8, l+16, …` in
+//! stream order with a rounded multiply then a rounded add per element
+//! (deliberately *no* FMA contraction — a fused multiply-add rounds once
+//! where the portable path rounds twice, which would break cross-backend
+//! equality), tail elements `8·⌊n/8⌋ + t` folding into lane `t`, and a
+//! final fixed pairwise tree `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+//! Per IEEE-754 every backend therefore produces **bit-identical** scores
+//! — snapshot, scatter-gather, and IVF equivalence properties hold
+//! unchanged no matter which backend the host dispatches to.
+//!
+//! ## Query-blocked scans
+//!
+//! [`Backend::scan_block_into`] scores a block of Q queries per pass over
+//! a row slab, register-blocked in tiles of [`QUERY_TILE`] queries: each
+//! row chunk is loaded once and multiplied against every query in the
+//! tile, so corpus memory bandwidth is amortized across the batch like a
+//! small GEMM. Blocking only reorders *independent* (query, row) pairs —
+//! each pair still runs the fixed reduction above — so blocked scores are
+//! bit-identical to single-query scores at every tile shape.
+//!
+//! ## Dispatch
+//!
+//! [`active`] resolves once per process: the `EAGLE_KERNEL` env var
+//! (`auto`/`portable`/`avx2`/`neon`) wins, then the configured default
+//! ([`configure`], fed by the `[kernel]` config table), then CPU
+//! detection. Forcing a backend the host lacks falls back to portable
+//! with a warning rather than faulting.
+
+use std::sync::OnceLock;
+
+use super::topk::TopK;
+
+/// Fixed partial-sum lane count shared by every backend.
+pub const LANES: usize = 8;
+
+/// Queries scored per register tile in the blocked scan.
+pub const QUERY_TILE: usize = 4;
+
+/// Rows scored per tile of the blocked scan before scores are flushed to
+/// the per-query selectors; sized so a tile of rows (64 × 256 f32 =
+/// 64 KiB) stays L2-resident while every query tile re-streams it.
+pub const SCAN_BLOCK_ROWS: usize = 64;
+
+/// A scoring backend. All variants exist on every architecture so config
+/// handling is portable; [`Backend::available`] says whether the host can
+/// actually run one, and the public entry points silently substitute
+/// [`Backend::Portable`] for an unavailable choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Scalar fixed-lane reference; always available, and the
+    /// bit-identity anchor the SIMD backends are tested against.
+    Portable,
+    /// 8-wide AVX2 (x86_64).
+    Avx2,
+    /// 2×4-wide NEON (aarch64).
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Portable => "portable",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Whether this backend can run on the current host.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Portable => true,
+            Backend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Backend::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// This backend if the host supports it, otherwise portable.
+    fn resolved(self) -> Backend {
+        if self.available() {
+            self
+        } else {
+            Backend::Portable
+        }
+    }
+
+    /// Dot product under the fixed-reduction contract. Safe on any host:
+    /// an unavailable backend computes via the portable path (same bits).
+    #[inline]
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        // hard assert: the SIMD paths trust the lengths with raw loads
+        assert_eq!(a.len(), b.len(), "dot length mismatch");
+        match self.resolved() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: resolved() verified AVX2 is present on this host.
+            Backend::Avx2 => unsafe { avx2::dot(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is always present on aarch64.
+            Backend::Neon => unsafe { neon::dot(a, b) },
+            _ => portable::dot(a, b),
+        }
+    }
+
+    /// Score a tile of queries against every row of a contiguous
+    /// row-major slab: `out[q * n_rows + r] = dot(queries[q], row r)`,
+    /// bit-identical to [`Backend::dot`] per pair. `rows.len()` must be a
+    /// multiple of `dim` and `out` exactly `queries.len() * n_rows` long.
+    pub fn scan_block_into(self, queries: &[&[f32]], dim: usize, rows: &[f32], out: &mut [f32]) {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(rows.len() % dim, 0, "row slab not a multiple of dim");
+        let n_rows = rows.len() / dim;
+        assert_eq!(out.len(), queries.len() * n_rows, "out buffer size mismatch");
+        for q in queries {
+            assert_eq!(q.len(), dim, "query dim mismatch");
+        }
+        let backend = self.resolved();
+        let mut qi = 0usize;
+        while qi + QUERY_TILE <= queries.len() {
+            let tile = [queries[qi], queries[qi + 1], queries[qi + 2], queries[qi + 3]];
+            for r in 0..n_rows {
+                let row = &rows[r * dim..(r + 1) * dim];
+                let s = backend.dot_tile(&tile, row);
+                for (t, &st) in s.iter().enumerate() {
+                    out[(qi + t) * n_rows + r] = st;
+                }
+            }
+            qi += QUERY_TILE;
+        }
+        for (q, query) in queries.iter().enumerate().skip(qi) {
+            for r in 0..n_rows {
+                out[q * n_rows + r] = backend.dot(query, &rows[r * dim..(r + 1) * dim]);
+            }
+        }
+    }
+
+    /// One register tile: [`QUERY_TILE`] queries against one row, the row
+    /// chunk loaded once. Callers guarantee availability (`resolved`).
+    #[inline]
+    fn dot_tile(self, queries: &[&[f32]; QUERY_TILE], row: &[f32]) -> [f32; QUERY_TILE] {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: callers resolve availability before the row loop.
+            Backend::Avx2 => unsafe { avx2::dot_tile(queries, row) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is always present on aarch64.
+            Backend::Neon => unsafe { neon::dot_tile(queries, row) },
+            _ => portable::dot_tile(queries, row),
+        }
+    }
+}
+
+/// The fixed pairwise reduction tree every backend finishes with.
+#[inline]
+fn reduce_lanes(l: [f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Fold the tail (`n % LANES` trailing elements) into the lane array,
+/// element `t` into lane `t` — shared by every backend so tails are
+/// bit-identical too.
+#[inline]
+fn add_tail(lanes: &mut [f32; LANES], a: &[f32], b: &[f32], from: usize) {
+    for (t, i) in (from..a.len()).enumerate() {
+        lanes[t] += a[i] * b[i];
+    }
+}
+
+mod portable {
+    use super::{add_tail, reduce_lanes, LANES, QUERY_TILE};
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for l in 0..LANES {
+                lanes[l] += xa[l] * xb[l];
+            }
+        }
+        add_tail(&mut lanes, a, b, a.len() - ca.remainder().len());
+        reduce_lanes(lanes)
+    }
+
+    pub fn dot_tile(queries: &[&[f32]; QUERY_TILE], row: &[f32]) -> [f32; QUERY_TILE] {
+        let n = row.len();
+        let chunks = n / LANES;
+        let mut lanes = [[0.0f32; LANES]; QUERY_TILE];
+        for c in 0..chunks {
+            let i = c * LANES;
+            let rv = &row[i..i + LANES];
+            for (t, q) in queries.iter().enumerate() {
+                let qv = &q[i..i + LANES];
+                for l in 0..LANES {
+                    lanes[t][l] += qv[l] * rv[l];
+                }
+            }
+        }
+        let mut out = [0.0f32; QUERY_TILE];
+        for (t, q) in queries.iter().enumerate() {
+            add_tail(&mut lanes[t], q, row, chunks * LANES);
+            out[t] = reduce_lanes(lanes[t]);
+        }
+        out
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+
+    use super::{add_tail, reduce_lanes, LANES, QUERY_TILE};
+
+    /// # Safety
+    /// Requires AVX2 on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            // mul then add (NOT fmadd): keeps per-lane rounding identical
+            // to the portable path — see the module bit-identity contract
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        add_tail(&mut lanes, a, b, chunks * LANES);
+        reduce_lanes(lanes)
+    }
+
+    /// # Safety
+    /// Requires AVX2 on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_tile(queries: &[&[f32]; QUERY_TILE], row: &[f32]) -> [f32; QUERY_TILE] {
+        let n = row.len();
+        let chunks = n / LANES;
+        let mut acc = [_mm256_setzero_ps(); QUERY_TILE];
+        for c in 0..chunks {
+            let i = c * LANES;
+            let rv = _mm256_loadu_ps(row.as_ptr().add(i));
+            for (t, q) in queries.iter().enumerate() {
+                let qv = _mm256_loadu_ps(q.as_ptr().add(i));
+                acc[t] = _mm256_add_ps(acc[t], _mm256_mul_ps(qv, rv));
+            }
+        }
+        let mut out = [0.0f32; QUERY_TILE];
+        for (t, q) in queries.iter().enumerate() {
+            let mut lanes = [0.0f32; LANES];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc[t]);
+            add_tail(&mut lanes, q, row, chunks * LANES);
+            out[t] = reduce_lanes(lanes);
+        }
+        out
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+
+    use super::{add_tail, reduce_lanes, LANES, QUERY_TILE};
+
+    /// # Safety
+    /// Requires NEON (always present on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / LANES;
+        // lanes 0-3 in acc0, 4-7 in acc1 — same lane mapping as portable
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let i = c * LANES;
+            let a0 = vld1q_f32(a.as_ptr().add(i));
+            let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+            let b0 = vld1q_f32(b.as_ptr().add(i));
+            let b1 = vld1q_f32(b.as_ptr().add(i + 4));
+            // mul then add (NOT vfmaq): keeps rounding identical to the
+            // portable path — see the module bit-identity contract
+            acc0 = vaddq_f32(acc0, vmulq_f32(a0, b0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(a1, b1));
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        add_tail(&mut lanes, a, b, chunks * LANES);
+        reduce_lanes(lanes)
+    }
+
+    /// # Safety
+    /// Requires NEON (always present on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_tile(queries: &[&[f32]; QUERY_TILE], row: &[f32]) -> [f32; QUERY_TILE] {
+        let n = row.len();
+        let chunks = n / LANES;
+        let mut acc0 = [vdupq_n_f32(0.0); QUERY_TILE];
+        let mut acc1 = [vdupq_n_f32(0.0); QUERY_TILE];
+        for c in 0..chunks {
+            let i = c * LANES;
+            let r0 = vld1q_f32(row.as_ptr().add(i));
+            let r1 = vld1q_f32(row.as_ptr().add(i + 4));
+            for (t, q) in queries.iter().enumerate() {
+                let q0 = vld1q_f32(q.as_ptr().add(i));
+                let q1 = vld1q_f32(q.as_ptr().add(i + 4));
+                acc0[t] = vaddq_f32(acc0[t], vmulq_f32(q0, r0));
+                acc1[t] = vaddq_f32(acc1[t], vmulq_f32(q1, r1));
+            }
+        }
+        let mut out = [0.0f32; QUERY_TILE];
+        for (t, q) in queries.iter().enumerate() {
+            let mut lanes = [0.0f32; LANES];
+            vst1q_f32(lanes.as_mut_ptr(), acc0[t]);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc1[t]);
+            add_tail(&mut lanes, q, row, chunks * LANES);
+            out[t] = reduce_lanes(lanes);
+        }
+        out
+    }
+}
+
+/// Best backend the host supports.
+pub fn detect() -> Backend {
+    if Backend::Avx2.available() {
+        return Backend::Avx2;
+    }
+    if Backend::Neon.available() {
+        return Backend::Neon;
+    }
+    Backend::Portable
+}
+
+/// Parse a backend choice string; `Ok(None)` means auto-detect.
+pub fn parse_choice(s: &str) -> Result<Option<Backend>, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Ok(None),
+        "portable" => Ok(Some(Backend::Portable)),
+        "avx2" => Ok(Some(Backend::Avx2)),
+        "neon" => Ok(Some(Backend::Neon)),
+        other => Err(format!(
+            "unknown kernel backend '{other}' (expected auto|portable|avx2|neon)"
+        )),
+    }
+}
+
+static ACTIVE: OnceLock<Backend> = OnceLock::new();
+static CONFIGURED: OnceLock<Backend> = OnceLock::new();
+
+/// Install the configured default backend (the `[kernel] backend` config
+/// key). The `EAGLE_KERNEL` env var overrides this, and a call after the
+/// first scoring op cannot change the already-resolved backend — call it
+/// at process startup, before serving. A request that can no longer take
+/// effect (dispatch already resolved differently, or an earlier call
+/// configured a different default) warns instead of failing: scores are
+/// bit-identical on every backend, so only performance is at stake.
+pub fn configure(choice: &str) -> Result<(), String> {
+    let Some(b) = parse_choice(choice)? else {
+        return Ok(());
+    };
+    let _ = CONFIGURED.set(b);
+    if let Some(&active) = ACTIVE.get() {
+        if active != b.resolved() {
+            eprintln!(
+                "warning: scoring kernel already resolved to '{}' (env override or \
+                 prior use); configured '{}' takes no effect in this process",
+                active.name(),
+                b.name()
+            );
+        }
+    } else if CONFIGURED.get() != Some(&b) {
+        eprintln!(
+            "warning: scoring kernel default already configured to '{}'; '{}' ignored",
+            CONFIGURED.get().map_or("?", |c| c.name()),
+            b.name()
+        );
+    }
+    Ok(())
+}
+
+/// The process-wide backend, resolved once: `EAGLE_KERNEL` env override,
+/// else the configured default, else CPU detection. Unknown names warn
+/// and auto-detect; unavailable backends warn and fall back to portable.
+pub fn active() -> Backend {
+    *ACTIVE.get_or_init(|| {
+        let choice = match std::env::var("EAGLE_KERNEL") {
+            Ok(v) => match parse_choice(&v) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("warning: EAGLE_KERNEL: {e}; auto-detecting");
+                    None
+                }
+            },
+            Err(_) => CONFIGURED.get().copied(),
+        };
+        match choice {
+            Some(b) if b.available() => b,
+            Some(b) => {
+                eprintln!(
+                    "warning: kernel backend '{}' unavailable on this host; using portable",
+                    b.name()
+                );
+                Backend::Portable
+            }
+            None => detect(),
+        }
+    })
+}
+
+/// Dot product through the active backend (the scan hot loop).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    active().dot(a, b)
+}
+
+/// A plain single-dot kernel entry point.
+pub type DotFn = fn(&[f32], &[f32]) -> f32;
+
+fn portable_entry(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    portable::dot(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_entry(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    // SAFETY: this entry is only ever handed out by `dot_fn` after
+    // `active()` verified AVX2 is present on this host.
+    unsafe { avx2::dot(a, b) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_entry(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    // SAFETY: NEON is always present on aarch64.
+    unsafe { neon::dot(a, b) }
+}
+
+/// The active backend's dot kernel as a plain fn pointer: resolve once,
+/// then per-row calls skip even the availability re-check that
+/// [`Backend::dot`] pays on every call. This is what the single-query
+/// scan loops hold.
+pub fn dot_fn() -> DotFn {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2_entry,
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon_entry,
+        _ => portable_entry,
+    }
+}
+
+/// Blocked multi-query scan of a contiguous row slab into per-query
+/// selectors, [`SCAN_BLOCK_ROWS`] rows per tile: scores land in `tile`
+/// (kernel scratch, reused across calls) and are pushed as
+/// `(id_base + row, score)` in ascending row order per query — identical
+/// push order to a per-row scalar scan, so TopK tie-breaks are unchanged.
+pub(crate) fn scan_rows_into(
+    queries: &[&[f32]],
+    dim: usize,
+    rows: &[f32],
+    id_base: u32,
+    topks: &mut [TopK],
+    tile: &mut Vec<f32>,
+) {
+    debug_assert_eq!(queries.len(), topks.len(), "query/selector count mismatch");
+    let backend = active();
+    let n_rows = rows.len() / dim;
+    debug_assert_eq!(rows.len(), n_rows * dim);
+    let mut start = 0usize;
+    while start < n_rows {
+        let block = (n_rows - start).min(SCAN_BLOCK_ROWS);
+        tile.clear();
+        tile.resize(queries.len() * block, 0.0);
+        backend.scan_block_into(
+            queries,
+            dim,
+            &rows[start * dim..(start + block) * dim],
+            tile.as_mut_slice(),
+        );
+        for (q, topk) in topks.iter_mut().enumerate() {
+            for (r, &s) in tile[q * block..(q + 1) * block].iter().enumerate() {
+                topk.push(id_base + (start + r) as u32, s);
+            }
+        }
+        start += block;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn backends() -> Vec<Backend> {
+        let mut all = vec![Backend::Portable];
+        for b in [Backend::Avx2, Backend::Neon] {
+            if b.available() {
+                all.push(b);
+            }
+        }
+        all
+    }
+
+    #[test]
+    fn names_and_parse_roundtrip() {
+        for b in [Backend::Portable, Backend::Avx2, Backend::Neon] {
+            assert_eq!(parse_choice(b.name()), Ok(Some(b)));
+        }
+        assert_eq!(parse_choice("auto"), Ok(None));
+        assert_eq!(parse_choice(""), Ok(None));
+        assert_eq!(parse_choice("  AVX2 "), Ok(Some(Backend::Avx2)));
+        assert!(parse_choice("sse9").is_err());
+    }
+
+    #[test]
+    fn detect_is_available_and_active_is_resolvable() {
+        assert!(detect().available());
+        assert!(active().available());
+        assert!(Backend::Portable.available());
+    }
+
+    #[test]
+    fn unavailable_backend_resolves_to_portable() {
+        // on any single host at least one of avx2/neon is foreign
+        for b in [Backend::Avx2, Backend::Neon] {
+            if !b.available() {
+                // must compute (via portable), not fault
+                assert_eq!(b.dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+            }
+        }
+    }
+
+    #[test]
+    fn portable_dot_matches_naive_within_tolerance() {
+        prop::check("kernel portable ~= naive", 120, |rng| {
+            let n = rng.below(70);
+            let a = prop::vec_f32(rng, n);
+            let b = prop::vec_f32(rng, n);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            prop::assert_close(
+                Backend::Portable.dot(&a, &b) as f64,
+                naive as f64,
+                1e-4,
+                "dot",
+            )
+        });
+    }
+
+    #[test]
+    fn all_backends_bit_identical_to_portable() {
+        // the contract the snapshot-equivalence suite rides on: random
+        // dims, including every tail residue and large magnitudes
+        prop::check("simd == portable bitwise", 200, |rng| {
+            let n = match rng.below(4) {
+                0 => rng.below(17),            // tiny + every tail residue
+                1 => 8 * (1 + rng.below(40)),  // exact multiples of LANES
+                2 => 255 + rng.below(4),       // around the serving dim
+                _ => 1 + rng.below(700),       // broad
+            };
+            let scale = [1.0f32, 1e-4, 1e4][rng.below(3)];
+            let a: Vec<f32> = prop::vec_f32(rng, n).iter().map(|x| x * scale).collect();
+            let b = prop::vec_f32(rng, n);
+            let want = Backend::Portable.dot(&a, &b);
+            for backend in backends() {
+                let got = backend.dot(&a, &b);
+                prop::assert_prop(
+                    got.to_bits() == want.to_bits(),
+                    &format!("{} diverged: {got} vs portable {want} at n={n}", backend.name()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blocked_scan_bit_identical_to_single_dots() {
+        prop::check("scan_block == dot grid", 60, |rng| {
+            let dim = 1 + rng.below(80);
+            let n_rows = rng.below(30);
+            let n_q = rng.below(11);
+            let rows = prop::vec_f32(rng, n_rows * dim);
+            let queries: Vec<Vec<f32>> = (0..n_q).map(|_| prop::vec_f32(rng, dim)).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            for backend in backends() {
+                let mut out = vec![0.0f32; n_q * n_rows];
+                backend.scan_block_into(&qrefs, dim, &rows, &mut out);
+                for (q, query) in qrefs.iter().enumerate() {
+                    for r in 0..n_rows {
+                        let want = Backend::Portable.dot(query, &rows[r * dim..(r + 1) * dim]);
+                        let got = out[q * n_rows + r];
+                        prop::assert_prop(
+                            got.to_bits() == want.to_bits(),
+                            &format!("{} blocked (q{q},r{r}): {got} != {want}", backend.name()),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scan_rows_into_matches_per_row_pushes() {
+        let mut rng = Rng::new(0x5CA7);
+        let dim = 24;
+        let n_rows = 3 * SCAN_BLOCK_ROWS + 7; // exercise multiple tiles + ragged last
+        let rows = prop::vec_f32(&mut rng, n_rows * dim);
+        let queries: Vec<Vec<f32>> = (0..6).map(|_| prop::vec_f32(&mut rng, dim)).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let mut topks: Vec<TopK> = (0..qrefs.len()).map(|_| TopK::new(9)).collect();
+        let mut tile = Vec::new();
+        scan_rows_into(&qrefs, dim, &rows, 100, &mut topks, &mut tile);
+        for (q, topk) in topks.into_iter().enumerate() {
+            let mut reference = TopK::new(9);
+            for r in 0..n_rows {
+                reference.push(100 + r as u32, dot(&queries[q], &rows[r * dim..(r + 1) * dim]));
+            }
+            assert_eq!(topk.into_sorted(), reference.into_sorted(), "query {q}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        for backend in backends() {
+            let mut out = [0.0f32; 0];
+            backend.scan_block_into(&[], 4, &[], &mut out);
+            let q: &[f32] = &[1.0, 0.0, 0.0, 0.0];
+            let mut out1 = [0.0f32; 0];
+            backend.scan_block_into(&[q], 4, &[], &mut out1);
+        }
+    }
+
+    #[test]
+    fn dot_fn_matches_active_dot_bitwise() {
+        let f = dot_fn();
+        let mut rng = Rng::new(0xD07);
+        for _ in 0..50 {
+            let n = rng.below(300);
+            let a = prop::vec_f32(&mut rng, n);
+            let b = prop::vec_f32(&mut rng, n);
+            assert_eq!(f(&a, &b).to_bits(), dot(&a, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn configure_accepts_known_rejects_unknown() {
+        // ACTIVE may already be resolved by other tests — configure must
+        // still validate names without disturbing it
+        assert!(configure("auto").is_ok());
+        assert!(configure("portable").is_ok());
+        assert!(configure("warp9").is_err());
+    }
+}

@@ -14,13 +14,21 @@
 //! Online inserts are O(1) amortized on both paths (IVF assigns new vectors
 //! to their nearest existing centroid) — required for the paper's real-time
 //! adaptation claim.
+//!
+//! All scan scoring funnels through the runtime-dispatched SIMD kernels in
+//! [`kernel`] (AVX2 / NEON / portable, bit-identical by construction);
+//! batched searches use its query-blocked scans via
+//! [`ReadIndex::search_batch_into`] so corpus bandwidth is amortized
+//! across a batch.
 
 pub mod flat;
 pub mod ivf;
+pub mod kernel;
 pub mod topk;
 pub mod view;
 
 use crate::elo::Comparison;
+use self::topk::TopK;
 
 /// Payload attached to each stored vector: every pairwise feedback record
 /// collected for that prompt (paper workflow step 5). One stored vector per
@@ -44,6 +52,59 @@ pub struct Hit {
     pub score: f32,
 }
 
+/// Reusable scratch for query-blocked batch searches: one [`TopK`]
+/// selector per query plus the kernel score tile, allocated once and
+/// recycled across batches (the route path's per-query-allocation
+/// killer). Views push candidates into the selectors; callers drain the
+/// per-query hits out afterwards.
+#[derive(Debug, Default)]
+pub struct BatchTopK {
+    topks: Vec<TopK>,
+    tile: Vec<f32>,
+}
+
+impl BatchTopK {
+    pub fn new() -> Self {
+        BatchTopK::default()
+    }
+
+    /// Reset for a batch of `n_queries` selectors of capacity `k`,
+    /// keeping every allocation.
+    pub fn begin(&mut self, n_queries: usize, k: usize) {
+        self.topks.truncate(n_queries);
+        for t in &mut self.topks {
+            t.reset(k);
+        }
+        while self.topks.len() < n_queries {
+            self.topks.push(TopK::new(k));
+        }
+    }
+
+    /// The per-query selectors of the current batch.
+    pub fn selectors_mut(&mut self) -> &mut [TopK] {
+        &mut self.topks
+    }
+
+    /// Selectors and the kernel score tile, borrowed together (blocked
+    /// scans fill the tile and push rows into the selectors).
+    pub(crate) fn parts_mut(&mut self) -> (&mut [TopK], &mut Vec<f32>) {
+        (&mut self.topks, &mut self.tile)
+    }
+
+    /// Drain each query's sorted hits into `out`, reusing its inner
+    /// buffers; `out` ends up with exactly one hit list per query.
+    pub fn drain_hits_into(&mut self, out: &mut Vec<Vec<Hit>>) {
+        out.truncate(self.topks.len());
+        while out.len() < self.topks.len() {
+            out.push(Vec::new());
+        }
+        for (t, hits) in self.topks.iter_mut().zip(out.iter_mut()) {
+            hits.clear();
+            t.drain_sorted(|id, score| hits.push(Hit { id, score }));
+        }
+    }
+}
+
 /// The read-only surface of an index: everything the scoring path needs
 /// and nothing the ingest path has. Snapshot views ([`view::FrozenView`],
 /// [`ivf::IvfView`]) implement only this; full indexes implement the
@@ -63,6 +124,31 @@ pub trait ReadIndex {
 
     /// The k nearest visible vectors by dot product, best first.
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
+
+    /// Top-k for a whole batch of queries against one consistent view,
+    /// pushed into `acc`'s per-query selectors. The default maps the
+    /// single-query [`ReadIndex::search`]; bulk views override it with
+    /// query-blocked kernel scans ([`kernel`]) that amortize corpus
+    /// bandwidth across the batch. Either way the retained hits are
+    /// bit-identical to `queries.len()` single searches.
+    fn search_batch_into(&self, queries: &[&[f32]], k: usize, acc: &mut BatchTopK) {
+        acc.begin(queries.len(), k);
+        for (query, topk) in queries.iter().zip(acc.selectors_mut()) {
+            for h in self.search(query, k) {
+                topk.push(h.id, h.score);
+            }
+        }
+    }
+
+    /// Convenience wrapper over [`ReadIndex::search_batch_into`]
+    /// allocating fresh hit lists (tests, one-shot callers).
+    fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
+        let mut acc = BatchTopK::new();
+        let mut out = Vec::new();
+        self.search_batch_into(queries, k, &mut acc);
+        acc.drain_hits_into(&mut out);
+        out
+    }
 
     /// Feedback payload for an entry id.
     fn feedback(&self, id: u32) -> &Feedback;

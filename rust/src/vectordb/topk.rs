@@ -21,6 +21,15 @@ impl TopK {
         self.heap.clear();
     }
 
+    /// Reset for reuse with a (possibly different) capacity, keeping the
+    /// allocation — the batch scan path recycles selectors across batches.
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.heap.clear();
+        // len is 0 after the clear, so this guarantees capacity >= k
+        self.heap.reserve(k);
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -69,6 +78,17 @@ impl TopK {
         self.heap
             .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
         self.heap.into_iter().map(|(s, i)| (i, s)).collect()
+    }
+
+    /// Sort retained items (descending score, ascending index — exactly
+    /// [`TopK::into_sorted`]'s order) and visit each, leaving the selector
+    /// empty for reuse. Allocation-free drain for the batch route path.
+    pub fn drain_sorted(&mut self, mut f: impl FnMut(u32, f32)) {
+        self.heap
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        for (s, i) in self.heap.drain(..) {
+            f(i, s);
+        }
     }
 
     /// Sorted snapshot without consuming (allocates).
@@ -156,6 +176,41 @@ mod tests {
         assert_eq!(t.threshold(), 1.0);
         t.push(2, 3.0);
         assert_eq!(t.threshold(), 2.0);
+    }
+
+    #[test]
+    fn drain_sorted_matches_into_sorted_and_empties() {
+        let mut rng = Rng::new(11);
+        let mut t = TopK::new(7);
+        let mut twin = TopK::new(7);
+        for i in 0..300u32 {
+            let s = rng.f32();
+            t.push(i, s);
+            twin.push(i, s);
+        }
+        let mut drained = Vec::new();
+        t.drain_sorted(|i, s| drained.push((i, s)));
+        assert_eq!(drained, twin.into_sorted());
+        assert!(t.is_empty());
+        // and the selector is reusable afterwards
+        t.push(5, 1.0);
+        assert_eq!(t.into_sorted(), vec![(5, 1.0)]);
+    }
+
+    #[test]
+    fn reset_changes_k_and_keeps_working() {
+        let mut t = TopK::new(2);
+        t.push(0, 1.0);
+        t.push(1, 2.0);
+        t.reset(3);
+        for (i, s) in [(0u32, 1.0f32), (1, 5.0), (2, 3.0), (3, 4.0)] {
+            t.push(i, s);
+        }
+        assert_eq!(t.into_sorted(), vec![(1, 5.0), (3, 4.0), (2, 3.0)]);
+        let mut t = TopK::new(8);
+        t.reset(0);
+        t.push(0, 1.0);
+        assert!(t.is_empty());
     }
 
     #[test]

@@ -21,9 +21,9 @@
 
 use std::sync::Arc;
 
-use super::flat::dot_unrolled;
+use super::kernel;
 use super::topk::TopK;
-use super::{Feedback, Hit, ReadIndex, VectorIndex};
+use super::{BatchTopK, Feedback, Hit, ReadIndex, VectorIndex};
 
 /// Locate a global id among sealed segments: `(segment index, local
 /// index)`. `bases` holds each segment's first global id, ascending;
@@ -74,9 +74,24 @@ impl Segment {
 
     /// Scan this segment into `topk`, offsetting local indices by `base`.
     fn scan_into(&self, query: &[f32], base: u32, topk: &mut TopK) {
+        // resolve the kernel dispatch once for the whole scan
+        let dot = kernel::dot_fn();
         for i in 0..self.payloads.len() {
-            topk.push(base + i as u32, dot_unrolled(self.row(i), query));
+            topk.push(base + i as u32, dot(self.row(i), query));
         }
+    }
+
+    /// Scan this segment for a whole query block through the blocked
+    /// kernel, pushing `(base + row, score)` into each query's selector.
+    /// Bit-identical hits to [`Segment::scan_into`] per query.
+    fn scan_block_into(
+        &self,
+        queries: &[&[f32]],
+        base: u32,
+        topks: &mut [TopK],
+        tile: &mut Vec<f32>,
+    ) {
+        kernel::scan_rows_into(queries, self.dim, &self.data, base, topks, tile);
     }
 }
 
@@ -110,6 +125,22 @@ impl FrozenView {
         debug_assert!((id as usize) < self.len, "id {id} out of view");
         locate_sealed(&self.bases, id)
     }
+
+    /// Blocked multi-query scan of every segment, ids offset by
+    /// `id_offset` (the IVF view scans its tail this way, offset past the
+    /// core's id space). Pushes into the per-query selectors in ascending
+    /// id order — bit-identical hits to per-query [`FrozenView::search`].
+    pub(crate) fn scan_segments_into(
+        &self,
+        queries: &[&[f32]],
+        id_offset: u32,
+        topks: &mut [TopK],
+        tile: &mut Vec<f32>,
+    ) {
+        for (seg, &base) in self.segments.iter().zip(&self.bases) {
+            seg.scan_block_into(queries, id_offset + base, topks, tile);
+        }
+    }
 }
 
 impl ReadIndex for FrozenView {
@@ -131,6 +162,15 @@ impl ReadIndex for FrozenView {
             .into_iter()
             .map(|(id, score)| Hit { id, score })
             .collect()
+    }
+
+    fn search_batch_into(&self, queries: &[&[f32]], k: usize, acc: &mut BatchTopK) {
+        for q in queries {
+            assert_eq!(q.len(), self.dim, "query dim mismatch");
+        }
+        acc.begin(queries.len(), k);
+        let (topks, tile) = acc.parts_mut();
+        self.scan_segments_into(queries, 0, topks, tile);
     }
 
     fn feedback(&self, id: u32) -> &Feedback {
@@ -367,6 +407,28 @@ mod tests {
                 let a = prefix.search(&q, 10);
                 let b = view.search(&q, 10);
                 prop::assert_prop(a == b, "prefix hit lists differ")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frozen_view_batch_search_bit_identical_to_singles() {
+        // the blocked multi-segment scan must retain exactly the hits of
+        // per-query scans at every freeze granularity
+        prop::check("frozen batch == singles", 25, |rng| {
+            let dim = [8, 16, 64][rng.below(3)];
+            let n = rng.below(500);
+            let k = 1 + rng.below(25);
+            let freeze_every = 1 + rng.below(60);
+            let (_, mut seg, _) = twin_stores(rng, n, dim, freeze_every);
+            let view = seg.freeze();
+            let n_q = rng.below(10);
+            let queries: Vec<Vec<f32>> = (0..n_q).map(|_| random_unit(rng, dim)).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let batch = view.search_batch(&qrefs, k);
+            for (q, hits) in qrefs.iter().zip(&batch) {
+                prop::assert_prop(hits == &view.search(q, k), "batch hits != single hits")?;
             }
             Ok(())
         });

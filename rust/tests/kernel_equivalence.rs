@@ -1,0 +1,212 @@
+//! Kernel-subsystem equivalence suite (ISSUE 5 acceptance):
+//!
+//! 1. every available SIMD backend is **bit-identical** to the portable
+//!    reference on random dims, including non-multiple-of-lane tails;
+//! 2. the query-blocked multi-query scans return exactly the per-query
+//!    hits on `FrozenView` and `IvfView` (ids, scores, tie-breaks);
+//! 3. the batched route path (`RouterSnapshot::score_batch`,
+//!    `ShardedSnapshot::score_batch{,_scatter}`) scores bit-identically
+//!    to the single-query path over flat and IVF views at any K.
+//!
+//! The whole suite (and the rest of tier-1) also runs in CI with
+//! `EAGLE_KERNEL=portable`, so both dispatch arms stay covered.
+
+use eagle::config::{EagleParams, EpochParams, IvfPublishParams, ShardParams};
+use eagle::coordinator::router::Observation;
+use eagle::coordinator::sharded::ShardedRouter;
+use eagle::coordinator::snapshot::RouterWriter;
+use eagle::elo::{Comparison, Outcome};
+use eagle::util::{l2_normalize, prop, Rng};
+use eagle::vectordb::kernel::{self, Backend};
+use eagle::vectordb::view::SegmentStore;
+use eagle::vectordb::{Feedback, ReadIndex, VectorIndex};
+
+fn unit(rng: &mut Rng, dim: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    l2_normalize(&mut v);
+    v
+}
+
+fn rand_obs(rng: &mut Rng, dim: usize, n_models: usize) -> Observation {
+    let a = rng.below(n_models);
+    let mut b = rng.below(n_models - 1);
+    if b >= a {
+        b += 1;
+    }
+    let outcome = match rng.below(3) {
+        0 => Outcome::WinA,
+        1 => Outcome::WinB,
+        _ => Outcome::Draw,
+    };
+    Observation::single(unit(rng, dim), Comparison { a, b, outcome })
+}
+
+fn available_backends() -> Vec<Backend> {
+    [Backend::Portable, Backend::Avx2, Backend::Neon]
+        .into_iter()
+        .filter(|b| b.available())
+        .collect()
+}
+
+#[test]
+fn backends_bit_identical_across_dims_and_tails() {
+    prop::check("kernel backends bit-identical", 150, |rng| {
+        // cover every tail residue (n % 8) plus serving-scale dims
+        let n = match rng.below(3) {
+            0 => rng.below(33),
+            1 => 250 + rng.below(14),
+            _ => 1 + rng.below(1024),
+        };
+        let a = prop::vec_f32(rng, n);
+        let b = prop::vec_f32(rng, n);
+        let want = Backend::Portable.dot(&a, &b);
+        for backend in available_backends() {
+            let got = backend.dot(&a, &b);
+            prop::assert_prop(
+                got.to_bits() == want.to_bits(),
+                &format!("{} != portable at n={n}", backend.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_scan_bit_identical_across_backends_and_shapes() {
+    prop::check("blocked scan bit-identical", 40, |rng| {
+        let dim = 1 + rng.below(300);
+        let n_rows = rng.below(40);
+        let n_q = rng.below(9);
+        let rows = prop::vec_f32(rng, n_rows * dim);
+        let queries: Vec<Vec<f32>> = (0..n_q).map(|_| prop::vec_f32(rng, dim)).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let mut want = vec![0.0f32; n_q * n_rows];
+        Backend::Portable.scan_block_into(&qrefs, dim, &rows, &mut want);
+        // the blocked grid must equal per-pair portable dots...
+        for (q, query) in qrefs.iter().enumerate() {
+            for r in 0..n_rows {
+                let single = Backend::Portable.dot(query, &rows[r * dim..(r + 1) * dim]);
+                prop::assert_prop(
+                    want[q * n_rows + r].to_bits() == single.to_bits(),
+                    "portable blocked != portable single",
+                )?;
+            }
+        }
+        // ...and every backend must reproduce it bit-for-bit
+        for backend in available_backends() {
+            let mut got = vec![0.0f32; n_q * n_rows];
+            backend.scan_block_into(&qrefs, dim, &rows, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                prop::assert_prop(
+                    g.to_bits() == w.to_bits(),
+                    &format!("{} blocked scan != portable", backend.name()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frozen_and_ivf_view_batch_search_equals_singles() {
+    // end-to-end through the published snapshot views, flat and IVF
+    // (partial probe), batch sizes straddling the query tile
+    prop::check("view batch == singles", 20, |rng| {
+        let dim = 32;
+        let n = 40 + rng.below(300);
+        let mut writer = RouterWriter::new(
+            EagleParams::default(),
+            4,
+            dim,
+            EpochParams { publish_every: 16, publish_interval_ms: 10_000 },
+        );
+        if rng.below(2) == 1 {
+            writer.set_ivf(IvfPublishParams {
+                publish_threshold: 50,
+                n_cells: 8,
+                nprobe: 1 + rng.below(8),
+            });
+        }
+        for _ in 0..n {
+            writer.observe(rand_obs(rng, dim, 4));
+        }
+        writer.publish();
+        let snap = writer.ring().load();
+        let k = 1 + rng.below(25);
+        let n_q = 1 + rng.below(11);
+        let queries: Vec<Vec<f32>> = (0..n_q).map(|_| unit(rng, dim)).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let batch = snap.view().search_batch(&qrefs, k);
+        for (q, hits) in qrefs.iter().zip(&batch) {
+            prop::assert_prop(
+                hits == &snap.view().search(q, k),
+                "batch hits != single hits through the snapshot view",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn segment_store_batch_default_matches_singles() {
+    // the trait's default (map singles) must also hold, e.g. on the
+    // writer-side segment store that has no blocked override
+    let mut rng = Rng::new(7);
+    let dim = 16;
+    let mut store = SegmentStore::new(dim);
+    for i in 0..120 {
+        let v = unit(&mut rng, dim);
+        store.add(
+            &v,
+            Feedback::single(Comparison { a: i % 3, b: (i + 1) % 3, outcome: Outcome::WinA }),
+        );
+        if i % 31 == 0 {
+            let _ = store.freeze();
+        }
+    }
+    let queries: Vec<Vec<f32>> = (0..5).map(|_| unit(&mut rng, dim)).collect();
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+    let batch = store.search_batch(&qrefs, 10);
+    for (q, hits) in qrefs.iter().zip(&batch) {
+        assert_eq!(hits, &store.search(q, 10));
+    }
+}
+
+#[test]
+fn sharded_score_batch_bit_identical_to_singles_at_k1_and_k3() {
+    for shards in [1usize, 3] {
+        let mut rng = Rng::new(0xEA + shards as u64);
+        let dim = 24;
+        let mut router = ShardedRouter::new(
+            EagleParams::default(),
+            5,
+            dim,
+            EpochParams { publish_every: 64, publish_interval_ms: 10_000 },
+            ShardParams { count: shards, hash_seed: 0xEA61E },
+        );
+        for _ in 0..400 {
+            router.observe(rand_obs(&mut rng, dim, 5));
+        }
+        router.publish_all();
+        let snap = router.handle().load();
+        let queries: Vec<Vec<f32>> = (0..10).map(|_| unit(&mut rng, dim)).collect();
+        let batch = snap.score_batch(&queries);
+        let scatter = snap.score_batch_scatter(&queries);
+        for (i, q) in queries.iter().enumerate() {
+            let single = snap.scores(q);
+            assert_eq!(batch[i], single, "K={shards}: batch diverged at query {i}");
+            assert_eq!(scatter[i], single, "K={shards}: scatter diverged at query {i}");
+        }
+    }
+}
+
+#[test]
+fn active_backend_is_available_and_parseable() {
+    let b = kernel::active();
+    assert!(b.available(), "active backend must run on this host");
+    assert_eq!(kernel::parse_choice(b.name()), Ok(Some(b)));
+    // when CI forces the portable arm, dispatch must honor it
+    if std::env::var("EAGLE_KERNEL").as_deref() == Ok("portable") {
+        assert_eq!(b, Backend::Portable);
+    }
+}
