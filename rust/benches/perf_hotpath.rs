@@ -216,6 +216,7 @@ fn main() {
     sharded_storm_sweep(&obs, &mut report);
     ingest_pipeline_sweep(&mut report);
     persist_beat_sweep(&mut report);
+    connection_scale_sweep(&mut report);
     if eagle::bench::json_enabled() {
         let path = report.write().expect("write bench json");
         println!("\nwrote {}", path.display());
@@ -739,6 +740,102 @@ fn persist_beat_sweep(report: &mut JsonReport) {
         report.push(&format!("persist.n{n}.full_over_delta_bytes_ratio"), ratio);
     }
     let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The ISSUE 6 acceptance sweep: route latency for one active client
+/// while N idle keep-alive connections are parked on the serving event
+/// loop. Under the old worker-pool server a handful of idle clients
+/// pinned every worker inside its read-timeout poll, so this curve
+/// exploded; with readiness polling an idle connection costs zero
+/// wakeups and `conn.c{N}.p99_us` / `conn.c{N}.qps` should stay flat
+/// from 100 to 10k connections (fd limits permitting — the sweep stops
+/// scaling, with a note, at the first connect failure).
+fn connection_scale_sweep(report: &mut JsonReport) {
+    use eagle::coordinator::registry::ModelRegistry;
+    use eagle::server::client::EagleClient;
+    use eagle::server::{Admission, Server, ServerOptions, ServerState};
+
+    const DIM_SRV: usize = 32;
+    let levels: &[usize] = if eagle::bench::smoke() { &[16, 64] } else { &[100, 1_000, 10_000] };
+    let window = if eagle::bench::smoke() {
+        Duration::from_millis(80)
+    } else {
+        Duration::from_millis(500)
+    };
+
+    let metrics = Arc::new(Metrics::new());
+    let service = EmbedService::start_hash(
+        DIM_SRV,
+        BatcherOptions { batch_window_us: 100, max_batch: 16 },
+        metrics.clone(),
+    );
+    let registry = ModelRegistry::routerbench();
+    let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(DIM_SRV));
+    let state = Arc::new(ServerState::with_options(
+        router,
+        registry,
+        service.handle(),
+        metrics,
+        ServerOptions {
+            epoch: EpochParams { publish_every: 64, publish_interval_ms: 5 },
+            admission: Admission {
+                max_connections: 16_384,
+                max_inflight: 256,
+                // parked connections must survive the measurement window
+                idle_timeout_ms: 0,
+            },
+            ..Default::default()
+        },
+    ));
+    let server = Server::start(state, "127.0.0.1:0", 2).expect("bench server");
+    let addr = server.addr.to_string();
+
+    let mut client = EagleClient::connect(&addr).expect("bench client");
+    let mut idle: Vec<std::net::TcpStream> = Vec::new();
+
+    println!("\n== connection scale (1 active client vs N idle keep-alive conns) ==");
+    for &n in levels {
+        while idle.len() < n {
+            match std::net::TcpStream::connect(&addr) {
+                Ok(s) => idle.push(s),
+                Err(e) => {
+                    println!("  (stopped scaling at {} idle conns: {e})", idle.len());
+                    break;
+                }
+            }
+        }
+        if idle.len() < n {
+            break;
+        }
+        // let the event loop drain its accept backlog before measuring
+        std::thread::sleep(Duration::from_millis(20));
+
+        for i in 0..16 {
+            client.route(&format!("warmup probe {i}"), 1.0).expect("warmup route");
+        }
+        let mut lat = Vec::new();
+        let mut seq = 0u64;
+        let until = Instant::now() + window;
+        let t0 = Instant::now();
+        while Instant::now() < until {
+            let tb = Instant::now();
+            client.route(&format!("scale probe {seq}"), 1.0).expect("route under idle load");
+            lat.push(tb.elapsed().as_nanos() as f64 / 1e3);
+            seq += 1;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let qps = lat.len() as f64 / secs.max(1e-9);
+        let p99 = percentile(&lat, 99.0);
+        println!(
+            "  c={n:<5}: {qps:>8.0} q/s  p50 {:>7.1} us  p99 {p99:>7.1} us",
+            percentile(&lat, 50.0),
+        );
+        report.push(&format!("conn.c{n}.p99_us"), p99);
+        report.push(&format!("conn.c{n}.qps"), qps);
+    }
+    drop(idle);
+    drop(client);
+    server.shutdown();
 }
 
 /// The sharded scatter-gather arm: batched route throughput through a

@@ -86,7 +86,8 @@ eagle — training-free multi-LLM router (reproduction of Zhao et al. 2024)
 
 USAGE:
   eagle serve    [--addr HOST:PORT] [--workers N] [--snapshot FILE]
-                 [--snapshot-out FILE] [--config FILE] [--set key=value]...
+                 [--snapshot-out FILE] [--max-connections N] [--max-inflight N]
+                 [--idle-timeout-ms MS] [--config FILE] [--set key=value]...
   eagle eval     [--per-dataset N] [--dataset NAME|all]
                  [--routers eagle,eagle-global,eagle-local,knn,mlp,svm]
                  [--seed S] [--config FILE]
@@ -155,6 +156,14 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         cfg.persist.seal_bytes,
         cfg.persist.fsync,
         if cfg.persist.path.is_empty() { "<snapshot-out>" } else { &cfg.persist.path }
+    );
+    println!(
+        "  server: addr={} workers={} max_connections={} max_inflight={} idle_timeout_ms={}",
+        cfg.server.addr,
+        cfg.server.workers,
+        cfg.server.max_connections,
+        cfg.server.max_inflight,
+        cfg.server.idle_timeout_ms
     );
     println!(
         "  kernel: backend={} (host detects {}; EAGLE_KERNEL overrides)",
@@ -343,6 +352,11 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
 
     let addr = args.get("addr").unwrap_or(&cfg.server.addr).to_string();
     let workers = args.usize_or("workers", cfg.server.workers)?;
+    let admission = crate::server::Admission {
+        max_connections: args.usize_or("max-connections", cfg.server.max_connections)?,
+        max_inflight: args.usize_or("max-inflight", cfg.server.max_inflight)?,
+        idle_timeout_ms: args.u64_or("idle-timeout-ms", cfg.server.idle_timeout_ms)?,
+    };
     let metrics = Arc::new(Metrics::new());
 
     let registry = ModelRegistry::routerbench();
@@ -445,6 +459,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
             seal_bytes: cfg.persist.seal_bytes,
             fsync: cfg.persist.fsync,
             kernel_backend: cfg.kernel.backend.clone(),
+            admission: admission.clone(),
         },
     );
     println!(
@@ -496,9 +511,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
     let state = Arc::new(state);
     let server = crate::server::Server::start(state, &addr, workers)?;
     println!(
-        "eagle serving on {} ({} workers, {} shard(s) with one applier each, \
-         epoch cadence: every {} records / {} ms, ivf publish threshold: {}); \
-         Ctrl-C to stop",
+        "eagle serving on {} (event loop + {} exec workers, {} shard(s) with one \
+         applier each, epoch cadence: every {} records / {} ms, ivf publish \
+         threshold: {}); Ctrl-C to stop",
         server.addr,
         workers,
         cfg.shards.count,
@@ -508,6 +523,17 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
             "off".to_string()
         } else {
             format!("{} entries/shard", cfg.ivf.publish_threshold)
+        },
+    );
+    println!(
+        "admission: max_connections={} max_inflight={} idle_timeout={} \
+         (load sheds are counted per reason; read them via the stats op)",
+        admission.max_connections,
+        admission.max_inflight,
+        if admission.idle_timeout_ms == 0 {
+            "off".to_string()
+        } else {
+            format!("{} ms", admission.idle_timeout_ms)
         },
     );
 

@@ -92,16 +92,33 @@ impl Default for EmbedParams {
     }
 }
 
-/// Serving front-end parameters.
+/// Serving front-end parameters: execution pool size plus the admission
+/// limits the event loop enforces (see [`crate::server::Admission`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerParams {
     pub addr: String,
+    /// Execution worker threads (connection fan-in is the event loop,
+    /// so this sizes request execution, not connection capacity).
     pub workers: usize,
+    /// Max simultaneously open client connections; excess connections
+    /// get one load-shed error line and are closed.
+    pub max_connections: usize,
+    /// Max request lines executing at once across all connections;
+    /// lines over the budget get a load-shed error reply.
+    pub max_inflight: usize,
+    /// Close connections idle for this many ms (0 = never).
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServerParams {
     fn default() -> Self {
-        ServerParams { addr: "127.0.0.1:7878".to_string(), workers: 4 }
+        ServerParams {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 4,
+            max_connections: 4096,
+            max_inflight: 256,
+            idle_timeout_ms: 30_000,
+        }
     }
 }
 
@@ -377,6 +394,9 @@ impl Config {
             "embed.max_batch" => self.embed.max_batch = usize_of(value)?,
             "server.addr" => self.server.addr = value.to_string(),
             "server.workers" => self.server.workers = usize_of(value)?,
+            "server.max_connections" => self.server.max_connections = usize_of(value)?,
+            "server.max_inflight" => self.server.max_inflight = usize_of(value)?,
+            "server.idle_timeout_ms" => self.server.idle_timeout_ms = u64_of(value)?,
             "epoch.publish_every" => self.epoch.publish_every = usize_of(value)?,
             "epoch.publish_interval_ms" => self.epoch.publish_interval_ms = u64_of(value)?,
             "shards.count" => self.shards.count = usize_of(value)?,
@@ -417,6 +437,12 @@ impl Config {
         }
         if self.server.workers == 0 {
             return Err(ConfigError("server.workers must be > 0".into()));
+        }
+        if self.server.max_connections == 0 {
+            return Err(ConfigError("server.max_connections must be > 0".into()));
+        }
+        if self.server.max_inflight == 0 {
+            return Err(ConfigError("server.max_inflight must be > 0".into()));
         }
         if self.embed.max_batch == 0 {
             return Err(ConfigError("embed.max_batch must be > 0".into()));
@@ -585,6 +611,33 @@ workers = 8
         // ...but is unconstrained while IVF publication is disabled
         bad.ivf.publish_threshold = 0;
         assert!(bad.validate().is_ok());
+    }
+
+    #[test]
+    fn admission_knobs_parse_and_validate() {
+        let c = Config::load(
+            None,
+            &[
+                ("server.max_connections".into(), "128".into()),
+                ("server.max_inflight".into(), "16".into()),
+                ("server.idle_timeout_ms".into(), "5000".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.server.max_connections, 128);
+        assert_eq!(c.server.max_inflight, 16);
+        assert_eq!(c.server.idle_timeout_ms, 5000);
+        assert_eq!(Config::default().server, ServerParams::default());
+        let mut bad = Config::default();
+        bad.server.max_connections = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = Config::default();
+        bad.server.max_inflight = 0;
+        assert!(bad.validate().is_err());
+        // idle_timeout_ms = 0 is valid: it disables the sweep
+        let mut c = Config::default();
+        c.server.idle_timeout_ms = 0;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

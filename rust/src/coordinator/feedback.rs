@@ -125,12 +125,16 @@ impl Verdict {
 /// Data pushes go through [`Queue::push_bounded`], which rejects (drops
 /// the *incoming* item) when the queue is at capacity so the caller can
 /// count the drop — backpressure lands on the producer, never on a
-/// blocked consumer. Control messages (flush barriers) use
+/// blocked consumer. Producers that must not lose an item (it was already
+/// acknowledged upstream) use [`Queue::push_wait`], which blocks for
+/// capacity up to a bound. Control messages (flush barriers) use
 /// [`Queue::push`], which ignores the capacity so a full queue can never
 /// wedge a flush.
 pub struct Queue<T> {
     inner: Mutex<QueueInner<T>>,
     cond: Condvar,
+    /// Signalled whenever items leave the queue, for `push_wait` blockers.
+    space: Condvar,
     capacity: usize,
 }
 
@@ -154,6 +158,7 @@ impl<T> Queue<T> {
                 closed: false,
             }),
             cond: Condvar::new(),
+            space: Condvar::new(),
             capacity,
         }
     }
@@ -185,11 +190,62 @@ impl<T> Queue<T> {
         Ok(())
     }
 
+    /// Bounded blocking push: waits up to `timeout` for capacity instead
+    /// of rejecting. Returns the item back on timeout or close so the
+    /// caller can decide what to do with it — used by producers applying
+    /// backpressure for records a client has already been acknowledged
+    /// for, where a silent drop would break the ack contract.
+    pub fn push_wait(&self, v: T, timeout: std::time::Duration) -> Result<(), T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(v);
+            }
+            if inner.items.len() < self.capacity {
+                inner.items.push_back(v);
+                drop(inner);
+                self.cond.notify_one();
+                return Ok(());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(v);
+            }
+            let (guard, _) = self.space.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Block until the queue has spare capacity, the queue closes, or
+    /// `timeout` elapses. Returns true when it is safe to proceed with a
+    /// push (spare capacity, or closed — a push after close is a no-op),
+    /// false only on timeout with the queue still full. For producers
+    /// that stage items into batch messages and need to throttle *before*
+    /// pushing rather than hand items back.
+    pub fn wait_for_capacity(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed || inner.items.len() < self.capacity {
+                return true;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.space.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
     /// Blocking pop; None once closed and drained.
     pub fn pop(&self) -> Option<T> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(v) = inner.items.pop_front() {
+                drop(inner);
+                self.space.notify_all();
                 return Some(v);
             }
             if inner.closed {
@@ -211,7 +267,10 @@ impl<T> Queue<T> {
         loop {
             if !inner.items.is_empty() {
                 let take = inner.items.len().min(max.max(1));
-                return Some(inner.items.drain(..take).collect());
+                let batch: Vec<T> = inner.items.drain(..take).collect();
+                drop(inner);
+                self.space.notify_all();
+                return Some(batch);
             }
             if inner.closed {
                 return None;
@@ -255,7 +314,10 @@ impl<T> Queue<T> {
                     inner = guard;
                 }
                 let take = inner.items.len().min(max);
-                return Some(inner.items.drain(..take).collect());
+                let batch: Vec<T> = inner.items.drain(..take).collect();
+                drop(inner);
+                self.space.notify_all();
+                return Some(batch);
             }
             if inner.closed {
                 return None;
@@ -275,7 +337,10 @@ impl<T> Queue<T> {
     /// Non-blocking drain of everything queued.
     pub fn drain(&self) -> Vec<T> {
         let mut inner = self.inner.lock().unwrap();
-        inner.items.drain(..).collect()
+        let all: Vec<T> = inner.items.drain(..).collect();
+        drop(inner);
+        self.space.notify_all();
+        all
     }
 
     pub fn len(&self) -> usize {
@@ -292,10 +357,12 @@ impl<T> Queue<T> {
         self.inner.lock().unwrap().dropped
     }
 
-    /// Close the queue; blocked pops return None after drain.
+    /// Close the queue; blocked pops return None after drain, blocked
+    /// capacity waiters get their item back.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.cond.notify_all();
+        self.space.notify_all();
     }
 }
 
@@ -405,6 +472,43 @@ mod tests {
             }));
         }
         assert_eq!(q.len(), 5);
+    }
+
+    #[test]
+    fn push_wait_blocks_for_capacity_then_succeeds() {
+        use std::sync::Arc;
+        use std::time::Duration;
+        let q = Arc::new(FeedbackQueue::new(1));
+        let v = |i: usize| Verdict {
+            embedding: vec![i as f32],
+            model_a: 0,
+            model_b: 1,
+            score_a: 1.0,
+        };
+        q.push(v(0));
+        // full queue + nobody popping: push_wait times out and hands back
+        let back = q.push_wait(v(1), Duration::from_millis(30));
+        assert!(back.is_err());
+        assert_eq!(back.err().unwrap().embedding, vec![1.0]);
+        // a consumer frees space while the producer is blocked
+        let popper = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                q.pop()
+            })
+        };
+        assert!(q.push_wait(v(2), Duration::from_secs(5)).is_ok());
+        assert_eq!(popper.join().unwrap().unwrap().embedding, vec![0.0]);
+        // close unblocks a capacity waiter with the item handed back
+        q.push(v(3));
+        let waiter = {
+            let q = q.clone();
+            std::thread::spawn(move || q.push_wait(v(4), Duration::from_secs(5)))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(waiter.join().unwrap().is_err());
     }
 
     #[test]

@@ -22,11 +22,15 @@
 //! segment merges, and snapshot publication scale with the shard count.
 //!
 //! Route scoring never touches any of this: readers keep loading
-//! immutable snapshots from the [`ShardedHandle`]; backpressure lands on
-//! the bounded queues (drops are counted per reason, never blocking), and
-//! a [`IngestPipeline::flush`] barrier flows through the same queues so
-//! "everything enqueued before the flush" is applied and published when
-//! it returns.
+//! immutable snapshots from the [`ShardedHandle`]. Backpressure has two
+//! regimes: *unacknowledged* records shed at the bounded raw-queue push
+//! (counted per reason, the client sees an error reply), while records
+//! already acknowledged with `FeedbackAccepted` are never dropped — a
+//! full shard-lane queue stalls the dispatcher (bounded blocking,
+//! counted as [`IngestMetrics::dropped_lane_backlog`] stall events)
+//! until the applier drains. A [`IngestPipeline::flush`] barrier flows
+//! through the same queues so "everything enqueued before the flush" is
+//! applied and published when it returns.
 //!
 //! The dispatcher pop **lingers** ([`IngestOptions::linger`], the same
 //! drain-or-wait shape as the embed engine's batcher): under a feedback
@@ -85,10 +89,12 @@ pub struct IngestMetrics {
     pub applied: Counter,
     /// Rejected at the raw-queue push — the client saw an error reply.
     pub dropped_overflow: Counter,
-    /// Silently dropped *after* acceptance because a shard lane's queue
-    /// was at capacity (the client already got FeedbackAccepted); kept
-    /// separate from [`IngestMetrics::dropped_overflow`] so acknowledged
-    /// data loss is distinguishable in the stats op.
+    /// Dispatcher stall events on a full shard-lane queue. Historically
+    /// this counted records silently dropped *after* the client got
+    /// `FeedbackAccepted`; the dispatcher now applies bounded blocking
+    /// backpressure instead (no post-ack loss), and the counter is kept
+    /// as a stall diagnostic: a rising value means an applier is slow or
+    /// wedged and the dispatcher is throttling on it.
     pub dropped_lane_backlog: Counter,
     /// Dropped on the ingest side because embedding failed.
     pub dropped_embed: Counter,
@@ -143,10 +149,11 @@ impl IngestMetrics {
         self.shards.len()
     }
 
-    /// Total records dropped, across every reason.
+    /// Total records dropped, across every reason. Lane-backlog stalls
+    /// are not drops (the record is applied after the stall resolves), so
+    /// they do not count here.
     pub fn dropped_total(&self) -> u64 {
         self.dropped_overflow.get()
-            + self.dropped_lane_backlog.get()
             + self.dropped_embed.get()
             + self.dropped_unknown_model.get()
             + self.dropped_invalid.get()
@@ -162,17 +169,17 @@ impl IngestMetrics {
             .collect();
         format!(
             "ingest: queued={} folded_global={} applied={} batches={} dropped(overflow={} \
-             lane_backlog={} embed={} unknown_model={} invalid={}) persists={}/{} \
+             embed={} unknown_model={} invalid={}) lane_stalls={} persists={}/{} \
              shards(applied/queued)=[{}]",
             self.queued.get(),
             self.folded_global.get(),
             self.applied.get(),
             self.dispatch_batches.get(),
             self.dropped_overflow.get(),
-            self.dropped_lane_backlog.get(),
             self.dropped_embed.get(),
             self.dropped_unknown_model.get(),
             self.dropped_invalid.get(),
+            self.dropped_lane_backlog.get(),
             self.persists.get() - self.persist_failures.get(),
             self.persists.get(),
             per_shard.join(" "),
@@ -618,11 +625,21 @@ impl Dispatcher {
             };
             let shard = shard_of(&obs.embedding, self.hash_seed, self.lanes.len());
             // the dispatcher is the only producer on lane queues, so this
-            // capacity check cannot race: drop *before* the global apply
-            // to keep the global table and the stores consistent
+            // capacity check cannot race, and it happens *before* the
+            // global apply to keep the global table and the stores
+            // consistent. These records were already acknowledged to the
+            // client (`FeedbackAccepted`), so a backed-up lane gets
+            // bounded blocking backpressure — stall the dispatcher until
+            // the applier drains — never a silent drop; unacknowledged
+            // load sheds upstream at the raw-queue push instead.
+            // `dropped_lane_backlog` now counts stall events (diagnostic
+            // for a wedged or slow applier), not lost records.
             if self.lanes[shard].len() >= self.lane_capacity {
+                // hand over everything staged so far so the backed-up
+                // applier has work it can drain while we wait
+                self.flush_staged(&mut staged);
                 self.metrics.dropped_lane_backlog.inc();
-                continue;
+                while !self.lanes[shard].wait_for_capacity(Duration::from_millis(100)) {}
             }
             let gid = self.next_gid;
             self.next_gid += 1;
@@ -865,6 +882,52 @@ mod tests {
         let snap = pipeline.handle().load();
         assert_eq!(snap.history_len(), 800);
         assert_eq!(snap.store_len(), 800);
+        pipeline.shutdown();
+    }
+
+    #[test]
+    fn full_lane_backpressure_never_loses_acknowledged_records() {
+        // regression: a full shard-lane queue used to drop records the
+        // client had already been acknowledged for. With lane queues
+        // squeezed to a single message, the dispatcher outruns the
+        // appliers constantly; every accepted record must still land.
+        let mut rng = Rng::new(48);
+        let epoch = EpochParams { publish_every: 64, publish_interval_ms: 5 };
+        let router = ShardedRouter::new(
+            EagleParams::default(),
+            N_MODELS,
+            DIM,
+            epoch.clone(),
+            ShardParams { count: 2, hash_seed: 0xEA61E },
+        );
+        let pipeline = IngestPipeline::start(
+            router,
+            None,
+            IngestOptions {
+                queue_capacity: 8192,
+                lane_queue_capacity: 1,
+                epoch,
+                linger: Duration::ZERO,
+                persist: None,
+            },
+        );
+        const RECORDS: u64 = 2000;
+        let mut accepted = 0u64;
+        for _ in 0..RECORDS {
+            if pipeline.push_verdict(rand_verdict(&mut rng)) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, RECORDS, "raw queue should not overflow here");
+        assert!(pipeline.flush());
+        let m = pipeline.metrics();
+        // the ack contract: everything accepted is folded and applied
+        assert_eq!(m.dropped_total(), 0);
+        assert_eq!(m.folded_global.get(), RECORDS);
+        assert_eq!(m.applied.get(), RECORDS);
+        let snap = pipeline.handle().load();
+        assert_eq!(snap.store_len(), RECORDS as usize);
+        assert_eq!(snap.history_len(), RECORDS as usize);
         pipeline.shutdown();
     }
 

@@ -61,12 +61,29 @@ impl BudgetPolicy {
         best.unwrap_or_else(|| self.cheapest())
     }
 
-    /// Cheapest available model index.
+    /// Cheapest available model index. When every model is drained this
+    /// degrades to the globally cheapest model instead of panicking: a
+    /// registry with all models marked unavailable is an operational state
+    /// (rolling restart, mass drain), not a programming error, and `select`
+    /// sits on the request path — unwinding here would kill a serving
+    /// thread. The caller still gets a valid index; the drained model's
+    /// backend surfaces its own error if it truly cannot serve.
     pub fn cheapest(&self) -> usize {
-        (0..self.costs.len())
-            .filter(|&m| self.available[m])
-            .min_by(|&a, &b| self.costs[a].partial_cmp(&self.costs[b]).unwrap())
-            .expect("no available models")
+        let mut best: Option<usize> = None;
+        let mut best_any: Option<usize> = None;
+        for m in 0..self.costs.len() {
+            let better = |cur: Option<usize>| match cur {
+                None => true,
+                Some(b) => self.costs[m] < self.costs[b],
+            };
+            if better(best_any) {
+                best_any = Some(m);
+            }
+            if self.available[m] && better(best) {
+                best = Some(m);
+            }
+        }
+        best.or(best_any).unwrap_or(0)
     }
 
     /// A willingness-to-pay sweep covering the full cost range: one level
@@ -78,10 +95,14 @@ impl BudgetPolicy {
         costs.dedup();
         let mut levels = Vec::with_capacity(costs.len() * 2 + 1);
         for &c in &costs {
-            levels.push(c * 0.999); // just below: excludes this tier
-            levels.push(c * 1.001); // just above: includes it
+            // additive epsilon: a multiplicative one collapses at c == 0.0
+            // (0.999 * 0 == 0), so a free tier would never be excluded
+            let eps = (c.abs() * 1e-3).max(1e-9);
+            levels.push(c - eps); // just below: excludes this tier
+            levels.push(c + eps); // just above: includes it
         }
-        levels.push(costs.last().unwrap() * 1.5);
+        let last = *costs.last().unwrap();
+        levels.push(last + (last.abs() * 0.5).max(1.0));
         levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
         levels
     }
@@ -123,6 +144,43 @@ mod tests {
         let mut p = policy();
         p.available[0] = false;
         assert_eq!(p.select(&[9.0, 1.0, 2.0], 100.0), 2);
+    }
+
+    #[test]
+    fn all_models_drained_degrades_without_panicking() {
+        // regression: cheapest() used to .expect() on the request path, so
+        // a fully drained registry unwound the serving thread
+        let mut p = policy();
+        for a in p.available.iter_mut() {
+            *a = false;
+        }
+        let pick = p.select(&[1.0, 2.0, 3.0], 100.0);
+        assert_eq!(pick, 1, "degrades to the globally cheapest model");
+        assert_eq!(p.cheapest(), 1);
+    }
+
+    #[test]
+    fn zero_cost_models_get_distinct_sweep_levels() {
+        // regression: c * 0.999 == c at c == 0.0, so a free tier was never
+        // excluded by its "just below" level
+        let p = BudgetPolicy::from_costs(vec![0.0, 1.0]);
+        let sweep = p.budget_sweep();
+        assert!(
+            sweep.iter().any(|&b| b < 0.0),
+            "no level excludes the free tier: {sweep:?}"
+        );
+        assert!(sweep.iter().any(|&b| b >= 0.0 && b < 1.0));
+        for w in sweep.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+
+        // an all-free registry still produces a non-collapsed sweep
+        let free = BudgetPolicy::from_costs(vec![0.0, 0.0]);
+        let sweep = free.budget_sweep();
+        let mut distinct = sweep.clone();
+        distinct.dedup();
+        assert!(distinct.len() >= 3, "collapsed sweep: {sweep:?}");
+        assert!(sweep.last().unwrap() > &0.0);
     }
 
     #[test]

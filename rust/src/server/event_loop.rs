@@ -1,0 +1,800 @@
+//! Readiness-polled connection fan-in for the serving front-end.
+//!
+//! One event-loop thread owns the listener and every client socket
+//! (epoll on Linux, a `poll(2)` shim on other unix — raw syscalls, no
+//! new dependencies). Connections are non-blocking state machines:
+//! reads accumulate bytes until complete request lines appear, complete
+//! lines are dispatched to a small worker pool as ordered *units* (one
+//! outstanding unit per connection preserves response order and keeps
+//! the pipelined co-batch amortization of
+//! [`super::ServerState::handle_lines`]), and responses are buffered and
+//! flushed when the socket is writable. Idle connections cost zero
+//! wakeups — they sit in the poller until bytes arrive or the idle
+//! sweep reaps them — so keep-alive clients can no longer pin one
+//! worker each the way the old fixed worker pool allowed (`workers`
+//! idle clients used to starve everyone else).
+//!
+//! Admission control is explicit and counted ([`super::shed::ShedMetrics`]):
+//!
+//! - `max_connections`: accepts beyond the cap get one load-shed error
+//!   line and are closed (`shed_conn_limit`);
+//! - `max_inflight`: request lines beyond the global execution budget
+//!   are answered with a load-shed error inside their unit, in order
+//!   (`shed_inflight`);
+//! - `idle_timeout_ms`: connections with no traffic and nothing in
+//!   flight are closed by a periodic sweep (`closed_idle`);
+//! - an unterminated request line larger than [`MAX_LINE_BYTES`] closes
+//!   the connection (`closed_oversize` — the slow-loris guard).
+//!
+//! Workers never touch sockets: they execute units against the shared
+//! [`super::ServerState`] and hand the encoded bytes back to the loop
+//! through a completion list plus a self-wake socket pair.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::TcpListener;
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Rng;
+
+use super::protocol::{encode_response, Response};
+use super::{ServerState, MAX_PIPELINE};
+
+/// Poller token of the TCP listener.
+const LISTENER: u64 = 0;
+/// Poller token of the worker-side wake socket.
+const WAKER: u64 = 1;
+/// First token handed to a client connection.
+const FIRST_CONN: u64 = 2;
+
+/// Longest accepted request line. A client dribbling an unterminated
+/// line forever (slow loris) is cut off here instead of growing the
+/// read buffer without bound.
+const MAX_LINE_BYTES: usize = 256 * 1024;
+/// Pending response bytes beyond which the loop stops reading more
+/// requests from a connection until the client drains its replies.
+const MAX_OUT_BYTES: usize = 4 * 1024 * 1024;
+/// Complete-but-undispatched lines per connection before reads pause
+/// (TCP backpressure takes over; two units' worth keeps the pipeline
+/// primed).
+const MAX_PENDING_LINES: usize = 2 * MAX_PIPELINE;
+
+/// Load-shed reply for a request line over the in-flight budget.
+pub(super) const SHED_INFLIGHT_MSG: &str =
+    "overloaded: in-flight request budget exhausted (load shed)";
+/// Load-shed reply for a connection over the connection cap.
+pub(super) const SHED_CONN_MSG: &str =
+    "overloaded: connection limit reached (load shed)";
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! epoll via raw syscalls (`std` already links libc on unix, so the
+    //! `extern` declarations below add no dependency).
+
+    use std::io;
+
+    pub const EV_READ: u32 = 0x001; // EPOLLIN
+    pub const EV_WRITE: u32 = 0x004; // EPOLLOUT
+
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const MAX_EVENTS: usize = 64;
+
+    // x86-64 packs epoll_event (matches the kernel ABI); other
+    // architectures use natural alignment
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Poller {
+        epfd: i32,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: i32, token: u64, interest: u32) -> io::Result<()> {
+            // RDHUP so a peer half-close surfaces as readable (read
+            // then returns 0 and the conn winds down)
+            let mut ev = EpollEvent { events: interest | EPOLLRDHUP, data: token };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: i32, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: i32, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: i32) {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            let _ = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+        }
+
+        /// Wait for readiness; `timeout_ms < 0` blocks. Fills `out` with
+        /// `(token, readable, writable)`; EINTR is an empty wake.
+        pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<(u64, bool, bool)>) -> io::Result<()> {
+            out.clear();
+            let mut events = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            let n = unsafe {
+                epoll_wait(self.epfd, events.as_mut_ptr(), MAX_EVENTS as i32, timeout_ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in events.iter().take(n as usize) {
+                // copy out of the (possibly packed) struct before use
+                let flags = ev.events;
+                let token = ev.data;
+                let readable = flags & (EV_READ | EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0;
+                let writable = flags & (EV_WRITE | EPOLLERR | EPOLLHUP) != 0;
+                out.push((token, readable, writable));
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            let _ = unsafe { close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    //! Portable `poll(2)` shim for non-Linux unix: O(n) per wait, same
+    //! interface as the epoll backend.
+
+    use std::io;
+
+    pub const EV_READ: u32 = 0x1;
+    pub const EV_WRITE: u32 = 0x4;
+
+    const POLLIN: i16 = 0x1;
+    const POLLOUT: i16 = 0x4;
+    const POLLERR: i16 = 0x8;
+    const POLLHUP: i16 = 0x10;
+    const POLLNVAL: i16 = 0x20;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+
+    pub struct Poller {
+        /// `(fd, token, interest)` per registered descriptor.
+        entries: Vec<(i32, u64, u32)>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { entries: Vec::new() })
+        }
+
+        pub fn register(&mut self, fd: i32, token: u64, interest: u32) -> io::Result<()> {
+            self.entries.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: i32, token: u64, interest: u32) -> io::Result<()> {
+            for e in self.entries.iter_mut() {
+                if e.0 == fd {
+                    e.1 = token;
+                    e.2 = interest;
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+        }
+
+        pub fn deregister(&mut self, fd: i32) {
+            self.entries.retain(|e| e.0 != fd);
+        }
+
+        pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<(u64, bool, bool)>) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<PollFd> = Vec::with_capacity(self.entries.len());
+            for &(fd, _, interest) in &self.entries {
+                let mut events: i16 = 0;
+                if interest & EV_READ != 0 {
+                    events |= POLLIN;
+                }
+                if interest & EV_WRITE != 0 {
+                    events |= POLLOUT;
+                }
+                fds.push(PollFd { fd, events, revents: 0 });
+            }
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, timeout_ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pf, &(_, token, _)) in fds.iter().zip(&self.entries) {
+                let r = pf.revents;
+                if r == 0 {
+                    continue;
+                }
+                let readable = r & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0;
+                let writable = r & (POLLOUT | POLLERR | POLLHUP) != 0;
+                out.push((token, readable, writable));
+            }
+            Ok(())
+        }
+    }
+}
+
+use sys::{Poller, EV_READ, EV_WRITE};
+
+/// One line inside a dispatch unit: either executed against the state
+/// or pre-shed at admission (the worker emits the error reply in place,
+/// preserving per-connection response order).
+enum UnitLine {
+    Execute(String),
+    Shed,
+}
+
+/// An ordered batch of request lines from one connection. At most one
+/// unit per connection is outstanding at a time.
+struct Unit {
+    token: u64,
+    lines: Vec<UnitLine>,
+}
+
+/// A finished unit: encoded response bytes plus the in-flight budget to
+/// refund. Budget is refunded even if the connection is already gone.
+struct Completion {
+    token: u64,
+    bytes: Vec<u8>,
+    executed: usize,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: std::net::TcpStream,
+    /// Raw bytes read but not yet split into lines (partial tail).
+    buf: Vec<u8>,
+    /// Complete request lines awaiting dispatch.
+    lines: VecDeque<String>,
+    /// Encoded response bytes awaiting the socket.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A unit is executing on the worker pool (at most one).
+    unit_inflight: bool,
+    /// Current poller interest mask (avoid redundant `modify` calls).
+    interest: u32,
+    last_activity: Instant,
+    /// Peer closed (or errored); wind down once everything drains.
+    eof: bool,
+}
+
+impl Conn {
+    fn out_pending(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+}
+
+/// Handles returned by [`start`], owned by [`super::Server`].
+pub(super) struct LoopHandles {
+    pub addr: std::net::SocketAddr,
+    /// Writing a byte wakes the loop (shutdown and worker completions).
+    pub wake: UnixStream,
+    pub loop_thread: std::thread::JoinHandle<()>,
+    pub workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Bind `addr`, spawn the worker pool and the event-loop thread.
+pub(super) fn start(state: Arc<ServerState>, addr: &str, workers: usize) -> Result<LoopHandles> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let local = listener.local_addr()?;
+
+    let (wake_tx, wake_rx) = UnixStream::pair().context("wake pair")?;
+    wake_tx.set_nonblocking(true)?;
+    wake_rx.set_nonblocking(true)?;
+
+    let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
+    let (job_tx, job_rx) = mpsc::channel::<Unit>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+
+    let mut worker_handles = Vec::with_capacity(workers.max(1));
+    for w in 0..workers.max(1) {
+        let rx = job_rx.clone();
+        let st = state.clone();
+        let comp = completions.clone();
+        let wake = wake_tx.try_clone().context("clone wake")?;
+        worker_handles.push(
+            std::thread::Builder::new()
+                .name(format!("eagle-worker-{w}"))
+                .spawn(move || worker_loop(rx, st, comp, wake, w as u64))
+                .map_err(|e| anyhow!("spawn worker: {e}"))?,
+        );
+    }
+
+    let mut poller = Poller::new().context("create poller")?;
+    poller.register(listener.as_raw_fd(), LISTENER, EV_READ).context("register listener")?;
+    poller.register(wake_rx.as_raw_fd(), WAKER, EV_READ).context("register waker")?;
+
+    let admission = state.admission.clone();
+    let el = EventLoop {
+        state,
+        poller,
+        listener,
+        wake_rx,
+        completions,
+        jobs: job_tx,
+        conns: HashMap::new(),
+        next_token: FIRST_CONN,
+        inflight: 0,
+        max_connections: admission.max_connections.max(1),
+        max_inflight: admission.max_inflight.max(1),
+        idle_timeout: if admission.idle_timeout_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(admission.idle_timeout_ms))
+        },
+    };
+    let loop_thread = std::thread::Builder::new()
+        .name("eagle-event-loop".into())
+        .spawn(move || el.run())
+        .map_err(|e| anyhow!("spawn event loop: {e}"))?;
+
+    Ok(LoopHandles { addr: local, wake: wake_tx, loop_thread, workers: worker_handles })
+}
+
+/// Worker: executes units against the shared state (no socket I/O) and
+/// hands encoded bytes back through the completion list + wake socket.
+/// Exits when the loop drops the job sender.
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<Unit>>>,
+    state: Arc<ServerState>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    mut wake: UnixStream,
+    seed: u64,
+) {
+    let mut rng = Rng::with_stream(0x5EED, seed);
+    loop {
+        let unit = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(u) => u,
+                Err(_) => return,
+            }
+        };
+        let token = unit.token;
+        let mut exec: Vec<String> = Vec::new();
+        let mut executed_slot: Vec<bool> = Vec::with_capacity(unit.lines.len());
+        for line in unit.lines {
+            match line {
+                UnitLine::Execute(s) => {
+                    exec.push(s);
+                    executed_slot.push(true);
+                }
+                UnitLine::Shed => executed_slot.push(false),
+            }
+        }
+        let answers = if exec.is_empty() {
+            Vec::new()
+        } else {
+            state.handle_lines(&exec, &mut rng)
+        };
+        let mut answers = answers.into_iter();
+        let mut bytes = Vec::new();
+        for was_executed in &executed_slot {
+            let resp = if *was_executed {
+                answers.next().expect("one response per executed line")
+            } else {
+                Response::Error(SHED_INFLIGHT_MSG.to_string())
+            };
+            bytes.extend_from_slice(encode_response(&resp).as_bytes());
+            bytes.push(b'\n');
+        }
+        completions.lock().unwrap().push(Completion { token, bytes, executed: exec.len() });
+        // best effort: a full wake pipe means a wake is already pending
+        let _ = wake.write_all(&[1u8]);
+    }
+}
+
+struct EventLoop {
+    state: Arc<ServerState>,
+    poller: Poller,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    jobs: mpsc::Sender<Unit>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    /// Request lines currently executing across all connections.
+    inflight: usize,
+    max_connections: usize,
+    max_inflight: usize,
+    idle_timeout: Option<Duration>,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut events: Vec<(u64, bool, bool)> = Vec::with_capacity(64);
+        let sweep_period = self.idle_timeout.map(|t| (t / 4).max(Duration::from_millis(10)));
+        let mut next_sweep = sweep_period.map(|p| Instant::now() + p);
+        loop {
+            if self.state.stopped() {
+                break;
+            }
+            let timeout_ms: i32 = match next_sweep {
+                None => -1, // nothing scheduled: sleep until an event
+                Some(at) => {
+                    let now = Instant::now();
+                    if at <= now {
+                        0
+                    } else {
+                        (at.duration_since(now).as_millis().min(60_000) as i32) + 1
+                    }
+                }
+            };
+            if self.poller.wait(timeout_ms, &mut events).is_err() {
+                break;
+            }
+            if self.state.stopped() {
+                break;
+            }
+            for i in 0..events.len() {
+                let (token, readable, writable) = events[i];
+                match token {
+                    LISTENER => self.accept_ready(),
+                    WAKER => self.drain_wake(),
+                    t => {
+                        if readable {
+                            self.conn_readable(t);
+                        }
+                        if writable && self.conns.contains_key(&t) {
+                            self.flush_out(t);
+                            self.update_interest_or_close(t);
+                        }
+                    }
+                }
+            }
+            self.drain_completions();
+            if let (Some(period), Some(at)) = (sweep_period, next_sweep) {
+                if Instant::now() >= at {
+                    self.sweep_idle();
+                    next_sweep = Some(Instant::now() + period);
+                }
+            }
+        }
+        // dropping `self` closes every socket and the job sender, which
+        // drains the worker pool
+    }
+
+    /// Accept everything pending; over the connection cap the client
+    /// gets one load-shed error line and the socket closes.
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nodelay(true).ok();
+                    if self.conns.len() >= self.max_connections {
+                        self.state.shed.shed_conn_limit.inc();
+                        let reply = format!(
+                            "{}\n",
+                            encode_response(&Response::Error(SHED_CONN_MSG.to_string()))
+                        );
+                        let mut s = stream;
+                        let _ = s.set_nonblocking(true);
+                        let _ = s.write_all(reply.as_bytes());
+                        continue; // drop closes the socket
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let fd = stream.as_raw_fd();
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.register(fd, token, EV_READ).is_err() {
+                        continue;
+                    }
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            buf: Vec::new(),
+                            lines: VecDeque::new(),
+                            out: Vec::new(),
+                            out_pos: 0,
+                            unit_inflight: false,
+                            interest: EV_READ,
+                            last_activity: Instant::now(),
+                            eof: false,
+                        },
+                    );
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                // transient (EMFILE etc.); the next readiness retries
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn drain_wake(&mut self) {
+        let mut tmp = [0u8; 256];
+        loop {
+            match self.wake_rx.read(&mut tmp) {
+                Ok(0) => break, // all workers gone (shutdown)
+                Ok(_) => continue,
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn conn_readable(&mut self, token: u64) {
+        enum After {
+            Continue,
+            Close,
+        }
+        let mut after = After::Continue;
+        {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            let mut tmp = [0u8; 16 * 1024];
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        // EOF: a trailing partial line still gets served
+                        // (clients may half-close after the last request)
+                        conn.eof = true;
+                        if !conn.buf.is_empty() {
+                            let tail = std::mem::take(&mut conn.buf);
+                            conn.lines.push_back(String::from_utf8_lossy(&tail).into_owned());
+                        }
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.buf.extend_from_slice(&tmp[..n]);
+                        conn.last_activity = Instant::now();
+                        if conn.buf.len() > MAX_OUT_BYTES {
+                            // runaway pipelining while paused never gets
+                            // this far (reads pause first); only a truly
+                            // hostile burst lands here
+                            after = After::Close;
+                            break;
+                        }
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        after = After::Close;
+                        break;
+                    }
+                }
+            }
+        }
+        match after {
+            After::Close => self.close_conn(token),
+            After::Continue => self.pump(token),
+        }
+    }
+
+    /// Advance a connection's state machine: split lines, dispatch a
+    /// unit if possible, flush output, then re-arm or close.
+    fn pump(&mut self, token: u64) {
+        if self.extract_lines(token) {
+            self.state.shed.closed_oversize.inc();
+            self.close_conn(token);
+            return;
+        }
+        self.maybe_dispatch(token);
+        self.flush_out(token);
+        self.update_interest_or_close(token);
+    }
+
+    /// Split complete lines out of the read buffer (up to the pending
+    /// cap). Returns true when the connection must close because an
+    /// unterminated line exceeds [`MAX_LINE_BYTES`].
+    fn extract_lines(&mut self, token: u64) -> bool {
+        let Some(conn) = self.conns.get_mut(&token) else { return false };
+        while conn.lines.len() < MAX_PENDING_LINES {
+            let Some(pos) = conn.buf.iter().position(|&b| b == b'\n') else {
+                // no complete line left: the remaining tail must stay
+                // bounded (slow-loris / runaway-frame guard)
+                return conn.buf.len() > MAX_LINE_BYTES;
+            };
+            let rest = conn.buf.split_off(pos + 1);
+            let mut line = std::mem::replace(&mut conn.buf, rest);
+            line.pop(); // the '\n'
+            // lossy: undecodable bytes still yield one (error) response
+            // per line instead of killing the connection
+            conn.lines.push_back(String::from_utf8_lossy(&line).into_owned());
+        }
+        false
+    }
+
+    /// Dispatch one unit if the connection has lines and none in flight.
+    /// Lines beyond the global `max_inflight` budget are pre-shed into
+    /// the unit so their error replies keep the response order.
+    fn maybe_dispatch(&mut self, token: u64) {
+        let budget = self.max_inflight.saturating_sub(self.inflight);
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.unit_inflight || conn.lines.is_empty() {
+            return;
+        }
+        let take = conn.lines.len().min(MAX_PIPELINE);
+        let admit = take.min(budget);
+        let mut lines = Vec::with_capacity(take);
+        for i in 0..take {
+            let line = conn.lines.pop_front().expect("counted line");
+            if i < admit {
+                lines.push(UnitLine::Execute(line));
+            } else {
+                lines.push(UnitLine::Shed);
+            }
+        }
+        let shed = take - admit;
+        if shed > 0 {
+            self.state.shed.shed_inflight.add(shed as u64);
+            self.state.metrics.errors.add(shed as u64);
+        }
+        self.inflight += admit;
+        conn.unit_inflight = true;
+        // send can only fail when every worker is gone (shutdown)
+        let _ = self.jobs.send(Unit { token, lines });
+    }
+
+    fn flush_out(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        while conn.out_pos < conn.out.len() {
+            match conn.stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => break,
+                Ok(n) => {
+                    conn.out_pos += n;
+                    conn.last_activity = Instant::now();
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // write error: the peer is gone; drop the rest
+                    conn.eof = true;
+                    conn.out.clear();
+                    conn.out_pos = 0;
+                    break;
+                }
+            }
+        }
+        if conn.out_pos >= conn.out.len() {
+            conn.out.clear();
+            conn.out_pos = 0;
+        } else if conn.out_pos > 64 * 1024 {
+            conn.out.drain(..conn.out_pos);
+            conn.out_pos = 0;
+        }
+    }
+
+    /// Close a fully drained EOF connection, otherwise update the
+    /// poller interest to what the state machine currently needs.
+    fn update_interest_or_close(&mut self, token: u64) {
+        let close = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            conn.eof && !conn.unit_inflight && conn.lines.is_empty() && !conn.out_pending()
+        };
+        if close {
+            self.close_conn(token);
+            return;
+        }
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let want_read = !conn.eof
+            && conn.lines.len() < MAX_PENDING_LINES
+            && conn.out.len() - conn.out_pos < MAX_OUT_BYTES;
+        let mut interest = 0u32;
+        if want_read {
+            interest |= EV_READ;
+        }
+        if conn.out_pending() {
+            interest |= EV_WRITE;
+        }
+        if interest != conn.interest {
+            conn.interest = interest;
+            let fd = conn.stream.as_raw_fd();
+            let _ = self.poller.modify(fd, token, interest);
+        }
+    }
+
+    /// Append finished units to their connections and refund the
+    /// in-flight budget (refunded even if the connection closed early).
+    fn drain_completions(&mut self) {
+        let done: Vec<Completion> = {
+            let mut guard = self.completions.lock().unwrap();
+            guard.drain(..).collect()
+        };
+        for c in done {
+            self.inflight = self.inflight.saturating_sub(c.executed);
+            let exists = match self.conns.get_mut(&c.token) {
+                Some(conn) => {
+                    conn.out.extend_from_slice(&c.bytes);
+                    conn.unit_inflight = false;
+                    conn.last_activity = Instant::now();
+                    true
+                }
+                None => false,
+            };
+            if exists {
+                self.pump(c.token);
+            }
+        }
+    }
+
+    /// Reap connections with no traffic and nothing in flight for
+    /// longer than the idle timeout.
+    fn sweep_idle(&mut self) {
+        let Some(timeout) = self.idle_timeout else { return };
+        let now = Instant::now();
+        let stale: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                !c.unit_inflight
+                    && c.lines.is_empty()
+                    && !c.out_pending()
+                    && now.duration_since(c.last_activity) >= timeout
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        for t in stale {
+            self.state.shed.closed_idle.inc();
+            self.close_conn(t);
+        }
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            self.poller.deregister(conn.stream.as_raw_fd());
+            // dropping the stream closes the socket
+        }
+    }
+}

@@ -1,10 +1,11 @@
-//! Serving front-end: a threaded TCP server speaking the newline-JSON
-//! protocol, wired to the RCU snapshot router, the embedding service, and
-//! the sharded feedback-ingest pipeline.
+//! Serving front-end: an event-looped TCP server speaking the
+//! newline-JSON protocol, wired to the RCU snapshot router, the
+//! embedding service, and the sharded feedback-ingest pipeline.
 //!
 //! ```text
-//!         acceptor ──► TCP workers (N)      engine thread    ingest pipeline (K+1 threads)
-//! route:   parse (pipeline-drain) ──► PJRT batch ──► snapshot.score_batch ──► reply
+//!  event loop (1 thread)           exec workers (N)      ingest pipeline (K+1 threads)
+//!  accept / read / write ──units──► handle_lines:
+//! route:   parse (co-batch) ──► PJRT batch ──► snapshot.score_batch ──► reply
 //! feedback: validate ──► raw queue ──► dispatcher: batch-embed + global ELO
 //!                                        ──► per-shard queue ──► lane applier
 //!                                                                + publish @ epoch
@@ -27,23 +28,31 @@
 //! path with one applier; higher counts scale both scatter-gather reads
 //! and ingest with bit-identical scores.
 //!
-//! Workers batch-drain: each connection handler pulls every pipelined
-//! request already buffered and serves all route requests in it with one
-//! embed round trip + one snapshot acquisition (`route_batch` gives
-//! clients the same amortization explicitly). Connections are handed to
-//! workers by a single blocking acceptor thread, so idle workers burn no
-//! CPU polling the listener.
+//! Connection fan-in is a readiness-polled event loop
+//! ([`event_loop`]): one thread owns every socket, idle connections
+//! cost zero wakeups, and the worker pool only ever executes complete
+//! request batches — so `workers` idle keep-alive clients can no
+//! longer starve the pool the way the old thread-per-connection design
+//! allowed. Pipelined lines are dispatched as ordered units and served
+//! through [`ServerState::handle_lines`], which co-batches the single
+//! `route` requests in a unit into one embed round trip + one snapshot
+//! acquisition (`route_batch` gives clients the same amortization
+//! explicitly). Admission is explicit ([`Admission`]): a connection
+//! cap, a global in-flight request budget, and an idle timeout, each
+//! refusal counted by reason in [`shed::ShedMetrics`] and reported via
+//! the `stats` op.
 
 pub mod client;
+mod event_loop;
 pub mod protocol;
+pub mod shed;
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
 
 use crate::config::{EpochParams, IvfPublishParams, ShardParams};
 use crate::coordinator::durable::{DurableOptions, DurableStore};
@@ -60,10 +69,30 @@ use crate::metrics::Metrics;
 use crate::util::Rng;
 use crate::vectordb::flat::FlatStore;
 
-use protocol::{encode_response, parse_request, Request, Response, RouteReply};
+use protocol::{parse_request, Request, Response, RouteReply};
 
-/// Max pipelined requests drained per connection read (worker batching).
+/// Max pipelined requests per dispatch unit (worker co-batching).
 const MAX_PIPELINE: usize = 32;
+
+/// Admission-control knobs for the TCP front-end (`[server]` config).
+/// Refusals are counted by reason in [`shed::ShedMetrics`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Admission {
+    /// Max simultaneously open client connections; beyond the cap a new
+    /// connection gets one load-shed error line and is closed.
+    pub max_connections: usize,
+    /// Max request lines executing across all connections; lines over
+    /// the budget get an in-order load-shed error reply.
+    pub max_inflight: usize,
+    /// Close connections idle for this long, in milliseconds (0 = never).
+    pub idle_timeout_ms: u64,
+}
+
+impl Default for Admission {
+    fn default() -> Self {
+        Admission { max_connections: 4096, max_inflight: 256, idle_timeout_ms: 30_000 }
+    }
+}
 
 /// Everything configurable about the serving state in one place (epoch
 /// cadence, sharding topology, IVF publication, background persistence).
@@ -94,6 +123,9 @@ pub struct ServerOptions {
     /// Scoring-kernel backend choice (`[kernel] backend`): installed as
     /// the process default at startup; the `EAGLE_KERNEL` env var wins.
     pub kernel_backend: String,
+    /// Admission control for the event-looped front-end (`[server]`
+    /// `max_connections` / `max_inflight` / `idle_timeout_ms`).
+    pub admission: Admission,
 }
 
 impl Default for ServerOptions {
@@ -109,6 +141,7 @@ impl Default for ServerOptions {
             seal_bytes: durable.seal_bytes,
             fsync: durable.fsync,
             kernel_backend: "auto".to_string(),
+            admission: Admission::default(),
         }
     }
 }
@@ -132,6 +165,10 @@ pub struct ServerState {
     /// The durable segment store, when `[persist] dir` is configured —
     /// the admin `snapshot` op checkpoints it instead of writing JSON.
     durable: Option<Arc<DurableStore>>,
+    /// Admission knobs the event loop enforces ([`ServerOptions`]).
+    pub admission: Admission,
+    /// Per-reason admission counters, appended to the `stats` report.
+    pub shed: Arc<shed::ShedMetrics>,
     stop: AtomicBool,
 }
 
@@ -269,6 +306,8 @@ impl ServerState {
             sampler: ComparisonSampler::default(),
             snapshot_path: None,
             durable,
+            admission: opts.admission,
+            shed: Arc::new(shed::ShedMetrics::new()),
             stop: AtomicBool::new(false),
         }
     }
@@ -400,9 +439,10 @@ impl ServerState {
             },
             Request::Stats => Response::Stats {
                 report: format!(
-                    "{}\n{}",
+                    "{}\n{}\n{}",
                     self.metrics.report(),
-                    self.ingest.metrics().report()
+                    self.ingest.metrics().report(),
+                    self.shed.report()
                 ),
                 requests: self.metrics.requests.get(),
                 feedback: self.metrics.feedback.get(),
@@ -514,185 +554,46 @@ impl ServerState {
     }
 }
 
-/// The running server: a blocking acceptor + worker pool. Feedback
-/// application lives in the state's [`IngestPipeline`], not here.
+/// The running server: one event-loop thread owning every socket plus
+/// an execution worker pool ([`event_loop`]). Feedback application
+/// lives in the state's [`IngestPipeline`], not here.
 pub struct Server {
     pub state: Arc<ServerState>,
     pub addr: std::net::SocketAddr,
+    /// Writing a byte wakes the event loop out of its poll.
+    wake: std::os::unix::net::UnixStream,
+    loop_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    acceptor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind and start serving on `addr` ("127.0.0.1:0" picks a free port).
+    /// Bind and start serving on `addr` ("127.0.0.1:0" picks a free
+    /// port). `workers` sizes the execution pool; connection fan-in is
+    /// the event loop, so idle connections hold no worker. Admission
+    /// limits come from the state's [`Admission`].
     pub fn start(state: Arc<ServerState>, addr: &str, workers: usize) -> Result<Server> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-        let local = listener.local_addr()?;
-
-        // one blocking acceptor hands streams to the worker pool over a
-        // *bounded* channel; idle workers block on the channel instead of
-        // polling the listener (no per-worker wakeup tax at high worker
-        // counts), and when every worker is busy the acceptor stops
-        // accepting, so excess clients throttle in the kernel listen
-        // backlog instead of piling fds into an unbounded queue
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(workers.max(1) * 2);
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers.max(1) {
-            let rx = conn_rx.clone();
-            let state = state.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("eagle-worker-{w}"))
-                    .spawn(move || worker_loop(rx, state, w as u64))
-                    .map_err(|e| anyhow!("spawn worker: {e}"))?,
-            );
-        }
-
-        let acceptor_state = state.clone();
-        let acceptor = std::thread::Builder::new()
-            .name("eagle-acceptor".into())
-            .spawn(move || acceptor_loop(listener, conn_tx, acceptor_state))
-            .map_err(|e| anyhow!("spawn acceptor: {e}"))?;
-
-        Ok(Server { state, addr: local, workers: handles, acceptor: Some(acceptor) })
+        let handles = event_loop::start(state.clone(), addr, workers)?;
+        Ok(Server {
+            state,
+            addr: handles.addr,
+            wake: handles.wake,
+            loop_thread: Some(handles.loop_thread),
+            workers: handles.workers,
+        })
     }
 
     /// Signal shutdown and join all threads (including the ingest
     /// pipeline, which publishes everything already accepted).
     pub fn shutdown(mut self) {
         self.state.stop();
-        // wake the acceptor out of its blocking accept
-        let _ = TcpStream::connect(self.addr);
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
+        // wake the event loop out of its poll; it drops the job sender
+        // on exit, which drains the worker pool
+        let _ = (&self.wake).write_all(&[1u8]);
+        if let Some(t) = self.loop_thread.take() {
+            let _ = t.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
-        }
-    }
-}
-
-/// Blocking accept loop: hands each connection to the worker pool.
-/// Exits when the state is stopped (woken by the shutdown self-connect)
-/// and drops the sender, which drains the worker pool.
-fn acceptor_loop(
-    listener: TcpListener,
-    tx: mpsc::SyncSender<TcpStream>,
-    state: Arc<ServerState>,
-) {
-    loop {
-        if state.stopped() {
-            return;
-        }
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nodelay(true).ok();
-                // never block forever on a full pool: retry with a stop
-                // check so shutdown can't deadlock behind busy workers,
-                // and pause accepting (kernel backlog throttles clients)
-                let mut pending = stream;
-                loop {
-                    if state.stopped() {
-                        return;
-                    }
-                    match tx.try_send(pending) {
-                        Ok(()) => break,
-                        Err(mpsc::TrySendError::Full(back)) => {
-                            pending = back;
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(mpsc::TrySendError::Disconnected(_)) => return,
-                    }
-                }
-            }
-            Err(_) => {
-                if state.stopped() {
-                    return;
-                }
-                // transient accept error (EMFILE etc.); back off briefly
-                std::thread::sleep(Duration::from_millis(5));
-            }
-        }
-    }
-}
-
-/// Worker: blocks on the connection channel, serves one connection at a
-/// time. Returns when the acceptor drops the channel.
-fn worker_loop(
-    rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>,
-    state: Arc<ServerState>,
-    seed: u64,
-) {
-    let mut rng = Rng::with_stream(0x5EED, seed);
-    loop {
-        let stream = {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(s) => s,
-                Err(_) => return,
-            }
-        };
-        if state.stopped() {
-            return;
-        }
-        if let Err(e) = handle_connection(stream, &state, &mut rng) {
-            // connection errors are per-client, not fatal
-            let _ = e;
-        }
-    }
-}
-
-fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, rng: &mut Rng) -> Result<()> {
-    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut lines: Vec<String> = Vec::new();
-    // Accumulates across read timeouts: a request line split over slow TCP
-    // segments keeps its consumed prefix here instead of being dropped.
-    let mut pending = String::new();
-    loop {
-        if state.stopped() {
-            return Ok(());
-        }
-        lines.clear();
-        match reader.read_line(&mut pending) {
-            Ok(0) => return Ok(()), // client closed
-            Ok(_) => {
-                lines.push(std::mem::take(&mut pending));
-                // batch-drain: pull every complete pipelined line already
-                // sitting in the read buffer (no extra syscalls, no
-                // blocking) so co-batched routes share one embed dispatch
-                while lines.len() < MAX_PIPELINE && reader.buffer().contains(&b'\n') {
-                    let mut next = String::new();
-                    match reader.read_line(&mut next) {
-                        Ok(0) => break,
-                        Ok(_) => lines.push(next),
-                        Err(_) => {
-                            // a line was consumed but is unreadable (e.g.
-                            // invalid UTF-8): answer it with a parse error
-                            // to keep one response per request line
-                            lines.push(next);
-                            break;
-                        }
-                    }
-                }
-                let mut out = String::new();
-                for resp in state.handle_lines(&lines, rng) {
-                    out.push_str(&encode_response(&resp));
-                    out.push('\n');
-                }
-                writer.write_all(out.as_bytes())?;
-            }
-            Err(ref e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                // idle keep-alive; any partial line stays in `pending`
-                continue;
-            }
-            Err(e) => return Err(e.into()),
         }
     }
 }
@@ -744,5 +645,10 @@ mod tests {
         let persist = crate::config::PersistParams::default();
         assert_eq!(opts.seal_bytes, persist.seal_bytes);
         assert_eq!(opts.fsync, persist.fsync);
+        let server = crate::config::ServerParams::default();
+        assert_eq!(opts.admission.max_connections, server.max_connections);
+        assert_eq!(opts.admission.max_inflight, server.max_inflight);
+        assert_eq!(opts.admission.idle_timeout_ms, server.idle_timeout_ms);
+        assert_eq!(opts.admission, Admission::default());
     }
 }

@@ -1,0 +1,70 @@
+//! Admission-control counters for the serving front-end.
+//!
+//! Every connection or request the event loop refuses is counted here by
+//! reason, mirroring the drop taxonomy of
+//! [`crate::coordinator::ingest::IngestMetrics`]: overload is an
+//! *observable, bounded* state, never a silent one. The counters are
+//! appended to the `stats` report so operators can tell load shedding
+//! (`shed_*`) apart from hygiene closes (`closed_*`) at a glance.
+
+use crate::metrics::Counter;
+
+/// Per-reason admission counters, reported via the `stats` op.
+#[derive(Debug, Default)]
+pub struct ShedMetrics {
+    /// Connections refused at accept because `max_connections` open
+    /// connections already exist (the client gets one error line, then
+    /// the socket closes).
+    pub shed_conn_limit: Counter,
+    /// Request lines answered with a load-shed error because the global
+    /// `max_inflight` execution budget was exhausted at dispatch time.
+    pub shed_inflight: Counter,
+    /// Connections reaped by the idle sweep (`idle_timeout_ms` with no
+    /// traffic and nothing in flight).
+    pub closed_idle: Counter,
+    /// Connections closed for an oversized frame (an unterminated
+    /// request line beyond the per-connection buffer cap — the
+    /// slow-loris / runaway-frame guard).
+    pub closed_oversize: Counter,
+}
+
+impl ShedMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total load-shed replies + refused connections (not hygiene closes).
+    pub fn shed_total(&self) -> u64 {
+        self.shed_conn_limit.get() + self.shed_inflight.get()
+    }
+
+    /// One-line report, same shape as the ingest drop taxonomy.
+    pub fn report(&self) -> String {
+        format!(
+            "server: shed(conn_limit={} inflight={}) closed(idle={} oversize={})",
+            self.shed_conn_limit.get(),
+            self.shed_inflight.get(),
+            self.closed_idle.get(),
+            self.closed_oversize.get(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_names_every_reason() {
+        let m = ShedMetrics::new();
+        m.shed_conn_limit.inc();
+        m.shed_inflight.add(3);
+        m.closed_idle.inc();
+        let r = m.report();
+        assert!(r.contains("conn_limit=1"), "{r}");
+        assert!(r.contains("inflight=3"), "{r}");
+        assert!(r.contains("idle=1"), "{r}");
+        assert!(r.contains("oversize=0"), "{r}");
+        assert_eq!(m.shed_total(), 4);
+    }
+}
