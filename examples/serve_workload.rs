@@ -75,7 +75,8 @@ fn main() -> anyhow::Result<()> {
         metrics.clone(),
     )?;
     let registry = ModelRegistry::routerbench();
-    let state = Arc::new(ServerState::new(router, registry, service.handle(), metrics.clone()));
+    let state =
+        Arc::new(ServerState::builder(router, registry, service.handle(), metrics.clone()).build());
     let server = Server::start(state, "127.0.0.1:0", n_clients.max(2))?;
     let addr = server.addr.to_string();
     println!("serving on {addr}; {n_clients} clients x {} requests", n_requests / n_clients);

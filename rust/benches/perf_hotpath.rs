@@ -771,22 +771,20 @@ fn connection_scale_sweep(report: &mut JsonReport) {
     );
     let registry = ModelRegistry::routerbench();
     let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(DIM_SRV));
-    let state = Arc::new(ServerState::with_options(
-        router,
-        registry,
-        service.handle(),
-        metrics,
-        ServerOptions {
-            epoch: EpochParams { publish_every: 64, publish_interval_ms: 5 },
-            admission: Admission {
-                max_connections: 16_384,
-                max_inflight: 256,
-                // parked connections must survive the measurement window
-                idle_timeout_ms: 0,
-            },
-            ..Default::default()
-        },
-    ));
+    let state = Arc::new(
+        ServerState::builder(router, registry, service.handle(), metrics)
+            .options(ServerOptions {
+                epoch: EpochParams { publish_every: 64, publish_interval_ms: 5 },
+                admission: Admission {
+                    max_connections: 16_384,
+                    max_inflight: 256,
+                    // parked connections must survive the measurement window
+                    idle_timeout_ms: 0,
+                },
+                ..Default::default()
+            })
+            .build(),
+    );
     let server = Server::start(state, "127.0.0.1:0", 2).expect("bench server");
     let addr = server.addr.to_string();
 

@@ -1,0 +1,81 @@
+//! Scenario matrix: routing methods × serving scenarios, deterministic.
+//!
+//! Runs the seeded matrix of `eagle::eval::scenario` twice and asserts
+//! the CSV/JSON artifacts are byte-identical (the determinism gate),
+//! then writes `scenario_summary.csv`, `scenario_matrix.json`, and the
+//! `BENCH_scenario_matrix.json` metric family CI feeds into the
+//! `bench-diff` trend gate.
+//!
+//! Run: `cargo bench --bench scenario_matrix`
+//! (smoke: `EAGLE_BENCH_SMOKE=1`, smaller matrix + JSON artifact)
+
+use eagle::bench::{self, fmt, print_table, JsonReport};
+use eagle::eval::scenario::{run_matrix, ScenarioConfig, METHODS, SCENARIOS};
+
+fn main() {
+    let cfg = if bench::smoke() { ScenarioConfig::smoke() } else { ScenarioConfig::full() };
+    println!(
+        "[scenario_matrix] seed={} per_dataset={} ({} mode)",
+        cfg.seed,
+        cfg.per_dataset,
+        if bench::smoke() { "smoke" } else { "full" }
+    );
+
+    let (result, secs) = bench::time_once(|| run_matrix(&cfg));
+    let rerun = run_matrix(&cfg);
+    assert_eq!(result.to_csv(), rerun.to_csv(), "scenario CSV must be seed-stable");
+    assert_eq!(result.to_json(), rerun.to_json(), "scenario JSON must be seed-stable");
+    println!("matrix of {} cells in {secs:.1}s, re-run byte-identical", result.cells.len());
+
+    // method × scenario AUC table
+    let mut rows = vec![{
+        let mut h = vec!["method".to_string()];
+        h.extend(SCENARIOS.iter().filter(|s| **s != "adversarial").map(|s| s.to_string()));
+        h
+    }];
+    for method in METHODS {
+        let mut row = vec![method.to_string()];
+        for scenario in SCENARIOS.iter().filter(|s| **s != "adversarial") {
+            let v = result.get(scenario, method, "auc").unwrap_or(f64::NAN);
+            row.push(fmt(v, 4));
+        }
+        rows.push(row);
+    }
+    print_table("Scenario matrix — AUC by method", &rows);
+
+    let mut diag = vec![vec!["diagnostic".to_string(), "value".to_string()]];
+    for (s, m, k) in [
+        ("drift", "budget", "adaptation_gain"),
+        ("cold_start", "budget", "recovery_gain"),
+        ("burst_skew", "sharded", "score_divergence"),
+        ("burst_skew", "sharded", "shard_imbalance"),
+        ("adversarial", "wire", "error_reply_rate"),
+        ("adversarial", "wire", "survived"),
+        ("adversarial", "durable", "recovered_ratio"),
+        ("adversarial", "durable", "survived"),
+    ] {
+        diag.push(vec![
+            format!("{s}.{m}.{k}"),
+            fmt(result.get(s, m, k).unwrap_or(f64::NAN), 4),
+        ]);
+    }
+    print_table("Scenario matrix — diagnostics", &diag);
+
+    let dir = std::env::var("EAGLE_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    match result.write_to(std::path::Path::new(&dir)) {
+        Ok((csv, json)) => println!("wrote {} and {}", csv.display(), json.display()),
+        Err(e) => eprintln!("artifact write failed: {e}"),
+    }
+
+    if bench::json_enabled() {
+        let mut report = JsonReport::new("scenario_matrix");
+        for (name, value) in result.metrics() {
+            report.push(&name, value);
+        }
+        report.push("scenario.matrix_secs", secs);
+        match report.write() {
+            Ok(p) => println!("wrote {}", p.display()),
+            Err(e) => eprintln!("bench json write failed: {e}"),
+        }
+    }
+}

@@ -91,9 +91,14 @@ USAGE:
   eagle eval     [--per-dataset N] [--dataset NAME|all]
                  [--routers eagle,eagle-global,eagle-local,knn,mlp,svm]
                  [--seed S] [--config FILE]
+  eagle scenarios [--seed S] [--per-dataset N] [--out DIR] [--config FILE]
   eagle gen-data --out FILE [--per-dataset N] [--seed S]
   eagle info     [--config FILE]
   eagle help
+
+The server's default routing policy comes from the [policy] config
+section (policy.mode = budget | cost_aware | threshold); v2 clients can
+override it per query.
 ";
 
 /// Entry point; returns the process exit code.
@@ -107,6 +112,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     match cmd.as_str() {
         "serve" => cmd_serve(&args, &cfg),
         "eval" => cmd_eval(&args, &cfg),
+        "scenarios" => cmd_scenarios(&args, &cfg),
         "gen-data" => cmd_gen_data(&args, &cfg),
         "info" => cmd_info(&cfg),
         "help" | "--help" | "-h" => {
@@ -392,16 +398,22 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         }
     };
 
-    // durable segment store ([persist] dir) wins over the legacy JSON
-    // path; the JSON path falls back to the admin --snapshot-out path
-    let snapshot_out = args.get("snapshot-out").map(std::path::PathBuf::from);
+    // durable segment store ([persist] dir) is the only background
+    // persistence mode; persist.path survives as a deprecated alias for
+    // the admin snapshot op's JSON target (--snapshot-out)
+    let mut snapshot_out = args.get("snapshot-out").map(std::path::PathBuf::from);
+    if !cfg.persist.path.is_empty() {
+        println!(
+            "warning: persist.path is deprecated — it now only names the admin \
+             snapshot op's JSON target (like --snapshot-out); use [persist] dir \
+             for background persistence"
+        );
+        if snapshot_out.is_none() {
+            snapshot_out = Some(std::path::PathBuf::from(&cfg.persist.path));
+        }
+    }
     let persist_dir = (!cfg.persist.dir.is_empty())
         .then(|| std::path::PathBuf::from(&cfg.persist.dir));
-    let persist_path = if cfg.persist.path.is_empty() {
-        snapshot_out.clone()
-    } else {
-        Some(std::path::PathBuf::from(&cfg.persist.path))
-    };
     match &persist_dir {
         Some(dir) => {
             if crate::coordinator::durable::DurableStore::exists(dir) {
@@ -429,39 +441,50 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
                 },
             );
         }
-        None if cfg.persist.interval_ms > 0 => match &persist_path {
-            Some(p) => println!(
-                "periodic JSON persistence every {} ms -> {} (consider [persist] dir \
-                 for O(delta) beats)",
-                cfg.persist.interval_ms,
-                p.display()
-            ),
-            None => println!(
-                "warning: persist.interval_ms set but no persist.dir / persist.path / \
-                 --snapshot-out; periodic persistence disabled"
-            ),
-        },
+        None if cfg.persist.interval_ms > 0 => println!(
+            "warning: persist.interval_ms set but no persist.dir; the periodic \
+             checkpoint beat only applies to the durable segment store"
+        ),
         None => {}
     }
 
-    let mut state = crate::server::ServerState::with_options(
+    let default_policy = cfg.policy.spec().map_err(|e| anyhow!("policy: {e}"))?;
+    println!(
+        "default routing policy: {} (v2 clients can override per query)",
+        default_policy.mode()
+    );
+
+    let mut builder = crate::server::ServerState::builder(
         router,
         registry,
         service.handle(),
         metrics,
-        crate::server::ServerOptions {
-            epoch: cfg.epoch.clone(),
-            shards: cfg.shards.clone(),
-            ivf: cfg.ivf.clone(),
-            persist_interval_ms: cfg.persist.interval_ms,
-            persist_path,
-            persist_dir,
-            seal_bytes: cfg.persist.seal_bytes,
-            fsync: cfg.persist.fsync,
-            kernel_backend: cfg.kernel.backend.clone(),
-            admission: admission.clone(),
-        },
-    );
+    )
+    .options(crate::server::ServerOptions {
+        epoch: cfg.epoch.clone(),
+        shards: cfg.shards.clone(),
+        ivf: cfg.ivf.clone(),
+        persist_interval_ms: cfg.persist.interval_ms,
+        persist_dir: persist_dir.clone(),
+        seal_bytes: cfg.persist.seal_bytes,
+        fsync: cfg.persist.fsync,
+        kernel_backend: cfg.kernel.backend.clone(),
+        admission: admission.clone(),
+    })
+    .default_policy(default_policy);
+    if let Some(out) = snapshot_out {
+        if persist_dir.is_some() {
+            println!(
+                "note: --snapshot-out {} is ignored while [persist] dir is set — the \
+                 admin snapshot op checkpoints the durable store instead",
+                out.display()
+            );
+        } else {
+            println!("admin snapshot op enabled -> {}", out.display());
+            builder = builder.snapshot_path(out);
+        }
+    }
+    let state = builder.build();
     println!(
         "scoring kernel: {} (configured '{}'; EAGLE_KERNEL overrides)",
         crate::vectordb::kernel::active().name(),
@@ -494,18 +517,6 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
                  (P={} N={} K={}); the store's params are in effect",
                 meta.params.p, meta.params.n_neighbors, meta.params.k_factor,
             );
-        }
-    }
-    if let Some(out) = snapshot_out {
-        if state.durable_store().is_some() {
-            println!(
-                "note: --snapshot-out {} is ignored while [persist] dir is set — the \
-                 admin snapshot op checkpoints the durable store instead",
-                out.display()
-            );
-        } else {
-            println!("admin snapshot op enabled -> {}", out.display());
-            state = state.with_snapshot_path(out);
         }
     }
     let state = Arc::new(state);
@@ -542,6 +553,62 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// `eagle scenarios`: run the deterministic scenario matrix and write
+/// the CSV/JSON artifacts.
+fn cmd_scenarios(args: &Args, cfg: &Config) -> Result<i32> {
+    use crate::eval::scenario::{run_matrix, ScenarioConfig, METHODS, SCENARIOS};
+
+    let defaults = ScenarioConfig::smoke();
+    let scenario_cfg = ScenarioConfig {
+        seed: args.u64_or("seed", cfg.data.seed)?,
+        per_dataset: args.usize_or("per-dataset", defaults.per_dataset)?,
+    };
+    println!(
+        "scenario matrix: seed={} per_dataset={} ({} scenarios x {} methods)",
+        scenario_cfg.seed,
+        scenario_cfg.per_dataset,
+        SCENARIOS.len(),
+        METHODS.len()
+    );
+    let result = run_matrix(&scenario_cfg);
+
+    let mut rows = vec![{
+        let mut h = vec!["method".to_string()];
+        h.extend(SCENARIOS.iter().filter(|s| **s != "adversarial").map(|s| s.to_string()));
+        h
+    }];
+    for method in METHODS {
+        let mut row = vec![method.to_string()];
+        for scenario in SCENARIOS.iter().filter(|s| **s != "adversarial") {
+            row.push(fmt(result.get(scenario, method, "auc").unwrap_or(f64::NAN), 4));
+        }
+        rows.push(row);
+    }
+    print_table("Scenario AUC by method", &rows);
+
+    let mut diag = vec![vec!["diagnostic".to_string(), "value".to_string()]];
+    for (s, m, k) in [
+        ("drift", "budget", "adaptation_gain"),
+        ("cold_start", "budget", "recovery_gain"),
+        ("burst_skew", "sharded", "score_divergence"),
+        ("adversarial", "wire", "error_reply_rate"),
+        ("adversarial", "durable", "recovered_ratio"),
+    ] {
+        diag.push(vec![
+            format!("{s}.{m}.{k}"),
+            fmt(result.get(s, m, k).unwrap_or(f64::NAN), 4),
+        ]);
+    }
+    print_table("Scenario diagnostics", &diag);
+
+    let out = std::path::PathBuf::from(args.get("out").unwrap_or("."));
+    let (csv, jsonp) = result
+        .write_to(&out)
+        .with_context(|| format!("writing scenario artifacts into {}", out.display()))?;
+    println!("wrote {} and {}", csv.display(), jsonp.display());
+    Ok(0)
 }
 
 #[cfg(test)]

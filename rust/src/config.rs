@@ -191,30 +191,33 @@ impl Default for IvfPublishParams {
 }
 
 /// Background persistence for the sharded ingest pipeline
-/// ([`crate::coordinator::ingest`]), in one of two modes:
+/// ([`crate::coordinator::ingest`]): the durable segment store. With
+/// `dir` non-empty, every ingested record is appended to its shard's
+/// delta log under `dir`, lanes seal immutable segment files past
+/// `seal_bytes`, and every `interval_ms` the beat fsyncs the logs +
+/// advances the manifest's global-ELO checkpoint — O(delta) per beat,
+/// never O(corpus). `eagle serve` recovers from `dir` on restart
+/// ([`crate::coordinator::durable`]).
 ///
-/// - **Durable segment store** (`dir` non-empty, the production mode):
-///   every ingested record is appended to its shard's delta log under
-///   `dir`, lanes seal immutable segment files past `seal_bytes`, and
-///   every `interval_ms` the beat fsyncs the logs + advances the
-///   manifest's global-ELO checkpoint — O(delta) per beat, never
-///   O(corpus). `eagle serve` recovers from `dir` on restart
-///   ([`crate::coordinator::durable`]).
-/// - **Legacy JSON** (`dir` empty): every `interval_ms` the dispatcher
-///   beat publishes a consistent cut and rewrites the full corpus to
-///   `path` via [`crate::coordinator::state::write_atomic`].
+/// `interval_ms = 0` disables the periodic beat (the store still appends
+/// + seals inline and checkpoints on the admin `snapshot` op and clean
+/// shutdown).
 ///
-/// `interval_ms = 0` disables the periodic beat (a durable store still
-/// appends + seals inline and checkpoints on the admin `snapshot` op and
-/// clean shutdown; the legacy mode persists on the admin op only).
+/// The pre-durable-store whole-JSON background mode is retired: `path`
+/// survives only as a **deprecated alias** for the admin `snapshot` op's
+/// one-shot JSON target (same effect as `--snapshot-out`; `eagle serve`
+/// prints a deprecation notice when it is set). It no longer drives any
+/// periodic persistence.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PersistParams {
     /// Persist at most this often, driven by the applier beat (0 = off).
     pub interval_ms: u64,
-    /// Legacy JSON snapshot file path; empty = fall back to the server's
-    /// `--snapshot-out` path. Ignored when `dir` is set.
+    /// Deprecated alias: one-shot JSON target for the admin `snapshot`
+    /// op (use `--snapshot-out`; superseded by `dir` for real
+    /// persistence).
     pub path: String,
-    /// Durable segment-store directory (empty = legacy JSON mode).
+    /// Durable segment-store directory (empty = no background
+    /// persistence).
     pub dir: String,
     /// Unsealed delta-log bytes per shard that seal into a segment file.
     pub seal_bytes: usize,
@@ -255,6 +258,34 @@ impl Default for KernelParams {
     }
 }
 
+/// Default routing policy for the server
+/// ([`crate::coordinator::policy`]): applied to every route request that
+/// doesn't pick its own policy (all protocol-v1 clients, and v2 routes
+/// with no policy/budget fields).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyParams {
+    /// One of `budget`, `cost_aware`, `threshold`.
+    pub mode: String,
+    /// $ budget for the budget/cost_aware modes; `<= 0` means
+    /// unconstrained (route purely on score).
+    pub budget: f64,
+    /// Win-probability cutoff for the threshold mode, in [0,1].
+    pub threshold: f64,
+}
+
+impl Default for PolicyParams {
+    fn default() -> Self {
+        PolicyParams { mode: "budget".to_string(), budget: 0.0, threshold: 0.5 }
+    }
+}
+
+impl PolicyParams {
+    /// The parsed spec (validation errors name the bad knob).
+    pub fn spec(&self) -> Result<crate::coordinator::policy::PolicySpec, String> {
+        crate::coordinator::policy::PolicySpec::from_mode(&self.mode, self.budget, self.threshold)
+    }
+}
+
 /// Synthetic RouterBench generation parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataParams {
@@ -290,6 +321,7 @@ pub struct Config {
     pub ivf: IvfPublishParams,
     pub persist: PersistParams,
     pub kernel: KernelParams,
+    pub policy: PolicyParams,
     pub data: DataParams,
 }
 
@@ -410,6 +442,9 @@ impl Config {
             "persist.seal_bytes" => self.persist.seal_bytes = usize_of(value)?,
             "persist.fsync" => self.persist.fsync = bool_of(value)?,
             "kernel.backend" => self.kernel.backend = value.to_string(),
+            "policy.mode" => self.policy.mode = value.to_string(),
+            "policy.budget" => self.policy.budget = f64_of(value)?,
+            "policy.threshold" => self.policy.threshold = f64_of(value)?,
             "data.seed" => self.data.seed = u64_of(value)?,
             "data.per_dataset" => self.data.per_dataset = usize_of(value)?,
             "data.train_fraction" => self.data.train_fraction = f64_of(value)?,
@@ -472,6 +507,7 @@ impl Config {
         }
         crate::vectordb::kernel::parse_choice(&self.kernel.backend)
             .map_err(|e| ConfigError(format!("kernel.backend: {e}")))?;
+        self.policy.spec().map_err(|e| ConfigError(format!("policy: {e}")))?;
         Ok(())
     }
 }
@@ -654,6 +690,45 @@ workers = 8
         bad.kernel.backend = "sse9".to_string();
         let err = bad.validate().unwrap_err();
         assert!(err.0.contains("kernel.backend"), "{}", err.0);
+    }
+
+    #[test]
+    fn policy_knobs_parse_and_validate() {
+        use crate::coordinator::policy::PolicySpec;
+        // defaults: unconstrained budget policy
+        let c = Config::default();
+        assert_eq!(c.policy, PolicyParams::default());
+        assert_eq!(
+            c.policy.spec().unwrap(),
+            PolicySpec::Budget { budget: f64::INFINITY }
+        );
+        let c = Config::load(
+            None,
+            &[
+                ("policy.mode".into(), "threshold".into()),
+                ("policy.threshold".into(), "0.7".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.policy.spec().unwrap(), PolicySpec::Threshold { threshold: 0.7 });
+        let c = Config::load(
+            None,
+            &[
+                ("policy.mode".into(), "cost_aware".into()),
+                ("policy.budget".into(), "0.02".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.policy.spec().unwrap(), PolicySpec::CostAware { budget: 0.02 });
+        // bad mode and out-of-range threshold are validation errors
+        let mut bad = Config::default();
+        bad.policy.mode = "nope".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.0.contains("policy"), "{}", err.0);
+        let mut bad = Config::default();
+        bad.policy.mode = "threshold".into();
+        bad.policy.threshold = 1.5;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

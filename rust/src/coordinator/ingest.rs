@@ -39,24 +39,19 @@
 //! linger costs nothing.
 //!
 //! The dispatcher beat also drives optional background persistence
-//! ([`crate::config::PersistParams`]), in one of two modes
-//! ([`PersistSink`]):
-//!
-//! - **Durable** (the default with `[persist] dir`): each shard applier
-//!   owns a [`DurableLaneWriter`] and appends every record to its shard's
-//!   delta log as it applies it; the beat publishes a consistent cut
-//!   (global table + a flush barrier through every lane, which fsyncs the
-//!   logs) and then advances the manifest's global-ELO checkpoint —
-//!   O(records since the last beat), never O(corpus). Seals happen inline
-//!   on the applier when a lane's tail crosses the seal threshold.
-//! - **Json** (legacy `[persist] path`): the beat snapshots the whole
-//!   corpus through the reader handle
-//!   ([`super::sharded::ShardedSnapshot::persist`]).
-//!
-//! Either way no writer lane is ever locked for persistence, and route
-//! reads are untouched.
+//! ([`crate::config::PersistParams`]) into the durable segment store
+//! (`[persist] dir`, the one persistence shape since the legacy
+//! whole-JSON sink was retired): each shard applier owns a
+//! [`DurableLaneWriter`] and appends every record to its shard's delta
+//! log as it applies it; the beat publishes a consistent cut (global
+//! table + a flush barrier through every lane, which fsyncs the logs)
+//! and then advances the manifest's global-ELO checkpoint — O(records
+//! since the last beat), never O(corpus). Seals happen inline on the
+//! applier when a lane's tail crosses the seal threshold. No writer lane
+//! is ever locked for persistence, and route reads are untouched. (The
+//! admin `snapshot` op can still write a one-shot JSON snapshot through
+//! the reader handle; that path does not ride this pipeline.)
 
-use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -106,9 +101,9 @@ pub struct IngestMetrics {
     /// `folded_global / dispatch_batches` is the mean embed-batch size
     /// the linger achieved.
     pub dispatch_batches: Counter,
-    /// Background persistence attempts / failures (JSON snapshots or
-    /// durable checkpoints, per [`PersistSink`]); `persist_failures` also
-    /// counts failed durable appends/syncs on the applier side.
+    /// Durable checkpoint attempts / failures (the persistence beat and
+    /// admin cuts); `persist_failures` also counts failed durable
+    /// appends/syncs on the applier side.
     pub persists: Counter,
     pub persist_failures: Counter,
     shards: Vec<ShardCounters>,
@@ -241,23 +236,15 @@ enum LaneMsg {
     Flush(FlushBarrier),
 }
 
-/// Where the persistence beat writes (see the module docs).
-#[derive(Clone)]
-pub enum PersistSink {
-    /// Legacy whole-corpus JSON snapshot at this path.
-    Json(PathBuf),
-    /// Segment-granular durable store: appliers append delta-log frames
-    /// inline; the beat fsyncs + advances the global checkpoint.
-    Durable(Arc<DurableStore>),
-}
-
-/// Background-persistence target for the dispatcher beat. A zero
-/// `interval` disables the periodic beat; a durable sink still appends
-/// and seals inline, and flushes on barriers/shutdown and the admin
+/// Background-persistence target for the dispatcher beat: the durable
+/// segment store (appliers append delta-log frames inline; the beat
+/// fsyncs + advances the global checkpoint). A zero `interval` disables
+/// the periodic beat; the store still appends and seals inline, and
+/// flushes on barriers/shutdown and the admin
 /// [`IngestPipeline::persist_now`].
 #[derive(Clone)]
 pub struct PersistTarget {
-    pub sink: PersistSink,
+    pub store: Arc<DurableStore>,
     pub interval: Duration,
 }
 
@@ -327,10 +314,10 @@ impl IngestPipeline {
 
         // durable sink: every applier owns its shard's delta-log writer
         let mut durable_writers: Vec<Option<DurableLaneWriter>> = match &opts.persist {
-            Some(PersistTarget { sink: PersistSink::Durable(store), .. }) => (0..shard_count)
+            Some(PersistTarget { store, .. }) => (0..shard_count)
                 .map(|s| Some(store.lane_writer(s).expect("durable store lane writer")))
                 .collect(),
-            _ => (0..shard_count).map(|_| None).collect(),
+            None => (0..shard_count).map(|_| None).collect(),
         };
 
         let mut threads = Vec::with_capacity(shard_count + 1);
@@ -351,7 +338,6 @@ impl IngestPipeline {
             lane_capacity: opts.lane_queue_capacity,
             embed,
             metrics: metrics.clone(),
-            handle: handle.clone(),
             hash_seed: shard_params.hash_seed,
             next_gid,
             linger: opts.linger,
@@ -492,7 +478,6 @@ struct Dispatcher {
     lane_capacity: usize,
     embed: Option<EmbedHandle>,
     metrics: Arc<IngestMetrics>,
-    handle: ShardedHandle,
     hash_seed: u64,
     next_gid: u32,
     linger: Duration,
@@ -512,9 +497,7 @@ impl Dispatcher {
                     if self.global.unpublished() > 0 {
                         self.global.publish();
                     }
-                    if let Some(PersistTarget { sink: PersistSink::Durable(store), .. }) =
-                        self.persist.clone()
-                    {
+                    if let Some(PersistTarget { store, .. }) = self.persist.clone() {
                         let folded_gid = self.next_gid;
                         let state = self.global.elo().export_state();
                         let barrier = FlushBarrier::new(self.lanes.len());
@@ -670,46 +653,25 @@ impl Dispatcher {
         self.persist_cut();
     }
 
-    /// One persistence cut, whatever the sink (see [`PersistSink`]).
+    /// One durable persistence cut: publish, barrier every lane (which
+    /// fsyncs the delta logs), advance the global checkpoint.
     fn persist_cut(&mut self) {
         let Some(target) = self.persist.clone() else { return };
-        match &target.sink {
-            PersistSink::Durable(store) => {
-                // capture the fold point *before* the barrier: every
-                // record folded so far was staged to its lane already, so
-                // the FIFO barrier proves all of them are applied AND
-                // fsynced before the checkpoint claims them
-                let folded_gid = self.next_gid;
-                let state = self.global.elo().export_state();
-                self.global.publish();
-                let barrier = FlushBarrier::new(self.lanes.len());
-                for q in &self.lanes {
-                    q.push(LaneMsg::Flush(barrier.clone()));
-                }
-                barrier.wait();
-                self.metrics.persists.inc();
-                if store.checkpoint_global(folded_gid, state).is_err() {
-                    self.metrics.persist_failures.inc();
-                }
-            }
-            PersistSink::Json(path) => {
-                // publish a consistent cut first: the global table, then
-                // a barrier through every lane so all dispatched global
-                // ids are visible. The persisted ScatterView walks ids
-                // densely, so a gap (one lane published ahead of
-                // another) would panic; the barrier makes the published
-                // id set a complete prefix.
-                self.global.publish();
-                let barrier = FlushBarrier::new(self.lanes.len());
-                for q in &self.lanes {
-                    q.push(LaneMsg::Flush(barrier.clone()));
-                }
-                barrier.wait();
-                self.metrics.persists.inc();
-                if self.handle.load().persist(path).is_err() {
-                    self.metrics.persist_failures.inc();
-                }
-            }
+        // capture the fold point *before* the barrier: every record
+        // folded so far was staged to its lane already, so the FIFO
+        // barrier proves all of them are applied AND fsynced before the
+        // checkpoint claims them
+        let folded_gid = self.next_gid;
+        let state = self.global.elo().export_state();
+        self.global.publish();
+        let barrier = FlushBarrier::new(self.lanes.len());
+        for q in &self.lanes {
+            q.push(LaneMsg::Flush(barrier.clone()));
+        }
+        barrier.wait();
+        self.metrics.persists.inc();
+        if target.store.checkpoint_global(folded_gid, state).is_err() {
+            self.metrics.persist_failures.inc();
         }
     }
 }
@@ -977,54 +939,6 @@ mod tests {
     }
 
     #[test]
-    fn periodic_persistence_writes_restorable_snapshots() {
-        let mut rng = Rng::new(45);
-        let dir = std::env::temp_dir().join(format!("eagle_ingest_persist_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("persist.json");
-        let router = ShardedRouter::new(
-            EagleParams::default(),
-            N_MODELS,
-            DIM,
-            EpochParams { publish_every: 8, publish_interval_ms: 3 },
-            ShardParams { count: 2, hash_seed: 0xEA61E },
-        );
-        let pipeline = IngestPipeline::start(
-            router,
-            None,
-            IngestOptions {
-                epoch: EpochParams { publish_every: 8, publish_interval_ms: 3 },
-                persist: Some(PersistTarget {
-                    sink: PersistSink::Json(path.clone()),
-                    interval: Duration::from_millis(10),
-                }),
-                ..Default::default()
-            },
-        );
-        for _ in 0..120 {
-            pipeline.push_verdict(rand_verdict(&mut rng));
-        }
-        pipeline.flush();
-        // wait for at least one persistence beat to land
-        let deadline = Instant::now() + Duration::from_secs(5);
-        while pipeline.metrics().persists.get() == 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        // nudge the beat once more so the post-flush state is captured
-        std::thread::sleep(Duration::from_millis(30));
-        pipeline.flush();
-        std::thread::sleep(Duration::from_millis(30));
-        pipeline.shutdown();
-        let m = pipeline.metrics();
-        assert!(m.persists.get() >= 1, "no persistence beat fired");
-        assert_eq!(m.persist_failures.get(), 0);
-        let restored = crate::coordinator::state::load_from(&path).unwrap();
-        assert!(restored.feedback_len() > 0, "persisted snapshot is empty");
-        assert_eq!(restored.store().len(), restored.feedback_len());
-        std::fs::remove_dir_all(&dir).ok();
-    }
-
-    #[test]
     fn durable_sink_appends_syncs_and_recovers_through_the_pipeline() {
         use crate::coordinator::durable::{DurableOptions, DurableStore, StoreMeta};
         let mut rng = Rng::new(46);
@@ -1051,10 +965,7 @@ mod tests {
             None,
             IngestOptions {
                 epoch,
-                persist: Some(PersistTarget {
-                    sink: PersistSink::Durable(store),
-                    interval: Duration::from_millis(5),
-                }),
+                persist: Some(PersistTarget { store, interval: Duration::from_millis(5) }),
                 ..Default::default()
             },
         );

@@ -1,32 +1,110 @@
-//! Budget policy: "select the highest-ranked model that falls within the
-//! user's specified budget" (paper §2).
+//! Routing policies: how router scores plus model costs become one
+//! routing decision.
 //!
-//! The budget is a willingness-to-pay in $ per query, compared against each
-//! model's *expected* per-query cost from the registry. If nothing is
-//! affordable the policy falls back to the cheapest available model — a
-//! serving system must answer every request.
+//! The paper's policy (§2) is "select the highest-ranked model that falls
+//! within the user's specified budget" — [`PolicySpec::Budget`]. The
+//! related work frames routing as a cost/quality Pareto problem, so the
+//! policy layer is first-class here: a [`RoutePolicy`] is built from the
+//! registry (costs, [`CostCurve`]s, availability) and evaluates a
+//! per-query [`PolicySpec`]:
+//!
+//! - **Budget** — maximize score s.t. flat expected cost <= budget
+//!   (paper §2; the default, and bit-identical to the pre-policy-layer
+//!   behavior).
+//! - **CostAware** — maximize score s.t. *expected spend on this query*
+//!   <= budget, where spend comes from the per-model [`CostCurve`] at the
+//!   query's estimated prompt volume — long prompts price differently
+//!   across models (RouterBench's cost model).
+//! - **Threshold** — RouteLLM-style calibrated threshold: route to the
+//!   strongest available model iff its win probability over the cheapest
+//!   one clears `threshold`; [`RoutePolicy::calibrate_threshold`] picks
+//!   the threshold that hits a target strong-model fraction on a sample
+//!   of score vectors.
+//!
+//! If nothing is affordable the policy falls back to the cheapest
+//! available model — a serving system must answer every request.
 
-use super::registry::ModelRegistry;
+use super::registry::{CostCurve, ModelRegistry};
 
-/// Budget-constrained selection over router scores.
+/// A per-query policy choice. `Copy`, so the server's co-batched route
+/// path threads it through [`RoutePolicy::select_spec`] allocation-free.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicySpec {
+    /// Maximize score subject to flat expected cost <= budget (paper §2).
+    Budget { budget: f64 },
+    /// Maximize score subject to curve-priced expected spend <= budget.
+    CostAware { budget: f64 },
+    /// Strong model iff its win probability over the cheap model clears
+    /// the threshold (RouteLLM).
+    Threshold { threshold: f64 },
+}
+
+impl PolicySpec {
+    /// Unconstrained default: every model is affordable.
+    pub fn unbounded() -> PolicySpec {
+        PolicySpec::Budget { budget: f64::INFINITY }
+    }
+
+    /// Parse a named mode + knobs (wire protocol, `[policy]` config).
+    /// `budget <= 0` means unconstrained.
+    pub fn from_mode(mode: &str, budget: f64, threshold: f64) -> Result<PolicySpec, String> {
+        let budget = if budget > 0.0 { budget } else { f64::INFINITY };
+        match mode {
+            "budget" => Ok(PolicySpec::Budget { budget }),
+            "cost_aware" => Ok(PolicySpec::CostAware { budget }),
+            "threshold" => {
+                if !(0.0..=1.0).contains(&threshold) {
+                    return Err(format!("threshold {threshold} not in [0,1]"));
+                }
+                Ok(PolicySpec::Threshold { threshold })
+            }
+            other => Err(format!(
+                "unknown policy '{other}' (expected budget, cost_aware or threshold)"
+            )),
+        }
+    }
+
+    /// The wire/config name of this spec's mode.
+    pub fn mode(&self) -> &'static str {
+        match self {
+            PolicySpec::Budget { .. } => "budget",
+            PolicySpec::CostAware { .. } => "cost_aware",
+            PolicySpec::Threshold { .. } => "threshold",
+        }
+    }
+}
+
+/// Rough prompt-token estimate for cost curves: whitespace words scaled
+/// by the usual ~4/3 tokens-per-word. Allocation-free — it rides the
+/// batched route hot path.
+pub fn approx_tokens(text: &str) -> f64 {
+    (text.split_whitespace().count() as f64 * 4.0 / 3.0).max(1.0)
+}
+
+/// Cost-aware selection over router scores: registry-derived costs,
+/// cost curves and availability, evaluated against a per-query
+/// [`PolicySpec`].
 #[derive(Debug, Clone)]
-pub struct BudgetPolicy {
+pub struct RoutePolicy {
     costs: Vec<f64>,
+    curves: Vec<CostCurve>,
     available: Vec<bool>,
 }
 
-impl BudgetPolicy {
+impl RoutePolicy {
     pub fn new(registry: &ModelRegistry) -> Self {
-        BudgetPolicy {
+        RoutePolicy {
             costs: registry.costs(),
+            curves: registry.cost_curves(),
             available: registry.entries().iter().map(|e| e.available).collect(),
         }
     }
 
-    /// Selection from explicit costs (tests, ablations).
+    /// Selection from explicit flat costs (tests, ablations).
     pub fn from_costs(costs: Vec<f64>) -> Self {
         let available = vec![true; costs.len()];
-        BudgetPolicy { costs, available }
+        let curves = costs.iter().map(|&c| CostCurve::flat(c)).collect();
+        RoutePolicy { costs, curves, available }
     }
 
     pub fn n_models(&self) -> usize {
@@ -37,21 +115,53 @@ impl BudgetPolicy {
         &self.costs
     }
 
+    /// Mirror a registry availability change (operator drain).
+    pub fn set_available(&mut self, model: usize, available: bool) {
+        self.available[model] = available;
+    }
+
     /// Highest-scoring model with expected cost <= budget; falls back to
-    /// the cheapest available model when nothing is affordable.
+    /// the cheapest available model when nothing is affordable. This is
+    /// `select_spec` with [`PolicySpec::Budget`] — the paper's policy.
     pub fn select(&self, scores: &[f64], budget: f64) -> usize {
+        self.select_spec(scores, PolicySpec::Budget { budget }, 0.0)
+    }
+
+    /// Evaluate one policy spec against one score vector.
+    /// `prompt_tokens` is the query's estimated prompt volume (only the
+    /// cost-aware mode reads it; pass 0.0 when unknown).
+    pub fn select_spec(&self, scores: &[f64], spec: PolicySpec, prompt_tokens: f64) -> usize {
         debug_assert_eq!(scores.len(), self.costs.len());
+        match spec {
+            PolicySpec::Budget { budget } => {
+                self.select_constrained(scores, budget, |m| self.costs[m])
+            }
+            PolicySpec::CostAware { budget } => {
+                self.select_constrained(scores, budget, |m| self.curves[m].cost(prompt_tokens))
+            }
+            PolicySpec::Threshold { threshold } => self.select_threshold(scores, threshold),
+        }
+    }
+
+    /// Shared affordability scan: maximize score over available models
+    /// whose `cost_of(m) <= budget`, tie-breaking toward the cheaper
+    /// model (same quality for less).
+    fn select_constrained<F: Fn(usize) -> f64>(
+        &self,
+        scores: &[f64],
+        budget: f64,
+        cost_of: F,
+    ) -> usize {
         let mut best: Option<usize> = None;
         for m in 0..self.costs.len() {
-            if !self.available[m] || self.costs[m] > budget {
+            if !self.available[m] || cost_of(m) > budget {
                 continue;
             }
             match best {
                 None => best = Some(m),
                 Some(b) => {
-                    // tie-break toward the cheaper model (same quality for less)
                     if scores[m] > scores[b]
-                        || (scores[m] == scores[b] && self.costs[m] < self.costs[b])
+                        || (scores[m] == scores[b] && cost_of(m) < cost_of(b))
                     {
                         best = Some(m);
                     }
@@ -59,6 +169,91 @@ impl BudgetPolicy {
             }
         }
         best.unwrap_or_else(|| self.cheapest())
+    }
+
+    /// RouteLLM-style strong/weak routing: strong = the most expensive
+    /// available model, weak = the cheapest; route strong iff its ELO win
+    /// probability over weak clears the threshold. With one available
+    /// model (or a drained registry) this degrades like everything else.
+    fn select_threshold(&self, scores: &[f64], threshold: f64) -> usize {
+        let (Some(strong), Some(weak)) = (self.strongest_available(), self.cheapest_checked())
+        else {
+            return self.cheapest();
+        };
+        if strong == weak {
+            return strong;
+        }
+        if Self::win_prob(scores[strong], scores[weak]) >= threshold {
+            strong
+        } else {
+            weak
+        }
+    }
+
+    /// ELO win probability of `a` over `b` (logistic, 400-point scale —
+    /// the same curve the rating engine uses).
+    pub fn win_prob(score_a: f64, score_b: f64) -> f64 {
+        1.0 / (1.0 + 10f64.powf((score_b - score_a) / 400.0))
+    }
+
+    /// Strong-arm candidate for the threshold mode: the most expensive
+    /// available model (price tracks capability in every pool we model).
+    fn strongest_available(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for m in 0..self.costs.len() {
+            if !self.available[m] {
+                continue;
+            }
+            best = match best {
+                None => Some(m),
+                Some(b) if self.costs[m] > self.costs[b] => Some(m),
+                keep => keep,
+            };
+        }
+        best
+    }
+
+    fn cheapest_checked(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for m in 0..self.costs.len() {
+            if !self.available[m] {
+                continue;
+            }
+            best = match best {
+                None => Some(m),
+                Some(b) if self.costs[m] < self.costs[b] => Some(m),
+                keep => keep,
+            };
+        }
+        best
+    }
+
+    /// Calibrate a threshold hitting a target strong-model fraction on a
+    /// sample of score vectors (RouteLLM calibrates against a traffic
+    /// sample the same way). `target_strong_frac` in [0,1]; returns a
+    /// threshold such that about that fraction of the sample routes to
+    /// the strong model. Deterministic in the sample order-insensitively.
+    pub fn calibrate_threshold(&self, score_sample: &[Vec<f64>], target_strong_frac: f64) -> f64 {
+        let (Some(strong), Some(weak)) = (self.strongest_available(), self.cheapest_checked())
+        else {
+            return 1.0;
+        };
+        if strong == weak || score_sample.is_empty() {
+            return 1.0;
+        }
+        let mut probs: Vec<f64> = score_sample
+            .iter()
+            .map(|s| Self::win_prob(s[strong], s[weak]))
+            .collect();
+        // descending: probs[k-1] is the k-th most strong-leaning query
+        probs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let frac = target_strong_frac.clamp(0.0, 1.0);
+        let k = (frac * probs.len() as f64).round() as usize;
+        if k == 0 {
+            // route nothing strong: a threshold just above the max prob
+            return (probs[0] + 1e-9).min(1.0);
+        }
+        probs[k.min(probs.len()) - 1]
     }
 
     /// Cheapest available model index. When every model is drained this
@@ -113,8 +308,8 @@ mod tests {
     use super::*;
     use crate::util::prop;
 
-    fn policy() -> BudgetPolicy {
-        BudgetPolicy::from_costs(vec![10.0, 1.0, 5.0])
+    fn policy() -> RoutePolicy {
+        RoutePolicy::from_costs(vec![10.0, 1.0, 5.0])
     }
 
     #[test]
@@ -135,7 +330,7 @@ mod tests {
 
     #[test]
     fn tie_breaks_to_cheaper() {
-        let p = BudgetPolicy::from_costs(vec![10.0, 1.0]);
+        let p = RoutePolicy::from_costs(vec![10.0, 1.0]);
         assert_eq!(p.select(&[2.0, 2.0], 20.0), 1);
     }
 
@@ -157,13 +352,137 @@ mod tests {
         let pick = p.select(&[1.0, 2.0, 3.0], 100.0);
         assert_eq!(pick, 1, "degrades to the globally cheapest model");
         assert_eq!(p.cheapest(), 1);
+        // every spec degrades the same way
+        for spec in [
+            PolicySpec::Budget { budget: 100.0 },
+            PolicySpec::CostAware { budget: 100.0 },
+            PolicySpec::Threshold { threshold: 0.5 },
+        ] {
+            assert_eq!(p.select_spec(&[1.0, 2.0, 3.0], spec, 0.0), 1, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn budget_spec_matches_legacy_select_bit_identically() {
+        // the Budget spec IS the old flat policy: same picks at any
+        // budget, including unaffordable fallbacks
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..200 {
+            let n = 2 + rng.below(8);
+            let costs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 10.0)).collect();
+            let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 3.0)).collect();
+            let p = RoutePolicy::from_costs(costs);
+            let b = rng.range_f64(0.0, 12.0);
+            assert_eq!(
+                p.select(&scores, b),
+                p.select_spec(&scores, PolicySpec::Budget { budget: b }, 0.0)
+            );
+        }
+    }
+
+    #[test]
+    fn cost_aware_prices_long_prompts_out() {
+        // model 0: cheap base but steep per-token; model 1: flat
+        let p = RoutePolicy {
+            costs: vec![0.01, 0.02],
+            curves: vec![
+                CostCurve { base: 0.0, per_token: 1e-4, mean_tokens: 100.0 },
+                CostCurve::flat(0.02),
+            ],
+            available: vec![true, true],
+        };
+        let scores = vec![2.0, 1.0]; // favors model 0
+        let budget = 0.025;
+        // short prompt: model 0 costs 0.01+, affordable, wins on score
+        assert_eq!(p.select_spec(&scores, PolicySpec::CostAware { budget }, 10.0), 0);
+        // long prompt: model 0's spend (0.0001 * 1100 = 0.11) blows the
+        // budget; the flat model is all that's affordable
+        assert_eq!(p.select_spec(&scores, PolicySpec::CostAware { budget }, 1000.0), 1);
+        // the flat Budget spec ignores prompt volume entirely
+        assert_eq!(p.select_spec(&scores, PolicySpec::Budget { budget }, 1000.0), 0);
+    }
+
+    #[test]
+    fn threshold_routes_strong_only_on_confident_wins() {
+        let p = RoutePolicy::from_costs(vec![10.0, 1.0]); // 0 strong, 1 weak
+        // equal scores: win prob 0.5
+        assert_eq!(
+            p.select_spec(&[1000.0, 1000.0], PolicySpec::Threshold { threshold: 0.6 }, 0.0),
+            1
+        );
+        // strong up 200 ELO: win prob ~0.76
+        assert_eq!(
+            p.select_spec(&[1200.0, 1000.0], PolicySpec::Threshold { threshold: 0.6 }, 0.0),
+            0
+        );
+        // ultra-conservative threshold keeps it weak
+        assert_eq!(
+            p.select_spec(&[1200.0, 1000.0], PolicySpec::Threshold { threshold: 0.99 }, 0.0),
+            1
+        );
+        assert!((RoutePolicy::win_prob(1000.0, 1000.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibrated_threshold_hits_target_fraction() {
+        let p = RoutePolicy::from_costs(vec![10.0, 1.0]);
+        let mut rng = crate::util::Rng::new(11);
+        let sample: Vec<Vec<f64>> = (0..400)
+            .map(|_| vec![rng.range_f64(900.0, 1300.0), 1000.0])
+            .collect();
+        for target in [0.1, 0.25, 0.5, 0.9] {
+            let tau = p.calibrate_threshold(&sample, target);
+            let spec = PolicySpec::Threshold { threshold: tau };
+            let strong = sample
+                .iter()
+                .filter(|s| p.select_spec(s, spec, 0.0) == 0)
+                .count() as f64
+                / sample.len() as f64;
+            assert!(
+                (strong - target).abs() <= 0.02,
+                "target {target}: routed {strong} strong at tau {tau}"
+            );
+        }
+        // degenerate targets
+        let tau0 = p.calibrate_threshold(&sample, 0.0);
+        let spec0 = PolicySpec::Threshold { threshold: tau0 };
+        assert!(sample.iter().all(|s| p.select_spec(s, spec0, 0.0) == 1));
+    }
+
+    #[test]
+    fn spec_from_mode_parses_and_validates() {
+        assert_eq!(
+            PolicySpec::from_mode("budget", 0.5, 0.0).unwrap(),
+            PolicySpec::Budget { budget: 0.5 }
+        );
+        assert_eq!(
+            PolicySpec::from_mode("budget", 0.0, 0.0).unwrap(),
+            PolicySpec::Budget { budget: f64::INFINITY }
+        );
+        assert_eq!(
+            PolicySpec::from_mode("cost_aware", 1.0, 0.0).unwrap(),
+            PolicySpec::CostAware { budget: 1.0 }
+        );
+        assert_eq!(
+            PolicySpec::from_mode("threshold", 0.0, 0.7).unwrap(),
+            PolicySpec::Threshold { threshold: 0.7 }
+        );
+        assert!(PolicySpec::from_mode("threshold", 0.0, 1.5).is_err());
+        assert!(PolicySpec::from_mode("nope", 0.0, 0.0).is_err());
+        assert_eq!(PolicySpec::unbounded().mode(), "budget");
+    }
+
+    #[test]
+    fn approx_tokens_tracks_length() {
+        assert_eq!(approx_tokens(""), 1.0);
+        assert!(approx_tokens("one two three four") > approx_tokens("one two"));
     }
 
     #[test]
     fn zero_cost_models_get_distinct_sweep_levels() {
         // regression: c * 0.999 == c at c == 0.0, so a free tier was never
         // excluded by its "just below" level
-        let p = BudgetPolicy::from_costs(vec![0.0, 1.0]);
+        let p = RoutePolicy::from_costs(vec![0.0, 1.0]);
         let sweep = p.budget_sweep();
         assert!(
             sweep.iter().any(|&b| b < 0.0),
@@ -175,7 +494,7 @@ mod tests {
         }
 
         // an all-free registry still produces a non-collapsed sweep
-        let free = BudgetPolicy::from_costs(vec![0.0, 0.0]);
+        let free = RoutePolicy::from_costs(vec![0.0, 0.0]);
         let sweep = free.budget_sweep();
         let mut distinct = sweep.clone();
         distinct.dedup();
@@ -206,7 +525,7 @@ mod tests {
             let n = 2 + rng.below(8);
             let costs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 10.0)).collect();
             let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 1.0)).collect();
-            let p = BudgetPolicy::from_costs(costs);
+            let p = RoutePolicy::from_costs(costs);
             let b1 = rng.range_f64(0.0, 12.0);
             let b2 = b1 + rng.range_f64(0.0, 5.0);
             let s1 = scores[p.select(&scores, b1)];
@@ -218,6 +537,104 @@ mod tests {
             } else {
                 Ok(())
             }
+        });
+    }
+
+    #[test]
+    fn cost_aware_budget_monotonicity() {
+        // the monotonicity invariant holds for curve-priced selection too,
+        // at any fixed prompt volume
+        prop::check("cost-aware monotone", 200, |rng| {
+            let n = 2 + rng.below(8);
+            let p = RoutePolicy {
+                costs: (0..n).map(|_| rng.range_f64(0.1, 10.0)).collect(),
+                curves: (0..n)
+                    .map(|_| CostCurve {
+                        base: rng.range_f64(0.0, 0.5),
+                        per_token: rng.range_f64(0.0, 1e-3),
+                        mean_tokens: rng.range_f64(100.0, 1000.0),
+                    })
+                    .collect(),
+                available: vec![true; n],
+            };
+            let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 1.0)).collect();
+            let tokens = rng.range_f64(0.0, 2000.0);
+            let b1 = rng.range_f64(0.0, 2.0);
+            let b2 = b1 + rng.range_f64(0.0, 2.0);
+            let s1 = scores[p.select_spec(&scores, PolicySpec::CostAware { budget: b1 }, tokens)];
+            let s2 = scores[p.select_spec(&scores, PolicySpec::CostAware { budget: b2 }, tokens)];
+            let affordable1 = (0..n).any(|m| p.curves[m].cost(tokens) <= b1);
+            if affordable1 {
+                prop::assert_prop(s2 >= s1 - 1e-12, "score decreased with budget")
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sweep_distinctness_with_zero_cost_tiers_property() {
+        // budget_sweep must give every distinct cost tier an excluding and
+        // an including level, even when free (0-cost) tiers are present
+        prop::check("sweep distinctness", 200, |rng| {
+            let n = 1 + rng.below(8);
+            let mut costs: Vec<f64> = (0..n)
+                .map(|_| if rng.chance(0.3) { 0.0 } else { rng.range_f64(0.0, 5.0) })
+                .collect();
+            let p = RoutePolicy::from_costs(costs.clone());
+            let sweep = p.budget_sweep();
+            costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            costs.dedup();
+            for &c in &costs {
+                prop::assert_prop(
+                    sweep.iter().any(|&b| b < c),
+                    "no level excludes a tier",
+                )?;
+                prop::assert_prop(
+                    sweep.iter().any(|&b| b >= c),
+                    "no level includes a tier",
+                )?;
+            }
+            prop::assert_prop(
+                sweep.windows(2).all(|w| w[0] <= w[1]),
+                "sweep not sorted",
+            )?;
+            prop::assert_prop(
+                sweep.last().unwrap() > costs.last().unwrap(),
+                "no level above the max tier",
+            )
+        });
+    }
+
+    #[test]
+    fn drained_registry_degradation_property() {
+        // regression net for PR 6's cheapest() fix: under any availability
+        // mask (including all-drained) every spec returns a valid index
+        // and never picks a drained model while any model is available
+        prop::check("drained degradation", 300, |rng| {
+            let n = 1 + rng.below(8);
+            let mut p = RoutePolicy::from_costs((0..n).map(|_| rng.range_f64(0.0, 10.0)).collect());
+            for m in 0..n {
+                p.available[m] = rng.chance(0.5);
+            }
+            let scores: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 2000.0)).collect();
+            let any_available = p.available.iter().any(|&a| a);
+            let specs = [
+                PolicySpec::Budget { budget: rng.range_f64(0.0, 12.0) },
+                PolicySpec::CostAware { budget: rng.range_f64(0.0, 12.0) },
+                PolicySpec::Threshold { threshold: rng.f64() },
+            ];
+            for spec in specs {
+                let pick = p.select_spec(&scores, spec, rng.range_f64(0.0, 500.0));
+                prop::assert_prop(pick < n, "index out of range")?;
+                if any_available {
+                    prop::assert_prop(
+                        p.available[pick],
+                        "picked a drained model while others were available",
+                    )?;
+                }
+            }
+            Ok(())
         });
     }
 }

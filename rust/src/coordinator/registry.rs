@@ -1,19 +1,84 @@
 //! Model registry: what the coordinator knows about each candidate LLM.
 //!
-//! The router and the budget policy only need names and expected per-query
-//! costs; the serving layer additionally tracks availability so an
-//! operator can drain a model from rotation without redeploying.
+//! Each entry carries a [`CostCurve`] — expected $ spend as a function of
+//! estimated query volume — which the routing policies evaluate per query
+//! (RouterBench frames routing as a cost/quality Pareto problem, so cost
+//! is first-class here, not an afterthought). The serving layer
+//! additionally tracks availability so an operator can drain a model from
+//! rotation without redeploying.
 
 use crate::routerbench::models::MODELS;
+
+/// Expected $ cost of one query as a function of its estimated prompt
+/// volume: `cost(t) = base + per_token * (mean_tokens + t)`.
+///
+/// `mean_tokens` is the model's historical mean prompt+completion volume,
+/// so `cost(0)` is the flat expected per-query cost the budget policy has
+/// always used; a longer-than-average prompt adds `per_token` per
+/// estimated token on top. A flat curve (`per_token == 0`) prices every
+/// query at `base` regardless of length.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostCurve {
+    /// Fixed $ component per query.
+    pub base: f64,
+    /// $ per token of query volume.
+    pub per_token: f64,
+    /// Mean prompt+completion tokens this model spends per query.
+    pub mean_tokens: f64,
+}
+
+impl CostCurve {
+    /// A length-independent curve: every query costs exactly `cost`.
+    pub fn flat(cost: f64) -> CostCurve {
+        CostCurve { base: cost, per_token: 0.0, mean_tokens: 0.0 }
+    }
+
+    /// A metered curve from a $/1M-token price sheet entry.
+    pub fn metered(price_per_mtok: f64, mean_tokens: f64) -> CostCurve {
+        CostCurve { base: 0.0, per_token: price_per_mtok / 1e6, mean_tokens }
+    }
+
+    /// Expected $ cost of a query whose prompt adds `prompt_tokens`
+    /// estimated tokens on top of the model's mean volume.
+    pub fn cost(&self, prompt_tokens: f64) -> f64 {
+        self.base + self.per_token * (self.mean_tokens + prompt_tokens)
+    }
+
+    /// The flat expected per-query cost (`cost(0)`), the value the
+    /// original budget policy compared against.
+    pub fn expected(&self) -> f64 {
+        self.cost(0.0)
+    }
+}
 
 /// One registered model.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
     pub name: String,
-    /// Expected $ cost of one query (used by the budget policy).
+    /// Expected $ cost of one query (== `cost_curve.expected()`; kept as
+    /// a field because the flat budget policy and every report read it).
     pub expected_cost: f64,
+    /// Cost as a function of estimated query volume.
+    pub cost_curve: CostCurve,
     /// Whether the model may be routed to.
     pub available: bool,
+}
+
+impl ModelEntry {
+    /// Entry with an explicit cost curve.
+    pub fn new(name: impl Into<String>, cost_curve: CostCurve) -> ModelEntry {
+        ModelEntry {
+            name: name.into(),
+            expected_cost: cost_curve.expected(),
+            cost_curve,
+            available: true,
+        }
+    }
+
+    /// Entry with a length-independent cost (tests, ablations).
+    pub fn flat(name: impl Into<String>, cost: f64) -> ModelEntry {
+        ModelEntry::new(name, CostCurve::flat(cost))
+    }
 }
 
 /// The model pool.
@@ -23,15 +88,15 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
-    /// Registry over the RouterBench model pool.
+    /// Registry over the RouterBench model pool, with metered cost curves
+    /// from each model's price sheet (`expected_cost` is unchanged from
+    /// the flat registry: the metered curve at mean volume).
     pub fn routerbench() -> Self {
         ModelRegistry {
             entries: MODELS
                 .iter()
-                .map(|m| ModelEntry {
-                    name: m.name.to_string(),
-                    expected_cost: m.expected_cost(),
-                    available: true,
+                .map(|m| {
+                    ModelEntry::new(m.name, CostCurve::metered(m.price_per_mtok, m.mean_tokens))
                 })
                 .collect(),
         }
@@ -67,6 +132,18 @@ impl ModelRegistry {
         self.entries.iter().map(|e| e.expected_cost).collect()
     }
 
+    /// Cost curves in model order.
+    pub fn cost_curves(&self) -> Vec<CostCurve> {
+        self.entries.iter().map(|e| e.cost_curve).collect()
+    }
+
+    /// Register or replace a model's cost curve (price-sheet update; the
+    /// flat `expected_cost` follows the curve).
+    pub fn set_cost_curve(&mut self, i: usize, curve: CostCurve) {
+        self.entries[i].cost_curve = curve;
+        self.entries[i].expected_cost = curve.expected();
+    }
+
     /// Mark a model (un)available (operator drain).
     pub fn set_available(&mut self, i: usize, available: bool) {
         self.entries[i].available = available;
@@ -93,6 +170,38 @@ mod tests {
         assert_eq!(r.len(), MODELS.len());
         assert_eq!(r.index_of("gpt-4"), Some(0));
         assert!(r.entry(0).expected_cost > r.entry(r.index_of("mistral-7b-chat").unwrap()).expected_cost);
+    }
+
+    #[test]
+    fn metered_curve_expected_matches_flat_cost() {
+        // the curve at mean volume must reproduce the price-sheet expected
+        // cost bit-identically — the flat budget policy depends on it
+        let r = ModelRegistry::routerbench();
+        for (e, m) in r.entries().iter().zip(MODELS) {
+            assert_eq!(e.expected_cost, m.expected_cost(), "{}", e.name);
+            assert_eq!(e.cost_curve.expected(), m.expected_cost(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn cost_curves_are_monotone_in_prompt_volume() {
+        let r = ModelRegistry::routerbench();
+        for e in r.entries() {
+            let short = e.cost_curve.cost(10.0);
+            let long = e.cost_curve.cost(4000.0);
+            assert!(long > short, "{}: {long} <= {short}", e.name);
+        }
+        let flat = CostCurve::flat(0.25);
+        assert_eq!(flat.cost(10.0), flat.cost(4000.0));
+        assert_eq!(flat.expected(), 0.25);
+    }
+
+    #[test]
+    fn set_cost_curve_updates_expected_cost() {
+        let mut r = ModelRegistry::routerbench();
+        r.set_cost_curve(0, CostCurve::flat(1.5));
+        assert_eq!(r.entry(0).expected_cost, 1.5);
+        assert_eq!(r.costs()[0], 1.5);
     }
 
     #[test]

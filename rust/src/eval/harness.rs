@@ -10,7 +10,7 @@ use anyhow::Result;
 use crate::baselines::linalg::Matrix;
 use crate::baselines::TrainSet;
 use crate::config::{Config, DataParams, EagleParams};
-use crate::coordinator::policy::BudgetPolicy;
+use crate::coordinator::policy::RoutePolicy;
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::router::{EagleRouter, Observation};
 use crate::embedding::{BatcherOptions, EmbedService, Embedder, HashEmbedder, ServiceEmbedder};
@@ -87,7 +87,7 @@ pub struct Experiment {
     pub train_emb: Vec<Vec<Vec<f32>>>,
     pub test_emb: Vec<Vec<Vec<f32>>>,
     pub registry: ModelRegistry,
-    pub policy: BudgetPolicy,
+    pub policy: RoutePolicy,
 }
 
 impl Experiment {
@@ -103,7 +103,7 @@ impl Experiment {
             test_emb.push(rig.embed_texts(&test_texts));
         }
         let registry = ModelRegistry::routerbench();
-        let policy = BudgetPolicy::new(&registry);
+        let policy = RoutePolicy::new(&registry);
         Experiment { benchmark, train_emb, test_emb, registry, policy }
     }
 

@@ -9,8 +9,9 @@
 //! spending more and scoring less.
 
 pub mod harness;
+pub mod scenario;
 
-use crate::coordinator::policy::BudgetPolicy;
+use crate::coordinator::policy::RoutePolicy;
 use crate::coordinator::Router;
 use crate::routerbench::Sample;
 use crate::util::trapezoid_auc;
@@ -72,7 +73,7 @@ pub fn evaluate_router(
     router: &dyn Router,
     test: &[Sample],
     embeddings: &[Vec<f32>],
-    policy: &BudgetPolicy,
+    policy: &RoutePolicy,
     dataset: &str,
 ) -> CostQualityCurve {
     assert_eq!(test.len(), embeddings.len(), "embedding/sample mismatch");
@@ -102,7 +103,7 @@ pub fn evaluate_router(
 
 /// Reference curves: the oracle (per-sample best affordable model) and each
 /// single model, for context in reports.
-pub fn oracle_curve(test: &[Sample], policy: &BudgetPolicy, dataset: &str) -> CostQualityCurve {
+pub fn oracle_curve(test: &[Sample], policy: &RoutePolicy, dataset: &str) -> CostQualityCurve {
     let budgets = policy.budget_sweep();
     let mut points = Vec::with_capacity(budgets.len());
     for &budget in &budgets {
@@ -165,6 +166,34 @@ pub fn improvement_pct(ours: f64, baseline: f64) -> f64 {
     }
 }
 
+/// Cost savings at matched quality (RouterBench's headline routing win):
+/// the fraction of a reference spend the router saves while still
+/// delivering at least `(1 - tolerance) *` the reference quality.
+///
+/// Walks the router's non-decreasing quality [envelope](CostQualityCurve::envelope)
+/// for the cheapest point whose quality clears the bar, then compares its
+/// cost to `reference` (typically [`single_model_point`] of the best single
+/// model). Returns `None` when the router never reaches the bar, and
+/// clamps at 0 when matching quality costs *more* than the reference — a
+/// negative saving is a routing loss, and reporting it as 0 keeps the
+/// metric's "bigger is better" trend-gate orientation.
+pub fn cost_savings_at_matched_quality(
+    curve: &CostQualityCurve,
+    reference: (f64, f64),
+    tolerance: f64,
+) -> Option<f64> {
+    let (ref_cost, ref_quality) = reference;
+    if ref_cost <= 0.0 {
+        return None;
+    }
+    let bar = ref_quality * (1.0 - tolerance);
+    let matched = curve
+        .envelope()
+        .into_iter()
+        .find(|&(_, q)| q >= bar)?; // envelope is cost-sorted: first hit is cheapest
+    Some(((ref_cost - matched.0) / ref_cost).max(0.0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,7 +231,7 @@ mod tests {
     #[test]
     fn curve_shape_quality_rises_with_budget() {
         let samples = mk_samples();
-        let policy = BudgetPolicy::from_costs(vec![0.001, 0.01]);
+        let policy = RoutePolicy::from_costs(vec![0.001, 0.01]);
         let router = FixedRouter(vec![0.2, 0.9]);
         let curve =
             evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "test");
@@ -215,7 +244,7 @@ mod tests {
     #[test]
     fn auc_between_extremes() {
         let samples = mk_samples();
-        let policy = BudgetPolicy::from_costs(vec![0.001, 0.01]);
+        let policy = RoutePolicy::from_costs(vec![0.001, 0.01]);
         let router = FixedRouter(vec![0.2, 0.9]);
         let curve =
             evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "test");
@@ -242,7 +271,7 @@ mod tests {
     #[test]
     fn oracle_at_least_as_good_as_any_router() {
         let samples = mk_samples();
-        let policy = BudgetPolicy::from_costs(vec![0.001, 0.01]);
+        let policy = RoutePolicy::from_costs(vec![0.001, 0.01]);
         let router = FixedRouter(vec![0.9, 0.2]); // deliberately wrong
         let rc = evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "t");
         let oc = oracle_curve(&samples, &policy, "t");
@@ -264,9 +293,33 @@ mod tests {
     }
 
     #[test]
+    fn cost_savings_at_matched_quality_metric() {
+        let samples = mk_samples();
+        let policy = RoutePolicy::from_costs(vec![0.001, 0.01]);
+        let router = FixedRouter(vec![0.2, 0.9]);
+        let curve = evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "t");
+        let best_single = single_model_point(&samples, 1); // (0.01, 0.9)
+
+        // at zero tolerance the router must pay for model 1 everywhere:
+        // no savings, but the bar is reached
+        let s0 = cost_savings_at_matched_quality(&curve, best_single, 0.0).unwrap();
+        assert!((0.0..=1e-9).contains(&s0), "s0 = {s0}");
+
+        // a bar below the cheap model's quality is matched at the cheap
+        // model's cost: savings = 1 - 0.001/0.01 = 0.9
+        let s_loose = cost_savings_at_matched_quality(&curve, best_single, 0.8).unwrap();
+        assert!((s_loose - 0.9).abs() < 1e-9, "s_loose = {s_loose}");
+
+        // an unreachable bar: reference quality far above anything
+        assert_eq!(cost_savings_at_matched_quality(&curve, (0.01, 5.0), 0.0), None);
+        // degenerate reference cost
+        assert_eq!(cost_savings_at_matched_quality(&curve, (0.0, 0.9), 0.0), None);
+    }
+
+    #[test]
     fn summed_auc_adds() {
         let samples = mk_samples();
-        let policy = BudgetPolicy::from_costs(vec![0.001, 0.01]);
+        let policy = RoutePolicy::from_costs(vec![0.001, 0.01]);
         let router = FixedRouter(vec![0.2, 0.9]);
         let c1 = evaluate_router(&router, &samples, &mk_embeddings(10), &policy, "a");
         let c2 = c1.clone();

@@ -1,0 +1,728 @@
+//! Deterministic scenario matrix: routing methods × serving scenarios.
+//!
+//! A `dsfb-fusion-bench`-style runner: every cell of the matrix is a
+//! named metric computed from a **seeded** configuration, so identical
+//! seeds reproduce identical CSV/JSON outputs byte-for-byte (the
+//! `scenario_matrix` bench runs the matrix twice and diffs the
+//! artifacts). Scenarios stress the parts of the serving story a single
+//! cost-quality curve hides:
+//!
+//! - **baseline** — the §3 protocol on one dataset, all routing methods;
+//! - **drift** — user preference between the top-2 models flips mid-way
+//!   through the feedback stream; measures how much online `update`
+//!   recovers versus a frozen router (`adaptation_gain`);
+//! - **cold_start** — all feedback involving the `mbpp` specialist is
+//!   withheld, then replayed (`recovery_gain`);
+//! - **burst_skew** — topic-sorted bursty ingest across K=4 hash shards;
+//!   checks the bit-identical-scores claim under pathological arrival
+//!   order (`score_divergence` must be exactly 0) plus shard imbalance;
+//! - **adversarial** — seeded garbage and valid lines interleaved through
+//!   the real wire protocol ([`ServerState::handle_lines`]), plus a
+//!   durable delta-log corruption/recovery pass through the real frame
+//!   codec.
+//!
+//! Methods are the [`PolicySpec`] families plus two references:
+//! `budget`, `cost_aware`, `threshold`, `cheapest`, `best_single`.
+//! Metric families are emitted as `scenario.<scenario>.<method>.<metric>`
+//! for `BENCH_scenario_matrix.json`, which CI feeds into the `bench-diff`
+//! trend gate (`auc` and `*_ratio` names carry gating direction).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::config::{EagleParams, EpochParams, ShardParams};
+use crate::coordinator::durable::{DurableOptions, DurableStore, StoreMeta};
+use crate::coordinator::policy::{approx_tokens, PolicySpec, RoutePolicy};
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::router::{EagleRouter, Observation};
+use crate::coordinator::sharded::{shard_of, ShardedRouter};
+use crate::elo::Outcome;
+use crate::embedding::{BatcherOptions, EmbedService};
+use crate::json::{self, Value};
+use crate::metrics::Metrics;
+use crate::routerbench::models::model_index;
+use crate::routerbench::Sample;
+use crate::server::protocol::Response;
+use crate::server::ServerState;
+use crate::util::{l2_normalize, Rng};
+use crate::vectordb::flat::FlatStore;
+
+use super::harness::{bench_data_params, EmbedderRig, Experiment};
+use super::{cost_savings_at_matched_quality, single_model_point, CostQualityCurve, CurvePoint};
+
+/// Bumped whenever the JSON artifact layout changes.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Routing methods evaluated in every quality scenario.
+pub const METHODS: &[&str] = &["budget", "cost_aware", "threshold", "cheapest", "best_single"];
+
+/// All scenarios, in run order.
+pub const SCENARIOS: &[&str] = &["baseline", "drift", "cold_start", "burst_skew", "adversarial"];
+
+/// Quality tolerance for the cost-savings-at-matched-quality metric:
+/// routers must reach 95% of the best single model's quality.
+const MATCH_TOLERANCE: f64 = 0.05;
+
+/// Threshold sweep for the calibrated-threshold method (its cost axis).
+const THRESHOLDS: &[f64] = &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+const SHARD_HASH_SEED: u64 = 0xEA61E;
+
+/// Seeded matrix configuration: everything downstream derives from it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioConfig {
+    /// Master seed: drives data generation, the adversarial line mix,
+    /// and the durable corruption history.
+    pub seed: u64,
+    /// Prompts per RouterBench dataset (the smoke default keeps the full
+    /// matrix under a couple of seconds).
+    pub per_dataset: usize,
+}
+
+impl ScenarioConfig {
+    /// CI smoke configuration (also the bench default).
+    pub fn smoke() -> ScenarioConfig {
+        ScenarioConfig { seed: 7, per_dataset: 72 }
+    }
+
+    /// Heavier local configuration for report-quality numbers.
+    pub fn full() -> ScenarioConfig {
+        ScenarioConfig { seed: 7, per_dataset: 240 }
+    }
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig::smoke()
+    }
+}
+
+/// One matrix cell: `(scenario, method, metric) -> value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub scenario: String,
+    pub method: String,
+    pub metric: String,
+    pub value: f64,
+}
+
+/// The completed matrix, cells sorted by `(scenario, method, metric)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixResult {
+    pub seed: u64,
+    pub per_dataset: usize,
+    pub cells: Vec<Cell>,
+}
+
+impl MatrixResult {
+    /// Look up one cell's value.
+    pub fn get(&self, scenario: &str, method: &str, metric: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.method == method && c.metric == metric)
+            .map(|c| c.value)
+    }
+
+    /// Stable CSV rendering (`scenario,method,metric,value`, sorted).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("scenario,method,metric,value\n");
+        for c in &self.cells {
+            out.push_str(&format!("{},{},{},{}\n", c.scenario, c.method, c.metric, c.value));
+        }
+        out
+    }
+
+    /// Stable JSON rendering (BTreeMap-ordered keys, sorted cells).
+    pub fn to_json(&self) -> String {
+        let cells: Vec<Value> = self
+            .cells
+            .iter()
+            .map(|c| {
+                json::obj(vec![
+                    ("scenario", json::str_v(&c.scenario)),
+                    ("method", json::str_v(&c.method)),
+                    ("metric", json::str_v(&c.metric)),
+                    ("value", json::num(c.value)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("schema_version", json::num(f64::from(SCHEMA_VERSION))),
+            ("seed", json::num(self.seed as f64)),
+            ("per_dataset", json::num(self.per_dataset as f64)),
+            ("cells", Value::Arr(cells)),
+        ])
+        .to_json()
+    }
+
+    /// Flat metric names for `BENCH_scenario_matrix.json`:
+    /// `scenario.<scenario>.<method>.<metric>`.
+    pub fn metrics(&self) -> Vec<(String, f64)> {
+        self.cells
+            .iter()
+            .map(|c| (format!("scenario.{}.{}.{}", c.scenario, c.method, c.metric), c.value))
+            .collect()
+    }
+
+    /// Write `scenario_summary.csv` and `scenario_matrix.json` into `dir`;
+    /// returns the two paths.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<(PathBuf, PathBuf)> {
+        let csv = dir.join("scenario_summary.csv");
+        let jsonp = dir.join("scenario_matrix.json");
+        std::fs::write(&csv, self.to_csv())?;
+        std::fs::write(&jsonp, self.to_json())?;
+        Ok((csv, jsonp))
+    }
+}
+
+/// Run the full matrix. Deterministic: same config, same cells.
+pub fn run_matrix(cfg: &ScenarioConfig) -> MatrixResult {
+    let rig = EmbedderRig::hash();
+    let exp = Experiment::build(&bench_data_params(cfg.seed, cfg.per_dataset), &rig);
+    let mut cells = Vec::new();
+    baseline_cells(&exp, &mut cells);
+    drift_cells(&exp, &mut cells);
+    cold_start_cells(&exp, &mut cells);
+    burst_skew_cells(&exp, &mut cells);
+    adversarial_cells(cfg, &mut cells);
+    cells.sort_by(|a, b| {
+        (&a.scenario, &a.method, &a.metric).cmp(&(&b.scenario, &b.method, &b.metric))
+    });
+    MatrixResult { seed: cfg.seed, per_dataset: cfg.per_dataset, cells }
+}
+
+fn cell(scenario: &str, method: &str, metric: &str, value: f64) -> Cell {
+    Cell {
+        scenario: scenario.into(),
+        method: method.into(),
+        metric: metric.into(),
+        value,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// method evaluation
+// ---------------------------------------------------------------------------
+
+/// Best single model on a test split: highest mean quality, ties to the
+/// cheaper mean cost.
+fn best_single_model(test: &[Sample]) -> usize {
+    let m = test.first().map(|s| s.quality.len()).unwrap_or(1);
+    (0..m)
+        .max_by(|&a, &b| {
+            let (ca, qa) = single_model_point(test, a);
+            let (cb, qb) = single_model_point(test, b);
+            qa.partial_cmp(&qb).unwrap().then(cb.partial_cmp(&ca).unwrap())
+        })
+        .unwrap_or(0)
+}
+
+/// Mean cost/quality of routing every test sample through `choose`.
+fn sweep_point(
+    axis: f64,
+    test: &[Sample],
+    mut choose: impl FnMut(usize) -> usize,
+) -> CurvePoint {
+    let n = test.len().max(1) as f64;
+    let mut cost = 0.0;
+    let mut quality = 0.0;
+    for (i, s) in test.iter().enumerate() {
+        let m = choose(i);
+        cost += s.cost[m] as f64;
+        quality += s.quality[m] as f64;
+    }
+    CurvePoint { budget: axis, mean_cost: cost / n, mean_quality: quality / n }
+}
+
+/// Cost-quality curve of one routing method over precomputed scores.
+/// The sweep axis is the budget for budget-family methods and the
+/// threshold for the calibrated-threshold method; single-choice
+/// references collapse to one point.
+fn method_curve(
+    method: &str,
+    scores: &[Vec<f64>],
+    test: &[Sample],
+    policy: &RoutePolicy,
+) -> CostQualityCurve {
+    assert_eq!(scores.len(), test.len(), "score/sample mismatch");
+    let points = match method {
+        "budget" | "cost_aware" => policy
+            .budget_sweep()
+            .into_iter()
+            .map(|budget| {
+                let spec = if method == "budget" {
+                    PolicySpec::Budget { budget }
+                } else {
+                    PolicySpec::CostAware { budget }
+                };
+                sweep_point(budget, test, |i| {
+                    policy.select_spec(&scores[i], spec, approx_tokens(&test[i].text))
+                })
+            })
+            .collect(),
+        "threshold" => THRESHOLDS
+            .iter()
+            .map(|&threshold| {
+                let spec = PolicySpec::Threshold { threshold };
+                sweep_point(threshold, test, |i| {
+                    policy.select_spec(&scores[i], spec, approx_tokens(&test[i].text))
+                })
+            })
+            .collect(),
+        "cheapest" => vec![sweep_point(0.0, test, |_| policy.cheapest())],
+        "best_single" => {
+            let best = best_single_model(test);
+            vec![sweep_point(0.0, test, |_| best)]
+        }
+        other => panic!("unknown method {other}"),
+    };
+    CostQualityCurve { router: method.to_string(), dataset: "scenario".into(), points }
+}
+
+/// Emit `auc` and `cost_savings_ratio` cells for every method.
+fn push_method_cells(
+    scenario: &str,
+    scores: &[Vec<f64>],
+    test: &[Sample],
+    policy: &RoutePolicy,
+    cells: &mut Vec<Cell>,
+) {
+    let reference = single_model_point(test, best_single_model(test));
+    for method in METHODS {
+        let curve = method_curve(method, scores, test, policy);
+        cells.push(cell(scenario, method, "auc", curve.auc()));
+        let savings =
+            cost_savings_at_matched_quality(&curve, reference, MATCH_TOLERANCE).unwrap_or(0.0);
+        cells.push(cell(scenario, method, "cost_savings_ratio", savings));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenarios
+// ---------------------------------------------------------------------------
+
+/// Primary dataset for baseline / drift / burst_skew (mmlu).
+const PRIMARY_SPLIT: usize = 0;
+/// Specialist dataset for cold_start (mbpp).
+const CODE_SPLIT: usize = 5;
+
+fn baseline_cells(exp: &Experiment, cells: &mut Vec<Cell>) {
+    let router = exp.fit_eagle(PRIMARY_SPLIT, EagleParams::default(), 1.0);
+    let scores = router.score_batch(&exp.test_emb[PRIMARY_SPLIT]);
+    push_method_cells(
+        "baseline",
+        &scores,
+        &exp.split(PRIMARY_SPLIT).test,
+        &exp.policy,
+        cells,
+    );
+}
+
+/// Top-2 models by mean quality on a train split (descending).
+fn top2_models(train: &[Sample]) -> (usize, usize) {
+    let m = train.first().map(|s| s.quality.len()).unwrap_or(2);
+    let mut means: Vec<(f64, usize)> = (0..m)
+        .map(|j| {
+            let q =
+                train.iter().map(|s| s.quality[j] as f64).sum::<f64>() / train.len().max(1) as f64;
+            (q, j)
+        })
+        .collect();
+    means.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    (means[0].1, means[1].1)
+}
+
+fn drift_cells(exp: &Experiment, cells: &mut Vec<Cell>) {
+    let split = exp.split(PRIMARY_SPLIT);
+    let (hi, lo) = top2_models(&split.train);
+    let obs = exp.observations(PRIMARY_SPLIT, 1.0);
+    let half = obs.len() / 2;
+    let dim = exp.train_emb[PRIMARY_SPLIT].first().map(|v| v.len()).unwrap_or(256);
+
+    // the post-drift regime: the top-2 models swap quality
+    let drifted_test: Vec<Sample> = split
+        .test
+        .iter()
+        .map(|s| {
+            let mut s = s.clone();
+            s.quality.swap(hi, lo);
+            s
+        })
+        .collect();
+
+    // frozen router: trained on the pre-drift half only
+    let mut router = EagleRouter::fit(
+        EagleParams::default(),
+        exp.n_models(),
+        FlatStore::with_capacity(dim, obs.len()),
+        &obs[..half],
+    );
+    let frozen_scores = router.score_batch(&exp.test_emb[PRIMARY_SPLIT]);
+    let auc_frozen =
+        method_curve("budget", &frozen_scores, &drifted_test, &exp.policy).auc();
+
+    // adapted router: sees the second half with outcomes between the
+    // top-2 models flipped (the drifted preference stream)
+    let drifted_tail: Vec<Observation> = obs[half..]
+        .iter()
+        .map(|o| {
+            let mut o = o.clone();
+            for c in &mut o.comparisons {
+                if (c.a == hi && c.b == lo) || (c.a == lo && c.b == hi) {
+                    c.outcome = match c.outcome {
+                        Outcome::WinA => Outcome::WinB,
+                        Outcome::WinB => Outcome::WinA,
+                        Outcome::Draw => Outcome::Draw,
+                    };
+                }
+            }
+            o
+        })
+        .collect();
+    router.update(&drifted_tail);
+    let adapted_scores = router.score_batch(&exp.test_emb[PRIMARY_SPLIT]);
+
+    push_method_cells("drift", &adapted_scores, &drifted_test, &exp.policy, cells);
+    let auc_adapted = method_curve("budget", &adapted_scores, &drifted_test, &exp.policy).auc();
+    cells.push(cell("drift", "budget", "auc_frozen", auc_frozen));
+    cells.push(cell("drift", "budget", "adaptation_gain", auc_adapted - auc_frozen));
+}
+
+fn cold_start_cells(exp: &Experiment, cells: &mut Vec<Cell>) {
+    let split = exp.split(CODE_SPLIT);
+    let specialist = model_index("code-llama-34b").expect("roster has the code specialist");
+    let all = exp.observations(CODE_SPLIT, 1.0);
+    let dim = exp.train_emb[CODE_SPLIT].first().map(|v| v.len()).unwrap_or(256);
+
+    // withhold every comparison touching the specialist...
+    let mut cold = Vec::with_capacity(all.len());
+    let mut withheld = Vec::new();
+    for o in &all {
+        let (keep, drop): (Vec<_>, Vec<_>) = o
+            .comparisons
+            .iter()
+            .copied()
+            .partition(|c| c.a != specialist && c.b != specialist);
+        if !keep.is_empty() {
+            cold.push(Observation { embedding: o.embedding.clone(), comparisons: keep });
+        }
+        if !drop.is_empty() {
+            withheld.push(Observation { embedding: o.embedding.clone(), comparisons: drop });
+        }
+    }
+
+    let mut router = EagleRouter::fit(
+        EagleParams::default(),
+        exp.n_models(),
+        FlatStore::with_capacity(dim, all.len()),
+        &cold,
+    );
+    let cold_scores = router.score_batch(&exp.test_emb[CODE_SPLIT]);
+    let auc_cold = method_curve("budget", &cold_scores, &split.test, &exp.policy).auc();
+
+    // ...then replay the withheld records (the specialist warms up)
+    router.update(&withheld);
+    let warm_scores = router.score_batch(&exp.test_emb[CODE_SPLIT]);
+
+    push_method_cells("cold_start", &warm_scores, &split.test, &exp.policy, cells);
+    let auc_warm = method_curve("budget", &warm_scores, &split.test, &exp.policy).auc();
+    cells.push(cell("cold_start", "budget", "auc_cold", auc_cold));
+    cells.push(cell("cold_start", "budget", "recovery_gain", auc_warm - auc_cold));
+}
+
+fn burst_skew_cells(exp: &Experiment, cells: &mut Vec<Cell>) {
+    const K: usize = 4;
+    let split = exp.split(PRIMARY_SPLIT);
+    let dim = exp.train_emb[PRIMARY_SPLIT].first().map(|v| v.len()).unwrap_or(256);
+    let obs = exp.observations(PRIMARY_SPLIT, 1.0);
+
+    // bursty arrival: all of topic 0, then all of topic 1, ... (stable
+    // within a topic). Observation i belongs to train prompt i only when
+    // every prompt has feedback; recover the topic through the index map.
+    let mut order: Vec<usize> = (0..obs.len()).collect();
+    order.sort_by_key(|&i| (split.train[i].topic, i));
+    let bursty: Vec<Observation> = order.iter().map(|&i| obs[i].clone()).collect();
+
+    let cadence = EpochParams { publish_every: 64, publish_interval_ms: 60_000 };
+    let shards = ShardParams { count: K, hash_seed: SHARD_HASH_SEED };
+    let mut sharded =
+        ShardedRouter::new(EagleParams::default(), exp.n_models(), dim, cadence, shards);
+    let mut per_shard = [0usize; K];
+    for o in &bursty {
+        per_shard[shard_of(&o.embedding, SHARD_HASH_SEED, K)] += 1;
+        sharded.observe(o.clone());
+    }
+    sharded.publish_all();
+    let snap = sharded.handle().load();
+    let scores = snap.score_batch(&exp.test_emb[PRIMARY_SPLIT]);
+
+    // reference: a flat router fed the identical stream
+    let flat = EagleRouter::fit(
+        EagleParams::default(),
+        exp.n_models(),
+        FlatStore::with_capacity(dim, bursty.len()),
+        &bursty,
+    );
+    let flat_scores = flat.score_batch(&exp.test_emb[PRIMARY_SPLIT]);
+    let divergence = scores
+        .iter()
+        .flatten()
+        .zip(flat_scores.iter().flatten())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    let max_shard = per_shard.iter().copied().max().unwrap_or(0);
+    let imbalance = max_shard as f64 * K as f64 / bursty.len().max(1) as f64;
+
+    push_method_cells("burst_skew", &scores, &split.test, &exp.policy, cells);
+    cells.push(cell("burst_skew", "sharded", "score_divergence", divergence));
+    cells.push(cell("burst_skew", "sharded", "shard_imbalance", imbalance));
+}
+
+// ---------------------------------------------------------------------------
+// adversarial
+// ---------------------------------------------------------------------------
+
+/// One deterministically-garbled line: every variant must be a parse
+/// reject (the scenario asserts errors == garbage lines).
+fn garbage_line(rng: &mut Rng, i: usize) -> String {
+    match rng.below(7) {
+        0 => format!("!!not json at all {i}"),
+        1 => {
+            // truncated valid request
+            let full = format!("{{\"op\":\"route\",\"text\":\"q{i}\",\"budget\":0.01}}");
+            full[..full.len() - 3].to_string()
+        }
+        2 => format!("{{\"op\":\"warp\",\"text\":\"q{i}\"}}"),
+        3 => "{\"v\":3,\"op\":\"ping\"}".to_string(),
+        4 => format!("{{\"v\":2,\"op\":\"ping\",\"junk\":{i}}}"),
+        5 => "[1,2,3]".to_string(),
+        _ => format!("{{\"v\":2,\"op\":\"route\",\"text\":\"q{i}\",\"threshold\":0.5}}"),
+    }
+}
+
+/// A deterministically-valid line exercising v1, v2 policies, hello and
+/// feedback through the real codec.
+fn valid_line(rng: &mut Rng, i: usize, registry: &ModelRegistry) -> String {
+    match rng.below(6) {
+        0 => format!("{{\"op\":\"route\",\"text\":\"adv query {i}\",\"budget\":0.01}}"),
+        1 => format!(
+            "{{\"v\":2,\"op\":\"route\",\"text\":\"adv query {i}\",\"policy\":\"cost_aware\",\"budget\":0.02}}"
+        ),
+        2 => format!(
+            "{{\"v\":2,\"op\":\"route\",\"text\":\"adv query {i}\",\"policy\":\"threshold\",\"threshold\":0.6}}"
+        ),
+        3 => "{\"v\":2,\"op\":\"hello\"}".to_string(),
+        4 => format!("{{\"v\":2,\"op\":\"route_batch\",\"texts\":[\"adv a {i}\",\"adv b {i}\"]}}"),
+        _ => {
+            let a = rng.below(registry.len());
+            let mut b = rng.below(registry.len() - 1);
+            if b >= a {
+                b += 1;
+            }
+            format!(
+                "{{\"op\":\"feedback\",\"text\":\"adv fb {i}\",\"model_a\":\"{}\",\"model_b\":\"{}\",\"score_a\":1}}",
+                registry.entry(a).name,
+                registry.entry(b).name
+            )
+        }
+    }
+}
+
+/// Wire half of the adversarial scenario: a seeded mix of garbage and
+/// valid lines through [`ServerState::handle_lines`] (hash embedder, no
+/// TCP — the parse/dispatch/reply path is identical).
+fn adversarial_wire_cells(cfg: &ScenarioConfig, cells: &mut Vec<Cell>) {
+    const DIM: usize = 64;
+    const LINES: usize = 320;
+    let metrics = Arc::new(Metrics::new());
+    let service = EmbedService::start_hash(
+        DIM,
+        BatcherOptions { batch_window_us: 50, max_batch: 16 },
+        metrics.clone(),
+    );
+    let registry = ModelRegistry::routerbench();
+    let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(DIM));
+    let state = ServerState::builder(router, registry.clone(), service.handle(), metrics)
+        .epoch(EpochParams { publish_every: 32, publish_interval_ms: 60_000 })
+        .build();
+
+    let mut rng = Rng::new(cfg.seed ^ 0xAD5E_11E5);
+    let mut lines = Vec::with_capacity(LINES);
+    let mut garbage = 0usize;
+    for i in 0..LINES {
+        if rng.chance(0.4) {
+            garbage += 1;
+            lines.push(garbage_line(&mut rng, i));
+        } else {
+            lines.push(valid_line(&mut rng, i, &registry));
+        }
+    }
+
+    let mut srv_rng = Rng::new(cfg.seed ^ 0x5E7E_C7ED);
+    let mut errors = 0usize;
+    for unit in lines.chunks(8) {
+        for resp in state.handle_lines(unit, &mut srv_rng) {
+            if matches!(resp, Response::Error(_)) {
+                errors += 1;
+            }
+        }
+    }
+    state.ingest.shutdown();
+
+    // every garbage line errors, every valid line succeeds — anything
+    // else is a protocol bug, surfaced as survived = 0
+    let survived = f64::from(u8::from(errors == garbage));
+    cells.push(cell("adversarial", "wire", "error_reply_rate", errors as f64 / LINES as f64));
+    cells.push(cell("adversarial", "wire", "survived", survived));
+}
+
+/// Durable half: append a seeded history through the real frame codec,
+/// flip one byte at the tail of a delta log, and measure how much of the
+/// history recovery salvages.
+fn adversarial_durable_cells(cfg: &ScenarioConfig, cells: &mut Vec<Cell>) {
+    const DIM: usize = 16;
+    const K: usize = 2;
+    const N: usize = 120;
+    let n_models = ModelRegistry::routerbench().len();
+    let dir = std::env::temp_dir()
+        .join(format!("eagle_scenario_durable_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let meta = StoreMeta {
+        params: EagleParams::default(),
+        n_models,
+        dim: DIM,
+        shards: ShardParams { count: K, hash_seed: SHARD_HASH_SEED },
+    };
+    let opts = DurableOptions { seal_bytes: 1 << 20, fsync: false };
+    let store = DurableStore::create(&dir, meta, opts.clone()).expect("create durable store");
+    let mut writers: Vec<_> = (0..K).map(|s| store.lane_writer(s).expect("lane writer")).collect();
+
+    let mut rng = Rng::new(cfg.seed ^ 0xD15C_C0DE);
+    for gid in 0..N {
+        let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+        l2_normalize(&mut v);
+        let a = rng.below(n_models);
+        let mut b = rng.below(n_models - 1);
+        if b >= a {
+            b += 1;
+        }
+        let outcome = match rng.below(3) {
+            0 => Outcome::WinA,
+            1 => Outcome::WinB,
+            _ => Outcome::Draw,
+        };
+        let obs = Observation::single(v, crate::elo::Comparison { a, b, outcome });
+        let shard = shard_of(&obs.embedding, SHARD_HASH_SEED, K);
+        writers[shard].append(gid as u32, &obs).expect("append");
+        if gid == N / 2 {
+            writers[0].seal().expect("seal");
+        }
+    }
+    for w in &mut writers {
+        w.sync().expect("sync");
+    }
+    drop(writers);
+    drop(store);
+
+    // flip the last byte of shard 0's newest non-empty delta log: the
+    // final frame's checksum breaks and recovery must drop exactly the
+    // torn tail, keeping everything before it
+    let shard_dir = dir.join("shard-0");
+    let mut logs: Vec<PathBuf> = std::fs::read_dir(&shard_dir)
+        .expect("read shard dir")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.starts_with("delta-"))
+                && p.metadata().map(|m| m.len() > 0).unwrap_or(false)
+        })
+        .collect();
+    logs.sort();
+    let target = logs.last().expect("a non-empty delta log to corrupt");
+    let mut bytes = std::fs::read(target).expect("read delta log");
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(target, bytes).expect("write corrupted log");
+
+    let (recovered, ratio) = match DurableStore::open(&dir, opts) {
+        Ok((_store, recovery)) => {
+            let total = recovery.total_records();
+            let cadence = EpochParams { publish_every: 64, publish_interval_ms: 60_000 };
+            let ok = recovery.into_router(cadence).is_ok();
+            (f64::from(u8::from(ok)), total as f64 / N as f64)
+        }
+        Err(_) => (0.0, 0.0),
+    };
+    let _ = std::fs::remove_dir_all(&dir);
+
+    cells.push(cell("adversarial", "durable", "recovered_ratio", ratio));
+    cells.push(cell("adversarial", "durable", "survived", recovered));
+}
+
+fn adversarial_cells(cfg: &ScenarioConfig, cells: &mut Vec<Cell>) {
+    adversarial_wire_cells(cfg, cells);
+    adversarial_durable_cells(cfg, cells);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_sort_render_and_lookup() {
+        let r = MatrixResult {
+            seed: 1,
+            per_dataset: 2,
+            cells: vec![
+                cell("a", "m", "auc", 0.5),
+                cell("a", "m", "cost_savings_ratio", 0.25),
+            ],
+        };
+        assert_eq!(r.get("a", "m", "auc"), Some(0.5));
+        assert_eq!(r.get("a", "m", "nope"), None);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("scenario,method,metric,value\n"));
+        assert!(csv.contains("a,m,auc,0.5\n"));
+        let doc = json::parse(&r.to_json()).unwrap();
+        assert_eq!(doc.get("schema_version").as_f64(), Some(1.0));
+        assert_eq!(doc.get("cells").as_arr().unwrap().len(), 2);
+        let names: Vec<String> = r.metrics().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(names[0], "scenario.a.m.auc");
+    }
+
+    #[test]
+    fn matrix_runs_deterministically_and_covers_every_cell() {
+        let cfg = ScenarioConfig { seed: 11, per_dataset: 40 };
+        let first = run_matrix(&cfg);
+        let second = run_matrix(&cfg);
+        assert_eq!(first.to_csv(), second.to_csv(), "CSV must be seed-stable");
+        assert_eq!(first.to_json(), second.to_json(), "JSON must be seed-stable");
+
+        // every quality scenario × method has both gated metrics
+        for scenario in ["baseline", "drift", "cold_start", "burst_skew"] {
+            for method in METHODS {
+                let auc = first.get(scenario, method, "auc").unwrap();
+                assert!((0.0..=1.0).contains(&auc), "{scenario}/{method} auc = {auc}");
+                assert!(
+                    first.get(scenario, method, "cost_savings_ratio").is_some(),
+                    "{scenario}/{method} missing cost_savings_ratio"
+                );
+            }
+        }
+
+        // sharded scoring is bit-identical even under bursty skew
+        assert_eq!(first.get("burst_skew", "sharded", "score_divergence"), Some(0.0));
+        let imb = first.get("burst_skew", "sharded", "shard_imbalance").unwrap();
+        assert!(imb >= 1.0, "max/mean shard load must be >= 1, got {imb}");
+
+        // the wire survived the garbage mix and rejected exactly it
+        assert_eq!(first.get("adversarial", "wire", "survived"), Some(1.0));
+        let err = first.get("adversarial", "wire", "error_reply_rate").unwrap();
+        assert!(err > 0.0 && err < 1.0, "error rate {err}");
+
+        // corruption lost only the torn tail
+        assert_eq!(first.get("adversarial", "durable", "survived"), Some(1.0));
+        let ratio = first.get("adversarial", "durable", "recovered_ratio").unwrap();
+        assert!(ratio > 0.9 && ratio <= 1.0, "recovered {ratio}");
+    }
+}

@@ -6,8 +6,20 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::protocol::{encode_response, parse_response, Response, RouteReply};
+use super::protocol::{
+    encode_request, encode_response, parse_response, Request, Response, RouteReply,
+};
+use crate::coordinator::policy::PolicySpec;
 use crate::json::{self, Value};
+
+/// A server's advertised capabilities (the v2 `hello` op).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerHello {
+    pub version: u32,
+    pub ops: Vec<String>,
+    pub policies: Vec<String>,
+    pub max_route_batch: usize,
+}
 
 /// A routed decision as seen by the client.
 #[derive(Debug, Clone, PartialEq)]
@@ -45,15 +57,34 @@ impl EagleClient {
         parse_response(&resp).map_err(|e| anyhow!("{e}"))
     }
 
-    /// Route a query under a budget.
+    /// Negotiate capabilities (the v2 `hello` op). Pre-v2 servers reply
+    /// with an error, which surfaces here — callers can fall back to the
+    /// v1 surface (`route` with a plain budget).
+    pub fn hello(&mut self) -> Result<ServerHello> {
+        match self.call(encode_request(&Request::Hello))? {
+            Response::Hello { version, ops, policies, max_route_batch } => {
+                Ok(ServerHello { version, ops, policies, max_route_batch })
+            }
+            Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Route a query under a budget (v1 wire shape — works against any
+    /// server version).
     pub fn route(&mut self, text: &str, budget: f64) -> Result<RouteDecision> {
-        let req = json::obj(vec![
-            ("op", json::str_v("route")),
-            ("text", json::str_v(text)),
-            ("budget", json::num(budget)),
-        ])
-        .to_json();
-        match self.call(req)? {
+        self.route_with(text, Some(PolicySpec::Budget { budget }))
+    }
+
+    /// Route a query under an explicit policy (`None` = the server's
+    /// default). Non-budget specs need a v2 server.
+    pub fn route_with(
+        &mut self,
+        text: &str,
+        spec: Option<PolicySpec>,
+    ) -> Result<RouteDecision> {
+        let req = Request::Route { text: text.to_string(), spec };
+        match self.call(encode_request(&req))? {
             Response::Routed { model, model_index, compare_with, expected_cost } => {
                 Ok(RouteDecision { model, model_index, compare_with, expected_cost })
             }
@@ -65,16 +96,20 @@ impl EagleClient {
     /// Route a batch of queries under one budget: a single round trip,
     /// one embed dispatch and one snapshot acquisition server-side.
     pub fn route_batch(&mut self, texts: &[&str], budget: f64) -> Result<Vec<RouteDecision>> {
-        let req = json::obj(vec![
-            ("op", json::str_v("route_batch")),
-            (
-                "texts",
-                Value::Arr(texts.iter().map(|t| json::str_v(t)).collect()),
-            ),
-            ("budget", json::num(budget)),
-        ])
-        .to_json();
-        match self.call(req)? {
+        self.route_batch_with(texts, Some(PolicySpec::Budget { budget }))
+    }
+
+    /// Batch variant of [`EagleClient::route_with`].
+    pub fn route_batch_with(
+        &mut self,
+        texts: &[&str],
+        spec: Option<PolicySpec>,
+    ) -> Result<Vec<RouteDecision>> {
+        let req = Request::RouteBatch {
+            texts: texts.iter().map(|t| t.to_string()).collect(),
+            spec,
+        };
+        match self.call(encode_request(&req))? {
             Response::RoutedBatch(replies) => Ok(replies
                 .into_iter()
                 .map(|r: RouteReply| RouteDecision {

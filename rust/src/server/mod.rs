@@ -57,10 +57,8 @@ use anyhow::Result;
 use crate::config::{EpochParams, IvfPublishParams, ShardParams};
 use crate::coordinator::durable::{DurableOptions, DurableStore};
 use crate::coordinator::feedback::{ComparisonSampler, RawVerdict};
-use crate::coordinator::ingest::{
-    IngestMetrics, IngestOptions, IngestPipeline, PersistSink, PersistTarget,
-};
-use crate::coordinator::policy::BudgetPolicy;
+use crate::coordinator::ingest::{IngestMetrics, IngestOptions, IngestPipeline, PersistTarget};
+use crate::coordinator::policy::{approx_tokens, PolicySpec, RoutePolicy};
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::router::EagleRouter;
 use crate::coordinator::sharded::{ShardedHandle, ShardedRouter, ShardedSnapshot};
@@ -107,9 +105,6 @@ pub struct ServerOptions {
     /// beat; a durable store still appends + seals inline and
     /// checkpoints on flush/admin/shutdown).
     pub persist_interval_ms: u64,
-    /// Legacy whole-JSON persistence target (falls back to the admin
-    /// snapshot path when unset). Ignored when `persist_dir` is set.
-    pub persist_path: Option<std::path::PathBuf>,
     /// Durable segment-store directory (`[persist] dir`). When set, the
     /// server recovers from it at startup if it exists (otherwise
     /// bootstraps it from the starting router), appends every ingested
@@ -136,7 +131,6 @@ impl Default for ServerOptions {
             shards: ShardParams::default(),
             ivf: IvfPublishParams::default(),
             persist_interval_ms: 0,
-            persist_path: None,
             persist_dir: None,
             seal_bytes: durable.seal_bytes,
             fsync: durable.fsync,
@@ -155,7 +149,10 @@ pub struct ServerState {
     /// feedback queue; never touched by route reads.
     pub ingest: IngestPipeline,
     pub registry: ModelRegistry,
-    pub policy: BudgetPolicy,
+    pub policy: RoutePolicy,
+    /// Policy applied to requests that don't pick one (v1 clients, bare
+    /// v2 routes) — `[policy]` config.
+    pub default_policy: PolicySpec,
     pub embed: EmbedHandle,
     pub metrics: Arc<Metrics>,
     pub sampler: ComparisonSampler,
@@ -172,65 +169,87 @@ pub struct ServerState {
     stop: AtomicBool,
 }
 
-impl ServerState {
-    pub fn new(
-        router: EagleRouter<FlatStore>,
-        registry: ModelRegistry,
-        embed: EmbedHandle,
-        metrics: Arc<Metrics>,
-    ) -> Self {
-        Self::with_options(router, registry, embed, metrics, ServerOptions::default())
+/// The one way to construct a [`ServerState`]: topology → options →
+/// policy → build. Replaces the old `new` / `with_epoch` /
+/// `with_topology` / `with_options` / `with_sharded` constructor sprawl.
+///
+/// ```no_run
+/// # use eagle::server::ServerState;
+/// # use eagle::coordinator::policy::PolicySpec;
+/// # let (router, registry, embed, metrics) = todo!();
+/// let state = ServerState::builder(router, registry, embed, metrics)
+///     .epoch(Default::default())
+///     .default_policy(PolicySpec::Budget { budget: 0.02 })
+///     .build();
+/// ```
+///
+/// Fine-grained setters (`epoch`, `shards`, `admission`, …) override the
+/// option block, so call [`ServerBuilder::options`] first when mixing.
+pub struct ServerBuilder {
+    router: EagleRouter<FlatStore>,
+    registry: ModelRegistry,
+    embed: EmbedHandle,
+    metrics: Arc<Metrics>,
+    opts: ServerOptions,
+    default_policy: PolicySpec,
+    snapshot_path: Option<std::path::PathBuf>,
+}
+
+impl ServerBuilder {
+    /// Snapshot-publication cadence (single shard unless
+    /// [`ServerBuilder::shards`] raises the count).
+    pub fn epoch(mut self, epoch: EpochParams) -> Self {
+        self.opts.epoch = epoch;
+        self
     }
 
-    /// Construct with an explicit snapshot-publication cadence (single
-    /// shard).
-    pub fn with_epoch(
-        router: EagleRouter<FlatStore>,
-        registry: ModelRegistry,
-        embed: EmbedHandle,
-        metrics: Arc<Metrics>,
-        epoch_params: EpochParams,
-    ) -> Self {
-        Self::with_options(
+    /// Sharding topology: the corpus is hash-partitioned across
+    /// `shards.count` shards; scoring is bit-identical at any count.
+    pub fn shards(mut self, shards: ShardParams) -> Self {
+        self.opts.shards = shards;
+        self
+    }
+
+    /// Replace the whole option block (config-driven start-up).
+    pub fn options(mut self, opts: ServerOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Admission-control knobs for the event-looped front-end.
+    pub fn admission(mut self, admission: Admission) -> Self {
+        self.opts.admission = admission;
+        self
+    }
+
+    /// Policy for requests that don't pick one (v1 clients, bare v2
+    /// routes). Defaults to an unconstrained budget policy.
+    pub fn default_policy(mut self, policy: PolicySpec) -> Self {
+        self.default_policy = policy;
+        self
+    }
+
+    /// Enable the admin `snapshot` op, persisting legacy JSON to `path`
+    /// (a durable store supersedes this — the op checkpoints the store).
+    pub fn snapshot_path(mut self, path: std::path::PathBuf) -> Self {
+        self.snapshot_path = Some(path);
+        self
+    }
+
+    /// Materialize the state: resolve the durable store (recover an
+    /// existing one, else bootstrap from the seed router), partition the
+    /// corpus, and start the ingest pipeline threads (one dispatcher +
+    /// one applier per shard).
+    pub fn build(self) -> ServerState {
+        let ServerBuilder {
             router,
             registry,
             embed,
             metrics,
-            ServerOptions { epoch: epoch_params, ..Default::default() },
-        )
-    }
-
-    /// Construct with an explicit cadence and sharding topology. The
-    /// corpus is hash-partitioned across `shard_params.count` shards;
-    /// scoring is bit-identical at any count.
-    pub fn with_topology(
-        router: EagleRouter<FlatStore>,
-        registry: ModelRegistry,
-        embed: EmbedHandle,
-        metrics: Arc<Metrics>,
-        epoch_params: EpochParams,
-        shard_params: ShardParams,
-    ) -> Self {
-        Self::with_options(
-            router,
-            registry,
-            embed,
-            metrics,
-            ServerOptions { epoch: epoch_params, shards: shard_params, ..Default::default() },
-        )
-    }
-
-    /// Construct with the full option set. With a `persist_dir`, the
-    /// durable store decides the starting state: an existing store is
-    /// recovered (the passed router only seeds a store that does not
-    /// exist yet — the migration path from legacy JSON snapshots).
-    pub fn with_options(
-        router: EagleRouter<FlatStore>,
-        registry: ModelRegistry,
-        embed: EmbedHandle,
-        metrics: Arc<Metrics>,
-        opts: ServerOptions,
-    ) -> Self {
+            opts,
+            default_policy,
+            snapshot_path,
+        } = self;
         let durable_opts =
             DurableOptions { seal_bytes: opts.seal_bytes.max(1), fsync: opts.fsync };
         let (writer, durable) = match &opts.persist_dir {
@@ -256,13 +275,36 @@ impl ServerState {
                 None,
             ),
         };
-        Self::with_sharded(writer, durable, registry, embed, metrics, opts)
+        ServerState::from_sharded(writer, durable, registry, embed, metrics, opts)
+            .finish(default_policy, snapshot_path)
+    }
+}
+
+impl ServerState {
+    /// Start building a state: topology → options → policy →
+    /// [`ServerBuilder::build`]. Defaults match `ServerOptions::default()`
+    /// with an unconstrained default policy.
+    pub fn builder(
+        router: EagleRouter<FlatStore>,
+        registry: ModelRegistry,
+        embed: EmbedHandle,
+        metrics: Arc<Metrics>,
+    ) -> ServerBuilder {
+        ServerBuilder {
+            router,
+            registry,
+            embed,
+            metrics,
+            opts: ServerOptions::default(),
+            default_policy: PolicySpec::unbounded(),
+            snapshot_path: None,
+        }
     }
 
-    /// Construct around an explicit sharded writer (recovered or
-    /// pre-partitioned) — this starts the ingest pipeline threads (one
-    /// dispatcher + one applier per shard).
-    pub fn with_sharded(
+    /// Wire a state around an explicit sharded writer (recovered or
+    /// pre-partitioned): install the kernel backend, attach the durable
+    /// sink, start the pipeline.
+    fn from_sharded(
         mut writer: ShardedRouter,
         durable: Option<Arc<DurableStore>>,
         registry: ModelRegistry,
@@ -278,29 +320,24 @@ impl ServerState {
         }
         writer.set_ivf(opts.ivf);
         let snapshots = writer.handle();
-        let interval = Duration::from_millis(opts.persist_interval_ms);
-        let persist = match (&durable, &opts.persist_path, opts.persist_interval_ms) {
-            // the durable store always rides the pipeline (inline
-            // appends); the interval only paces the checkpoint beat
-            (Some(store), _, _) => {
-                Some(PersistTarget { sink: PersistSink::Durable(store.clone()), interval })
-            }
-            (None, Some(path), ms) if ms > 0 => {
-                Some(PersistTarget { sink: PersistSink::Json(path.clone()), interval })
-            }
-            _ => None,
-        };
+        // the durable store always rides the pipeline (inline appends);
+        // the interval only paces the checkpoint beat
+        let persist = durable.as_ref().map(|store| PersistTarget {
+            store: store.clone(),
+            interval: Duration::from_millis(opts.persist_interval_ms),
+        });
         let ingest = IngestPipeline::start(
             writer,
             Some(embed.clone()),
             IngestOptions { epoch: opts.epoch, persist, ..Default::default() },
         );
-        let policy = BudgetPolicy::new(&registry);
+        let policy = RoutePolicy::new(&registry);
         ServerState {
             snapshots,
             ingest,
             registry,
             policy,
+            default_policy: PolicySpec::unbounded(),
             embed,
             metrics,
             sampler: ComparisonSampler::default(),
@@ -312,9 +349,13 @@ impl ServerState {
         }
     }
 
-    /// Enable the admin `snapshot` op, persisting to `path`.
-    pub fn with_snapshot_path(mut self, path: std::path::PathBuf) -> Self {
-        self.snapshot_path = Some(path);
+    fn finish(
+        mut self,
+        default_policy: PolicySpec,
+        snapshot_path: Option<std::path::PathBuf>,
+    ) -> Self {
+        self.default_policy = default_policy;
+        self.snapshot_path = snapshot_path;
         self
     }
 
@@ -349,15 +390,16 @@ impl ServerState {
     }
 
     /// Route a slab of texts: one embed round trip, one snapshot
-    /// acquisition, `texts.len()` scored decisions. `budgets` is parallel
-    /// to `texts`.
+    /// acquisition, `texts.len()` scored decisions. `specs` is parallel
+    /// to `texts` ([`PolicySpec`] is `Copy`, so per-query policies ride
+    /// the batch without allocating).
     fn route_many(
         &self,
         texts: &[&str],
-        budgets: &[f64],
+        specs: &[PolicySpec],
         rng: &mut Rng,
     ) -> Result<Vec<RouteReply>, String> {
-        debug_assert_eq!(texts.len(), budgets.len());
+        debug_assert_eq!(texts.len(), specs.len());
         let t0 = Instant::now();
         self.metrics.requests.add(texts.len() as u64);
         let embs = match self.embed.embed_many(texts) {
@@ -372,9 +414,9 @@ impl ServerState {
         let replies = snap
             .score_batch(&embs)
             .into_iter()
-            .zip(budgets)
-            .map(|(scores, &budget)| {
-                let choice = self.policy.select(&scores, budget);
+            .zip(specs.iter().zip(texts))
+            .map(|(scores, (&spec, text))| {
+                let choice = self.policy.select_spec(&scores, spec, approx_tokens(text));
                 let compare_with = self
                     .sampler
                     .pick_partner(rng, choice, ratings)
@@ -399,6 +441,7 @@ impl ServerState {
     pub fn handle(&self, req: Request, rng: &mut Rng) -> Response {
         match req {
             Request::Ping => Response::Pong,
+            Request::Hello => Response::hello(),
             Request::Snapshot => match (&self.durable, &self.snapshot_path) {
                 (Some(store), _) => {
                     // the durable store rides the op: flush + fsync every
@@ -447,8 +490,9 @@ impl ServerState {
                 requests: self.metrics.requests.get(),
                 feedback: self.metrics.feedback.get(),
             },
-            Request::Route { text, budget } => {
-                match self.route_many(&[text.as_str()], &[budget], rng) {
+            Request::Route { text, spec } => {
+                let spec = spec.unwrap_or(self.default_policy);
+                match self.route_many(&[text.as_str()], &[spec], rng) {
                     Ok(mut replies) => {
                         let r = replies.pop().expect("one reply per text");
                         Response::Routed {
@@ -461,10 +505,11 @@ impl ServerState {
                     Err(e) => Response::Error(e),
                 }
             }
-            Request::RouteBatch { texts, budget } => {
+            Request::RouteBatch { texts, spec } => {
+                let spec = spec.unwrap_or(self.default_policy);
                 let refs: Vec<&str> = texts.iter().map(|t| t.as_str()).collect();
-                let budgets = vec![budget; refs.len()];
-                match self.route_many(&refs, &budgets, rng) {
+                let specs = vec![spec; refs.len()];
+                match self.route_many(&refs, &specs, rng) {
                     Ok(replies) => Response::RoutedBatch(replies),
                     Err(e) => Response::Error(e),
                 }
@@ -507,19 +552,23 @@ impl ServerState {
         let parsed: Vec<Result<Request, String>> = lines.iter().map(|l| parse_request(l)).collect();
         let mut out: Vec<Option<Response>> = (0..lines.len()).map(|_| None).collect();
 
-        // co-batch the single routes (2+ makes the amortization worth it)
-        let routes: Vec<(usize, String, f64)> = parsed
+        // co-batch the single routes (2+ makes the amortization worth it);
+        // per-query specs resolve against the server default here, so the
+        // co-batched path and the one-off path pick identically
+        let routes: Vec<(usize, String, PolicySpec)> = parsed
             .iter()
             .enumerate()
             .filter_map(|(i, r)| match r {
-                Ok(Request::Route { text, budget }) => Some((i, text.clone(), *budget)),
+                Ok(Request::Route { text, spec }) => {
+                    Some((i, text.clone(), spec.unwrap_or(self.default_policy)))
+                }
                 _ => None,
             })
             .collect();
         if routes.len() >= 2 {
             let texts: Vec<&str> = routes.iter().map(|(_, t, _)| t.as_str()).collect();
-            let budgets: Vec<f64> = routes.iter().map(|(_, _, b)| *b).collect();
-            match self.route_many(&texts, &budgets, rng) {
+            let specs: Vec<PolicySpec> = routes.iter().map(|(_, _, s)| *s).collect();
+            match self.route_many(&texts, &specs, rng) {
                 Ok(replies) => {
                     for ((i, _, _), r) in routes.iter().zip(replies) {
                         out[*i] = Some(Response::Routed {
@@ -637,7 +686,6 @@ mod tests {
         assert_eq!(opts.shards, ShardParams::default());
         assert_eq!(opts.ivf, IvfPublishParams::default());
         assert_eq!(opts.persist_interval_ms, 0);
-        assert!(opts.persist_path.is_none());
         assert!(opts.persist_dir.is_none());
         let durable = DurableOptions::default();
         assert_eq!(opts.seal_bytes, durable.seal_bytes);

@@ -1,10 +1,13 @@
-//! Wire protocol: newline-delimited JSON over TCP.
+//! Wire protocol: newline-delimited JSON over TCP, versioned.
 //!
 //! Requests (client -> server), one JSON object per line:
 //!
 //! ```json
 //! {"op":"route","text":"...","budget":0.02}
-//! {"op":"route_batch","texts":["...","..."],"budget":0.02}
+//! {"v":2,"op":"hello"}
+//! {"v":2,"op":"route","text":"...","policy":"cost_aware","budget":0.02}
+//! {"v":2,"op":"route","text":"...","policy":"threshold","threshold":0.6}
+//! {"v":2,"op":"route_batch","texts":["...","..."],"budget":0.02}
 //! {"op":"feedback","text":"...","model_a":"gpt-4","model_b":"claude-v2","score_a":1.0}
 //! {"op":"stats"}
 //! {"op":"ping"}
@@ -12,25 +15,57 @@
 //!
 //! Responses mirror the request with `"ok":true` or carry
 //! `{"ok":false,"error":"..."}`.
+//!
+//! ## Versioning rules
+//!
+//! - **No `v` field, or `v:1`** — protocol v1, the PR 6 wire format,
+//!   parsed *leniently*: unknown fields are ignored, `budget` is
+//!   required on routes. v1 clients keep working bit-identically.
+//! - **`v:2`** — parsed *strictly*: unknown fields are rejected (so a
+//!   misspelled knob fails loudly instead of silently routing with the
+//!   default), `budget` becomes optional (`0`/absent means the server's
+//!   configured default policy), and routes may carry a `policy` name
+//!   (`budget`, `cost_aware`, `threshold`) plus its knobs.
+//! - **Any other `v`** — rejected with an error naming the supported
+//!   versions. Clients discover capabilities with the `hello` op, which
+//!   reports the version, op list, policy list and batch cap.
+//!
+//! New fields are only ever *added* to responses, never renamed or
+//! removed, so a v1 client parsing a v2 server's replies stays correct.
 
+use crate::coordinator::policy::PolicySpec;
 use crate::json::{self, Value};
+
+/// Current (maximum) protocol version.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Largest accepted `route_batch` request (also the cap on server-side
 /// pipelined batching); keeps one request from monopolizing the embedder.
 pub const MAX_ROUTE_BATCH: usize = 256;
 
+/// Op names advertised by `hello`, in stable order.
+pub const OPS: &[&str] =
+    &["hello", "route", "route_batch", "feedback", "stats", "ping", "snapshot"];
+
+/// Policy names advertised by `hello`, in stable order.
+pub const POLICIES: &[&str] = &["budget", "cost_aware", "threshold"];
+
 /// Parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Route { text: String, budget: f64 },
-    /// Batched routing: all texts share one budget; one embed round trip
-    /// and one snapshot acquisition serve the whole batch.
-    RouteBatch { texts: Vec<String>, budget: f64 },
+    /// `spec: None` means "use the server's configured default policy"
+    /// (only expressible in protocol v2).
+    Route { text: String, spec: Option<PolicySpec> },
+    /// Batched routing: all texts share one policy spec; one embed round
+    /// trip and one snapshot acquisition serve the whole batch.
+    RouteBatch { texts: Vec<String>, spec: Option<PolicySpec> },
     Feedback { text: String, model_a: String, model_b: String, score_a: f64 },
     Stats,
     Ping,
     /// Admin: persist router state to the server-configured snapshot path.
     Snapshot,
+    /// Capability discovery (v2): version, ops, policies, batch cap.
+    Hello,
 }
 
 /// One routed decision (shared by single and batch responses).
@@ -62,12 +97,47 @@ pub enum Response {
     Pong,
     /// Snapshot written: path + number of stored prompts.
     SnapshotSaved { path: String, entries: u64 },
+    /// Capability report for `hello`.
+    Hello {
+        version: u32,
+        ops: Vec<String>,
+        policies: Vec<String>,
+        max_route_batch: usize,
+    },
     Error(String),
 }
 
-/// Parse one request line.
+impl Response {
+    /// The server's capability report.
+    pub fn hello() -> Response {
+        Response::Hello {
+            version: PROTOCOL_VERSION,
+            ops: OPS.iter().map(|s| s.to_string()).collect(),
+            policies: POLICIES.iter().map(|s| s.to_string()).collect(),
+            max_route_batch: MAX_ROUTE_BATCH,
+        }
+    }
+}
+
+/// Parse one request line, dispatching on the `v` field per the
+/// versioning rules in the module docs.
 pub fn parse_request(line: &str) -> Result<Request, String> {
     let v = json::parse(line.trim()).map_err(|e| format!("bad json: {e}"))?;
+    let version = v.get("v");
+    if version.is_null() {
+        return parse_request_v1(&v);
+    }
+    match version.as_f64() {
+        Some(x) if x == 1.0 => parse_request_v1(&v),
+        Some(x) if x == 2.0 => parse_request_v2(&v),
+        Some(x) => Err(format!("unsupported protocol version {x} (supported: 1, 2)")),
+        None => Err("v must be a number".into()),
+    }
+}
+
+/// The PR 6 wire format, bit-identical: lenient about unknown fields,
+/// `budget` required on routes, no per-query policy choice.
+fn parse_request_v1(v: &Value) -> Result<Request, String> {
     match v.get("op").as_str() {
         Some("route") => {
             let text = v
@@ -79,48 +149,210 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             if !budget.is_finite() || budget < 0.0 {
                 return Err("route: budget must be a non-negative number".into());
             }
-            Ok(Request::Route { text, budget })
+            Ok(Request::Route { text, spec: Some(PolicySpec::Budget { budget }) })
         }
         Some("route_batch") => {
-            let texts: Vec<String> = v
-                .get("texts")
-                .as_arr()
-                .ok_or("route_batch: missing texts")?
-                .iter()
-                .map(|t| t.as_str().map(|s| s.to_string()))
-                .collect::<Option<_>>()
-                .ok_or("route_batch: texts must be strings")?;
-            if texts.is_empty() {
-                return Err("route_batch: texts must be non-empty".into());
-            }
-            if texts.len() > MAX_ROUTE_BATCH {
-                return Err(format!("route_batch: at most {MAX_ROUTE_BATCH} texts"));
-            }
+            let texts = parse_texts(v)?;
             let budget = v.get("budget").as_f64().ok_or("route_batch: missing budget")?;
             if !budget.is_finite() || budget < 0.0 {
                 return Err("route_batch: budget must be a non-negative number".into());
             }
-            Ok(Request::RouteBatch { texts, budget })
+            Ok(Request::RouteBatch { texts, spec: Some(PolicySpec::Budget { budget }) })
         }
-        Some("feedback") => Ok(Request::Feedback {
-            text: v.get("text").as_str().ok_or("feedback: missing text")?.to_string(),
-            model_a: v
-                .get("model_a")
-                .as_str()
-                .ok_or("feedback: missing model_a")?
-                .to_string(),
-            model_b: v
-                .get("model_b")
-                .as_str()
-                .ok_or("feedback: missing model_b")?
-                .to_string(),
-            score_a: v.get("score_a").as_f64().ok_or("feedback: missing score_a")?,
-        }),
+        Some("feedback") => parse_feedback_fields(v),
         Some("stats") => Ok(Request::Stats),
         Some("ping") => Ok(Request::Ping),
         Some("snapshot") => Ok(Request::Snapshot),
         Some(op) => Err(format!("unknown op '{op}'")),
         None => Err("missing op".into()),
+    }
+}
+
+/// Protocol v2: strict field validation, optional per-query policy.
+fn parse_request_v2(v: &Value) -> Result<Request, String> {
+    match v.get("op").as_str() {
+        Some("route") => {
+            check_fields(v, "route", &["v", "op", "text", "budget", "policy", "threshold"])?;
+            let text = v
+                .get("text")
+                .as_str()
+                .ok_or("route: missing text")?
+                .to_string();
+            Ok(Request::Route { text, spec: parse_spec(v, "route")? })
+        }
+        Some("route_batch") => {
+            check_fields(
+                v,
+                "route_batch",
+                &["v", "op", "texts", "budget", "policy", "threshold"],
+            )?;
+            let texts = parse_texts(v)?;
+            Ok(Request::RouteBatch { texts, spec: parse_spec(v, "route_batch")? })
+        }
+        Some("feedback") => {
+            check_fields(v, "feedback", &["v", "op", "text", "model_a", "model_b", "score_a"])?;
+            parse_feedback_fields(v)
+        }
+        Some("stats") => check_fields(v, "stats", &["v", "op"]).map(|_| Request::Stats),
+        Some("ping") => check_fields(v, "ping", &["v", "op"]).map(|_| Request::Ping),
+        Some("snapshot") => check_fields(v, "snapshot", &["v", "op"]).map(|_| Request::Snapshot),
+        Some("hello") => check_fields(v, "hello", &["v", "op"]).map(|_| Request::Hello),
+        Some(op) => Err(format!("unknown op '{op}'")),
+        None => Err("missing op".into()),
+    }
+}
+
+/// Strict v2 field check: any key outside `allowed` is an error, so a
+/// misspelled knob can't silently fall back to defaults.
+fn check_fields(v: &Value, op: &str, allowed: &[&str]) -> Result<(), String> {
+    let obj = v.as_obj().ok_or("request must be a json object")?;
+    for k in obj.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!("{op}: unknown field '{k}'"));
+        }
+    }
+    Ok(())
+}
+
+/// v2 policy fields -> spec. Absent policy *and* budget means "server
+/// default" (`None`); a bare budget selects the budget policy; the
+/// threshold policy requires its `threshold` knob.
+fn parse_spec(v: &Value, op: &str) -> Result<Option<PolicySpec>, String> {
+    let policy = v.get("policy");
+    let budget_field = v.get("budget");
+    let threshold_field = v.get("threshold");
+    if policy.is_null() && budget_field.is_null() && threshold_field.is_null() {
+        return Ok(None);
+    }
+    let mode = match policy.as_str() {
+        Some(m) => m,
+        None if policy.is_null() => "budget",
+        None => return Err(format!("{op}: policy must be a string")),
+    };
+    let budget = match budget_field.as_f64() {
+        Some(b) => {
+            if !b.is_finite() || b < 0.0 {
+                return Err(format!("{op}: budget must be a non-negative number"));
+            }
+            b
+        }
+        None if budget_field.is_null() => 0.0, // 0 == unconstrained
+        None => return Err(format!("{op}: budget must be a non-negative number")),
+    };
+    let threshold = match threshold_field.as_f64() {
+        Some(t) => {
+            if mode != "threshold" {
+                return Err(format!("{op}: threshold requires policy \"threshold\""));
+            }
+            t
+        }
+        None if threshold_field.is_null() => {
+            if mode == "threshold" {
+                return Err(format!("{op}: policy \"threshold\" requires a threshold"));
+            }
+            0.0
+        }
+        None => return Err(format!("{op}: threshold must be a number")),
+    };
+    PolicySpec::from_mode(mode, budget, threshold)
+        .map(Some)
+        .map_err(|e| format!("{op}: {e}"))
+}
+
+fn parse_texts(v: &Value) -> Result<Vec<String>, String> {
+    let texts: Vec<String> = v
+        .get("texts")
+        .as_arr()
+        .ok_or("route_batch: missing texts")?
+        .iter()
+        .map(|t| t.as_str().map(|s| s.to_string()))
+        .collect::<Option<_>>()
+        .ok_or("route_batch: texts must be strings")?;
+    if texts.is_empty() {
+        return Err("route_batch: texts must be non-empty".into());
+    }
+    if texts.len() > MAX_ROUTE_BATCH {
+        return Err(format!("route_batch: at most {MAX_ROUTE_BATCH} texts"));
+    }
+    Ok(texts)
+}
+
+fn parse_feedback_fields(v: &Value) -> Result<Request, String> {
+    Ok(Request::Feedback {
+        text: v.get("text").as_str().ok_or("feedback: missing text")?.to_string(),
+        model_a: v
+            .get("model_a")
+            .as_str()
+            .ok_or("feedback: missing model_a")?
+            .to_string(),
+        model_b: v
+            .get("model_b")
+            .as_str()
+            .ok_or("feedback: missing model_b")?
+            .to_string(),
+        score_a: v.get("score_a").as_f64().ok_or("feedback: missing score_a")?,
+    })
+}
+
+/// Serialize a request to one line (client side, no trailing newline).
+/// Emits v1 shapes for plain budget routes (any server understands them)
+/// and v2 shapes whenever a v2-only construct is used.
+pub fn encode_request(r: &Request) -> String {
+    match r {
+        Request::Route { text, spec } => {
+            let mut fields = vec![("op", json::str_v("route")), ("text", json::str_v(text))];
+            push_spec_fields(&mut fields, spec);
+            json::obj(fields).to_json()
+        }
+        Request::RouteBatch { texts, spec } => {
+            let items: Vec<Value> = texts.iter().map(|t| json::str_v(t)).collect();
+            let mut fields =
+                vec![("op", json::str_v("route_batch")), ("texts", Value::Arr(items))];
+            push_spec_fields(&mut fields, spec);
+            json::obj(fields).to_json()
+        }
+        Request::Feedback { text, model_a, model_b, score_a } => json::obj(vec![
+            ("op", json::str_v("feedback")),
+            ("text", json::str_v(text)),
+            ("model_a", json::str_v(model_a)),
+            ("model_b", json::str_v(model_b)),
+            ("score_a", json::num(*score_a)),
+        ])
+        .to_json(),
+        Request::Stats => json::obj(vec![("op", json::str_v("stats"))]).to_json(),
+        Request::Ping => json::obj(vec![("op", json::str_v("ping"))]).to_json(),
+        Request::Snapshot => json::obj(vec![("op", json::str_v("snapshot"))]).to_json(),
+        Request::Hello => {
+            json::obj(vec![("v", json::num(2.0)), ("op", json::str_v("hello"))]).to_json()
+        }
+    }
+}
+
+/// Emit the wire fields for a policy spec. Finite-budget `Budget` specs
+/// use the v1 shape; everything else needs v2.
+fn push_spec_fields(fields: &mut Vec<(&str, Value)>, spec: &Option<PolicySpec>) {
+    match spec {
+        None => fields.insert(0, ("v", json::num(2.0))),
+        Some(PolicySpec::Budget { budget }) if budget.is_finite() => {
+            fields.push(("budget", json::num(*budget)));
+        }
+        Some(PolicySpec::Budget { .. }) => {
+            // unbounded budget: v2's "budget 0 == unconstrained"
+            fields.insert(0, ("v", json::num(2.0)));
+            fields.push(("budget", json::num(0.0)));
+        }
+        Some(PolicySpec::CostAware { budget }) => {
+            fields.insert(0, ("v", json::num(2.0)));
+            if budget.is_finite() {
+                fields.push(("budget", json::num(*budget)));
+            }
+            fields.push(("policy", json::str_v("cost_aware")));
+        }
+        Some(PolicySpec::Threshold { threshold }) => {
+            fields.insert(0, ("v", json::num(2.0)));
+            fields.push(("policy", json::str_v("threshold")));
+            fields.push(("threshold", json::num(*threshold)));
+        }
     }
 }
 
@@ -175,6 +407,18 @@ pub fn encode_response(r: &Response) -> String {
             ("entries", json::num(*entries as f64)),
         ])
         .to_json(),
+        Response::Hello { version, ops, policies, max_route_batch } => {
+            let hello = json::obj(vec![
+                ("version", json::num(*version as f64)),
+                ("ops", Value::Arr(ops.iter().map(|s| json::str_v(s)).collect())),
+                (
+                    "policies",
+                    Value::Arr(policies.iter().map(|s| json::str_v(s)).collect()),
+                ),
+                ("max_route_batch", json::num(*max_route_batch as f64)),
+            ]);
+            json::obj(vec![("ok", Value::Bool(true)), ("hello", hello)]).to_json()
+        }
         Response::Error(msg) => {
             json::obj(vec![("ok", Value::Bool(false)), ("error", json::str_v(msg))]).to_json()
         }
@@ -194,6 +438,28 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
     }
     if v.get("accepted").as_bool() == Some(true) {
         return Ok(Response::FeedbackAccepted);
+    }
+    let hello = v.get("hello");
+    if !hello.is_null() {
+        let names = |key: &str| -> Result<Vec<String>, String> {
+            hello
+                .get(key)
+                .as_arr()
+                .ok_or(format!("hello: missing {key}"))?
+                .iter()
+                .map(|s| s.as_str().map(|s| s.to_string()))
+                .collect::<Option<_>>()
+                .ok_or(format!("hello: {key} must be strings"))
+        };
+        return Ok(Response::Hello {
+            version: hello.get("version").as_usize().ok_or("hello: missing version")? as u32,
+            ops: names("ops")?,
+            policies: names("policies")?,
+            max_route_batch: hello
+                .get("max_route_batch")
+                .as_usize()
+                .ok_or("hello: missing max_route_batch")?,
+        });
     }
     if let Some(items) = v.get("batch").as_arr() {
         let replies = items
@@ -240,10 +506,179 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
 mod tests {
     use super::*;
 
+    fn budget_spec(b: f64) -> Option<PolicySpec> {
+        Some(PolicySpec::Budget { budget: b })
+    }
+
     #[test]
     fn parse_route() {
         let r = parse_request(r#"{"op":"route","text":"hi","budget":0.5}"#).unwrap();
-        assert_eq!(r, Request::Route { text: "hi".into(), budget: 0.5 });
+        assert_eq!(r, Request::Route { text: "hi".into(), spec: budget_spec(0.5) });
+    }
+
+    #[test]
+    fn v1_explicit_matches_bare() {
+        // {"v":1,...} and no-v parse identically, lenient both ways
+        let bare = parse_request(r#"{"op":"route","text":"hi","budget":0.5,"extra":1}"#).unwrap();
+        let tagged =
+            parse_request(r#"{"v":1,"op":"route","text":"hi","budget":0.5,"extra":1}"#).unwrap();
+        assert_eq!(bare, tagged);
+        assert_eq!(bare, Request::Route { text: "hi".into(), spec: budget_spec(0.5) });
+    }
+
+    #[test]
+    fn v1_requires_budget_and_rejects_v2_constructs_leniently() {
+        // v1 has no policy field: it is ignored (lenient), budget still rules
+        let r = parse_request(r#"{"op":"route","text":"x","budget":1.0,"policy":"threshold"}"#)
+            .unwrap();
+        assert_eq!(r, Request::Route { text: "x".into(), spec: budget_spec(1.0) });
+        assert!(parse_request(r#"{"op":"route","text":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn v2_route_policy_forms() {
+        // bare budget: budget policy
+        let r = parse_request(r#"{"v":2,"op":"route","text":"x","budget":0.5}"#).unwrap();
+        assert_eq!(r, Request::Route { text: "x".into(), spec: budget_spec(0.5) });
+        // no knobs at all: server default
+        let r = parse_request(r#"{"v":2,"op":"route","text":"x"}"#).unwrap();
+        assert_eq!(r, Request::Route { text: "x".into(), spec: None });
+        // budget 0 == unconstrained
+        let r = parse_request(r#"{"v":2,"op":"route","text":"x","budget":0}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::Route { text: "x".into(), spec: budget_spec(f64::INFINITY) }
+        );
+        // cost_aware
+        let r = parse_request(
+            r#"{"v":2,"op":"route","text":"x","policy":"cost_aware","budget":0.02}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Route {
+                text: "x".into(),
+                spec: Some(PolicySpec::CostAware { budget: 0.02 })
+            }
+        );
+        // threshold
+        let r = parse_request(
+            r#"{"v":2,"op":"route","text":"x","policy":"threshold","threshold":0.6}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Route {
+                text: "x".into(),
+                spec: Some(PolicySpec::Threshold { threshold: 0.6 })
+            }
+        );
+    }
+
+    #[test]
+    fn v2_rejects_bad_policy_shapes() {
+        // threshold policy without its knob
+        assert!(parse_request(r#"{"v":2,"op":"route","text":"x","policy":"threshold"}"#).is_err());
+        // threshold knob without the policy
+        assert!(parse_request(r#"{"v":2,"op":"route","text":"x","threshold":0.5}"#).is_err());
+        // out-of-range threshold
+        assert!(parse_request(
+            r#"{"v":2,"op":"route","text":"x","policy":"threshold","threshold":1.5}"#
+        )
+        .is_err());
+        // unknown policy name
+        assert!(parse_request(r#"{"v":2,"op":"route","text":"x","policy":"nope"}"#).is_err());
+        // non-string policy
+        assert!(parse_request(r#"{"v":2,"op":"route","text":"x","policy":7}"#).is_err());
+        // negative budget
+        assert!(parse_request(r#"{"v":2,"op":"route","text":"x","budget":-1}"#).is_err());
+    }
+
+    #[test]
+    fn v2_rejects_unknown_fields_v1_ignores_them() {
+        let strict = parse_request(r#"{"v":2,"op":"route","text":"x","bugdet":0.5}"#);
+        let err = strict.unwrap_err();
+        assert!(err.contains("unknown field 'bugdet'"), "{err}");
+        assert!(parse_request(r#"{"op":"route","text":"x","budget":0.5,"bugdet":9}"#).is_ok());
+        // strictness covers every v2 op
+        assert!(parse_request(r#"{"v":2,"op":"ping","extra":1}"#).is_err());
+        assert!(parse_request(r#"{"v":2,"op":"stats","extra":1}"#).is_err());
+        assert!(parse_request(r#"{"v":2,"op":"hello","extra":1}"#).is_err());
+        let over =
+            r#"{"v":2,"op":"feedback","text":"q","model_a":"a","model_b":"b","score_a":1,"x":1}"#;
+        assert!(parse_request(over).is_err());
+    }
+
+    #[test]
+    fn unsupported_versions_rejected() {
+        let err = parse_request(r#"{"v":3,"op":"ping"}"#).unwrap_err();
+        assert!(err.contains("unsupported protocol version 3"), "{err}");
+        assert!(err.contains("supported: 1, 2"), "{err}");
+        assert!(parse_request(r#"{"v":0,"op":"ping"}"#).is_err());
+        assert!(parse_request(r#"{"v":"two","op":"ping"}"#).is_err());
+    }
+
+    #[test]
+    fn hello_op_and_response_roundtrip() {
+        assert_eq!(parse_request(r#"{"v":2,"op":"hello"}"#).unwrap(), Request::Hello);
+        // hello is a v2 construct: v1 rejects it with its usual error
+        let err = parse_request(r#"{"op":"hello"}"#).unwrap_err();
+        assert_eq!(err, "unknown op 'hello'");
+
+        let h = Response::hello();
+        let line = encode_response(&h);
+        assert_eq!(parse_response(&line).unwrap(), h);
+        match parse_response(&line).unwrap() {
+            Response::Hello { version, ops, policies, max_route_batch } => {
+                assert_eq!(version, PROTOCOL_VERSION);
+                assert!(ops.iter().any(|o| o == "route"));
+                assert_eq!(policies, vec!["budget", "cost_aware", "threshold"]);
+                assert_eq!(max_route_batch, MAX_ROUTE_BATCH);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn encode_request_speaks_oldest_possible_version() {
+        // plain budget routes stay v1 on the wire: any server accepts them
+        let line = encode_request(&Request::Route { text: "x".into(), spec: budget_spec(0.5) });
+        assert!(!line.contains("\"v\""), "{line}");
+        assert_eq!(parse_request(&line).unwrap(), Request::Route {
+            text: "x".into(),
+            spec: budget_spec(0.5),
+        });
+        // v2-only constructs get the v tag and roundtrip
+        for req in [
+            Request::Route { text: "x".into(), spec: None },
+            Request::Route { text: "x".into(), spec: Some(PolicySpec::CostAware { budget: 0.1 }) },
+            Request::Route {
+                text: "x".into(),
+                spec: Some(PolicySpec::Threshold { threshold: 0.7 }),
+            },
+            Request::Route { text: "x".into(), spec: budget_spec(f64::INFINITY) },
+            Request::RouteBatch { texts: vec!["a".into()], spec: None },
+            Request::Hello,
+        ] {
+            let line = encode_request(&req);
+            assert!(line.contains("\"v\":2"), "{line}");
+            assert_eq!(parse_request(&line).unwrap(), req, "{line}");
+        }
+        // v1 ops roundtrip through their classic shapes
+        for req in [
+            Request::Feedback {
+                text: "q".into(),
+                model_a: "a".into(),
+                model_b: "b".into(),
+                score_a: 1.0,
+            },
+            Request::Stats,
+            Request::Ping,
+            Request::Snapshot,
+            Request::RouteBatch { texts: vec!["a".into(), "b".into()], spec: budget_spec(0.1) },
+        ] {
+            assert_eq!(parse_request(&encode_request(&req)).unwrap(), req);
+        }
     }
 
     #[test]
@@ -268,12 +703,25 @@ mod tests {
         let r = parse_request(r#"{"op":"route_batch","texts":["a","b"],"budget":0.1}"#).unwrap();
         assert_eq!(
             r,
-            Request::RouteBatch { texts: vec!["a".into(), "b".into()], budget: 0.1 }
+            Request::RouteBatch { texts: vec!["a".into(), "b".into()], spec: budget_spec(0.1) }
         );
         assert!(parse_request(r#"{"op":"route_batch","texts":[],"budget":0.1}"#).is_err());
         assert!(parse_request(r#"{"op":"route_batch","texts":[1],"budget":0.1}"#).is_err());
         assert!(parse_request(r#"{"op":"route_batch","budget":0.1}"#).is_err());
         assert!(parse_request(r#"{"op":"route_batch","texts":["a"],"budget":-1}"#).is_err());
+        // v2: per-batch policy, same strictness as route
+        let r = parse_request(
+            r#"{"v":2,"op":"route_batch","texts":["a"],"policy":"cost_aware","budget":0.3}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::RouteBatch {
+                texts: vec!["a".into()],
+                spec: Some(PolicySpec::CostAware { budget: 0.3 })
+            }
+        );
+        assert!(parse_request(r#"{"v":2,"op":"route_batch","texts":["a"],"txets":[]}"#).is_err());
     }
 
     #[test]
@@ -338,6 +786,16 @@ mod tests {
         ] {
             assert_eq!(parse_response(&encode_response(&r)).unwrap(), r);
         }
+    }
+
+    #[test]
+    fn malformed_hello_response_rejected() {
+        // client-direction strictness: a garbled capability report is an
+        // error, not a silently-defaulted Hello
+        assert!(parse_response(r#"{"ok":true,"hello":{"version":2}}"#).is_err());
+        let bad =
+            r#"{"ok":true,"hello":{"version":2,"ops":[1],"policies":[],"max_route_batch":4}}"#;
+        assert!(parse_response(bad).is_err());
     }
 
     #[test]

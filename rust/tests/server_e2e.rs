@@ -64,11 +64,12 @@ fn start_server_with_snapshot(
     let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(256));
     // tight cadence so feedback becomes routable quickly in tests
     let epoch = EpochParams { publish_every: 8, publish_interval_ms: 10 };
-    let mut state = ServerState::with_epoch(router, registry, service.handle(), metrics, epoch);
+    let mut builder =
+        ServerState::builder(router, registry, service.handle(), metrics).epoch(epoch);
     if let Some(p) = snapshot {
-        state = state.with_snapshot_path(p);
+        builder = builder.snapshot_path(p);
     }
-    let state = Arc::new(state);
+    let state = Arc::new(builder.build());
     let server = Server::start(state, "127.0.0.1:0", 2).unwrap();
     let addr = server.addr.to_string();
     (server, service, addr)
@@ -91,28 +92,23 @@ fn start_hash_server(
     );
     let registry = ModelRegistry::routerbench();
     let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(dim));
-    let mut state = ServerState::with_options(
-        router,
-        registry,
-        service.handle(),
-        metrics,
-        ServerOptions {
+    let mut builder =
+        ServerState::builder(router, registry, service.handle(), metrics).options(ServerOptions {
             epoch: EpochParams { publish_every: 16, publish_interval_ms: 5 },
             shards: ShardParams { count: shards, hash_seed: 0xEA61E },
             ..Default::default()
-        },
-    );
+        });
     if let Some(p) = snapshot {
-        state = state.with_snapshot_path(p);
+        builder = builder.snapshot_path(p);
     }
-    let state = Arc::new(state);
+    let state = Arc::new(builder.build());
     let server = Server::start(state, "127.0.0.1:0", workers).unwrap();
     let addr = server.addr.to_string();
     (server, service, addr)
 }
 
 /// Hash-backed server with the durable segment store attached
-/// (`[persist] dir` equivalent): the with_options path creates the store
+/// (`[persist] dir` equivalent): the builder creates the store
 /// on first boot and recovers from it on the next.
 fn start_hash_server_durable(
     dim: usize,
@@ -127,12 +123,8 @@ fn start_hash_server_durable(
     );
     let registry = ModelRegistry::routerbench();
     let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(dim));
-    let state = ServerState::with_options(
-        router,
-        registry,
-        service.handle(),
-        metrics,
-        ServerOptions {
+    let state = ServerState::builder(router, registry, service.handle(), metrics)
+        .options(ServerOptions {
             epoch: EpochParams { publish_every: 16, publish_interval_ms: 5 },
             shards: ShardParams { count: shards, hash_seed: 0xEA61E },
             persist_interval_ms: 10,
@@ -140,8 +132,8 @@ fn start_hash_server_durable(
             seal_bytes: 8192,
             fsync: false,
             ..Default::default()
-        },
-    );
+        })
+        .build();
     let server = Server::start(Arc::new(state), "127.0.0.1:0", 2).unwrap();
     let addr = server.addr.to_string();
     (server, service, addr)
@@ -168,7 +160,7 @@ fn hash_server_durable_dir_survives_restart() {
     drop(client);
     server.shutdown();
 
-    // second boot: with_options recovers the corpus from the durable dir
+    // second boot: the builder recovers the corpus from the durable dir
     let (server, _service, addr) = start_hash_server_durable(dim, 2, &durable);
     let snap = server.state.snapshots.load();
     assert_eq!(snap.store_len(), 120, "restart lost the durable corpus");
@@ -663,17 +655,15 @@ fn start_hash_server_admission(
     );
     let registry = ModelRegistry::routerbench();
     let router = EagleRouter::new(EagleParams::default(), registry.len(), FlatStore::new(dim));
-    let state = Arc::new(ServerState::with_options(
-        router,
-        registry,
-        service.handle(),
-        metrics,
-        ServerOptions {
-            epoch: EpochParams { publish_every: 16, publish_interval_ms: 5 },
-            admission,
-            ..Default::default()
-        },
-    ));
+    let state = Arc::new(
+        ServerState::builder(router, registry, service.handle(), metrics)
+            .options(ServerOptions {
+                epoch: EpochParams { publish_every: 16, publish_interval_ms: 5 },
+                admission,
+                ..Default::default()
+            })
+            .build(),
+    );
     let server = Server::start(state, "127.0.0.1:0", workers).unwrap();
     let addr = server.addr.to_string();
     (server, service, addr)
@@ -806,5 +796,119 @@ fn idle_timeout_reaps_quiet_connections() {
     let n = conn.read(&mut buf).unwrap();
     assert_eq!(n, 0, "expected an idle close, got {n} bytes");
     assert!(server.state.shed.closed_idle.get() >= 1);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------- protocol v2
+
+#[test]
+fn hello_negotiates_v2_capabilities() {
+    use eagle::server::protocol::{MAX_ROUTE_BATCH, OPS, POLICIES, PROTOCOL_VERSION};
+
+    let (server, _service, addr) = start_hash_server(32, 1, 2, None);
+    let mut client = EagleClient::connect(&addr).unwrap();
+    let hello = client.hello().unwrap();
+    assert_eq!(hello.version, PROTOCOL_VERSION);
+    assert_eq!(hello.ops, OPS.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    assert_eq!(hello.policies, POLICIES.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    assert_eq!(hello.max_route_batch, MAX_ROUTE_BATCH);
+    server.shutdown();
+}
+
+#[test]
+fn v2_per_query_policy_specs_route() {
+    use eagle::coordinator::policy::PolicySpec;
+
+    let (server, _service, addr) = start_hash_server(32, 1, 2, None);
+    let registry = ModelRegistry::routerbench();
+    let mut client = EagleClient::connect(&addr).unwrap();
+
+    // cost-aware under a tiny budget still answers with a registry model
+    let d = client
+        .route_with("what is 2 + 2", Some(PolicySpec::CostAware { budget: 1e-6 }))
+        .unwrap();
+    assert!(registry.index_of(&d.model).is_some(), "unknown model {}", d.model);
+
+    // threshold 1.0 can never clear the logistic win-prob: weak arm (cheapest)
+    let weak = client
+        .route_with("routine lookup", Some(PolicySpec::Threshold { threshold: 1.0 }))
+        .unwrap();
+    assert_eq!(weak.model_index, registry.cheapest_available().unwrap());
+
+    // threshold 0.0 always clears it: strong arm, a strictly pricier model
+    let strong = client
+        .route_with("prove the lemma", Some(PolicySpec::Threshold { threshold: 0.0 }))
+        .unwrap();
+    assert!(
+        strong.expected_cost > weak.expected_cost,
+        "strong arm {} ({}) should out-price weak arm {} ({})",
+        strong.model,
+        strong.expected_cost,
+        weak.model,
+        weak.expected_cost,
+    );
+
+    // spec: None defers to the server default (unbounded here): still routes
+    let d = client.route_with("open-ended essay", None).unwrap();
+    assert!(registry.index_of(&d.model).is_some());
+
+    // batch variant carries the spec across every text in the batch
+    let batch = client
+        .route_batch_with(
+            &["q one", "q two", "q three"],
+            Some(PolicySpec::Threshold { threshold: 1.0 }),
+        )
+        .unwrap();
+    assert_eq!(batch.len(), 3);
+    for b in &batch {
+        assert_eq!(b.model_index, registry.cheapest_available().unwrap());
+    }
+    server.shutdown();
+}
+
+/// v1 lines must keep working bit-identically next to their v2
+/// equivalents, while v2 is strict about fields and versions.
+#[test]
+fn v2_strict_fields_and_v1_compat_on_the_wire() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let (server, _service, addr) = start_hash_server(32, 1, 2, None);
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask = |line: &str| {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply
+    };
+
+    // the same route, spelled v1 and v2: byte-identical replies
+    let v1 = ask(r#"{"op":"route","text":"compare the two sorts","budget":0.5}"#);
+    let v2 = ask(r#"{"v":2,"op":"route","text":"compare the two sorts","budget":0.5}"#);
+    assert!(v1.contains("\"ok\":true"), "v1 route failed: {v1}");
+    assert_eq!(v1, v2, "v2 budget route must match the v1 wire reply");
+
+    // v1 stays lenient about stray fields (old clients keep working)...
+    let lenient = ask(r#"{"op":"route","text":"legacy line","budget":0.5,"stray":1}"#);
+    assert!(lenient.contains("\"ok\":true"), "v1 must ignore stray fields: {lenient}");
+
+    // ...v2 rejects them loudly
+    let strict = ask(r#"{"v":2,"op":"route","text":"x","budget":0.5,"stray":1}"#);
+    assert!(strict.contains("\"ok\":false"), "v2 must reject stray fields: {strict}");
+    assert!(strict.contains("unknown field"), "{strict}");
+
+    // future versions are refused, not half-parsed
+    let future = ask(r#"{"v":3,"op":"ping"}"#);
+    assert!(future.contains("\"ok\":false") && future.contains("unsupported"), "{future}");
+
+    // the threshold policy demands its knob
+    let incomplete = ask(r#"{"v":2,"op":"route","text":"x","policy":"threshold"}"#);
+    assert!(incomplete.contains("\"ok\":false"), "{incomplete}");
+
+    // and the connection survives it all
+    let pong = ask(r#"{"v":2,"op":"ping"}"#);
+    assert!(pong.contains("\"pong\":true"), "{pong}");
     server.shutdown();
 }
