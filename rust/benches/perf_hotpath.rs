@@ -211,6 +211,7 @@ fn main() {
         report.push_result(r);
     }
     kernel_scan_sweep(&mut report);
+    quant_scan_sweep(&mut report);
     ivf_nprobe_sweep(&mut report);
     contention_scenario(snap_writer, &mut report);
     sharded_storm_sweep(&obs, &mut report);
@@ -332,6 +333,99 @@ fn kernel_scan_sweep(report: &mut JsonReport) {
             report.push(&format!("{prefix}.single_qps"), single_qps);
             report.push(&format!("{prefix}.qps"), blocked_qps);
             report.push(&format!("{prefix}.speedup_vs_scalar"), speedup);
+        }
+    }
+}
+
+/// The ISSUE 8 acceptance sweep: SQ8-quantized scan + exact rerank vs
+/// the exact f32 blocked scan over dim × batch. Emits
+/// `quant.d{D}.b{B}.qps` / `.recall_ratio` / `.bytes_per_query` (plus
+/// the f32 baseline qps and the speedup); the acceptance gate is
+/// `speedup_vs_f32 >= 2` with `recall_ratio >= 0.99` at dim 256, B >= 8,
+/// default rerank factor. The win is bandwidth: the quantized scan
+/// streams 1 byte/element instead of 4, and the rerank touches only
+/// `rerank_factor * K` exact rows.
+fn quant_scan_sweep(report: &mut JsonReport) {
+    use eagle::vectordb::quant::{QuantCache, QuantView, DEFAULT_RERANK_FACTOR};
+
+    const K: usize = 20;
+    let n: usize = if eagle::bench::smoke() { 4_096 } else { 16_384 };
+    let dims: &[usize] = &[64, 256];
+    let batches: &[usize] = &[1, 8, 32];
+
+    println!(
+        "\n== sq8 quantized scan (backend {}, {n}-row corpus, top-{K}, rerank x{}) ==",
+        kernel::active().name(),
+        DEFAULT_RERANK_FACTOR
+    );
+    for &dim in dims {
+        let mut rng = Rng::new(0x5_08 ^ dim as u64);
+        let mut store = SegmentStore::new(dim);
+        for _ in 0..n {
+            let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            l2_normalize(&mut v);
+            store.add(&v, Feedback { comparisons: vec![rand_cmp(&mut rng)] });
+        }
+        let view = store.freeze();
+        let mut cache = QuantCache::new();
+        // min_rows = 1: quantize every sealed segment so the sweep
+        // measures the quantized path, not the exact-tail fallback
+        let qview = QuantView::build(view.clone(), &mut cache, 1, DEFAULT_RERANK_FACTOR);
+        assert_eq!(qview.quantized_rows(), n, "corpus not fully quantized");
+
+        for &b in batches {
+            let queries: Vec<Vec<f32>> = (0..b.max(32))
+                .map(|_| {
+                    let mut v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                    l2_normalize(&mut v);
+                    v
+                })
+                .collect();
+            let qrefs: Vec<&[f32]> = queries[..b].iter().map(|q| q.as_slice()).collect();
+
+            // quality: recall@K of the quantized+rerank hits vs exact,
+            // over a fixed 32-query panel (batch path == singles by
+            // construction, asserted below)
+            let panel: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let quant_hits = qview.search_batch(&panel, K);
+            let mut recall_sum = 0.0f64;
+            for (q, got) in panel.iter().zip(&quant_hits) {
+                assert_eq!(got, &qview.search(q, K), "quant batch diverged from singles");
+                let want: Vec<u32> = view.search(q, K).into_iter().map(|h| h.id).collect();
+                let inter = got.iter().filter(|h| want.contains(&h.id)).count();
+                recall_sum += inter as f64 / K as f64;
+            }
+            let recall = recall_sum / panel.len() as f64;
+
+            let r_f32 = eagle::bench::bench(
+                &format!("quant/f32_d{dim}_b{b}"),
+                target_ms(150),
+                || {
+                    std::hint::black_box(view.search_batch(&qrefs, K));
+                },
+            );
+            let r_quant = eagle::bench::bench(
+                &format!("quant/sq8_d{dim}_b{b}"),
+                target_ms(150),
+                || {
+                    std::hint::black_box(qview.search_batch(&qrefs, K));
+                },
+            );
+            let qps = |r: &eagle::bench::BenchResult| b as f64 * 1e9 / r.mean_ns.max(1.0);
+            let (f32_qps, quant_qps) = (qps(&r_f32), qps(&r_quant));
+            let speedup = quant_qps / f32_qps.max(1e-9);
+            let bytes = qview.scan_bytes_per_query(K);
+            println!(
+                "  d={dim:<3} B={b:<2}: f32 {f32_qps:>9.0} q/s | sq8+rerank \
+                 {quant_qps:>9.0} q/s ({speedup:.2}x) | recall@{K} {recall:.3} | \
+                 {bytes} B/query"
+            );
+            let prefix = format!("quant.d{dim}.b{b}");
+            report.push(&format!("{prefix}.f32_qps"), f32_qps);
+            report.push(&format!("{prefix}.qps"), quant_qps);
+            report.push(&format!("{prefix}.speedup_vs_f32"), speedup);
+            report.push(&format!("{prefix}.recall_ratio"), recall);
+            report.push(&format!("{prefix}.bytes_per_query"), bytes as f64);
         }
     }
 }

@@ -151,9 +151,19 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         "  shards: count={} hash_seed={:#x}",
         cfg.shards.count, cfg.shards.hash_seed
     );
+    let n_cells = if cfg.ivf.n_cells == 0 {
+        "auto (sqrt(corpus) at rebuild)".to_string()
+    } else {
+        cfg.ivf.n_cells.to_string()
+    };
     println!(
         "  ivf: publish_threshold={} n_cells={} nprobe={}",
-        cfg.ivf.publish_threshold, cfg.ivf.n_cells, cfg.ivf.nprobe
+        cfg.ivf.publish_threshold, n_cells, cfg.ivf.nprobe
+    );
+    println!(
+        "  quant: mode={} rerank_factor={} (EAGLE_QUANT overrides)",
+        if cfg.quant.enable { "sq8" } else { "off" },
+        cfg.quant.rerank_factor
     );
     println!(
         "  persist: interval_ms={} dir={} seal_bytes={} fsync={} path={}",
@@ -464,6 +474,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         epoch: cfg.epoch.clone(),
         shards: cfg.shards.clone(),
         ivf: cfg.ivf.clone(),
+        quant: cfg.quant,
         persist_interval_ms: cfg.persist.interval_ms,
         persist_dir: persist_dir.clone(),
         seal_bytes: cfg.persist.seal_bytes,
@@ -489,6 +500,19 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         "scoring kernel: {} (configured '{}'; EAGLE_KERNEL overrides)",
         crate::vectordb::kernel::active().name(),
         cfg.kernel.backend
+    );
+    println!(
+        "corpus scan: {} (EAGLE_QUANT overrides), ivf n_cells: {}",
+        if cfg.quant.enable {
+            format!("sq8 + exact rerank x{}", cfg.quant.rerank_factor)
+        } else {
+            "exact f32".to_string()
+        },
+        if cfg.ivf.n_cells == 0 {
+            "auto (sqrt(corpus) at rebuild)".to_string()
+        } else {
+            cfg.ivf.n_cells.to_string()
+        },
     );
     if let Some(store) = state.durable_store() {
         println!(

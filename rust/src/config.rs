@@ -177,10 +177,15 @@ pub struct IvfPublishParams {
     /// Corpus size (per shard) beyond which snapshots publish an IVF view
     /// (0 = never).
     pub publish_threshold: usize,
-    /// Number of k-means cells in the rebuilt core.
+    /// Number of k-means cells in the rebuilt core. `0` (spelled `auto`
+    /// in config files) defers the choice to core-rebuild time, where it
+    /// resolves to `sqrt(corpus)` — the classic IVF balance point between
+    /// centroid-ranking cost and cell-scan cost.
     pub n_cells: usize,
     /// Cells probed per query; `nprobe == n_cells` is exhaustive and
-    /// scores bit-identically to the flat view.
+    /// scores bit-identically to the flat view. With `n_cells = auto`,
+    /// values above the resolved cell count clamp (with a warning) at
+    /// rebuild time.
     pub nprobe: usize,
 }
 
@@ -234,6 +239,37 @@ impl Default for PersistParams {
             dir: String::new(),
             seal_bytes: 4 << 20,
             fsync: true,
+        }
+    }
+}
+
+/// SQ8 compressed-corpus scoring ([`crate::vectordb::quant`]): when
+/// enabled, the writer quantizes sealed segments to 1-byte/element SQ8
+/// codes at publication time (off the route path) and publishes a
+/// [`crate::vectordb::quant::QuantView`] instead of the flat view. Scans
+/// stream the int8 codes (4x less bandwidth), over-fetch
+/// `rerank_factor * k` candidates, and rerank them with the exact f32
+/// kernel — returned scores are always exact; quantization can only
+/// affect *which* candidates reach the rerank. Segments smaller than the
+/// quantizer's row floor stay exact, and IVF publication supersedes this
+/// once a shard passes `[ivf] publish_threshold`. The `EAGLE_QUANT` env
+/// var (`1`/`0`) overrides `enable` — CI uses it to run the e2e suite on
+/// the quantized arm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Publish SQ8-quantized snapshot views for flat publications.
+    pub enable: bool,
+    /// Over-fetch multiplier: the quantized scan selects
+    /// `rerank_factor * k` candidates for exact rerank. Higher = better
+    /// recall, more exact rescores; `recall_ratio >= 0.99` at the default.
+    pub rerank_factor: usize,
+}
+
+impl Default for QuantParams {
+    fn default() -> Self {
+        QuantParams {
+            enable: false,
+            rerank_factor: crate::vectordb::quant::DEFAULT_RERANK_FACTOR,
         }
     }
 }
@@ -319,6 +355,7 @@ pub struct Config {
     pub epoch: EpochParams,
     pub shards: ShardParams,
     pub ivf: IvfPublishParams,
+    pub quant: QuantParams,
     pub persist: PersistParams,
     pub kernel: KernelParams,
     pub policy: PolicyParams,
@@ -434,8 +471,13 @@ impl Config {
             "shards.count" => self.shards.count = usize_of(value)?,
             "shards.hash_seed" => self.shards.hash_seed = u64_of(value)?,
             "ivf.publish_threshold" => self.ivf.publish_threshold = usize_of(value)?,
-            "ivf.n_cells" => self.ivf.n_cells = usize_of(value)?,
+            // `auto` (== 0) defers n_cells to sqrt(corpus) at rebuild time
+            "ivf.n_cells" => {
+                self.ivf.n_cells = if value == "auto" { 0 } else { usize_of(value)? }
+            }
             "ivf.nprobe" => self.ivf.nprobe = usize_of(value)?,
+            "quant.enable" => self.quant.enable = bool_of(value)?,
+            "quant.rerank_factor" => self.quant.rerank_factor = usize_of(value)?,
             "persist.interval_ms" => self.persist.interval_ms = u64_of(value)?,
             "persist.path" => self.persist.path = value.to_string(),
             "persist.dir" => self.persist.dir = value.to_string(),
@@ -492,15 +534,21 @@ impl Config {
             )));
         }
         if self.ivf.publish_threshold > 0 {
-            if self.ivf.n_cells == 0 {
-                return Err(ConfigError("ivf.n_cells must be > 0".into()));
+            // n_cells == 0 means `auto` (resolved to sqrt(corpus) at
+            // rebuild time), so nprobe can only be range-checked against
+            // an explicit cell count; auto clamps at rebuild instead.
+            if self.ivf.nprobe == 0 {
+                return Err(ConfigError("ivf.nprobe must be > 0".into()));
             }
-            if self.ivf.nprobe == 0 || self.ivf.nprobe > self.ivf.n_cells {
+            if self.ivf.n_cells > 0 && self.ivf.nprobe > self.ivf.n_cells {
                 return Err(ConfigError(format!(
                     "ivf.nprobe = {} not in 1..=n_cells ({})",
                     self.ivf.nprobe, self.ivf.n_cells
                 )));
             }
+        }
+        if self.quant.enable && self.quant.rerank_factor == 0 {
+            return Err(ConfigError("quant.rerank_factor must be > 0".into()));
         }
         if self.persist.seal_bytes == 0 {
             return Err(ConfigError("persist.seal_bytes must be > 0".into()));
@@ -647,6 +695,65 @@ workers = 8
         // ...but is unconstrained while IVF publication is disabled
         bad.ivf.publish_threshold = 0;
         assert!(bad.validate().is_ok());
+    }
+
+    #[test]
+    fn ivf_n_cells_auto_parses_and_validates() {
+        // `auto` and `0` both mean sqrt(corpus)-at-rebuild
+        let c = Config::load(None, &[("ivf.n_cells".into(), "auto".into())]).unwrap();
+        assert_eq!(c.ivf.n_cells, 0);
+        let c = Config::load(None, &[("ivf.n_cells".into(), "0".into())]).unwrap();
+        assert_eq!(c.ivf.n_cells, 0);
+        // with auto cells, any positive nprobe validates (clamped at
+        // rebuild time against the resolved cell count)...
+        let c = Config::load(
+            None,
+            &[
+                ("ivf.publish_threshold".into(), "100".into()),
+                ("ivf.n_cells".into(), "auto".into()),
+                ("ivf.nprobe".into(), "10000".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.ivf.n_cells, 0);
+        assert_eq!(c.ivf.nprobe, 10_000);
+        // ...but nprobe = 0 is still rejected
+        let mut bad = Config::default();
+        bad.ivf.publish_threshold = 100;
+        bad.ivf.n_cells = 0;
+        bad.ivf.nprobe = 0;
+        assert!(bad.validate().is_err());
+        // garbage still rejected
+        assert!(Config::default().set("ivf.n_cells", "lots").is_err());
+    }
+
+    #[test]
+    fn quant_knobs_parse_and_validate() {
+        // defaults: off, rerank factor from the quantizer module
+        let c = Config::default();
+        assert_eq!(c.quant, QuantParams::default());
+        assert!(!c.quant.enable);
+        assert_eq!(
+            c.quant.rerank_factor,
+            crate::vectordb::quant::DEFAULT_RERANK_FACTOR
+        );
+        let c = Config::load(
+            None,
+            &[
+                ("quant.enable".into(), "true".into()),
+                ("quant.rerank_factor".into(), "8".into()),
+            ],
+        )
+        .unwrap();
+        assert!(c.quant.enable);
+        assert_eq!(c.quant.rerank_factor, 8);
+        // rerank_factor = 0 invalid only while quantization is on
+        let mut bad = Config::default();
+        bad.quant.rerank_factor = 0;
+        assert!(bad.validate().is_ok());
+        bad.quant.enable = true;
+        assert!(bad.validate().is_err());
+        assert!(Config::default().set("quant.enable", "maybe").is_err());
     }
 
     #[test]

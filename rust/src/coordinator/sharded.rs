@@ -355,6 +355,13 @@ impl ShardLane {
         self.writer.set_ivf(params);
     }
 
+    /// Install the SQ8 publication policy on this lane's writer (see
+    /// [`RouterWriter::set_quant`]); each shard quantizes its own sealed
+    /// segments at publish time.
+    pub fn set_quant(&mut self, params: crate::config::QuantParams) {
+        self.writer.set_quant(params);
+    }
+
     /// The wrapped single-shard writer (diagnostics).
     pub fn writer(&self) -> &RouterWriter {
         &self.writer
@@ -586,6 +593,16 @@ impl ShardedRouter {
     pub fn set_ivf(&mut self, params: IvfPublishParams) {
         for lane in &mut self.lanes {
             lane.set_ivf(params.clone());
+        }
+    }
+
+    /// Install the SQ8 publication policy on every shard lane (see
+    /// [`RouterWriter::set_quant`]). Scatter-gather scoring flows through
+    /// each lane's published [`super::snapshot::SnapshotView`], so
+    /// quantized lanes keep the exact-rerank contract shard by shard.
+    pub fn set_quant(&mut self, params: crate::config::QuantParams) {
+        for lane in &mut self.lanes {
+            lane.set_quant(params);
         }
     }
 
@@ -1094,6 +1111,47 @@ mod tests {
             let serial = snap.scores(q);
             assert_eq!(batch[i], serial, "auto batch path diverged at query {i}");
             assert_eq!(scatter[i], serial, "scatter path diverged at query {i}");
+            assert_eq!(serial, reference.combined_scores(q), "reference diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn quantized_lanes_score_identically_serial_and_scatter() {
+        // every lane publishes an SQ8 view; with a rerank factor covering
+        // each shard's whole corpus the rerank is total, so serial batch,
+        // threaded scatter, and the flat reference all agree bitwise
+        let mut rng = Rng::new(6);
+        let mut sharded =
+            ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(512), shards(3));
+        sharded.set_quant(crate::config::QuantParams { enable: true, rerank_factor: 1024 });
+        let mut stream = Vec::new();
+        for _ in 0..(PAR_MIN_CORPUS + 500) {
+            let obs = rand_obs(&mut rng);
+            stream.push(obs.clone());
+            sharded.observe(obs);
+        }
+        sharded.publish_all();
+        let snap = sharded.handle().load();
+        // the big sealed segments really are quantized on every lane
+        use crate::coordinator::snapshot::SnapshotView;
+        for (shard, s) in snap.shards.iter().enumerate() {
+            match s.view() {
+                SnapshotView::Quant(v) => {
+                    // each lane holds ~1.5k rows; even an uneven hash
+                    // split leaves at least one >= 512-row sealed segment
+                    assert!(v.quantized_rows() >= 512, "shard {shard} barely quantized")
+                }
+                other => panic!("shard {shard}: expected quant view, got {other:?}"),
+            }
+        }
+        let queries: Vec<Vec<f32>> = (0..6).map(|_| unit(&mut rng)).collect();
+        let batch = snap.score_batch(&queries);
+        let scatter = snap.score_batch_scatter(&queries);
+        let reference = reference(&stream);
+        for (i, q) in queries.iter().enumerate() {
+            let serial = snap.scores(q);
+            assert_eq!(batch[i], serial, "quant batch path diverged at query {i}");
+            assert_eq!(scatter[i], serial, "quant scatter path diverged at query {i}");
             assert_eq!(serial, reference.combined_scores(q), "reference diverged at {i}");
         }
     }

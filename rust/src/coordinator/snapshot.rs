@@ -31,9 +31,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::config::{EagleParams, EpochParams, IvfPublishParams};
+use crate::config::{EagleParams, EpochParams, IvfPublishParams, QuantParams};
 use crate::vectordb::flat::FlatStore;
 use crate::vectordb::ivf::{IvfIndex, IvfParams, IvfView};
+use crate::vectordb::quant::{QuantCache, QuantView, QUANT_MIN_SEGMENT_ROWS};
 use crate::vectordb::view::{FrozenView, SegmentStore};
 use crate::vectordb::{BatchTopK, Feedback, Hit, ReadIndex, VectorIndex};
 
@@ -95,10 +96,13 @@ impl<T> RcuCell<T> {
 }
 
 /// The frozen index inside a snapshot: exact segmented view for the
-/// serving default, IVF core + exact tail for large corpora.
+/// serving default, SQ8-quantized scan + exact rerank when the `[quant]`
+/// policy is on, IVF core + exact tail for large corpora (IVF supersedes
+/// quantization past its threshold).
 #[derive(Debug, Clone)]
 pub enum SnapshotView {
     Flat(FrozenView),
+    Quant(QuantView),
     Ivf(IvfView),
 }
 
@@ -106,6 +110,7 @@ impl ReadIndex for SnapshotView {
     fn dim(&self) -> usize {
         match self {
             SnapshotView::Flat(v) => v.dim(),
+            SnapshotView::Quant(v) => v.dim(),
             SnapshotView::Ivf(v) => v.dim(),
         }
     }
@@ -113,6 +118,7 @@ impl ReadIndex for SnapshotView {
     fn len(&self) -> usize {
         match self {
             SnapshotView::Flat(v) => v.len(),
+            SnapshotView::Quant(v) => v.len(),
             SnapshotView::Ivf(v) => v.len(),
         }
     }
@@ -120,6 +126,7 @@ impl ReadIndex for SnapshotView {
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
         match self {
             SnapshotView::Flat(v) => v.search(query, k),
+            SnapshotView::Quant(v) => v.search(query, k),
             SnapshotView::Ivf(v) => v.search(query, k),
         }
     }
@@ -127,6 +134,7 @@ impl ReadIndex for SnapshotView {
     fn search_batch_into(&self, queries: &[&[f32]], k: usize, acc: &mut BatchTopK) {
         match self {
             SnapshotView::Flat(v) => v.search_batch_into(queries, k, acc),
+            SnapshotView::Quant(v) => v.search_batch_into(queries, k, acc),
             SnapshotView::Ivf(v) => v.search_batch_into(queries, k, acc),
         }
     }
@@ -134,6 +142,7 @@ impl ReadIndex for SnapshotView {
     fn feedback(&self, id: u32) -> &Feedback {
         match self {
             SnapshotView::Flat(v) => v.feedback(id),
+            SnapshotView::Quant(v) => v.feedback(id),
             SnapshotView::Ivf(v) => v.feedback(id),
         }
     }
@@ -141,6 +150,7 @@ impl ReadIndex for SnapshotView {
     fn vector(&self, id: u32) -> &[f32] {
         match self {
             SnapshotView::Flat(v) => v.vector(id),
+            SnapshotView::Quant(v) => v.vector(id),
             SnapshotView::Ivf(v) => v.vector(id),
         }
     }
@@ -311,6 +321,16 @@ pub struct RouterWriter {
     /// Entries ingested since the core was last rebuilt (ids continue the
     /// core's id space).
     ivf_tail: Option<SegmentStore>,
+    /// SQ8 publication policy; `None` (or `enable == false`) publishes
+    /// plain flat views. Applies only below the IVF threshold.
+    quant: Option<QuantParams>,
+    /// Per-segment SQ8 sidecars carried across publishes: a sealed
+    /// segment is encoded once and reused until compaction merges it
+    /// away (the cache drops entries for retired segments on refresh).
+    quant_cache: QuantCache,
+    /// `n_cells` the last core rebuild actually used (tracks the
+    /// sqrt(corpus) resolution when the policy says `auto`).
+    ivf_resolved_cells: usize,
 }
 
 impl RouterWriter {
@@ -356,6 +376,9 @@ impl RouterWriter {
             ivf: None,
             ivf_core: None,
             ivf_tail: None,
+            quant: None,
+            quant_cache: QuantCache::new(),
+            ivf_resolved_cells: 0,
         }
     }
 
@@ -370,6 +393,33 @@ impl RouterWriter {
         } else {
             self.ivf = Some(params);
         }
+    }
+
+    /// Install (or replace) the SQ8 publication policy. `enable == false`
+    /// (or `rerank_factor == 0`) turns quantized publication off and
+    /// drops the sidecar cache; the next publish past any sealed segment
+    /// of [`QUANT_MIN_SEGMENT_ROWS`] rows hands out
+    /// [`SnapshotView::Quant`]. IVF publication supersedes this once the
+    /// corpus passes its threshold.
+    pub fn set_quant(&mut self, params: QuantParams) {
+        if params.enable && params.rerank_factor > 0 {
+            self.quant = Some(params);
+        } else {
+            self.quant = None;
+            self.quant_cache = QuantCache::new();
+        }
+    }
+
+    /// The active SQ8 publication policy, if any.
+    pub fn quant_params(&self) -> Option<QuantParams> {
+        self.quant
+    }
+
+    /// `n_cells` used by the most recent IVF core rebuild (0 before any
+    /// rebuild). With `[ivf] n_cells = auto` this is the sqrt(corpus)
+    /// resolution, otherwise the configured value.
+    pub fn ivf_resolved_cells(&self) -> usize {
+        self.ivf_resolved_cells
     }
 
     /// Entries currently inside the IVF core / tail (diagnostics; (0, 0)
@@ -466,11 +516,11 @@ impl RouterWriter {
     fn build_view(&mut self) -> SnapshotView {
         let threshold = match &self.ivf {
             Some(p) if p.publish_threshold > 0 => p.publish_threshold,
-            _ => return SnapshotView::Flat(self.router.store_mut().freeze()),
+            _ => return self.build_flat_view(),
         };
         let total = self.router.store().len();
         if total < threshold {
-            return SnapshotView::Flat(self.router.store_mut().freeze());
+            return self.build_flat_view();
         }
         let due = match (&self.ivf_core, &self.ivf_tail) {
             (Some(core), Some(tail)) => {
@@ -487,14 +537,54 @@ impl RouterWriter {
         SnapshotView::Ivf(IvfView::new(core, tail))
     }
 
+    /// Flat publication: the plain frozen view, or its SQ8-quantized
+    /// wrapper when the `[quant]` policy is on (sidecar encodes happen
+    /// here, on the ingest thread, reusing cached segments).
+    fn build_flat_view(&mut self) -> SnapshotView {
+        let frozen = self.router.store_mut().freeze();
+        match self.quant {
+            Some(p) => SnapshotView::Quant(QuantView::build(
+                frozen,
+                &mut self.quant_cache,
+                QUANT_MIN_SEGMENT_ROWS,
+                p.rerank_factor,
+            )),
+            None => SnapshotView::Flat(frozen),
+        }
+    }
+
     /// Compaction: re-cluster the *entire* current contents into a fresh
     /// IVF core and reset the tail. O(n · n_cells · kmeans_iters) on the
     /// ingest thread; route scoring is untouched (readers pin the old
     /// core's `Arc` until their snapshots retire).
+    ///
+    /// This is also where `[ivf] n_cells = auto` (0) resolves: the cell
+    /// count becomes `ceil(sqrt(corpus))`, and `nprobe` clamps (with a
+    /// warning) if it exceeds the resolved count.
     fn rebuild_ivf_core(&mut self) {
         let params = self.ivf.as_ref().expect("rebuild without ivf policy");
         let store = self.router.store_mut().freeze();
         let n = store.len();
+        let n_cells = if params.n_cells == 0 {
+            ((n as f64).sqrt().ceil() as usize).clamp(1, n.max(1))
+        } else {
+            params.n_cells
+        };
+        let nprobe = if params.nprobe > n_cells {
+            if params.n_cells > 0 {
+                // explicit configs were range-checked at parse time; only
+                // the auto resolution can land below a configured nprobe
+                debug_assert!(false, "explicit nprobe above n_cells survived validation");
+            }
+            eprintln!(
+                "warning: ivf.nprobe = {} exceeds resolved n_cells = {n_cells}; clamping",
+                params.nprobe
+            );
+            n_cells
+        } else {
+            params.nprobe
+        };
+        self.ivf_resolved_cells = n_cells;
         let mut vectors = Vec::with_capacity(n);
         let mut payloads = Vec::with_capacity(n);
         for id in 0..n as u32 {
@@ -506,8 +596,8 @@ impl RouterWriter {
             &vectors,
             payloads,
             IvfParams {
-                n_cells: params.n_cells,
-                nprobe: params.nprobe,
+                n_cells,
+                nprobe,
                 kmeans_iters: IVF_KMEANS_ITERS,
                 seed: 0x1F5 ^ self.epoch,
             },
@@ -745,6 +835,7 @@ mod tests {
                         assert!(snap.store_len() >= 60);
                         assert_eq!(v.core_len() + v.tail_len(), snap.store_len());
                     }
+                    SnapshotView::Quant(_) => unreachable!("quant policy not enabled here"),
                 }
                 for _ in 0..2 {
                     let q = unit(&mut rng);
@@ -838,6 +929,104 @@ mod tests {
         assert_eq!(writer.maybe_publish(), Some(1));
         assert_eq!(writer.ring().load().history_len(), 3);
         assert!(!writer.publish_due());
+    }
+
+    #[test]
+    fn quant_publish_with_full_rerank_scores_exactly() {
+        // rerank_factor large enough that rerank covers the whole corpus
+        // (n_neighbors * factor >= n): the quantized scan only *selects*
+        // candidates, the exact kernel rescores all of them, so scores
+        // must be bit-identical to the flat reference at every epoch —
+        // including epochs where big sealed segments really are quantized.
+        let mut rng = Rng::new(51);
+        let params = EagleParams::default();
+        let mut writer = RouterWriter::new(params.clone(), 5, DIM, cadence(25, 10_000));
+        writer.set_quant(QuantParams { enable: true, rerank_factor: 64 });
+        let mut reference = EagleRouter::new(params, 5, FlatStore::new(DIM));
+        let ring = writer.ring();
+        let mut max_quantized = 0usize;
+        for step in 0..600 {
+            let obs = rand_obs(&mut rng, 5);
+            reference.observe(obs.clone());
+            writer.observe(obs);
+            if (step + 1) % 50 == 0 {
+                let snap = ring.load();
+                match snap.view() {
+                    SnapshotView::Quant(v) => max_quantized = max_quantized.max(v.quantized_rows()),
+                    other => panic!("expected quant view, got {other:?}"),
+                }
+                for _ in 0..2 {
+                    let q = unit(&mut rng);
+                    assert_eq!(
+                        snap.scores(&q),
+                        reference.combined_scores(&q),
+                        "quant-published snapshot diverged at step {step}"
+                    );
+                }
+            }
+        }
+        // binary-counter merging in units of publish_every (25) tops out
+        // at a 16x25 = 400-row segment by step 600 — past the 256-row
+        // quantization floor, so real sidecars must have been exercised
+        assert!(
+            max_quantized >= 400,
+            "no large segment ever quantized (max coverage {max_quantized})"
+        );
+        // disabling the policy reverts to plain flat publishes
+        writer.set_quant(QuantParams { enable: false, rerank_factor: 4 });
+        assert!(writer.quant_params().is_none());
+        writer.observe(rand_obs(&mut rng, 5));
+        writer.publish();
+        assert!(matches!(ring.load().view(), SnapshotView::Flat(_)));
+    }
+
+    #[test]
+    fn ivf_auto_cells_resolve_clamp_and_supersede_quant() {
+        // n_cells = 0 (auto) resolves to ceil(sqrt(corpus)) at rebuild
+        // time; the oversized nprobe clamps to the resolved count, which
+        // makes every probe exhaustive => bit-identical to the flat
+        // reference. Quantization is enabled too and must be superseded
+        // past the IVF threshold.
+        let mut rng = Rng::new(52);
+        let params = EagleParams::default();
+        let mut writer = RouterWriter::new(params.clone(), 4, DIM, cadence(20, 10_000));
+        writer.set_ivf(IvfPublishParams { publish_threshold: 60, n_cells: 0, nprobe: 10_000 });
+        writer.set_quant(QuantParams { enable: true, rerank_factor: 64 });
+        let mut reference = EagleRouter::new(params, 4, FlatStore::new(DIM));
+        let ring = writer.ring();
+        let mut saw_quant = false;
+        let mut saw_ivf = false;
+        for step in 0..240 {
+            let obs = rand_obs(&mut rng, 4);
+            reference.observe(obs.clone());
+            writer.observe(obs);
+            if (step + 1) % 20 == 0 {
+                let snap = ring.load();
+                match snap.view() {
+                    SnapshotView::Quant(_) => {
+                        saw_quant = true;
+                        assert!(snap.store_len() < 60, "quant view past ivf threshold");
+                    }
+                    SnapshotView::Ivf(_) => saw_ivf = true,
+                    SnapshotView::Flat(_) => panic!("flat view with quant policy on"),
+                }
+                let q = unit(&mut rng);
+                assert_eq!(
+                    snap.scores(&q),
+                    reference.combined_scores(&q),
+                    "auto-cells snapshot diverged at step {step}"
+                );
+            }
+        }
+        assert!(saw_quant && saw_ivf, "both publication modes must be exercised");
+        let resolved = writer.ivf_resolved_cells();
+        let (core, _) = writer.ivf_core_tail_len();
+        assert!(resolved > 0, "auto n_cells never resolved");
+        assert_eq!(
+            resolved,
+            (core as f64).sqrt().ceil() as usize,
+            "resolved cells != ceil(sqrt(core size {core}))"
+        );
     }
 
     #[test]

@@ -101,6 +101,10 @@ pub struct ServerOptions {
     /// IVF publication policy for every shard lane (threshold 0 = flat
     /// views only).
     pub ivf: IvfPublishParams,
+    /// SQ8 publication policy (`[quant]`): quantized scan + exact rerank
+    /// for flat publications on every shard lane. The `EAGLE_QUANT` env
+    /// var (`1`/`0`) overrides `enable` at startup.
+    pub quant: crate::config::QuantParams,
     /// Periodic persistence beat from the ingest dispatcher (0 = no
     /// beat; a durable store still appends + seals inline and
     /// checkpoints on flush/admin/shutdown).
@@ -130,6 +134,7 @@ impl Default for ServerOptions {
             epoch: EpochParams::default(),
             shards: ShardParams::default(),
             ivf: IvfPublishParams::default(),
+            quant: crate::config::QuantParams::default(),
             persist_interval_ms: 0,
             persist_dir: None,
             seal_bytes: durable.seal_bytes,
@@ -319,6 +324,21 @@ impl ServerState {
             eprintln!("warning: [kernel] backend ignored: {e}");
         }
         writer.set_ivf(opts.ivf);
+        // EAGLE_QUANT flips the SQ8 publication policy without a config
+        // edit — CI's quantized arm rides this, mirroring EAGLE_KERNEL
+        let mut quant = opts.quant;
+        if let Ok(v) = std::env::var("EAGLE_QUANT") {
+            let on = matches!(v.trim(), "1" | "true" | "on" | "yes");
+            if on != quant.enable {
+                eprintln!(
+                    "note: EAGLE_QUANT={} overrides [quant] enable = {}",
+                    v.trim(),
+                    quant.enable
+                );
+                quant.enable = on;
+            }
+        }
+        writer.set_quant(quant);
         let snapshots = writer.handle();
         // the durable store always rides the pipeline (inline appends);
         // the interval only paces the checkpoint beat
@@ -685,6 +705,8 @@ mod tests {
         assert_eq!(opts.epoch, EpochParams::default());
         assert_eq!(opts.shards, ShardParams::default());
         assert_eq!(opts.ivf, IvfPublishParams::default());
+        assert_eq!(opts.quant, crate::config::QuantParams::default());
+        assert!(!opts.quant.enable, "quantization must be opt-in");
         assert_eq!(opts.persist_interval_ms, 0);
         assert!(opts.persist_dir.is_none());
         let durable = DurableOptions::default();

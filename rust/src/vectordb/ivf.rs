@@ -35,12 +35,21 @@ impl Default for IvfParams {
 }
 
 /// Inverted-file index.
+///
+/// Member rows are stored twice: id-major in `data` (exact `vector(id)`
+/// addressing, rebuild input) and cell-major in `cell_data` (each cell's
+/// members contiguous, parallel to `cells`). Probes stream the cell-major
+/// slabs, so a probed cell reads like a small flat store — and the
+/// batched path runs the query-blocked kernel over each slab once for
+/// *all* queries probing that cell instead of degrading to per-query
+/// single dots.
 #[derive(Debug, Clone)]
 pub struct IvfIndex {
     dim: usize,
     params: IvfParams,
     centroids: Vec<f32>,       // [n_cells, dim]
     cells: Vec<Vec<u32>>,      // entry ids per cell
+    cell_data: Vec<Vec<f32>>,  // member rows per cell, parallel to `cells`
     data: Vec<f32>,            // all vectors, row-major by id
     payloads: Vec<Feedback>,
 }
@@ -54,6 +63,7 @@ impl IvfIndex {
             params,
             centroids: Vec::new(),
             cells: Vec::new(),
+            cell_data: Vec::new(),
             data: Vec::new(),
             payloads: Vec::new(),
         };
@@ -73,6 +83,7 @@ impl IvfIndex {
             params,
             centroids: Vec::new(),
             cells: Vec::new(),
+            cell_data: Vec::new(),
             data: Vec::new(),
             payloads: Vec::new(),
         }
@@ -122,6 +133,7 @@ impl IvfIndex {
         if n == 0 {
             self.centroids.clear();
             self.cells.clear();
+            self.cell_data.clear();
             return;
         }
         let k = self.params.n_cells.min(n).max(1);
@@ -167,13 +179,16 @@ impl IvfIndex {
             self.centroids = sums;
         }
 
-        // final assignment into cells
+        // final assignment into cells (ids + the cell-major row slabs the
+        // probe paths stream)
         for cell in &mut self.cells {
             cell.clear();
         }
+        self.cell_data = vec![Vec::new(); k];
         for i in 0..n {
             let c = self.assign(self.row(i));
             self.cells[c].push(i as u32);
+            self.cell_data[c].extend_from_slice(&self.data[i * self.dim..(i + 1) * self.dim]);
         }
     }
 
@@ -290,8 +305,12 @@ impl ReadIndex for IvfIndex {
         }
         let mut topk = TopK::new(k);
         for (cell, _) in cell_scores.into_sorted() {
-            for &id in &self.cells[cell as usize] {
-                let s = dot(self.row(id as usize), query);
+            // stream the cell's contiguous slab (same scores as id-major
+            // access — identical rows, identical kernel)
+            let ids = &self.cells[cell as usize];
+            let rows = &self.cell_data[cell as usize];
+            for (pos, &id) in ids.iter().enumerate() {
+                let s = dot(&rows[pos * self.dim..(pos + 1) * self.dim], query);
                 topk.push(id, s);
             }
         }
@@ -314,25 +333,61 @@ impl ReadIndex for IvfIndex {
         let n_cells = self.n_cells();
         let nprobe = self.params.nprobe.max(1).min(n_cells);
         let backend = kernel::active();
-        let dot = kernel::dot_fn();
         let (topks, tile) = acc.parts_mut();
         tile.clear();
         tile.resize(queries.len() * n_cells, 0.0);
         backend.scan_block_into(queries, self.dim, &self.centroids, tile.as_mut_slice());
+
+        // invert the per-query probe selections into per-cell query lists:
+        // each probed cell's contiguous slab then streams through the
+        // query-blocked kernel ONCE for every query probing it, instead of
+        // degrading to per-query single-dot probes. Per-query probed-cell
+        // sets are unchanged and top-k retention is push-order independent,
+        // so hits stay bit-identical to the single-query path.
         let mut cell_sel = TopK::new(nprobe);
-        for (qi, topk) in topks.iter_mut().enumerate() {
+        let mut probes: Vec<(u32, u32)> = Vec::with_capacity(queries.len() * nprobe);
+        for qi in 0..queries.len() {
             cell_sel.reset(nprobe);
             for (c, &s) in tile[qi * n_cells..(qi + 1) * n_cells].iter().enumerate() {
                 cell_sel.push(c as u32, s);
             }
-            // member rows are scattered by id, so cells probe through the
-            // single-dot kernel — same scores as the single-query path
-            let query = queries[qi];
-            cell_sel.drain_sorted(|cell, _| {
-                for &id in &self.cells[cell as usize] {
-                    topk.push(id, dot(self.row(id as usize), query));
+            cell_sel.drain(|cell, _| probes.push((cell, qi as u32)));
+        }
+        probes.sort_unstable();
+
+        let mut qsub: Vec<&[f32]> = Vec::new();
+        let mut qidx: Vec<usize> = Vec::new();
+        let mut i = 0;
+        while i < probes.len() {
+            let cell = probes[i].0 as usize;
+            qsub.clear();
+            qidx.clear();
+            while i < probes.len() && probes[i].0 as usize == cell {
+                let qi = probes[i].1 as usize;
+                qsub.push(queries[qi]);
+                qidx.push(qi);
+                i += 1;
+            }
+            let ids = &self.cells[cell];
+            let rows = &self.cell_data[cell];
+            let mut start = 0usize;
+            while start < ids.len() {
+                let block = (ids.len() - start).min(kernel::SCAN_BLOCK_ROWS);
+                tile.clear();
+                tile.resize(qsub.len() * block, 0.0);
+                backend.scan_block_into(
+                    &qsub,
+                    self.dim,
+                    &rows[start * self.dim..(start + block) * self.dim],
+                    tile.as_mut_slice(),
+                );
+                for (j, &qi) in qidx.iter().enumerate() {
+                    for (r, &s) in tile[j * block..(j + 1) * block].iter().enumerate() {
+                        topks[qi].push(ids[start + r], s);
+                    }
                 }
-            });
+                start += block;
+            }
         }
     }
 
@@ -355,9 +410,11 @@ impl VectorIndex for IvfIndex {
             // bootstrap: first vector becomes the first centroid
             self.centroids.extend_from_slice(vector);
             self.cells.push(vec![id]);
+            self.cell_data.push(vector.to_vec());
         } else {
             let c = self.assign(vector);
             self.cells[c].push(id);
+            self.cell_data[c].extend_from_slice(vector);
         }
         id
     }

@@ -30,6 +30,17 @@
 //! each pair still runs the fixed reduction above — so blocked scores are
 //! bit-identical to single-query scores at every tile shape.
 //!
+//! ## Widening int8 kernels
+//!
+//! [`Backend::dot_i8`] / [`Backend::scan_i8_block_into`] are the SQ8
+//! (scalar-quantized) analogues: i8×i8 products widened to i32 and
+//! accumulated in i32. Integer accumulation is *exact* (|acc| ≤ dim·127²,
+//! which fits i32 up to dim ≈ 130k), so every backend returns identical
+//! accumulators by arithmetic alone — the fixed-reduction contract holds
+//! trivially, and the quantized scan inherits all the equivalence
+//! properties of the f32 path. See [`super::quant`] for the codebooks
+//! that turn these accumulators into approximate scores.
+//!
 //! ## Dispatch
 //!
 //! [`active`] resolves once per process: the `EAGLE_KERNEL` env var
@@ -167,6 +178,73 @@ impl Backend {
             _ => portable::dot_tile(queries, row),
         }
     }
+
+    /// Widening int8 dot: i8×i8 products taken in i32 and summed in i32.
+    /// Exact integer arithmetic (no overflow up to dim ≈ 130k), so every
+    /// backend returns the *same* accumulator — the SQ8 scan's
+    /// bit-identity anchor. Safe on any host (unavailable backends fall
+    /// back to portable, same value by exactness).
+    #[inline]
+    pub fn dot_i8(self, a: &[i8], b: &[i8]) -> i32 {
+        // hard assert: the SIMD paths trust the lengths with raw loads
+        assert_eq!(a.len(), b.len(), "dot_i8 length mismatch");
+        match self.resolved() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: resolved() verified AVX2 is present on this host.
+            Backend::Avx2 => unsafe { avx2::dot_i8(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is always present on aarch64.
+            Backend::Neon => unsafe { neon::dot_i8(a, b) },
+            _ => portable::dot_i8(a, b),
+        }
+    }
+
+    /// Int8 analogue of [`Backend::scan_block_into`]: score a tile of
+    /// quantized queries against every row of a contiguous i8 code slab,
+    /// `out[q * n_rows + r] = dot_i8(queries[q], row r)`. Identical
+    /// accumulators to per-pair [`Backend::dot_i8`] on every backend.
+    pub fn scan_i8_block_into(self, queries: &[&[i8]], dim: usize, rows: &[i8], out: &mut [i32]) {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(rows.len() % dim, 0, "code slab not a multiple of dim");
+        let n_rows = rows.len() / dim;
+        assert_eq!(out.len(), queries.len() * n_rows, "out buffer size mismatch");
+        for q in queries {
+            assert_eq!(q.len(), dim, "query dim mismatch");
+        }
+        let backend = self.resolved();
+        let mut qi = 0usize;
+        while qi + QUERY_TILE <= queries.len() {
+            let tile = [queries[qi], queries[qi + 1], queries[qi + 2], queries[qi + 3]];
+            for r in 0..n_rows {
+                let row = &rows[r * dim..(r + 1) * dim];
+                let s = backend.dot_i8_tile(&tile, row);
+                for (t, &st) in s.iter().enumerate() {
+                    out[(qi + t) * n_rows + r] = st;
+                }
+            }
+            qi += QUERY_TILE;
+        }
+        for (q, query) in queries.iter().enumerate().skip(qi) {
+            for r in 0..n_rows {
+                out[q * n_rows + r] = backend.dot_i8(query, &rows[r * dim..(r + 1) * dim]);
+            }
+        }
+    }
+
+    /// One int8 register tile: [`QUERY_TILE`] quantized queries against
+    /// one code row, the row loaded once. Callers guarantee availability.
+    #[inline]
+    fn dot_i8_tile(self, queries: &[&[i8]; QUERY_TILE], row: &[i8]) -> [i32; QUERY_TILE] {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: callers resolve availability before the row loop.
+            Backend::Avx2 => unsafe { avx2::dot_i8_tile(queries, row) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is always present on aarch64.
+            Backend::Neon => unsafe { neon::dot_i8_tile(queries, row) },
+            _ => portable::dot_i8_tile(queries, row),
+        }
+    }
 }
 
 /// The fixed pairwise reduction tree every backend finishes with.
@@ -222,15 +300,39 @@ mod portable {
         }
         out
     }
+
+    pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let mut acc = 0i32;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += x as i32 * y as i32;
+        }
+        acc
+    }
+
+    pub fn dot_i8_tile(queries: &[&[i8]; QUERY_TILE], row: &[i8]) -> [i32; QUERY_TILE] {
+        let mut out = [0i32; QUERY_TILE];
+        for (i, &r) in row.iter().enumerate() {
+            let rv = r as i32;
+            for (t, q) in queries.iter().enumerate() {
+                out[t] += q[i] as i32 * rv;
+            }
+        }
+        out
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+        __m128i, __m256i, _mm256_add_epi32, _mm256_add_ps, _mm256_cvtepi8_epi16,
+        _mm256_loadu_ps, _mm256_madd_epi16, _mm256_mul_ps, _mm256_setzero_ps,
+        _mm256_setzero_si256, _mm256_storeu_ps, _mm256_storeu_si256, _mm_loadu_si128,
     };
 
     use super::{add_tail, reduce_lanes, LANES, QUERY_TILE};
+
+    /// i8 elements per int8 inner-loop step (one 128-bit load, widened).
+    const I8_STEP: usize = 16;
 
     /// # Safety
     /// Requires AVX2 on the running CPU.
@@ -277,13 +379,84 @@ mod avx2 {
         }
         out
     }
+
+    /// Widen 16 i8 lanes to i16 (sign-extended) from an unaligned load.
+    ///
+    /// # Safety
+    /// `p` must be readable for 16 bytes; requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen16(p: *const i8) -> __m256i {
+        _mm256_cvtepi8_epi16(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// Sum the 8 i32 lanes of an accumulator plus a scalar tail. Exact,
+    /// so the summation order is immaterial.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn finish_i8(acc: __m256i, a: &[i8], b: &[i8], from: usize) -> i32 {
+        let mut lanes = [0i32; LANES];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum: i32 = lanes.iter().sum();
+        for i in from..a.len() {
+            sum += a[i] as i32 * b[i] as i32;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Requires AVX2 on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let chunks = a.len() / I8_STEP;
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let i = c * I8_STEP;
+            let va = widen16(a.as_ptr().add(i));
+            let vb = widen16(b.as_ptr().add(i));
+            // madd: i16×i16 products pairwise-summed straight into i32 —
+            // no saturation is reachable (|p0 + p1| ≤ 2·127² < 2^15·2)
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        }
+        finish_i8(acc, a, b, chunks * I8_STEP)
+    }
+
+    /// # Safety
+    /// Requires AVX2 on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_tile(queries: &[&[i8]; QUERY_TILE], row: &[i8]) -> [i32; QUERY_TILE] {
+        let chunks = row.len() / I8_STEP;
+        let mut acc = [_mm256_setzero_si256(); QUERY_TILE];
+        for c in 0..chunks {
+            let i = c * I8_STEP;
+            let rv = widen16(row.as_ptr().add(i));
+            for (t, q) in queries.iter().enumerate() {
+                let qv = widen16(q.as_ptr().add(i));
+                acc[t] = _mm256_add_epi32(acc[t], _mm256_madd_epi16(qv, rv));
+            }
+        }
+        let mut out = [0i32; QUERY_TILE];
+        for (t, q) in queries.iter().enumerate() {
+            out[t] = finish_i8(acc[t], q, row, chunks * I8_STEP);
+        }
+        out
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
 mod neon {
-    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+    use std::arch::aarch64::{
+        int32x4_t, vaddq_f32, vaddvq_s32, vdupq_n_f32, vdupq_n_s32, vget_high_s8, vget_low_s8,
+        vld1q_f32, vld1q_s8, vmull_s8, vmulq_f32, vpadalq_s16, vst1q_f32,
+    };
 
     use super::{add_tail, reduce_lanes, LANES, QUERY_TILE};
+
+    /// i8 elements per int8 inner-loop step (one 128-bit load).
+    const I8_STEP: usize = 16;
 
     /// # Safety
     /// Requires NEON (always present on aarch64).
@@ -338,6 +511,62 @@ mod neon {
             vst1q_f32(lanes.as_mut_ptr().add(4), acc1[t]);
             add_tail(&mut lanes, q, row, chunks * LANES);
             out[t] = reduce_lanes(lanes);
+        }
+        out
+    }
+
+    /// Accumulate one 16-element i8 chunk of `a·b` into `acc`: widening
+    /// multiplies (i8×i8 → i16) pairwise-accumulated into i32 lanes.
+    /// Exact integer arithmetic throughout.
+    ///
+    /// # Safety
+    /// `a` and `b` must be readable for 16 bytes; requires NEON.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn madd16_i8(acc: int32x4_t, a: *const i8, b: *const i8) -> int32x4_t {
+        let va = vld1q_s8(a);
+        let vb = vld1q_s8(b);
+        let acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(va), vget_low_s8(vb)));
+        vpadalq_s16(acc, vmull_s8(vget_high_s8(va), vget_high_s8(vb)))
+    }
+
+    /// # Safety
+    /// Requires NEON (always present on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let chunks = a.len() / I8_STEP;
+        let mut acc = vdupq_n_s32(0);
+        for c in 0..chunks {
+            let i = c * I8_STEP;
+            acc = madd16_i8(acc, a.as_ptr().add(i), b.as_ptr().add(i));
+        }
+        let mut sum = vaddvq_s32(acc);
+        for i in chunks * I8_STEP..a.len() {
+            sum += a[i] as i32 * b[i] as i32;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Requires NEON (always present on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8_tile(queries: &[&[i8]; QUERY_TILE], row: &[i8]) -> [i32; QUERY_TILE] {
+        let chunks = row.len() / I8_STEP;
+        let mut acc = [vdupq_n_s32(0); QUERY_TILE];
+        for c in 0..chunks {
+            let i = c * I8_STEP;
+            let rp = row.as_ptr().add(i);
+            for (t, q) in queries.iter().enumerate() {
+                acc[t] = madd16_i8(acc[t], q.as_ptr().add(i), rp);
+            }
+        }
+        let mut out = [0i32; QUERY_TILE];
+        for (t, q) in queries.iter().enumerate() {
+            let mut sum = vaddvq_s32(acc[t]);
+            for i in chunks * I8_STEP..row.len() {
+                sum += q[i] as i32 * row[i] as i32;
+            }
+            out[t] = sum;
         }
         out
     }
@@ -652,7 +881,66 @@ mod tests {
             let q: &[f32] = &[1.0, 0.0, 0.0, 0.0];
             let mut out1 = [0.0f32; 0];
             backend.scan_block_into(&[q], 4, &[], &mut out1);
+            assert_eq!(backend.dot_i8(&[], &[]), 0);
+            let mut iout = [0i32; 0];
+            backend.scan_i8_block_into(&[], 4, &[], &mut iout);
         }
+    }
+
+    fn vec_i8(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn i8_dot_exact_on_every_backend() {
+        // the int8 contract: i32 accumulation is exact, so every backend
+        // must equal the i64-checked naive sum *exactly* — full-range
+        // codes, every tail residue of the 16-lane inner step
+        prop::check("dot_i8 == naive i64", 200, |rng| {
+            let n = match rng.below(3) {
+                0 => rng.below(33),           // tiny + every tail residue
+                1 => 16 * (1 + rng.below(32)), // exact multiples of the step
+                _ => 1 + rng.below(600),       // broad
+            };
+            let a = vec_i8(rng, n);
+            let b = vec_i8(rng, n);
+            let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            for backend in backends() {
+                let got = backend.dot_i8(&a, &b);
+                prop::assert_prop(
+                    got as i64 == want,
+                    &format!("{} dot_i8: {got} != {want} at n={n}", backend.name()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i8_blocked_scan_matches_single_dots() {
+        prop::check("scan_i8_block == dot_i8 grid", 60, |rng| {
+            let dim = 1 + rng.below(80);
+            let n_rows = rng.below(30);
+            let n_q = rng.below(11);
+            let rows = vec_i8(rng, n_rows * dim);
+            let queries: Vec<Vec<i8>> = (0..n_q).map(|_| vec_i8(rng, dim)).collect();
+            let qrefs: Vec<&[i8]> = queries.iter().map(|q| q.as_slice()).collect();
+            for backend in backends() {
+                let mut out = vec![0i32; n_q * n_rows];
+                backend.scan_i8_block_into(&qrefs, dim, &rows, &mut out);
+                for (q, query) in qrefs.iter().enumerate() {
+                    for r in 0..n_rows {
+                        let want = Backend::Portable.dot_i8(query, &rows[r * dim..(r + 1) * dim]);
+                        let got = out[q * n_rows + r];
+                        prop::assert_prop(
+                            got == want,
+                            &format!("{} i8 blocked (q{q},r{r}): {got} != {want}", backend.name()),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

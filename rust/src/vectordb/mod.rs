@@ -19,11 +19,14 @@
 //! [`kernel`] (AVX2 / NEON / portable, bit-identical by construction);
 //! batched searches use its query-blocked scans via
 //! [`ReadIndex::search_batch_into`] so corpus bandwidth is amortized
-//! across a batch.
+//! across a batch. For bandwidth-bound corpora, [`quant`] layers an SQ8
+//! scalar-quantized scan (1 byte/element streamed through widening int8
+//! kernels) with an exact rerank tail over the same views.
 
 pub mod flat;
 pub mod ivf;
 pub mod kernel;
+pub mod quant;
 pub mod topk;
 pub mod view;
 

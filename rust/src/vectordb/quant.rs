@@ -1,0 +1,576 @@
+//! SQ8 scalar-quantized corpus scoring with an exact rerank tail (§Perf).
+//!
+//! The flat scan is memory-bandwidth-bound once the SIMD kernels exist:
+//! at dim 256 every query streams 1 KiB per stored vector. This module
+//! cuts that 4x by scanning 1-byte codes instead of f32s, then claws the
+//! lost precision back with an exact rerank over a small over-fetched
+//! candidate set.
+//!
+//! ## Layout
+//!
+//! Quantization is a per-segment *sidecar*, not a replacement: each
+//! sealed [`Segment`] at least [`QUANT_MIN_SEGMENT_ROWS`] rows long gets
+//! a [`QuantSegment`] — an affine codebook (`mid`/`scale` from the
+//! segment's min/max) plus one i8 code per element — while the exact f32
+//! rows stay resident for reranking, `vector()` access, and ELO replay.
+//! Segments below the floor (the write-fresh tail under binary-counter
+//! merging) scan exactly; that is the "exact tail" of the publication
+//! policy. Because segments are immutable, sidecars are encoded once per
+//! merge in [`QuantCache`] (off the route path, at publish), costing the
+//! same amortized O(log n) per entry as segment merging itself.
+//!
+//! ## Scoring
+//!
+//! With a row decoded as `x ≈ mid + scale·c` and the query quantized
+//! symmetrically as `q ≈ qscale·u` (both `c`, `u` ∈ [-127, 127]):
+//!
+//! ```text
+//! q·x ≈ (qscale·mid)·Σu  +  (qscale·scale)·Σ u·c
+//! ```
+//!
+//! Both sums are exact i32s from the widening int8 kernels
+//! ([`kernel::Backend::dot_i8`]), so the approximate score is two f32
+//! multiplies and one add on identical integers — **bit-identical on
+//! every backend**, single-query or blocked, by arithmetic alone.
+//!
+//! ## Exact rerank
+//!
+//! A scan over-fetches `rerank_factor · k` candidates on approximate
+//! scores, then rescores each through the exact f32 kernel before the
+//! final top-k. Quantization error can therefore only *drop* a true
+//! neighbor from the candidate set, never corrupt a returned score; with
+//! a rerank set covering the whole quantized corpus the result is
+//! bit-identical to the flat path (property-tested below), and at the
+//! default `rerank_factor` the bench gate holds `recall_ratio ≥ 0.99`.
+
+use std::sync::Arc;
+
+use super::kernel;
+use super::topk::TopK;
+use super::view::{FrozenView, Segment};
+use super::{BatchTopK, Feedback, Hit, ReadIndex};
+
+/// Sealed segments shorter than this stay exact (the publication
+/// policy's exact tail): encoding tiny write-fresh segments would buy no
+/// bandwidth and churn the cache on every merge.
+pub const QUANT_MIN_SEGMENT_ROWS: usize = 256;
+
+/// Default candidate over-fetch multiple for the exact rerank
+/// (`[quant] rerank_factor`).
+pub const DEFAULT_RERANK_FACTOR: usize = 4;
+
+/// An immutable SQ8 sidecar for one sealed segment: per-segment affine
+/// codebook plus one i8 code per element, row-major like the segment.
+#[derive(Debug)]
+pub struct QuantSegment {
+    dim: usize,
+    len: usize,
+    /// Codebook midpoint: `(min + max) / 2` over the segment's elements.
+    mid: f32,
+    /// Codebook step per code unit: `(max - min) / 2 / 127`; decode is
+    /// `mid + scale·code`, so the round-trip error is at most `scale/2`.
+    scale: f32,
+    codes: Vec<i8>,
+}
+
+impl QuantSegment {
+    /// Encode a row-major f32 slab with a min/max affine codebook.
+    pub fn encode(dim: usize, data: &[f32]) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(data.len() % dim, 0, "slab not a multiple of dim");
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if data.is_empty() {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        let mid = (lo + hi) * 0.5;
+        let half = (hi - lo) * 0.5;
+        let scale = if half > 0.0 { half / 127.0 } else { 0.0 };
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let codes = data
+            .iter()
+            .map(|&x| ((x - mid) * inv).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        QuantSegment { dim, len: data.len() / dim, mid, scale, codes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The codebook step: decode error is bounded by `step() / 2` (plus
+    /// one f32 rounding) — the property the round-trip test asserts.
+    pub fn step(&self) -> f32 {
+        self.scale
+    }
+
+    /// Bytes streamed when scanning this sidecar (1 per element).
+    pub fn scan_bytes(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// Decode one row back to f32 (tests / diagnostics).
+    pub fn decode_row(&self, row: usize) -> Vec<f32> {
+        self.codes[row * self.dim..(row + 1) * self.dim]
+            .iter()
+            .map(|&c| self.mid + self.scale * c as f32)
+            .collect()
+    }
+
+    /// Approximate score from the exact integer accumulator. Two
+    /// multiplies and one add on identical integers — the same bits from
+    /// every backend and every scan shape.
+    #[inline]
+    fn score(&self, q: &QuantQuery, acc: i32) -> f32 {
+        (q.scale * self.mid) * (q.sum as f32) + (q.scale * self.scale) * (acc as f32)
+    }
+
+    /// Single-query approximate scan: push `(base + row, score)` for
+    /// every row into the candidate selector.
+    pub(crate) fn scan_into(&self, q: &QuantQuery, base: u32, cand: &mut TopK) {
+        let backend = kernel::active();
+        for r in 0..self.len {
+            let acc = backend.dot_i8(&q.codes, &self.codes[r * self.dim..(r + 1) * self.dim]);
+            cand.push(base + r as u32, self.score(q, acc));
+        }
+    }
+
+    /// Blocked multi-query approximate scan ([`kernel::SCAN_BLOCK_ROWS`]
+    /// rows per tile, same shape as the f32 scan): identical scores to
+    /// per-query [`QuantSegment::scan_into`] because the accumulators are
+    /// exact. `qcodes` are `queries`' code slices (hoisted by the caller).
+    pub(crate) fn scan_block_into(
+        &self,
+        queries: &[QuantQuery],
+        qcodes: &[&[i8]],
+        base: u32,
+        cands: &mut [TopK],
+        itile: &mut Vec<i32>,
+    ) {
+        debug_assert_eq!(queries.len(), cands.len(), "query/selector count mismatch");
+        let backend = kernel::active();
+        let mut start = 0usize;
+        while start < self.len {
+            let block = (self.len - start).min(kernel::SCAN_BLOCK_ROWS);
+            itile.clear();
+            itile.resize(queries.len() * block, 0);
+            backend.scan_i8_block_into(
+                qcodes,
+                self.dim,
+                &self.codes[start * self.dim..(start + block) * self.dim],
+                itile.as_mut_slice(),
+            );
+            for (qi, cand) in cands.iter_mut().enumerate() {
+                let q = &queries[qi];
+                for (r, &acc) in itile[qi * block..(qi + 1) * block].iter().enumerate() {
+                    cand.push(base + (start + r) as u32, self.score(q, acc));
+                }
+            }
+            start += block;
+        }
+    }
+}
+
+/// A query quantized symmetrically (`q ≈ scale·codes`, no offset) for
+/// the int8 scan, with the code sum pre-folded for the affine correction.
+#[derive(Debug)]
+pub struct QuantQuery {
+    scale: f32,
+    sum: i32,
+    codes: Vec<i8>,
+}
+
+impl QuantQuery {
+    pub fn encode(q: &[f32]) -> Self {
+        let amax = q.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = if amax > 0.0 { amax / 127.0 } else { 0.0 };
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let mut sum = 0i32;
+        let codes = q
+            .iter()
+            .map(|&x| {
+                let c = (x * inv).round().clamp(-127.0, 127.0) as i32;
+                sum += c;
+                c as i8
+            })
+            .collect();
+        QuantQuery { scale, sum, codes }
+    }
+}
+
+/// Writer-side sidecar cache: segments are immutable, so each one is
+/// encoded exactly once per merge. Holding strong `Arc`s to both halves
+/// keeps pointer identity stable; [`QuantCache::refresh`] drops entries
+/// for merged-away segments so the cache tracks the live set.
+#[derive(Debug, Default)]
+pub struct QuantCache {
+    entries: Vec<(Arc<Segment>, Arc<QuantSegment>)>,
+}
+
+impl QuantCache {
+    pub fn new() -> Self {
+        QuantCache::default()
+    }
+
+    /// Number of cached sidecars (diagnostics).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Read-only SQ8 view: the exact [`FrozenView`] plus quantized sidecars
+/// for its large sealed segments. Scans stream the codes, over-fetch
+/// `rerank_factor · k` candidates, rerank them exactly, and merge with
+/// the exact scan of unquantized (tail) segments.
+#[derive(Debug, Clone)]
+pub struct QuantView {
+    exact: FrozenView,
+    /// Parallel to `exact.segments()`: `None` = segment scans exactly.
+    quant: Vec<Option<Arc<QuantSegment>>>,
+    rerank_factor: usize,
+}
+
+impl QuantView {
+    /// Build a quantized view over a frozen snapshot, encoding sidecars
+    /// for segments of at least `min_rows` rows (cached across publishes
+    /// in `cache`). Runs on the writer at publish time — off the route
+    /// path. `min_rows = 0` quantizes every non-empty segment.
+    pub fn build(
+        exact: FrozenView,
+        cache: &mut QuantCache,
+        min_rows: usize,
+        rerank_factor: usize,
+    ) -> Self {
+        let mut fresh = Vec::new();
+        let mut quant = Vec::with_capacity(exact.segments().len());
+        for seg in exact.segments() {
+            if seg.len() < min_rows.max(1) {
+                quant.push(None);
+                continue;
+            }
+            let sidecar = cache
+                .entries
+                .iter()
+                .find(|(s, _)| Arc::ptr_eq(s, seg))
+                .map(|(_, q)| q.clone())
+                .unwrap_or_else(|| {
+                    Arc::new(QuantSegment::encode(exact.dim(), seg.vectors()))
+                });
+            fresh.push((seg.clone(), sidecar.clone()));
+            quant.push(Some(sidecar));
+        }
+        cache.entries = fresh;
+        QuantView { exact, quant, rerank_factor: rerank_factor.max(1) }
+    }
+
+    pub fn rerank_factor(&self) -> usize {
+        self.rerank_factor
+    }
+
+    /// Rows covered by quantized sidecars (the rest scan exactly).
+    pub fn quantized_rows(&self) -> usize {
+        self.quant.iter().flatten().map(|q| q.len()).sum()
+    }
+
+    /// Bytes streamed per single query at `k`: 1 per quantized element,
+    /// 4 per exact-tail element, plus the exact rows the rerank touches.
+    pub fn scan_bytes_per_query(&self, k: usize) -> usize {
+        let dim = self.exact.dim();
+        let mut bytes = 0usize;
+        for (seg, q) in self.exact.segments().iter().zip(&self.quant) {
+            bytes += match q {
+                Some(qs) => qs.scan_bytes(),
+                None => seg.len() * dim * 4,
+            };
+        }
+        let rerank = self.rerank_factor.saturating_mul(k).min(self.quantized_rows());
+        bytes + rerank * dim * 4
+    }
+
+    /// Rescore every over-fetched candidate through the exact kernel into
+    /// the final selector. Push order is immaterial: TopK retention is a
+    /// function of the (score, id) set, and the scores here are the same
+    /// exact-kernel bits the flat path pushes.
+    fn rerank_into(&self, query: &[f32], cand: &mut TopK, out: &mut TopK) {
+        let dot = kernel::dot_fn();
+        cand.drain(|id, _| out.push(id, dot(self.exact.vector(id), query)));
+    }
+}
+
+impl ReadIndex for QuantView {
+    fn dim(&self) -> usize {
+        self.exact.dim()
+    }
+
+    fn len(&self) -> usize {
+        self.exact.len()
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.exact.dim(), "query dim mismatch");
+        if k == 0 || self.exact.is_empty() {
+            return Vec::new();
+        }
+        if self.quantized_rows() == 0 {
+            return self.exact.search(query, k);
+        }
+        let q = QuantQuery::encode(query);
+        let mut cand = TopK::new(self.rerank_factor.saturating_mul(k).max(k));
+        let mut out = TopK::new(k);
+        for (i, seg) in self.exact.segments().iter().enumerate() {
+            let base = self.exact.bases()[i];
+            match &self.quant[i] {
+                Some(qs) => qs.scan_into(&q, base, &mut cand),
+                None => seg.scan_into(query, base, &mut out),
+            }
+        }
+        self.rerank_into(query, &mut cand, &mut out);
+        out.into_sorted()
+            .into_iter()
+            .map(|(id, score)| Hit { id, score })
+            .collect()
+    }
+
+    fn search_batch_into(&self, queries: &[&[f32]], k: usize, acc: &mut BatchTopK) {
+        for q in queries {
+            assert_eq!(q.len(), self.exact.dim(), "query dim mismatch");
+        }
+        acc.begin(queries.len(), k);
+        if k == 0 || queries.is_empty() || self.exact.is_empty() {
+            return;
+        }
+        let (topks, tile) = acc.parts_mut();
+        if self.quantized_rows() == 0 {
+            self.exact.scan_segments_into(queries, 0, topks, tile);
+            return;
+        }
+        let qq: Vec<QuantQuery> = queries.iter().map(|q| QuantQuery::encode(q)).collect();
+        let qcodes: Vec<&[i8]> = qq.iter().map(|q| q.codes.as_slice()).collect();
+        let cap = self.rerank_factor.saturating_mul(k).max(k);
+        let mut cands: Vec<TopK> = (0..queries.len()).map(|_| TopK::new(cap)).collect();
+        let mut itile: Vec<i32> = Vec::new();
+        for (i, seg) in self.exact.segments().iter().enumerate() {
+            let base = self.exact.bases()[i];
+            match &self.quant[i] {
+                Some(qs) => qs.scan_block_into(&qq, &qcodes, base, &mut cands, &mut itile),
+                None => seg.scan_block_into(queries, base, topks, tile),
+            }
+        }
+        for (qi, cand) in cands.iter_mut().enumerate() {
+            self.rerank_into(queries[qi], cand, &mut topks[qi]);
+        }
+    }
+
+    fn feedback(&self, id: u32) -> &Feedback {
+        self.exact.feedback(id)
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        self.exact.vector(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::flat::FlatStore;
+    use super::super::testutil::*;
+    use super::super::view::SegmentStore;
+    use super::super::VectorIndex;
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn quantized_twin(
+        rng: &mut Rng,
+        n: usize,
+        dim: usize,
+        min_rows: usize,
+        rerank_factor: usize,
+    ) -> (FlatStore, QuantView, QuantCache) {
+        let mut flat = FlatStore::new(dim);
+        let mut seg = SegmentStore::new(dim);
+        for i in 0..n {
+            let v = random_unit(rng, dim);
+            flat.add(&v, dummy_feedback(i));
+            seg.add(&v, dummy_feedback(i));
+        }
+        let mut cache = QuantCache::new();
+        let view = QuantView::build(seg.freeze(), &mut cache, min_rows, rerank_factor);
+        (flat, view, cache)
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_codebook_step() {
+        // ISSUE property: |decode(encode(x)) - x| <= step/2 for every
+        // element, across magnitudes and degenerate (constant) segments
+        prop::check("sq8 roundtrip <= step/2", 60, |rng| {
+            let dim = 1 + rng.below(64);
+            let rows = 1 + rng.below(40);
+            let scale = [1.0f32, 1e-3, 1e3][rng.below(3)];
+            let data: Vec<f32> = if rng.below(8) == 0 {
+                vec![scale; rows * dim] // constant slab: step = 0, exact
+            } else {
+                prop::vec_f32(rng, rows * dim).iter().map(|x| x * scale).collect()
+            };
+            let qs = QuantSegment::encode(dim, &data);
+            // half a step, widened a hair for the two f32 roundings in
+            // the encode/decode path
+            let bound = qs.step() * 0.5 * 1.001 + f32::EPSILON;
+            for r in 0..rows {
+                let decoded = qs.decode_row(r);
+                for (d, &x) in data[r * dim..(r + 1) * dim].iter().enumerate() {
+                    let err = (decoded[d] - x).abs();
+                    prop::assert_prop(
+                        err <= bound,
+                        &format!("row {r} dim {d}: err {err} > bound {bound}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_rerank_bit_identical_to_flat() {
+        // ISSUE property: with the rerank set covering the whole corpus,
+        // every returned score comes from the exact kernel, so the view
+        // must equal FlatStore exactly — ids, scores, tie-breaks. (The
+        // EAGLE_KERNEL=portable CI arm re-runs this on the portable int8
+        // dispatch; SIMD hosts cover their backend here.)
+        prop::check("sq8 full rerank == flat", 25, |rng| {
+            let dim = [8, 16, 64][rng.below(3)];
+            let n = 1 + rng.below(500);
+            let k = 1 + rng.below(20);
+            // rerank_factor * k >= n: candidates = the whole corpus
+            let rerank_factor = n / k.max(1) + 1;
+            let (flat, view, _) = quantized_twin(rng, n, dim, 1, rerank_factor);
+            prop::assert_prop(view.quantized_rows() == n, "all rows quantized")?;
+            let q = random_unit(rng, dim);
+            prop::assert_prop(view.search(&q, k) == flat.search(&q, k), "hits != flat")
+        });
+    }
+
+    #[test]
+    fn batch_bit_identical_to_singles() {
+        // blocked int8 scan + rerank must retain exactly the single-query
+        // hits: integer accumulators make the approximate scores identical
+        // across scan shapes, and rerank scores are exact-kernel bits
+        prop::check("sq8 batch == singles", 20, |rng| {
+            let dim = [8, 32][rng.below(2)];
+            let n = 1 + rng.below(400);
+            let k = 1 + rng.below(15);
+            let factor = 1 + rng.below(6);
+            let min_rows = [1, 64][rng.below(2)];
+            let (_, view, _) = quantized_twin(rng, n, dim, min_rows, factor);
+            let n_q = 1 + rng.below(9);
+            let queries: Vec<Vec<f32>> = (0..n_q).map(|_| random_unit(rng, dim)).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let batch = view.search_batch(&qrefs, k);
+            for (q, hits) in qrefs.iter().zip(&batch) {
+                prop::assert_prop(hits == &view.search(q, k), "batch hits != single hits")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recall_high_at_default_rerank_factor() {
+        // the quality gate the bench sweep enforces in CI, in miniature:
+        // top-k overlap with the exact path at the default over-fetch
+        let mut rng = Rng::new(0x5108);
+        let dim = 64;
+        let n = 4096;
+        let k = 20;
+        let (flat, view, _) = quantized_twin(&mut rng, n, dim, 1, DEFAULT_RERANK_FACTOR);
+        let mut hit = 0usize;
+        let trials = 40;
+        for _ in 0..trials {
+            let q = random_unit(&mut rng, dim);
+            let exact: Vec<u32> = flat.search(&q, k).iter().map(|h| h.id).collect();
+            let approx = view.search(&q, k);
+            hit += approx.iter().filter(|h| exact.contains(&h.id)).count();
+        }
+        let recall = hit as f64 / (trials * k) as f64;
+        assert!(recall >= 0.99, "recall@{k} = {recall}");
+    }
+
+    #[test]
+    fn unquantized_view_is_exact_passthrough() {
+        // min_rows above every segment size: no sidecars, pure exact scan
+        let mut rng = Rng::new(7);
+        let (flat, view, cache) = quantized_twin(&mut rng, 200, 16, usize::MAX, 4);
+        assert_eq!(view.quantized_rows(), 0);
+        assert!(cache.is_empty());
+        let q = random_unit(&mut rng, 16);
+        assert_eq!(view.search(&q, 10), flat.search(&q, 10));
+        let qrefs = [q.as_slice()];
+        assert_eq!(view.search_batch(&qrefs, 10)[0], flat.search(&q, 10));
+    }
+
+    #[test]
+    fn cache_reuses_sidecars_and_drops_merged_segments() {
+        let mut rng = Rng::new(9);
+        let dim = 8;
+        let mut seg = SegmentStore::new(dim);
+        for i in 0..300 {
+            seg.add(&random_unit(&mut rng, dim), dummy_feedback(i));
+        }
+        let mut cache = QuantCache::new();
+        let v1 = QuantView::build(seg.freeze(), &mut cache, 1, 4);
+        let n_cached = cache.len();
+        assert!(n_cached > 0);
+        // re-publish without inserts: same segments, sidecars shared
+        let v2 = QuantView::build(seg.freeze(), &mut cache, 1, 4);
+        assert_eq!(cache.len(), n_cached);
+        for (a, b) in v1.quant.iter().zip(&v2.quant) {
+            match (a, b) {
+                (Some(a), Some(b)) => assert!(Arc::ptr_eq(a, b), "sidecar re-encoded"),
+                _ => panic!("sidecar disappeared"),
+            }
+        }
+        // grow until merges consume the old segments: stale entries drop
+        for i in 300..1200 {
+            seg.add(&random_unit(&mut rng, dim), dummy_feedback(i));
+            if i % 100 == 0 {
+                let _ = QuantView::build(seg.freeze(), &mut cache, 1, 4);
+            }
+        }
+        let view = QuantView::build(seg.freeze(), &mut cache, 1, 4);
+        assert!(cache.len() <= view.exact.segment_count());
+    }
+
+    #[test]
+    fn bytes_per_query_counts_codes_not_floats() {
+        let mut rng = Rng::new(11);
+        let dim = 32;
+        let (_, view, _) = quantized_twin(&mut rng, 1024, dim, 1, 4);
+        let k = 10;
+        let exact_bytes = 1024 * dim * 4;
+        let got = view.scan_bytes_per_query(k);
+        // codes (1024*dim) + rerank (40 rows of f32) — far under 4x
+        assert_eq!(got, 1024 * dim + 4 * k * dim * 4);
+        assert!(got * 3 < exact_bytes, "{got} vs {exact_bytes}");
+    }
+
+    #[test]
+    fn empty_and_k_zero() {
+        let mut cache = QuantCache::new();
+        let view = QuantView::build(FrozenView::empty(4), &mut cache, 1, 4);
+        assert!(view.search(&[1.0, 0.0, 0.0, 0.0], 5).is_empty());
+        let mut rng = Rng::new(3);
+        let (_, view, _) = quantized_twin(&mut rng, 50, 8, 1, 4);
+        let q = random_unit(&mut rng, 8);
+        assert!(view.search(&q, 0).is_empty());
+    }
+}

@@ -91,6 +91,17 @@ impl TopK {
         }
     }
 
+    /// Visit every retained item in unspecified order and empty the
+    /// selector. The SQ8 exact-rerank path drains its over-fetched
+    /// candidate set this way: every candidate gets rescored by the exact
+    /// kernel anyway, so the sort [`TopK::drain_sorted`] pays would be
+    /// wasted work in the hot loop.
+    pub fn drain(&mut self, mut f: impl FnMut(u32, f32)) {
+        for (s, i) in self.heap.drain(..) {
+            f(i, s);
+        }
+    }
+
     /// Sorted snapshot without consuming (allocates).
     pub fn sorted(&self) -> Vec<(u32, f32)> {
         self.clone().into_sorted()
@@ -195,6 +206,23 @@ mod tests {
         // and the selector is reusable afterwards
         t.push(5, 1.0);
         assert_eq!(t.into_sorted(), vec![(5, 1.0)]);
+    }
+
+    #[test]
+    fn drain_visits_same_set_as_sorted_and_empties() {
+        let mut rng = Rng::new(23);
+        let mut t = TopK::new(5);
+        let mut twin = TopK::new(5);
+        for i in 0..100u32 {
+            let s = rng.f32();
+            t.push(i, s);
+            twin.push(i, s);
+        }
+        let mut drained = Vec::new();
+        t.drain(|i, s| drained.push((i, s)));
+        drained.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        assert_eq!(drained, twin.into_sorted());
+        assert!(t.is_empty());
     }
 
     #[test]

@@ -72,8 +72,14 @@ impl Segment {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// The row-major vector slab (the SQ8 sidecar encoder reads sealed
+    /// segments through this).
+    pub(crate) fn vectors(&self) -> &[f32] {
+        &self.data
+    }
+
     /// Scan this segment into `topk`, offsetting local indices by `base`.
-    fn scan_into(&self, query: &[f32], base: u32, topk: &mut TopK) {
+    pub(crate) fn scan_into(&self, query: &[f32], base: u32, topk: &mut TopK) {
         // resolve the kernel dispatch once for the whole scan
         let dot = kernel::dot_fn();
         for i in 0..self.payloads.len() {
@@ -84,7 +90,7 @@ impl Segment {
     /// Scan this segment for a whole query block through the blocked
     /// kernel, pushing `(base + row, score)` into each query's selector.
     /// Bit-identical hits to [`Segment::scan_into`] per query.
-    fn scan_block_into(
+    pub(crate) fn scan_block_into(
         &self,
         queries: &[&[f32]],
         base: u32,
@@ -118,6 +124,18 @@ impl FrozenView {
 
     pub fn segment_count(&self) -> usize {
         self.segments.len()
+    }
+
+    /// The sealed segments this view pins, in id order (the SQ8 view
+    /// builds per-segment quantized sidecars parallel to this list).
+    pub(crate) fn segments(&self) -> &[Arc<Segment>] {
+        &self.segments
+    }
+
+    /// Global id of each segment's first entry (parallel to
+    /// [`FrozenView::segments`]).
+    pub(crate) fn bases(&self) -> &[u32] {
+        &self.bases
     }
 
     /// Locate (segment index, local index) for a global id.

@@ -6,10 +6,15 @@
 //!    hits on `FrozenView` and `IvfView` (ids, scores, tie-breaks);
 //! 3. the batched route path (`RouterSnapshot::score_batch`,
 //!    `ShardedSnapshot::score_batch{,_scatter}`) scores bit-identically
-//!    to the single-query path over flat and IVF views at any K.
+//!    to the single-query path over flat and IVF views at any K;
+//! 4. the int8 quantized kernels (ISSUE 8) match the portable int8
+//!    reference exactly on every available backend (integer
+//!    accumulation — equality, not tolerance), and the SQ8 view with a
+//!    corpus-covering rerank returns the flat path's exact hits.
 //!
 //! The whole suite (and the rest of tier-1) also runs in CI with
-//! `EAGLE_KERNEL=portable`, so both dispatch arms stay covered.
+//! `EAGLE_KERNEL=portable` (and again with `EAGLE_QUANT=1`), so both
+//! dispatch arms stay covered.
 
 use eagle::config::{EagleParams, EpochParams, IvfPublishParams, ShardParams};
 use eagle::coordinator::router::Observation;
@@ -18,6 +23,7 @@ use eagle::coordinator::snapshot::RouterWriter;
 use eagle::elo::{Comparison, Outcome};
 use eagle::util::{l2_normalize, prop, Rng};
 use eagle::vectordb::kernel::{self, Backend};
+use eagle::vectordb::quant::{QuantCache, QuantView};
 use eagle::vectordb::view::SegmentStore;
 use eagle::vectordb::{Feedback, ReadIndex, VectorIndex};
 
@@ -198,6 +204,85 @@ fn sharded_score_batch_bit_identical_to_singles_at_k1_and_k3() {
             assert_eq!(scatter[i], single, "K={shards}: scatter diverged at query {i}");
         }
     }
+}
+
+#[test]
+fn int8_kernels_exact_across_backends_dims_and_tails() {
+    // the int8 path accumulates in i32, so this is integer equality on
+    // every backend, not a floating-point reduction contract
+    prop::check("int8 kernels exact", 60, |rng| {
+        let dim = 1 + rng.below(300);
+        let n_rows = rng.below(20);
+        let n_q = rng.below(6);
+        let code = |rng: &mut Rng| (rng.below(255) as i32 - 127) as i8;
+        let rows: Vec<i8> = (0..n_rows * dim).map(|_| code(rng)).collect();
+        let queries: Vec<Vec<i8>> = (0..n_q).map(|_| (0..dim).map(|_| code(rng)).collect()).collect();
+        let qrefs: Vec<&[i8]> = queries.iter().map(|q| q.as_slice()).collect();
+        let mut want = vec![0i32; n_q * n_rows];
+        Backend::Portable.scan_i8_block_into(&qrefs, dim, &rows, &mut want);
+        for backend in available_backends() {
+            // single dots against the portable scalar reference
+            for (q, query) in qrefs.iter().enumerate() {
+                for r in 0..n_rows {
+                    let got = backend.dot_i8(query, &rows[r * dim..(r + 1) * dim]);
+                    prop::assert_prop(
+                        got == want[q * n_rows + r],
+                        &format!("{} dot_i8 != portable at dim={dim}", backend.name()),
+                    )?;
+                }
+            }
+            let mut got = vec![0i32; n_q * n_rows];
+            backend.scan_i8_block_into(&qrefs, dim, &rows, &mut got);
+            prop::assert_prop(
+                got == want,
+                &format!("{} scan_i8_block_into != portable", backend.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quant_full_rerank_returns_exact_flat_hits() {
+    // corpus-covering rerank (factor * k >= rows) means every candidate
+    // is rescored by the exact f32 kernel, so hits must be bitwise the
+    // flat path's — on whatever backend this process dispatched to
+    prop::check("quant full rerank == flat", 15, |rng| {
+        let dim = 1 + rng.below(130);
+        let n = 1 + rng.below(400);
+        let mut store = SegmentStore::new(dim);
+        for i in 0..n {
+            let v = unit(rng, dim);
+            store.add(
+                &v,
+                Feedback::single(Comparison {
+                    a: i % 3,
+                    b: (i + 1) % 3,
+                    outcome: Outcome::WinA,
+                }),
+            );
+        }
+        let view = store.freeze();
+        let mut cache = QuantCache::new();
+        // min_rows = 1: every segment quantized, no exact-tail shortcut
+        let qview = QuantView::build(view.clone(), &mut cache, 1, n.max(1));
+        let k = 1 + rng.below(20);
+        let n_q = 1 + rng.below(7);
+        let queries: Vec<Vec<f32>> = (0..n_q).map(|_| unit(rng, dim)).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let batch = qview.search_batch(&qrefs, k);
+        for (q, hits) in qrefs.iter().zip(&batch) {
+            prop::assert_prop(
+                hits == &view.search(q, k),
+                "quantized full-rerank batch hits != flat hits",
+            )?;
+            prop::assert_prop(
+                hits == &qview.search(q, k),
+                "quantized batch hits != quantized single hits",
+            )?;
+        }
+        Ok(())
+    });
 }
 
 #[test]
