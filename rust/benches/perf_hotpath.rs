@@ -217,6 +217,7 @@ fn main() {
     sharded_storm_sweep(&obs, &mut report);
     ingest_pipeline_sweep(&mut report);
     persist_beat_sweep(&mut report);
+    replica_tail_sweep(&mut report);
     connection_scale_sweep(&mut report);
     if eagle::bench::json_enabled() {
         let path = report.write().expect("write bench json");
@@ -834,6 +835,115 @@ fn persist_beat_sweep(report: &mut JsonReport) {
         report.push(&format!("persist.n{n}.full_over_delta_bytes_ratio"), ratio);
     }
     let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The follower-replication cost surface (PR 9): cold catch-up rate over
+/// an n-record store (`replica.catchup_rps`), steady-state tail rate
+/// while the leader keeps appending (`replica.tail_rps`, with the peak
+/// unread log backlog in `replica.tail_lag_bytes_peak`), and the
+/// promotion latency once the leader stops (`replica.promote_ms`). The
+/// tail consumes the same bytes crash recovery replays, so these numbers
+/// bound both failover lag and read-replica staleness.
+fn replica_tail_sweep(report: &mut JsonReport) {
+    use eagle::coordinator::durable::{DurableOptions, DurableStore, StoreMeta};
+    use eagle::coordinator::replica::Follower;
+
+    const N_MODELS: usize = 11;
+    let n: usize = if eagle::bench::smoke() { 4_000 } else { 30_000 };
+    let bursts: usize = if eagle::bench::smoke() { 20 } else { 200 };
+    const BURST: usize = 64;
+    let shards = ShardParams { count: 4, hash_seed: 0xEA61E };
+    let cadence = EpochParams { publish_every: 64, publish_interval_ms: 5 };
+    let dir = std::env::temp_dir().join(format!("eagle_replica_sweep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let meta = StoreMeta {
+        params: EagleParams::default(),
+        n_models: N_MODELS,
+        dim: DIM,
+        shards: shards.clone(),
+    };
+    let opts = DurableOptions { seal_bytes: 256 << 10, fsync: false };
+    let store = DurableStore::create(&dir, meta, opts.clone()).expect("create durable store");
+    let mut writers: Vec<_> =
+        (0..shards.count).map(|s| store.lane_writer(s).expect("lane writer")).collect();
+    let mut router =
+        ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence.clone(), shards.clone());
+    let mut rng = Rng::new(0x8E81);
+    let append_one = |router: &mut ShardedRouter, writers: &mut Vec<_>, rng: &mut Rng| {
+        let obs = Observation::single(unit(rng), rand_cmp(rng));
+        let shard = router.shard_for(&obs.embedding);
+        let gid = router.next_global_id();
+        router.observe(obs.clone());
+        writers[shard].append(gid, &obs).expect("delta append");
+    };
+    for i in 0..n {
+        append_one(&mut router, &mut writers, &mut rng);
+        if i % 1024 == 1023 {
+            store
+                .checkpoint_global(router.next_global_id(), router.global_elo().export_state())
+                .expect("checkpoint");
+        }
+    }
+    for w in &mut writers {
+        w.sync().expect("sync");
+    }
+
+    // (a) cold catch-up: open + drain, the warm-standby bootstrap cost
+    let t0 = Instant::now();
+    let mut follower = Follower::open(&dir, cadence).expect("follower open");
+    while follower.poll().expect("catch-up poll").applied > 0 {}
+    let catchup_secs = t0.elapsed().as_secs_f64();
+    let catchup_rps = follower.applied_records() as f64 / catchup_secs.max(1e-9);
+
+    // (b) steady-state tail: the leader keeps appending in bursts (some
+    // left unsynced, so the follower sees buffered/torn tails), one poll
+    // per burst
+    let before = follower.applied_records();
+    let mut lag_peak = 0u64;
+    let t0 = Instant::now();
+    for i in 0..bursts {
+        for _ in 0..BURST {
+            append_one(&mut router, &mut writers, &mut rng);
+        }
+        if i % 2 == 0 {
+            for w in &mut writers {
+                w.sync().expect("sync");
+            }
+        }
+        if i % 8 == 7 {
+            writers[i % shards.count].seal().expect("seal");
+        }
+        let s = follower.poll().expect("tail poll");
+        lag_peak = lag_peak.max(s.lag_bytes);
+    }
+    for w in &mut writers {
+        w.sync().expect("sync");
+    }
+    while follower.poll().expect("drain poll").applied > 0 {}
+    let tail_secs = t0.elapsed().as_secs_f64();
+    let tailed = follower.applied_records() - before;
+    let tail_rps = tailed as f64 / tail_secs.max(1e-9);
+
+    // (c) promotion: leader stops (writers + store drop, lock released),
+    // the standby takes over
+    drop(writers);
+    drop(store);
+    let t0 = Instant::now();
+    let promotion = follower.promote(opts).unwrap_or_else(|e| panic!("promote: {:#}", e.error));
+    let promote_ms = t0.elapsed().as_secs_f64() * 1e3;
+    drop(promotion);
+
+    println!("\n== follower replication (K={}, {n}-record store) ==", shards.count);
+    println!(
+        "  catch-up {catchup_rps:>9.0} rec/s | tail {tail_rps:>9.0} rec/s \
+         (peak lag {lag_peak} B) | promote {promote_ms:.1} ms"
+    );
+    report.push("replica.catchup_rps", catchup_rps);
+    report.push("replica.tail_rps", tail_rps);
+    report.push("replica.tail_lag_bytes_peak", lag_peak as f64);
+    report.push("replica.promote_ms", promote_ms);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// The ISSUE 6 acceptance sweep: route latency for one active client

@@ -16,7 +16,7 @@ use crate::baselines::mlp::{MlpOptions, MlpPredictor};
 use crate::baselines::svm::{SvmOptions, SvmPredictor};
 use crate::baselines::QualityPredictor;
 use crate::bench::{fmt, print_table};
-use crate::config::Config;
+use crate::config::{env_override, Config, Role};
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::router::EagleRouter;
 use crate::coordinator::PredictorRouter;
@@ -87,7 +87,8 @@ eagle — training-free multi-LLM router (reproduction of Zhao et al. 2024)
 USAGE:
   eagle serve    [--addr HOST:PORT] [--workers N] [--snapshot FILE]
                  [--snapshot-out FILE] [--max-connections N] [--max-inflight N]
-                 [--idle-timeout-ms MS] [--config FILE] [--set key=value]...
+                 [--idle-timeout-ms MS] [--role leader|follower]
+                 [--config FILE] [--set key=value]...
   eagle eval     [--per-dataset N] [--dataset NAME|all]
                  [--routers eagle,eagle-global,eagle-local,knn,mlp,svm]
                  [--seed S] [--config FILE]
@@ -185,6 +186,10 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         "  kernel: backend={} (host detects {}; EAGLE_KERNEL overrides)",
         cfg.kernel.backend,
         crate::vectordb::kernel::detect().name()
+    );
+    println!(
+        "  replica: role={} poll_ms={} (EAGLE_ROLE and --role override)",
+        cfg.replica.role, cfg.replica.poll_ms
     );
     println!("  artifacts: {}", cfg.embed.artifacts_dir);
     match crate::runtime::Manifest::load(Path::new(&cfg.embed.artifacts_dir)) {
@@ -368,6 +373,12 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
 
     let addr = args.get("addr").unwrap_or(&cfg.server.addr).to_string();
     let workers = args.usize_or("workers", cfg.server.workers)?;
+    // role precedence: --role, then EAGLE_ROLE, then [replica] role
+    let cfg_role = Role::parse(&cfg.replica.role).map_err(|e| anyhow!("replica.role: {e}"))?;
+    let role = match args.get("role") {
+        Some(s) => Role::parse(s).map_err(|e| anyhow!("--role {s}: {e}"))?,
+        None => env_override("EAGLE_ROLE", "[replica] role", cfg_role, Role::parse),
+    };
     let admission = crate::server::Admission {
         max_connections: args.usize_or("max-connections", cfg.server.max_connections)?,
         max_inflight: args.usize_or("max-inflight", cfg.server.max_inflight)?,
@@ -424,7 +435,37 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
     }
     let persist_dir = (!cfg.persist.dir.is_empty())
         .then(|| std::path::PathBuf::from(&cfg.persist.dir));
+    if role == Role::Follower && persist_dir.is_none() {
+        bail!(
+            "--role follower requires [persist] dir (the leader's durable store \
+             to tail); set persist.dir"
+        );
+    }
     match &persist_dir {
+        Some(dir) if role == Role::Follower => {
+            // The leader owns the store; all we need is for it to exist.
+            // Tolerate a short startup race (follower launched first).
+            if !crate::coordinator::durable::DurableStore::exists(dir) {
+                println!("follower: waiting for the leader's store at {} ...", dir.display());
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+                while !crate::coordinator::durable::DurableStore::exists(dir) {
+                    if std::time::Instant::now() >= deadline {
+                        bail!(
+                            "follower: no durable store at {} after 10s (is the \
+                             leader running with persist.dir set?)",
+                            dir.display()
+                        );
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(100));
+                }
+            }
+            println!(
+                "follower: tailing the leader's store at {} (poll every {} ms; \
+                 feedback/snapshot redirect to the leader until promote)",
+                dir.display(),
+                cfg.replica.poll_ms
+            );
+        }
         Some(dir) => {
             if crate::coordinator::durable::DurableStore::exists(dir) {
                 println!(
@@ -481,6 +522,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         fsync: cfg.persist.fsync,
         kernel_backend: cfg.kernel.backend.clone(),
         admission: admission.clone(),
+        role,
+        replica_poll_ms: cfg.replica.poll_ms,
     })
     .default_policy(default_policy);
     if let Some(out) = snapshot_out {

@@ -294,6 +294,56 @@ impl Default for KernelParams {
     }
 }
 
+/// Serving role in a replicated deployment
+/// ([`crate::coordinator::replica`]): the leader owns ingest and the
+/// durable log; followers tail the leader's log read-only and serve the
+/// route path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Role {
+    #[default]
+    Leader,
+    Follower,
+}
+
+impl Role {
+    /// The wire/config spelling (`hello` advertises this string).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Role::Leader => "leader",
+            Role::Follower => "follower",
+        }
+    }
+
+    /// Parse a config/CLI/env spelling.
+    pub fn parse(s: &str) -> Result<Role, String> {
+        match s {
+            "leader" => Ok(Role::Leader),
+            "follower" => Ok(Role::Follower),
+            _ => Err(format!("unknown role '{s}' (expected leader|follower)")),
+        }
+    }
+}
+
+/// Replication parameters ([`crate::coordinator::replica`]). `role`
+/// decides whether `eagle serve` owns the durable store (`leader`) or
+/// tails another process's store read-only (`follower`; requires
+/// `[persist] dir` pointing at the leader's directory). The `EAGLE_ROLE`
+/// env var and the `--role` CLI flag override this setting, in that
+/// order of increasing precedence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaParams {
+    /// One of `leader`, `follower`.
+    pub role: String,
+    /// Follower tail-poll interval in ms (manifest re-read + log scan).
+    pub poll_ms: u64,
+}
+
+impl Default for ReplicaParams {
+    fn default() -> Self {
+        ReplicaParams { role: "leader".to_string(), poll_ms: 50 }
+    }
+}
+
 /// Default routing policy for the server
 /// ([`crate::coordinator::policy`]): applied to every route request that
 /// doesn't pick its own policy (all protocol-v1 clients, and v2 routes
@@ -358,6 +408,7 @@ pub struct Config {
     pub quant: QuantParams,
     pub persist: PersistParams,
     pub kernel: KernelParams,
+    pub replica: ReplicaParams,
     pub policy: PolicyParams,
     pub data: DataParams,
 }
@@ -484,6 +535,8 @@ impl Config {
             "persist.seal_bytes" => self.persist.seal_bytes = usize_of(value)?,
             "persist.fsync" => self.persist.fsync = bool_of(value)?,
             "kernel.backend" => self.kernel.backend = value.to_string(),
+            "replica.role" => self.replica.role = value.to_string(),
+            "replica.poll_ms" => self.replica.poll_ms = u64_of(value)?,
             "policy.mode" => self.policy.mode = value.to_string(),
             "policy.budget" => self.policy.budget = f64_of(value)?,
             "policy.threshold" => self.policy.threshold = f64_of(value)?,
@@ -555,8 +608,38 @@ impl Config {
         }
         crate::vectordb::kernel::parse_choice(&self.kernel.backend)
             .map_err(|e| ConfigError(format!("kernel.backend: {e}")))?;
+        Role::parse(&self.replica.role)
+            .map_err(|e| ConfigError(format!("replica.role: {e}")))?;
+        if self.replica.poll_ms == 0 {
+            return Err(ConfigError("replica.poll_ms must be > 0".into()));
+        }
         self.policy.spec().map_err(|e| ConfigError(format!("policy: {e}")))?;
         Ok(())
+    }
+}
+
+/// One resolution rule for env > config > default knobs (`EAGLE_KERNEL`,
+/// `EAGLE_QUANT`, `EAGLE_ROLE`): if `var` is set and parses, it wins
+/// over `configured` with a note on stderr; if it is set but malformed,
+/// warn and keep `configured`; if unset, keep `configured`. `what` names
+/// the knob in both messages (e.g. `"[quant] enable"`).
+pub fn env_override<T, F>(var: &str, what: &str, configured: T, parse: F) -> T
+where
+    F: FnOnce(&str) -> Result<T, String>,
+{
+    let Ok(raw) = std::env::var(var) else {
+        return configured;
+    };
+    let raw = raw.trim().to_string();
+    match parse(&raw) {
+        Ok(v) => {
+            eprintln!("note: {var}={raw} overrides {what}");
+            v
+        }
+        Err(e) => {
+            eprintln!("warning: {var}: {e}; keeping {what}");
+            configured
+        }
     }
 }
 
@@ -836,6 +919,57 @@ workers = 8
         bad.policy.mode = "threshold".into();
         bad.policy.threshold = 1.5;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn replica_knobs_parse_and_validate() {
+        let c = Config::default();
+        assert_eq!(c.replica, ReplicaParams::default());
+        assert_eq!(c.replica.role, "leader");
+        assert_eq!(Role::default(), Role::Leader);
+        let c = Config::load(
+            None,
+            &[
+                ("replica.role".into(), "follower".into()),
+                ("replica.poll_ms".into(), "10".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(Role::parse(&c.replica.role).unwrap(), Role::Follower);
+        assert_eq!(c.replica.poll_ms, 10);
+        assert_eq!(Role::Leader.as_str(), "leader");
+        assert_eq!(Role::Follower.as_str(), "follower");
+        let mut bad = Config::default();
+        bad.replica.role = "primary".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.0.contains("replica.role"), "{}", err.0);
+        let mut bad = Config::default();
+        bad.replica.poll_ms = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn env_override_resolution_order() {
+        // Env var names are process-global state: use ones no other test
+        // (or the kernel/quant plumbing) reads.
+        let parse = |s: &str| Role::parse(s);
+        std::env::remove_var("EAGLE_TEST_UNSET");
+        assert_eq!(
+            env_override("EAGLE_TEST_UNSET", "role", Role::Leader, parse),
+            Role::Leader
+        );
+        std::env::set_var("EAGLE_TEST_ROLE_OK", " follower ");
+        assert_eq!(
+            env_override("EAGLE_TEST_ROLE_OK", "role", Role::Leader, parse),
+            Role::Follower
+        );
+        std::env::set_var("EAGLE_TEST_ROLE_BAD", "primary");
+        assert_eq!(
+            env_override("EAGLE_TEST_ROLE_BAD", "role", Role::Leader, parse),
+            Role::Leader
+        );
+        std::env::remove_var("EAGLE_TEST_ROLE_OK");
+        std::env::remove_var("EAGLE_TEST_ROLE_BAD");
     }
 
     #[test]

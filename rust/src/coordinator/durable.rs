@@ -47,6 +47,17 @@
 //! property-tests `recover(persist(state)) ≡ state` for K ∈ {1, 4},
 //! including after a torn tail write.
 //!
+//! Replay itself lives in [`CatchUp`], an *incremental* catch-up API:
+//! [`Recovery::resume`] feeds everything recovered from disk through
+//! [`CatchUp::apply_sealed_segment`] / [`CatchUp::apply_delta_frame`] and
+//! crash recovery simply [`CatchUp::finish`]es immediately. A follower
+//! replica ([`crate::coordinator::replica`]) keeps the same `CatchUp` open
+//! and applies frames as the leader writes them — one replay path, so the
+//! follower's rebuilt state is bit-identical to what crash recovery would
+//! produce from the same bytes. The manifest also carries a monotonically
+//! increasing `generation` counter (bumped on every swap) so a tailing
+//! follower can cheaply report how current its view of the manifest is.
+//!
 //! ## Crash windows at seal time
 //!
 //! A seal performs: (1) write segment (tmp + rename + fsync), (2) create
@@ -56,7 +67,7 @@
 //! is the committed state. The manifest swap is a single atomic rename,
 //! so recovery always sees one consistent cut.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write as _};
 use std::path::{Path, PathBuf};
@@ -68,14 +79,14 @@ use crate::config::{EagleParams, EpochParams, ShardParams};
 use crate::elo::{Comparison, GlobalElo, GlobalEloState, Outcome};
 use crate::json::{self, Value};
 use crate::vectordb::view::SegmentStore;
-use crate::vectordb::{Feedback, ReadIndex, VectorIndex};
+use crate::vectordb::ReadIndex;
 
 use super::router::{EagleRouter, Observation};
-use super::sharded::{IdBlocks, ShardLane, ShardedRouter};
+use super::sharded::{GlobalLane, IdBlocks, ShardLane, ShardedHandle, ShardedRouter};
 use super::snapshot::RouterWriter;
 
-const MANIFEST: &str = "MANIFEST.json";
-const LOCK: &str = "LOCK";
+pub(crate) const MANIFEST: &str = "MANIFEST.json";
+pub(crate) const LOCK: &str = "LOCK";
 const MANIFEST_VERSION: f64 = 1.0;
 /// Segment file header: magic ("EAGS"), format version, dim, record count.
 const SEG_MAGIC: u32 = 0x4541_4753;
@@ -111,33 +122,37 @@ pub struct StoreMeta {
 
 /// One sealed segment as named by the manifest.
 #[derive(Debug, Clone)]
-struct SegmentEntry {
-    file: String,
-    records: usize,
+pub(crate) struct SegmentEntry {
+    pub(crate) file: String,
+    pub(crate) records: usize,
 }
 
 /// One shard lane's durable state as named by the manifest.
 #[derive(Debug, Clone)]
-struct LaneManifest {
-    segments: Vec<SegmentEntry>,
+pub(crate) struct LaneManifest {
+    pub(crate) segments: Vec<SegmentEntry>,
     /// Relative path of the live delta log.
-    log: String,
+    pub(crate) log: String,
     /// Monotone file-id allocator for this lane's segment/log names.
-    next_file_id: u64,
+    pub(crate) next_file_id: u64,
 }
 
 /// The manifest's global-ELO checkpoint: full table state + the number of
 /// records (== next gid at capture time) folded into it.
 #[derive(Debug, Clone)]
-struct GlobalCheckpoint {
-    folded_gid: u32,
-    state: GlobalEloState,
+pub(crate) struct GlobalCheckpoint {
+    pub(crate) folded_gid: u32,
+    pub(crate) state: GlobalEloState,
 }
 
 #[derive(Debug, Clone)]
-struct ManifestState {
-    global: GlobalCheckpoint,
-    lanes: Vec<LaneManifest>,
+pub(crate) struct ManifestState {
+    /// Monotone swap counter: bumped on every manifest write after the
+    /// first, so a tailing follower can report manifest currency without
+    /// diffing the segment lists.
+    pub(crate) generation: u64,
+    pub(crate) global: GlobalCheckpoint,
+    pub(crate) lanes: Vec<LaneManifest>,
 }
 
 /// The shared durable store: owns the directory and the manifest. Lane
@@ -286,7 +301,7 @@ impl DurableStore {
             }
             lanes.push(LaneManifest { segments, log, next_file_id: next_file_id + 1 });
         }
-        let state = ManifestState { global: checkpoint(), lanes };
+        let state = ManifestState { generation: 0, global: checkpoint(), lanes };
         let store = DurableStore {
             dir: dir.to_path_buf(),
             meta,
@@ -389,10 +404,30 @@ impl DurableStore {
     pub fn checkpoint_global(&self, folded_gid: u32, state: GlobalEloState) -> Result<()> {
         let mut m = self.manifest.lock().unwrap();
         let mut staged = m.clone();
+        staged.generation += 1;
         staged.global = GlobalCheckpoint { folded_gid, state };
         self.write_manifest(&staged)?;
         *m = staged;
         Ok(())
+    }
+
+    /// Wrap an already-recovered directory without re-reading it. The
+    /// replica promotion path holds the advisory lock, has repaired the
+    /// delta logs, and carries the live-parsed manifest — going through
+    /// [`DurableStore::open`] would redundantly re-read every sealed
+    /// segment it has already applied.
+    pub(crate) fn attach(
+        dir: &Path,
+        meta: StoreMeta,
+        opts: DurableOptions,
+        state: ManifestState,
+    ) -> Arc<DurableStore> {
+        Arc::new(DurableStore {
+            dir: dir.to_path_buf(),
+            meta,
+            opts,
+            manifest: Mutex::new(state),
+        })
     }
 
     /// Serialize + atomically swap the manifest file.
@@ -482,6 +517,7 @@ impl DurableLaneWriter {
         let store = self.store.clone();
         let mut m = store.manifest.lock().unwrap();
         let mut staged = m.clone();
+        staged.generation += 1;
         let lane = &mut staged.lanes[self.shard];
         let seg_rel = format!("shard-{}/seg-{:08}.seg", self.shard, lane.next_file_id);
         let log_rel = format!("shard-{}/delta-{:08}.log", self.shard, lane.next_file_id + 1);
@@ -536,77 +572,206 @@ impl Recovery {
             .sum()
     }
 
-    /// Rebuild the live [`ShardedRouter`]: per-shard stores + id maps
-    /// straight from the records (each segment file lands as one sealed
-    /// in-memory block), and the global table resumed from the checkpoint
-    /// with every durable record `gid >= folded_gid` refolded in global
-    /// arrival order — bit-identical to the pre-restart writer.
-    pub fn into_router(self, cadence: EpochParams) -> Result<ShardedRouter> {
-        let meta = self.meta;
-        if self.lanes.len() != meta.shards.count {
+    /// Begin incremental catch-up from this recovery's checkpoint and
+    /// feed every durable record through it. Crash recovery is the
+    /// degenerate "follower that already has everything" case:
+    /// `resume(..)` followed by [`CatchUp::finish`]. The replica tail
+    /// ([`crate::coordinator::replica`]) keeps the returned [`CatchUp`]
+    /// open instead and applies frames as the leader writes them.
+    pub fn resume(self, cadence: EpochParams) -> Result<CatchUp> {
+        if self.lanes.len() != self.meta.shards.count {
             bail!(
                 "manifest lane count {} != shard count {}",
                 self.lanes.len(),
-                meta.shards.count
+                self.meta.shards.count
             );
         }
-        let mut next_id = self.folded_gid;
-        let mut replay: Vec<(u32, Vec<Comparison>)> = Vec::new();
-        let mut lanes = Vec::with_capacity(self.lanes.len());
-        for lane in &self.lanes {
-            let mut store = SegmentStore::new(meta.dim);
-            let mut ids = IdBlocks::new();
-            for block in &lane.segments {
-                store.push_sealed_block(block.iter().map(|(_, obs)| {
-                    (
-                        obs.embedding.as_slice(),
-                        Feedback { comparisons: obs.comparisons.clone() },
-                    )
-                }));
-                for (gid, _) in block {
-                    ids.push(*gid);
-                }
+        let mut catchup = CatchUp::begin(self.meta, self.folded_gid, self.global, cadence);
+        for (shard, lane) in self.lanes.into_iter().enumerate() {
+            for block in lane.segments {
+                catchup.apply_sealed_segment(shard, block);
             }
-            for (gid, obs) in &lane.tail {
-                store.add(
-                    &obs.embedding,
-                    Feedback { comparisons: obs.comparisons.clone() },
-                );
-                ids.push(*gid);
+            for (gid, obs) in lane.tail {
+                catchup.apply_delta_frame(shard, gid, obs);
             }
-            for (gid, obs) in lane.segments.iter().flatten().chain(lane.tail.iter()) {
-                if *gid >= self.folded_gid {
-                    replay.push((*gid, obs.comparisons.clone()));
-                }
-                next_id = next_id.max(gid + 1);
-            }
-            lanes.push(ShardLane::with_ids(
-                RouterWriter::from_segment_router(
-                    EagleRouter::new(meta.params.clone(), meta.n_models, store),
-                    cadence.clone(),
-                ),
-                ids,
-            ));
         }
-        replay.sort_by_key(|(gid, _)| *gid);
-        let mut elo = if self.global.last_iterate.is_empty() {
+        Ok(catchup)
+    }
+
+    /// Rebuild the live [`ShardedRouter`] in one shot: resume catch-up
+    /// from the checkpoint, replay every durable record, finish. The
+    /// stores and id maps come straight from the records and the global
+    /// table refolds every record with `gid >= folded_gid` in global
+    /// arrival order — bit-identical to the pre-restart writer.
+    pub fn into_router(self, cadence: EpochParams) -> Result<ShardedRouter> {
+        Ok(self.resume(cadence)?.finish())
+    }
+}
+
+/// Incremental replay of the durable record stream — the single code path
+/// shared by crash recovery ([`Recovery::resume`]) and the follower tail
+/// loop ([`crate::coordinator::replica`]).
+///
+/// Records are applied to live [`ShardLane`]s exactly as the ingest
+/// appliers apply fresh verdicts, so the rebuilt state is the live state.
+/// Comparisons fold into the global table strictly in ascending-gid
+/// order: the stream interleaves shard lanes, so an out-of-order arrival
+/// (one lane's log read before another's) waits in a pending buffer until
+/// the gid sequence is contiguous. [`CatchUp::finish`] folds whatever is
+/// still pending in ascending order — a permanent gap is a torn-away
+/// record, exactly the case single-shot crash recovery skips over.
+pub struct CatchUp {
+    meta: StoreMeta,
+    global: GlobalLane,
+    lanes: Vec<ShardLane>,
+    /// Highest gid applied per lane: replays of a just-sealed segment
+    /// overlap the already-tailed log, so stale gids are skipped.
+    last_gid: Vec<Option<u32>>,
+    /// Comparisons awaiting a contiguous gid run, keyed by gid.
+    pending: BTreeMap<u32, Vec<Comparison>>,
+    /// Next gid to fold into the global table.
+    fold_next: u32,
+    /// Next unassigned global arrival id implied by everything applied.
+    next_id: u32,
+}
+
+impl CatchUp {
+    /// Start catch-up from a checkpoint: empty lanes, the global table
+    /// resumed from `global` (uniform when the checkpoint is empty), the
+    /// fold frontier at `folded_gid`.
+    pub fn begin(
+        meta: StoreMeta,
+        folded_gid: u32,
+        global: GlobalEloState,
+        cadence: EpochParams,
+    ) -> CatchUp {
+        let elo = if global.last_iterate.is_empty() {
             GlobalElo::new(meta.n_models, meta.params.k_factor)
         } else {
-            GlobalElo::from_state(self.global, meta.params.k_factor)
+            GlobalElo::from_state(global, meta.params.k_factor)
         };
-        for (_, cmps) in &replay {
-            elo.apply_new(cmps);
-        }
-        Ok(ShardedRouter::from_parts(
-            meta.params,
-            meta.n_models,
-            meta.dim,
-            meta.shards,
-            elo,
-            cadence,
+        let lanes: Vec<ShardLane> = (0..meta.shards.count)
+            .map(|_| {
+                ShardLane::with_ids(
+                    RouterWriter::from_segment_router(
+                        EagleRouter::new(
+                            meta.params.clone(),
+                            meta.n_models,
+                            SegmentStore::new(meta.dim),
+                        ),
+                        cadence.clone(),
+                    ),
+                    IdBlocks::new(),
+                )
+            })
+            .collect();
+        CatchUp {
+            global: GlobalLane::from_elo(elo, cadence),
             lanes,
-            next_id,
-        ))
+            last_gid: vec![None; meta.shards.count],
+            pending: BTreeMap::new(),
+            fold_next: folded_gid,
+            next_id: folded_gid,
+            meta,
+        }
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    /// The next unassigned global arrival id (max applied gid + 1).
+    pub fn next_global_id(&self) -> u32 {
+        self.next_id
+    }
+
+    /// Records applied to shard lanes across all segments and tails.
+    pub fn applied_records(&self) -> usize {
+        self.lanes.iter().map(|l| l.writer().router().store().len()).sum()
+    }
+
+    /// Comparisons decoded but still waiting for a contiguous gid run
+    /// before folding into the global table (tail-lag diagnostics).
+    pub fn pending_folds(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Apply one sealed segment's records (ascending gid); already-applied
+    /// gids — the segment overlaps the log it was sealed from — are
+    /// skipped.
+    pub fn apply_sealed_segment(&mut self, shard: usize, records: Vec<(u32, Observation)>) {
+        for (gid, obs) in records {
+            self.apply_delta_frame(shard, gid, obs);
+        }
+    }
+
+    /// Apply one delta-log frame. Returns false when the record was
+    /// already applied (stale gid for its lane).
+    pub fn apply_delta_frame(&mut self, shard: usize, gid: u32, obs: Observation) -> bool {
+        if self.last_gid[shard].is_some_and(|prev| gid <= prev) {
+            return false;
+        }
+        self.last_gid[shard] = Some(gid);
+        self.next_id = self.next_id.max(gid + 1);
+        if gid >= self.fold_next {
+            self.pending.insert(gid, obs.comparisons.clone());
+            while let Some(cmps) = self.pending.remove(&self.fold_next) {
+                self.global.apply(&cmps);
+                self.fold_next += 1;
+            }
+        }
+        self.lanes[shard].apply(gid, obs);
+        true
+    }
+
+    /// Publish whichever lanes (and the global table) have tripped their
+    /// epoch cadence — the follower tail loop's staleness beat.
+    pub fn maybe_publish_all(&mut self) {
+        self.global.maybe_publish();
+        for lane in &mut self.lanes {
+            lane.maybe_publish();
+        }
+    }
+
+    /// Publish every lane and the global table unconditionally.
+    pub fn publish_all(&mut self) {
+        self.global.publish();
+        for lane in &mut self.lanes {
+            lane.publish();
+        }
+    }
+
+    /// Reader handle over the lanes being caught up: a follower serves
+    /// the scatter-gather route path from the same rings the tail loop is
+    /// filling, and the handle stays valid across [`CatchUp::finish`] /
+    /// promotion (the rings are shared, not rebuilt).
+    pub fn handle(&self) -> ShardedHandle {
+        super::sharded::handle_of(
+            self.meta.params.clone(),
+            self.meta.dim,
+            &self.global,
+            &self.lanes,
+        )
+    }
+
+    /// Fold any still-pending comparisons in ascending gid order (gaps
+    /// are torn-away records — the same skip crash recovery performs),
+    /// publish everything, and assemble the live router around the same
+    /// lanes and rings.
+    pub fn finish(mut self) -> ShardedRouter {
+        for cmps in std::mem::take(&mut self.pending).into_values() {
+            self.global.apply(&cmps);
+        }
+        self.publish_all();
+        ShardedRouter::from_lanes(
+            self.meta.params,
+            self.meta.n_models,
+            self.meta.dim,
+            self.meta.shards,
+            self.global,
+            self.lanes,
+            self.next_id,
+        )
     }
 }
 
@@ -734,7 +899,14 @@ fn decode_frame(bytes: &[u8], pos: usize, dim: usize, n_models: usize) -> Frame 
 
 /// Scan framed bytes, returning the decoded records and the byte length
 /// of the valid prefix (anything past it is a torn/corrupt tail).
-fn scan_frames(bytes: &[u8], dim: usize, n_models: usize) -> (Vec<(u32, Observation)>, usize) {
+///
+/// This is the *read-only* scan: the follower tail uses it directly on a
+/// live leader's log (never [`recover_log`], which truncates).
+pub(crate) fn scan_frames(
+    bytes: &[u8],
+    dim: usize,
+    n_models: usize,
+) -> (Vec<(u32, Observation)>, usize) {
     let mut records = Vec::new();
     let mut pos = 0;
     while pos < bytes.len() {
@@ -787,7 +959,7 @@ fn fsync_dir(dir: &Path) {
 /// recovery case) or the same process (restart-in-process, tests) takes
 /// the lock over. Liveness is checked via `/proc/<pid>`; where that is
 /// unavailable the owner is assumed dead, keeping recovery possible.
-fn acquire_lock(dir: &Path) -> Result<()> {
+pub(crate) fn acquire_lock(dir: &Path) -> Result<()> {
     let path = dir.join(LOCK);
     let my_pid = std::process::id();
     if let Ok(text) = fs::read_to_string(&path) {
@@ -827,7 +999,7 @@ fn write_segment(
 /// Read + fully validate one sealed segment. Segments are written once
 /// and fsynced before the manifest references them, so any damage is a
 /// hard error, never a silent truncation.
-fn read_segment(
+pub(crate) fn read_segment(
     path: &Path,
     dim: usize,
     n_models: usize,
@@ -861,17 +1033,18 @@ fn read_segment(
 }
 
 /// A delta log replayed back from disk (truncated to its valid prefix).
-struct LogReplay {
-    records: Vec<(u32, Observation)>,
+pub(crate) struct LogReplay {
+    pub(crate) records: Vec<(u32, Observation)>,
     /// The validated raw frame bytes (exactly what remains in the file).
-    bytes: Vec<u8>,
+    pub(crate) bytes: Vec<u8>,
     /// Bytes dropped because the final write was torn.
-    lost: u64,
+    pub(crate) lost: u64,
 }
 
 /// Replay a delta log, truncating the file to the last full record if the
-/// final write was torn.
-fn recover_log(path: &Path, dim: usize, n_models: usize) -> Result<LogReplay> {
+/// final write was torn. Mutating — only the lock holder may call this;
+/// a follower tailing a live leader uses [`scan_frames`] instead.
+pub(crate) fn recover_log(path: &Path, dim: usize, n_models: usize) -> Result<LogReplay> {
     if !path.exists() {
         // a crash between manifest swap and log creation: the live log is
         // simply empty
@@ -896,7 +1069,7 @@ fn recover_log(path: &Path, dim: usize, n_models: usize) -> Result<LogReplay> {
 
 /// Delete files a crashed seal left behind (segments/logs/tmp files not
 /// referenced by the manifest).
-fn sweep_orphans(dir: &Path, shard_count: usize, referenced: &HashSet<PathBuf>) {
+pub(crate) fn sweep_orphans(dir: &Path, shard_count: usize, referenced: &HashSet<PathBuf>) {
     let _ = fs::remove_file(dir.join(MANIFEST).with_extension("tmp"));
     for shard in 0..shard_count {
         let Ok(entries) = fs::read_dir(dir.join(format!("shard-{shard}"))) else {
@@ -941,6 +1114,7 @@ fn manifest_json(meta: &StoreMeta, state: &ManifestState) -> String {
         .collect();
     json::obj(vec![
         ("format_version", json::num(MANIFEST_VERSION)),
+        ("generation", json::num(state.generation as f64)),
         ("dim", json::num(meta.dim as f64)),
         ("n_models", json::num(meta.n_models as f64)),
         ("p", json::num(meta.params.p)),
@@ -975,12 +1149,14 @@ fn f64s_of(v: &Value, what: &str) -> Result<Vec<f64>> {
         .collect()
 }
 
-fn parse_manifest(text: &str) -> Result<(StoreMeta, ManifestState)> {
+pub(crate) fn parse_manifest(text: &str) -> Result<(StoreMeta, ManifestState)> {
     let v = json::parse(text).map_err(|e| anyhow!("manifest parse: {e}"))?;
     let version = v.get("format_version").as_f64().context("format_version")?;
     if version > MANIFEST_VERSION {
         bail!("manifest version {version} is newer than supported {MANIFEST_VERSION}");
     }
+    // additive in-version field: absent on pre-replication manifests
+    let generation = v.get("generation").as_usize().unwrap_or(0) as u64;
     let meta = StoreMeta {
         params: EagleParams {
             p: v.get("p").as_f64().context("p")?,
@@ -1039,7 +1215,7 @@ fn parse_manifest(text: &str) -> Result<(StoreMeta, ManifestState)> {
     if lanes.len() != meta.shards.count {
         bail!("manifest lane count {} != shard_count {}", lanes.len(), meta.shards.count);
     }
-    Ok((meta, ManifestState { global, lanes }))
+    Ok((meta, ManifestState { generation, global, lanes }))
 }
 
 #[cfg(test)]
@@ -1117,6 +1293,7 @@ mod tests {
     fn manifest_roundtrips_bit_exactly() {
         let m = meta(3);
         let state = ManifestState {
+            generation: 7,
             global: GlobalCheckpoint {
                 folded_gid: 42,
                 state: GlobalEloState {
@@ -1139,6 +1316,7 @@ mod tests {
         };
         let text = manifest_json(&m, &state);
         let (m2, s2) = parse_manifest(&text).unwrap();
+        assert_eq!(s2.generation, 7);
         assert_eq!(m2.dim, m.dim);
         assert_eq!(m2.n_models, m.n_models);
         assert_eq!(m2.params, m.params);

@@ -300,12 +300,32 @@ impl IngestPipeline {
         embed: Option<EmbedHandle>,
         opts: IngestOptions,
     ) -> IngestPipeline {
+        Self::start_with_metrics(router, embed, opts, None)
+    }
+
+    /// [`IngestPipeline::start`], but reusing an existing metrics handle.
+    /// The promotion path ([`crate::coordinator::replica`]) spawns a new
+    /// pipeline mid-flight and must keep the `Arc<IngestMetrics>` the
+    /// server already hands out stable. `metrics` must have been built
+    /// for the same shard count.
+    pub fn start_with_metrics(
+        router: ShardedRouter,
+        embed: Option<EmbedHandle>,
+        opts: IngestOptions,
+        metrics: Option<Arc<IngestMetrics>>,
+    ) -> IngestPipeline {
         let handle = router.handle();
         let shard_params = router.shard_params().clone();
         let next_gid = router.next_global_id();
         let (global, lanes) = router.into_lanes();
         let shard_count = lanes.len();
-        let metrics = Arc::new(IngestMetrics::new(shard_count));
+        let metrics = match metrics {
+            Some(m) => {
+                assert_eq!(m.shards.len(), shard_count, "metrics shard count mismatch");
+                m
+            }
+            None => Arc::new(IngestMetrics::new(shard_count)),
+        };
         let has_persist = opts.persist.is_some();
         let ingest: Arc<Queue<IngestMsg>> = Arc::new(Queue::new(opts.queue_capacity));
         let lane_queues: Vec<Arc<Queue<LaneMsg>>> =

@@ -13,6 +13,9 @@
 //! - [`durable`] — segment-granular durable persistence: sealed segment
 //!   files + per-shard delta logs + an atomically-swapped manifest, with
 //!   crash recovery back to a bit-identical [`sharded::ShardedRouter`].
+//! - [`replica`] — follower replication over the durable log: tail a
+//!   leader's delta logs + manifest swaps read-only, rebuild bit-identical
+//!   snapshots, and promote to leader on failover.
 //! - [`state`] — legacy single-JSON snapshot/restore of router state.
 //!
 //! The [`Router`] trait is the uniform surface the evaluation harness and
@@ -23,6 +26,7 @@ pub mod feedback;
 pub mod ingest;
 pub mod policy;
 pub mod registry;
+pub mod replica;
 pub mod router;
 pub mod sharded;
 pub mod snapshot;

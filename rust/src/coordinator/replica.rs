@@ -1,0 +1,397 @@
+//! Follower replication over the durable log: tail a leader's per-shard
+//! delta logs and manifest swaps and rebuild bit-identical routing state.
+//!
+//! The durable store (see [`super::durable`]) already writes a
+//! replication stream in disguise: sealed-once segment files, checksummed
+//! append-only delta frames, and an atomically swapped manifest. A
+//! [`Follower`] consumes that stream *read-only* — no advisory lock, no
+//! log truncation, no orphan sweep — through the same
+//! [`CatchUp`] replay path crash recovery uses, so the follower's
+//! rebuilt [`crate::coordinator::sharded::ShardedSnapshot`]s are
+//! bit-identical to what a post-crash restart would produce from the same
+//! bytes. This gives warm-standby failover and read-replica scale-out: N
+//! followers serve the scatter-gather route path while the leader owns
+//! ingest.
+//!
+//! ## Tail protocol (filesystem transport)
+//!
+//! Each [`Follower::poll`]:
+//!
+//! 1. re-reads + parses `MANIFEST.json` (atomic swap ⇒ always one
+//!    consistent cut; a newer `format_version` is a clear error, never a
+//!    panic),
+//! 2. applies any sealed segments it has not applied yet (per-lane
+//!    monotone-gid dedup absorbs the overlap between a fresh segment and
+//!    the delta log it was sealed from),
+//! 3. tails each lane's live delta log from its byte cursor with the
+//!    read-only frame scan — a torn/incomplete final frame is simply "not
+//!    yet written" and is retried next poll,
+//! 4. publishes lanes on the usual epoch cadence and updates the
+//!    [`ReplicaMetrics`] lag gauges.
+//!
+//! The global table folds strictly in gid order (the [`CatchUp`]
+//! contiguity buffer), so follower ratings are bit-identical to the
+//! leader's at every quiescent point.
+//!
+//! ## Promotion
+//!
+//! [`Follower::promote`] turns a warm standby into the leader: take the
+//! advisory `LOCK` (refused while the old leader still runs), run one
+//! final poll over the quiescent files, truncate any torn log tails and
+//! sweep orphans (now safe — we own the store), fold the remaining
+//! pending comparisons, and reassemble a live
+//! [`ShardedRouter`] *around the same lanes and rings* the follower was
+//! serving from — reader handles taken before promotion stay valid. The
+//! durable store attaches to the already-recovered directory and lane
+//! writers resume appending at the recovered tail.
+
+use std::collections::HashSet;
+use std::fs::{self, File};
+use std::io::{Read as _, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::EpochParams;
+use crate::metrics::Counter;
+
+use super::durable::{
+    acquire_lock, parse_manifest, read_segment, recover_log, scan_frames, sweep_orphans, CatchUp,
+    DurableOptions, DurableStore, ManifestState, StoreMeta, LOCK, MANIFEST,
+};
+use super::sharded::{ShardedHandle, ShardedRouter};
+
+/// Counters + gauges for one follower's tail loop. Counters are monotone;
+/// the lag gauges are recomputed every poll.
+#[derive(Debug, Default)]
+pub struct ReplicaMetrics {
+    /// Tail polls completed (including no-op polls).
+    pub polls: Counter,
+    /// Polls that failed (manifest unreadable mid-swap, leader racing a
+    /// seal); the tail loop keeps going.
+    pub errors: Counter,
+    /// Records applied to shard lanes via the tail.
+    pub applied_records: Counter,
+    /// Sealed segment files applied via the tail.
+    pub applied_segments: Counter,
+    lag_bytes: AtomicU64,
+    lag_frames: AtomicU64,
+    manifest_generation: AtomicU64,
+}
+
+impl ReplicaMetrics {
+    /// Unconsumed log-tail bytes after the last poll (a partial frame the
+    /// leader is still writing, or backlog the follower has not read).
+    pub fn lag_bytes(&self) -> u64 {
+        self.lag_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Decoded records whose global fold is still waiting for a
+    /// contiguous gid run.
+    pub fn lag_frames(&self) -> u64 {
+        self.lag_frames.load(Ordering::Relaxed)
+    }
+
+    /// Generation of the last manifest swap the follower has seen.
+    pub fn manifest_generation(&self) -> u64 {
+        self.manifest_generation.load(Ordering::Relaxed)
+    }
+
+    fn set_lag(&self, bytes: u64, frames: u64) {
+        self.lag_bytes.store(bytes, Ordering::Relaxed);
+        self.lag_frames.store(frames, Ordering::Relaxed);
+    }
+
+    fn set_generation(&self, generation: u64) {
+        self.manifest_generation.store(generation, Ordering::Relaxed);
+    }
+}
+
+/// What one [`Follower::poll`] accomplished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PollStats {
+    /// New records applied this poll (segments + log frames).
+    pub applied: usize,
+    /// Unconsumed log-tail bytes remaining after this poll.
+    pub lag_bytes: u64,
+    /// Records waiting for a contiguous gid run before the global fold.
+    pub pending_folds: usize,
+}
+
+/// Per-lane tail cursor into the leader's durable files.
+struct LaneCursor {
+    /// Sealed segments (manifest order; the list only grows) applied.
+    segments_applied: usize,
+    /// Relative path of the delta log this cursor is tailing.
+    log: String,
+    /// Byte offset of the next unread frame in that log.
+    offset: u64,
+}
+
+/// A read-only replica tailing a leader's durable store directory. See
+/// the module docs for the tail protocol and promotion semantics.
+pub struct Follower {
+    dir: PathBuf,
+    catchup: CatchUp,
+    cursors: Vec<LaneCursor>,
+    manifest: ManifestState,
+    metrics: Arc<ReplicaMetrics>,
+}
+
+impl Follower {
+    /// Attach to a leader's durable store directory and catch up to the
+    /// current durable state. Read-only: never takes the lock, never
+    /// truncates, never sweeps. Fails with a clear error if the manifest
+    /// is missing or written by a newer format version.
+    pub fn open(dir: &Path, cadence: EpochParams) -> Result<Follower> {
+        let path = dir.join(MANIFEST);
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("no durable store to follow at {}", dir.display()))?;
+        let (meta, manifest) = parse_manifest(&text)?;
+        let catchup = CatchUp::begin(
+            meta,
+            manifest.global.folded_gid,
+            manifest.global.state.clone(),
+            cadence,
+        );
+        let cursors = manifest
+            .lanes
+            .iter()
+            .map(|l| LaneCursor { segments_applied: 0, log: l.log.clone(), offset: 0 })
+            .collect();
+        let mut follower = Follower {
+            dir: dir.to_path_buf(),
+            catchup,
+            cursors,
+            manifest,
+            metrics: Arc::new(ReplicaMetrics::default()),
+        };
+        follower.poll()?;
+        follower.catchup.publish_all();
+        Ok(follower)
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        self.catchup.meta()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn metrics(&self) -> &Arc<ReplicaMetrics> {
+        &self.metrics
+    }
+
+    /// Records applied to shard lanes so far.
+    pub fn applied_records(&self) -> usize {
+        self.catchup.applied_records()
+    }
+
+    /// Reader handle over the replica's lanes (survives promotion).
+    pub fn handle(&self) -> ShardedHandle {
+        self.catchup.handle()
+    }
+
+    /// One tail round: manifest re-read, new segments, log deltas,
+    /// cadence publishes. Cheap when nothing changed.
+    pub fn poll(&mut self) -> Result<PollStats> {
+        self.metrics.polls.inc();
+        let text = fs::read_to_string(self.dir.join(MANIFEST))
+            .with_context(|| format!("reading manifest in {}", self.dir.display()))?;
+        let (meta, manifest) = parse_manifest(&text)?;
+        let known = self.catchup.meta();
+        if meta.params != known.params
+            || meta.n_models != known.n_models
+            || meta.dim != known.dim
+            || meta.shards != known.shards
+        {
+            bail!("durable store identity changed under the follower");
+        }
+        self.manifest = manifest;
+        self.metrics.set_generation(self.manifest.generation);
+        let (dim, n_models) = (meta.dim, meta.n_models);
+        let mut applied = 0usize;
+        let mut lag_bytes = 0u64;
+        for (shard, cur) in self.cursors.iter_mut().enumerate() {
+            let lane = &self.manifest.lanes[shard];
+            while cur.segments_applied < lane.segments.len() {
+                let seg = &lane.segments[cur.segments_applied];
+                let records = read_segment(&self.dir.join(&seg.file), dim, n_models, seg.records)
+                    .with_context(|| format!("segment {}", seg.file))?;
+                let before = self.catchup.applied_records();
+                self.catchup.apply_sealed_segment(shard, records);
+                applied += self.catchup.applied_records() - before;
+                cur.segments_applied += 1;
+                self.metrics.applied_segments.inc();
+            }
+            if cur.log != lane.log {
+                cur.log = lane.log.clone();
+                cur.offset = 0;
+            }
+            // Read-only tail of the live log past the cursor. A missing
+            // file means the leader sealed between our manifest read and
+            // now — the next poll sees the new manifest.
+            let Ok(bytes) = read_from(&self.dir.join(&cur.log), cur.offset) else {
+                continue;
+            };
+            let (records, consumed) = scan_frames(&bytes, dim, n_models);
+            for (gid, obs) in records {
+                if self.catchup.apply_delta_frame(shard, gid, obs) {
+                    applied += 1;
+                }
+            }
+            cur.offset += consumed as u64;
+            lag_bytes += (bytes.len() - consumed) as u64;
+        }
+        let pending_folds = self.catchup.pending_folds();
+        self.metrics.applied_records.add(applied as u64);
+        self.metrics.set_lag(lag_bytes, pending_folds as u64);
+        self.catchup.maybe_publish_all();
+        Ok(PollStats { applied, lag_bytes, pending_folds })
+    }
+
+    /// Promote this follower to leader: take the advisory `LOCK` (refused
+    /// while the old leader is still alive), run a final catch-up over
+    /// the now-quiescent files, truncate torn log tails, sweep orphans,
+    /// fold what is still pending, and reassemble the live router around
+    /// the follower's own lanes — reader handles taken from
+    /// [`Follower::handle`] keep working. On failure the follower comes
+    /// back in the error, still tailing-capable.
+    pub fn promote(mut self, opts: DurableOptions) -> std::result::Result<Promotion, PromoteError> {
+        if let Err(error) = acquire_lock(&self.dir) {
+            return Err(PromoteError { follower: self, error });
+        }
+        // From here the lock is ours; release it on any failure so the
+        // returned follower (or another candidate) can retry.
+        if let Err(error) = self.poll() {
+            let _ = fs::remove_file(self.dir.join(LOCK));
+            return Err(PromoteError { follower: self, error });
+        }
+        let (dim, n_models) = (self.meta().dim, self.meta().n_models);
+        let mut referenced: HashSet<PathBuf> = HashSet::new();
+        for lane in &self.manifest.lanes {
+            for seg in &lane.segments {
+                referenced.insert(self.dir.join(&seg.file));
+            }
+            let log_path = self.dir.join(&lane.log);
+            referenced.insert(log_path.clone());
+            // Truncate a torn tail (the crash that made us promote). Our
+            // cursor only ever consumed validated frames, so nothing
+            // applied is lost.
+            if let Err(error) =
+                recover_log(&log_path, dim, n_models).with_context(|| format!("log {}", lane.log))
+            {
+                let _ = fs::remove_file(self.dir.join(LOCK));
+                return Err(PromoteError { follower: self, error });
+            }
+        }
+        sweep_orphans(&self.dir, self.manifest.lanes.len(), &referenced);
+        let Follower { dir, catchup, manifest, .. } = self;
+        let meta = catchup.meta().clone();
+        let router = catchup.finish();
+        let store = DurableStore::attach(&dir, meta, opts, manifest);
+        Ok(Promotion { store, router })
+    }
+}
+
+/// A successful promotion: the attached store (lock held, logs repaired)
+/// and the live router reassembled around the follower's lanes. Feed both
+/// to the ingest pipeline to start accepting feedback.
+pub struct Promotion {
+    pub store: Arc<DurableStore>,
+    pub router: ShardedRouter,
+}
+
+/// A failed promotion, with the follower handed back intact so it can
+/// keep tailing (the usual cause: the leader is still alive and holds
+/// the lock).
+pub struct PromoteError {
+    pub follower: Follower,
+    pub error: anyhow::Error,
+}
+
+/// Background tail loop around a [`Follower`]: polls on a fixed
+/// interval until stopped, at which point the follower is handed back
+/// (for promotion). Dropping the handle stops the loop.
+pub struct FollowerHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<Follower>>,
+    metrics: Arc<ReplicaMetrics>,
+    handle: ShardedHandle,
+}
+
+impl FollowerHandle {
+    /// Spawn the tail thread. Poll errors (a manifest swap racing the
+    /// read, the leader dying) are counted, not fatal — the loop keeps
+    /// retrying so a standby survives leader restarts.
+    pub fn spawn(follower: Follower, poll_interval: Duration) -> FollowerHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = follower.metrics().clone();
+        let handle = follower.handle();
+        let tail_stop = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("eagle-replica-tail".into())
+            .spawn(move || {
+                let mut follower = follower;
+                while !tail_stop.load(Ordering::Acquire) {
+                    if follower.poll().is_err() {
+                        follower.metrics().errors.inc();
+                    }
+                    interruptible_sleep(&tail_stop, poll_interval);
+                }
+                follower
+            })
+            .expect("spawning eagle-replica-tail");
+        FollowerHandle { stop, thread: Some(thread), metrics, handle }
+    }
+
+    pub fn metrics(&self) -> &Arc<ReplicaMetrics> {
+        &self.metrics
+    }
+
+    /// Reader handle over the replica's lanes (valid across promotion).
+    pub fn handle(&self) -> &ShardedHandle {
+        &self.handle
+    }
+
+    /// Stop the tail loop and take the follower back (the promotion
+    /// path). Returns `None` if already stopped.
+    pub fn stop(&mut self) -> Option<Follower> {
+        self.stop.store(true, Ordering::Release);
+        self.thread.take().map(|t| t.join().expect("eagle-replica-tail panicked"))
+    }
+}
+
+impl Drop for FollowerHandle {
+    fn drop(&mut self) {
+        let _ = self.stop();
+    }
+}
+
+/// Sleep up to `total`, waking early when `stop` flips (keeps promotion
+/// latency bounded even with long poll intervals).
+fn interruptible_sleep(stop: &AtomicBool, total: Duration) {
+    let mut left = total;
+    while !stop.load(Ordering::Acquire) && left > Duration::ZERO {
+        let step = left.min(Duration::from_millis(25));
+        std::thread::sleep(step);
+        left -= step;
+    }
+}
+
+/// Read a file from `offset` to EOF (the follower's incremental log
+/// tail; avoids re-reading already-consumed bytes every poll).
+fn read_from(path: &Path, offset: u64) -> Result<Vec<u8>> {
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    f.seek(SeekFrom::Start(offset))
+        .with_context(|| format!("seeking {}", path.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(bytes)
+}

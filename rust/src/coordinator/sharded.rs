@@ -245,7 +245,9 @@ pub struct GlobalLane {
 }
 
 impl GlobalLane {
-    fn from_elo(elo: GlobalElo, cadence: EpochParams) -> Self {
+    /// Wrap a (possibly checkpoint-resumed) table as the stream-order
+    /// writer lane; the initial published cell is the table as given.
+    pub(crate) fn from_elo(elo: GlobalElo, cadence: EpochParams) -> Self {
         let initial = SharedGlobal { ratings: elo.ratings(), history_len: elo.history_len() };
         GlobalLane {
             elo,
@@ -463,19 +465,18 @@ impl ShardedRouter {
         }
     }
 
-    /// Reassemble a router from recovered parts (the durable store's
-    /// restart path, [`super::durable::Recovery::into_router`]): lanes
-    /// carry their restored stores + id maps, `elo` is the checkpointed
-    /// global table with the durable tail already refolded, and `next_id`
-    /// continues the global arrival-id space past every recovered record.
-    #[allow(clippy::too_many_arguments)]
-    pub(crate) fn from_parts(
+    /// Reassemble a router around *live* lanes (the durable store's
+    /// catch-up path, [`super::durable::CatchUp::finish`], which both
+    /// crash recovery and replica promotion go through): the lanes carry
+    /// their replayed stores + id maps and keep their publication rings,
+    /// so reader handles taken before reassembly stay valid; `next_id`
+    /// continues the global arrival-id space past every applied record.
+    pub(crate) fn from_lanes(
         params: EagleParams,
         n_models: usize,
         dim: usize,
         shard_params: ShardParams,
-        elo: GlobalElo,
-        cadence: EpochParams,
+        global: GlobalLane,
         lanes: Vec<ShardLane>,
         next_id: u32,
     ) -> Self {
@@ -485,7 +486,7 @@ impl ShardedRouter {
             n_models,
             dim,
             shard_params,
-            global: GlobalLane::from_elo(elo, cadence),
+            global,
             lanes,
             next_id,
         }
@@ -504,13 +505,7 @@ impl ShardedRouter {
 
     /// The lock-free reader handle (cheap to clone, `Send + Sync`).
     pub fn handle(&self) -> ShardedHandle {
-        ShardedHandle {
-            params: self.params.clone(),
-            dim: self.dim,
-            rings: self.lanes.iter().map(|l| l.writer.ring()).collect(),
-            ids: self.lanes.iter().map(|l| l.ids_cell.clone()).collect(),
-            global: self.global.cell.clone(),
-        }
+        handle_of(self.params.clone(), self.dim, &self.global, &self.lanes)
     }
 
     /// Ingest one observation: fold into the shared global table (stream
@@ -629,6 +624,25 @@ impl ShardedRouter {
     pub fn save_to(&mut self, path: &Path) -> Result<()> {
         self.publish_all();
         self.handle().load().persist(path)
+    }
+}
+
+/// Reader handle over writer-side lanes that are not (or not yet)
+/// assembled into a [`ShardedRouter`] — the replica catch-up path
+/// ([`super::durable::CatchUp::handle`]) serves routes from the same
+/// rings its tail loop is still filling.
+pub(crate) fn handle_of(
+    params: EagleParams,
+    dim: usize,
+    global: &GlobalLane,
+    lanes: &[ShardLane],
+) -> ShardedHandle {
+    ShardedHandle {
+        params,
+        dim,
+        rings: lanes.iter().map(|l| l.writer.ring()).collect(),
+        ids: lanes.iter().map(|l| l.ids_cell.clone()).collect(),
+        global: global.cell.clone(),
     }
 }
 

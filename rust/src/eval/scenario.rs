@@ -567,7 +567,7 @@ fn adversarial_wire_cells(cfg: &ScenarioConfig, cells: &mut Vec<Cell>) {
             }
         }
     }
-    state.ingest.shutdown();
+    state.stop();
 
     // every garbage line errors, every valid line succeeds — anything
     // else is a protocol bug, surfaced as survived = 0

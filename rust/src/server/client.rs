@@ -19,6 +19,9 @@ pub struct ServerHello {
     pub ops: Vec<String>,
     pub policies: Vec<String>,
     pub max_route_batch: usize,
+    /// `"leader"` or `"follower"` (pre-replication servers read as
+    /// `"leader"`).
+    pub role: String,
 }
 
 /// A routed decision as seen by the client.
@@ -62,10 +65,22 @@ impl EagleClient {
     /// v1 surface (`route` with a plain budget).
     pub fn hello(&mut self) -> Result<ServerHello> {
         match self.call(encode_request(&Request::Hello))? {
-            Response::Hello { version, ops, policies, max_route_batch } => {
-                Ok(ServerHello { version, ops, policies, max_route_batch })
+            Response::Hello { version, ops, policies, max_route_batch, role } => {
+                Ok(ServerHello { version, ops, policies, max_route_batch, role })
             }
             Response::Error(e) => bail!("server error: {e}"),
+            other => bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Promote a follower replica to leader (admin op; idempotent on a
+    /// leader). Returns the server's role after the op.
+    pub fn promote(&mut self) -> Result<String> {
+        match self.call(encode_request(&Request::Promote))? {
+            Response::Promoted { role } => Ok(role),
+            Response::NotLeader { message } | Response::Error(message) => {
+                bail!("server error: {message}")
+            }
             other => bail!("unexpected response: {other:?}"),
         }
     }
@@ -142,6 +157,7 @@ impl EagleClient {
         .to_json();
         match self.call(req)? {
             Response::FeedbackAccepted => Ok(()),
+            Response::NotLeader { message } => bail!("not the leader: {message}"),
             Response::Error(e) => bail!("server error: {e}"),
             other => bail!("unexpected response: {other:?}"),
         }
@@ -162,6 +178,7 @@ impl EagleClient {
         let req = json::obj(vec![("op", json::str_v("snapshot"))]).to_json();
         match self.call(req)? {
             Response::SnapshotSaved { path, entries } => Ok((path, entries)),
+            Response::NotLeader { message } => bail!("not the leader: {message}"),
             Response::Error(e) => bail!("server error: {e}"),
             other => bail!("unexpected response: {other:?}"),
         }

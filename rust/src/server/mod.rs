@@ -46,20 +46,22 @@ pub mod client;
 mod event_loop;
 pub mod protocol;
 pub mod shed;
+pub mod stats;
 
 use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{EpochParams, IvfPublishParams, ShardParams};
+use crate::config::{EpochParams, IvfPublishParams, QuantParams, Role, ShardParams};
 use crate::coordinator::durable::{DurableOptions, DurableStore};
 use crate::coordinator::feedback::{ComparisonSampler, RawVerdict};
 use crate::coordinator::ingest::{IngestMetrics, IngestOptions, IngestPipeline, PersistTarget};
 use crate::coordinator::policy::{approx_tokens, PolicySpec, RoutePolicy};
 use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::replica::{Follower, FollowerHandle, Promotion};
 use crate::coordinator::router::EagleRouter;
 use crate::coordinator::sharded::{ShardedHandle, ShardedRouter, ShardedSnapshot};
 use crate::embedding::EmbedHandle;
@@ -125,11 +127,19 @@ pub struct ServerOptions {
     /// Admission control for the event-looped front-end (`[server]`
     /// `max_connections` / `max_inflight` / `idle_timeout_ms`).
     pub admission: Admission,
+    /// Serving role (`[replica] role`, `EAGLE_ROLE`, `--role`): a
+    /// `Leader` owns ingest + the durable store; a `Follower` tails the
+    /// leader's store (which `persist_dir` must point at) read-only and
+    /// rejects feedback/admin ops until promoted.
+    pub role: Role,
+    /// Follower tail-poll interval (`[replica] poll_ms`).
+    pub replica_poll_ms: u64,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
         let durable = DurableOptions::default();
+        let replica = crate::config::ReplicaParams::default();
         ServerOptions {
             epoch: EpochParams::default(),
             shards: ShardParams::default(),
@@ -141,18 +151,40 @@ impl Default for ServerOptions {
             fsync: durable.fsync,
             kernel_backend: "auto".to_string(),
             admission: Admission::default(),
+            role: Role::default(),
+            replica_poll_ms: replica.poll_ms,
         }
     }
+}
+
+/// The role-dependent half of the server: a leader owns the ingest
+/// pipeline; a follower owns the tail loop. Swapped under the state's
+/// role lock by the `promote` op.
+enum RoleState {
+    Leader {
+        /// The sharded ingest side: per-shard applier threads fed by a
+        /// raw feedback queue; never touched by route reads.
+        ingest: IngestPipeline,
+    },
+    Follower {
+        /// The background tail loop replaying the leader's durable log.
+        tail: FollowerHandle,
+    },
 }
 
 /// Shared server state.
 pub struct ServerState {
     /// Lock-free publication point for the route path (one ring per
-    /// shard plus the shared global table).
+    /// shard plus the shared global table). Stable across promotion:
+    /// the promoted router is reassembled around the same rings.
     pub snapshots: ShardedHandle,
-    /// The sharded ingest side: per-shard applier threads fed by a raw
-    /// feedback queue; never touched by route reads.
-    pub ingest: IngestPipeline,
+    /// Leader (ingest pipeline) or follower (tail loop); `promote`
+    /// swaps this under the write lock. Route reads never touch it.
+    role: RwLock<RoleState>,
+    /// Ingest counters, stable across promotion (the promoted pipeline
+    /// reuses this handle via
+    /// [`IngestPipeline::start_with_metrics`]).
+    ingest_metrics: Arc<IngestMetrics>,
     pub registry: ModelRegistry,
     pub policy: RoutePolicy,
     /// Policy applied to requests that don't pick one (v1 clients, bare
@@ -166,11 +198,21 @@ pub struct ServerState {
     pub snapshot_path: Option<std::path::PathBuf>,
     /// The durable segment store, when `[persist] dir` is configured —
     /// the admin `snapshot` op checkpoints it instead of writing JSON.
-    durable: Option<Arc<DurableStore>>,
+    /// `None` on a follower until promotion attaches the leader's store.
+    durable: RwLock<Option<Arc<DurableStore>>>,
     /// Admission knobs the event loop enforces ([`ServerOptions`]).
     pub admission: Admission,
     /// Per-reason admission counters, appended to the `stats` report.
     pub shed: Arc<shed::ShedMetrics>,
+    /// Build-time knobs the promotion path replays when it starts the
+    /// ingest pipeline mid-flight.
+    epoch: EpochParams,
+    ivf: IvfPublishParams,
+    /// `[quant]` with the `EAGLE_QUANT` override already resolved.
+    quant: QuantParams,
+    persist_interval_ms: u64,
+    durable_opts: DurableOptions,
+    replica_poll: Duration,
     stop: AtomicBool,
 }
 
@@ -241,10 +283,13 @@ impl ServerBuilder {
         self
     }
 
-    /// Materialize the state: resolve the durable store (recover an
-    /// existing one, else bootstrap from the seed router), partition the
-    /// corpus, and start the ingest pipeline threads (one dispatcher +
-    /// one applier per shard).
+    /// Materialize the state. A leader resolves the durable store
+    /// (recover an existing one, else bootstrap from the seed router),
+    /// partitions the corpus, and starts the ingest pipeline threads
+    /// (one dispatcher + one applier per shard). A follower instead
+    /// attaches to the leader's store read-only (`persist_dir` is
+    /// required, the seed router is discarded — the store is
+    /// authoritative) and starts the tail loop.
     pub fn build(self) -> ServerState {
         let ServerBuilder {
             router,
@@ -255,6 +300,16 @@ impl ServerBuilder {
             default_policy,
             snapshot_path,
         } = self;
+        if opts.role == Role::Follower {
+            let dir = opts
+                .persist_dir
+                .as_deref()
+                .expect("follower role requires [persist] dir (the leader's store)");
+            let follower =
+                Follower::open(dir, opts.epoch.clone()).expect("open leader store to follow");
+            return ServerState::from_follower(follower, registry, embed, metrics, opts)
+                .finish(default_policy, snapshot_path);
+        }
         let durable_opts =
             DurableOptions { seal_bytes: opts.seal_bytes.max(1), fsync: opts.fsync };
         let (writer, durable) = match &opts.persist_dir {
@@ -323,38 +378,28 @@ impl ServerState {
         if let Err(e) = crate::vectordb::kernel::configure(&opts.kernel_backend) {
             eprintln!("warning: [kernel] backend ignored: {e}");
         }
-        writer.set_ivf(opts.ivf);
-        // EAGLE_QUANT flips the SQ8 publication policy without a config
-        // edit — CI's quantized arm rides this, mirroring EAGLE_KERNEL
-        let mut quant = opts.quant;
-        if let Ok(v) = std::env::var("EAGLE_QUANT") {
-            let on = matches!(v.trim(), "1" | "true" | "on" | "yes");
-            if on != quant.enable {
-                eprintln!(
-                    "note: EAGLE_QUANT={} overrides [quant] enable = {}",
-                    v.trim(),
-                    quant.enable
-                );
-                quant.enable = on;
-            }
-        }
+        let quant = resolved_quant(opts.quant);
+        writer.set_ivf(opts.ivf.clone());
         writer.set_quant(quant);
         let snapshots = writer.handle();
+        let ingest_metrics = Arc::new(IngestMetrics::new(writer.shard_count()));
         // the durable store always rides the pipeline (inline appends);
         // the interval only paces the checkpoint beat
         let persist = durable.as_ref().map(|store| PersistTarget {
             store: store.clone(),
             interval: Duration::from_millis(opts.persist_interval_ms),
         });
-        let ingest = IngestPipeline::start(
+        let ingest = IngestPipeline::start_with_metrics(
             writer,
             Some(embed.clone()),
-            IngestOptions { epoch: opts.epoch, persist, ..Default::default() },
+            IngestOptions { epoch: opts.epoch.clone(), persist, ..Default::default() },
+            Some(ingest_metrics.clone()),
         );
         let policy = RoutePolicy::new(&registry);
         ServerState {
             snapshots,
-            ingest,
+            role: RwLock::new(RoleState::Leader { ingest }),
+            ingest_metrics,
             registry,
             policy,
             default_policy: PolicySpec::unbounded(),
@@ -362,9 +407,67 @@ impl ServerState {
             metrics,
             sampler: ComparisonSampler::default(),
             snapshot_path: None,
-            durable,
+            durable: RwLock::new(durable),
             admission: opts.admission,
             shed: Arc::new(shed::ShedMetrics::new()),
+            epoch: opts.epoch,
+            ivf: opts.ivf,
+            quant,
+            persist_interval_ms: opts.persist_interval_ms,
+            durable_opts: DurableOptions {
+                seal_bytes: opts.seal_bytes.max(1),
+                fsync: opts.fsync,
+            },
+            replica_poll: Duration::from_millis(opts.replica_poll_ms.max(1)),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Wire a follower state: same kernel/quant resolution as the leader
+    /// path, but the route path reads the follower's replica lanes and
+    /// the role half is the tail loop, not a pipeline. The ingest metrics
+    /// handle exists from the start (all zeros) so `stats` keeps one
+    /// shape and promotion can hand it to the new pipeline.
+    fn from_follower(
+        follower: Follower,
+        registry: ModelRegistry,
+        embed: EmbedHandle,
+        metrics: Arc<Metrics>,
+        opts: ServerOptions,
+    ) -> Self {
+        if let Err(e) = crate::vectordb::kernel::configure(&opts.kernel_backend) {
+            eprintln!("warning: [kernel] backend ignored: {e}");
+        }
+        let quant = resolved_quant(opts.quant);
+        let shard_count = follower.meta().shards.count;
+        let snapshots = follower.handle();
+        let ingest_metrics = Arc::new(IngestMetrics::new(shard_count));
+        let replica_poll = Duration::from_millis(opts.replica_poll_ms.max(1));
+        let tail = FollowerHandle::spawn(follower, replica_poll);
+        let policy = RoutePolicy::new(&registry);
+        ServerState {
+            snapshots,
+            role: RwLock::new(RoleState::Follower { tail }),
+            ingest_metrics,
+            registry,
+            policy,
+            default_policy: PolicySpec::unbounded(),
+            embed,
+            metrics,
+            sampler: ComparisonSampler::default(),
+            snapshot_path: None,
+            durable: RwLock::new(None),
+            admission: opts.admission,
+            shed: Arc::new(shed::ShedMetrics::new()),
+            epoch: opts.epoch,
+            ivf: opts.ivf,
+            quant,
+            persist_interval_ms: opts.persist_interval_ms,
+            durable_opts: DurableOptions {
+                seal_bytes: opts.seal_bytes.max(1),
+                fsync: opts.fsync,
+            },
+            replica_poll,
             stop: AtomicBool::new(false),
         }
     }
@@ -379,21 +482,53 @@ impl ServerState {
         self
     }
 
-    /// The attached durable store, if `[persist] dir` is configured.
-    pub fn durable_store(&self) -> Option<&Arc<DurableStore>> {
-        self.durable.as_ref()
+    /// The attached durable store, if `[persist] dir` is configured
+    /// (`None` on a follower until promotion).
+    pub fn durable_store(&self) -> Option<Arc<DurableStore>> {
+        self.durable.read().unwrap().clone()
     }
 
-    /// Ingest-side progress counters (queued/applied/dropped, per shard).
+    /// Ingest-side progress counters (queued/applied/dropped, per
+    /// shard). Stable across promotion; all zeros while following.
     pub fn ingest_metrics(&self) -> &Arc<IngestMetrics> {
-        self.ingest.metrics()
+        &self.ingest_metrics
+    }
+
+    /// The current serving role (may flip Follower → Leader via the
+    /// `promote` op).
+    pub fn role(&self) -> Role {
+        match &*self.role.read().unwrap() {
+            RoleState::Leader { .. } => Role::Leader,
+            RoleState::Follower { .. } => Role::Follower,
+        }
+    }
+
+    /// Run `f` against the ingest pipeline, or `None` while following.
+    fn with_leader<R>(&self, f: impl FnOnce(&IngestPipeline) -> R) -> Option<R> {
+        match &*self.role.read().unwrap() {
+            RoleState::Leader { ingest } => Some(f(ingest)),
+            RoleState::Follower { .. } => None,
+        }
+    }
+
+    /// The typed redirect error every mutating op gets on a follower.
+    fn not_leader(&self, op: &str) -> Response {
+        self.metrics.errors.inc();
+        Response::NotLeader {
+            message: format!("{op} requires the leader (this replica is a follower)"),
+        }
     }
 
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        // closes the intake, drains + publishes the tails, joins the
-        // pipeline threads (idempotent)
-        self.ingest.shutdown();
+        match &mut *self.role.write().unwrap() {
+            // closes the intake, drains + publishes the tails, joins the
+            // pipeline threads (idempotent)
+            RoleState::Leader { ingest } => ingest.shutdown(),
+            RoleState::Follower { tail } => {
+                tail.stop();
+            }
+        }
     }
 
     pub fn stopped(&self) -> bool {
@@ -403,10 +538,87 @@ impl ServerState {
     /// Barrier: apply and publish everything ingested so far — every
     /// shard lane and the shared global table (tests / admin; the
     /// appliers publish on cadence by themselves). Returns the highest
-    /// shard epoch.
+    /// shard epoch. On a follower this is just the current epoch — the
+    /// tail loop publishes on its own cadence.
     pub fn force_publish(&self) -> u64 {
-        self.ingest.flush();
+        self.with_leader(|ingest| ingest.flush());
         self.snapshots.shard_epochs().into_iter().max().unwrap_or(0)
+    }
+
+    /// The `promote` op: follower → leader. Stops the tail loop, takes
+    /// the advisory lock (refused while the old leader is alive),
+    /// repairs + attaches the durable store, and starts the ingest
+    /// pipeline over the follower's own lanes — route readers never see
+    /// a gap. Idempotent on a leader. On failure the tail loop restarts
+    /// and the error is returned.
+    fn promote(&self) -> Response {
+        let mut role = self.role.write().unwrap();
+        let RoleState::Follower { tail } = &mut *role else {
+            return Response::Promoted { role: Role::Leader.as_str().to_string() };
+        };
+        let Some(follower) = tail.stop() else {
+            self.metrics.errors.inc();
+            return Response::Error("promote: tail loop already stopped".into());
+        };
+        match follower.promote(self.durable_opts.clone()) {
+            Ok(Promotion { store, mut router }) => {
+                router.set_ivf(self.ivf.clone());
+                router.set_quant(self.quant);
+                let persist = Some(PersistTarget {
+                    store: store.clone(),
+                    interval: Duration::from_millis(self.persist_interval_ms),
+                });
+                let ingest = IngestPipeline::start_with_metrics(
+                    router,
+                    Some(self.embed.clone()),
+                    IngestOptions { epoch: self.epoch.clone(), persist, ..Default::default() },
+                    Some(self.ingest_metrics.clone()),
+                );
+                *self.durable.write().unwrap() = Some(store);
+                *role = RoleState::Leader { ingest };
+                Response::Promoted { role: Role::Leader.as_str().to_string() }
+            }
+            Err(e) => {
+                self.metrics.errors.inc();
+                let msg = format!("promote: {:#}", e.error);
+                *role = RoleState::Follower {
+                    tail: FollowerHandle::spawn(e.follower, self.replica_poll),
+                };
+                Response::Error(msg)
+            }
+        }
+    }
+
+    /// Gather the versioned stats report — the one place every section
+    /// (server, ingest, shed, kernel/quant, replica) is assembled; the
+    /// `stats` op and the CLI both serialize from here.
+    pub fn stats_report(&self) -> stats::StatsReport {
+        let (role, replica) = match &*self.role.read().unwrap() {
+            RoleState::Leader { .. } => (Role::Leader, None),
+            RoleState::Follower { tail } => {
+                let m = tail.metrics();
+                (
+                    Role::Follower,
+                    Some(stats::ReplicaSection {
+                        lag_frames: m.lag_frames(),
+                        lag_bytes: m.lag_bytes(),
+                        manifest_generation: m.manifest_generation(),
+                        applied_records: m.applied_records.get(),
+                        polls: m.polls.get(),
+                    }),
+                )
+            }
+        };
+        stats::StatsReport {
+            version: stats::STATS_VERSION,
+            role: role.as_str(),
+            kernel: crate::vectordb::kernel::active().name(),
+            quant: self.quant.enable,
+            server: self.metrics.report(),
+            ingest: self.ingest_metrics.report(),
+            shed: self.shed.report(),
+            replica,
+        }
     }
 
     /// Route a slab of texts: one embed round trip, one snapshot
@@ -461,52 +673,54 @@ impl ServerState {
     pub fn handle(&self, req: Request, rng: &mut Rng) -> Response {
         match req {
             Request::Ping => Response::Pong,
-            Request::Hello => Response::hello(),
-            Request::Snapshot => match (&self.durable, &self.snapshot_path) {
-                (Some(store), _) => {
-                    // the durable store rides the op: flush + fsync every
-                    // delta log and advance the global checkpoint —
-                    // O(unsynced records), not O(corpus)
-                    if self.ingest.persist_now() {
-                        let entries = self.snapshots.load().store_len() as u64;
-                        Response::SnapshotSaved {
-                            path: store.dir().display().to_string(),
-                            entries,
-                        }
-                    } else {
-                        self.metrics.errors.inc();
-                        Response::Error("snapshot: ingest pipeline is shut down".into())
-                    }
+            Request::Hello => Response::hello(self.role().as_str()),
+            Request::Promote => self.promote(),
+            Request::Snapshot => {
+                if self.role() == Role::Follower {
+                    return self.not_leader("snapshot");
                 }
-                (None, None) => {
-                    Response::Error("snapshot op disabled (no path configured)".into())
-                }
-                (None, Some(path)) => {
-                    // flush the pipeline so the persisted snapshot covers
-                    // everything accepted before this op, then write the
-                    // published state — no writer lane is ever locked
-                    self.ingest.flush();
-                    let snap = self.snapshots.load();
-                    let entries = snap.store_len() as u64;
-                    match snap.persist(path) {
-                        Ok(()) => Response::SnapshotSaved {
-                            path: path.display().to_string(),
-                            entries,
-                        },
-                        Err(e) => {
+                match (self.durable_store(), &self.snapshot_path) {
+                    (Some(store), _) => {
+                        // the durable store rides the op: flush + fsync
+                        // every delta log and advance the global
+                        // checkpoint — O(unsynced records), not O(corpus)
+                        if self.with_leader(|i| i.persist_now()) == Some(true) {
+                            let entries = self.snapshots.load().store_len() as u64;
+                            Response::SnapshotSaved {
+                                path: store.dir().display().to_string(),
+                                entries,
+                            }
+                        } else {
                             self.metrics.errors.inc();
-                            Response::Error(format!("snapshot: {e}"))
+                            Response::Error("snapshot: ingest pipeline is shut down".into())
+                        }
+                    }
+                    (None, None) => {
+                        Response::Error("snapshot op disabled (no path configured)".into())
+                    }
+                    (None, Some(path)) => {
+                        // flush the pipeline so the persisted snapshot
+                        // covers everything accepted before this op, then
+                        // write the published state — no writer lane is
+                        // ever locked
+                        self.with_leader(|i| i.flush());
+                        let snap = self.snapshots.load();
+                        let entries = snap.store_len() as u64;
+                        match snap.persist(path) {
+                            Ok(()) => Response::SnapshotSaved {
+                                path: path.display().to_string(),
+                                entries,
+                            },
+                            Err(e) => {
+                                self.metrics.errors.inc();
+                                Response::Error(format!("snapshot: {e}"))
+                            }
                         }
                     }
                 }
-            },
+            }
             Request::Stats => Response::Stats {
-                report: format!(
-                    "{}\n{}\n{}",
-                    self.metrics.report(),
-                    self.ingest.metrics().report(),
-                    self.shed.report()
-                ),
+                report: self.stats_report().render(),
                 requests: self.metrics.requests.get(),
                 feedback: self.metrics.feedback.get(),
             },
@@ -539,7 +753,7 @@ impl ServerState {
                     (self.registry.index_of(&model_a), self.registry.index_of(&model_b))
                 else {
                     self.metrics.errors.inc();
-                    self.ingest.metrics().dropped_unknown_model.inc();
+                    self.ingest_metrics.dropped_unknown_model.inc();
                     return Response::Error(format!(
                         "unknown model in feedback: {model_a} / {model_b}"
                     ));
@@ -554,12 +768,17 @@ impl ServerState {
                 }
                 // enqueue the raw text; the ingest pipeline embeds it on
                 // the applier side (batched through the PJRT bucket path)
-                if self.ingest.push_raw(RawVerdict { text, model_a: a, model_b: b, score_a }) {
-                    self.metrics.feedback.inc();
-                    Response::FeedbackAccepted
-                } else {
-                    self.metrics.errors.inc();
-                    Response::Error("feedback dropped: ingest queue full".into())
+                let verdict = RawVerdict { text, model_a: a, model_b: b, score_a };
+                match self.with_leader(|i| i.push_raw(verdict)) {
+                    Some(true) => {
+                        self.metrics.feedback.inc();
+                        Response::FeedbackAccepted
+                    }
+                    Some(false) => {
+                        self.metrics.errors.inc();
+                        Response::Error("feedback dropped: ingest queue full".into())
+                    }
+                    None => self.not_leader("feedback"),
                 }
             }
         }
@@ -621,6 +840,24 @@ impl ServerState {
         }
         out.into_iter().map(|r| r.expect("every line answered")).collect()
     }
+}
+
+/// `[quant]` with the `EAGLE_QUANT` env override applied — CI's
+/// quantized arm flips SQ8 publication on without a config edit,
+/// mirroring `EAGLE_KERNEL` (the shared [`crate::config::env_override`]
+/// rule: a malformed value warns and keeps the configured setting).
+fn resolved_quant(configured: QuantParams) -> QuantParams {
+    let enable = crate::config::env_override(
+        "EAGLE_QUANT",
+        "[quant] enable",
+        configured.enable,
+        |s| match s {
+            "1" | "true" | "on" | "yes" => Ok(true),
+            "0" | "false" | "off" | "no" => Ok(false),
+            _ => Err(format!("bad value '{s}' (expected 1|0)")),
+        },
+    );
+    QuantParams { enable, ..configured }
 }
 
 /// The running server: one event-loop thread owning every socket plus
@@ -720,5 +957,9 @@ mod tests {
         assert_eq!(opts.admission.max_inflight, server.max_inflight);
         assert_eq!(opts.admission.idle_timeout_ms, server.idle_timeout_ms);
         assert_eq!(opts.admission, Admission::default());
+        let replica = crate::config::ReplicaParams::default();
+        assert_eq!(opts.role, Role::Leader);
+        assert_eq!(opts.role.as_str(), replica.role);
+        assert_eq!(opts.replica_poll_ms, replica.poll_ms);
     }
 }

@@ -45,7 +45,7 @@ pub const MAX_ROUTE_BATCH: usize = 256;
 
 /// Op names advertised by `hello`, in stable order.
 pub const OPS: &[&str] =
-    &["hello", "route", "route_batch", "feedback", "stats", "ping", "snapshot"];
+    &["hello", "route", "route_batch", "feedback", "stats", "ping", "snapshot", "promote"];
 
 /// Policy names advertised by `hello`, in stable order.
 pub const POLICIES: &[&str] = &["budget", "cost_aware", "threshold"];
@@ -64,8 +64,11 @@ pub enum Request {
     Ping,
     /// Admin: persist router state to the server-configured snapshot path.
     Snapshot,
-    /// Capability discovery (v2): version, ops, policies, batch cap.
+    /// Capability discovery (v2): version, ops, policies, batch cap, role.
     Hello,
+    /// Admin (v2): promote a follower replica to leader (idempotent on a
+    /// leader).
+    Promote,
 }
 
 /// One routed decision (shared by single and batch responses).
@@ -103,18 +106,28 @@ pub enum Response {
         ops: Vec<String>,
         policies: Vec<String>,
         max_route_batch: usize,
+        /// Serving role: `"leader"` or `"follower"` (absent from pre-
+        /// replication servers, which clients read as `"leader"`).
+        role: String,
     },
+    /// `promote` succeeded (or the server already was the leader).
+    Promoted { role: String },
+    /// Typed redirect: the op needs the leader and this replica is a
+    /// follower. On the wire it is an error object with a `not_leader`
+    /// marker, so v1/v2 clients that only know `error` still fail clean.
+    NotLeader { message: String },
     Error(String),
 }
 
 impl Response {
     /// The server's capability report.
-    pub fn hello() -> Response {
+    pub fn hello(role: &str) -> Response {
         Response::Hello {
             version: PROTOCOL_VERSION,
             ops: OPS.iter().map(|s| s.to_string()).collect(),
             policies: POLICIES.iter().map(|s| s.to_string()).collect(),
             max_route_batch: MAX_ROUTE_BATCH,
+            role: role.to_string(),
         }
     }
 }
@@ -197,6 +210,7 @@ fn parse_request_v2(v: &Value) -> Result<Request, String> {
         Some("ping") => check_fields(v, "ping", &["v", "op"]).map(|_| Request::Ping),
         Some("snapshot") => check_fields(v, "snapshot", &["v", "op"]).map(|_| Request::Snapshot),
         Some("hello") => check_fields(v, "hello", &["v", "op"]).map(|_| Request::Hello),
+        Some("promote") => check_fields(v, "promote", &["v", "op"]).map(|_| Request::Promote),
         Some(op) => Err(format!("unknown op '{op}'")),
         None => Err("missing op".into()),
     }
@@ -325,6 +339,9 @@ pub fn encode_request(r: &Request) -> String {
         Request::Hello => {
             json::obj(vec![("v", json::num(2.0)), ("op", json::str_v("hello"))]).to_json()
         }
+        Request::Promote => {
+            json::obj(vec![("v", json::num(2.0)), ("op", json::str_v("promote"))]).to_json()
+        }
     }
 }
 
@@ -407,7 +424,7 @@ pub fn encode_response(r: &Response) -> String {
             ("entries", json::num(*entries as f64)),
         ])
         .to_json(),
-        Response::Hello { version, ops, policies, max_route_batch } => {
+        Response::Hello { version, ops, policies, max_route_batch, role } => {
             let hello = json::obj(vec![
                 ("version", json::num(*version as f64)),
                 ("ops", Value::Arr(ops.iter().map(|s| json::str_v(s)).collect())),
@@ -416,9 +433,22 @@ pub fn encode_response(r: &Response) -> String {
                     Value::Arr(policies.iter().map(|s| json::str_v(s)).collect()),
                 ),
                 ("max_route_batch", json::num(*max_route_batch as f64)),
+                ("role", json::str_v(role)),
             ]);
             json::obj(vec![("ok", Value::Bool(true)), ("hello", hello)]).to_json()
         }
+        Response::Promoted { role } => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("promoted", Value::Bool(true)),
+            ("role", json::str_v(role)),
+        ])
+        .to_json(),
+        Response::NotLeader { message } => json::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", json::str_v(message)),
+            ("not_leader", Value::Bool(true)),
+        ])
+        .to_json(),
         Response::Error(msg) => {
             json::obj(vec![("ok", Value::Bool(false)), ("error", json::str_v(msg))]).to_json()
         }
@@ -429,12 +459,19 @@ pub fn encode_response(r: &Response) -> String {
 pub fn parse_response(line: &str) -> Result<Response, String> {
     let v = json::parse(line.trim()).map_err(|e| format!("bad json: {e}"))?;
     if v.get("ok").as_bool() != Some(true) {
-        return Ok(Response::Error(
-            v.get("error").as_str().unwrap_or("unknown error").to_string(),
-        ));
+        let message = v.get("error").as_str().unwrap_or("unknown error").to_string();
+        if v.get("not_leader").as_bool() == Some(true) {
+            return Ok(Response::NotLeader { message });
+        }
+        return Ok(Response::Error(message));
     }
     if v.get("pong").as_bool() == Some(true) {
         return Ok(Response::Pong);
+    }
+    if v.get("promoted").as_bool() == Some(true) {
+        return Ok(Response::Promoted {
+            role: v.get("role").as_str().unwrap_or("leader").to_string(),
+        });
     }
     if v.get("accepted").as_bool() == Some(true) {
         return Ok(Response::FeedbackAccepted);
@@ -459,6 +496,8 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
                 .get("max_route_batch")
                 .as_usize()
                 .ok_or("hello: missing max_route_batch")?,
+            // pre-replication servers don't send a role: they are leaders
+            role: hello.get("role").as_str().unwrap_or("leader").to_string(),
         });
     }
     if let Some(items) = v.get("batch").as_arr() {
@@ -625,18 +664,50 @@ mod tests {
         let err = parse_request(r#"{"op":"hello"}"#).unwrap_err();
         assert_eq!(err, "unknown op 'hello'");
 
-        let h = Response::hello();
+        let h = Response::hello("leader");
         let line = encode_response(&h);
         assert_eq!(parse_response(&line).unwrap(), h);
         match parse_response(&line).unwrap() {
-            Response::Hello { version, ops, policies, max_route_batch } => {
+            Response::Hello { version, ops, policies, max_route_batch, role } => {
                 assert_eq!(version, PROTOCOL_VERSION);
                 assert!(ops.iter().any(|o| o == "route"));
+                assert!(ops.iter().any(|o| o == "promote"));
                 assert_eq!(policies, vec!["budget", "cost_aware", "threshold"]);
                 assert_eq!(max_route_batch, MAX_ROUTE_BATCH);
+                assert_eq!(role, "leader");
             }
             other => panic!("{other:?}"),
         }
+        // a pre-replication server's hello (no role field) reads as leader
+        let legacy = r#"{"ok":true,"hello":{"version":2,"ops":["route"],"policies":[],"max_route_batch":4}}"#;
+        match parse_response(legacy).unwrap() {
+            Response::Hello { role, .. } => assert_eq!(role, "leader"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn promote_op_and_replica_responses_roundtrip() {
+        // promote is a v2 construct, like hello
+        assert_eq!(parse_request(r#"{"v":2,"op":"promote"}"#).unwrap(), Request::Promote);
+        assert_eq!(parse_request(r#"{"op":"promote"}"#).unwrap_err(), "unknown op 'promote'");
+        assert!(parse_request(r#"{"v":2,"op":"promote","extra":1}"#).is_err());
+        let line = encode_request(&Request::Promote);
+        assert!(line.contains("\"v\":2"), "{line}");
+        assert_eq!(parse_request(&line).unwrap(), Request::Promote);
+
+        for r in [
+            Response::Promoted { role: "leader".into() },
+            Response::NotLeader { message: "feedback requires the leader".into() },
+            Response::hello("follower"),
+        ] {
+            assert_eq!(parse_response(&encode_response(&r)).unwrap(), r);
+        }
+        // NotLeader is a plain error object to clients that don't know
+        // the marker: ok=false + error text
+        let line = encode_response(&Response::NotLeader { message: "nope".into() });
+        assert!(line.contains("\"ok\":false"), "{line}");
+        assert!(line.contains("\"error\":\"nope\""), "{line}");
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! The versioned stats report: every section the `stats` op exposes,
+//! gathered in one struct and serialized from one place.
+//!
+//! The op had accreted ad-hoc sections (request metrics, ingest, shed —
+//! each formatted at its own call site); replication adds a `replica`
+//! section, and bolting on another `format!` would have made four. A
+//! [`StatsReport`] is assembled by
+//! [`super::ServerState::stats_report`] and rendered by
+//! [`StatsReport::render`]; nothing else concatenates report text.
+//!
+//! The rendered text is versioned ([`STATS_VERSION`], the leading
+//! `stats: v1 ...` line) and append-only: existing section lines keep
+//! their exact shape (`route_latency`, `ingest:`, `server: shed(` are
+//! parsed by tests and dashboards), new sections get new lines.
+
+/// Version stamp of the rendered report layout. Bump when an existing
+/// line changes shape; adding lines is compatible.
+pub const STATS_VERSION: u32 = 1;
+
+/// Replication state as seen by a follower's tail loop
+/// ([`crate::coordinator::replica::ReplicaMetrics`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaSection {
+    /// Decoded records still waiting for a contiguous gid run before the
+    /// global fold.
+    pub lag_frames: u64,
+    /// Unconsumed log-tail bytes after the last poll.
+    pub lag_bytes: u64,
+    /// Generation of the last manifest swap the follower has seen.
+    pub manifest_generation: u64,
+    /// Records applied via the tail so far.
+    pub applied_records: u64,
+    /// Tail polls completed.
+    pub polls: u64,
+}
+
+/// Everything the `stats` op reports, in one place.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsReport {
+    pub version: u32,
+    /// `"leader"` or `"follower"`.
+    pub role: &'static str,
+    /// Resolved scoring-kernel backend name.
+    pub kernel: &'static str,
+    /// SQ8 publication enabled (post-`EAGLE_QUANT` resolution).
+    pub quant: bool,
+    /// Request metrics ([`crate::metrics::Metrics::report`]).
+    pub server: String,
+    /// Ingest progress
+    /// ([`crate::coordinator::ingest::IngestMetrics::report`]).
+    pub ingest: String,
+    /// Admission refusals ([`super::shed::ShedMetrics::report`]).
+    pub shed: String,
+    /// Present on followers only.
+    pub replica: Option<ReplicaSection>,
+}
+
+impl StatsReport {
+    /// Render the wire text: a versioned header line, the classic
+    /// sections in their original order and shape, then the replica
+    /// line when following.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "stats: v{} role={} kernel={} quant={}\n{}\n{}\n{}",
+            self.version, self.role, self.kernel, self.quant, self.server, self.ingest, self.shed,
+        );
+        if let Some(r) = &self.replica {
+            out.push_str(&format!(
+                "\nreplica: role={} lag_frames={} lag_bytes={} manifest_generation={} \
+                 applied={} polls={}",
+                self.role,
+                r.lag_frames,
+                r.lag_bytes,
+                r.manifest_generation,
+                r.applied_records,
+                r.polls,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(replica: Option<ReplicaSection>) -> StatsReport {
+        StatsReport {
+            version: STATS_VERSION,
+            role: if replica.is_some() { "follower" } else { "leader" },
+            kernel: "portable",
+            quant: false,
+            server: "requests=1 feedback=0 errors=0\nroute_latency: n=0".into(),
+            ingest: "ingest: queued=0 folded_global=0 applied=0".into(),
+            shed: "server: shed(conn_limit=0 inflight=0) closed(idle=0 oversize=0)".into(),
+            replica,
+        }
+    }
+
+    #[test]
+    fn render_keeps_classic_section_shapes() {
+        let text = report(None).render();
+        assert!(text.starts_with("stats: v1 role=leader kernel=portable quant=false\n"), "{text}");
+        // the substrings the e2e suite and dashboards grep for
+        assert!(text.contains("route_latency"), "{text}");
+        assert!(text.contains("ingest:"), "{text}");
+        assert!(text.contains("server: shed("), "{text}");
+        assert!(!text.contains("replica:"), "{text}");
+    }
+
+    #[test]
+    fn render_appends_replica_section_on_followers() {
+        let text = report(Some(ReplicaSection {
+            lag_frames: 3,
+            lag_bytes: 128,
+            manifest_generation: 7,
+            applied_records: 42,
+            polls: 9,
+        }))
+        .render();
+        assert!(text.contains("role=follower"), "{text}");
+        assert!(
+            text.contains(
+                "replica: role=follower lag_frames=3 lag_bytes=128 manifest_generation=7 \
+                 applied=42 polls=9"
+            ),
+            "{text}"
+        );
+    }
+}

@@ -632,19 +632,17 @@ pub fn configure(choice: &str) -> Result<(), String> {
 
 /// The process-wide backend, resolved once: `EAGLE_KERNEL` env override,
 /// else the configured default, else CPU detection. Unknown names warn
-/// and auto-detect; unavailable backends warn and fall back to portable.
+/// and keep the configured default (the shared
+/// [`crate::config::env_override`] rule); unavailable backends warn and
+/// fall back to portable.
 pub fn active() -> Backend {
     *ACTIVE.get_or_init(|| {
-        let choice = match std::env::var("EAGLE_KERNEL") {
-            Ok(v) => match parse_choice(&v) {
-                Ok(c) => c,
-                Err(e) => {
-                    eprintln!("warning: EAGLE_KERNEL: {e}; auto-detecting");
-                    None
-                }
-            },
-            Err(_) => CONFIGURED.get().copied(),
-        };
+        let choice = crate::config::env_override(
+            "EAGLE_KERNEL",
+            "[kernel] backend",
+            CONFIGURED.get().copied(),
+            parse_choice,
+        );
         match choice {
             Some(b) if b.available() => b,
             Some(b) => {

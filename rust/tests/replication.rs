@@ -1,0 +1,473 @@
+//! Follower replication over the durable log: property tests that a
+//! follower tailing a live leader's store rebuilds bit-identical routing
+//! state, that promotion ≡ crash recovery (same bytes, same router),
+//! that a newer manifest format is a clear error, and a full wire-level
+//! failover e2e (SIGKILL the leader mid-ingest, promote the follower,
+//! zero acked-feedback loss past the snapshot cut).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use eagle::config::{EagleParams, EpochParams, ShardParams};
+use eagle::coordinator::durable::{DurableLaneWriter, DurableOptions, DurableStore, StoreMeta};
+use eagle::coordinator::replica::Follower;
+use eagle::coordinator::router::Observation;
+use eagle::coordinator::sharded::ShardedRouter;
+use eagle::elo::{Comparison, Outcome};
+use eagle::json::{self, Value};
+use eagle::util::{l2_normalize, Rng};
+
+const DIM: usize = 16;
+const N_MODELS: usize = 5;
+const HASH_SEED: u64 = 0xEA61E;
+
+fn unit(rng: &mut Rng) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+    l2_normalize(&mut v);
+    v
+}
+
+fn rand_obs(rng: &mut Rng) -> Observation {
+    let a = rng.below(N_MODELS);
+    let mut b = rng.below(N_MODELS - 1);
+    if b >= a {
+        b += 1;
+    }
+    let outcome = match rng.below(3) {
+        0 => Outcome::WinA,
+        1 => Outcome::WinB,
+        _ => Outcome::Draw,
+    };
+    Observation::single(unit(rng), Comparison { a, b, outcome })
+}
+
+fn cadence() -> EpochParams {
+    EpochParams { publish_every: 16, publish_interval_ms: 10_000 }
+}
+
+/// Follower cadence: publish every record so the replica's snapshots are
+/// exactly caught up after a quiescent poll (comparisons below are
+/// against fully published state on both sides).
+fn tail_cadence() -> EpochParams {
+    EpochParams { publish_every: 1, publish_interval_ms: 10_000 }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("eagle_replication_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn meta(k: usize) -> StoreMeta {
+    StoreMeta {
+        params: EagleParams::default(),
+        n_models: N_MODELS,
+        dim: DIM,
+        shards: ShardParams { count: k, hash_seed: HASH_SEED },
+    }
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap().flatten() {
+        let from = entry.path();
+        let to = dst.join(entry.file_name());
+        if from.is_dir() {
+            copy_dir(&from, &to);
+        } else {
+            std::fs::copy(&from, &to).unwrap();
+        }
+    }
+}
+
+/// Poll until a round applies nothing and leaves no lag (the leader-side
+/// writers must be synced first).
+fn quiesce(f: &mut Follower) {
+    for _ in 0..200 {
+        let s = f.poll().expect("tail poll");
+        if s.applied == 0 && s.lag_bytes == 0 && s.pending_folds == 0 {
+            return;
+        }
+    }
+    panic!("follower failed to drain a quiescent store");
+}
+
+/// Leader-side published state vs the follower's replica snapshots:
+/// store length, global ratings, and scored batches, all bitwise.
+fn assert_follower_matches(leader: &mut ShardedRouter, f: &Follower, rng: &mut Rng, what: &str) {
+    leader.publish_all();
+    let a = leader.handle().load();
+    let b = f.handle().load();
+    assert_eq!(a.store_len(), b.store_len(), "{what}: store length");
+    assert_eq!(a.global_ratings(), b.global_ratings(), "{what}: global ratings");
+    let queries: Vec<Vec<f32>> = (0..6).map(|_| unit(rng)).collect();
+    assert_eq!(a.score_batch(&queries), b.score_batch(&queries), "{what}: score_batch");
+}
+
+fn assert_equivalent(a: &mut ShardedRouter, b: &mut ShardedRouter, rng: &mut Rng, what: &str) {
+    a.publish_all();
+    b.publish_all();
+    assert_eq!(a.store_len(), b.store_len(), "{what}: store length");
+    assert_eq!(a.history_len(), b.history_len(), "{what}: history length");
+    assert_eq!(
+        a.global_elo().export_state(),
+        b.global_elo().export_state(),
+        "{what}: global-ELO state"
+    );
+    let snap_a = a.handle().load();
+    let snap_b = b.handle().load();
+    assert_eq!(snap_a.global_ratings(), snap_b.global_ratings(), "{what}: ratings");
+    let queries: Vec<Vec<f32>> = (0..6).map(|_| unit(rng)).collect();
+    assert_eq!(
+        snap_a.score_batch(&queries),
+        snap_b.score_batch(&queries),
+        "{what}: score_batch"
+    );
+}
+
+/// One leader-side ingest step: observe in memory, append to the shard's
+/// delta log, interleave seals / syncs / global checkpoints.
+fn leader_step(
+    i: usize,
+    leader: &mut ShardedRouter,
+    writers: &mut [DurableLaneWriter],
+    store: &DurableStore,
+    rng: &mut Rng,
+) {
+    let obs = rand_obs(rng);
+    let shard = leader.shard_for(&obs.embedding);
+    let gid = leader.next_global_id();
+    leader.observe(obs.clone());
+    writers[shard].append(gid, &obs).unwrap();
+    let k = writers.len();
+    if i % 23 == 22 {
+        writers[rng.below(k)].sync().unwrap();
+    }
+    if i % 37 == 36 {
+        writers[rng.below(k)].seal().unwrap();
+    }
+    if i % 61 == 60 {
+        for w in writers.iter_mut() {
+            w.sync().unwrap();
+        }
+        store
+            .checkpoint_global(leader.next_global_id(), leader.global_elo().export_state())
+            .unwrap();
+    }
+}
+
+#[test]
+fn follower_tails_leader_bit_identically() {
+    // the tentpole property: a follower attached mid-storm, polling a
+    // *live* store (buffered writers, seal races, checkpoint swaps),
+    // converges to the leader's exact published state at every quiescent
+    // point — for one shard and several
+    for &k in &[1usize, 3] {
+        let mut rng = Rng::new(0xF0110 + k as u64 * 7);
+        let dir = tmp_dir(&format!("tail_k{k}"));
+        let opts = DurableOptions { seal_bytes: 900, fsync: false };
+        let store = DurableStore::create(&dir, meta(k), opts.clone()).unwrap();
+        let mut writers: Vec<DurableLaneWriter> =
+            (0..k).map(|s| store.lane_writer(s).unwrap()).collect();
+        let mut leader =
+            ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(), meta(k).shards);
+
+        let mut follower: Option<Follower> = None;
+        for i in 0..400usize {
+            leader_step(i, &mut leader, &mut writers, &store, &mut rng);
+            if i == 150 {
+                // attach mid-storm: open-time catch-up against moving files
+                follower = Some(Follower::open(&dir, tail_cadence()).unwrap());
+            }
+            if i > 150 && i % 20 == 0 {
+                // live polls race seals and buffered appends; they must
+                // never error or apply out of order
+                follower.as_mut().unwrap().poll().unwrap();
+            }
+        }
+        for w in &mut writers {
+            w.sync().unwrap();
+        }
+        let mut f = follower.unwrap();
+        quiesce(&mut f);
+        assert_follower_matches(&mut leader, &f, &mut rng, &format!("k={k} first wave"));
+
+        // a second storm wave: this exercises the steady-state tail, not
+        // the open-time catch-up
+        for i in 400..520usize {
+            leader_step(i, &mut leader, &mut writers, &store, &mut rng);
+            if i % 15 == 0 {
+                f.poll().unwrap();
+            }
+        }
+        for w in &mut writers {
+            w.sync().unwrap();
+        }
+        quiesce(&mut f);
+        assert_follower_matches(&mut leader, &f, &mut rng, &format!("k={k} second wave"));
+        assert!(f.applied_records() > 0);
+        assert!(f.metrics().manifest_generation() >= 1, "seals must bump the generation");
+        assert_eq!(f.metrics().lag_bytes(), 0);
+
+        drop(writers);
+        drop(store);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn promote_matches_crash_recovery_bitwise() {
+    // promotion and crash recovery consume the same bytes through the
+    // same CatchUp path; the routers they produce must be bit-identical —
+    // and the promoted one must stay live (ingest resumes durably)
+    let k = 4usize;
+    let mut rng = Rng::new(0x9107E);
+    let dir = tmp_dir("promote");
+    let opts = DurableOptions { seal_bytes: 1200, fsync: false };
+    {
+        let store = DurableStore::create(&dir, meta(k), opts.clone()).unwrap();
+        let mut writers: Vec<DurableLaneWriter> =
+            (0..k).map(|s| store.lane_writer(s).unwrap()).collect();
+        let mut leader =
+            ShardedRouter::new(EagleParams::default(), N_MODELS, DIM, cadence(), meta(k).shards);
+        for i in 0..260usize {
+            leader_step(i, &mut leader, &mut writers, &store, &mut rng);
+        }
+        for w in &mut writers {
+            w.sync().unwrap();
+        }
+        // writers + store drop here: the lock is released, files quiesce
+    }
+    let dir_ref = tmp_dir("promote_ref");
+    copy_dir(&dir, &dir_ref);
+
+    // reference: plain single-node crash recovery of the copied bytes
+    let (_store_ref, recovery) = DurableStore::open(&dir_ref, opts.clone()).unwrap();
+    let mut reference = recovery.into_router(cadence()).unwrap();
+
+    // candidate: follow, then promote
+    let mut f = Follower::open(&dir, cadence()).unwrap();
+    quiesce(&mut f);
+    let pre_handle = f.handle();
+    let promotion = match f.promote(opts.clone()) {
+        Ok(p) => p,
+        Err(e) => panic!("promote failed: {:#}", e.error),
+    };
+    let mut promoted = promotion.router;
+    assert_equivalent(&mut reference, &mut promoted, &mut rng, "promote vs crash recovery");
+
+    // reader handles taken before promotion keep serving the same rings
+    let q = unit(&mut rng);
+    assert_eq!(
+        pre_handle.load().scores(&q),
+        promoted.handle().load().scores(&q),
+        "pre-promotion reader handle diverged"
+    );
+
+    // the promoted node is a real leader: lane writers resume at the
+    // recovered tail and the trajectory matches the reference exactly
+    let store = promotion.store;
+    let mut writers: Vec<DurableLaneWriter> =
+        (0..k).map(|s| store.lane_writer(s).unwrap()).collect();
+    for _ in 0..60 {
+        let obs = rand_obs(&mut rng);
+        let shard = promoted.shard_for(&obs.embedding);
+        let gid = promoted.next_global_id();
+        reference.observe(obs.clone());
+        promoted.observe(obs.clone());
+        writers[shard].append(gid, &obs).unwrap();
+    }
+    for w in &mut writers {
+        w.sync().unwrap();
+    }
+    assert_equivalent(&mut reference, &mut promoted, &mut rng, "post-promotion ingest");
+
+    drop(writers);
+    drop(store);
+    drop(_store_ref);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir_ref).ok();
+}
+
+#[test]
+fn newer_manifest_version_is_a_clear_error() {
+    // forward compatibility: a manifest written by a future format must
+    // produce a clear refusal, not a panic or a silent misparse
+    let dir = tmp_dir("fwdcompat");
+    let opts = DurableOptions { seal_bytes: 4096, fsync: false };
+    drop(DurableStore::create(&dir, meta(2), opts).unwrap());
+    let path = dir.join("MANIFEST.json");
+    let mut v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    match &mut v {
+        Value::Obj(map) => {
+            map.insert("format_version".to_string(), json::num(9.0));
+        }
+        other => panic!("manifest is not an object: {other:?}"),
+    }
+    std::fs::write(&path, v.to_json()).unwrap();
+
+    let err = Follower::open(&dir, cadence()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("newer than supported"), "unhelpful error: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- wire-level failover e2e -------------------------------------------
+
+/// Spawn `eagle serve` on a free port with a durable dir and the hash
+/// embedder (no artifacts needed), returning the child + bound address.
+fn spawn_server(durable_dir: &Path, extra: &[&str]) -> (std::process::Child, String) {
+    use std::io::{BufRead, BufReader};
+    let mut args: Vec<String> = [
+        "serve",
+        "--addr",
+        "127.0.0.1:0",
+        "--workers",
+        "2",
+        "--set",
+        "persist.interval_ms=20",
+        "--set",
+        "persist.seal_bytes=16384",
+        "--set",
+        "persist.fsync=false",
+        "--set",
+        "shards.count=2",
+        "--set",
+        "epoch.publish_every=8",
+        "--set",
+        "replica.poll_ms=10",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    args.push("--set".to_string());
+    args.push(format!("persist.dir={}", durable_dir.display()));
+    args.extend(extra.iter().map(|s| s.to_string()));
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_eagle"))
+        .args(&args)
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn eagle serve");
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut addr = None;
+    let mut line = String::new();
+    // the banner line is printed once serving starts
+    for _ in 0..64 {
+        line.clear();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        if let Some(rest) = line.strip_prefix("eagle serving on ") {
+            addr = rest.split_whitespace().next().map(str::to_string);
+            break;
+        }
+    }
+    // keep draining the pipe so the server never blocks on a full pipe
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).unwrap_or(0) > 0 {
+            sink.clear();
+        }
+    });
+    let addr = addr.expect("server banner with bound address");
+    (child, addr)
+}
+
+#[test]
+fn failover_e2e_promote_preserves_acked_feedback() {
+    use eagle::server::client::EagleClient;
+
+    let root = tmp_dir("failover");
+    let durable = root.join("durable");
+    std::fs::create_dir_all(&root).unwrap();
+
+    // phase 1: leader serves; storm acked feedback, then cut a durable
+    // snapshot (the acked-loss reference point)
+    let (mut leader, leader_addr) = spawn_server(&durable, &[]);
+    let mut lc = EagleClient::connect(&leader_addr).expect("connect leader");
+    assert_eq!(lc.hello().expect("leader hello").role, "leader");
+    for i in 0..300 {
+        lc.feedback(&format!("failover prompt {i}"), "gpt-4", "mistral-7b-chat", 1.0)
+            .expect("feedback accepted");
+    }
+    let (snap_path, entries) = lc.snapshot().expect("durable snapshot op");
+    assert_eq!(entries, 300, "snapshot cut must cover every acked record");
+    assert_eq!(snap_path, durable.display().to_string());
+
+    // phase 2: warm standby tails the same store over the filesystem
+    let (mut follower, follower_addr) = spawn_server(&durable, &["--role", "follower"]);
+    let mut fc = EagleClient::connect(&follower_addr).expect("connect follower");
+    let hello = fc.hello().expect("follower hello");
+    assert_eq!(hello.role, "follower");
+    // read path works on the replica...
+    let decision = fc.route("which model should answer this?", 0.02).expect("replica route");
+    assert!(!decision.model.is_empty());
+    // ...mutating ops get the typed redirect...
+    let err = fc
+        .feedback("rejected on the replica", "gpt-4", "gpt-3.5-turbo", 0.0)
+        .expect_err("follower must reject feedback");
+    assert!(format!("{err:#}").contains("not the leader"), "untyped redirect: {err:#}");
+    let err = fc.snapshot().expect_err("follower must reject snapshot");
+    assert!(format!("{err:#}").contains("not the leader"), "untyped redirect: {err:#}");
+    // ...and the stats report grows a replica section
+    let (report, _, _) = fc.stats().expect("follower stats");
+    assert!(report.contains("replica: role=follower"), "no replica section in: {report}");
+
+    // phase 3: keep ingesting on the leader, then SIGKILL it mid-stream
+    for i in 300..400 {
+        let _ = lc.feedback(&format!("failover prompt {i}"), "gpt-4", "gpt-3.5-turbo", 0.0);
+    }
+    leader.kill().expect("SIGKILL leader");
+    let _ = leader.wait();
+    drop(lc);
+
+    // reference copy of the quiescent store, before promotion mutates it
+    let ref_copy = root.join("reference");
+    copy_dir(&durable, &ref_copy);
+
+    // phase 4: promote the follower (retry while the old leader's lock
+    // liveness check settles)
+    let mut role = String::new();
+    for _ in 0..50 {
+        match fc.promote() {
+            Ok(r) => {
+                role = r;
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    assert_eq!(role, "leader", "promotion did not succeed");
+    assert_eq!(fc.hello().expect("post-promote hello").role, "leader");
+    // promote is idempotent on a leader
+    assert_eq!(fc.promote().expect("repeat promote"), "leader");
+
+    // zero acked loss: everything covered by the snapshot cut survives,
+    // and the promoted corpus equals the single-node replay reference
+    let (_, entries) = fc.snapshot().expect("snapshot after promote");
+    assert!(entries >= 300, "promoted follower lost acked feedback ({entries} records)");
+    let opts = DurableOptions { seal_bytes: 16384, fsync: false };
+    let (_store_ref, recovery) = DurableStore::open(&ref_copy, opts).unwrap();
+    let reference = recovery.into_router(EpochParams::default()).expect("reference replay");
+    assert_eq!(
+        entries,
+        reference.store_len() as u64,
+        "promoted corpus diverged from the single-node replay reference"
+    );
+
+    // the promoted node accepts feedback and persists it
+    fc.feedback("accepted after promotion", "gpt-4", "mistral-7b-chat", 0.5)
+        .expect("feedback on promoted leader");
+    let (_, entries_after) = fc.snapshot().expect("snapshot after new feedback");
+    assert!(entries_after > entries, "promoted leader did not ingest");
+    let (report, _, _) = fc.stats().expect("promoted stats");
+    assert!(report.contains("role=leader"), "stats role did not flip: {report}");
+    assert!(!report.contains("replica:"), "stale replica section in: {report}");
+
+    follower.kill().ok();
+    let _ = follower.wait();
+    std::fs::remove_dir_all(&root).ok();
+}
