@@ -217,6 +217,7 @@ fn main() {
     sharded_storm_sweep(&obs, &mut report);
     ingest_pipeline_sweep(&mut report);
     persist_beat_sweep(&mut report);
+    recovery_open_sweep(&mut report);
     replica_tail_sweep(&mut report);
     connection_scale_sweep(&mut report);
     if eagle::bench::json_enabled() {
@@ -794,7 +795,7 @@ fn persist_beat_sweep(report: &mut JsonReport) {
         let store = DurableStore::create_from_router(
             &dir,
             &router,
-            DurableOptions { seal_bytes: 16 << 20, fsync: true },
+            DurableOptions { seal_bytes: 16 << 20, fsync: true, mmap: true },
         )
         .expect("bootstrap durable store");
         let mut writers: Vec<_> =
@@ -837,6 +838,84 @@ fn persist_beat_sweep(report: &mut JsonReport) {
     let _ = std::fs::remove_dir_all(&root);
 }
 
+/// The ISSUE 10 acceptance sweep: restart cost. Open an n-record durable
+/// store and rebuild a serving router two ways — a v1 store (every frame
+/// re-decoded, every embedding byte re-verified) and the same corpus
+/// compacted to mmap v2 (the aligned f32 slab is mapped and adopted
+/// zero-copy; per-record work shrinks to the gid/comparison side arrays
+/// and the ELO folds). Emits `persist.recover.*`; the acceptance gate is
+/// `persist.recover.speedup_x >= 10` on a sealed, compacted store.
+fn recovery_open_sweep(report: &mut JsonReport) {
+    use eagle::coordinator::durable::{DurableOptions, DurableStore, StoreMeta};
+
+    const N_MODELS: usize = 11;
+    let n: usize = if eagle::bench::smoke() { 4_000 } else { 30_000 };
+    let shards = ShardParams { count: 4, hash_seed: 0xEA61E };
+    let cadence = EpochParams { publish_every: 64, publish_interval_ms: 5 };
+    let root = std::env::temp_dir().join(format!("eagle_recover_sweep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).expect("bench tmp dir");
+
+    let mut open_ms = [0f64; 2];
+    for (slot, (tag, mmap)) in [("decode", false), ("mmap", true)].into_iter().enumerate() {
+        let dir = root.join(tag);
+        let opts = DurableOptions { seal_bytes: 1 << 20, fsync: false, mmap };
+        let meta = StoreMeta {
+            params: EagleParams::default(),
+            n_models: N_MODELS,
+            dim: DIM,
+            shards: shards.clone(),
+        };
+        {
+            // identical corpus both ways (same seed), fully sealed so the
+            // open replays segments, not delta-log tails
+            let store = DurableStore::create(&dir, meta, opts.clone()).expect("create store");
+            let mut writers: Vec<_> =
+                (0..shards.count).map(|s| store.lane_writer(s).expect("lane writer")).collect();
+            let mut router = ShardedRouter::new(
+                EagleParams::default(),
+                N_MODELS,
+                DIM,
+                cadence.clone(),
+                shards.clone(),
+            );
+            let mut rng = Rng::new(0x8EC0);
+            for _ in 0..n {
+                let obs = Observation::single(unit(&mut rng), rand_cmp(&mut rng));
+                let shard = router.shard_for(&obs.embedding);
+                let gid = router.next_global_id();
+                router.observe(obs.clone());
+                writers[shard].append(gid, &obs).expect("append");
+            }
+            for w in &mut writers {
+                w.sync().expect("sync");
+                w.seal().expect("seal");
+            }
+            if mmap {
+                // the steady-state restart shape: binary-counter fixpoint,
+                // superseded files gone
+                store.compact_once();
+                store.gc_retired(Duration::ZERO);
+            }
+        }
+        let t0 = Instant::now();
+        let (_store, recovery) = DurableStore::open(&dir, opts).expect("reopen store");
+        let router = recovery.into_router(cadence.clone()).expect("recover router");
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(router.store_len(), n, "{tag} recovery lost records");
+        open_ms[slot] = ms;
+        report.push(&format!("persist.recover.{tag}_open_ms"), ms);
+    }
+    let speedup = open_ms[0] / open_ms[1].max(1e-9);
+    println!("\n== restart cost ({n}-record store, open -> serving router) ==");
+    println!(
+        "  v1 frame-decode {:.1} ms | compacted-v2 mmap {:.1} ms | speedup {speedup:.1}x",
+        open_ms[0], open_ms[1]
+    );
+    report.push("persist.recover.speedup_x", speedup);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 /// The follower-replication cost surface (PR 9): cold catch-up rate over
 /// an n-record store (`replica.catchup_rps`), steady-state tail rate
 /// while the leader keeps appending (`replica.tail_rps`, with the peak
@@ -863,7 +942,7 @@ fn replica_tail_sweep(report: &mut JsonReport) {
         dim: DIM,
         shards: shards.clone(),
     };
-    let opts = DurableOptions { seal_bytes: 256 << 10, fsync: false };
+    let opts = DurableOptions { seal_bytes: 256 << 10, fsync: false, mmap: true };
     let store = DurableStore::create(&dir, meta, opts.clone()).expect("create durable store");
     let mut writers: Vec<_> =
         (0..shards.count).map(|s| store.lane_writer(s).expect("lane writer")).collect();

@@ -167,11 +167,15 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         cfg.quant.rerank_factor
     );
     println!(
-        "  persist: interval_ms={} dir={} seal_bytes={} fsync={} path={}",
+        "  persist: interval_ms={} dir={} seal_bytes={} fsync={} mmap={} \
+         compact_interval_ms={} gc_grace_ms={} path={}",
         cfg.persist.interval_ms,
         if cfg.persist.dir.is_empty() { "<off>" } else { &cfg.persist.dir },
         cfg.persist.seal_bytes,
         cfg.persist.fsync,
+        cfg.persist.mmap,
+        cfg.persist.compact_interval_ms,
+        cfg.persist.gc_grace_ms,
         if cfg.persist.path.is_empty() { "<snapshot-out>" } else { &cfg.persist.path }
     );
     println!(
@@ -188,8 +192,8 @@ fn cmd_info(cfg: &Config) -> Result<i32> {
         crate::vectordb::kernel::detect().name()
     );
     println!(
-        "  replica: role={} poll_ms={} (EAGLE_ROLE and --role override)",
-        cfg.replica.role, cfg.replica.poll_ms
+        "  replica: role={} poll_ms={} backoff_max_ms={} (EAGLE_ROLE and --role override)",
+        cfg.replica.role, cfg.replica.poll_ms, cfg.replica.backoff_max_ms
     );
     println!("  artifacts: {}", cfg.embed.artifacts_dir);
     match crate::runtime::Manifest::load(Path::new(&cfg.embed.artifacts_dir)) {
@@ -482,13 +486,23 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
                 );
             }
             println!(
-                "segment-granular persistence: seal_bytes={} fsync={} checkpoint beat={}",
+                "segment-granular persistence: seal_bytes={} fsync={} mmap={} \
+                 checkpoint beat={} compaction={}",
                 cfg.persist.seal_bytes,
                 cfg.persist.fsync,
+                cfg.persist.mmap,
                 if cfg.persist.interval_ms == 0 {
                     "flush/admin/shutdown only".to_string()
                 } else {
                     format!("every {} ms", cfg.persist.interval_ms)
+                },
+                if cfg.persist.compact_interval_ms == 0 {
+                    "off".to_string()
+                } else {
+                    format!(
+                        "every {} ms (gc grace {} ms)",
+                        cfg.persist.compact_interval_ms, cfg.persist.gc_grace_ms
+                    )
                 },
             );
         }
@@ -520,10 +534,14 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<i32> {
         persist_dir: persist_dir.clone(),
         seal_bytes: cfg.persist.seal_bytes,
         fsync: cfg.persist.fsync,
+        mmap: cfg.persist.mmap,
+        compact_interval_ms: cfg.persist.compact_interval_ms,
+        gc_grace_ms: cfg.persist.gc_grace_ms,
         kernel_backend: cfg.kernel.backend.clone(),
         admission: admission.clone(),
         role,
         replica_poll_ms: cfg.replica.poll_ms,
+        replica_backoff_max_ms: cfg.replica.backoff_max_ms,
     })
     .default_policy(default_policy);
     if let Some(out) = snapshot_out {

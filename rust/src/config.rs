@@ -229,6 +229,19 @@ pub struct PersistParams {
     /// fsync delta logs on the persist beat and segments/manifest at
     /// seal time (disable only for tests/benches).
     pub fsync: bool,
+    /// Seal segments in the mmap-friendly v2 column layout and serve
+    /// them from the page cache via zero-copy maps on recovery and
+    /// follower catch-up (disable to force the v1 frame format and the
+    /// buffered decode path everywhere).
+    pub mmap: bool,
+    /// Background segment compaction beat: merge small adjacent sealed
+    /// segments (and upgrade v1 files to v2) at most this often
+    /// (0 = compaction off).
+    pub compact_interval_ms: u64,
+    /// Grace window before a compacted-away segment file is deleted —
+    /// long enough for any follower mid-poll on the old manifest cut to
+    /// finish or restart.
+    pub gc_grace_ms: u64,
 }
 
 impl Default for PersistParams {
@@ -239,6 +252,9 @@ impl Default for PersistParams {
             dir: String::new(),
             seal_bytes: 4 << 20,
             fsync: true,
+            mmap: true,
+            compact_interval_ms: 5000,
+            gc_grace_ms: 5000,
         }
     }
 }
@@ -336,11 +352,17 @@ pub struct ReplicaParams {
     pub role: String,
     /// Follower tail-poll interval in ms (manifest re-read + log scan).
     pub poll_ms: u64,
+    /// Cap for the follower's exponential idle backoff: the poll
+    /// interval doubles after each no-progress poll up to this many ms
+    /// and snaps back to `poll_ms` on any progress. `0` (or any value
+    /// at or below `poll_ms`) disables backoff — fixed-interval
+    /// polling.
+    pub backoff_max_ms: u64,
 }
 
 impl Default for ReplicaParams {
     fn default() -> Self {
-        ReplicaParams { role: "leader".to_string(), poll_ms: 50 }
+        ReplicaParams { role: "leader".to_string(), poll_ms: 50, backoff_max_ms: 1000 }
     }
 }
 
@@ -534,9 +556,13 @@ impl Config {
             "persist.dir" => self.persist.dir = value.to_string(),
             "persist.seal_bytes" => self.persist.seal_bytes = usize_of(value)?,
             "persist.fsync" => self.persist.fsync = bool_of(value)?,
+            "persist.mmap" => self.persist.mmap = bool_of(value)?,
+            "persist.compact_interval_ms" => self.persist.compact_interval_ms = u64_of(value)?,
+            "persist.gc_grace_ms" => self.persist.gc_grace_ms = u64_of(value)?,
             "kernel.backend" => self.kernel.backend = value.to_string(),
             "replica.role" => self.replica.role = value.to_string(),
             "replica.poll_ms" => self.replica.poll_ms = u64_of(value)?,
+            "replica.backoff_max_ms" => self.replica.backoff_max_ms = u64_of(value)?,
             "policy.mode" => self.policy.mode = value.to_string(),
             "policy.budget" => self.policy.budget = f64_of(value)?,
             "policy.threshold" => self.policy.threshold = f64_of(value)?,
@@ -743,6 +769,9 @@ workers = 8
                 ("persist.dir".into(), "/tmp/eagle-durable".into()),
                 ("persist.seal_bytes".into(), "65536".into()),
                 ("persist.fsync".into(), "false".into()),
+                ("persist.mmap".into(), "false".into()),
+                ("persist.compact_interval_ms".into(), "1500".into()),
+                ("persist.gc_grace_ms".into(), "2500".into()),
             ],
         )
         .unwrap();
@@ -754,11 +783,18 @@ workers = 8
         assert_eq!(c.persist.dir, "/tmp/eagle-durable");
         assert_eq!(c.persist.seal_bytes, 65536);
         assert!(!c.persist.fsync);
+        assert!(!c.persist.mmap);
+        assert_eq!(c.persist.compact_interval_ms, 1500);
+        assert_eq!(c.persist.gc_grace_ms, 2500);
         // durable-store knobs: defaults + validation
         let d = PersistParams::default();
         assert!(d.dir.is_empty());
         assert!(d.fsync);
+        assert!(d.mmap);
+        assert!(d.compact_interval_ms > 0);
+        assert!(d.gc_grace_ms > 0);
         assert!(d.seal_bytes >= 1 << 20);
+        assert!(Config::default().set("persist.mmap", "maybe").is_err());
         let mut bad = Config::default();
         bad.persist.seal_bytes = 0;
         assert!(bad.validate().is_err());
@@ -932,11 +968,17 @@ workers = 8
             &[
                 ("replica.role".into(), "follower".into()),
                 ("replica.poll_ms".into(), "10".into()),
+                ("replica.backoff_max_ms".into(), "750".into()),
             ],
         )
         .unwrap();
         assert_eq!(Role::parse(&c.replica.role).unwrap(), Role::Follower);
         assert_eq!(c.replica.poll_ms, 10);
+        assert_eq!(c.replica.backoff_max_ms, 750);
+        // 0 (or anything at or below poll_ms) is valid: backoff off
+        let mut fixed = Config::default();
+        fixed.replica.backoff_max_ms = 0;
+        assert!(fixed.validate().is_ok());
         assert_eq!(Role::Leader.as_str(), "leader");
         assert_eq!(Role::Follower.as_str(), "follower");
         let mut bad = Config::default();

@@ -71,15 +71,17 @@ use std::collections::{BTreeMap, HashSet};
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write as _};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{EagleParams, EpochParams, ShardParams};
 use crate::elo::{Comparison, GlobalElo, GlobalEloState, Outcome};
 use crate::json::{self, Value};
-use crate::vectordb::view::SegmentStore;
-use crate::vectordb::ReadIndex;
+use crate::vectordb::view::{SegmentStore, Slab};
+use crate::vectordb::{Feedback, ReadIndex};
 
 use super::router::{EagleRouter, Observation};
 use super::sharded::{GlobalLane, IdBlocks, ShardLane, ShardedHandle, ShardedRouter};
@@ -87,11 +89,25 @@ use super::snapshot::RouterWriter;
 
 pub(crate) const MANIFEST: &str = "MANIFEST.json";
 pub(crate) const LOCK: &str = "LOCK";
-const MANIFEST_VERSION: f64 = 1.0;
-/// Segment file header: magic ("EAGS"), format version, dim, record count.
+/// 1.0 → 1.1: segment entries gained additive `format` / `first_gid` /
+/// `last_gid` fields (v2 mmap segments + compaction). Older readers bail
+/// on 1.1 manifests with a clear "newer than supported" error; 1.1 readers
+/// accept 1.0 manifests (absent fields default to format 1 / unknown).
+const MANIFEST_VERSION: f64 = 1.1;
+/// Segment file header magic ("EAGS"); shared by both formats.
 const SEG_MAGIC: u32 = 0x4541_4753;
+/// Format 1: 16-byte header + concatenated delta-log frames (decode-only).
 const SEG_VERSION: u32 = 1;
 const SEG_HEADER_BYTES: usize = 16;
+/// Format 2: fixed layout, mmap-able. 64-byte header, then gids, cmp
+/// prefix sums, comparisons, zero pad to a 64-byte boundary, then the
+/// embedding slab as contiguous little-endian f32 bits. See
+/// [`write_segment_v2`] for exact offsets.
+const SEG_VERSION_V2: u32 = 2;
+const SEG2_HEADER_BYTES: usize = 64;
+/// The embedding slab starts on a multiple of this (a page-aligned mmap
+/// base therefore yields an aligned `&[f32]` view).
+const SEG2_SLAB_ALIGN: usize = 64;
 
 /// Tuning for a [`DurableStore`].
 #[derive(Debug, Clone)]
@@ -102,11 +118,16 @@ pub struct DurableOptions {
     /// Disabling trades crash-durability of the last beat for speed
     /// (tests, benches); the format stays identical.
     pub fsync: bool,
+    /// Seal new segments in the mmap-able v2 layout and map sealed
+    /// segments read-only on recovery/tail instead of decoding them.
+    /// Either setting reads both formats; disabling only changes what new
+    /// seals write and forces the buffered decode path on open.
+    pub mmap: bool,
 }
 
 impl Default for DurableOptions {
     fn default() -> Self {
-        DurableOptions { seal_bytes: 4 << 20, fsync: true }
+        DurableOptions { seal_bytes: 4 << 20, fsync: true, mmap: true }
     }
 }
 
@@ -125,6 +146,14 @@ pub struct StoreMeta {
 pub(crate) struct SegmentEntry {
     pub(crate) file: String,
     pub(crate) records: usize,
+    /// Segment file format (1 = framed, 2 = mmap-able fixed layout).
+    /// Absent on pre-1.1 manifests → 1.
+    pub(crate) format: u32,
+    /// Gid range held by the segment (inclusive). Recorded at seal /
+    /// compaction time; `None` on entries carried over from pre-1.1
+    /// manifests, where the range is only known after decoding.
+    pub(crate) first_gid: Option<u32>,
+    pub(crate) last_gid: Option<u32>,
 }
 
 /// One shard lane's durable state as named by the manifest.
@@ -164,10 +193,31 @@ pub struct DurableStore {
     meta: StoreMeta,
     opts: DurableOptions,
     manifest: Mutex<ManifestState>,
+    /// Files superseded by a compaction swap, waiting out the GC grace
+    /// window so a tailing follower mid-read never sees one vanish
+    /// without first getting the restart-from-manifest signal.
+    retired: Mutex<Vec<(std::time::Instant, PathBuf)>>,
+    compaction: CompactionStats,
+}
+
+/// Background compaction / GC counters (surfaced in the `stats` op).
+#[derive(Debug, Default)]
+pub struct CompactionStats {
+    /// Adjacent segment pairs merged into one v2 segment.
+    pub merges: crate::metrics::Counter,
+    /// Solo v1 segments rewritten in the v2 layout.
+    pub upgrades: crate::metrics::Counter,
+    /// Superseded files deleted after the grace window.
+    pub gc_files: crate::metrics::Counter,
+    /// Compaction passes that failed (kept for retry next tick).
+    pub errors: crate::metrics::Counter,
 }
 
 /// Everything recovered from disk by [`DurableStore::open`], ready to be
-/// turned back into a live [`ShardedRouter`].
+/// turned back into a live [`ShardedRouter`]. Sealed segments are held as
+/// *descriptors*, not decoded records: [`Recovery::resume`] streams them
+/// through [`CatchUp`] one file at a time, so recovery's transient memory
+/// high-water mark is O(largest segment), never O(corpus).
 pub struct Recovery {
     pub meta: StoreMeta,
     /// Records folded into the checkpointed global table.
@@ -178,14 +228,34 @@ pub struct Recovery {
     /// Bytes dropped from delta-log tails because the final write was
     /// torn (0 on a clean shutdown).
     pub torn_bytes: u64,
+    dir: PathBuf,
+    opts: DurableOptions,
 }
 
-/// One shard's recovered records, in shard-local (ascending gid) order.
+/// One shard's recovered durable state.
 pub struct RecoveredLane {
-    /// One entry per sealed segment file, in manifest order.
-    pub segments: Vec<Vec<(u32, Observation)>>,
-    /// The delta-log tail (records not yet sealed).
+    /// Sealed segment descriptors in manifest order; loaded lazily by
+    /// [`Recovery::resume`].
+    pub(crate) segments: Vec<SegmentEntry>,
+    /// The delta-log tail (records not yet sealed; bounded by
+    /// `seal_bytes`).
     pub tail: Vec<(u32, Observation)>,
+}
+
+/// Transient-memory accounting for one [`Recovery::resume_reporting`]
+/// pass: decoded/mapped segment buffers live one at a time, so the peak
+/// tracks the largest segment plus the already-recovered log tails — the
+/// streaming-recovery invariant `rust/tests/durable_recovery.rs` asserts.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecoveryFootprint {
+    /// Largest transient resident footprint seen while applying segments
+    /// (decoded buffers + log tails still awaiting application).
+    pub peak_resident_bytes: usize,
+    /// Transient footprint of the largest single segment.
+    pub largest_segment_bytes: usize,
+    /// Sum of every segment's transient footprint (what a non-streaming
+    /// recovery would have held alive at once).
+    pub total_segment_bytes: usize,
 }
 
 impl DurableStore {
@@ -210,6 +280,26 @@ impl DurableStore {
     pub fn segment_counts(&self) -> Vec<usize> {
         let m = self.manifest.lock().unwrap();
         m.lanes.iter().map(|l| l.segments.len()).collect()
+    }
+
+    /// Total sealed-segment files across all shards (diagnostics).
+    pub fn total_segments(&self) -> usize {
+        self.segment_counts().iter().sum()
+    }
+
+    /// Current manifest generation (diagnostics / stats).
+    pub fn generation(&self) -> u64 {
+        self.manifest.lock().unwrap().generation
+    }
+
+    /// Compaction / GC counters (the `stats` op renders these).
+    pub fn compaction_stats(&self) -> &CompactionStats {
+        &self.compaction
+    }
+
+    /// Files retired by compaction still waiting out the GC grace window.
+    pub fn retired_pending(&self) -> usize {
+        self.retired.lock().unwrap().len()
     }
 
     /// Create an empty store at `dir` (fails if a manifest already
@@ -254,7 +344,12 @@ impl DurableStore {
                         store.vector(local as u32),
                     );
                 }
-                Ok(vec![(frames, store.len())])
+                Ok(vec![BootSegment {
+                    frames,
+                    records: store.len(),
+                    first_gid: Some(ids.get(0)),
+                    last_gid: Some(ids.get(store.len() - 1)),
+                }])
             },
             || GlobalCheckpoint {
                 folded_gid: router.next_global_id(),
@@ -273,7 +368,7 @@ impl DurableStore {
         checkpoint: G,
     ) -> Result<Arc<DurableStore>>
     where
-        F: FnMut(usize) -> Result<Vec<(Vec<u8>, usize)>>,
+        F: FnMut(usize) -> Result<Vec<BootSegment>>,
         G: FnOnce() -> GlobalCheckpoint,
     {
         if Self::exists(dir) {
@@ -288,10 +383,23 @@ impl DurableStore {
                 .with_context(|| format!("creating {}", shard_dir.display()))?;
             let mut next_file_id = 1u64;
             let mut segments = Vec::new();
-            for (frames, records) in bootstrap(shard)? {
+            for boot in bootstrap(shard)? {
                 let file = format!("shard-{shard}/seg-{next_file_id:08}.seg");
-                write_segment(&dir.join(&file), meta.dim, records, &frames, opts.fsync)?;
-                segments.push(SegmentEntry { file, records });
+                let format = seal_segment_file(
+                    &dir.join(&file),
+                    meta.dim,
+                    meta.n_models,
+                    boot.records,
+                    &boot.frames,
+                    &opts,
+                )?;
+                segments.push(SegmentEntry {
+                    file,
+                    records: boot.records,
+                    format,
+                    first_gid: boot.first_gid,
+                    last_gid: boot.last_gid,
+                });
                 next_file_id += 1;
             }
             let log = format!("shard-{shard}/delta-{next_file_id:08}.log");
@@ -307,14 +415,20 @@ impl DurableStore {
             meta,
             opts,
             manifest: Mutex::new(state),
+            retired: Mutex::new(Vec::new()),
+            compaction: CompactionStats::default(),
         };
         store.write_manifest(&store.manifest.lock().unwrap())?;
         Ok(Arc::new(store))
     }
 
     /// Open an existing store and recover everything durable: manifest +
-    /// sealed segments + delta-log replay (truncating a torn final
-    /// write). Orphan files from a crashed seal are swept.
+    /// delta-log replay (truncating a torn final write). Sealed segments
+    /// are *not* read here — [`Recovery::resume`] streams them through
+    /// catch-up one at a time (mapping v2 segments read-only when
+    /// `opts.mmap`), so open→serving is O(segment count + log tail), not
+    /// O(corpus). Orphan files from a crashed seal or compaction are
+    /// swept.
     pub fn open(dir: &Path, opts: DurableOptions) -> Result<(Arc<DurableStore>, Recovery)> {
         let path = dir.join(MANIFEST);
         let text =
@@ -327,29 +441,19 @@ impl DurableStore {
         let mut lanes = Vec::with_capacity(state.lanes.len());
         let mut torn_bytes = 0u64;
         for (shard, lane) in state.lanes.iter().enumerate() {
-            let mut segments = Vec::with_capacity(lane.segments.len());
             for seg in &lane.segments {
                 let seg_path = dir.join(&seg.file);
-                referenced.insert(seg_path.clone());
-                segments.push(
-                    read_segment(&seg_path, meta.dim, meta.n_models, seg.records)
-                        .with_context(|| format!("segment {}", seg.file))?,
-                );
+                if !seg_path.is_file() {
+                    bail!("shard {shard}: manifest references missing segment {}", seg.file);
+                }
+                referenced.insert(seg_path);
             }
             let log_path = dir.join(&lane.log);
             referenced.insert(log_path.clone());
             let replay = recover_log(&log_path, meta.dim, meta.n_models)
                 .with_context(|| format!("delta log {}", lane.log))?;
-            let tail = replay.records;
             torn_bytes += replay.lost;
-            let mut last_gid: Option<u32> = None;
-            for (gid, _) in segments.iter().flatten().chain(tail.iter()) {
-                if last_gid.is_some_and(|prev| *gid <= prev) {
-                    bail!("shard {shard}: non-monotone gid {gid} in durable records");
-                }
-                last_gid = Some(*gid);
-            }
-            lanes.push(RecoveredLane { segments, tail });
+            lanes.push(RecoveredLane { segments: lane.segments.clone(), tail: replay.records });
         }
         sweep_orphans(dir, state.lanes.len(), &referenced);
         let recovery = Recovery {
@@ -358,12 +462,16 @@ impl DurableStore {
             global: state.global.state.clone(),
             lanes,
             torn_bytes,
+            dir: dir.to_path_buf(),
+            opts: opts.clone(),
         };
         let store = Arc::new(DurableStore {
             dir: dir.to_path_buf(),
             meta,
             opts,
             manifest: Mutex::new(state),
+            retired: Mutex::new(Vec::new()),
+            compaction: CompactionStats::default(),
         });
         Ok((store, recovery))
     }
@@ -388,12 +496,16 @@ impl DurableStore {
             .create(true)
             .open(&path)
             .with_context(|| format!("opening {}", path.display()))?;
+        let unsealed_first_gid = replay.records.first().map(|(gid, _)| *gid);
+        let unsealed_last_gid = replay.records.last().map(|(gid, _)| *gid);
         Ok(DurableLaneWriter {
             store: self.clone(),
             shard,
             log: BufWriter::new(log),
             unsealed: replay.bytes,
             unsealed_records: replay.records.len(),
+            unsealed_first_gid,
+            unsealed_last_gid,
             appended_bytes: 0,
         })
     }
@@ -427,6 +539,8 @@ impl DurableStore {
             meta,
             opts,
             manifest: Mutex::new(state),
+            retired: Mutex::new(Vec::new()),
+            compaction: CompactionStats::default(),
         })
     }
 
@@ -451,6 +565,308 @@ impl Drop for DurableStore {
     }
 }
 
+// ---- background compaction + GC -----------------------------------------
+//
+// Sealing writes one small segment file per `seal_bytes` of ingest, so the
+// file count — and with it restart cost and directory pressure — grows
+// linearly forever. The compactor merges adjacent sealed segments
+// binary-counter style, mirroring the in-memory `SegmentStore` policy: a
+// merge fires whenever a segment is at least as large (in records) as its
+// left neighbor, so the steady-state per-shard file count stays
+// O(log(corpus / seal_bytes)) and every record is rewritten O(log n)
+// times total. Merged output is always written in the v2 layout; when
+// nothing is mergeable the compactor instead upgrades one legacy v1
+// segment per pass, so old stores migrate to mmap-able files by
+// themselves.
+//
+// A merge never mutates a published file: it writes the merged segment via
+// tmp + rename + fsync, then swaps the manifest (generation + 1) to
+// reference it, then *retires* the superseded files into a grace queue.
+// [`DurableStore::gc_retired`] deletes them only after the grace window —
+// long enough for a tailing follower to observe the new manifest — and a
+// follower that still loses the race gets a typed restart-from-manifest
+// signal ([`load_segment`] returning `Ok(None)`), never a crash. Files
+// retired but not yet GC'd when the process exits are unreferenced by the
+// manifest and get swept as orphans on the next open.
+
+impl DurableStore {
+    /// One compaction pass: repeatedly run single steps across all shards
+    /// until a full sweep does nothing (merges cascade like binary-counter
+    /// carries). Returns the number of merge/upgrade operations performed.
+    /// Errors are counted and retried on a later pass, never fatal.
+    pub fn compact_once(self: &Arc<Self>) -> usize {
+        let mut ops = 0;
+        loop {
+            let mut progressed = false;
+            for shard in 0..self.meta.shards.count {
+                match self.compact_shard_step(shard) {
+                    Ok(true) => {
+                        progressed = true;
+                        ops += 1;
+                    }
+                    Ok(false) => {}
+                    Err(_) => self.compaction.errors.inc(),
+                }
+            }
+            if !progressed {
+                return ops;
+            }
+        }
+    }
+
+    /// Merge the rightmost adjacent segment pair whose right member has
+    /// grown at least as large as its left neighbor; with nothing to
+    /// merge, upgrade the leftmost legacy v1 segment to the v2 layout
+    /// (only when this store writes v2, i.e. `opts.mmap`). Returns whether
+    /// any work was done.
+    fn compact_shard_step(self: &Arc<Self>, shard: usize) -> Result<bool> {
+        // Pick the work item and reserve a file id under the manifest
+        // lock, then do the heavy IO unlocked. The in-memory id bump is
+        // crash-safe: an unpublished merged file is swept as an orphan,
+        // and concurrent seals allocate past the reservation.
+        let (left, right, merged_rel) = {
+            let mut m = self.manifest.lock().unwrap();
+            let lane = &mut m.lanes[shard];
+            let segs = &lane.segments;
+            let mut pick = None;
+            for i in (0..segs.len().saturating_sub(1)).rev() {
+                if segs[i + 1].records >= segs[i].records {
+                    pick = Some(i);
+                    break;
+                }
+            }
+            let pick = match pick {
+                Some(i) => i,
+                None => {
+                    if !self.opts.mmap {
+                        return Ok(false);
+                    }
+                    match segs.iter().position(|s| s.format != SEG_VERSION_V2) {
+                        Some(i) => {
+                            let rel =
+                                format!("shard-{shard}/seg-{:08}.seg", lane.next_file_id);
+                            lane.next_file_id += 1;
+                            let entry = segs[i].clone();
+                            drop(m);
+                            return self.upgrade_segment(shard, entry, rel).map(|()| true);
+                        }
+                        None => return Ok(false),
+                    }
+                }
+            };
+            let rel = format!("shard-{shard}/seg-{:08}.seg", lane.next_file_id);
+            lane.next_file_id += 1;
+            (segs[pick].clone(), segs[pick + 1].clone(), rel)
+        };
+        let dim = self.meta.dim;
+        let n_models = self.meta.n_models;
+        // Full verification on both inputs (including the embedding-slab
+        // checksum — the buffered load path always checks it): a merge
+        // must never launder latent corruption into a fresh checksum.
+        let (mut gids, mut feedbacks, mut floats) =
+            load_columns(&self.dir.join(&left.file), dim, n_models, &left)?;
+        let (rg, rf, rx) = load_columns(&self.dir.join(&right.file), dim, n_models, &right)?;
+        if let (Some(&last), Some(&first)) = (gids.last(), rg.first()) {
+            if first <= last {
+                bail!(
+                    "shard {shard}: adjacent segments {} / {} have non-monotone gids",
+                    left.file,
+                    right.file
+                );
+            }
+        }
+        gids.extend_from_slice(&rg);
+        feedbacks.extend(rf);
+        floats.extend_from_slice(&rx);
+        let merged = SegmentEntry {
+            file: merged_rel,
+            records: gids.len(),
+            format: SEG_VERSION_V2,
+            first_gid: gids.first().copied(),
+            last_gid: gids.last().copied(),
+        };
+        write_segment_v2(
+            &self.dir.join(&merged.file),
+            dim,
+            &gids,
+            &feedbacks,
+            &floats,
+            self.opts.fsync,
+        )?;
+        self.publish_replacement(shard, &[&left.file, &right.file], merged)?;
+        self.compaction.merges.inc();
+        Ok(true)
+    }
+
+    /// Rewrite one v1 segment in the v2 layout under a fresh file name and
+    /// swap it into the manifest (the migration path for pre-mmap stores).
+    fn upgrade_segment(
+        self: &Arc<Self>,
+        shard: usize,
+        entry: SegmentEntry,
+        rel: String,
+    ) -> Result<()> {
+        let dim = self.meta.dim;
+        let (gids, feedbacks, floats) =
+            load_columns(&self.dir.join(&entry.file), dim, self.meta.n_models, &entry)?;
+        let upgraded = SegmentEntry {
+            file: rel,
+            records: gids.len(),
+            format: SEG_VERSION_V2,
+            first_gid: gids.first().copied(),
+            last_gid: gids.last().copied(),
+        };
+        write_segment_v2(
+            &self.dir.join(&upgraded.file),
+            dim,
+            &gids,
+            &feedbacks,
+            &floats,
+            self.opts.fsync,
+        )?;
+        self.publish_replacement(shard, &[&entry.file], upgraded)?;
+        self.compaction.upgrades.inc();
+        Ok(())
+    }
+
+    /// Swap `replacement` in for the (adjacent) run of entries named by
+    /// `old` and retire their files into the GC grace queue. The entries
+    /// are re-located by name under the lock: seals only append and this
+    /// compactor is the only remover, so the run is still present and
+    /// adjacent.
+    fn publish_replacement(
+        &self,
+        shard: usize,
+        old: &[&str],
+        replacement: SegmentEntry,
+    ) -> Result<()> {
+        let mut m = self.manifest.lock().unwrap();
+        let mut staged = m.clone();
+        staged.generation += 1;
+        let segs = &mut staged.lanes[shard].segments;
+        let at = segs
+            .iter()
+            .position(|s| s.file == old[0])
+            .ok_or_else(|| anyhow!("segment {} vanished from the manifest", old[0]))?;
+        for (k, name) in old.iter().enumerate() {
+            if segs.get(at + k).map(|s| s.file.as_str()) != Some(*name) {
+                bail!("segment run {:?} no longer adjacent in the manifest", old);
+            }
+        }
+        segs[at] = replacement;
+        for _ in 1..old.len() {
+            segs.remove(at + 1);
+        }
+        self.write_manifest(&staged)?;
+        *m = staged;
+        drop(m);
+        let now = Instant::now();
+        let mut retired = self.retired.lock().unwrap();
+        retired.extend(old.iter().map(|name| (now, self.dir.join(name))));
+        Ok(())
+    }
+
+    /// Delete retired files older than `grace`. Returns how many were
+    /// deleted. Readers that mapped a deleted segment keep a valid view
+    /// (POSIX keeps the pages until the last unmap); a follower opening
+    /// one late gets the restart-from-manifest signal instead of an error.
+    pub fn gc_retired(&self, grace: Duration) -> usize {
+        let now = Instant::now();
+        let mut deleted = 0usize;
+        let mut retired = self.retired.lock().unwrap();
+        retired.retain(|(when, path)| {
+            if now.duration_since(*when) >= grace {
+                let _ = fs::remove_file(path);
+                deleted += 1;
+                false
+            } else {
+                true
+            }
+        });
+        drop(retired);
+        self.compaction.gc_files.add(deleted as u64);
+        deleted
+    }
+}
+
+/// Load one segment fully verified and return it as merge-ready columns.
+fn load_columns(
+    path: &Path,
+    dim: usize,
+    n_models: usize,
+    entry: &SegmentEntry,
+) -> Result<(Vec<u32>, Vec<Feedback>, Vec<f32>)> {
+    let seg = load_segment(path, dim, n_models, entry, false)?
+        .ok_or_else(|| anyhow!("segment {} missing", path.display()))?;
+    Ok(match seg {
+        LoadedSegment::Decoded(records) => {
+            let mut gids = Vec::with_capacity(records.len());
+            let mut feedbacks = Vec::with_capacity(records.len());
+            let mut floats = Vec::with_capacity(records.len() * dim);
+            for (gid, obs) in records {
+                gids.push(gid);
+                floats.extend_from_slice(&obs.embedding);
+                feedbacks.push(Feedback { comparisons: obs.comparisons });
+            }
+            (gids, feedbacks, floats)
+        }
+        LoadedSegment::Mapped(block) => {
+            let floats = block.slab.as_f32s().to_vec();
+            (block.gids, block.feedbacks, floats)
+        }
+    })
+}
+
+/// Owns the background compaction thread: one merge-until-quiescent pass
+/// plus a GC sweep per tick. Dropping the handle (or calling
+/// [`CompactorHandle::stop`]) stops the thread promptly — the sleep is
+/// chunked so shutdown never waits out a full interval.
+pub struct CompactorHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CompactorHandle {
+    pub fn spawn(
+        store: Arc<DurableStore>,
+        interval: Duration,
+        grace: Duration,
+    ) -> CompactorHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("eagle-compactor".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Acquire) {
+                    store.compact_once();
+                    store.gc_retired(grace);
+                    let step =
+                        Duration::from_millis(25).min(interval.max(Duration::from_millis(1)));
+                    let mut slept = Duration::ZERO;
+                    while slept < interval && !flag.load(Ordering::Acquire) {
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                }
+            })
+            .expect("spawning compactor thread");
+        CompactorHandle { stop, thread: Some(thread) }
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for CompactorHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
 /// The per-shard appending side: owned by one applier thread. Appends are
 /// buffered; [`DurableLaneWriter::sync`] (the persist beat / flush
 /// barrier) flushes + fsyncs; crossing `seal_bytes` seals the tail into
@@ -463,6 +879,10 @@ pub struct DurableLaneWriter {
     /// log's contents past the last seal; bounded by `seal_bytes`).
     unsealed: Vec<u8>,
     unsealed_records: usize,
+    /// Gid range of the unsealed tail — becomes the manifest entry's
+    /// range at seal time.
+    unsealed_first_gid: Option<u32>,
+    unsealed_last_gid: Option<u32>,
     /// Delta bytes appended by this writer since construction
     /// (diagnostics; the persist-cost bench reads it).
     appended_bytes: u64,
@@ -480,6 +900,10 @@ impl DurableLaneWriter {
             .context("appending to delta log")?;
         self.appended_bytes += (self.unsealed.len() - start) as u64;
         self.unsealed_records += 1;
+        if self.unsealed_first_gid.is_none() {
+            self.unsealed_first_gid = Some(gid);
+        }
+        self.unsealed_last_gid = Some(gid);
         if self.unsealed.len() >= self.store.opts.seal_bytes {
             self.seal()?;
         }
@@ -522,19 +946,26 @@ impl DurableLaneWriter {
         let seg_rel = format!("shard-{}/seg-{:08}.seg", self.shard, lane.next_file_id);
         let log_rel = format!("shard-{}/delta-{:08}.log", self.shard, lane.next_file_id + 1);
         lane.next_file_id += 2;
-        write_segment(
+        let format = seal_segment_file(
             &store.dir.join(&seg_rel),
             store.meta.dim,
+            store.meta.n_models,
             self.unsealed_records,
             &self.unsealed,
-            store.opts.fsync,
+            &store.opts,
         )?;
         let new_log = File::create(store.dir.join(&log_rel))
             .with_context(|| format!("creating {log_rel}"))?;
         if store.opts.fsync {
             fsync_dir(&store.dir.join(format!("shard-{}", self.shard)));
         }
-        lane.segments.push(SegmentEntry { file: seg_rel, records: self.unsealed_records });
+        lane.segments.push(SegmentEntry {
+            file: seg_rel,
+            records: self.unsealed_records,
+            format,
+            first_gid: self.unsealed_first_gid,
+            last_gid: self.unsealed_last_gid,
+        });
         let old_log_rel = std::mem::replace(&mut lane.log, log_rel);
         store.write_manifest(&staged)?;
         *m = staged;
@@ -544,9 +975,55 @@ impl DurableLaneWriter {
         self.log = BufWriter::new(new_log);
         self.unsealed.clear();
         self.unsealed_records = 0;
+        self.unsealed_first_gid = None;
+        self.unsealed_last_gid = None;
         let _ = fs::remove_file(store.dir.join(&old_log_rel));
         Ok(())
     }
+}
+
+/// One bootstrap segment for [`DurableStore::create_with`]: pre-encoded
+/// frames plus the gid range they cover.
+struct BootSegment {
+    frames: Vec<u8>,
+    records: usize,
+    first_gid: Option<u32>,
+    last_gid: Option<u32>,
+}
+
+/// Write one sealed segment from encoded frame bytes, choosing the format
+/// from `opts.mmap`: v2 (fixed mmap-able layout; the frames are decoded
+/// once, bounded by `seal_bytes`) or v1 (the frames verbatim behind a
+/// 16-byte header). Returns the format written.
+fn seal_segment_file(
+    path: &Path,
+    dim: usize,
+    n_models: usize,
+    records: usize,
+    frames: &[u8],
+    opts: &DurableOptions,
+) -> Result<u32> {
+    if !opts.mmap {
+        write_segment(path, dim, records, frames, opts.fsync)?;
+        return Ok(SEG_VERSION);
+    }
+    let (decoded, valid) = scan_frames(frames, dim, n_models);
+    if decoded.len() != records || valid != frames.len() {
+        bail!(
+            "unsealed tail corrupt at seal: {} of {records} records decoded",
+            decoded.len()
+        );
+    }
+    let mut gids = Vec::with_capacity(records);
+    let mut feedbacks = Vec::with_capacity(records);
+    let mut floats = Vec::with_capacity(records * dim);
+    for (gid, obs) in decoded {
+        gids.push(gid);
+        floats.extend_from_slice(&obs.embedding);
+        feedbacks.push(crate::vectordb::Feedback { comparisons: obs.comparisons });
+    }
+    write_segment_v2(path, dim, &gids, &feedbacks, &floats, opts.fsync)?;
+    Ok(SEG_VERSION_V2)
 }
 
 impl GlobalCheckpoint {
@@ -564,12 +1041,35 @@ impl GlobalCheckpoint {
 }
 
 impl Recovery {
-    /// Durable records recovered across all shards.
+    /// Durable records recovered across all shards (from manifest record
+    /// counts + log tails — no segment is read to answer this).
     pub fn total_records(&self) -> usize {
         self.lanes
             .iter()
-            .map(|l| l.tail.len() + l.segments.iter().map(Vec::len).sum::<usize>())
+            .map(|l| l.tail.len() + l.segments.iter().map(|s| s.records).sum::<usize>())
             .sum()
+    }
+
+    /// Load and fully decode one lane's records in durable order
+    /// (segments then tail). Diagnostics/tests only — the recovery path
+    /// itself streams via [`Recovery::resume`] and never materializes a
+    /// whole lane.
+    pub fn lane_records(&self, shard: usize) -> Result<Vec<(u32, Observation)>> {
+        let lane = &self.lanes[shard];
+        let mut out = Vec::new();
+        for entry in &lane.segments {
+            let seg = load_segment(
+                &self.dir.join(&entry.file),
+                self.meta.dim,
+                self.meta.n_models,
+                entry,
+                false,
+            )?
+            .ok_or_else(|| anyhow!("segment {} missing", entry.file))?;
+            seg.into_records(self.meta.dim, &mut out);
+        }
+        out.extend(lane.tail.iter().map(|(gid, obs)| (*gid, obs.clone())));
+        Ok(out)
     }
 
     /// Begin incremental catch-up from this recovery's checkpoint and
@@ -579,6 +1079,16 @@ impl Recovery {
     /// ([`crate::coordinator::replica`]) keeps the returned [`CatchUp`]
     /// open instead and applies frames as the leader writes them.
     pub fn resume(self, cadence: EpochParams) -> Result<CatchUp> {
+        self.resume_reporting(cadence).map(|(catchup, _)| catchup)
+    }
+
+    /// [`Recovery::resume`], also reporting the transient-memory
+    /// footprint of the pass. Segments are loaded, applied, and dropped
+    /// strictly one at a time: with mmap enabled a v2 segment contributes
+    /// only its side arrays (the embedding slab stays in the page cache
+    /// behind a zero-copy view), and even the frame-decode fallback never
+    /// holds more than one segment's records alive.
+    pub fn resume_reporting(self, cadence: EpochParams) -> Result<(CatchUp, RecoveryFootprint)> {
         if self.lanes.len() != self.meta.shards.count {
             bail!(
                 "manifest lane count {} != shard count {}",
@@ -586,16 +1096,41 @@ impl Recovery {
                 self.meta.shards.count
             );
         }
+        let (dim, n_models) = (self.meta.dim, self.meta.n_models);
+        let tails_resident: usize = self.lanes.iter().map(|l| tail_resident_bytes(&l.tail)).sum();
+        let mut fp = RecoveryFootprint {
+            peak_resident_bytes: tails_resident,
+            ..RecoveryFootprint::default()
+        };
         let mut catchup = CatchUp::begin(self.meta, self.folded_gid, self.global, cadence);
         for (shard, lane) in self.lanes.into_iter().enumerate() {
-            for block in lane.segments {
-                catchup.apply_sealed_segment(shard, block);
+            let mut prev_gid: Option<u32> = None;
+            for entry in lane.segments {
+                let seg =
+                    load_segment(&self.dir.join(&entry.file), dim, n_models, &entry, self.opts.mmap)
+                        .with_context(|| format!("segment {}", entry.file))?
+                        .ok_or_else(|| anyhow!("segment {} missing", entry.file))?;
+                if let Some(first) = seg.first_gid() {
+                    if prev_gid.is_some_and(|prev| first <= prev) {
+                        bail!("shard {shard}: non-monotone gid {first} in durable records");
+                    }
+                }
+                prev_gid = seg.last_gid().or(prev_gid);
+                let resident = seg.resident_bytes();
+                fp.largest_segment_bytes = fp.largest_segment_bytes.max(resident);
+                fp.total_segment_bytes += resident;
+                fp.peak_resident_bytes = fp.peak_resident_bytes.max(tails_resident + resident);
+                catchup.apply_loaded_segment(shard, seg);
             }
             for (gid, obs) in lane.tail {
+                if prev_gid.is_some_and(|prev| gid <= prev) {
+                    bail!("shard {shard}: non-monotone gid {gid} in durable records");
+                }
+                prev_gid = Some(gid);
                 catchup.apply_delta_frame(shard, gid, obs);
             }
         }
-        Ok(catchup)
+        Ok((catchup, fp))
     }
 
     /// Rebuild the live [`ShardedRouter`] in one shot: resume catch-up
@@ -606,6 +1141,13 @@ impl Recovery {
     pub fn into_router(self, cadence: EpochParams) -> Result<ShardedRouter> {
         Ok(self.resume(cadence)?.finish())
     }
+}
+
+/// Transient bytes a decoded log tail holds (embeddings + comparisons).
+fn tail_resident_bytes(tail: &[(u32, Observation)]) -> usize {
+    tail.iter()
+        .map(|(_, obs)| obs.embedding.len() * 4 + obs.comparisons.len() * 9 + 32)
+        .sum()
 }
 
 /// Incremental replay of the durable record stream — the single code path
@@ -696,6 +1238,15 @@ impl CatchUp {
         self.pending.len()
     }
 
+    /// Highest gid applied to one shard lane so far. This is the
+    /// follower's tail cursor: manifest segments whose `last_gid` sits at
+    /// or below the frontier are already applied and are skipped without
+    /// opening the file, which is what makes tailing robust against the
+    /// compactor rewriting the segment list underneath it.
+    pub fn lane_frontier(&self, shard: usize) -> Option<u32> {
+        self.last_gid[shard]
+    }
+
     /// Apply one sealed segment's records (ascending gid); already-applied
     /// gids — the segment overlaps the log it was sealed from — are
     /// skipped.
@@ -703,6 +1254,48 @@ impl CatchUp {
         for (gid, obs) in records {
             self.apply_delta_frame(shard, gid, obs);
         }
+    }
+
+    /// Apply one loaded segment file. Decoded (v1) segments replay
+    /// per-record; mapped (v2) segments take the bulk path — the lane
+    /// store adopts the embedding slab as one zero-copy sealed block
+    /// while comparisons fold per-record, which is bit-identical to the
+    /// per-record replay (scan order and fold order are unchanged; only
+    /// where the floats live differs). If the segment overlaps records
+    /// this catch-up already applied (a compacted segment re-covering a
+    /// tailed range), the overlap forces the per-record path so the
+    /// stale-gid dedup can skip them.
+    pub(crate) fn apply_loaded_segment(&mut self, shard: usize, seg: LoadedSegment) {
+        let block = match seg {
+            LoadedSegment::Decoded(records) => {
+                self.apply_sealed_segment(shard, records);
+                return;
+            }
+            LoadedSegment::Mapped(block) => block,
+        };
+        let overlaps = match (block.gids.first(), self.last_gid[shard]) {
+            (Some(&first), Some(prev)) => first <= prev,
+            _ => false,
+        };
+        if overlaps || block.gids.is_empty() {
+            let dim = self.meta.dim;
+            let mut records = Vec::with_capacity(block.gids.len());
+            block.into_records(dim, &mut records);
+            self.apply_sealed_segment(shard, records);
+            return;
+        }
+        for (i, &gid) in block.gids.iter().enumerate() {
+            self.next_id = self.next_id.max(gid + 1);
+            if gid >= self.fold_next {
+                self.pending.insert(gid, block.feedbacks[i].comparisons.clone());
+                while let Some(cmps) = self.pending.remove(&self.fold_next) {
+                    self.global.apply(&cmps);
+                    self.fold_next += 1;
+                }
+            }
+        }
+        self.last_gid[shard] = block.gids.last().copied();
+        self.lanes[shard].apply_block(&block.gids, block.slab, block.feedbacks);
     }
 
     /// Apply one delta-log frame. Returns false when the record was
@@ -1032,6 +1625,326 @@ pub(crate) fn read_segment(
     Ok(records)
 }
 
+// ---- segment format v2 (mmap-able fixed layout) --------------------------
+//
+// byte offset │ contents
+// ────────────┼────────────────────────────────────────────────────────────
+//           0 │ magic u32 ("EAGS")
+//           4 │ version u32 = 2
+//           8 │ dim u32
+//          12 │ records u32
+//          16 │ n_cmps u64 (total comparisons across all records)
+//          24 │ gids_crc u32 (over the gid array)
+//          28 │ cmps_crc u32 (over prefix sums + comparison bytes)
+//          32 │ emb_crc u32 (over the embedding slab; verified at write
+//             │ and on the buffered-decode path — the mmap path skips it
+//             │ so open stays O(1) in slab bytes)
+//          36 │ header_crc u32 (over bytes 0..36)
+//          40 │ zero pad to 64
+//          64 │ gids: records × u32 LE, strictly ascending
+//             │ cmp prefix sums: (records + 1) × u32 LE
+//             │ comparisons: n_cmps × (a u32, b u32, outcome u8)
+//             │ zero pad to the next 64-byte boundary
+//     emb_off │ embedding slab: records × dim × f32 LE bit patterns
+//
+// The slab's 64-byte file alignment plus a page-aligned mmap base makes
+// the mapped `&[f32]` view alignment-safe; [`crate::mmap::SlabRef`]
+// re-checks at construction.
+
+/// One segment file loaded for replay.
+pub(crate) enum LoadedSegment {
+    /// Fully decoded records (v1 files, or any buffered fallback that
+    /// went through per-record decode).
+    Decoded(Vec<(u32, Observation)>),
+    /// A v2 segment: decoded side arrays + the embedding slab as a
+    /// zero-copy mapped view (or an owned buffer on the fallback path).
+    Mapped(MappedSegment),
+}
+
+pub(crate) struct MappedSegment {
+    pub(crate) gids: Vec<u32>,
+    pub(crate) feedbacks: Vec<crate::vectordb::Feedback>,
+    pub(crate) slab: Slab,
+}
+
+impl LoadedSegment {
+    pub(crate) fn first_gid(&self) -> Option<u32> {
+        match self {
+            LoadedSegment::Decoded(records) => records.first().map(|(gid, _)| *gid),
+            LoadedSegment::Mapped(block) => block.gids.first().copied(),
+        }
+    }
+
+    pub(crate) fn last_gid(&self) -> Option<u32> {
+        match self {
+            LoadedSegment::Decoded(records) => records.last().map(|(gid, _)| *gid),
+            LoadedSegment::Mapped(block) => block.gids.last().copied(),
+        }
+    }
+
+    pub(crate) fn records(&self) -> usize {
+        match self {
+            LoadedSegment::Decoded(records) => records.len(),
+            LoadedSegment::Mapped(block) => block.gids.len(),
+        }
+    }
+
+    /// Transient heap bytes this loaded segment holds (a mapped slab
+    /// counts zero — its pages belong to the page cache).
+    pub(crate) fn resident_bytes(&self) -> usize {
+        match self {
+            LoadedSegment::Decoded(records) => records
+                .iter()
+                .map(|(_, obs)| obs.embedding.len() * 4 + obs.comparisons.len() * 9 + 32)
+                .sum(),
+            LoadedSegment::Mapped(block) => {
+                let sides = block.gids.len() * 4
+                    + block.feedbacks.iter().map(|f| f.comparisons.len() * 9 + 24).sum::<usize>();
+                match &block.slab {
+                    Slab::Owned(v) => sides + v.len() * 4,
+                    Slab::Mapped(_) => sides,
+                }
+            }
+        }
+    }
+
+    /// Materialize as decoded records (per-record fallback / diagnostics).
+    pub(crate) fn into_records(self, dim: usize, out: &mut Vec<(u32, Observation)>) {
+        match self {
+            LoadedSegment::Decoded(records) => out.extend(records),
+            LoadedSegment::Mapped(block) => block.into_records(dim, out),
+        }
+    }
+}
+
+impl MappedSegment {
+    fn into_records(self, dim: usize, out: &mut Vec<(u32, Observation)>) {
+        let floats = self.slab.as_f32s();
+        for (i, (gid, fb)) in self.gids.iter().zip(self.feedbacks).enumerate() {
+            out.push((
+                *gid,
+                Observation {
+                    embedding: floats[i * dim..(i + 1) * dim].to_vec(),
+                    comparisons: fb.comparisons,
+                },
+            ));
+        }
+    }
+}
+
+/// Write one v2 segment file (layout above) via the same atomic
+/// tmp + rename (+ fsync) protocol as every other durable artifact.
+fn write_segment_v2(
+    path: &Path,
+    dim: usize,
+    gids: &[u32],
+    feedbacks: &[crate::vectordb::Feedback],
+    floats: &[f32],
+    fsync: bool,
+) -> Result<()> {
+    let records = gids.len();
+    assert_eq!(feedbacks.len(), records);
+    assert_eq!(floats.len(), records * dim);
+    let n_cmps: usize = feedbacks.iter().map(|f| f.comparisons.len()).sum();
+    let side_len = records * 4 + (records + 1) * 4 + n_cmps * 9;
+    let emb_off = next_multiple(SEG2_HEADER_BYTES + side_len, SEG2_SLAB_ALIGN);
+    let mut bytes = Vec::with_capacity(emb_off + floats.len() * 4);
+    bytes.resize(SEG2_HEADER_BYTES, 0);
+    for gid in gids {
+        bytes.extend_from_slice(&gid.to_le_bytes());
+    }
+    let offs_start = bytes.len();
+    let mut running = 0u32;
+    bytes.extend_from_slice(&running.to_le_bytes());
+    for fb in feedbacks {
+        running += fb.comparisons.len() as u32;
+        bytes.extend_from_slice(&running.to_le_bytes());
+    }
+    for fb in feedbacks {
+        for c in &fb.comparisons {
+            bytes.extend_from_slice(&(c.a as u32).to_le_bytes());
+            bytes.extend_from_slice(&(c.b as u32).to_le_bytes());
+            bytes.push(outcome_byte(c.outcome));
+        }
+    }
+    let cmps_end = bytes.len();
+    bytes.resize(emb_off, 0);
+    for &x in floats {
+        bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    let gids_crc = checksum(&bytes[SEG2_HEADER_BYTES..offs_start]);
+    let cmps_crc = checksum(&bytes[offs_start..cmps_end]);
+    let emb_crc = checksum(&bytes[emb_off..]);
+    bytes[0..4].copy_from_slice(&SEG_MAGIC.to_le_bytes());
+    bytes[4..8].copy_from_slice(&SEG_VERSION_V2.to_le_bytes());
+    bytes[8..12].copy_from_slice(&(dim as u32).to_le_bytes());
+    bytes[12..16].copy_from_slice(&(records as u32).to_le_bytes());
+    bytes[16..24].copy_from_slice(&(n_cmps as u64).to_le_bytes());
+    bytes[24..28].copy_from_slice(&gids_crc.to_le_bytes());
+    bytes[28..32].copy_from_slice(&cmps_crc.to_le_bytes());
+    bytes[32..36].copy_from_slice(&emb_crc.to_le_bytes());
+    let header_crc = checksum(&bytes[0..36]);
+    bytes[36..40].copy_from_slice(&header_crc.to_le_bytes());
+    write_atomic(path, &bytes, fsync)
+}
+
+fn next_multiple(n: usize, align: usize) -> usize {
+    n.div_ceil(align) * align
+}
+
+/// Parse + validate a v2 segment's header and side arrays from its full
+/// byte image. Returns the decoded side arrays plus the slab's byte
+/// offset and checksum; the caller decides whether to verify the slab
+/// (buffered path) or trust the write-time checksum (mmap path).
+#[allow(clippy::type_complexity)]
+fn parse_v2(
+    bytes: &[u8],
+    dim: usize,
+    n_models: usize,
+    expect_records: usize,
+) -> Result<(Vec<u32>, Vec<crate::vectordb::Feedback>, usize, u32)> {
+    if bytes.len() < SEG2_HEADER_BYTES {
+        bail!("v2 segment shorter than its header");
+    }
+    if u32_at(bytes, 0) != SEG_MAGIC {
+        bail!("bad segment magic");
+    }
+    if u32_at(bytes, 4) != SEG_VERSION_V2 {
+        bail!("unsupported segment version {}", u32_at(bytes, 4));
+    }
+    if checksum(&bytes[0..36]) != u32_at(bytes, 36) {
+        bail!("v2 segment header checksum mismatch");
+    }
+    if u32_at(bytes, 8) as usize != dim {
+        bail!("segment dim {} != store dim {dim}", u32_at(bytes, 8));
+    }
+    let records = u32_at(bytes, 12) as usize;
+    if records != expect_records {
+        bail!("segment holds {records} records, manifest says {expect_records}");
+    }
+    let n_cmps = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let gids_off = SEG2_HEADER_BYTES;
+    let offs_off = gids_off + records * 4;
+    let cmps_off = offs_off + (records + 1) * 4;
+    let cmps_end = cmps_off + n_cmps * 9;
+    let emb_off = next_multiple(cmps_end, SEG2_SLAB_ALIGN);
+    if bytes.len() != emb_off + records * dim * 4 {
+        bail!(
+            "v2 segment length {} != expected {}",
+            bytes.len(),
+            emb_off + records * dim * 4
+        );
+    }
+    if checksum(&bytes[gids_off..offs_off]) != u32_at(bytes, 24) {
+        bail!("v2 segment gid array checksum mismatch");
+    }
+    if checksum(&bytes[offs_off..cmps_end]) != u32_at(bytes, 28) {
+        bail!("v2 segment comparison array checksum mismatch");
+    }
+    let mut gids = Vec::with_capacity(records);
+    for i in 0..records {
+        let gid = u32_at(bytes, gids_off + i * 4);
+        if gids.last().is_some_and(|&prev| gid <= prev) {
+            bail!("v2 segment gids not strictly ascending");
+        }
+        gids.push(gid);
+    }
+    let mut offs = Vec::with_capacity(records + 1);
+    for i in 0..=records {
+        offs.push(u32_at(bytes, offs_off + i * 4) as usize);
+    }
+    if offs[0] != 0 || offs[records] != n_cmps || offs.windows(2).any(|w| w[0] > w[1]) {
+        bail!("v2 segment comparison prefix sums inconsistent");
+    }
+    let mut feedbacks = Vec::with_capacity(records);
+    for i in 0..records {
+        let mut comparisons = Vec::with_capacity(offs[i + 1] - offs[i]);
+        for c in offs[i]..offs[i + 1] {
+            let at = cmps_off + c * 9;
+            let a = u32_at(bytes, at) as usize;
+            let b = u32_at(bytes, at + 4) as usize;
+            let Some(outcome) = outcome_of(bytes[at + 8]) else {
+                bail!("v2 segment holds an invalid outcome byte");
+            };
+            if a >= n_models || b >= n_models {
+                bail!("v2 segment comparison model index out of range");
+            }
+            comparisons.push(Comparison { a, b, outcome });
+        }
+        feedbacks.push(crate::vectordb::Feedback { comparisons });
+    }
+    Ok((gids, feedbacks, emb_off, u32_at(bytes, 32)))
+}
+
+/// Load one sealed segment for replay. Returns `Ok(None)` when the file
+/// no longer exists — the typed "restart from the manifest" signal a
+/// tailing follower gets when the leader's GC deleted a segment it was
+/// about to read (never a hard crash). Crash recovery and the compactor
+/// treat `None` as a hard error instead: the manifest they hold is
+/// current, so a missing file is real damage.
+///
+/// v2 segments are mapped read-only when `use_mmap` holds (little-endian
+/// unix hosts): side arrays decode eagerly, the embedding slab is served
+/// from the page cache behind a zero-copy view. Everywhere else the file
+/// is read + fully verified, including the slab checksum.
+pub(crate) fn load_segment(
+    path: &Path,
+    dim: usize,
+    n_models: usize,
+    entry: &SegmentEntry,
+    use_mmap: bool,
+) -> Result<Option<LoadedSegment>> {
+    if entry.format == SEG_VERSION_V2 && use_mmap && cfg!(target_endian = "little") {
+        let file = match File::open(path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("opening {}", path.display()));
+            }
+        };
+        if let Ok(map) = crate::mmap::Mapping::map(&file) {
+            let map = Arc::new(map);
+            let (gids, feedbacks, emb_off, _emb_crc) =
+                parse_v2(map.bytes(), dim, n_models, entry.records)
+                    .with_context(|| format!("segment {}", path.display()))?;
+            let floats = gids.len() * dim;
+            let slab = crate::mmap::SlabRef::new(Arc::clone(&map), emb_off, floats)
+                .ok_or_else(|| anyhow!("v2 segment slab out of mapped bounds"))?;
+            return Ok(Some(LoadedSegment::Mapped(MappedSegment {
+                gids,
+                feedbacks,
+                slab: Slab::Mapped(slab),
+            })));
+        }
+        // map failed (exotic fs, resource limits): buffered fallback below
+    }
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    if bytes.len() >= 8 && u32_at(&bytes, 0) == SEG_MAGIC && u32_at(&bytes, 4) == SEG_VERSION_V2 {
+        let (gids, feedbacks, emb_off, emb_crc) = parse_v2(&bytes, dim, n_models, entry.records)
+            .with_context(|| format!("segment {}", path.display()))?;
+        if checksum(&bytes[emb_off..]) != emb_crc {
+            bail!("segment {}: embedding slab checksum mismatch", path.display());
+        }
+        let mut floats = Vec::with_capacity(gids.len() * dim);
+        for i in 0..gids.len() * dim {
+            floats.push(f32::from_bits(u32_at(&bytes, emb_off + i * 4)));
+        }
+        return Ok(Some(LoadedSegment::Mapped(MappedSegment {
+            gids,
+            feedbacks,
+            slab: Slab::Owned(floats),
+        })));
+    }
+    // v1 framed segment (or damage — read_segment reports it precisely)
+    let records = read_segment(path, dim, n_models, entry.records)
+        .with_context(|| format!("segment {}", path.display()))?;
+    Ok(Some(LoadedSegment::Decoded(records)))
+}
+
 /// A delta log replayed back from disk (truncated to its valid prefix).
 pub(crate) struct LogReplay {
     pub(crate) records: Vec<(u32, Observation)>,
@@ -1099,10 +2012,18 @@ fn manifest_json(meta: &StoreMeta, state: &ManifestState) -> String {
                 .segments
                 .iter()
                 .map(|s| {
-                    json::obj(vec![
+                    let mut fields = vec![
                         ("file", json::str_v(&s.file)),
                         ("records", json::num(s.records as f64)),
-                    ])
+                        ("format", json::num(f64::from(s.format))),
+                    ];
+                    // gid range only when known (entries carried over from
+                    // pre-1.1 manifests stay rangeless until compacted)
+                    if let (Some(first), Some(last)) = (s.first_gid, s.last_gid) {
+                        fields.push(("first_gid", json::num(f64::from(first))));
+                        fields.push(("last_gid", json::num(f64::from(last))));
+                    }
+                    json::obj(fields)
                 })
                 .collect();
             json::obj(vec![
@@ -1203,6 +2124,11 @@ pub(crate) fn parse_manifest(text: &str) -> Result<(StoreMeta, ManifestState)> {
             segments.push(SegmentEntry {
                 file: s.get("file").as_str().context("segment.file")?.to_string(),
                 records: s.get("records").as_usize().context("segment.records")?,
+                // additive 1.1 fields: a 1.0 manifest's entries are framed
+                // v1 segments with an unknown gid range
+                format: s.get("format").as_usize().map(|f| f as u32).unwrap_or(SEG_VERSION),
+                first_gid: s.get("first_gid").as_usize().map(|g| g as u32),
+                last_gid: s.get("last_gid").as_usize().map(|g| g as u32),
             });
         }
         lanes.push(LaneManifest {
@@ -1308,6 +2234,9 @@ mod tests {
                     segments: vec![SegmentEntry {
                         file: format!("shard-{s}/seg-00000001.seg"),
                         records: 10 + s,
+                        format: if s == 0 { SEG_VERSION } else { SEG_VERSION_V2 },
+                        first_gid: if s == 0 { None } else { Some(7 * s as u32) },
+                        last_gid: if s == 0 { None } else { Some(7 * s as u32 + 3) },
                     }],
                     log: format!("shard-{s}/delta-00000002.log"),
                     next_file_id: 3,
@@ -1326,6 +2255,40 @@ mod tests {
         assert_eq!(s2.lanes.len(), 3);
         assert_eq!(s2.lanes[1].segments[0].records, 11);
         assert_eq!(s2.lanes[2].log, "shard-2/delta-00000002.log");
+        // 1.1 segment fields roundtrip; a rangeless v1 entry stays that way
+        assert_eq!(s2.lanes[0].segments[0].format, SEG_VERSION);
+        assert_eq!(s2.lanes[0].segments[0].first_gid, None);
+        assert_eq!(s2.lanes[2].segments[0].format, SEG_VERSION_V2);
+        assert_eq!(s2.lanes[2].segments[0].first_gid, Some(14));
+        assert_eq!(s2.lanes[2].segments[0].last_gid, Some(17));
+    }
+
+    #[test]
+    fn pre_v1_1_manifest_segment_entries_default_to_format_1() {
+        // a 1.0 manifest's segment objects carry only file + records;
+        // parsing must default format to 1 with an unknown gid range
+        let m = meta(1);
+        let state = ManifestState {
+            generation: 0,
+            global: GlobalCheckpoint::empty(),
+            lanes: vec![LaneManifest {
+                segments: vec![SegmentEntry {
+                    file: "shard-0/seg-00000001.seg".to_string(),
+                    records: 5,
+                    format: SEG_VERSION,
+                    first_gid: None,
+                    last_gid: None,
+                }],
+                log: "shard-0/delta-00000002.log".to_string(),
+                next_file_id: 3,
+            }],
+        };
+        let text = manifest_json(&m, &state).replace(",\"format\":1,", ",");
+        assert!(!text.contains("\"format\":"), "format field not stripped: {text}");
+        let (_, s2) = parse_manifest(&text).unwrap();
+        assert_eq!(s2.lanes[0].segments[0].format, SEG_VERSION);
+        assert_eq!(s2.lanes[0].segments[0].first_gid, None);
+        assert_eq!(s2.lanes[0].segments[0].last_gid, None);
     }
 
     #[test]
@@ -1351,7 +2314,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let dir = tmp_dir("seal");
         // tiny seal threshold: force several seals over the run
-        let opts = DurableOptions { seal_bytes: 600, fsync: false };
+        let opts = DurableOptions { seal_bytes: 600, fsync: false, mmap: true };
         let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
         let mut writer = store.lane_writer(0).unwrap();
         let mut expect = Vec::new();
@@ -1367,12 +2330,8 @@ mod tests {
         let (store2, recovery) = DurableStore::open(&dir, opts).unwrap();
         assert_eq!(recovery.torn_bytes, 0);
         assert_eq!(recovery.total_records(), 50);
-        let all: Vec<&(u32, Observation)> = recovery.lanes[0]
-            .segments
-            .iter()
-            .flatten()
-            .chain(recovery.lanes[0].tail.iter())
-            .collect();
+        let all = recovery.lane_records(0).unwrap();
+        assert_eq!(all.len(), expect.len());
         for (got, want) in all.iter().zip(&expect) {
             assert_eq!(got.0, want.0);
             assert_eq!(got.1.embedding, want.1.embedding);
@@ -1391,7 +2350,7 @@ mod tests {
     fn torn_log_tail_truncates_to_last_full_record() {
         let mut rng = Rng::new(3);
         let dir = tmp_dir("torn");
-        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false, mmap: true };
         let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
         let mut writer = store.lane_writer(0).unwrap();
         for gid in 0..10u32 {
@@ -1422,7 +2381,7 @@ mod tests {
     #[test]
     fn orphan_files_from_crashed_seal_are_swept() {
         let dir = tmp_dir("orphans");
-        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false, mmap: true };
         let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
         drop(store);
         // simulate a crash between segment write and manifest swap
@@ -1440,7 +2399,7 @@ mod tests {
     #[test]
     fn lock_guards_foreign_live_owners_but_allows_recovery() {
         let dir = tmp_dir("lock");
-        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false, mmap: true };
         let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
         // same-process reopen is allowed (in-process restart, tests)
         let (store2, _) = DurableStore::open(&dir, opts.clone()).unwrap();
@@ -1463,9 +2422,217 @@ mod tests {
     }
 
     #[test]
+    fn segment_v2_roundtrip_mapped_and_buffered() {
+        let mut rng = Rng::new(11);
+        let dir = tmp_dir("v2rt");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg-v2.seg");
+        let mut gids = Vec::new();
+        let mut feedbacks = Vec::new();
+        let mut floats = Vec::new();
+        let mut expect = Vec::new();
+        for i in 0..17u32 {
+            let obs = rand_obs(&mut rng);
+            gids.push(i * 3 + 1);
+            floats.extend_from_slice(&obs.embedding);
+            feedbacks.push(Feedback { comparisons: obs.comparisons.clone() });
+            expect.push((i * 3 + 1, obs));
+        }
+        write_segment_v2(&path, DIM, &gids, &feedbacks, &floats, false).unwrap();
+        let entry = SegmentEntry {
+            file: "seg-v2.seg".to_string(),
+            records: 17,
+            format: SEG_VERSION_V2,
+            first_gid: gids.first().copied(),
+            last_gid: gids.last().copied(),
+        };
+        for use_mmap in [true, false] {
+            let seg = load_segment(&path, DIM, N_MODELS, &entry, use_mmap)
+                .unwrap()
+                .expect("segment present");
+            assert_eq!(seg.first_gid(), Some(1));
+            assert_eq!(seg.last_gid(), Some(49));
+            assert_eq!(seg.records(), 17);
+            let mut got = Vec::new();
+            seg.into_records(DIM, &mut got);
+            assert_eq!(got.len(), expect.len());
+            for ((g, o), (eg, eo)) in got.iter().zip(&expect) {
+                assert_eq!(g, eg);
+                assert_eq!(o.embedding, eo.embedding);
+                assert_eq!(o.comparisons, eo.comparisons);
+            }
+        }
+        // a missing file is the typed restart signal, not an error
+        let gone = dir.join("not-there.seg");
+        assert!(load_segment(&gone, DIM, N_MODELS, &entry, true).unwrap().is_none());
+        assert!(load_segment(&gone, DIM, N_MODELS, &entry, false).unwrap().is_none());
+        // flipping a slab byte fails the buffered load (which checks the
+        // embedding checksum) ...
+        let clean = fs::read(&path).unwrap();
+        let mut corrupt = clean.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0x40;
+        fs::write(&path, &corrupt).unwrap();
+        assert!(load_segment(&path, DIM, N_MODELS, &entry, false).is_err());
+        // ... and flipping a side-array byte fails both paths
+        let mut corrupt = clean.clone();
+        corrupt[SEG2_HEADER_BYTES + 1] ^= 0x40;
+        fs::write(&path, &corrupt).unwrap();
+        assert!(load_segment(&path, DIM, N_MODELS, &entry, true).is_err());
+        assert!(load_segment(&path, DIM, N_MODELS, &entry, false).is_err());
+        // a record-count mismatch against the manifest is rejected
+        fs::write(&path, &clean).unwrap();
+        let wrong = SegmentEntry { records: 16, ..entry.clone() };
+        assert!(load_segment(&path, DIM, N_MODELS, &wrong, false).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_bounds_segments_and_gc_deletes_after_grace() {
+        let mut rng = Rng::new(12);
+        let dir = tmp_dir("compact");
+        // tiny threshold: dozens of single-digit-record segments
+        let opts = DurableOptions { seal_bytes: 400, fsync: false, mmap: true };
+        let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
+        let mut writer = store.lane_writer(0).unwrap();
+        let mut expect = Vec::new();
+        for gid in 0..120u32 {
+            let obs = rand_obs(&mut rng);
+            writer.append(gid, &obs).unwrap();
+            expect.push((gid, obs));
+        }
+        writer.sync().unwrap();
+        let before = store.segment_counts()[0];
+        assert!(before >= 8, "expected many small segments, got {before}");
+        let gen_before = store.generation();
+        let ops = store.compact_once();
+        assert!(ops > 0, "compaction found nothing to merge");
+        assert!(store.generation() > gen_before);
+        let after = store.segment_counts()[0];
+        // binary-counter invariant: strictly descending record counts →
+        // O(log n) files
+        assert!(after <= 8, "compaction left {after} segments (was {before})");
+        {
+            let m = store.manifest.lock().unwrap();
+            let segs = &m.lanes[0].segments;
+            for w in segs.windows(2) {
+                assert!(w[0].records > w[1].records, "merge policy fixpoint violated");
+            }
+            for s in segs {
+                assert_eq!(s.format, SEG_VERSION_V2);
+                assert!(s.first_gid.is_some() && s.last_gid.is_some());
+            }
+        }
+        // superseded files survive until the grace window passes ...
+        assert!(store.retired_pending() > 0);
+        assert_eq!(store.gc_retired(Duration::from_secs(3600)), 0);
+        assert!(store.retired_pending() > 0);
+        // ... then are deleted
+        let deleted = store.gc_retired(Duration::ZERO);
+        assert!(deleted > 0);
+        assert_eq!(store.retired_pending(), 0);
+        assert_eq!(store.compaction_stats().gc_files.get(), deleted as u64);
+        // a second pass is a no-op: the fixpoint is stable
+        assert_eq!(store.compact_once(), 0);
+        // everything still recovers bit-identically after merge + GC
+        drop(writer);
+        drop(store);
+        let (_store, recovery) = DurableStore::open(&dir, opts).unwrap();
+        assert_eq!(recovery.total_records(), 120);
+        let all = recovery.lane_records(0).unwrap();
+        for (got, want) in all.iter().zip(&expect) {
+            assert_eq!(got.0, want.0);
+            assert_eq!(got.1.embedding, want.1.embedding);
+            assert_eq!(got.1.comparisons, want.1.comparisons);
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compactor_upgrades_v1_segments_to_v2() {
+        let mut rng = Rng::new(13);
+        let dir = tmp_dir("upgrade");
+        // write v1 segments (mmap disabled), then reopen with mmap on
+        let v1_opts = DurableOptions { seal_bytes: 500, fsync: false, mmap: false };
+        let store = DurableStore::create(&dir, meta(1), v1_opts.clone()).unwrap();
+        let mut writer = store.lane_writer(0).unwrap();
+        let mut expect = Vec::new();
+        for gid in 0..60u32 {
+            let obs = rand_obs(&mut rng);
+            writer.append(gid, &obs).unwrap();
+            expect.push((gid, obs));
+        }
+        writer.sync().unwrap();
+        assert!(store.segment_counts()[0] >= 2);
+        {
+            let m = store.manifest.lock().unwrap();
+            assert!(m.lanes[0].segments.iter().all(|s| s.format == SEG_VERSION));
+        }
+        drop(writer);
+        drop(store);
+        let opts = DurableOptions { mmap: true, ..v1_opts };
+        let (store, _recovery) = DurableStore::open(&dir, opts.clone()).unwrap();
+        // compact to quiescence: merges + solo upgrades leave only v2
+        while store.compact_once() > 0 {}
+        {
+            let m = store.manifest.lock().unwrap();
+            assert!(
+                m.lanes[0].segments.iter().all(|s| s.format == SEG_VERSION_V2),
+                "legacy v1 segments must be upgraded"
+            );
+        }
+        assert!(
+            store.compaction_stats().upgrades.get() > 0
+                || store.compaction_stats().merges.get() > 0
+        );
+        store.gc_retired(Duration::ZERO);
+        drop(store);
+        let (_store, recovery) = DurableStore::open(&dir, opts).unwrap();
+        assert_eq!(recovery.total_records(), 60);
+        let all = recovery.lane_records(0).unwrap();
+        for (got, want) in all.iter().zip(&expect) {
+            assert_eq!(got.0, want.0);
+            assert_eq!(got.1.embedding, want.1.embedding);
+            assert_eq!(got.1.comparisons, want.1.comparisons);
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streaming_recovery_reports_bounded_footprint() {
+        let mut rng = Rng::new(14);
+        let dir = tmp_dir("stream");
+        let opts = DurableOptions { seal_bytes: 700, fsync: false, mmap: false };
+        let store = DurableStore::create(&dir, meta(1), opts.clone()).unwrap();
+        let mut writer = store.lane_writer(0).unwrap();
+        for gid in 0..200u32 {
+            writer.append(gid, &rand_obs(&mut rng)).unwrap();
+        }
+        writer.sync().unwrap();
+        let segments = store.segment_counts()[0];
+        assert!(segments >= 6, "need several segments, got {segments}");
+        drop(writer);
+        drop(store);
+        let (_store, recovery) = DurableStore::open(&dir, opts).unwrap();
+        let (catchup, fp) = recovery.resume_reporting(EpochParams::default()).unwrap();
+        let router = catchup.finish();
+        assert_eq!(router.store_len(), 200);
+        // streaming invariant: the peak holds one segment (plus log
+        // tails), not the whole corpus
+        assert!(fp.total_segment_bytes > fp.largest_segment_bytes * 2);
+        assert!(
+            fp.peak_resident_bytes < fp.total_segment_bytes,
+            "peak {} should be far below total {}",
+            fp.peak_resident_bytes,
+            fp.total_segment_bytes
+        );
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn checkpoint_survives_reopen() {
         let dir = tmp_dir("ckpt");
-        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+        let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false, mmap: true };
         let store = DurableStore::create(&dir, meta(2), opts.clone()).unwrap();
         let mut elo = GlobalElo::new(N_MODELS, 32.0);
         elo.apply_new(&[Comparison { a: 0, b: 1, outcome: Outcome::WinA }]);

@@ -974,7 +974,7 @@ mod tests {
                 dim: DIM,
                 shards: shards.clone(),
             },
-            DurableOptions { seal_bytes: 2048, fsync: false },
+            DurableOptions { seal_bytes: 2048, fsync: false, mmap: true },
         )
         .unwrap();
         let epoch = EpochParams { publish_every: 8, publish_interval_ms: 5 };
@@ -1002,7 +1002,8 @@ mod tests {
         pipeline.shutdown();
 
         let (_store, recovery) =
-            DurableStore::open(&dir, DurableOptions { seal_bytes: 2048, fsync: false }).unwrap();
+            DurableStore::open(&dir, DurableOptions { seal_bytes: 2048, fsync: false, mmap: true })
+                .unwrap();
         assert_eq!(recovery.total_records(), 200);
         assert_eq!(recovery.torn_bytes, 0);
         let mut recovered = recovery

@@ -20,14 +20,30 @@
 //! 1. re-reads + parses `MANIFEST.json` (atomic swap ⇒ always one
 //!    consistent cut; a newer `format_version` is a clear error, never a
 //!    panic),
-//! 2. applies any sealed segments it has not applied yet (per-lane
-//!    monotone-gid dedup absorbs the overlap between a fresh segment and
-//!    the delta log it was sealed from),
+//! 2. applies any sealed segments whose manifest gid range reaches past
+//!    the lane's applied-gid frontier (per-lane monotone-gid dedup
+//!    absorbs both the overlap between a fresh segment and the delta log
+//!    it was sealed from, *and* the overlap a compacted segment has with
+//!    ranges already tailed). mmap'd v2 segments take the zero-copy bulk
+//!    path; v1 segments decode per-frame,
 //! 3. tails each lane's live delta log from its byte cursor with the
 //!    read-only frame scan — a torn/incomplete final frame is simply "not
 //!    yet written" and is retried next poll,
 //! 4. publishes lanes on the usual epoch cadence and updates the
 //!    [`ReplicaMetrics`] lag gauges.
+//!
+//! ## Compaction and GC under the tail
+//!
+//! The leader's compactor merges sealed segments and eventually deletes
+//! the superseded files (after a grace window). A follower mid-tail can
+//! therefore open a segment named by the manifest cut it read and find
+//! the file gone. That is not corruption — it is the typed
+//! "restart from manifest" signal: the poll abandons the lane's segment
+//! pass, counts a [`ReplicaMetrics::manifest_restarts`], and the next
+//! poll re-reads the *current* manifest, whose merged segments re-cover
+//! every record the follower has not applied. The gid frontier makes the
+//! restart cheap: merged segments are skipped up to the frontier without
+//! opening them, and re-covered records are deduped per-gid.
 //!
 //! The global table folds strictly in gid order (the [`CatchUp`]
 //! contiguity buffer), so follower ratings are bit-identical to the
@@ -60,7 +76,7 @@ use crate::config::EpochParams;
 use crate::metrics::Counter;
 
 use super::durable::{
-    acquire_lock, parse_manifest, read_segment, recover_log, scan_frames, sweep_orphans, CatchUp,
+    acquire_lock, load_segment, parse_manifest, recover_log, scan_frames, sweep_orphans, CatchUp,
     DurableOptions, DurableStore, ManifestState, StoreMeta, LOCK, MANIFEST,
 };
 use super::sharded::{ShardedHandle, ShardedRouter};
@@ -78,9 +94,14 @@ pub struct ReplicaMetrics {
     pub applied_records: Counter,
     /// Sealed segment files applied via the tail.
     pub applied_segments: Counter,
+    /// Segment passes abandoned because the leader's GC deleted a
+    /// manifest-named file mid-tail; the next poll restarts from the
+    /// current manifest.
+    pub manifest_restarts: Counter,
     lag_bytes: AtomicU64,
     lag_frames: AtomicU64,
     manifest_generation: AtomicU64,
+    effective_poll_ms: AtomicU64,
 }
 
 impl ReplicaMetrics {
@@ -99,6 +120,17 @@ impl ReplicaMetrics {
     /// Generation of the last manifest swap the follower has seen.
     pub fn manifest_generation(&self) -> u64 {
         self.manifest_generation.load(Ordering::Relaxed)
+    }
+
+    /// The tail loop's current sleep between polls, in milliseconds:
+    /// the configured base interval after a productive poll, doubled
+    /// (up to the configured cap) after each idle one.
+    pub fn effective_poll_ms(&self) -> u64 {
+        self.effective_poll_ms.load(Ordering::Relaxed)
+    }
+
+    fn set_effective_poll(&self, ms: u64) {
+        self.effective_poll_ms.store(ms, Ordering::Relaxed);
     }
 
     fn set_lag(&self, bytes: u64, frames: u64) {
@@ -120,12 +152,17 @@ pub struct PollStats {
     pub lag_bytes: u64,
     /// Records waiting for a contiguous gid run before the global fold.
     pub pending_folds: usize,
+    /// True when at least one lane hit a GC'd segment file and abandoned
+    /// its segment pass; the next poll restarts from the current
+    /// manifest. Records applied before the restart are kept.
+    pub restarted: bool,
 }
 
-/// Per-lane tail cursor into the leader's durable files.
+/// Per-lane tail cursor into the leader's *delta log*. Sealed-segment
+/// progress is not tracked here: the applied-gid frontier lives in
+/// [`CatchUp::lane_frontier`], which stays valid when the compactor
+/// rewrites the segment list (a positional cursor would not).
 struct LaneCursor {
-    /// Sealed segments (manifest order; the list only grows) applied.
-    segments_applied: usize,
     /// Relative path of the delta log this cursor is tailing.
     log: String,
     /// Byte offset of the next unread frame in that log.
@@ -140,6 +177,7 @@ pub struct Follower {
     cursors: Vec<LaneCursor>,
     manifest: ManifestState,
     metrics: Arc<ReplicaMetrics>,
+    use_mmap: bool,
 }
 
 impl Follower {
@@ -148,6 +186,14 @@ impl Follower {
     /// truncates, never sweeps. Fails with a clear error if the manifest
     /// is missing or written by a newer format version.
     pub fn open(dir: &Path, cadence: EpochParams) -> Result<Follower> {
+        Self::open_with(dir, cadence, true)
+    }
+
+    /// [`Follower::open`] with an explicit mmap choice: `use_mmap`
+    /// serves v2 segments from the page cache via zero-copy views;
+    /// `false` forces the buffered decode path (v1 segments always
+    /// decode).
+    pub fn open_with(dir: &Path, cadence: EpochParams, use_mmap: bool) -> Result<Follower> {
         let path = dir.join(MANIFEST);
         let text = fs::read_to_string(&path)
             .with_context(|| format!("no durable store to follow at {}", dir.display()))?;
@@ -161,7 +207,7 @@ impl Follower {
         let cursors = manifest
             .lanes
             .iter()
-            .map(|l| LaneCursor { segments_applied: 0, log: l.log.clone(), offset: 0 })
+            .map(|l| LaneCursor { log: l.log.clone(), offset: 0 })
             .collect();
         let mut follower = Follower {
             dir: dir.to_path_buf(),
@@ -169,6 +215,7 @@ impl Follower {
             cursors,
             manifest,
             metrics: Arc::new(ReplicaMetrics::default()),
+            use_mmap,
         };
         follower.poll()?;
         follower.catchup.publish_all();
@@ -217,17 +264,47 @@ impl Follower {
         let (dim, n_models) = (meta.dim, meta.n_models);
         let mut applied = 0usize;
         let mut lag_bytes = 0u64;
+        let mut restarted = false;
         for (shard, cur) in self.cursors.iter_mut().enumerate() {
             let lane = &self.manifest.lanes[shard];
-            while cur.segments_applied < lane.segments.len() {
-                let seg = &lane.segments[cur.segments_applied];
-                let records = read_segment(&self.dir.join(&seg.file), dim, n_models, seg.records)
-                    .with_context(|| format!("segment {}", seg.file))?;
-                let before = self.catchup.applied_records();
-                self.catchup.apply_sealed_segment(shard, records);
-                applied += self.catchup.applied_records() - before;
-                cur.segments_applied += 1;
-                self.metrics.applied_segments.inc();
+            let mut lane_restarted = false;
+            for seg in &lane.segments {
+                // Skip segments fully below the lane's applied frontier
+                // without opening them — after a compaction restart this
+                // is what makes re-walking the merged list cheap.
+                let frontier = self.catchup.lane_frontier(shard);
+                if let (Some(last), Some(prev)) = (seg.last_gid, frontier) {
+                    if last <= prev {
+                        continue;
+                    }
+                }
+                match load_segment(&self.dir.join(&seg.file), dim, n_models, seg, self.use_mmap)
+                    .with_context(|| format!("segment {}", seg.file))?
+                {
+                    Some(loaded) => {
+                        let before = self.catchup.applied_records();
+                        self.catchup.apply_loaded_segment(shard, loaded);
+                        applied += self.catchup.applied_records() - before;
+                        self.metrics.applied_segments.inc();
+                    }
+                    // The leader's GC deleted this file after the
+                    // manifest cut we read: restart from the current
+                    // manifest next poll (the typed signal, not an
+                    // error — see the module docs).
+                    None => {
+                        self.metrics.manifest_restarts.inc();
+                        lane_restarted = true;
+                        break;
+                    }
+                }
+            }
+            if lane_restarted {
+                // Do NOT tail the delta log with sealed records still
+                // unapplied: log gids run past the sealed range, and
+                // applying them would advance the frontier over a gap
+                // the dedup could never backfill.
+                restarted = true;
+                continue;
             }
             if cur.log != lane.log {
                 cur.log = lane.log.clone();
@@ -252,7 +329,7 @@ impl Follower {
         self.metrics.applied_records.add(applied as u64);
         self.metrics.set_lag(lag_bytes, pending_folds as u64);
         self.catchup.maybe_publish_all();
-        Ok(PollStats { applied, lag_bytes, pending_folds })
+        Ok(PollStats { applied, lag_bytes, pending_folds, restarted })
     }
 
     /// Promote this follower to leader: take the advisory `LOCK` (refused
@@ -267,10 +344,29 @@ impl Follower {
             return Err(PromoteError { follower: self, error });
         }
         // From here the lock is ours; release it on any failure so the
-        // returned follower (or another candidate) can retry.
-        if let Err(error) = self.poll() {
-            let _ = fs::remove_file(self.dir.join(LOCK));
-            return Err(PromoteError { follower: self, error });
+        // returned follower (or another candidate) can retry. The files
+        // are quiescent (dead leader, lock held), so a restarted poll —
+        // the old leader's GC won a race just before it died — settles
+        // on the very next pass over the now-stable manifest.
+        let mut attempts = 0;
+        loop {
+            match self.poll() {
+                Ok(stats) if !stats.restarted => break,
+                Ok(_) if attempts < 3 => attempts += 1,
+                Ok(_) => {
+                    // Quiescent files still name a missing segment: that
+                    // is a damaged store, not a racing GC.
+                    let _ = fs::remove_file(self.dir.join(LOCK));
+                    let error = anyhow::anyhow!(
+                        "manifest references missing segment files with no live leader"
+                    );
+                    return Err(PromoteError { follower: self, error });
+                }
+                Err(error) => {
+                    let _ = fs::remove_file(self.dir.join(LOCK));
+                    return Err(PromoteError { follower: self, error });
+                }
+            }
         }
         let (dim, n_models) = (self.meta().dim, self.meta().n_models);
         let mut referenced: HashSet<PathBuf> = HashSet::new();
@@ -315,9 +411,14 @@ pub struct PromoteError {
     pub error: anyhow::Error,
 }
 
-/// Background tail loop around a [`Follower`]: polls on a fixed
-/// interval until stopped, at which point the follower is handed back
-/// (for promotion). Dropping the handle stops the loop.
+/// Background tail loop around a [`Follower`]: polls until stopped, at
+/// which point the follower is handed back (for promotion). The sleep
+/// between polls starts at the configured base interval and doubles
+/// after every idle poll up to a cap, snapping back to the base the
+/// moment a poll applies records, restarts from the manifest, or errors
+/// — a quiet leader costs a handful of stat calls per cap interval
+/// while a busy one is tailed at full cadence. Dropping the handle
+/// stops the loop.
 pub struct FollowerHandle {
     stop: Arc<AtomicBool>,
     thread: Option<JoinHandle<Follower>>,
@@ -328,21 +429,37 @@ pub struct FollowerHandle {
 impl FollowerHandle {
     /// Spawn the tail thread. Poll errors (a manifest swap racing the
     /// read, the leader dying) are counted, not fatal — the loop keeps
-    /// retrying so a standby survives leader restarts.
-    pub fn spawn(follower: Follower, poll_interval: Duration) -> FollowerHandle {
+    /// retrying so a standby survives leader restarts. `backoff_max`
+    /// caps the idle backoff; at or below `poll_interval` it disables
+    /// backoff entirely (fixed-interval polling).
+    pub fn spawn(
+        follower: Follower,
+        poll_interval: Duration,
+        backoff_max: Duration,
+    ) -> FollowerHandle {
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = follower.metrics().clone();
         let handle = follower.handle();
         let tail_stop = stop.clone();
+        let base = poll_interval.max(Duration::from_millis(1));
+        let cap = backoff_max.max(base);
+        metrics.set_effective_poll(base.as_millis() as u64);
         let thread = std::thread::Builder::new()
             .name("eagle-replica-tail".into())
             .spawn(move || {
                 let mut follower = follower;
+                let mut interval = base;
                 while !tail_stop.load(Ordering::Acquire) {
-                    if follower.poll().is_err() {
-                        follower.metrics().errors.inc();
-                    }
-                    interruptible_sleep(&tail_stop, poll_interval);
+                    let idle = match follower.poll() {
+                        Ok(stats) => stats.applied == 0 && !stats.restarted,
+                        Err(_) => {
+                            follower.metrics().errors.inc();
+                            false
+                        }
+                    };
+                    interval = if idle { (interval * 2).min(cap) } else { base };
+                    follower.metrics().set_effective_poll(interval.as_millis() as u64);
+                    interruptible_sleep(&tail_stop, interval);
                 }
                 follower
             })

@@ -320,6 +320,24 @@ impl<I: VectorIndex + Send> EagleRouter<I> {
     }
 }
 
+impl EagleRouter<crate::vectordb::view::SegmentStore> {
+    /// Bulk-ingest one sealed block (a mapped v2 segment from the durable
+    /// store): the global table folds each record's comparisons in order
+    /// — the exact per-record updates [`EagleRouter::observe`] performs —
+    /// while the store adopts the embedding slab as one zero-copy sealed
+    /// segment instead of copying row by row.
+    pub(crate) fn absorb_block(
+        &mut self,
+        slab: crate::vectordb::view::Slab,
+        feedbacks: Vec<Feedback>,
+    ) {
+        for fb in &feedbacks {
+            self.global.apply_new(&fb.comparisons);
+        }
+        self.store.push_block(slab, feedbacks);
+    }
+}
+
 impl<I: VectorIndex + Send> Router for EagleRouter<I> {
     fn name(&self) -> String {
         match self.params.p {

@@ -54,7 +54,7 @@ use anyhow::Result;
 use crate::config::{EagleParams, EpochParams, IvfPublishParams, ShardParams};
 use crate::elo::{Comparison, GlobalElo};
 use crate::vectordb::flat::FlatStore;
-use crate::vectordb::view::SegmentStore;
+use crate::vectordb::view::{SegmentStore, Slab};
 use crate::vectordb::{Feedback, Hit, ReadIndex, VectorIndex};
 
 use super::router::{
@@ -331,6 +331,19 @@ impl ShardLane {
     pub fn apply(&mut self, global_id: u32, obs: Observation) {
         self.ids.push(global_id);
         self.writer.apply(obs);
+    }
+
+    /// Bulk-apply one sealed block (a mapped v2 segment from the durable
+    /// store): ids append per record, the store adopts the embedding slab
+    /// as one zero-copy sealed segment, and per-record ELO/publication
+    /// bookkeeping stays identical to [`ShardLane::apply`]. `gids` must be
+    /// strictly increasing and past everything already applied; the
+    /// caller folds global-table comparisons itself.
+    pub(crate) fn apply_block(&mut self, gids: &[u32], slab: Slab, feedbacks: Vec<Feedback>) {
+        for &gid in gids {
+            self.ids.push(gid);
+        }
+        self.writer.apply_block(slab, feedbacks);
     }
 
     /// Publish if this lane's epoch cadence has tripped.

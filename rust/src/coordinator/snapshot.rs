@@ -35,7 +35,7 @@ use crate::config::{EagleParams, EpochParams, IvfPublishParams, QuantParams};
 use crate::vectordb::flat::FlatStore;
 use crate::vectordb::ivf::{IvfIndex, IvfParams, IvfView};
 use crate::vectordb::quant::{QuantCache, QuantView, QUANT_MIN_SEGMENT_ROWS};
-use crate::vectordb::view::{FrozenView, SegmentStore};
+use crate::vectordb::view::{FrozenView, SegmentStore, Slab};
 use crate::vectordb::{BatchTopK, Feedback, Hit, ReadIndex, VectorIndex};
 
 use super::router::{
@@ -476,6 +476,22 @@ impl RouterWriter {
         }
         self.router.observe(obs);
         self.since_publish += 1;
+    }
+
+    /// Bulk-apply one sealed block (a mapped v2 segment replayed by the
+    /// durable store's catch-up): the store adopts the embedding slab as
+    /// one zero-copy sealed segment; ELO folds and publication
+    /// bookkeeping stay per-record, bit-identical to repeating
+    /// [`RouterWriter::apply`] over the block's rows.
+    pub(crate) fn apply_block(&mut self, slab: Slab, feedbacks: Vec<Feedback>) {
+        let dim = self.router.store().dim();
+        if let Some(tail) = &mut self.ivf_tail {
+            for (row, fb) in slab.as_f32s().chunks_exact(dim).zip(&feedbacks) {
+                tail.add(row, Feedback { comparisons: fb.comparisons.clone() });
+            }
+        }
+        self.since_publish += feedbacks.len();
+        self.router.absorb_block(slab, feedbacks);
     }
 
     /// True when the epoch cadence says pending records should publish.

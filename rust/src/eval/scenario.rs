@@ -594,7 +594,7 @@ fn adversarial_durable_cells(cfg: &ScenarioConfig, cells: &mut Vec<Cell>) {
         dim: DIM,
         shards: ShardParams { count: K, hash_seed: SHARD_HASH_SEED },
     };
-    let opts = DurableOptions { seal_bytes: 1 << 20, fsync: false };
+    let opts = DurableOptions { seal_bytes: 1 << 20, fsync: false, mmap: true };
     let store = DurableStore::create(&dir, meta, opts.clone()).expect("create durable store");
     let mut writers: Vec<_> = (0..K).map(|s| store.lane_writer(s).expect("lane writer")).collect();
 

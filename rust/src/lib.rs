@@ -35,6 +35,7 @@ pub mod eval;
 pub mod runtime;
 pub mod json;
 pub mod metrics;
+pub mod mmap;
 pub mod routerbench;
 pub mod server;
 pub mod tokenizer;

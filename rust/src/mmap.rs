@@ -1,0 +1,222 @@
+//! Read-only file mappings via raw `mmap(2)`.
+//!
+//! Sealed segment files in the v2 fixed layout keep their embeddings as one
+//! contiguous, 64-byte-aligned run of little-endian f32 bits, so a mapped
+//! file can be scored straight from the page cache: no per-record decode, no
+//! heap copy. This is what makes `DurableStore::open` O(segment count)
+//! instead of O(corpus bytes).
+//!
+//! On non-unix hosts — or whenever a map attempt fails — callers fall back
+//! to reading the file into an owned buffer and decoding it; [`SlabRef`]s
+//! are only ever constructed over a real mapping, so the unsafe f32 view
+//! below never sees an unaligned heap allocation.
+
+use std::fs::File;
+use std::io;
+use std::sync::Arc;
+
+#[cfg(unix)]
+mod sys {
+    //! mmap/munmap via raw declarations (`std` already links libc on unix,
+    //! so the `extern` declarations below add no dependency).
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+/// A read-only, private mapping of an entire file.
+///
+/// The mapping stays valid even if the file is later unlinked (POSIX keeps
+/// the pages alive until the last unmap), which is what lets the compactor's
+/// GC delete superseded segment files while recovered views still reference
+/// them.
+pub struct Mapping {
+    ptr: *const u8,
+    len: usize,
+}
+
+// The mapping is PROT_READ and never mutated after construction, so sharing
+// the view across threads is safe.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `file` read-only in its entirety. Empty files map to an empty
+    /// view without touching the syscall.
+    #[cfg(unix)]
+    pub fn map(file: &File) -> io::Result<Mapping> {
+        use std::os::unix::io::AsRawFd;
+
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large to map"))?;
+        if len == 0 {
+            return Ok(Mapping { ptr: std::ptr::null(), len: 0 });
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1.
+        if ptr.is_null() || ptr as usize == usize::MAX {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mapping { ptr, len })
+    }
+
+    /// Stub for non-unix hosts: callers treat the error as "fall back to
+    /// buffered decode".
+    #[cfg(not(unix))]
+    pub fn map(_file: &File) -> io::Result<Mapping> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "mmap unavailable on this platform"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        if self.ptr.is_null() || self.len == 0 {
+            return &[];
+        }
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if !self.ptr.is_null() && self.len > 0 {
+            unsafe {
+                sys::munmap(self.ptr as *mut u8, self.len);
+            }
+        }
+    }
+}
+
+/// A view of `floats` consecutive f32 values inside a [`Mapping`], starting
+/// at byte `offset`. Cloning is cheap (an `Arc` bump); the underlying pages
+/// stay mapped as long as any ref is alive.
+///
+/// Only valid on little-endian hosts over 4-byte-aligned offsets — the v2
+/// segment writer 64-byte-aligns the embedding slab and the durable layer
+/// refuses to build mapped views on big-endian targets, so both invariants
+/// hold by construction.
+#[derive(Clone)]
+pub struct SlabRef {
+    map: Arc<Mapping>,
+    offset: usize,
+    floats: usize,
+}
+
+impl SlabRef {
+    /// Build a view, validating bounds and alignment. Returns `None` if the
+    /// described range does not fit the mapping or is misaligned.
+    pub fn new(map: Arc<Mapping>, offset: usize, floats: usize) -> Option<SlabRef> {
+        let bytes = floats.checked_mul(4)?;
+        let end = offset.checked_add(bytes)?;
+        if end > map.len() || offset % std::mem::align_of::<f32>() != 0 {
+            return None;
+        }
+        if cfg!(target_endian = "big") {
+            // The slab stores raw little-endian bit patterns; a byte-order
+            // mismatch must go through the decoding fallback instead.
+            return None;
+        }
+        Some(SlabRef { map, offset, floats })
+    }
+
+    pub fn len(&self) -> usize {
+        self.floats
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.floats == 0
+    }
+
+    pub fn as_f32s(&self) -> &[f32] {
+        if self.floats == 0 {
+            return &[];
+        }
+        let base = self.map.bytes().as_ptr();
+        debug_assert!(self.offset + self.floats * 4 <= self.map.len());
+        unsafe {
+            let ptr = base.add(self.offset) as *const f32;
+            debug_assert_eq!(ptr as usize % std::mem::align_of::<f32>(), 0);
+            std::slice::from_raw_parts(ptr, self.floats)
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!("eagle-mmap-{tag}-{}", std::process::id()));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        f.sync_all().unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_file_bytes_readonly() {
+        let path = tmp_file("bytes", b"hello mapping");
+        let map = Mapping::map(&File::open(&path).unwrap()).unwrap();
+        assert_eq!(map.bytes(), b"hello mapping");
+        assert_eq!(map.len(), 13);
+        std::fs::remove_file(&path).unwrap();
+        // POSIX: the mapping survives the unlink.
+        assert_eq!(map.bytes(), b"hello mapping");
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_view() {
+        let path = tmp_file("empty", b"");
+        let map = Mapping::map(&File::open(&path).unwrap()).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.bytes(), b"" as &[u8]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn slab_ref_views_aligned_f32_runs() {
+        let vals: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+        let mut bytes = vec![0u8; 64];
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let path = tmp_file("slab", &bytes);
+        let map = Arc::new(Mapping::map(&File::open(&path).unwrap()).unwrap());
+        let slab = SlabRef::new(Arc::clone(&map), 64, vals.len()).unwrap();
+        assert_eq!(slab.as_f32s(), &vals[..]);
+        // Out-of-bounds and misaligned views are refused.
+        assert!(SlabRef::new(Arc::clone(&map), 64, vals.len() + 1).is_none());
+        assert!(SlabRef::new(map, 63, 1).is_none());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -50,13 +50,13 @@ pub mod stats;
 
 use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::{EpochParams, IvfPublishParams, QuantParams, Role, ShardParams};
-use crate::coordinator::durable::{DurableOptions, DurableStore};
+use crate::coordinator::durable::{CompactorHandle, DurableOptions, DurableStore};
 use crate::coordinator::feedback::{ComparisonSampler, RawVerdict};
 use crate::coordinator::ingest::{IngestMetrics, IngestOptions, IngestPipeline, PersistTarget};
 use crate::coordinator::policy::{approx_tokens, PolicySpec, RoutePolicy};
@@ -121,6 +121,15 @@ pub struct ServerOptions {
     pub seal_bytes: usize,
     /// Durable-store fsync policy (`[persist] fsync`).
     pub fsync: bool,
+    /// Seal segments in the mmap-friendly v2 layout and serve them
+    /// zero-copy from the page cache (`[persist] mmap`).
+    pub mmap: bool,
+    /// Background segment-compaction beat in ms (`[persist]
+    /// compact_interval_ms`; 0 = off).
+    pub compact_interval_ms: u64,
+    /// Grace window before compacted-away segment files are deleted
+    /// (`[persist] gc_grace_ms`).
+    pub gc_grace_ms: u64,
     /// Scoring-kernel backend choice (`[kernel] backend`): installed as
     /// the process default at startup; the `EAGLE_KERNEL` env var wins.
     pub kernel_backend: String,
@@ -134,11 +143,15 @@ pub struct ServerOptions {
     pub role: Role,
     /// Follower tail-poll interval (`[replica] poll_ms`).
     pub replica_poll_ms: u64,
+    /// Cap for the follower's exponential idle backoff (`[replica]
+    /// backoff_max_ms`; at or below `poll_ms` = fixed-interval polling).
+    pub replica_backoff_max_ms: u64,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
         let durable = DurableOptions::default();
+        let persist = crate::config::PersistParams::default();
         let replica = crate::config::ReplicaParams::default();
         ServerOptions {
             epoch: EpochParams::default(),
@@ -149,10 +162,14 @@ impl Default for ServerOptions {
             persist_dir: None,
             seal_bytes: durable.seal_bytes,
             fsync: durable.fsync,
+            mmap: durable.mmap,
+            compact_interval_ms: persist.compact_interval_ms,
+            gc_grace_ms: persist.gc_grace_ms,
             kernel_backend: "auto".to_string(),
             admission: Admission::default(),
             role: Role::default(),
             replica_poll_ms: replica.poll_ms,
+            replica_backoff_max_ms: replica.backoff_max_ms,
         }
     }
 }
@@ -213,6 +230,13 @@ pub struct ServerState {
     persist_interval_ms: u64,
     durable_opts: DurableOptions,
     replica_poll: Duration,
+    replica_backoff_max: Duration,
+    /// Background segment compactor + GC beat (leader with a durable
+    /// store and `compact_interval_ms > 0`; spawned again on
+    /// promotion). Dropping the handle stops the thread.
+    compactor: Mutex<Option<CompactorHandle>>,
+    compact_interval: Duration,
+    gc_grace: Duration,
     stop: AtomicBool,
 }
 
@@ -305,13 +329,16 @@ impl ServerBuilder {
                 .persist_dir
                 .as_deref()
                 .expect("follower role requires [persist] dir (the leader's store)");
-            let follower =
-                Follower::open(dir, opts.epoch.clone()).expect("open leader store to follow");
+            let follower = Follower::open_with(dir, opts.epoch.clone(), opts.mmap)
+                .expect("open leader store to follow");
             return ServerState::from_follower(follower, registry, embed, metrics, opts)
                 .finish(default_policy, snapshot_path);
         }
-        let durable_opts =
-            DurableOptions { seal_bytes: opts.seal_bytes.max(1), fsync: opts.fsync };
+        let durable_opts = DurableOptions {
+            seal_bytes: opts.seal_bytes.max(1),
+            fsync: opts.fsync,
+            mmap: opts.mmap,
+        };
         let (writer, durable) = match &opts.persist_dir {
             Some(dir) if DurableStore::exists(dir) => {
                 // the store is authoritative: recover it and drop the
@@ -395,6 +422,12 @@ impl ServerState {
             IngestOptions { epoch: opts.epoch.clone(), persist, ..Default::default() },
             Some(ingest_metrics.clone()),
         );
+        let compact_interval = Duration::from_millis(opts.compact_interval_ms);
+        let gc_grace = Duration::from_millis(opts.gc_grace_ms);
+        let compactor = durable
+            .as_ref()
+            .filter(|_| opts.compact_interval_ms > 0)
+            .map(|store| CompactorHandle::spawn(store.clone(), compact_interval, gc_grace));
         let policy = RoutePolicy::new(&registry);
         ServerState {
             snapshots,
@@ -417,8 +450,13 @@ impl ServerState {
             durable_opts: DurableOptions {
                 seal_bytes: opts.seal_bytes.max(1),
                 fsync: opts.fsync,
+                mmap: opts.mmap,
             },
             replica_poll: Duration::from_millis(opts.replica_poll_ms.max(1)),
+            replica_backoff_max: Duration::from_millis(opts.replica_backoff_max_ms),
+            compactor: Mutex::new(compactor),
+            compact_interval,
+            gc_grace,
             stop: AtomicBool::new(false),
         }
     }
@@ -443,7 +481,8 @@ impl ServerState {
         let snapshots = follower.handle();
         let ingest_metrics = Arc::new(IngestMetrics::new(shard_count));
         let replica_poll = Duration::from_millis(opts.replica_poll_ms.max(1));
-        let tail = FollowerHandle::spawn(follower, replica_poll);
+        let replica_backoff_max = Duration::from_millis(opts.replica_backoff_max_ms);
+        let tail = FollowerHandle::spawn(follower, replica_poll, replica_backoff_max);
         let policy = RoutePolicy::new(&registry);
         ServerState {
             snapshots,
@@ -466,8 +505,13 @@ impl ServerState {
             durable_opts: DurableOptions {
                 seal_bytes: opts.seal_bytes.max(1),
                 fsync: opts.fsync,
+                mmap: opts.mmap,
             },
             replica_poll,
+            replica_backoff_max,
+            compactor: Mutex::new(None),
+            compact_interval: Duration::from_millis(opts.compact_interval_ms),
+            gc_grace: Duration::from_millis(opts.gc_grace_ms),
             stop: AtomicBool::new(false),
         }
     }
@@ -521,6 +565,10 @@ impl ServerState {
 
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
+        // join the compactor before the pipeline: a mid-merge publish
+        // racing shutdown is harmless, but joining here keeps shutdown
+        // deterministic
+        drop(self.compactor.lock().unwrap().take());
         match &mut *self.role.write().unwrap() {
             // closes the intake, drains + publishes the tails, joins the
             // pipeline threads (idempotent)
@@ -574,6 +622,13 @@ impl ServerState {
                     IngestOptions { epoch: self.epoch.clone(), persist, ..Default::default() },
                     Some(self.ingest_metrics.clone()),
                 );
+                if self.compact_interval > Duration::ZERO {
+                    *self.compactor.lock().unwrap() = Some(CompactorHandle::spawn(
+                        store.clone(),
+                        self.compact_interval,
+                        self.gc_grace,
+                    ));
+                }
                 *self.durable.write().unwrap() = Some(store);
                 *role = RoleState::Leader { ingest };
                 Response::Promoted { role: Role::Leader.as_str().to_string() }
@@ -582,7 +637,11 @@ impl ServerState {
                 self.metrics.errors.inc();
                 let msg = format!("promote: {:#}", e.error);
                 *role = RoleState::Follower {
-                    tail: FollowerHandle::spawn(e.follower, self.replica_poll),
+                    tail: FollowerHandle::spawn(
+                        e.follower,
+                        self.replica_poll,
+                        self.replica_backoff_max,
+                    ),
                 };
                 Response::Error(msg)
             }
@@ -605,10 +664,24 @@ impl ServerState {
                         manifest_generation: m.manifest_generation(),
                         applied_records: m.applied_records.get(),
                         polls: m.polls.get(),
+                        poll_ms_effective: m.effective_poll_ms(),
+                        manifest_restarts: m.manifest_restarts.get(),
                     }),
                 )
             }
         };
+        let durable = self.durable.read().unwrap().as_ref().map(|store| {
+            let c = store.compaction_stats();
+            stats::DurableSection {
+                segments: store.total_segments() as u64,
+                generation: store.generation(),
+                merges: c.merges.get(),
+                upgrades: c.upgrades.get(),
+                gc_files: c.gc_files.get(),
+                errors: c.errors.get(),
+                gc_pending: store.retired_pending() as u64,
+            }
+        });
         stats::StatsReport {
             version: stats::STATS_VERSION,
             role: role.as_str(),
@@ -618,6 +691,7 @@ impl ServerState {
             ingest: self.ingest_metrics.report(),
             shed: self.shed.report(),
             replica,
+            durable,
         }
     }
 
@@ -949,9 +1023,13 @@ mod tests {
         let durable = DurableOptions::default();
         assert_eq!(opts.seal_bytes, durable.seal_bytes);
         assert_eq!(opts.fsync, durable.fsync);
+        assert_eq!(opts.mmap, durable.mmap);
         let persist = crate::config::PersistParams::default();
         assert_eq!(opts.seal_bytes, persist.seal_bytes);
         assert_eq!(opts.fsync, persist.fsync);
+        assert_eq!(opts.mmap, persist.mmap);
+        assert_eq!(opts.compact_interval_ms, persist.compact_interval_ms);
+        assert_eq!(opts.gc_grace_ms, persist.gc_grace_ms);
         let server = crate::config::ServerParams::default();
         assert_eq!(opts.admission.max_connections, server.max_connections);
         assert_eq!(opts.admission.max_inflight, server.max_inflight);
@@ -961,5 +1039,6 @@ mod tests {
         assert_eq!(opts.role, Role::Leader);
         assert_eq!(opts.role.as_str(), replica.role);
         assert_eq!(opts.replica_poll_ms, replica.poll_ms);
+        assert_eq!(opts.replica_backoff_max_ms, replica.backoff_max_ms);
     }
 }

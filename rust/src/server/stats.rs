@@ -11,7 +11,8 @@
 //! The rendered text is versioned ([`STATS_VERSION`], the leading
 //! `stats: v1 ...` line) and append-only: existing section lines keep
 //! their exact shape (`route_latency`, `ingest:`, `server: shed(` are
-//! parsed by tests and dashboards), new sections get new lines.
+//! parsed by tests and dashboards), new sections get new lines and new
+//! fields land at the end of their line.
 
 /// Version stamp of the rendered report layout. Bump when an existing
 /// line changes shape; adding lines is compatible.
@@ -32,6 +33,31 @@ pub struct ReplicaSection {
     pub applied_records: u64,
     /// Tail polls completed.
     pub polls: u64,
+    /// Current tail sleep in ms (base interval, backed off while idle).
+    pub poll_ms_effective: u64,
+    /// Segment passes abandoned because the leader's GC deleted a
+    /// manifest-named file mid-tail.
+    pub manifest_restarts: u64,
+}
+
+/// Durable-store segment lifecycle, as seen by a leader that owns one
+/// ([`crate::coordinator::durable::CompactionStats`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DurableSection {
+    /// Sealed segment files across all shards right now.
+    pub segments: u64,
+    /// Manifest generation (bumps on every seal/checkpoint/compaction).
+    pub generation: u64,
+    /// Binary-counter merges the compactor has published.
+    pub merges: u64,
+    /// v1 → v2 format upgrades the compactor has published.
+    pub upgrades: u64,
+    /// Superseded segment files deleted after their GC grace window.
+    pub gc_files: u64,
+    /// Compaction passes abandoned on an error (logged, non-fatal).
+    pub errors: u64,
+    /// Retired files still inside the grace window.
+    pub gc_pending: u64,
 }
 
 /// Everything the `stats` op reports, in one place.
@@ -53,12 +79,14 @@ pub struct StatsReport {
     pub shed: String,
     /// Present on followers only.
     pub replica: Option<ReplicaSection>,
+    /// Present on leaders with a durable store attached.
+    pub durable: Option<DurableSection>,
 }
 
 impl StatsReport {
     /// Render the wire text: a versioned header line, the classic
-    /// sections in their original order and shape, then the replica
-    /// line when following.
+    /// sections in their original order and shape, then the replica line
+    /// when following and the durable line when a store is attached.
     pub fn render(&self) -> String {
         let mut out = format!(
             "stats: v{} role={} kernel={} quant={}\n{}\n{}\n{}",
@@ -67,13 +95,28 @@ impl StatsReport {
         if let Some(r) = &self.replica {
             out.push_str(&format!(
                 "\nreplica: role={} lag_frames={} lag_bytes={} manifest_generation={} \
-                 applied={} polls={}",
+                 applied={} polls={} poll_ms_effective={} manifest_restarts={}",
                 self.role,
                 r.lag_frames,
                 r.lag_bytes,
                 r.manifest_generation,
                 r.applied_records,
                 r.polls,
+                r.poll_ms_effective,
+                r.manifest_restarts,
+            ));
+        }
+        if let Some(d) = &self.durable {
+            out.push_str(&format!(
+                "\ndurable: segments={} generation={} merges={} upgrades={} gc_files={} \
+                 gc_pending={} compact_errors={}",
+                d.segments,
+                d.generation,
+                d.merges,
+                d.upgrades,
+                d.gc_files,
+                d.gc_pending,
+                d.errors,
             ));
         }
         out
@@ -94,6 +137,7 @@ mod tests {
             ingest: "ingest: queued=0 folded_global=0 applied=0".into(),
             shed: "server: shed(conn_limit=0 inflight=0) closed(idle=0 oversize=0)".into(),
             replica,
+            durable: None,
         }
     }
 
@@ -106,6 +150,7 @@ mod tests {
         assert!(text.contains("ingest:"), "{text}");
         assert!(text.contains("server: shed("), "{text}");
         assert!(!text.contains("replica:"), "{text}");
+        assert!(!text.contains("durable:"), "{text}");
     }
 
     #[test]
@@ -116,13 +161,39 @@ mod tests {
             manifest_generation: 7,
             applied_records: 42,
             polls: 9,
+            poll_ms_effective: 400,
+            manifest_restarts: 1,
         }))
         .render();
         assert!(text.contains("role=follower"), "{text}");
+        // frozen prefix (parsed by dashboards), new fields appended at
+        // the end of the line
         assert!(
             text.contains(
                 "replica: role=follower lag_frames=3 lag_bytes=128 manifest_generation=7 \
-                 applied=42 polls=9"
+                 applied=42 polls=9 poll_ms_effective=400 manifest_restarts=1"
+            ),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn render_appends_durable_section_when_store_attached() {
+        let mut r = report(None);
+        r.durable = Some(DurableSection {
+            segments: 12,
+            generation: 34,
+            merges: 5,
+            upgrades: 2,
+            gc_files: 8,
+            errors: 0,
+            gc_pending: 1,
+        });
+        let text = r.render();
+        assert!(
+            text.contains(
+                "durable: segments=12 generation=34 merges=5 upgrades=2 gc_files=8 \
+                 gc_pending=1 compact_errors=0"
             ),
             "{text}"
         );

@@ -33,23 +33,51 @@ fn locate_sealed(bases: &[u32], id: u32) -> (usize, usize) {
     (si, (id - bases[si]) as usize)
 }
 
+/// Backing storage for a segment's row-major vector slab: either an owned
+/// heap allocation (live ingest, merges) or a zero-copy view into an
+/// mmap'ed v2 segment file (durable recovery / follower catch-up). Readers
+/// only ever see `&[f32]`, so scans, quantization sidecars, and merges are
+/// agnostic to where the floats live.
+pub(crate) enum Slab {
+    Owned(Vec<f32>),
+    Mapped(crate::mmap::SlabRef),
+}
+
+impl Slab {
+    pub(crate) fn as_f32s(&self) -> &[f32] {
+        match self {
+            Slab::Owned(v) => v,
+            Slab::Mapped(m) => m.as_f32s(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Slab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Slab::Owned(v) => write!(f, "Slab::Owned({} floats)", v.len()),
+            Slab::Mapped(m) => write!(f, "Slab::Mapped({} floats)", m.len()),
+        }
+    }
+}
+
 /// An immutable block of vectors + payloads. Never mutated once sealed.
 #[derive(Debug)]
 pub struct Segment {
     dim: usize,
-    data: Vec<f32>,
+    data: Slab,
     payloads: Vec<Feedback>,
 }
 
 impl Segment {
     fn new(dim: usize) -> Self {
-        Segment { dim, data: Vec::new(), payloads: Vec::new() }
+        Segment { dim, data: Slab::Owned(Vec::new()), payloads: Vec::new() }
     }
 
     fn with_capacity(dim: usize, capacity: usize) -> Self {
         Segment {
             dim,
-            data: Vec::with_capacity(capacity * dim),
+            data: Slab::Owned(Vec::with_capacity(capacity * dim)),
             payloads: Vec::with_capacity(capacity),
         }
     }
@@ -62,20 +90,36 @@ impl Segment {
         self.payloads.is_empty()
     }
 
+    /// Mutable access to the owned float buffer. Only pending segments and
+    /// in-progress merges are ever written to, and those are owned by
+    /// construction — mapped slabs are sealed the moment they exist.
+    fn data_mut(&mut self) -> &mut Vec<f32> {
+        match &mut self.data {
+            Slab::Owned(v) => v,
+            Slab::Mapped(_) => unreachable!("mapped segments are never mutated"),
+        }
+    }
+
     fn push(&mut self, vector: &[f32], feedback: Feedback) {
         debug_assert_eq!(vector.len(), self.dim);
-        self.data.extend_from_slice(vector);
+        self.data_mut().extend_from_slice(vector);
         self.payloads.push(feedback);
     }
 
+    /// Concatenate another segment's rows onto this (owned) one.
+    fn extend_from(&mut self, other: &Segment) {
+        self.data_mut().extend_from_slice(other.vectors());
+        self.payloads.extend_from_slice(&other.payloads);
+    }
+
     fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.dim..(i + 1) * self.dim]
+        &self.data.as_f32s()[i * self.dim..(i + 1) * self.dim]
     }
 
     /// The row-major vector slab (the SQ8 sidecar encoder reads sealed
     /// segments through this).
     pub(crate) fn vectors(&self) -> &[f32] {
-        &self.data
+        self.data.as_f32s()
     }
 
     /// Scan this segment into `topk`, offsetting local indices by `base`.
@@ -97,7 +141,7 @@ impl Segment {
         topks: &mut [TopK],
         tile: &mut Vec<f32>,
     ) {
-        kernel::scan_rows_into(queries, self.dim, &self.data, base, topks, tile);
+        kernel::scan_rows_into(queries, self.dim, self.data.as_f32s(), base, topks, tile);
     }
 }
 
@@ -274,17 +318,41 @@ impl SegmentStore {
         self.sealed.push(Arc::new(seg));
     }
 
-    /// Seal the pending segment (if any) and merge binary-counter style:
-    /// while the newest sealed segment is at least as large as its
-    /// predecessor, replace the pair with their concatenation. Keeps the
-    /// segment count at O(log n) with O(log n) amortized copies per entry.
-    fn seal_and_merge(&mut self) {
+    /// Append one pre-sealed block whose vectors already live in a [`Slab`]
+    /// — for mapped v2 segment files this is the zero-copy restart path:
+    /// the floats stay in the page cache and the store only takes payloads
+    /// + an `Arc` on the mapping. Unlike
+    /// [`SegmentStore::push_sealed_block`], pending inserts may precede the
+    /// block (mixed-format catch-up interleaves log records and sealed
+    /// segments); pending is sealed first so ids keep arrival order.
+    pub(crate) fn push_block(&mut self, slab: Slab, payloads: Vec<Feedback>) {
+        if payloads.is_empty() {
+            return;
+        }
+        debug_assert_eq!(slab.as_f32s().len(), payloads.len() * self.dim);
+        self.seal_pending();
+        self.bases.push(self.sealed_len as u32);
+        self.sealed_len += payloads.len();
+        self.sealed.push(Arc::new(Segment { dim: self.dim, data: slab, payloads }));
+    }
+
+    fn seal_pending(&mut self) {
         if !self.pending.is_empty() {
             let seg = std::mem::replace(&mut self.pending, Segment::new(self.dim));
             self.bases.push(self.sealed_len as u32);
             self.sealed_len += seg.len();
             self.sealed.push(Arc::new(seg));
         }
+    }
+
+    /// Seal the pending segment (if any) and merge binary-counter style:
+    /// while the newest sealed segment is at least as large as its
+    /// predecessor, replace the pair with their concatenation. Keeps the
+    /// segment count at O(log n) with O(log n) amortized copies per entry.
+    /// Merging a mapped segment copies it into an owned one — exactly the
+    /// moment its pages would stop being shareable anyway.
+    fn seal_and_merge(&mut self) {
+        self.seal_pending();
         while self.sealed.len() >= 2
             && self.sealed[self.sealed.len() - 1].len() >= self.sealed[self.sealed.len() - 2].len()
         {
@@ -293,8 +361,7 @@ impl SegmentStore {
             self.bases.pop();
             let mut merged = Segment::with_capacity(self.dim, older.len() + newer.len());
             for seg in [&older, &newer] {
-                merged.data.extend_from_slice(&seg.data);
-                merged.payloads.extend_from_slice(&seg.payloads);
+                merged.extend_from(seg);
             }
             self.sealed.push(Arc::new(merged));
         }
@@ -566,6 +633,50 @@ mod tests {
         assert_eq!(view.search(&q, 10), flat.search(&q, 10));
         // an empty block is a no-op
         seg.push_sealed_block(std::iter::empty::<(&[f32], Feedback)>());
+        assert_eq!(seg.len(), flat.len());
+    }
+
+    #[test]
+    fn push_block_seals_pending_and_matches_flat() {
+        // the mmap restart path: slab blocks may interleave with pending
+        // row inserts (mixed v1/v2 manifests) and must stay bit-identical
+        // to a flat store fed the same rows in the same order
+        let mut rng = Rng::new(23);
+        let dim = 8;
+        let mut flat = FlatStore::new(dim);
+        let mut seg = SegmentStore::new(dim);
+        let mut i = 0;
+        for round in 0..4 {
+            for _ in 0..3 + rng.below(5) {
+                let v = random_unit(&mut rng, dim);
+                flat.add(&v, dummy_feedback(i));
+                seg.add(&v, dummy_feedback(i));
+                i += 1;
+            }
+            let n = 2 + rng.below(10);
+            let mut slab = Vec::new();
+            let mut payloads = Vec::new();
+            for _ in 0..n {
+                let v = random_unit(&mut rng, dim);
+                flat.add(&v, dummy_feedback(i));
+                slab.extend_from_slice(&v);
+                payloads.push(dummy_feedback(i));
+                i += 1;
+            }
+            seg.push_block(Slab::Owned(slab), payloads);
+            if round % 2 == 1 {
+                let _ = seg.freeze();
+            }
+        }
+        assert_eq!(seg.len(), flat.len());
+        let q = random_unit(&mut rng, dim);
+        assert_eq!(flat.search(&q, 12), seg.search(&q, 12));
+        for id in 0..flat.len() as u32 {
+            assert_eq!(flat.vector(id), seg.vector(id));
+            assert_eq!(flat.feedback(id), seg.feedback(id));
+        }
+        // empty blocks are a no-op
+        seg.push_block(Slab::Owned(Vec::new()), Vec::new());
         assert_eq!(seg.len(), flat.len());
     }
 

@@ -136,7 +136,8 @@ fn recover_equals_state_across_interleaved_histories() {
             let mut rng = Rng::new(0xD0_0D + seed * 101 + k as u64);
             let dir = tmp_dir(&format!("prop_k{k}_s{seed}"));
             let n = 150 + rng.below(150);
-            let opts = DurableOptions { seal_bytes: 500 + rng.below(1500), fsync: false };
+            let opts =
+                DurableOptions { seal_bytes: 500 + rng.below(1500), fsync: false, mmap: true };
             let (mut original, _stream) = drive_history(&dir, k, n, &opts, &mut rng);
 
             let (store, recovery) = DurableStore::open(&dir, opts.clone()).unwrap();
@@ -181,7 +182,7 @@ fn torn_tail_write_recovers_to_last_full_record() {
     let dir = tmp_dir("torn_tail");
     // nothing seals: every record stays in its delta log, so truncating
     // one log mid-frame tears exactly its last record
-    let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false };
+    let opts = DurableOptions { seal_bytes: usize::MAX, fsync: false, mmap: true };
     let (_original, stream) = drive_history(&dir, k, 200, &opts, &mut rng);
 
     // tear the final record of the last observation's shard
@@ -329,7 +330,7 @@ fn sigkill_mid_ingest_recovers_and_serves() {
     drop(client);
 
     // phase 2: recover in-process — the checkpointed prefix survives
-    let opts = DurableOptions { seal_bytes: 16384, fsync: false };
+    let opts = DurableOptions { seal_bytes: 16384, fsync: false, mmap: true };
     let (_store, recovery) = DurableStore::open(&durable, opts).unwrap();
     assert!(
         recovery.total_records() >= 300,

@@ -166,7 +166,7 @@ fn follower_tails_leader_bit_identically() {
     for &k in &[1usize, 3] {
         let mut rng = Rng::new(0xF0110 + k as u64 * 7);
         let dir = tmp_dir(&format!("tail_k{k}"));
-        let opts = DurableOptions { seal_bytes: 900, fsync: false };
+        let opts = DurableOptions { seal_bytes: 900, fsync: false, mmap: true };
         let store = DurableStore::create(&dir, meta(k), opts.clone()).unwrap();
         let mut writers: Vec<DurableLaneWriter> =
             (0..k).map(|s| store.lane_writer(s).unwrap()).collect();
@@ -224,7 +224,7 @@ fn promote_matches_crash_recovery_bitwise() {
     let k = 4usize;
     let mut rng = Rng::new(0x9107E);
     let dir = tmp_dir("promote");
-    let opts = DurableOptions { seal_bytes: 1200, fsync: false };
+    let opts = DurableOptions { seal_bytes: 1200, fsync: false, mmap: true };
     {
         let store = DurableStore::create(&dir, meta(k), opts.clone()).unwrap();
         let mut writers: Vec<DurableLaneWriter> =
@@ -295,7 +295,7 @@ fn newer_manifest_version_is_a_clear_error() {
     // forward compatibility: a manifest written by a future format must
     // produce a clear refusal, not a panic or a silent misparse
     let dir = tmp_dir("fwdcompat");
-    let opts = DurableOptions { seal_bytes: 4096, fsync: false };
+    let opts = DurableOptions { seal_bytes: 4096, fsync: false, mmap: true };
     drop(DurableStore::create(&dir, meta(2), opts).unwrap());
     let path = dir.join("MANIFEST.json");
     let mut v = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
@@ -449,7 +449,7 @@ fn failover_e2e_promote_preserves_acked_feedback() {
     // and the promoted corpus equals the single-node replay reference
     let (_, entries) = fc.snapshot().expect("snapshot after promote");
     assert!(entries >= 300, "promoted follower lost acked feedback ({entries} records)");
-    let opts = DurableOptions { seal_bytes: 16384, fsync: false };
+    let opts = DurableOptions { seal_bytes: 16384, fsync: false, mmap: true };
     let (_store_ref, recovery) = DurableStore::open(&ref_copy, opts).unwrap();
     let reference = recovery.into_router(EpochParams::default()).expect("reference replay");
     assert_eq!(
